@@ -1,0 +1,4 @@
+//! Regenerates Fig 2 (naive -> prefetch -> operator-level pipeline evolution).
+fn main() {
+    ngdb_zoo::bench_harness::fig2_pipelining::run("fb15k", "betae").unwrap();
+}

@@ -1,0 +1,4 @@
+//! Regenerates Fig 7 (multi-GPU scaling: measured 1-worker + modeled curve).
+fn main() {
+    ngdb_zoo::bench_harness::fig7_multi_gpu::run().unwrap();
+}

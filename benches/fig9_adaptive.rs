@@ -1,0 +1,4 @@
+//! Regenerates Fig 9 (adaptive vs static sampling under difficulty spikes).
+fn main() {
+    ngdb_zoo::bench_harness::fig9_adaptive::run("fb15k", &["gqe", "betae"]).unwrap();
+}

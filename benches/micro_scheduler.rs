@@ -1,0 +1,44 @@
+//! Microbenchmark: scheduler/pool overhead on the mock runtime (no XLA) —
+//! isolates L3 coordinator cost for the §Perf pass.
+use std::time::Instant;
+
+use ngdb_zoo::exec::{Engine, EngineConfig, Grads};
+use ngdb_zoo::kg::KgSpec;
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::util::rng::Rng;
+
+fn main() {
+    let rt = MockRuntime::new();
+    let kg = KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+    let state =
+        ModelState::init(rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 1)
+            .unwrap();
+    let mut rng = Rng::new(1);
+    let mut dag = QueryDag::default();
+    for _ in 0..256 {
+        let p = *rng.choice(&Pattern::ALL);
+        if let Some(q) = ngdb_zoo::sampler::ground(&kg, &mut rng, p) {
+            dag.add_query(&q.tree, q.answer, vec![0, 1], p.name(), true).unwrap();
+        }
+    }
+    dag.add_gradient_nodes();
+    let engine = Engine::new(&rt, EngineConfig::default());
+    // warmup
+    let mut grads = Grads::default();
+    engine.run(&dag, &state, &mut grads).unwrap();
+    let reps = 20;
+    let t = Instant::now();
+    for _ in 0..reps {
+        let mut grads = Grads::default();
+        engine.run(&dag, &state, &mut grads).unwrap();
+    }
+    let per = t.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "scheduler+coalesce over {} nodes: {:.3} ms/dag ({:.0} ops/s coordinator-side)",
+        dag.len(),
+        per * 1e3,
+        dag.len() as f64 / per
+    );
+}

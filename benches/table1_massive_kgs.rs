@@ -1,0 +1,4 @@
+//! Regenerates Table 1 (massive-KG scalability). `cargo bench --bench table1_massive_kgs`
+fn main() {
+    ngdb_zoo::bench_harness::table1_massive::run().unwrap();
+}

@@ -1,0 +1,4 @@
+//! Regenerates Table 2 (single-hop ComplEx epoch time vs Marius/PBG/SMORE).
+fn main() {
+    ngdb_zoo::bench_harness::table2_single_hop::run().unwrap();
+}

@@ -1,0 +1,6 @@
+//! Regenerates Table 3 (main MRR/throughput/memory comparison).
+fn main() {
+    let datasets = ["fb15k", "fb15k-237", "nell995"];
+    let models = ["gqe", "q2b", "betae", "q2p", "fuzzqe"];
+    ngdb_zoo::bench_harness::table3_main::run(&datasets, &models).unwrap();
+}

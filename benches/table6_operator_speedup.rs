@@ -1,0 +1,5 @@
+//! Regenerates Table 6 (per-operator singleton-vs-batched latency).
+fn main() {
+    ngdb_zoo::bench_harness::table6_operator::run("gqe").unwrap();
+    ngdb_zoo::bench_harness::table6_operator::run("betae").unwrap();
+}

@@ -1,0 +1,4 @@
+//! Regenerates Table 7 (BetaE negation-pattern quality).
+fn main() {
+    ngdb_zoo::bench_harness::table7_negation::run(&["fb15k", "nell995"]).unwrap();
+}

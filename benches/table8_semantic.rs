@@ -1,0 +1,5 @@
+//! Regenerates Table 8 / Fig 8 (decoupled semantic integration ablation).
+fn main() {
+    ngdb_zoo::bench_harness::table8_semantic::run(
+        &["fb15k"], &["gqe", "q2b", "betae"], &["qwen_sim", "bge_sim"]).unwrap();
+}

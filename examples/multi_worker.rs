@@ -1,0 +1,48 @@
+//! Data-parallel training demo (Fig. 7 / Table 2): W workers each execute a
+//! shard of every batch, gradients are all-reduced, one optimizer step is
+//! applied. Prints the measured gradient traffic and the modeled scaling
+//! curve (this box has one CPU core; see DESIGN.md §Substitutions).
+//!
+//! ```bash
+//! cargo run --release --example multi_worker
+//! ```
+
+use std::sync::Arc;
+
+use ngdb_zoo::config::ExperimentConfig;
+use ngdb_zoo::kg::KgSpec;
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::runtime::{PjrtRuntime, Runtime};
+use ngdb_zoo::train::{modeled_speedup, train_multi_worker};
+use ngdb_zoo::util::stats::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let rt = PjrtRuntime::open(&dir)?;
+    let kg = Arc::new(KgSpec::preset("toy", 1.0)?.generate()?);
+
+    let cfg = ExperimentConfig {
+        model: "gqe".into(),
+        steps: 4,
+        batch_queries: 256,
+        workers: 4,
+        artifacts_dir: dir.clone(),
+        ..Default::default()
+    };
+    let mut state = ModelState::init(rt.manifest(), "gqe", kg.n_entities,
+        kg.n_relations, Some(&dir), 1)?;
+    let r = train_multi_worker(&rt, Arc::clone(&kg), &cfg, &mut state)?;
+    println!(
+        "4 workers: {:.0} q/s | per-worker exec {:.3}s | allreduce {}/step",
+        r.qps, r.worker_exec_secs, fmt_bytes(r.allreduce_bytes_per_step)
+    );
+    println!("loss curve: {:?}", r.loss_curve);
+
+    println!("\nmodeled scaling (10 GB/s links, 5 µs hops):");
+    for w in [1usize, 2, 4, 8] {
+        let sp = modeled_speedup(r.worker_exec_secs * cfg.workers as f64,
+            r.allreduce_bytes_per_step, w, 10e9, 5e-6);
+        println!("  {w} workers: {sp:.2}x");
+    }
+    Ok(())
+}

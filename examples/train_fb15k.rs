@@ -1,0 +1,80 @@
+//! End-to-end driver (the repository's validation workload): train BetaE on
+//! a statistics-matched FB15k graph across all 14 query patterns for a few
+//! hundred steps, logging the loss curve, then report filtered MRR per
+//! pattern. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example train_fb15k          # default: 200 steps
+//! NGDB_STEPS=50 NGDB_SCALE=0.01 cargo run --release --example train_fb15k
+//! ```
+
+use std::sync::Arc;
+
+use ngdb_zoo::config::{ExperimentConfig, Pipelining};
+use ngdb_zoo::eval::rank;
+use ngdb_zoo::kg::KgSpec;
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::Pattern;
+use ngdb_zoo::runtime::{PjrtRuntime, Runtime};
+use ngdb_zoo::train::Trainer;
+use ngdb_zoo::util::stats::fmt_bytes;
+
+fn env_or(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let rt = PjrtRuntime::open(&dir)?;
+    let scale = env_or("NGDB_SCALE", 0.02);
+    let steps = env_or("NGDB_STEPS", 200.0) as usize;
+
+    let kg = Arc::new(KgSpec::preset("fb15k", scale)?.generate()?);
+    println!("{}", kg.summary());
+
+    let cfg = ExperimentConfig {
+        dataset: "fb15k".into(),
+        scale,
+        model: "betae".into(),
+        steps,
+        batch_queries: 256,
+        lr: 1e-3,
+        patterns: Pattern::ALL.to_vec(), // all 14, negation included
+        pipelining: Pipelining::Async,
+        adaptive_lambda: 0.3,
+        sampler_threads: 1,
+        artifacts_dir: dir.clone(),
+        log_path: Some("train_fb15k_loss.tsv".into()),
+        ..Default::default()
+    };
+    let mut state = ModelState::init(rt.manifest(), "betae", kg.n_entities,
+        kg.n_relations, Some(&dir), 1)?;
+
+    println!("training BetaE, {} steps x {} queries, all 14 patterns...", steps, 256);
+    let report = Trainer::new(&rt, Arc::clone(&kg), cfg).train(&mut state)?;
+
+    // loss curve summary (full curve in train_fb15k_loss.tsv)
+    let c = &report.loss_curve;
+    for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let i = ((c.len() - 1) as f64 * frac) as usize;
+        println!("  step {:>4}: loss {:.4}", i, c[i]);
+    }
+    println!(
+        "throughput {:.0} q/s | {:.1} ops/launch | padding {:.1}% | mem {}",
+        report.qps, report.ops_per_launch, 100.0 * report.padded_frac,
+        fmt_bytes(report.mem.total())
+    );
+    for (phase, secs) in &report.phases {
+        println!("  {phase}: {secs:.2}s");
+    }
+
+    // per-pattern filtered MRR, negation patterns included (Table 7 style)
+    let full = rank::full_graph(&kg)?;
+    let queries = rank::sample_eval_queries(&kg, &full, &Pattern::ALL, 8, 3);
+    let eval = rank::evaluate(&rt, &state, &kg, &queries, None)?;
+    println!("\noverall MRR {:.4} | Hits@10 {:.4}", eval.mrr, eval.hits10);
+    for (p, mrr, h10, n) in &eval.per_pattern {
+        println!("  {p:>4}: MRR {mrr:.4}  Hits@10 {h10:.4}  (n={n})");
+    }
+    Ok(())
+}

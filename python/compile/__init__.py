@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels, L2 JAX models, AOT lowering.
+
+Nothing in this package is imported at runtime — the Rust coordinator only
+consumes ``artifacts/*.hlo.txt`` + ``artifacts/manifest.json`` produced by
+``python -m compile.aot``.
+"""

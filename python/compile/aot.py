@@ -1,0 +1,209 @@
+"""AOT driver: lower every artifact in the catalogue to HLO text + manifest.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts            # everything
+    python -m compile.aot --filter 'gqe_.*'             # subset
+    python -m compile.aot --check                       # list, don't lower
+
+Outputs under ``--out``:
+
+* ``<name>.hlo.txt``        — HLO text per artifact (the interchange format;
+  serialized protos are rejected by xla_extension 0.5.1, see DESIGN.md).
+* ``manifest.json``         — dims + artifact catalogue (arg order, shapes)
+  + per-model parameter inventory; the Rust side is driven entirely by this.
+* ``params/<model>/<name>.bin`` — deterministic f32-LE initial values for
+  trainable dense params; ``params/pte/<enc>/<name>.bin`` — frozen PTE sim
+  weights (runtime inputs, not trainables).
+* ``.stamp``                — input hash for incremental `make artifacts`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: model.ArtifactSpec) -> str:
+    """Jit-lower one artifact with abstract f32 arguments."""
+    arg_shapes = [jax.ShapeDtypeStruct(s, jnp.float32)
+                  for s in spec.param_shapes]
+    arg_shapes += [jax.ShapeDtypeStruct(s, jnp.float32)
+                   for _, s in spec.inputs]
+
+    fn = spec.fn
+
+    def wrapped(*args):
+        res = fn(*args)
+        return res if isinstance(res, tuple) else (res,)
+
+    # keep_unused: VJPs don't always read every primal arg (e.g. a bias is
+    # unused in its own cotangent); the Rust side passes the full arg list,
+    # so the lowered signature must keep every parameter.
+    return to_hlo_text(jax.jit(wrapped, keep_unused=True).lower(*arg_shapes))
+
+
+def input_hash() -> str:
+    """Hash of everything that can change artifact contents."""
+    h = hashlib.sha256()
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(src_dir)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    for k in ("NGDB_DIM", "NGDB_NEG", "NGDB_BUCKETS", "NGDB_USE_PALLAS",
+              "NGDB_SEED"):
+        h.update(f"{k}={os.environ.get(k, '')};".encode())
+    h.update(jax.__version__.encode())
+    return h.hexdigest()
+
+
+def write_params(out: str) -> dict:
+    """Write initial/frozen parameter binaries; return manifest fragment."""
+    frag: dict = {"models": {}, "pte": {}, "fusion": {}}
+    for m in config.MODELS:
+        p = model.init_params(m)
+        mdir = os.path.join(out, "params", m)
+        os.makedirs(mdir, exist_ok=True)
+        entries = []
+        for name, arr in p.items():
+            fn = name.replace(".", "_") + ".bin"
+            arr.astype("<f4").tofile(os.path.join(mdir, fn))
+            entries.append({"name": name, "shape": list(arr.shape),
+                            "file": f"params/{m}/{fn}"})
+        frag["models"][m] = entries
+    for enc in config.PTES:
+        p = model.pte_params(enc)
+        edir = os.path.join(out, "params", "pte", enc)
+        os.makedirs(edir, exist_ok=True)
+        entries = []
+        for name, arr in p.items():
+            fn = name.replace(".", "_") + ".bin"
+            arr.astype("<f4").tofile(os.path.join(edir, fn))
+            entries.append({"name": name, "shape": list(arr.shape),
+                            "file": f"params/pte/{enc}/{fn}"})
+        frag["pte"][enc] = entries
+    for m in ("gqe", "q2b", "betae"):
+        for enc in config.PTES:
+            p = model.init_fusion_params(m, enc)
+            fdir = os.path.join(out, "params", "fusion", m, enc)
+            os.makedirs(fdir, exist_ok=True)
+            entries = []
+            for name, arr in p.items():
+                fn = name.replace(".", "_") + ".bin"
+                arr.astype("<f4").tofile(os.path.join(fdir, fn))
+                entries.append({"name": name, "shape": list(arr.shape),
+                                "file": f"params/fusion/{m}/{enc}/{fn}"})
+            frag["fusion"][f"{m}/{enc}"] = entries
+    return frag
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--filter", default=None,
+                    help="regex over artifact names to lower a subset")
+    ap.add_argument("--check", action="store_true",
+                    help="list artifacts without lowering")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore the incremental stamp")
+    args = ap.parse_args()
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    stamp_path = os.path.join(out, ".stamp")
+    stamp = input_hash()
+    if (not args.force and not args.filter and os.path.exists(stamp_path)
+            and open(stamp_path).read().strip() == stamp
+            and os.path.exists(os.path.join(out, "manifest.json"))):
+        print(f"artifacts up to date ({out}); use --force to rebuild")
+        return 0
+
+    specs = model.all_specs()
+    if args.filter:
+        rx = re.compile(args.filter)
+        specs = [s for s in specs if rx.search(s.name)]
+    if args.check:
+        for s in specs:
+            print(f"{s.name:44s} params={len(s.params)} "
+                  f"inputs={[(n, list(sh)) for n, sh in s.inputs]}")
+        print(f"total: {len(specs)} artifacts")
+        return 0
+
+    manifest = {
+        "dims": {
+            "d": config.D, "n_neg": config.N_NEG,
+            "buckets": list(config.BUCKETS), "b_max": config.B_MAX,
+            "eval_b": config.EVAL_B, "eval_chunk": config.EVAL_CHUNK,
+            "intersect_cards": list(config.INTERSECT_CARDS),
+            "union_cards": list(config.UNION_CARDS),
+            "q2p_k": config.Q2P_K, "tok_dim": config.TOK_DIM,
+            "gamma": config.GAMMA, "seed": config.SEED,
+            "use_pallas": config.USE_PALLAS,
+            "pte_bucket": config.PTE_BUCKET,
+            "ptes": {k: list(v) for k, v in config.PTES.items()},
+            "repr_dim": {m: config.repr_dim(m)
+                         for m in config.MODELS + ("complex",)},
+            "ent_dim": {m: config.ent_dim(m)
+                        for m in config.MODELS + ("complex",)},
+            "rel_dim": {m: config.rel_dim(m)
+                        for m in config.MODELS + ("complex",)},
+        },
+        "params": write_params(out),
+        "artifacts": [],
+    }
+
+    t0 = time.time()
+    for i, spec in enumerate(specs):
+        t1 = time.time()
+        text = lower_spec(spec)
+        fname = f"{spec.name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append({
+            "name": spec.name, "file": fname, "model": spec.model,
+            "op": spec.op, "direction": spec.direction, "bucket": spec.bucket,
+            "args": (
+                [{"name": n, "shape": list(s), "kind": "param"}
+                 for n, s in zip(spec.params, spec.param_shapes)]
+                + [{"name": n, "shape": list(s), "kind": "input"}
+                   for n, s in spec.inputs]),
+            "outputs": [{"name": n, "shape": list(s)}
+                        for n, s in spec.outputs],
+        })
+        print(f"[{i + 1}/{len(specs)}] {spec.name} "
+              f"({len(text) / 1024:.0f} KiB, {time.time() - t1:.2f}s)")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if not args.filter:
+        with open(stamp_path, "w") as f:
+            f.write(stamp)
+    print(f"lowered {len(specs)} artifacts in {time.time() - t0:.1f}s -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

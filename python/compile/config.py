@@ -1,0 +1,104 @@
+"""Build-time configuration shared by L1 kernels, L2 models and aot.py.
+
+Every dimension that ends up frozen into an AOT artifact lives here, so the
+Rust side never has to guess: `aot.py` serializes the resolved values into
+``artifacts/manifest.json`` and the coordinator reads them back.
+
+Override via environment (picked up by ``make artifacts``):
+
+* ``NGDB_DIM``       structural latent width ``d``        (default 64)
+* ``NGDB_NEG``       negatives per query ``N``            (default 32)
+* ``NGDB_BUCKETS``   comma-separated batch-size buckets   (default 16,128,512)
+* ``NGDB_USE_PALLAS`` 1/0 — route matmuls through the Pallas kernel (default 1)
+"""
+
+from __future__ import annotations
+
+import os
+
+# --- structural space ------------------------------------------------------
+D: int = int(os.environ.get("NGDB_DIM", "64"))
+#: negatives per positive in the training objective (Eq. 6)
+N_NEG: int = int(os.environ.get("NGDB_NEG", "32"))
+#: batch-size buckets AOT-compiled per operator (scheduler pads to these)
+BUCKETS: tuple[int, ...] = tuple(
+    int(b) for b in os.environ.get("NGDB_BUCKETS", "16,64,256,512").split(",")
+)
+#: max efficient batch size B_max used by the Max-Fillness policy
+B_MAX: int = max(BUCKETS)
+
+# --- evaluation ------------------------------------------------------------
+#: queries per eval call
+EVAL_B: int = 64
+#: entity-chunk width for rank-against-all scoring
+EVAL_CHUNK: int = 1024
+
+# --- intersection / union cardinalities (Eq. 8 equivalence classes) --------
+INTERSECT_CARDS: tuple[int, ...] = (2, 3)
+UNION_CARDS: tuple[int, ...] = (2,)
+
+# --- Q2P particles ----------------------------------------------------------
+Q2P_K: int = 2
+
+# --- semantic (PTE simulation) ----------------------------------------------
+#: hashed-token feature width fed to the simulated encoders
+TOK_DIM: int = 128
+#: simulated pre-trained text encoders: name -> (hidden width, depth, out dim)
+PTES: dict[str, tuple[int, int, int]] = {
+    "qwen_sim": (1024, 8, 1024),
+    "bge_sim": (768, 6, 768),
+}
+#: PTE encode batch bucket
+PTE_BUCKET: int = 128
+
+# --- kernels -----------------------------------------------------------------
+USE_PALLAS: bool = os.environ.get("NGDB_USE_PALLAS", "1") == "1"
+#: Pallas matmul tile sizes (rows, cols). Sized for VMEM on real TPU;
+#: on the CPU interpret path small shapes collapse to a single grid step.
+TILE_M: int = 128
+TILE_N: int = 128
+
+# --- init ---------------------------------------------------------------------
+SEED: int = int(os.environ.get("NGDB_SEED", "20260710"))
+
+#: scoring margin gamma (paper Table 5)
+GAMMA: float = 12.0
+
+
+def repr_dim(model: str) -> int:
+    """Width of the query representation for each backbone model."""
+    return {
+        "gqe": D,
+        "q2b": 2 * D,
+        "betae": 2 * D,
+        "q2p": Q2P_K * D,
+        "fuzzqe": D,
+        "complex": D,
+    }[model]
+
+
+def ent_dim(model: str) -> int:
+    """Width of one entity-embedding row for each backbone model."""
+    return {
+        "gqe": D,
+        "q2b": D,
+        "betae": 2 * D,
+        "q2p": D,
+        "fuzzqe": D,
+        "complex": D,
+    }[model]
+
+
+def rel_dim(model: str) -> int:
+    """Width of one relation-embedding row for each backbone model."""
+    return {
+        "gqe": 2 * D,
+        "q2b": 2 * D,
+        "betae": D,
+        "q2p": 2 * D,
+        "fuzzqe": 2 * D,
+        "complex": D,
+    }[model]
+
+
+MODELS: tuple[str, ...] = ("gqe", "q2b", "betae", "q2p", "fuzzqe")

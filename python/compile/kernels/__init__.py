@@ -1,0 +1,5 @@
+"""L1 Pallas kernels (interpret mode) + their pure-jnp reference oracle."""
+
+from . import ref  # noqa: F401
+from .intersect import intersect_attention  # noqa: F401
+from .mm import logits, matmul  # noqa: F401

@@ -1,0 +1,78 @@
+"""L1: cardinality-stacked attention pooling for Intersect/Union (Fig. 5).
+
+The scheduler groups set operators into equivalence classes of identical
+input cardinality ``k`` (Eq. 8), so the kernel always sees a dense, perfectly
+aligned ``[b, k, d]`` stack — no ragged tensors, no masking. This file is the
+TPU re-expression of that idea: the whole ``k``-stack of one row-tile lives
+in VMEM (k ≤ 3), the per-operand score MLP runs on the MXU, and the softmax +
+convex combination run on the VPU without ever leaving VMEM.
+
+Backward is supplied via ``jax.custom_vjp`` as the jnp reference VJP (the
+attention math is elementwise/softmax — VPU work XLA already fuses well; the
+MXU-heavy matmuls inside go through :mod:`.matmul`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import config
+from . import ref
+
+
+def _intersect_kernel(xs_ref, wa_ref, va_ref, o_ref):
+    """One row-tile: scores = tanh(xs·Wa)·va; out = softmax(scores) @ xs."""
+    xs = xs_ref[...]  # [tb, k, d]
+    wa = wa_ref[...]  # [d, d]
+    va = va_ref[...]  # [1, d]  (kept 2-D: TPU VMEM wants ≥2-D operands)
+    tb, k, d = xs.shape
+    flat = xs.reshape(tb * k, d)
+    h = jnp.tanh(jnp.dot(flat, wa, preferred_element_type=jnp.float32))
+    scores = (h * va[0]).sum(axis=-1).reshape(tb, k)
+    attn = jax.nn.softmax(scores, axis=1)
+    o_ref[...] = jnp.einsum("bk,bkd->bd", attn, xs)
+
+
+def _pallas_intersect(xs: jax.Array, wa: jax.Array, va: jax.Array) -> jax.Array:
+    b, k, d = xs.shape
+    tb = min(config.TILE_M, max(8, b))
+    rem = (-b) % tb
+    xsp = jnp.pad(xs, ((0, rem), (0, 0), (0, 0))) if rem else xs
+    bp = xsp.shape[0]
+    out = pl.pallas_call(
+        _intersect_kernel,
+        grid=(bp // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, d), jnp.float32),
+        interpret=True,
+    )(xsp, wa, va.reshape(1, d))
+    return out[:b]
+
+
+@jax.custom_vjp
+def intersect_attention(xs: jax.Array, wa: jax.Array, va: jax.Array) -> jax.Array:
+    """Differentiable attention pooling over a ``[b,k,d]`` equivalence class."""
+    if not config.USE_PALLAS:
+        return ref.intersect_attention(xs, wa, va)
+    return _pallas_intersect(xs, wa, va)
+
+
+def _fwd(xs, wa, va):
+    return intersect_attention(xs, wa, va), (xs, wa, va)
+
+
+def _bwd(res, g):
+    xs, wa, va = res
+    # jnp-reference VJP: correct by construction (tested vs finite diff).
+    _, pull = jax.vjp(ref.intersect_attention, xs, wa, va)
+    return pull(g)
+
+
+intersect_attention.defvjp(_fwd, _bwd)

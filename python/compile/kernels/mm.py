@@ -1,0 +1,103 @@
+"""L1: tiled Pallas matmul — the MXU workhorse behind Project / Score / PTE.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's fused GPU
+kernels become a TPU-style tiled matmul. BlockSpec tiles of
+``(TILE_M, K) x (K, TILE_N)`` keep one row-tile of the left operand and one
+column-tile of the right operand resident in VMEM per grid step and drive the
+MXU; K (the latent width ``d``) is small enough (≤ ~1k) that no K-loop is
+needed — a deliberate choice matching the paper's operator widths.
+
+``interpret=True`` is mandatory on this CPU PJRT setup (real-TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot execute); numerics are
+validated against :mod:`.ref` by ``python/tests/test_matmul_kernel.py``.
+
+Autodiff: ``pallas_call`` is not differentiable, so :func:`matmul` carries a
+``jax.custom_vjp`` whose backward is two more calls of the same tiled kernel
+(``dA = G·Bᵀ``, ``dB = Aᵀ·G``) — the backward pass stays on the L1 path.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import config
+from . import ref
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One grid step: full-K row-tile × col-tile product into VMEM."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _tiled_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pallas-tiled ``[m,k] @ [k,n]``; pads m/n up to the tile grid."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    tm = min(config.TILE_M, max(8, m))
+    tn = min(config.TILE_N, max(8, n))
+    ap = _pad_to(a, 0, tm)
+    bp = _pad_to(b, 1, tn)
+    mp, np_ = ap.shape[0], bp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // tm, np_ // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Differentiable tiled matmul. Falls back to jnp when NGDB_USE_PALLAS=0."""
+    if not config.USE_PALLAS:
+        return ref.matmul(a, b)
+    return _tiled_matmul(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # Reuse the same L1 kernel for both cotangents.
+    da = matmul(g, b.T)
+    db = matmul(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def logits(q: jax.Array, e: jax.Array) -> jax.Array:
+    """Score logits ``Q · Eᵀ`` on the L1 path: ``[b,d],[n,d] -> [b,n]``."""
+    return matmul(q, e.T)
+
+
+@partial(jax.jit, static_argnames=())
+def matmul_jit(a, b):
+    """Jitted entry used by the pytest sweeps."""
+    return matmul(a, b)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracle for every L1 Pallas kernel.
+
+These are the *specifications*: small, obviously-correct jax.numpy
+implementations. ``python/tests`` sweeps the Pallas kernels against them with
+hypothesis; the L2 model code may also be built directly on these (set
+``NGDB_USE_PALLAS=0``) which gives an ablation axis for §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain dense matmul ``[m,k] @ [k,n] -> [m,n]`` (f32 accumulate)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def logits(q: jax.Array, e: jax.Array) -> jax.Array:
+    """Vectorized score logits ``Q · Eᵀ`` (Eq. 6): ``[b,d],[n,d] -> [b,n]``."""
+    return matmul(q, e.T)
+
+
+def intersect_attention(
+    xs: jax.Array, wa: jax.Array, va: jax.Array
+) -> jax.Array:
+    """Cardinality-stacked attention pooling (Fig. 5 VecExec).
+
+    ``xs``: ``[b, k, d]`` — one equivalence class ``C_k`` of intersect/union
+    operands, perfectly aligned by construction (Eq. 8).
+    ``wa``: ``[d, d]``, ``va``: ``[d]`` — attention MLP parameters.
+    Returns ``[b, d]``: softmax over the ``k`` axis of per-operand scores,
+    then a convex combination of the operands.
+    """
+    scores = jnp.einsum("bkd,d->bk", jnp.tanh(jnp.einsum("bkd,de->bke", xs, wa)), va)
+    attn = jax.nn.softmax(scores, axis=1)
+    return jnp.einsum("bk,bkd->bd", attn, xs)
+
+
+def relation_mlp(
+    x: jax.Array, rw: jax.Array, rb: jax.Array, w1: jax.Array, b1: jax.Array,
+    w2: jax.Array, b2: jax.Array,
+) -> jax.Array:
+    """Relation-conditioned projection MLP used by the `Project` operator.
+
+    ``x``: ``[b, d]`` inputs; ``rw``/``rb``: ``[b, d]`` per-row relation
+    gates/translations (gathered host-side); ``w1/b1/w2/b2``: shared MLP.
+    """
+    h = jax.nn.relu(matmul(x * rw + rb, w1) + b1)
+    return matmul(h, w2) + b2
+
+
+def margin_loss(
+    pos_score: jax.Array, neg_score: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Masked negative-sampling loss (Eq. 6), summed over real rows.
+
+    ``pos_score``: ``[b]``; ``neg_score``: ``[b, n]``; ``mask``: ``[b]``
+    (1.0 = real query, 0.0 = scheduler padding).
+    """
+    pos = -jax.nn.log_sigmoid(pos_score)
+    neg = -jnp.mean(jax.nn.log_sigmoid(-neg_score), axis=1)
+    return jnp.sum((pos + neg) * mask)
+
+
+def beta_kl(a1, b1, a2, b2) -> jax.Array:
+    """KL(Beta(a1,b1) ‖ Beta(a2,b2)) summed over the last axis (BetaE dist)."""
+    from jax.scipy.special import betaln, digamma
+
+    kl = (
+        betaln(a2, b2)
+        - betaln(a1, b1)
+        + (a1 - a2) * digamma(a1)
+        + (b1 - b2) * digamma(b1)
+        + (a2 - a1 + b2 - b1) * digamma(a1 + b1)
+    )
+    return jnp.sum(kl, axis=-1)
+
+
+def box_distance(center, offset, e) -> jax.Array:
+    """Q2B distance: outside L1 distance + 0.2 · inside distance."""
+    diff = jnp.abs(center - e)
+    outside = jnp.maximum(diff - offset, 0.0)
+    inside = jnp.minimum(diff, offset)
+    return jnp.sum(outside, axis=-1) + 0.2 * jnp.sum(inside, axis=-1)
+
+
+def pte_layer(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """One simulated-PTE layer: gelu(x @ w + b)."""
+    return jax.nn.gelu(matmul(x, w) + b)

@@ -1,0 +1,623 @@
+"""L2: the backbone query-embedding models, one JAX function per operator.
+
+This is the paper's operator vocabulary (§4.1) instantiated for the five
+backbone models of Table 3 (GQE, Q2B, BetaE, Q2P, FuzzQE) plus ComplEx for
+the Table 2 single-hop runtime comparison. Each operator is a *standalone*
+jax function over a flat argument list so that ``aot.py`` can lower each
+``(model, op, direction, batch-bucket)`` combination to its own HLO artifact;
+the Rust coordinator batches operators across queries and dispatches whole
+pools to these artifacts (cross-query operator fusion, Eq. 5).
+
+Conventions
+-----------
+* All operators are **row-local**: row ``i`` of every output depends only on
+  row ``i`` of every input. The scheduler exploits this to pad pools up to
+  the compiled bucket size — padding rows produce garbage that is never read.
+  The single cross-row reduction (the loss) carries an explicit ``mask``.
+* Embedding rows are gathered **host-side** by the coordinator (SMORE-style
+  heterogeneous pipelining): operators receive dense ``[B, ...]`` blocks,
+  never indices.
+* Parameters are passed as leading arguments on every call, in the order
+  recorded by the manifest (they are small shared MLPs; the transfer is a
+  memcpy on CPU-PJRT and a donated buffer on a real device).
+* VJP artifacts recompute their forward internally (`jax.vjp`) — operators
+  are shallow MLPs, so recompute is cheaper than persisting activations, and
+  it keeps Algorithm 1's reference counting exact: a tensor's consumers are
+  its forward consumers plus the VJPs of those consumers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config
+from .config import D, GAMMA, N_NEG, Q2P_K
+from .kernels import intersect_attention, matmul, ref
+
+
+# =============================================================================
+# Parameter specifications
+# =============================================================================
+
+def param_specs(model: str) -> dict[str, tuple[int, ...]]:
+    """Trainable dense parameters per model, name -> shape (sorted order is
+    the canonical flat order used by every artifact and by the Rust side)."""
+    d = D
+    specs: dict[str, tuple[int, ...]]
+    if model == "gqe":
+        specs = {
+            "int.va": (d,), "int.wa": (d, d),
+            "proj.b1": (d,), "proj.b2": (d,),
+            "proj.w1": (d, d), "proj.w2": (d, d),
+            "uni.va": (d,), "uni.wa": (d, d),
+        }
+    elif model == "q2b":
+        specs = {
+            "int.ds1": (d, d), "int.ds2": (d, d),
+            "int.va": (d,), "int.wa": (d, d),
+            "uni.va": (d,), "uni.wa": (d, d),
+        }
+    elif model == "betae":
+        h = 2 * d
+        specs = {
+            "int.va": (2 * d,), "int.wa": (2 * d, 2 * d),
+            "proj.b1": (h,), "proj.b2": (2 * d,),
+            "proj.w1": (3 * d, h), "proj.w2": (h, 2 * d),
+            "uni.va": (2 * d,), "uni.wa": (2 * d, 2 * d),
+        }
+    elif model == "q2p":
+        specs = {
+            "emb.slot": (Q2P_K, d),
+            "int.q": (Q2P_K, d),
+            "proj.b1": (d,), "proj.b2": (d,),
+            "proj.w1": (d, d), "proj.w2": (d, d),
+            "uni.q": (Q2P_K, d),
+        }
+    elif model == "fuzzqe":
+        specs = {
+            "proj.b1": (d,), "proj.b2": (d,),
+            "proj.w1": (d, d), "proj.w2": (d, d),
+        }
+    elif model == "complex":
+        specs = {}
+    else:
+        raise ValueError(f"unknown model {model}")
+    return dict(sorted(specs.items()))
+
+
+def fusion_param_specs(model: str, encoder: str) -> dict[str, tuple[int, ...]]:
+    """Semantic-fusion parameters (Eq. 12) per (model, encoder)."""
+    de = config.ent_dim(model)
+    d_l = config.PTES[encoder][2]
+    return dict(sorted({
+        "fuse.bf": (D,),
+        "fuse.bp": (de,),
+        "fuse.wf": (d_l, D),
+        "fuse.wp": (de + D, de),
+    }.items()))
+
+
+def init_params(model: str, seed: int = config.SEED) -> dict[str, np.ndarray]:
+    """Deterministic Glorot-ish init, exported to binary for the Rust side."""
+    rng = np.random.default_rng(seed + hash(model) % 65536)
+    out = {}
+    for name, shape in param_specs(model).items():
+        if len(shape) >= 2:
+            scale = float(np.sqrt(2.0 / sum(shape[-2:])))
+            out[name] = rng.normal(0.0, scale, size=shape).astype(np.float32)
+        else:
+            out[name] = np.zeros(shape, dtype=np.float32)
+        if name.endswith(".q") or name == "emb.slot":
+            out[name] = rng.normal(0.0, 0.1, size=shape).astype(np.float32)
+    return out
+
+
+def init_fusion_params(model: str, encoder: str, seed: int = config.SEED
+                       ) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed + (hash(model + encoder) % 65536))
+    out = {}
+    for name, shape in fusion_param_specs(model, encoder).items():
+        if len(shape) >= 2:
+            scale = float(np.sqrt(2.0 / sum(shape[-2:])))
+            out[name] = rng.normal(0.0, scale, size=shape).astype(np.float32)
+        else:
+            out[name] = np.zeros(shape, dtype=np.float32)
+    return out
+
+
+# =============================================================================
+# Per-model operator math
+# =============================================================================
+# Every op takes (params: dict, *inputs) and returns one array (score ops
+# return tuples). Reprs: gqe [d]; q2b [2d]=(center,offset); betae [2d]=(α,β);
+# q2p [K*d]; fuzzqe [d] in (0,1); complex [d]=(re,im).
+
+_EPS = 0.05  # BetaE positivity floor
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+# --- embed -------------------------------------------------------------------
+
+def embed(model: str, params, e):
+    """EmbedE: raw entity rows ``[B, de]`` -> query repr ``[B, dr]`` (Ψθ)."""
+    if model == "gqe":
+        return e
+    if model == "q2b":
+        return jnp.concatenate([e, jnp.zeros_like(e)], axis=-1)
+    if model == "betae":
+        return _softplus(e) + _EPS
+    if model == "q2p":
+        parts = e[:, None, :] + params["emb.slot"][None, :, :]
+        return parts.reshape(e.shape[0], Q2P_K * D)
+    if model == "fuzzqe":
+        return jax.nn.sigmoid(e)
+    raise ValueError(model)
+
+
+# --- project -----------------------------------------------------------------
+
+def project(model: str, params, x, r):
+    """Project: repr ``[B, dr]`` + relation rows ``[B, drel]`` -> ``[B, dr]``."""
+    if model == "gqe":
+        rw, rb = r[:, :D], r[:, D:]
+        return ref.relation_mlp(x, rw, rb, params["proj.w1"], params["proj.b1"],
+                                params["proj.w2"], params["proj.b2"]) \
+            if not config.USE_PALLAS else _relation_mlp_l1(
+                x, rw, rb, params["proj.w1"], params["proj.b1"],
+                params["proj.w2"], params["proj.b2"])
+    if model == "q2b":
+        c, o = x[:, :D], x[:, D:]
+        rc, ro = r[:, :D], r[:, D:]
+        return jnp.concatenate([c + rc, o + _softplus(ro)], axis=-1)
+    if model == "betae":
+        h = jax.nn.relu(matmul(jnp.concatenate([x, r], axis=-1),
+                               params["proj.w1"]) + params["proj.b1"])
+        return _softplus(matmul(h, params["proj.w2"]) + params["proj.b2"]) + _EPS
+    if model == "q2p":
+        rw, rb = r[:, :D], r[:, D:]
+        parts = x.reshape(-1, Q2P_K, D)
+        flat = parts.reshape(-1, D)
+        rw2 = jnp.repeat(rw, Q2P_K, axis=0)
+        rb2 = jnp.repeat(rb, Q2P_K, axis=0)
+        out = _relation_mlp_l1(flat, rw2, rb2,
+                               params["proj.w1"], params["proj.b1"],
+                               params["proj.w2"], params["proj.b2"])
+        return (out + flat).reshape(-1, Q2P_K * D)  # residual particles
+    if model == "fuzzqe":
+        rw, rb = r[:, :D], r[:, D:]
+        h = _relation_mlp_l1(x, rw, rb, params["proj.w1"], params["proj.b1"],
+                             params["proj.w2"], params["proj.b2"])
+        return jax.nn.sigmoid(h)
+    raise ValueError(model)
+
+
+def _relation_mlp_l1(x, rw, rb, w1, b1, w2, b2):
+    """Relation-conditioned MLP routed through the L1 tiled-matmul kernel."""
+    h = jax.nn.relu(matmul(x * rw + rb, w1) + b1)
+    return matmul(h, w2) + b2
+
+
+# --- intersect / union (cardinality equivalence classes) ---------------------
+
+def intersect(model: str, params, xs):
+    """Intersect_k: ``[B, k, dr]`` (one C_k class) -> ``[B, dr]``."""
+    if model in ("gqe", "betae"):
+        return intersect_attention(xs, params["int.wa"], params["int.va"])
+    if model == "q2b":
+        c, o = xs[..., :D], xs[..., D:]
+        center = intersect_attention(c, params["int.wa"], params["int.va"])
+        gate = jax.nn.sigmoid(
+            matmul(jax.nn.relu(matmul(c.mean(axis=1), params["int.ds1"])),
+                   params["int.ds2"]))
+        offset = o.min(axis=1) * gate
+        return jnp.concatenate([center, offset], axis=-1)
+    if model == "q2p":
+        b, k, _ = xs.shape
+        parts = xs.reshape(b, k * Q2P_K, D)
+        q = params["int.q"]  # [K, d]
+        att = jax.nn.softmax(
+            jnp.einsum("bnd,kd->bnk", parts, q) / jnp.sqrt(float(D)), axis=1)
+        out = jnp.einsum("bnk,bnd->bkd", att, parts)
+        return out.reshape(b, Q2P_K * D)
+    if model == "fuzzqe":
+        return jnp.prod(xs, axis=1)  # product t-norm
+    raise ValueError(model)
+
+
+def union(model: str, params, xs):
+    """Union_k: ``[B, k, dr]`` -> ``[B, dr]``.
+
+    Q2B/GQE classically handle ∪ by DNF re-writing; NGDB-Zoo treats Union as
+    a first-class batched operator (Table 6), so each model gets a smooth
+    union: attention pooling (gqe/betae), center-attention + max-offset
+    bounding box (q2b), particle merge (q2p), probabilistic sum (fuzzqe).
+    """
+    if model in ("gqe", "betae"):
+        return intersect_attention(xs, params["uni.wa"], params["uni.va"])
+    if model == "q2b":
+        c, o = xs[..., :D], xs[..., D:]
+        center = intersect_attention(c, params["uni.wa"], params["uni.va"])
+        offset = o.max(axis=1) + jnp.abs(c - center[:, None, :]).max(axis=1)
+        return jnp.concatenate([center, offset], axis=-1)
+    if model == "q2p":
+        b, k, _ = xs.shape
+        parts = xs.reshape(b, k * Q2P_K, D)
+        q = params["uni.q"]
+        att = jax.nn.softmax(
+            jnp.einsum("bnd,kd->bnk", parts, q) / jnp.sqrt(float(D)), axis=1)
+        return jnp.einsum("bnk,bnd->bkd", att, parts).reshape(b, Q2P_K * D)
+    if model == "fuzzqe":
+        return 1.0 - jnp.prod(1.0 - xs, axis=1)
+    raise ValueError(model)
+
+
+# --- negate ------------------------------------------------------------------
+
+def negate(model: str, params, x):
+    """Negate: repr -> repr (BetaE reciprocal; FuzzQE fuzzy complement)."""
+    if model == "betae":
+        return 1.0 / jnp.maximum(x, _EPS)
+    if model == "fuzzqe":
+        return 1.0 - x
+    raise ValueError(f"{model} has no negation operator")
+
+
+# --- scoring -----------------------------------------------------------------
+
+def score_pair(model: str, q, e):
+    """Score one (query repr, raw entity row) pair; broadcasting over leading
+    dims. Higher = more likely answer (Eq. 2)."""
+    if model == "gqe":
+        return GAMMA - jnp.sum(jnp.abs(q - e), axis=-1)
+    if model == "q2b":
+        c, o = q[..., :D], q[..., D:]
+        return GAMMA - ref.box_distance(c, o, e)
+    if model == "betae":
+        ea = _softplus(e[..., :D]) + _EPS
+        eb = _softplus(e[..., D:]) + _EPS
+        qa, qb = q[..., :D], q[..., D:]
+        return GAMMA - ref.beta_kl(ea, eb, qa, qb)
+    if model == "q2p":
+        parts = q.reshape(*q.shape[:-1], Q2P_K, D)
+        s = GAMMA - jnp.sum(jnp.abs(parts - e[..., None, :]), axis=-1)
+        return jax.nn.logsumexp(s, axis=-1)
+    if model == "fuzzqe":
+        # membership agreement: L1 distance between fuzzy vectors
+        fe = jax.nn.sigmoid(e)
+        return GAMMA - jnp.sum(jnp.abs(q - fe), axis=-1)
+    raise ValueError(model)
+
+
+def score_loss(model: str, params, q, pos, neg, mask):
+    """Masked vectorized objective (Eq. 6). Returns summed loss ``[1]``.
+
+    Padded (mask = 0) rows arrive as zeros, which are *structurally invalid*
+    for some reprs (BetaE needs α, β > 0: digamma(0) = ∞ and 0·∞ = NaN would
+    poison the batch sum). The `where` both replaces padded rows with a safe
+    repr **and** blocks gradient flow into them, keeping padding exact.
+    """
+    safe = (mask > 0.0)[:, None]
+    q = jnp.where(safe, q, jnp.ones_like(q))
+    pos_s = score_pair(model, q, pos)
+    neg_s = score_pair(model, q[:, None, :], neg)
+    return ref.margin_loss(pos_s, neg_s, mask).reshape(1)
+
+
+def eval_scores(model: str, params, q, ents):
+    """EvalScore: ``[Be, dr] x [C, de] -> [Be, C]`` rank-against-all chunk."""
+    return score_pair(model, q[:, None, :], ents[None, :, :])
+
+
+# --- ComplEx (Table 2 single-hop) ---------------------------------------------
+
+def complex_score(h, r, t):
+    """ComplEx trilinear score Re(<h, r, conj(t)>); rows are [re ⊕ im]."""
+    hd = D // 2
+    hr, hi = h[..., :hd], h[..., hd:]
+    rr, ri = r[..., :hd], r[..., hd:]
+    tr, ti = t[..., :hd], t[..., hd:]
+    return jnp.sum(
+        hr * rr * tr + hi * rr * ti + hr * ri * ti - hi * ri * tr, axis=-1)
+
+
+def complex_loss(h, r, pos, neg, mask):
+    pos_s = complex_score(h, r, pos)
+    neg_s = complex_score(h[:, None, :], r[:, None, :], neg)
+    return ref.margin_loss(pos_s, neg_s, mask).reshape(1)
+
+
+# --- semantic fusion (Eq. 12) --------------------------------------------------
+
+def fuse_embed(model: str, fparams, e, sem):
+    """EmbedFused: (h_str ``[B,de]``, h_sem ``[B,d_l]``) -> query repr.
+
+    Eq. 12: e_fused = tanh(W_p [h_str ⊕ F(h_sem)] + b_p), then the model's
+    own EmbedE mapping — so downstream operators are unchanged.
+    """
+    f = jnp.tanh(matmul(sem, fparams["fuse.wf"]) + fparams["fuse.bf"])
+    fused = jnp.tanh(
+        matmul(jnp.concatenate([e, f], axis=-1), fparams["fuse.wp"])
+        + fparams["fuse.bp"])
+    # residual keeps the structural signal dominant early in training
+    return e + fused
+
+
+def pte_params(encoder: str, seed: int = config.SEED) -> dict[str, np.ndarray]:
+    """Frozen simulated-PTE weights (deterministic; exported as .bin)."""
+    hidden, depth, out_dim = config.PTES[encoder]
+    rng = np.random.default_rng(seed + (hash(encoder) % 65536))
+    params: dict[str, np.ndarray] = {}
+    din = config.TOK_DIM
+    for layer in range(depth):
+        dout = out_dim if layer == depth - 1 else hidden
+        params[f"l{layer}.w"] = rng.normal(
+            0.0, np.sqrt(2.0 / (din + dout)), size=(din, dout)
+        ).astype(np.float32)
+        params[f"l{layer}.b"] = np.zeros(dout, dtype=np.float32)
+        din = dout
+    return dict(sorted(params.items()))
+
+
+def pte_encode(encoder: str, params, tok):
+    """Simulated frozen text encoder: ``[B, TOK_DIM] -> [B, d_l]``.
+
+    Deliberately heavy (depth x hidden from config.PTES) so that running it
+    inside the training loop reproduces the paper's joint-training bottleneck
+    in ratio; the decoupled path runs it once offline.
+    """
+    _, depth, _ = config.PTES[encoder]
+    x = tok
+    for layer in range(depth):
+        x = ref.pte_layer(x, params[f"l{layer}.w"], params[f"l{layer}.b"]) \
+            if not config.USE_PALLAS else _pte_layer_l1(
+                x, params[f"l{layer}.w"], params[f"l{layer}.b"])
+    return x
+
+
+def _pte_layer_l1(x, w, b):
+    return jax.nn.gelu(matmul(x, w) + b)
+
+
+# =============================================================================
+# Artifact catalogue (consumed by aot.py)
+# =============================================================================
+
+@dataclass
+class ArtifactSpec:
+    """One AOT-compiled executable: fixed shapes, flat argument order."""
+    name: str
+    model: str
+    op: str
+    direction: str                       # "fwd" | "vjp"
+    bucket: int
+    params: list[str]                    # trainable param names (flat order)
+    param_shapes: list[tuple[int, ...]]
+    inputs: list[tuple[str, tuple[int, ...]]]    # non-param inputs
+    outputs: list[tuple[str, tuple[int, ...]]]
+    fn: Callable = field(repr=False, default=None)  # fn(*flat_args) -> tuple
+    frozen: dict[str, np.ndarray] = field(default_factory=dict, repr=False)
+    #: names of frozen (non-trainable) leading args, e.g. PTE weights
+
+
+def _dictify(names, values):
+    return dict(zip(names, values))
+
+
+def _fwd_artifact(model, op, bucket, params_all, pnames, op_fn, inputs, outputs):
+    def fn(*args):
+        p = _dictify(pnames, args[: len(pnames)])
+        return op_fn(p, *args[len(pnames):])
+    return ArtifactSpec(
+        name=f"{model}_{op}_fwd_b{bucket}", model=model, op=op,
+        direction="fwd", bucket=bucket, params=list(pnames),
+        param_shapes=[params_all[n] for n in pnames],
+        inputs=inputs, outputs=outputs, fn=fn)
+
+
+def _vjp_artifact(model, op, bucket, params_all, pnames, op_fn,
+                  inputs, out_shape):
+    """VJP: args = params..., inputs..., gout -> (gparams..., ginputs...)."""
+    np_ = len(pnames)
+
+    def fn(*args):
+        p = args[:np_]
+        xs = args[np_:-1]
+        gout = args[-1]
+
+        def f(*pa):
+            return op_fn(_dictify(pnames, pa[:np_]), *pa[np_:])
+
+        _, pull = jax.vjp(f, *p, *xs)
+        return pull(gout)
+
+    g_inputs = [(f"g_{n}", s) for n, s in inputs]
+    return ArtifactSpec(
+        name=f"{model}_{op}_vjp_b{bucket}", model=model, op=op,
+        direction="vjp", bucket=bucket, params=list(pnames),
+        param_shapes=[params_all[n] for n in pnames],
+        inputs=inputs + [("gout", out_shape)],
+        outputs=[(f"g_{n}", params_all[n]) for n in pnames] + g_inputs,
+        fn=fn)
+
+
+def _op_table(model: str):
+    """(op name, param subset prefixes, fn, input builder, output shape fn)."""
+    dr = config.repr_dim(model)
+    de = config.ent_dim(model)
+    drel = config.rel_dim(model)
+    ops = []
+    emb_p = ["emb.slot"] if model == "q2p" else []
+    ops.append(("embed", emb_p, lambda p, e: embed(model, p, e),
+                lambda b: [("e", (b, de))], lambda b: (b, dr)))
+    ops.append(("project", ["proj."],
+                lambda p, x, r: project(model, p, x, r),
+                lambda b: [("x", (b, dr)), ("r", (b, drel))],
+                lambda b: (b, dr)))
+    for k in config.INTERSECT_CARDS:
+        int_p = ["int."]
+        ops.append((f"intersect{k}", int_p,
+                    lambda p, xs: intersect(model, p, xs),
+                    lambda b, k=k: [("xs", (b, k, dr))], lambda b: (b, dr)))
+    for k in config.UNION_CARDS:
+        ops.append((f"union{k}", ["uni."],
+                    lambda p, xs: union(model, p, xs),
+                    lambda b, k=k: [("xs", (b, k, dr))], lambda b: (b, dr)))
+    if model in ("betae", "fuzzqe"):
+        ops.append(("negate", [],
+                    lambda p, x: negate(model, p, x),
+                    lambda b: [("x", (b, dr))], lambda b: (b, dr)))
+    return ops
+
+
+def _select_params(model: str, prefixes: list[str]) -> list[str]:
+    all_p = param_specs(model)
+    out = [n for n in all_p
+           if any(n == pre or n.startswith(pre) for pre in prefixes)]
+    return out
+
+
+def artifact_specs(models=None, buckets=None) -> list[ArtifactSpec]:
+    """The full artifact catalogue that `make artifacts` lowers to HLO."""
+    models = models or config.MODELS
+    buckets = buckets or config.BUCKETS
+    specs: list[ArtifactSpec] = []
+    for model in models:
+        pall = param_specs(model)
+        for b in buckets:
+            for op, prefixes, fn, inp, outshape in _op_table(model):
+                pnames = _select_params(model, prefixes)
+                inputs = inp(b)
+                out = [("out", outshape(b))]
+                specs.append(_fwd_artifact(model, op, b, pall, pnames,
+                                           fn, inputs, out))
+                specs.append(_vjp_artifact(model, op, b, pall, pnames,
+                                           fn, inputs, outshape(b)))
+            # score: fwd+grads fused in a single artifact (no separate VJP)
+            dr, de = config.repr_dim(model), config.ent_dim(model)
+
+            def score_fn(q, pos, neg, mask, model=model):
+                def lf(q, pos, neg):
+                    return score_loss(model, {}, q, pos, neg, mask)[0]
+                loss, grads = jax.value_and_grad(lf, argnums=(0, 1, 2))(
+                    q, pos, neg)
+                return (loss.reshape(1),) + grads
+
+            specs.append(ArtifactSpec(
+                name=f"{model}_score_fwd_b{b}", model=model, op="score",
+                direction="fwd", bucket=b, params=[], param_shapes=[],
+                inputs=[("q", (b, dr)), ("pos", (b, de)),
+                        ("neg", (b, N_NEG, de)), ("mask", (b,))],
+                outputs=[("loss", (1,)), ("g_q", (b, dr)),
+                         ("g_pos", (b, de)), ("g_neg", (b, N_NEG, de))],
+                fn=score_fn))
+        # eval chunk scorer (one bucket)
+        dr, de = config.repr_dim(model), config.ent_dim(model)
+        specs.append(ArtifactSpec(
+            name=f"{model}_eval_fwd_b{config.EVAL_B}", model=model, op="eval",
+            direction="fwd", bucket=config.EVAL_B, params=[], param_shapes=[],
+            inputs=[("q", (config.EVAL_B, dr)),
+                    ("ents", (config.EVAL_CHUNK, de))],
+            outputs=[("scores", (config.EVAL_B, config.EVAL_CHUNK))],
+            fn=lambda q, ents, model=model: (eval_scores(model, {}, q, ents),)))
+    return specs
+
+
+def complex_specs(buckets=None) -> list[ArtifactSpec]:
+    """ComplEx single-hop artifacts for the Table 2 runtime comparison."""
+    buckets = buckets or config.BUCKETS
+    d = D
+    specs = []
+    for b in buckets:
+        def fn(h, r, pos, neg, mask):
+            def lf(h, r, pos, neg):
+                return complex_loss(h, r, pos, neg, mask)[0]
+            loss, grads = jax.value_and_grad(lf, argnums=(0, 1, 2, 3))(
+                h, r, pos, neg)
+            return (loss.reshape(1),) + grads
+
+        specs.append(ArtifactSpec(
+            name=f"complex_score_fwd_b{b}", model="complex", op="score",
+            direction="fwd", bucket=b, params=[], param_shapes=[],
+            inputs=[("h", (b, d)), ("r", (b, d)), ("pos", (b, d)),
+                    ("neg", (b, N_NEG, d)), ("mask", (b,))],
+            outputs=[("loss", (1,)), ("g_h", (b, d)), ("g_r", (b, d)),
+                     ("g_pos", (b, d)), ("g_neg", (b, N_NEG, d))],
+            fn=fn))
+    specs.append(ArtifactSpec(
+        name=f"complex_eval_fwd_b{config.EVAL_B}", model="complex", op="eval",
+        direction="fwd", bucket=config.EVAL_B, params=[], param_shapes=[],
+        inputs=[("h", (config.EVAL_B, d)), ("r", (config.EVAL_B, d)),
+                ("ents", (config.EVAL_CHUNK, d))],
+        outputs=[("scores", (config.EVAL_B, config.EVAL_CHUNK))],
+        fn=lambda h, r, ents: (
+            complex_score(h[:, None, :], r[:, None, :], ents[None, :, :]),)))
+    return specs
+
+
+def semantic_specs(models=("gqe", "q2b", "betae"),
+                   encoders=None, buckets=None) -> list[ArtifactSpec]:
+    """PTE encoders + fused-embed artifacts for the Table 8 / Fig 8 study."""
+    encoders = encoders or tuple(config.PTES)
+    buckets = buckets or config.BUCKETS
+    specs: list[ArtifactSpec] = []
+    for enc in encoders:
+        d_l = config.PTES[enc][2]
+        frozen = pte_params(enc)
+        fnames = list(frozen)
+        b = config.PTE_BUCKET
+
+        def enc_fn(*args, enc=enc, fnames=fnames):
+            p = _dictify(fnames, args[: len(fnames)])
+            return (pte_encode(enc, p, args[-1]),)
+
+        specs.append(ArtifactSpec(
+            name=f"pte_{enc}_fwd_b{b}", model="pte", op=f"pte_{enc}",
+            direction="fwd", bucket=b,
+            params=fnames, param_shapes=[frozen[n].shape for n in fnames],
+            inputs=[("tok", (b, config.TOK_DIM))],
+            outputs=[("sem", (b, d_l))], fn=enc_fn, frozen=frozen))
+        for model in models:
+            de = config.ent_dim(model)
+            dr = config.repr_dim(model)
+            fp = fusion_param_specs(model, enc)
+            pnames = list(fp)
+            mp = param_specs(model)
+            emb_p = _select_params(model, ["emb.slot"] if model == "q2p" else [])
+            for b2 in buckets:
+                def ffn(*args, model=model, pnames=pnames, emb_p=emb_p):
+                    fpar = _dictify(pnames, args[: len(pnames)])
+                    rest = args[len(pnames):]
+                    mpar = _dictify(emb_p, rest[: len(emb_p)])
+                    e, sem = rest[len(emb_p):]
+                    return embed(model, mpar, fuse_embed(model, fpar, e, sem))
+
+                all_names = pnames + emb_p
+                all_shapes = [fp[n] for n in pnames] + [mp[n] for n in emb_p]
+                inputs = [("e", (b2, de)), ("sem", (b2, d_l))]
+                pall = {**fp, **mp}
+                specs.append(ArtifactSpec(
+                    name=f"{model}_fused-{enc}_fwd_b{b2}", model=model,
+                    op=f"fused-{enc}", direction="fwd", bucket=b2,
+                    params=all_names, param_shapes=all_shapes,
+                    inputs=inputs, outputs=[("out", (b2, dr))],
+                    fn=lambda *a, ffn=ffn: (ffn(*a),)))
+                specs.append(_vjp_artifact(
+                    model, f"fused-{enc}", b2, pall, all_names,
+                    lambda p, e, sem, model=model, pnames=pnames, emb_p=emb_p:
+                        embed(model, {n: p[n] for n in emb_p},
+                              fuse_embed(model, {n: p[n] for n in pnames},
+                                         e, sem)),
+                    inputs, (b2, dr)))
+    return specs
+
+
+def all_specs() -> list[ArtifactSpec]:
+    return artifact_specs() + complex_specs() + semantic_specs()

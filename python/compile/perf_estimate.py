@@ -1,0 +1,86 @@
+"""L1 performance estimator: VMEM footprint + MXU utilization per kernel.
+
+``interpret=True`` Pallas gives CPU-numpy timings that say nothing about
+real-TPU behaviour, so (per DESIGN.md §Perf) the L1 figures of merit are
+*structural*: does each grid step's working set fit VMEM (~16 MiB/core on
+TPUv4), and how well do the tile shapes feed the 128×128 MXU?
+
+Usage: ``python -m compile.perf_estimate``  (table is recorded in
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from . import config
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM, TPUv4-ish
+MXU = 128  # systolic array edge
+
+
+def matmul_tile_report(m: int, k: int, n: int) -> dict:
+    """Working set + MXU efficiency for one (tm, k) x (k, tn) grid step."""
+    tm = min(config.TILE_M, max(8, m))
+    tn = min(config.TILE_N, max(8, n))
+    vmem = 4 * (tm * k + k * tn + tm * tn)  # A-tile + B-tile + out-tile, f32
+    # MXU fill: fraction of the 128-wide systolic dimensions actually used
+    mxu_fill = min(tm, MXU) / MXU * min(tn, MXU) / MXU * min(k, MXU) / MXU
+    return {
+        "tile": f"({tm},{k})x({k},{tn})",
+        "vmem": vmem,
+        "vmem_ok": vmem <= VMEM_BYTES,
+        "mxu_fill": mxu_fill,
+        "grid": ((m + tm - 1) // tm) * ((n + tn - 1) // tn),
+    }
+
+
+def intersect_tile_report(b: int, kcard: int, d: int) -> dict:
+    tb = min(config.TILE_M, max(8, b))
+    # stack + wa + out resident per step
+    vmem = 4 * (tb * kcard * d + d * d + tb * d + d)
+    mxu_fill = min(tb * kcard, MXU) / MXU * min(d, MXU) / MXU
+    return {
+        "tile": f"[{tb},{kcard},{d}]",
+        "vmem": vmem,
+        "vmem_ok": vmem <= VMEM_BYTES,
+        "mxu_fill": min(mxu_fill, 1.0),
+        "grid": (b + tb - 1) // tb,
+    }
+
+
+def report() -> list[tuple[str, dict]]:
+    d = config.D
+    b = config.B_MAX
+    rows: list[tuple[str, dict]] = []
+    rows.append((f"project matmul [{b},{d}]x[{d},{d}]", matmul_tile_report(b, d, d)))
+    rows.append((
+        f"eval logits [{config.EVAL_B},{2 * d}]x[{2 * d},{config.EVAL_CHUNK}]",
+        matmul_tile_report(config.EVAL_B, 2 * d, config.EVAL_CHUNK),
+    ))
+    for enc, (hidden, _, _) in config.PTES.items():
+        rows.append((
+            f"pte {enc} layer [{config.PTE_BUCKET},{hidden}]x[{hidden},{hidden}]",
+            matmul_tile_report(config.PTE_BUCKET, hidden, hidden),
+        ))
+    for k in config.INTERSECT_CARDS:
+        rows.append((f"intersect{k} [{b},{k},{2 * d}]",
+                     intersect_tile_report(b, k, 2 * d)))
+    return rows
+
+
+def main() -> None:
+    print(f"{'kernel':52s} {'tile':>18s} {'VMEM':>10s} ok {'MXU fill':>9s} grid")
+    for name, r in report():
+        print(
+            f"{name:52s} {r['tile']:>18s} {r['vmem'] / 1024:>9.1f}K "
+            f"{'y' if r['vmem_ok'] else 'N'} {r['mxu_fill']:>8.1%} {r['grid']:>4d}"
+        )
+    print(
+        "\nnotes: d=64 artifacts under-fill the MXU contraction axis (d/128);"
+        "\nregenerate with NGDB_DIM=128+ for production TPU shapes — tile code"
+        "\nis dimension-agnostic. All working sets fit VMEM with >100x slack,"
+        "\nso double-buffering the HBM->VMEM stream is safe at every bucket."
+    )
+
+
+if __name__ == "__main__":
+    main()

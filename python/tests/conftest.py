@@ -1,0 +1,26 @@
+"""Shared fixtures for the build-time (compile path) test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import config  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _jax_x64_off():
+    # keep everything f32, matching the artifacts
+    assert config.D >= 4

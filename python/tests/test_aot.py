@@ -1,0 +1,88 @@
+"""AOT catalogue and manifest contracts the Rust side depends on."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot, config, model
+
+
+def test_catalogue_names_are_unique():
+    specs = model.all_specs()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+
+
+def test_catalogue_covers_all_models_ops_buckets():
+    specs = {s.name for s in model.artifact_specs()}
+    for m in config.MODELS:
+        for b in config.BUCKETS:
+            assert f"{m}_project_fwd_b{b}" in specs
+            assert f"{m}_project_vjp_b{b}" in specs
+            assert f"{m}_score_fwd_b{b}" in specs
+            for k in config.INTERSECT_CARDS:
+                assert f"{m}_intersect{k}_fwd_b{b}" in specs
+        assert f"{m}_eval_fwd_b{config.EVAL_B}" in specs
+    # negation exists exactly for the closed models
+    assert "betae_negate_fwd_b16" in specs
+    assert "fuzzqe_negate_fwd_b16" in specs
+    assert "q2b_negate_fwd_b16" not in specs
+
+
+def test_vjp_output_arity_matches_params_plus_inputs():
+    for s in model.artifact_specs(models=("gqe",), buckets=(16,)):
+        if s.direction != "vjp":
+            continue
+        n_in = len(s.inputs) - 1  # minus gout
+        assert len(s.outputs) == len(s.params) + n_in
+
+
+def test_param_specs_sorted_and_deterministic():
+    for m in config.MODELS:
+        names = list(model.param_specs(m))
+        assert names == sorted(names)
+        a = model.init_params(m)
+        b = model.init_params(m)
+        for n in names:
+            np.testing.assert_array_equal(a[n], b[n])
+
+
+def test_lower_spec_produces_parseable_hlo_text():
+    spec = next(s for s in model.artifact_specs(models=("gqe",), buckets=(16,))
+                if s.name == "gqe_intersect2_fwd_b16")
+    text = aot.lower_spec(spec)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_manifest_written_end_to_end(tmp_path):
+    """Run the real CLI on a tiny filter; validate the manifest fragment."""
+    out = tmp_path / "art"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--filter", r"^gqe_embed_(fwd|vjp)_b16$"],
+        capture_output=True, text=True, cwd=aot.os.path.dirname(
+            aot.os.path.dirname(aot.os.path.abspath(aot.__file__))))
+    assert r.returncode == 0, r.stderr
+    man = json.loads((out / "manifest.json").read_text())
+    assert man["dims"]["d"] == config.D
+    arts = {a["name"]: a for a in man["artifacts"]}
+    assert set(arts) == {"gqe_embed_fwd_b16", "gqe_embed_vjp_b16"}
+    fwd = arts["gqe_embed_fwd_b16"]
+    assert fwd["args"][-1]["shape"] == [16, config.ent_dim("gqe")]
+    assert (out / fwd["file"]).exists()
+    # param binaries exist and have the right element counts
+    for m, entries in man["params"]["models"].items():
+        for e in entries:
+            data = np.fromfile(out / e["file"], dtype="<f4")
+            assert data.size == int(np.prod(e["shape"])), (m, e)
+
+
+def test_input_hash_changes_with_env(monkeypatch):
+    h1 = aot.input_hash()
+    monkeypatch.setenv("NGDB_DIM", "80")
+    h2 = aot.input_hash()
+    assert h1 != h2

@@ -1,0 +1,71 @@
+"""L1 intersect-attention Pallas kernel vs oracle + gradient checks."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import intersect as ik
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 260),
+    k=st.integers(2, 4),
+    d=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_intersect_matches_ref(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    xs, wa, va = _rand(rng, b, k, d), _rand(rng, d, d), _rand(rng, d)
+    got = np.asarray(ik._pallas_intersect(
+        jnp.asarray(xs), jnp.asarray(wa), jnp.asarray(va)))
+    want = np.asarray(ref.intersect_attention(
+        jnp.asarray(xs), jnp.asarray(wa), jnp.asarray(va)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_intersect_output_is_convex_combination():
+    """Attention weights are a softmax -> output lies in the operand hull."""
+    rng = np.random.default_rng(3)
+    xs = _rand(rng, 40, 3, 16)
+    wa, va = _rand(rng, 16, 16), _rand(rng, 16)
+    out = np.asarray(ik.intersect_attention(
+        jnp.asarray(xs), jnp.asarray(wa), jnp.asarray(va)))
+    lo, hi = xs.min(axis=1), xs.max(axis=1)
+    assert (out >= lo - 1e-5).all() and (out <= hi + 1e-5).all()
+
+
+def test_intersect_custom_vjp_matches_ref_grad():
+    rng = np.random.default_rng(4)
+    xs, wa, va = _rand(rng, 9, 2, 8), _rand(rng, 8, 8), _rand(rng, 8)
+
+    def f(fn, xs, wa, va):
+        return jnp.sum(fn(xs, wa, va) ** 2)
+
+    g_l1 = jax.grad(lambda *a: f(ik.intersect_attention, *a), argnums=(0, 1, 2))(
+        xs, wa, va)
+    g_ref = jax.grad(lambda *a: f(ref.intersect_attention, *a), argnums=(0, 1, 2))(
+        xs, wa, va)
+    for a, b in zip(g_l1, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_intersect_permutation_equivariance_of_operands():
+    """Swapping the k operands must not change the pooled output."""
+    rng = np.random.default_rng(5)
+    xs = _rand(rng, 6, 3, 8)
+    wa, va = _rand(rng, 8, 8), _rand(rng, 8)
+    out1 = np.asarray(ik.intersect_attention(
+        jnp.asarray(xs), jnp.asarray(wa), jnp.asarray(va)))
+    out2 = np.asarray(ik.intersect_attention(
+        jnp.asarray(xs[:, ::-1]), jnp.asarray(wa), jnp.asarray(va)))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)

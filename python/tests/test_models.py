@@ -1,0 +1,199 @@
+"""L2 model operators: shape contracts, invariants, gradient plumbing."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import config, model
+from compile.config import D, N_NEG
+
+
+def _p(m):
+    return {k: jnp.asarray(v) for k, v in model.init_params(m).items()}
+
+
+def _rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_embed_shapes(m, rng):
+    e = jnp.asarray(_rand(rng, 5, config.ent_dim(m)))
+    out = model.embed(m, _p(m), e)
+    assert out.shape == (5, config.repr_dim(m))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_project_shapes(m, rng):
+    x = model.embed(m, _p(m), jnp.asarray(_rand(rng, 7, config.ent_dim(m))))
+    r = jnp.asarray(_rand(rng, 7, config.rel_dim(m)))
+    out = model.project(m, _p(m), x, r)
+    assert out.shape == (7, config.repr_dim(m))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+@pytest.mark.parametrize("k", [2, 3])
+def test_intersect_union_shapes(m, k, rng):
+    e = jnp.asarray(_rand(rng, 4 * k, config.ent_dim(m)))
+    xs = model.embed(m, _p(m), e).reshape(4, k, config.repr_dim(m))
+    for fn in (model.intersect, model.union):
+        out = fn(m, _p(m), xs)
+        assert out.shape == (4, config.repr_dim(m))
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_betae_positivity_invariant(rng):
+    """BetaE reprs must stay strictly positive through every operator."""
+    p = _p("betae")
+    x = model.embed("betae", p, jnp.asarray(_rand(rng, 6, 2 * D, scale=3.0)))
+    assert (np.asarray(x) > 0).all()
+    r = jnp.asarray(_rand(rng, 6, D))
+    x2 = model.project("betae", p, x, r)
+    assert (np.asarray(x2) > 0).all()
+    x3 = model.negate("betae", {}, x2)
+    assert (np.asarray(x3) > 0).all()
+    xs = jnp.stack([x2, x3], axis=1)
+    x4 = model.intersect("betae", p, xs)
+    assert (np.asarray(x4) > 0).all()
+
+
+def test_fuzzqe_logic_laws(rng):
+    """Product t-norm / probabilistic sum / complement identities."""
+    x = jax.nn.sigmoid(jnp.asarray(_rand(rng, 5, D)))
+    ones, zeros = jnp.ones_like(x), jnp.zeros_like(x)
+    # x ∧ 1 = x ; x ∨ 0 = x ; ¬¬x = x
+    np.testing.assert_allclose(
+        np.asarray(model.intersect("fuzzqe", {}, jnp.stack([x, ones], 1))),
+        np.asarray(x), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(model.union("fuzzqe", {}, jnp.stack([x, zeros], 1))),
+        np.asarray(x), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(model.negate("fuzzqe", {},
+                                model.negate("fuzzqe", {}, x))),
+        np.asarray(x), rtol=1e-6)
+
+
+def test_betae_negation_is_involution(rng):
+    x = model.embed("betae", _p("betae"),
+                    jnp.asarray(_rand(rng, 5, 2 * D)))
+    back = model.negate("betae", {}, model.negate("betae", {}, x))
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-4)
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_score_ranks_exact_match_highest(m, rng):
+    """An entity equal to the query's source should outrank random ones."""
+    p = _p(m)
+    e = jnp.asarray(_rand(rng, 1, config.ent_dim(m)))
+    q = model.embed(m, p, e)
+    s_self = np.asarray(model.score_pair(m, q, e))
+    others = jnp.asarray(_rand(rng, 64, config.ent_dim(m)))
+    s_other = np.asarray(
+        model.score_pair(m, jnp.broadcast_to(q, (64, q.shape[1])), others))
+    assert s_self[0] >= s_other.max() - 1e-4
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_score_loss_mask_zeroes_padding(m, rng):
+    """Padded rows must contribute exactly nothing to the loss (Eq. 6)."""
+    p = _p(m)
+    b = 8
+    q = model.embed(m, p, jnp.asarray(_rand(rng, b, config.ent_dim(m))))
+    pos = jnp.asarray(_rand(rng, b, config.ent_dim(m)))
+    neg = jnp.asarray(_rand(rng, b, N_NEG, config.ent_dim(m)))
+    full = model.score_loss(m, p, q, pos, neg, jnp.ones(b))
+    half_mask = jnp.asarray([1.0] * 4 + [0.0] * 4)
+    half = model.score_loss(m, p, q, pos, neg, half_mask)
+    # recompute on the first 4 rows only
+    ref4 = model.score_loss(m, p, q[:4], pos[:4], neg[:4], jnp.ones(4))
+    np.testing.assert_allclose(np.asarray(half), np.asarray(ref4), rtol=1e-5)
+    assert float(half[0]) < float(full[0])
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_ops_are_row_local(m, rng):
+    """Row i of project() must not depend on row j != i (padding safety)."""
+    p = _p(m)
+    x = model.embed(m, p, jnp.asarray(_rand(rng, 6, config.ent_dim(m))))
+    r = jnp.asarray(_rand(rng, 6, config.rel_dim(m)))
+    out1 = np.asarray(model.project(m, p, x, r))
+    x2 = x.at[5].set(123.0)
+    out2 = np.asarray(model.project(m, p, x2, r))
+    np.testing.assert_allclose(out1[:5], out2[:5], rtol=1e-5, atol=1e-6)
+
+
+def test_complex_score_and_loss(rng):
+    h = jnp.asarray(_rand(rng, 4, D))
+    r = jnp.asarray(_rand(rng, 4, D))
+    t = jnp.asarray(_rand(rng, 4, D))
+    s = model.complex_score(h, r, t)
+    assert s.shape == (4,)
+    neg = jnp.asarray(_rand(rng, 4, N_NEG, D))
+    loss = model.complex_loss(h, r, t, neg, jnp.ones(4))
+    assert loss.shape == (1,) and np.isfinite(np.asarray(loss)).all()
+
+
+def test_complex_score_agrees_with_naive_complex_arithmetic(rng):
+    hd = D // 2
+    h, r, t = (_rand(rng, 3, D) for _ in range(3))
+    hc = h[:, :hd] + 1j * h[:, hd:]
+    rc = r[:, :hd] + 1j * r[:, hd:]
+    tc = t[:, :hd] + 1j * t[:, hd:]
+    want = np.real(np.sum(hc * rc * np.conj(tc), axis=-1))
+    got = np.asarray(model.complex_score(
+        jnp.asarray(h), jnp.asarray(r), jnp.asarray(t)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m", ["gqe", "betae"])
+def test_vjp_artifact_fn_matches_autodiff(m, rng):
+    """The lowered VJP artifact math == jax.grad through the fwd op."""
+    specs = {s.name: s for s in model.artifact_specs(models=(m,),
+                                                     buckets=(16,))}
+    fwd = specs[f"{m}_project_fwd_b16"]
+    vjp = specs[f"{m}_project_vjp_b16"]
+    p = model.init_params(m)
+    pvals = [jnp.asarray(p[n]) for n in fwd.params]
+    x = model.embed(m, _p(m), jnp.asarray(_rand(rng, 16, config.ent_dim(m))))
+    r = jnp.asarray(_rand(rng, 16, config.rel_dim(m)))
+    gout = jnp.asarray(_rand(rng, 16, config.repr_dim(m)))
+
+    grads = vjp.fn(*pvals, x, r, gout)
+
+    def scalar(*args):
+        pv = args[: len(pvals)]
+        out = fwd.fn(*pv, args[-2], args[-1])
+        return jnp.sum(out * gout)
+
+    want = jax.grad(scalar, argnums=tuple(range(len(pvals) + 2)))(
+        *pvals, x, r)
+    assert len(grads) == len(want)
+    for g, w in zip(grads, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_pte_encode_deterministic_and_heavy(rng):
+    p = {k: jnp.asarray(v) for k, v in model.pte_params("bge_sim").items()}
+    tok = jnp.asarray(_rand(rng, 8, config.TOK_DIM))
+    a = np.asarray(model.pte_encode("bge_sim", p, tok))
+    b = np.asarray(model.pte_encode("bge_sim", p, tok))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (8, config.PTES["bge_sim"][2])
+
+
+def test_fuse_embed_shapes_and_grad(rng):
+    fp = {k: jnp.asarray(v)
+          for k, v in model.init_fusion_params("gqe", "bge_sim").items()}
+    e = jnp.asarray(_rand(rng, 4, config.ent_dim("gqe")))
+    sem = jnp.asarray(_rand(rng, 4, config.PTES["bge_sim"][2]))
+    out = model.fuse_embed("gqe", fp, e, sem)
+    assert out.shape == e.shape
+
+    g = jax.grad(lambda e: jnp.sum(model.fuse_embed("gqe", fp, e, sem) ** 2))(e)
+    assert np.isfinite(np.asarray(g)).all() and float(jnp.abs(g).sum()) > 0

@@ -1,0 +1,71 @@
+"""Regression: scheduler padding must be exact for every model.
+
+The engine pads batches to the compiled bucket with zero rows (and a zero
+mask for the loss). Zero rows are *structurally invalid* for some reprs
+(BetaE needs α, β > 0), which once produced `0 · ∞ = NaN` in the batch-sum —
+these tests pin the fix (safe-`where` in score_loss) and the two padding
+exactness properties the engine relies on (row-local ops; VJP linearity in
+the cotangent).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import config, model
+from compile.config import D, N_NEG
+
+
+def _p(m):
+    return {k: jnp.asarray(v) for k, v in model.init_params(m).items()}
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_zero_padded_rows_keep_loss_finite(m, rng):
+    """Zero q rows + zero mask must not poison the summed loss (BetaE NaN)."""
+    b = 4
+    q_real = model.embed(m, _p(m), jnp.asarray(_rand(rng, 2, config.ent_dim(m))))
+    q = jnp.concatenate([q_real, jnp.zeros((2, config.repr_dim(m)))], axis=0)
+    pos = jnp.asarray(np.vstack([_rand(rng, 2, config.ent_dim(m)),
+                                 np.zeros((2, config.ent_dim(m)), np.float32)]))
+    neg = jnp.zeros((b, N_NEG, config.ent_dim(m)))
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+    loss = model.score_loss(m, _p(m), q, pos, neg, mask)
+    assert np.isfinite(np.asarray(loss)).all(), f"{m}: padded loss not finite"
+
+
+@pytest.mark.parametrize("m", config.MODELS)
+def test_score_gradients_zero_on_padded_rows(m, rng):
+    b = 4
+    q_real = model.embed(m, _p(m), jnp.asarray(_rand(rng, b, config.ent_dim(m))))
+    q = q_real.at[2:].set(0.0)
+    pos = jnp.asarray(_rand(rng, b, config.ent_dim(m)))
+    neg = jnp.asarray(_rand(rng, b, N_NEG, config.ent_dim(m)))
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0])
+
+    def lf(q, pos, neg):
+        return model.score_loss(m, _p(m), q, pos, neg, mask)[0]
+
+    gq, gpos, gneg = jax.grad(lf, argnums=(0, 1, 2))(q, pos, neg)
+    for g, name in [(gq, "g_q"), (gpos, "g_pos"), (gneg, "g_neg")]:
+        garr = np.asarray(g)
+        assert np.isfinite(garr).all(), f"{m}: {name} not finite"
+        assert np.abs(garr[2:]).max() == 0.0, f"{m}: {name} leaks into pad rows"
+
+
+@pytest.mark.parametrize("m", ["gqe", "betae", "q2b"])
+def test_vjp_linear_in_cotangent(m, rng):
+    """pull(0) == 0 — the property that makes zero-padded VJP rows exact."""
+    p = _p(m)
+    x = model.embed(m, p, jnp.asarray(_rand(rng, 3, config.ent_dim(m))))
+    r = jnp.asarray(_rand(rng, 3, config.rel_dim(m)))
+    _, pull = jax.vjp(lambda x, r: model.project(m, p, x, r), x, r)
+    zeros = jnp.zeros((3, config.repr_dim(m)))
+    for g in pull(zeros):
+        assert np.abs(np.asarray(g)).max() == 0.0

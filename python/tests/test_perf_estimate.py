@@ -1,0 +1,19 @@
+"""The L1 perf estimator's invariants (it feeds EXPERIMENTS.md §Perf)."""
+
+from compile import config, perf_estimate
+
+
+def test_all_tilings_fit_vmem():
+    for name, r in perf_estimate.report():
+        assert r["vmem_ok"], f"{name}: working set {r['vmem']} exceeds VMEM"
+
+
+def test_mxu_fill_bounded():
+    for name, r in perf_estimate.report():
+        assert 0.0 < r["mxu_fill"] <= 1.0, name
+
+
+def test_grid_covers_batch():
+    r = perf_estimate.matmul_tile_report(config.B_MAX, config.D, config.D)
+    tm = min(config.TILE_M, config.B_MAX)
+    assert r["grid"] >= config.B_MAX // tm

@@ -1,0 +1,57 @@
+//! Fig. 2: the pipeline evolution — (a) naive synchronous, (b) prefetch
+//! (async sampling, query-level batching), (c) NGDB-Zoo (async +
+//! operator-level). Same workload, three trainer configurations.
+
+use anyhow::Result;
+
+use super::{banner, print_table, BenchCtx};
+use crate::config::{Batching, Pipelining};
+use crate::train::Trainer;
+
+pub fn run(dataset: &str, model: &str) -> Result<()> {
+    let ctx = BenchCtx::open()?;
+    let s = super::scale(0.02);
+    let n_steps = super::steps(6);
+    banner(&format!(
+        "Fig 2 — pipeline evolution, {model} on {dataset} (scale={s}, steps={n_steps})"
+    ));
+    let kg = ctx.kg(dataset, s)?;
+
+    let stages: [(&str, Batching, Pipelining); 3] = [
+        ("(a) naive: sync sampling + per-query exec", Batching::PerQuery, Pipelining::Sync),
+        ("(b) prefetch: async sampling + query-level", Batching::QueryLevel, Pipelining::Async),
+        ("(c) NGDB-Zoo: async + operator-level", Batching::OperatorLevel, Pipelining::Async),
+    ];
+    let mut rows = Vec::new();
+    let mut base_qps = 0.0;
+    for (label, batching, pipelining) in stages {
+        let mut cfg = ctx.base_cfg(dataset, model, s, n_steps);
+        cfg.batching = batching;
+        cfg.pipelining = pipelining;
+        super::warmup(&ctx, &kg, &cfg)?;
+        let mut state = ctx.state(model, &kg, 5)?;
+        let r = Trainer::new(&ctx.rt, std::sync::Arc::clone(&kg), cfg).train(&mut state)?;
+        if base_qps == 0.0 {
+            base_qps = r.qps;
+        }
+        let sample_frac = r
+            .phases
+            .iter()
+            .find(|(n, _)| n == "sample")
+            .map(|(_, t)| t / r.phases.iter().map(|(_, t)| t).sum::<f64>())
+            .unwrap_or(0.0);
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}", r.qps),
+            format!("{:.1}x", r.qps / base_qps),
+            format!("{:.1}", r.ops_per_launch),
+            format!("{:.0}%", 100.0 * sample_frac),
+        ]);
+    }
+    print_table(
+        &["stage", "q/s", "vs naive", "ops/launch", "sampling share"],
+        &rows,
+    );
+    println!("\npaper shape: each stage strictly faster; (c) maximizes hardware saturation");
+    Ok(())
+}

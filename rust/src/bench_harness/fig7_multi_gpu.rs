@@ -1,0 +1,49 @@
+//! Fig. 7: multi-GPU throughput scaling on ogbl-wikikg2 and ATLAS-Wiki.
+//!
+//! We run the real data-parallel path (correctness measured), then report
+//! the analytic scaling curve from the measured per-worker compute time and
+//! the measured all-reduce gradient volume (this box has one core; see
+//! DESIGN.md §Substitutions).
+
+use anyhow::Result;
+
+use super::{banner, print_table, BenchCtx};
+use crate::train::{modeled_speedup, train_multi_worker};
+
+pub fn run() -> Result<()> {
+    let ctx = BenchCtx::open()?;
+    let s = super::scale(0.002);
+    let n_steps = super::steps(2).max(1);
+    banner(&format!("Fig 7 — multi-GPU throughput scaling (scale={s}, steps={n_steps})"));
+
+    let mut rows = Vec::new();
+    for dataset in ["ogbl-wikikg2", "atlas-wiki-4m"] {
+        for model in ["gqe", "betae"] {
+            let kg = ctx.kg(dataset, s)?;
+            let mut cfg = ctx.base_cfg(dataset, model, s, n_steps);
+            cfg.workers = 1;
+            cfg.batch_queries = 256;
+            let mut state = ctx.state(model, &kg, 5)?;
+            let r1 = train_multi_worker(&ctx.rt, std::sync::Arc::clone(&kg), &cfg,
+                &mut state)?;
+            let t1 = r1.worker_exec_secs;
+            let bytes = r1.allreduce_bytes_per_step;
+            let mut row = vec![
+                format!("{dataset}/{model}"),
+                format!("{:.0}", r1.qps),
+            ];
+            for w in [2usize, 4, 8] {
+                let sp = modeled_speedup(t1, bytes, w, 10e9, 5e-6);
+                row.push(format!("{:.2}x", sp));
+            }
+            row.push(crate::util::stats::fmt_bytes(bytes));
+            rows.push(row);
+        }
+    }
+    print_table(
+        &["workload", "q/s (1w meas)", "2w (model)", "4w (model)", "8w (model)", "grad vol"],
+        &rows,
+    );
+    println!("\npaper shape: near-linear scaling to 8 GPUs (comm minimal vs compute)");
+    Ok(())
+}

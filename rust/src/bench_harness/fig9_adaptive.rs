@@ -1,0 +1,104 @@
+//! Fig. 9: adaptive sampling under a non-stationary (steered) workload.
+//!
+//! The workload's base pattern distribution spikes toward hard multi-hop
+//! patterns every `spike_every` steps (the paper uses 15k; scaled down
+//! here). We train twice — static π vs adaptive curriculum — and compare
+//! final MRR on a fixed eval set.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{banner, print_table, BenchCtx};
+use crate::config::Pipelining;
+use crate::eval::rank;
+use crate::query::Pattern;
+use crate::sampler::SamplerStream;
+use crate::train::Trainer;
+
+pub fn run(dataset: &str, models: &[&str]) -> Result<()> {
+    let ctx = BenchCtx::open()?;
+    let s = super::scale(0.02);
+    let n_steps = std::env::var("NGDB_FIG9_STEPS").ok()
+        .and_then(|v| v.parse().ok()).unwrap_or_else(|| super::steps(48));
+    let spike_every = (n_steps / 4).max(2);
+    banner(&format!(
+        "Fig 9 — adaptive vs static sampling under difficulty spikes \
+         (scale={s}, steps={n_steps}, spike every {spike_every})"
+    ));
+
+    let kg = ctx.kg(dataset, s)?;
+    let full = rank::full_graph(&kg)?;
+    let eval_patterns = [Pattern::P2, Pattern::P3, Pattern::Pi, Pattern::Ip];
+    let eval_queries = rank::sample_eval_queries(&kg, &full, &eval_patterns, 8, 11);
+
+    let mut rows = Vec::new();
+    for &model in models {
+        let mut mrrs = Vec::new();
+        for adaptive in [false, true] {
+            let mut cfg = ctx.base_cfg(dataset, model, s, n_steps);
+            cfg.adaptive_lambda = if adaptive { 0.75 } else { 0.0 };
+            cfg.lr = 2e-3;
+            cfg.pipelining = Pipelining::Async;
+            let mut state = ctx.state(model, &kg, 5)?;
+
+            // steered stream: spike the hard patterns periodically by
+            // driving the trainer in chunks and re-steering between them
+            let n_neg = crate::runtime::Runtime::manifest(&ctx.rt).dims.n_neg;
+            let stream = SamplerStream::spawn(Arc::clone(&kg), cfg.sampler(n_neg));
+            let easy = vec![8.0, 1.0, 0.1, 0.5, 0.1, 0.1, 0.1, 0.5, 0.1];
+            let hard = vec![0.1, 0.5, 8.0, 0.1, 0.1, 8.0, 8.0, 0.1, 8.0];
+            let trainer = Trainer::new(&ctx.rt, Arc::clone(&kg), cfg.clone());
+            let mut chunk_cfg = cfg.clone();
+            chunk_cfg.steps = spike_every;
+            let chunks = n_steps / spike_every;
+            for c in 0..chunks {
+                stream.steer(if c % 2 == 0 { &easy } else { &hard });
+                // reuse trainer in sync mode over the steered stream's
+                // output: emulate by pulling batches and stepping manually
+                for _ in 0..spike_every {
+                    let batch = stream.recv_batch(cfg.batch_queries);
+                    if batch.is_empty() {
+                        break;
+                    }
+                    let mut dag = crate::query::QueryDag::default();
+                    for q in &batch {
+                        dag.add_query(&q.tree, q.answer, q.negatives.clone(),
+                            q.pattern.name(),
+                            crate::config::model_supports_negation(model))?;
+                    }
+                    dag.add_gradient_nodes();
+                    let engine = crate::exec::Engine::new(
+                        &ctx.rt, crate::exec::EngineConfig::default());
+                    let mut grads = crate::exec::Grads::default();
+                    let stats = engine.run(&dag, &state, &mut grads)?;
+                    for (pat, loss, count) in stats.per_pattern_loss {
+                        if count > 0 {
+                            if let Ok(p) = Pattern::from_name(pat) {
+                                stream.feedback(p, loss / count as f64);
+                            }
+                        }
+                    }
+                    grads.normalize();
+                    trainer.apply(&mut state, &grads);
+                }
+            }
+            stream.shutdown();
+            let mrr = if eval_queries.is_empty() {
+                f64::NAN
+            } else {
+                rank::evaluate(&ctx.rt, &state, &kg, &eval_queries, None)?.mrr
+            };
+            mrrs.push(mrr);
+        }
+        rows.push(vec![
+            model.to_string(),
+            format!("{:.4}", mrrs[0]),
+            format!("{:.4}", mrrs[1]),
+            format!("{:+.1}%", 100.0 * (mrrs[1] - mrrs[0]) / mrrs[0].max(1e-9)),
+        ]);
+    }
+    print_table(&["model", "MRR static", "MRR adaptive", "rel. gain"], &rows);
+    println!("\npaper shape: adaptive wins across models/datasets, avg +21.5% rel. MRR");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Benchmark harness: one module per table/figure of the paper's
+//! evaluation. Each prints the paper's reference values next to our
+//! measured ones so the *shape* comparison (who wins, by what factor) is
+//! explicit; absolute numbers are not comparable (CPU PJRT vs A6000 — see
+//! DESIGN.md §Substitutions).
+//!
+//! All harnesses read two environment knobs so `cargo bench` stays fast on
+//! the 1-core testbed while full runs remain possible:
+//!
+//! * `NGDB_BENCH_SCALE` — graph scale factor (default per-harness)
+//! * `NGDB_BENCH_STEPS` — training steps per measured cell
+
+pub mod fig2_pipelining;
+pub mod fig7_multi_gpu;
+pub mod fig9_adaptive;
+pub mod table1_massive;
+pub mod table2_single_hop;
+pub mod table3_main;
+pub mod table6_operator;
+pub mod table7_negation;
+pub mod table8_semantic;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::kg::{KgSpec, KgStore};
+use crate::model::ModelState;
+use crate::runtime::PjrtRuntime;
+
+/// Env-tunable bench knobs.
+pub fn knob(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn steps(default: usize) -> usize {
+    knob("NGDB_BENCH_STEPS", default as f64) as usize
+}
+
+pub fn scale(default: f64) -> f64 {
+    knob("NGDB_BENCH_SCALE", default)
+}
+
+/// Shared bench context.
+pub struct BenchCtx {
+    pub rt: PjrtRuntime,
+    pub dir: String,
+}
+
+impl BenchCtx {
+    pub fn open() -> Result<BenchCtx> {
+        let dir = std::env::var("NGDB_ARTIFACTS")
+            .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+        Ok(BenchCtx { rt: PjrtRuntime::open(&dir)?, dir })
+    }
+
+    pub fn kg(&self, dataset: &str, s: f64) -> Result<Arc<KgStore>> {
+        Ok(Arc::new(KgSpec::preset(dataset, s)?.generate()?))
+    }
+
+    pub fn state(&self, model: &str, kg: &KgStore, seed: u64) -> Result<ModelState> {
+        use crate::runtime::Runtime;
+        ModelState::init(self.rt.manifest(), model, kg.n_entities, kg.n_relations,
+            Some(&self.dir), seed)
+    }
+
+    pub fn base_cfg(&self, dataset: &str, model: &str, s: f64, n_steps: usize)
+        -> ExperimentConfig {
+        ExperimentConfig {
+            dataset: dataset.into(),
+            scale: s,
+            model: model.into(),
+            steps: n_steps,
+            batch_queries: 256,
+            artifacts_dir: self.dir.clone(),
+            seed: 1234,
+            ..Default::default()
+        }
+    }
+}
+
+/// Warm the runtime's executable cache for one trainer configuration by
+/// running a single untimed step on a throwaway state. Lazy XLA compiles
+/// otherwise land entirely in whichever configuration runs first and skew
+/// short benchmark cells.
+pub fn warmup(ctx: &BenchCtx, kg: &Arc<KgStore>, cfg: &ExperimentConfig) -> Result<()> {
+    let mut wcfg = cfg.clone();
+    wcfg.steps = 1;
+    wcfg.log_path = None;
+    let mut state = ctx.state(&wcfg.model, kg, 999)?;
+    crate::train::Trainer::new(&ctx.rt, Arc::clone(kg), wcfg).train(&mut state)?;
+    Ok(())
+}
+
+/// Print a horizontal rule + title.
+pub fn banner(title: &str) {
+    println!("\n{}", "=".repeat(78));
+    println!("{title}");
+    println!("{}", "=".repeat(78));
+}
+
+/// Render a simple aligned table.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: Vec<String>| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", line(headers.iter().map(|s| s.to_string()).collect()));
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+    for row in rows {
+        println!("{}", line(row.clone()));
+    }
+}

@@ -1,0 +1,120 @@
+//! Table 6 (Appendix F.4): per-operator baseline-vs-batched execution time.
+//!
+//! For each operator type we time `B` singleton artifact invocations vs one
+//! `B`-row fused invocation — the microscopic version of the operator-level
+//! batching claim. The paper's dramatic Intersect/Union wins come from
+//! their multi-input structure; the same ordering should hold here.
+
+use anyhow::Result;
+
+use super::{banner, print_table, BenchCtx};
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::rng::Rng;
+
+/// Paper reference: (op, baseline ms, batched ms).
+const PAPER: &[(&str, f64, f64)] = &[
+    ("embed", 2.3, 0.8),
+    ("project", 15.7, 4.2),
+    ("intersect", 78.5, 6.0),
+    ("union", 62.3, 5.1),
+];
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor { shape, data: (0..n).map(|_| rng.uniform_sym(0.5)).collect() }
+}
+
+pub fn run(model: &str) -> Result<()> {
+    let ctx = BenchCtx::open()?;
+    let dims = ctx.rt.manifest().dims.clone();
+    let b = dims.b_max;
+    let small = dims.buckets[0];
+    let reps = super::steps(5);
+    banner(&format!(
+        "Table 6 — per-operator singleton vs batched latency (model={model}, B={b})"
+    ));
+
+    let dr = dims.repr(model);
+    let de = dims.ent(model);
+    let drel = dims.rel(model);
+    let mut rng = Rng::new(77);
+
+    // (op name, batched inputs, singleton inputs)
+    let cases: Vec<(&str, Vec<HostTensor>, Vec<HostTensor>)> = vec![
+        (
+            "embed",
+            vec![rand_tensor(&mut rng, vec![b, de])],
+            vec![rand_tensor(&mut rng, vec![small, de])],
+        ),
+        (
+            "project",
+            vec![rand_tensor(&mut rng, vec![b, dr]), rand_tensor(&mut rng, vec![b, drel])],
+            vec![rand_tensor(&mut rng, vec![small, dr]),
+                 rand_tensor(&mut rng, vec![small, drel])],
+        ),
+        (
+            "intersect2",
+            vec![rand_tensor(&mut rng, vec![b, 2, dr])],
+            vec![rand_tensor(&mut rng, vec![small, 2, dr])],
+        ),
+        (
+            "union2",
+            vec![rand_tensor(&mut rng, vec![b, 2, dr])],
+            vec![rand_tensor(&mut rng, vec![small, 2, dr])],
+        ),
+    ];
+
+    let mut rows = Vec::new();
+    for (op, big_inputs, small_inputs) in cases {
+        let big_name = format!("{model}_{op}_fwd_b{b}");
+        let small_name = format!("{model}_{op}_fwd_b{small}");
+        let meta = ctx.rt.manifest().artifact(&big_name)?.clone();
+        let params: Vec<HostTensor> = meta
+            .param_args()
+            .map(|a| rand_tensor(&mut rng, a.shape.clone()))
+            .collect();
+        let mk = |inp: &[HostTensor]| {
+            let mut v = params.clone();
+            v.extend_from_slice(inp);
+            v
+        };
+        let big_args = mk(&big_inputs);
+        let small_args = mk(&small_inputs);
+        // warm up (XLA compile happens here, excluded from timing)
+        ctx.rt.execute(&big_name, &big_args)?;
+        ctx.rt.execute(&small_name, &small_args)?;
+
+        // batched: one B-row launch; baseline: B/small singleton launches
+        let t_batched = {
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                ctx.rt.execute(&big_name, &big_args)?;
+            }
+            t.elapsed().as_secs_f64() / reps as f64
+        };
+        let launches = b / small;
+        let t_baseline = {
+            let t = std::time::Instant::now();
+            for _ in 0..reps {
+                for _ in 0..launches {
+                    ctx.rt.execute(&small_name, &small_args)?;
+                }
+            }
+            t.elapsed().as_secs_f64() / reps as f64
+        };
+        let paper = PAPER.iter().find(|(p, ..)| op.starts_with(p));
+        rows.push(vec![
+            op.to_string(),
+            format!("{:.2}", t_baseline * 1e3),
+            format!("{:.2}", t_batched * 1e3),
+            format!("{:.1}x", t_baseline / t_batched.max(1e-12)),
+            paper.map(|(_, a, b)| format!("{:.1}x", a / b)).unwrap_or_default(),
+        ]);
+    }
+    print_table(
+        &["operator", "baseline ms", "batched ms", "speedup", "paper speedup"],
+        &rows,
+    );
+    println!("\npaper shape: intersect/union >> project > embed (multi-input ops win most)");
+    Ok(())
+}

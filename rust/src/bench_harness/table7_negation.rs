@@ -1,0 +1,61 @@
+//! Table 7 (Appendix): BetaE on the five negation patterns — MRR and
+//! Hits@10 per pattern across datasets.
+
+use anyhow::Result;
+
+use super::{banner, print_table, BenchCtx};
+use crate::eval::rank;
+use crate::query::Pattern;
+use crate::train::Trainer;
+
+/// Paper MRR (%) rows for FB15k / FB15k-237 / NELL995 (2in 3in inp pin pni).
+const PAPER: &[(&str, [f64; 5])] = &[
+    ("fb15k", [13.00, 14.97, 9.17, 6.11, 11.88]),
+    ("fb15k-237", [3.96, 6.95, 6.52, 3.97, 2.96]),
+    ("nell995", [4.06, 6.65, 8.03, 3.25, 2.92]),
+];
+
+pub fn run(datasets: &[&str]) -> Result<()> {
+    let ctx = BenchCtx::open()?;
+    let s = super::scale(0.02);
+    let n_steps = super::steps(10);
+    banner(&format!("Table 7 — BetaE negation queries (scale={s}, steps={n_steps})"));
+
+    // paper order for the columns
+    let order = [Pattern::In2, Pattern::In3, Pattern::Inp, Pattern::Pin, Pattern::Pni];
+    let mut rows = Vec::new();
+    for &dataset in datasets {
+        let kg = ctx.kg(dataset, s)?;
+        let full = rank::full_graph(&kg)?;
+        let mut cfg = ctx.base_cfg(dataset, "betae", s, n_steps);
+        // train on a mixture of positive + negation patterns
+        cfg.patterns = Pattern::ALL.to_vec();
+        let mut state = ctx.state("betae", &kg, 5)?;
+        Trainer::new(&ctx.rt, std::sync::Arc::clone(&kg), cfg).train(&mut state)?;
+
+        let queries = rank::sample_eval_queries(&kg, &full, &order, 8, 3);
+        let report = rank::evaluate(&ctx.rt, &state, &kg, &queries, None)?;
+        let metric = |p: Pattern| {
+            report
+                .per_pattern
+                .iter()
+                .find(|(q, ..)| *q == p)
+                .map(|(_, mrr, h10, _)| (*mrr, *h10))
+                .unwrap_or((f64::NAN, f64::NAN))
+        };
+        let paper = PAPER.iter().find(|(d, _)| *d == dataset).map(|(_, v)| v);
+        for (i, &p) in order.iter().enumerate() {
+            let (mrr, h10) = metric(p);
+            rows.push(vec![
+                dataset.to_string(),
+                p.name().to_string(),
+                format!("{mrr:.3}"),
+                format!("{h10:.3}"),
+                paper.map(|v| format!("{:.3}", v[i] / 100.0)).unwrap_or_default(),
+            ]);
+        }
+    }
+    print_table(&["dataset", "pattern", "MRR", "Hits@10", "paper MRR"], &rows);
+    println!("\npaper shape: negation MRRs are low everywhere; 3in/inp > pin/pni");
+    Ok(())
+}

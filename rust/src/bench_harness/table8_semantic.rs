@@ -1,0 +1,95 @@
+//! Table 8 / Fig. 8: decoupled semantic integration ablation — MRR,
+//! throughput and memory for joint-in-loop vs offline+GPU-resident, across
+//! models and simulated encoders.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{banner, print_table, BenchCtx};
+use crate::config::Semantic;
+use crate::eval::rank;
+use crate::kg::descriptions::Descriptions;
+use crate::query::Pattern;
+use crate::runtime::Runtime;
+use crate::semantic::{DecoupledCache, JointEncoder, SemanticSource};
+use crate::train::Trainer;
+use crate::util::stats::fmt_bytes;
+
+/// Paper averages: joint 347 q/s -> decoupled 1915 q/s (5.5x), memory
+/// 9.60 GB -> 8.34 GB, MRR +4.74 pts.
+const PAPER_TPUT_GAIN: f64 = 1915.0 / 347.0;
+
+pub fn run(datasets: &[&str], models: &[&str], encoders: &[&str]) -> Result<()> {
+    let ctx = BenchCtx::open()?;
+    let s = super::scale(0.02);
+    let n_steps = super::steps(4);
+    banner(&format!(
+        "Table 8 / Fig 8 — decoupled semantic integration (scale={s}, steps={n_steps})"
+    ));
+
+    let mut rows = Vec::new();
+    for &dataset in datasets {
+        let kg = ctx.kg(dataset, s)?;
+        let full = rank::full_graph(&kg)?;
+        let desc = Arc::new(Descriptions::build(
+            &kg, ctx.rt.manifest().dims.tok_dim, 9));
+        for &model in models {
+            for &encoder in encoders {
+                let mut measured: Vec<(String, f64, f64, usize)> = Vec::new();
+                for mode in ["joint", "decoupled"] {
+                    let mut cfg = ctx.base_cfg(dataset, model, s, n_steps);
+                    cfg.semantic = match mode {
+                        "joint" => Semantic::Joint { encoder: encoder.into() },
+                        _ => Semantic::Decoupled { encoder: encoder.into() },
+                    };
+                    let mut state = ctx.state(model, &kg, 5)?;
+                    state.load_fusion(ctx.rt.manifest(), encoder, Some(&ctx.dir), 5)?;
+                    let source: Box<dyn SemanticSource> = match mode {
+                        "joint" => Box::new(JointEncoder::new(
+                            &ctx.rt, encoder, Arc::clone(&desc), &ctx.dir)?),
+                        _ => Box::new(DecoupledCache::precompute(
+                            &ctx.rt, encoder, &desc, &ctx.dir)?),
+                    };
+                    let report = Trainer::new(&ctx.rt, Arc::clone(&kg), cfg)
+                        .with_semantic(source.as_ref())
+                        .train(&mut state)?;
+                    let queries = rank::sample_eval_queries(
+                        &kg, &full, &[Pattern::P1, Pattern::I2], 6, 3);
+                    let mrr = if queries.is_empty() {
+                        f64::NAN
+                    } else {
+                        rank::evaluate(&ctx.rt, &state, &kg, &queries,
+                            Some(source.as_ref()))?.mrr
+                    };
+                    // joint keeps the encoder weights resident all run
+                    let mem = report.mem.total();
+                    measured.push((mode.to_string(), report.qps, mrr, mem));
+                }
+                let (joint, dec) = (&measured[0], &measured[1]);
+                rows.push(vec![
+                    dataset.to_string(),
+                    format!("{model}+{encoder}"),
+                    format!("{:.3}", joint.2),
+                    format!("{:.3}", dec.2),
+                    format!("{:.0}", joint.1),
+                    format!("{:.0}", dec.1),
+                    format!("{:.1}x", dec.1 / joint.1.max(1e-9)),
+                    fmt_bytes(joint.3),
+                    fmt_bytes(dec.3),
+                ]);
+            }
+        }
+    }
+    print_table(
+        &["dataset", "model", "MRR joint", "MRR dec", "q/s joint", "q/s dec",
+          "speedup", "mem joint", "mem dec"],
+        &rows,
+    );
+    println!(
+        "\npaper shape: decoupled ~{PAPER_TPUT_GAIN:.1}x throughput of joint \
+         (5x–7x), with LOWER peak memory (encoder unloaded) and equal-or-\
+         better MRR (numerics identical by construction)"
+    );
+    Ok(())
+}

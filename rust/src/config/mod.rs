@@ -1,0 +1,271 @@
+//! Typed experiment configuration: TOML presets (`configs/*.toml`) + CLI
+//! `--set key=value` overrides. One [`ExperimentConfig`] fully determines a
+//! run (dataset, model, trainer variant, sampler, semantic mode, eval).
+
+use anyhow::{bail, Result};
+
+use crate::query::Pattern;
+use crate::sampler::SamplerConfig;
+use crate::util::cli::Args;
+use crate::util::toml::{TomlDoc, TomlValue};
+
+/// Batching granularity — the paper's central ablation axis (Fig. 2/3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Batching {
+    /// NGDB-Zoo: cross-query operator pools + Max-Fillness scheduling
+    OperatorLevel,
+    /// KGReasoning-style: batch only queries of identical structure
+    QueryLevel,
+    /// SQE-proxy: per-query sequential execution
+    PerQuery,
+}
+
+impl Batching {
+    pub fn parse(s: &str) -> Result<Batching> {
+        Ok(match s {
+            "operator" | "operator-level" | "ngdb-zoo" => Batching::OperatorLevel,
+            "query" | "query-level" => Batching::QueryLevel,
+            "per-query" | "naive" => Batching::PerQuery,
+            other => bail!("unknown batching mode {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Batching::OperatorLevel => "operator-level",
+            Batching::QueryLevel => "query-level",
+            Batching::PerQuery => "per-query",
+        }
+    }
+}
+
+/// Sampling pipelining — Fig. 2's second axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pipelining {
+    /// sampling on the critical path (Fig. 2a)
+    Sync,
+    /// producer threads + bounded channel (Fig. 2b/c)
+    Async,
+}
+
+/// Semantic-integration mode (§4.4, Table 8).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Semantic {
+    Off,
+    /// encoder inside the training loop (the baseline the paper beats)
+    Joint { encoder: String },
+    /// offline precompute + resident cache (NGDB-Zoo)
+    Decoupled { encoder: String },
+}
+
+impl Semantic {
+    pub fn encoder(&self) -> Option<&str> {
+        match self {
+            Semantic::Off => None,
+            Semantic::Joint { encoder } | Semantic::Decoupled { encoder } => Some(encoder),
+        }
+    }
+}
+
+/// Everything one experiment run needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub dataset: String,
+    pub scale: f64,
+    pub model: String,
+    pub batching: Batching,
+    pub pipelining: Pipelining,
+    pub semantic: Semantic,
+    pub steps: usize,
+    pub batch_queries: usize,
+    pub lr: f64,
+    pub workers: usize,
+    pub patterns: Vec<Pattern>,
+    pub adaptive_lambda: f64,
+    pub sampler_threads: usize,
+    pub eval_queries: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub log_path: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "fb15k".into(),
+            scale: 0.05,
+            model: "gqe".into(),
+            batching: Batching::OperatorLevel,
+            pipelining: Pipelining::Async,
+            semantic: Semantic::Off,
+            steps: 50,
+            batch_queries: 512,
+            lr: 1e-4,
+            workers: 1,
+            patterns: Pattern::POSITIVE.to_vec(),
+            adaptive_lambda: 0.0,
+            sampler_threads: 1,
+            eval_queries: 128,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            log_path: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML document (flat `key` or `[section] key` both work
+    /// via dotted lookups with a `run.` prefix convention kept simple: all
+    /// keys are top-level).
+    pub fn from_toml(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(doc)?;
+        Ok(c)
+    }
+
+    fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        self.dataset = doc.str_or("dataset", &self.dataset);
+        self.scale = doc.f64_or("scale", self.scale);
+        self.model = doc.str_or("model", &self.model);
+        if let Some(v) = doc.get("batching") {
+            self.batching = Batching::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.get("pipelining") {
+            self.pipelining = match v.as_str()? {
+                "sync" => Pipelining::Sync,
+                "async" => Pipelining::Async,
+                other => bail!("unknown pipelining {other:?}"),
+            };
+        }
+        let sem_mode = doc.str_or("semantic", "off");
+        let encoder = doc.str_or("encoder", "qwen_sim");
+        self.semantic = match sem_mode.as_str() {
+            "off" => Semantic::Off,
+            "joint" => Semantic::Joint { encoder },
+            "decoupled" => Semantic::Decoupled { encoder },
+            other => bail!("unknown semantic mode {other:?}"),
+        };
+        self.steps = doc.i64_or("steps", self.steps as i64) as usize;
+        self.batch_queries = doc.i64_or("batch_queries", self.batch_queries as i64) as usize;
+        self.lr = doc.f64_or("lr", self.lr);
+        self.workers = doc.i64_or("workers", self.workers as i64) as usize;
+        self.adaptive_lambda = doc.f64_or("adaptive_lambda", self.adaptive_lambda);
+        self.sampler_threads =
+            doc.i64_or("sampler_threads", self.sampler_threads as i64) as usize;
+        self.eval_queries = doc.i64_or("eval_queries", self.eval_queries as i64) as usize;
+        self.seed = doc.i64_or("seed", self.seed as i64) as u64;
+        self.artifacts_dir = doc.str_or("artifacts_dir", &self.artifacts_dir);
+        if let Some(TomlValue::Arr(ps)) = doc.get("patterns") {
+            self.patterns = ps
+                .iter()
+                .map(|v| Pattern::from_name(v.as_str()?))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = doc.get("log_path") {
+            self.log_path = Some(v.as_str()?.to_string());
+        }
+        Ok(())
+    }
+
+    /// Load a preset file (optional) then apply `--set k=v` overrides and
+    /// well-known direct options (`--model=...`, `--steps=...`).
+    pub fn from_args(args: &Args) -> Result<ExperimentConfig> {
+        let mut doc = match args.opt("config") {
+            Some(path) => TomlDoc::load(path)?,
+            None => TomlDoc::default(),
+        };
+        for (k, v) in &args.sets {
+            doc.set(k, v)?;
+        }
+        for key in [
+            "dataset", "scale", "model", "batching", "pipelining", "semantic", "encoder",
+            "steps", "batch_queries", "lr", "workers", "adaptive_lambda",
+            "sampler_threads", "eval_queries", "seed", "artifacts_dir", "log_path",
+        ] {
+            if let Some(v) = args.opt(key) {
+                doc.set(key, v)?;
+            }
+        }
+        let mut c = ExperimentConfig::default();
+        c.apply_doc(&doc)?;
+        // models without negation cannot take negation patterns
+        if !model_supports_negation(&c.model) {
+            c.patterns.retain(|p| !p.has_negation());
+        }
+        Ok(c)
+    }
+
+    /// Sampler config derived from this experiment (n_neg comes from the
+    /// artifact manifest at runtime).
+    pub fn sampler(&self, n_neg: usize) -> SamplerConfig {
+        SamplerConfig {
+            patterns: self.patterns.clone(),
+            n_neg,
+            exact_negatives: false,
+            adaptive_lambda: self.adaptive_lambda,
+            threads: self.sampler_threads,
+            queue_depth: (self.batch_queries * 8).max(1024),
+            seed: self.seed ^ 0xBEEF,
+        }
+    }
+}
+
+/// Which backbone models implement the Negate operator.
+pub fn model_supports_negation(model: &str) -> bool {
+    matches!(model, "betae" | "fuzzqe" | "mock")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.batching, Batching::OperatorLevel);
+        assert_eq!(c.patterns.len(), 9);
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let doc = TomlDoc::parse(
+            r#"
+            dataset = "nell995"
+            model = "betae"
+            batching = "query-level"
+            semantic = "decoupled"
+            encoder = "bge_sim"
+            steps = 7
+            patterns = ["1p", "2i", "2in"]
+            "#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.dataset, "nell995");
+        assert_eq!(c.batching, Batching::QueryLevel);
+        assert_eq!(c.semantic, Semantic::Decoupled { encoder: "bge_sim".into() });
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.patterns, vec![Pattern::P1, Pattern::I2, Pattern::In2]);
+    }
+
+    #[test]
+    fn args_overrides_and_negation_filter() {
+        let args = Args::parse_tokens(
+            ["train", "--model=gqe", "--set", "patterns=[\"1p\",\"2in\"]"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.model, "gqe");
+        // gqe has no negation: 2in filtered out
+        assert_eq!(c.patterns, vec![Pattern::P1]);
+    }
+
+    #[test]
+    fn bad_modes_error() {
+        assert!(Batching::parse("quantum").is_err());
+        let doc = TomlDoc::parse("semantic = \"sideways\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&doc).is_err());
+    }
+}

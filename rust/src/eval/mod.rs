@@ -1,0 +1,4 @@
+//! Evaluation: symbolic answer computation and filtered ranking metrics.
+
+pub mod rank;
+pub mod symbolic;

@@ -1,0 +1,209 @@
+//! Symbolic query executor: exact answer sets by graph traversal.
+//!
+//! This is the "database" half of the neuro-symbolic stack: it computes the
+//! denotation set A_q of a grounded query on a given graph (§3.2). It is
+//! used (a) by the sampler's rejection step (non-empty answers), (b) to
+//! split answers into observed (G_train) vs predictive (G_full \ G_train)
+//! for filtered-MRR evaluation, and (c) as the ground truth for engine
+//! integration tests.
+//!
+//! Negation is never materialized as a complement set: Intersect partitions
+//! its branches into positive and negated, computing
+//! `∩ positives \ ∪ negated` (the EFO fragment guarantees at least one
+//! positive branch — enforced by `QueryTree::validate`).
+
+use crate::kg::KgStore;
+use crate::query::QueryTree;
+use anyhow::{bail, Result};
+
+/// Hard cap on materialized intermediate sets; hub-heavy 3p chains on the
+/// massive presets can otherwise explode. Overflowing queries are reported
+/// as an error and rejected by the sampler.
+pub const MAX_SET: usize = 200_000;
+
+/// Compute the exact (sorted, deduplicated) answer set of `tree` on `kg`.
+pub fn answers(kg: &KgStore, tree: &QueryTree) -> Result<Vec<u32>> {
+    match tree {
+        QueryTree::Anchor(e) => Ok(vec![*e]),
+        QueryTree::Project(c, r) => {
+            let base = answers(kg, c)?;
+            let mut out = Vec::new();
+            for &x in &base {
+                out.extend(kg.tails(x, *r));
+                if out.len() > MAX_SET * 4 {
+                    bail!("projection overflow (> {MAX_SET} candidates)");
+                }
+            }
+            out.sort_unstable();
+            out.dedup();
+            if out.len() > MAX_SET {
+                bail!("projection overflow (> {MAX_SET} answers)");
+            }
+            Ok(out)
+        }
+        QueryTree::Union(cs) => {
+            let mut out: Vec<u32> = Vec::new();
+            for c in cs {
+                out.extend(answers(kg, c)?);
+            }
+            out.sort_unstable();
+            out.dedup();
+            Ok(out)
+        }
+        QueryTree::Intersect(cs) => {
+            let mut pos: Option<Vec<u32>> = None;
+            let mut negs: Vec<Vec<u32>> = Vec::new();
+            for c in cs {
+                match c {
+                    QueryTree::Negate(inner) => negs.push(answers(kg, inner)?),
+                    _ => {
+                        let a = answers(kg, c)?;
+                        pos = Some(match pos {
+                            None => a,
+                            Some(p) => intersect_sorted(&p, &a),
+                        });
+                    }
+                }
+            }
+            let Some(mut p) = pos else {
+                bail!("intersection with no positive branch");
+            };
+            for n in negs {
+                p = difference_sorted(&p, &n);
+            }
+            Ok(p)
+        }
+        QueryTree::Negate(_) => bail!("negation outside an intersection"),
+    }
+}
+
+/// Does `e` satisfy `tree` on `kg`? (membership without materializing A_q —
+/// used by the sampler to validate negated branches cheaply)
+pub fn is_answer(kg: &KgStore, tree: &QueryTree, e: u32) -> Result<bool> {
+    Ok(answers(kg, tree)?.binary_search(&e).is_ok())
+}
+
+fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let (mut i, mut j) = (0, 0);
+    let mut out = Vec::with_capacity(a.len().min(b.len()));
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+fn difference_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len());
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            out.push(x);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::Triple;
+    use crate::query::Pattern;
+
+    fn kg() -> KgStore {
+        // 0 -r0-> {1,2}; 1 -r1-> 3; 2 -r1-> 3; 2 -r1-> 4; 5 -r0-> 3
+        KgStore::new(
+            "t",
+            6,
+            2,
+            vec![
+                Triple { h: 0, r: 0, t: 1 },
+                Triple { h: 0, r: 0, t: 2 },
+                Triple { h: 1, r: 1, t: 3 },
+                Triple { h: 2, r: 1, t: 3 },
+                Triple { h: 2, r: 1, t: 4 },
+                Triple { h: 5, r: 0, t: 3 },
+            ],
+            vec![],
+            vec![],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn one_and_two_hop() {
+        let kg = kg();
+        let t1 = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+        assert_eq!(answers(&kg, &t1).unwrap(), vec![1, 2]);
+        let t2 = QueryTree::instantiate(Pattern::P2, &[0], &[0, 1]).unwrap();
+        assert_eq!(answers(&kg, &t2).unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn intersection_and_union() {
+        let kg = kg();
+        // 2i: r1-of-1 ∩ r0-of-5 = {3}
+        let t = QueryTree::instantiate(Pattern::I2, &[1, 5], &[1, 0]).unwrap();
+        assert_eq!(answers(&kg, &t).unwrap(), vec![3]);
+        // 2u: r1-of-2 ∪ r0-of-0 = {1,2,3,4}
+        let t = QueryTree::instantiate(Pattern::U2, &[2, 0], &[1, 0]).unwrap();
+        assert_eq!(answers(&kg, &t).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn negation_subtracts() {
+        let kg = kg();
+        // 2in: (r1 of 2) ∧ ¬(r1 of 1) = {3,4} \ {3} = {4}
+        let t = QueryTree::instantiate(Pattern::In2, &[2, 1], &[1, 1]).unwrap();
+        assert_eq!(answers(&kg, &t).unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn inp_projects_after_negated_intersection() {
+        let kg = kg();
+        // inp with inner 2in over anchors {0 via r0} minus {nothing}: then
+        // project r1: ({1,2} \ {3}) --r1--> {3,4}
+        let t = QueryTree::instantiate(Pattern::Inp, &[0, 5], &[0, 0, 1]).unwrap();
+        // inner: (r0 of 0) ∧ ¬(r0 of 5) = {1,2} \ {3} = {1,2}; project r1
+        assert_eq!(answers(&kg, &t).unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn membership_matches_answers() {
+        let kg = kg();
+        let t = QueryTree::instantiate(Pattern::P2, &[0], &[0, 1]).unwrap();
+        assert!(is_answer(&kg, &t, 3).unwrap());
+        assert!(!is_answer(&kg, &t, 0).unwrap());
+    }
+
+    #[test]
+    fn sorted_set_helpers() {
+        assert_eq!(intersect_sorted(&[1, 3, 5], &[2, 3, 5, 7]), vec![3, 5]);
+        assert_eq!(difference_sorted(&[1, 3, 5], &[3]), vec![1, 5]);
+        assert_eq!(intersect_sorted(&[], &[1]), Vec::<u32>::new());
+        assert_eq!(difference_sorted(&[1], &[]), vec![1]);
+    }
+
+    #[test]
+    fn all_patterns_evaluate_on_toy_graph() {
+        let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+        for p in Pattern::ALL {
+            // fixed small ids; just exercise structure (answers may be empty)
+            let a: Vec<u32> = (0..p.n_anchors() as u32).collect();
+            let r: Vec<u32> = (0..p.n_relations() as u32).collect();
+            let t = QueryTree::instantiate(p, &a, &r).unwrap();
+            let res = answers(&kg, &t);
+            assert!(res.is_ok(), "{p}: {res:?}");
+        }
+    }
+}

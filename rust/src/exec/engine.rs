@@ -1,0 +1,921 @@
+//! The operator-level execution engine — Algorithm 1.
+//!
+//! Given a fused multi-query [`QueryDag`] (with gradient nodes), the engine:
+//!
+//! 1. computes *effective* dependencies (a VJP node depends on its gradient
+//!    sources **and** on its mirrored node's original inputs, because VJP
+//!    artifacts recompute their forward internally);
+//! 2. seeds the ready set, distributes ready operators into
+//!    [`super::pools::OperatorPools`], and repeatedly executes the
+//!    Max-Fillness pool as one batched artifact call (cross-query operator
+//!    fusion, Eq. 5);
+//! 3. coalesces operand rows into contiguous blocks (host-side gather),
+//!    pads to the compiled bucket (padding is exact: ops are row-local and
+//!    VJPs are linear in the cotangent, so zero rows contribute zero);
+//! 4. scatters outputs back into a per-node slab, decrements reference
+//!    counts and frees tensors eagerly (Eq. 7), tracking live/peak bytes;
+//! 5. accumulates gradients: dense-param grads (already batch-summed inside
+//!    the VJP artifact), relation-row and entity-row grads (scatter-add),
+//!    and the loss from Score nodes.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::pools::OperatorPools;
+use crate::model::state::ModelState;
+use crate::query::{OpKind, QueryDag, NO_MIRROR};
+use crate::runtime::{HostTensor, Runtime};
+
+/// Gradient accumulators for one optimizer step.
+#[derive(Debug, Default)]
+pub struct Grads {
+    pub ent: HashMap<u32, Vec<f32>>,
+    pub rel: HashMap<u32, Vec<f32>>,
+    pub dense: HashMap<String, Vec<f32>>,
+    pub loss: f64,
+    pub n_queries: usize,
+}
+
+impl Grads {
+    fn add_rows(map: &mut HashMap<u32, Vec<f32>>, id: u32, row: &[f32]) {
+        let e = map.entry(id).or_insert_with(|| vec![0.0; row.len()]);
+        for (a, b) in e.iter_mut().zip(row) {
+            *a += b;
+        }
+    }
+
+    /// Scale everything by `1/n_queries` (loss is summed per Eq. 6).
+    pub fn normalize(&mut self) {
+        let n = self.n_queries.max(1) as f32;
+        for v in self.ent.values_mut().chain(self.rel.values_mut()) {
+            v.iter_mut().for_each(|x| *x /= n);
+        }
+        for v in self.dense.values_mut() {
+            v.iter_mut().for_each(|x| *x /= n);
+        }
+    }
+}
+
+/// Telemetry of one DAG execution.
+#[derive(Debug, Default, Clone)]
+pub struct StepStats {
+    pub loss: f64,
+    pub n_queries: usize,
+    /// artifact invocations (= fused kernel launches)
+    pub executions: usize,
+    /// total operator instances executed
+    pub operators: usize,
+    /// padded rows across all invocations (bucket waste)
+    pub padded_rows: usize,
+    /// peak live bytes in the tensor slab
+    pub peak_live_bytes: usize,
+    /// per-query loss keyed by pattern name (adaptive-sampler feedback)
+    pub per_pattern_loss: Vec<(&'static str, f64, usize)>,
+    /// observed fillness ρ(τ*) per scheduling round
+    pub fillness: Vec<f64>,
+}
+
+/// Per-node stored output.
+enum NodeOut {
+    /// forward repr row `[repr_dim]`
+    Repr(Vec<f32>),
+    /// VJP: one grad block per mirrored-node input slot
+    Grads(Vec<Vec<f32>>),
+    /// Score: gradient w.r.t. the query root repr
+    HeadGrad(Vec<f32>),
+}
+
+impl NodeOut {
+    fn bytes(&self) -> usize {
+        match self {
+            NodeOut::Repr(v) | NodeOut::HeadGrad(v) => v.len() * 4,
+            NodeOut::Grads(vs) => vs.iter().map(|v| v.len() * 4).sum(),
+        }
+    }
+}
+
+/// Engine configuration knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// override B_max (0 = manifest value)
+    pub b_max: usize,
+    /// check outputs for NaN/Inf after every execution (debug / tests)
+    pub nan_check: bool,
+    /// force per-operator batch size 1 (the SQE-like naive baseline)
+    pub force_singleton: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { b_max: 0, nan_check: false, force_singleton: false }
+    }
+}
+
+/// The operator-level executor for one model over one runtime.
+pub struct Engine<'a> {
+    rt: &'a dyn Runtime,
+    pub cfg: EngineConfig,
+    /// when set, EmbedE routes through the fused semantic artifacts (§4.4)
+    semantic: Option<&'a dyn crate::semantic::SemanticSource>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(rt: &'a dyn Runtime, cfg: EngineConfig) -> Engine<'a> {
+        Engine { rt, cfg, semantic: None }
+    }
+
+    /// Enable semantic fusion: EmbedE becomes `fused-<enc>` and anchor
+    /// batches additionally gather H_sem rows from `source`.
+    pub fn with_semantic(
+        rt: &'a dyn Runtime,
+        cfg: EngineConfig,
+        source: &'a dyn crate::semantic::SemanticSource,
+    ) -> Engine<'a> {
+        Engine { rt, cfg, semantic: Some(source) }
+    }
+
+    fn b_max(&self, op: OpKind) -> usize {
+        if self.cfg.force_singleton {
+            return 1;
+        }
+        let m = self.rt.manifest();
+        let _ = op;
+        if self.cfg.b_max > 0 {
+            self.cfg.b_max.min(m.dims.b_max)
+        } else {
+            m.dims.b_max
+        }
+    }
+
+    /// Execute a fused DAG; accumulate grads; return step telemetry.
+    ///
+    /// `dag` must already contain gradient nodes if training; a fwd-only DAG
+    /// (eval) works too — Score nodes are then simply absent.
+    pub fn run(&self, dag: &QueryDag, state: &ModelState, grads: &mut Grads) -> Result<StepStats> {
+        Ok(self.run_with_outputs(dag, state, grads, &[])?.0)
+    }
+
+    /// Like [`Engine::run`], additionally returning the final repr of the
+    /// `wanted` nodes (kept alive past reclamation) — the eval path uses
+    /// this to read query-root embeddings.
+    pub fn run_with_outputs(
+        &self,
+        dag: &QueryDag,
+        state: &ModelState,
+        grads: &mut Grads,
+        wanted: &[u32],
+    ) -> Result<(StepStats, Vec<Vec<f32>>)> {
+        let n = dag.nodes.len();
+        let mut stats = StepStats { n_queries: dag.queries.len(), ..Default::default() };
+        // per-pattern loss accumulation
+        let mut pat_loss: HashMap<&'static str, (f64, usize)> = HashMap::new();
+
+        // -- effective dependency graph (fwd inputs + VJP recompute inputs)
+        let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
+        for node in &dag.nodes {
+            let mut d = node.inputs.clone();
+            if node.mirror != NO_MIRROR {
+                d.extend_from_slice(&dag.nodes[node.mirror as usize].inputs);
+            }
+            deps.push(d);
+        }
+        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, d) in deps.iter().enumerate() {
+            for &p in d {
+                consumers[p as usize].push(i as u32);
+            }
+        }
+        let mut refcnt: Vec<u32> = consumers.iter().map(|c| c.len() as u32).collect();
+        for &w in wanted {
+            refcnt[w as usize] += 1; // pin: never reclaimed during the run
+        }
+        let mut indeg: Vec<u32> = deps.iter().map(|d| d.len() as u32).collect();
+
+        let mut storage: Vec<Option<NodeOut>> = (0..n).map(|_| None).collect();
+        let mut live_bytes = 0usize;
+        let mut pending = n;
+        let mut ready: Vec<u32> =
+            (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut pools = OperatorPools::default();
+
+        while pending > 0 {
+            // Algorithm 1 line 6: distribute the ready set into pools.
+            for node in ready.drain(..) {
+                pools.push(dag.nodes[node as usize].op, node);
+            }
+            // line 8: Max-Fillness selection
+            let Some(op) = pools.select_max_fillness(|op| self.b_max(op)) else {
+                bail!("scheduler stalled with {pending} pending operators (cycle?)");
+            };
+            stats.fillness.push(pools.fillness(op, self.b_max(op)));
+            let batch = pools.pop_batch(op, self.b_max(op));
+            debug_assert!(!batch.is_empty());
+
+            // line 10: one fused artifact invocation for the whole batch
+            self.execute_batch(
+                dag, state, op, &batch, &mut storage, &mut live_bytes, grads, &mut stats,
+                &mut pat_loss,
+            )
+            .with_context(|| format!("executing pool {}", op.name()))?;
+            stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
+
+            // lines 12-18: bookkeeping, eager reclamation, ready updates
+            for &o in &batch {
+                pending -= 1;
+                stats.operators += 1;
+                for &p in &deps[o as usize] {
+                    refcnt[p as usize] -= 1;
+                    if refcnt[p as usize] == 0 {
+                        if let Some(out) = storage[p as usize].take() {
+                            live_bytes -= out.bytes(); // Eq. 7: RECLAIM(T)
+                        }
+                    }
+                }
+                for &c in &consumers[o as usize] {
+                    indeg[c as usize] -= 1;
+                    if indeg[c as usize] == 0 {
+                        ready.push(c);
+                    }
+                }
+            }
+        }
+
+        grads.loss += stats.loss;
+        grads.n_queries += stats.n_queries;
+        stats.per_pattern_loss =
+            pat_loss.into_iter().map(|(k, (l, c))| (k, l, c)).collect();
+        let outputs = wanted
+            .iter()
+            .map(|&w| match &storage[w as usize] {
+                Some(NodeOut::Repr(v)) => Ok(v.clone()),
+                _ => bail!("wanted node {w} produced no repr"),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((stats, outputs))
+    }
+
+    /// Build inputs, invoke the artifact, scatter outputs.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_batch(
+        &self,
+        dag: &QueryDag,
+        state: &ModelState,
+        op: OpKind,
+        batch: &[u32],
+        storage: &mut [Option<NodeOut>],
+        live_bytes: &mut usize,
+        grads: &mut Grads,
+        stats: &mut StepStats,
+        pat_loss: &mut HashMap<&'static str, (f64, usize)>,
+    ) -> Result<()> {
+        let m = self.rt.manifest();
+        let dims = &m.dims;
+        let b = if self.cfg.force_singleton { dims.buckets[0].min(dims.bucket_for(1)) } else { dims.bucket_for(batch.len()) };
+        let bucket = b;
+        stats.padded_rows += bucket - batch.len();
+        let (mut op_name, direction) = artifact_op_name(op);
+        // semantic fusion: EmbedE (fwd + vjp) swaps to the fused artifact
+        let is_embed =
+            matches!(op, OpKind::Embed | OpKind::Vjp(crate::query::VjpOf::Embed));
+        if is_embed {
+            if let Some(sem) = self.semantic {
+                op_name = format!("fused-{}", sem.encoder());
+            }
+        }
+        let artifact = m.op_artifact(&state.model, &op_name, direction, bucket);
+        let meta = m.artifact(&artifact)?;
+
+        // --- coalesce inputs ------------------------------------------------
+        let mut inputs: Vec<HostTensor> =
+            state.params_for(meta.param_args().map(|a| a.name.clone()))?;
+        let rd = state.repr_dim;
+
+        // repr row of a producer node
+        let repr_of = |storage: &[Option<NodeOut>], id: u32| -> Result<Vec<f32>> {
+            match &storage[id as usize] {
+                Some(NodeOut::Repr(v)) => Ok(v.clone()),
+                other => bail!(
+                    "node {id} expected Repr output, found {}",
+                    match other {
+                        None => "nothing (freed too early?)",
+                        Some(NodeOut::Grads(_)) => "Grads",
+                        Some(NodeOut::HeadGrad(_)) => "HeadGrad",
+                        Some(NodeOut::Repr(_)) => unreachable!(),
+                    }
+                ),
+            }
+        };
+
+        // summed upstream gradient for a VJP node's mirrored output
+        let gout_of = |storage: &[Option<NodeOut>], vjp_node: u32| -> Result<Vec<f32>> {
+            let node = &dag.nodes[vjp_node as usize];
+            let mirror = node.mirror;
+            let mut acc = vec![0.0f32; rd];
+            for &src in &node.inputs {
+                match &storage[src as usize] {
+                    Some(NodeOut::HeadGrad(g)) => {
+                        for (a, x) in acc.iter_mut().zip(g) {
+                            *a += x;
+                        }
+                    }
+                    Some(NodeOut::Grads(blocks)) => {
+                        // which operand slots of src's mirror held `mirror`?
+                        let c = dag.nodes[src as usize].mirror;
+                        let cin = &dag.nodes[c as usize].inputs;
+                        let mut found = false;
+                        for (j, &slot) in cin.iter().enumerate() {
+                            if slot == mirror {
+                                found = true;
+                                for (a, x) in acc.iter_mut().zip(&blocks[j]) {
+                                    *a += x;
+                                }
+                            }
+                        }
+                        if !found {
+                            bail!("grad source {src} does not feed node {mirror}");
+                        }
+                    }
+                    _ => bail!("grad source {src} has no gradient output"),
+                }
+            }
+            Ok(acc)
+        };
+
+        match op {
+            OpKind::Embed => {
+                let ids: Vec<u32> =
+                    batch.iter().map(|&i| dag.nodes[i as usize].payload).collect();
+                inputs.push(state.entities.gather(&ids, bucket));
+                if let Some(sem) = self.semantic {
+                    inputs.push(sem.gather(&ids, bucket)?);
+                }
+            }
+            OpKind::Project => {
+                let mut x = HostTensor::zeros(vec![bucket, rd]);
+                let mut rels = Vec::with_capacity(batch.len());
+                for (row, &i) in batch.iter().enumerate() {
+                    let node = &dag.nodes[i as usize];
+                    x.row_mut(row).copy_from_slice(&repr_of(storage, node.inputs[0])?);
+                    rels.push(node.payload);
+                }
+                inputs.push(x);
+                inputs.push(state.relations.gather(&rels, bucket));
+            }
+            OpKind::Intersect(k) | OpKind::Union(k) => {
+                let k = k as usize;
+                let mut xs = HostTensor::zeros(vec![bucket, k, rd]);
+                for (row, &i) in batch.iter().enumerate() {
+                    let node = &dag.nodes[i as usize];
+                    for (j, &inp) in node.inputs.iter().enumerate() {
+                        let src = repr_of(storage, inp)?;
+                        let dst = row * k * rd + j * rd;
+                        xs.data[dst..dst + rd].copy_from_slice(&src);
+                    }
+                }
+                inputs.push(xs);
+            }
+            OpKind::Negate => {
+                let mut x = HostTensor::zeros(vec![bucket, rd]);
+                for (row, &i) in batch.iter().enumerate() {
+                    x.row_mut(row)
+                        .copy_from_slice(&repr_of(storage, dag.nodes[i as usize].inputs[0])?);
+                }
+                inputs.push(x);
+            }
+            OpKind::Score => {
+                let n_neg = dims.n_neg;
+                let mut q = HostTensor::zeros(vec![bucket, rd]);
+                let mut pos_ids = Vec::with_capacity(batch.len());
+                let mut neg_ids: Vec<&[u32]> = Vec::with_capacity(batch.len());
+                let mut mask = HostTensor::zeros(vec![bucket]);
+                for (row, &i) in batch.iter().enumerate() {
+                    let node = &dag.nodes[i as usize];
+                    let slot = &dag.queries[node.payload as usize];
+                    if slot.negatives.len() != n_neg {
+                        bail!(
+                            "query has {} negatives; artifacts were compiled for {}",
+                            slot.negatives.len(),
+                            n_neg
+                        );
+                    }
+                    q.row_mut(row).copy_from_slice(&repr_of(storage, node.inputs[0])?);
+                    pos_ids.push(slot.positive);
+                    neg_ids.push(&slot.negatives);
+                    mask.data[row] = 1.0;
+                }
+                inputs.push(q);
+                inputs.push(state.entities.gather(&pos_ids, bucket));
+                inputs.push(state.entities.gather_nested(&neg_ids, bucket, n_neg));
+                inputs.push(mask);
+            }
+            OpKind::Vjp(_) => {
+                // original forward inputs of the mirrored nodes...
+                let mirror_op = {
+                    let m0 = dag.nodes[batch[0] as usize].mirror;
+                    dag.nodes[m0 as usize].op
+                };
+                match mirror_op {
+                    OpKind::Embed => {
+                        let ids: Vec<u32> = batch
+                            .iter()
+                            .map(|&i| dag.nodes[i as usize].payload)
+                            .collect();
+                        inputs.push(state.entities.gather(&ids, bucket));
+                        if let Some(sem) = self.semantic {
+                            inputs.push(sem.gather(&ids, bucket)?);
+                        }
+                    }
+                    OpKind::Project => {
+                        let mut x = HostTensor::zeros(vec![bucket, rd]);
+                        let mut rels = Vec::with_capacity(batch.len());
+                        for (row, &i) in batch.iter().enumerate() {
+                            let mirror =
+                                &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            x.row_mut(row)
+                                .copy_from_slice(&repr_of(storage, mirror.inputs[0])?);
+                            rels.push(mirror.payload);
+                        }
+                        inputs.push(x);
+                        inputs.push(state.relations.gather(&rels, bucket));
+                    }
+                    OpKind::Intersect(k) | OpKind::Union(k) => {
+                        let k = k as usize;
+                        let mut xs = HostTensor::zeros(vec![bucket, k, rd]);
+                        for (row, &i) in batch.iter().enumerate() {
+                            let mirror =
+                                &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            for (j, &inp) in mirror.inputs.iter().enumerate() {
+                                let src = repr_of(storage, inp)?;
+                                let dst = row * k * rd + j * rd;
+                                xs.data[dst..dst + rd].copy_from_slice(&src);
+                            }
+                        }
+                        inputs.push(xs);
+                    }
+                    OpKind::Negate => {
+                        let mut x = HostTensor::zeros(vec![bucket, rd]);
+                        for (row, &i) in batch.iter().enumerate() {
+                            let mirror =
+                                &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            x.row_mut(row)
+                                .copy_from_slice(&repr_of(storage, mirror.inputs[0])?);
+                        }
+                        inputs.push(x);
+                    }
+                    other => bail!("VJP of unexpected op {other:?}"),
+                }
+                // ...plus the summed upstream cotangent (zeros on pad rows)
+                let mut gout = HostTensor::zeros(vec![bucket, rd]);
+                for (row, &i) in batch.iter().enumerate() {
+                    gout.row_mut(row).copy_from_slice(&gout_of(storage, i)?);
+                }
+                inputs.push(gout);
+            }
+        }
+
+        // --- execute --------------------------------------------------------
+        let outputs = self.rt.execute(&artifact, &inputs)?;
+        stats.executions += 1;
+        if self.cfg.nan_check {
+            for (o, om) in outputs.iter().zip(&meta.outputs) {
+                if !o.is_finite() {
+                    bail!("{artifact}: output {} contains NaN/Inf", om.name);
+                }
+            }
+        }
+
+        // --- scatter outputs --------------------------------------------------
+        let store = |storage: &mut [Option<NodeOut>],
+                         live: &mut usize,
+                         id: u32,
+                         out: NodeOut| {
+            *live += out.bytes();
+            storage[id as usize] = Some(out);
+        };
+        match op {
+            OpKind::Embed | OpKind::Project | OpKind::Intersect(_) | OpKind::Union(_)
+            | OpKind::Negate => {
+                let out = &outputs[0];
+                for (row, &i) in batch.iter().enumerate() {
+                    store(storage, live_bytes, i, NodeOut::Repr(out.row(row).to_vec()));
+                }
+            }
+            OpKind::Score => {
+                let loss = outputs[0].data[0] as f64;
+                stats.loss += loss;
+                let (g_q, g_pos, g_neg) = (&outputs[1], &outputs[2], &outputs[3]);
+                let n_neg = dims.n_neg;
+                let ed = state.ent_dim;
+                for (row, &i) in batch.iter().enumerate() {
+                    let slot = &dag.queries[dag.nodes[i as usize].payload as usize];
+                    // loss attribution per pattern: approximate by equal split
+                    let e = pat_loss.entry(slot.pattern).or_insert((0.0, 0));
+                    e.0 += loss / batch.len() as f64;
+                    e.1 += 1;
+                    store(storage, live_bytes, i, NodeOut::HeadGrad(g_q.row(row).to_vec()));
+                    Grads::add_rows(&mut grads.ent, slot.positive, g_pos.row(row));
+                    for (j, &nid) in slot.negatives.iter().enumerate() {
+                        let base = row * n_neg * ed + j * ed;
+                        Grads::add_rows(&mut grads.ent, nid, &g_neg.data[base..base + ed]);
+                    }
+                }
+            }
+            OpKind::Vjp(_) => {
+                let n_params = meta.param_args().count();
+                // batch-summed dense param grads
+                for (pi, pa) in meta.param_args().enumerate() {
+                    let g = &outputs[pi];
+                    let acc = grads
+                        .dense
+                        .entry(pa.name.clone())
+                        .or_insert_with(|| vec![0.0; g.data.len()]);
+                    for (a, x) in acc.iter_mut().zip(&g.data) {
+                        *a += x;
+                    }
+                }
+                let mirror_op = {
+                    let m0 = dag.nodes[batch[0] as usize].mirror;
+                    dag.nodes[m0 as usize].op
+                };
+                match mirror_op {
+                    OpKind::Embed => {
+                        let g_e = &outputs[n_params];
+                        for (row, &i) in batch.iter().enumerate() {
+                            let ent = dag.nodes[i as usize].payload;
+                            Grads::add_rows(&mut grads.ent, ent, g_e.row(row));
+                        }
+                    }
+                    OpKind::Project => {
+                        let g_x = &outputs[n_params];
+                        let g_r = &outputs[n_params + 1];
+                        for (row, &i) in batch.iter().enumerate() {
+                            store(
+                                storage,
+                                live_bytes,
+                                i,
+                                NodeOut::Grads(vec![g_x.row(row).to_vec()]),
+                            );
+                            let rel = dag.nodes[i as usize].payload;
+                            Grads::add_rows(&mut grads.rel, rel, g_r.row(row));
+                        }
+                    }
+                    OpKind::Intersect(k) | OpKind::Union(k) => {
+                        let k = k as usize;
+                        let g_xs = &outputs[n_params];
+                        for (row, &i) in batch.iter().enumerate() {
+                            let blocks: Vec<Vec<f32>> = (0..k)
+                                .map(|j| {
+                                    let base = row * k * rd + j * rd;
+                                    g_xs.data[base..base + rd].to_vec()
+                                })
+                                .collect();
+                            store(storage, live_bytes, i, NodeOut::Grads(blocks));
+                        }
+                    }
+                    OpKind::Negate => {
+                        let g_x = &outputs[n_params];
+                        for (row, &i) in batch.iter().enumerate() {
+                            store(
+                                storage,
+                                live_bytes,
+                                i,
+                                NodeOut::Grads(vec![g_x.row(row).to_vec()]),
+                            );
+                        }
+                    }
+                    other => bail!("VJP of unexpected op {other:?}"),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Map an [`OpKind`] to its manifest op name + direction.
+fn artifact_op_name(op: OpKind) -> (String, &'static str) {
+    match op {
+        OpKind::Vjp(v) => (OpKind::from(v).name(), "vjp"),
+        OpKind::Score => ("score".into(), "fwd"),
+        other => (other.name(), "fwd"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::{Pattern, QueryTree};
+    use crate::runtime::{MockRuntime, Runtime};
+    use crate::util::proptest::{gen, prop_check};
+    use crate::util::rng::Rng;
+
+    const D: usize = crate::runtime::mock::MOCK_D;
+    const NEG: usize = crate::runtime::mock::MOCK_NEG;
+
+    fn state(rt: &MockRuntime) -> ModelState {
+        ModelState::init(rt.manifest(), "mock", 12, 6, None, 3).unwrap()
+    }
+
+    fn train_dag(queries: &[(Pattern, &QueryTree, u32, Vec<u32>)]) -> QueryDag {
+        let mut dag = QueryDag::default();
+        for (p, tree, pos, negs) in queries {
+            dag.add_query(tree, *pos, negs.clone(), p.name(), true).unwrap();
+        }
+        dag.add_gradient_nodes();
+        dag
+    }
+
+    fn run(rt: &MockRuntime, dag: &QueryDag, st: &ModelState, cfg: EngineConfig)
+        -> (StepStats, Grads) {
+        let engine = Engine::new(rt, cfg);
+        let mut grads = Grads::default();
+        let stats = engine.run(dag, st, &mut grads).unwrap();
+        (stats, grads)
+    }
+
+    #[test]
+    fn one_p1_query_analytic_gradients() {
+        // mock semantics: q = e[anchor] + r[rel]; loss = q · e[pos]
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let tree = QueryTree::instantiate(Pattern::P1, &[2], &[1]).unwrap();
+        let dag = train_dag(&[(Pattern::P1, &tree, 5, vec![0, 1])]);
+        let (stats, grads) = run(&rt, &dag, &st, EngineConfig::default());
+
+        let q: Vec<f32> = st
+            .entities
+            .row(2)
+            .iter()
+            .zip(st.relations.row(1))
+            .map(|(a, b)| a + b)
+            .collect();
+        let want_loss: f32 = q.iter().zip(st.entities.row(5)).map(|(a, b)| a * b).sum();
+        assert!((stats.loss - want_loss as f64).abs() < 1e-5);
+        assert_eq!(stats.operators, dag.len());
+        // dL/d e[anchor] = e[pos]; dL/d r = e[pos]; dL/d e[pos] = q
+        let ga = &grads.ent[&2];
+        for (a, b) in ga.iter().zip(st.entities.row(5)) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let gr = &grads.rel[&1];
+        for (a, b) in gr.iter().zip(st.entities.row(5)) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let gp = &grads.ent[&5];
+        for (a, b) in gp.iter().zip(&q) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fan_out_gradients_accumulate() {
+        // 2i with the SAME anchor on both branches: the anchor's grad is the
+        // sum over both projection paths.
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let tree = QueryTree::instantiate(Pattern::I2, &[3, 3], &[0, 0]).unwrap();
+        let dag = train_dag(&[(Pattern::I2, &tree, 7, vec![0, 1])]);
+        let (_, grads) = run(&rt, &dag, &st, EngineConfig::default());
+        // q = mean(e3+r0, e3+r0) = e3 + r0; dL/dq = e7;
+        // each intersect slot gets e7/2; each project passes through;
+        // anchor 3 receives e7/2 twice (two embed nodes) = e7 total.
+        let ga = &grads.ent[&3];
+        for (a, b) in ga.iter().zip(st.entities.row(7)) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_equals_singleton_numerics() {
+        // The core correctness claim of operator-level batching: the
+        // scheduling/fusion policy must not change the numbers.
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let mut rng = Rng::new(9);
+        let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+        let mut queries = Vec::new();
+        for p in [Pattern::P1, Pattern::P2, Pattern::I2, Pattern::U2, Pattern::In2] {
+            for _ in 0..3 {
+                if let Some(g) = crate::sampler::ground(&kg, &mut rng, p) {
+                    // remap ids into the tiny mock tables
+                    let tree = remap(&g.tree, st.entities.rows as u32, st.relations.rows as u32);
+                    queries.push((p, tree, g.answer % st.entities.rows as u32,
+                        vec![0u32, 1]));
+                }
+            }
+        }
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> =
+            queries.iter().map(|(p, t, a, n)| (*p, t, *a, n.clone())).collect();
+        let dag = train_dag(&refs);
+
+        let (s_b, g_b) = run(&rt, &dag, &st, EngineConfig::default());
+        let (s_s, g_s) = run(&rt, &dag, &st,
+            EngineConfig { force_singleton: true, ..Default::default() });
+        assert!((s_b.loss - s_s.loss).abs() < 1e-4, "{} vs {}", s_b.loss, s_s.loss);
+        assert!(s_b.executions < s_s.executions, "fusion must reduce launches");
+        for (k, v) in &g_b.ent {
+            let w = &g_s.ent[k];
+            for (a, b) in v.iter().zip(w) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+        for (k, v) in &g_b.rel {
+            let w = &g_s.rel[k];
+            for (a, b) in v.iter().zip(w) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    fn remap(tree: &QueryTree, ne: u32, nr: u32) -> QueryTree {
+        match tree {
+            QueryTree::Anchor(e) => QueryTree::Anchor(e % ne),
+            QueryTree::Project(c, r) => {
+                QueryTree::Project(Box::new(remap(c, ne, nr)), r % nr)
+            }
+            QueryTree::Intersect(cs) => {
+                QueryTree::Intersect(cs.iter().map(|c| remap(c, ne, nr)).collect())
+            }
+            QueryTree::Union(cs) => {
+                QueryTree::Union(cs.iter().map(|c| remap(c, ne, nr)).collect())
+            }
+            QueryTree::Negate(c) => QueryTree::Negate(Box::new(remap(c, ne, nr))),
+        }
+    }
+
+    #[test]
+    fn eval_dag_returns_root_reprs() {
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let tree = QueryTree::instantiate(Pattern::P1, &[4], &[2]).unwrap();
+        let mut dag = QueryDag::default();
+        let root = dag.add_query_eval(&tree, true).unwrap();
+        let engine = Engine::new(&rt, EngineConfig::default());
+        let mut grads = Grads::default();
+        let (_, outs) =
+            engine.run_with_outputs(&dag, &st, &mut grads, &[root]).unwrap();
+        let want: Vec<f32> = st
+            .entities
+            .row(4)
+            .iter()
+            .zip(st.relations.row(2))
+            .map(|(a, b)| a + b)
+            .collect();
+        assert_eq!(outs[0], want);
+    }
+
+    #[test]
+    fn eager_reclamation_bounds_live_memory() {
+        // many independent 1p queries: peak live bytes must stay far below
+        // the total bytes ever produced (query-scoped allocation would hold
+        // everything).
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let trees: Vec<QueryTree> = (0..32)
+            .map(|i| QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P1, t, 0u32, vec![1u32, 2]))
+            .collect();
+        let dag = train_dag(&refs);
+        let (stats, _) = run(&rt, &dag, &st, EngineConfig::default());
+        let total_bytes = dag.len() * D * 4;
+        assert!(
+            stats.peak_live_bytes < total_bytes,
+            "peak {} vs total {}",
+            stats.peak_live_bytes,
+            total_bytes
+        );
+    }
+
+    #[test]
+    fn scheduler_invariants_hold_on_random_workloads() {
+        prop_check("engine invariants on random query mixtures", 30, |rng| {
+            let rt = MockRuntime::new();
+            let st = state(&rt);
+            let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+            let n_q = gen::size(rng, 1, 24);
+            let mut trees = Vec::new();
+            for _ in 0..n_q {
+                let p = *rng.choice(&Pattern::ALL);
+                if let Some(g) = crate::sampler::ground(&kg, rng, p) {
+                    trees.push((
+                        p,
+                        remap(&g.tree, st.entities.rows as u32, st.relations.rows as u32),
+                        g.answer % st.entities.rows as u32,
+                    ));
+                }
+            }
+            if trees.is_empty() {
+                return Ok(());
+            }
+            let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+                .iter()
+                .map(|(p, t, a)| (*p, t, *a, vec![0u32, 1]))
+                .collect();
+            let dag = train_dag(&refs);
+            let engine = Engine::new(&rt, EngineConfig { nan_check: true, ..Default::default() });
+            let mut grads = Grads::default();
+            let stats = engine
+                .run(&dag, &st, &mut grads)
+                .map_err(|e| format!("engine failed: {e:#}"))?;
+            if stats.operators != dag.len() {
+                return Err(format!(
+                    "executed {} of {} operators",
+                    stats.operators,
+                    dag.len()
+                ));
+            }
+            if !stats.loss.is_finite() {
+                return Err("non-finite loss".into());
+            }
+            if stats.executions > stats.operators {
+                return Err("more launches than operators".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn padding_does_not_change_gradients() {
+        // 3 queries pad to bucket 4; grads must equal the sum of 3
+        // independent single-query runs.
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let trees: Vec<QueryTree> = (0..3)
+            .map(|i| QueryTree::instantiate(Pattern::P2, &[i], &[i, i + 1]).unwrap())
+            .collect();
+        let all: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> =
+            trees.iter().map(|t| (Pattern::P2, t, 9u32, vec![0u32, 1])).collect();
+        let dag = train_dag(&all);
+        let (_, g_all) = run(&rt, &dag, &st, EngineConfig::default());
+
+        let mut g_sum = Grads::default();
+        for one in &all {
+            let dag1 = train_dag(std::slice::from_ref(one));
+            let engine = Engine::new(&rt, EngineConfig::default());
+            engine.run(&dag1, &st, &mut g_sum).unwrap();
+        }
+        for (k, v) in &g_all.ent {
+            let w = &g_sum.ent[k];
+            for (a, b) in v.iter().zip(w) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+        assert!((g_all.loss - g_sum.loss).abs() < 1e-5);
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        // intersect4 has no compiled artifact; the engine must error, not
+        // panic (failure injection).
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let tree = QueryTree::Intersect(vec![
+            QueryTree::Anchor(0),
+            QueryTree::Anchor(1),
+            QueryTree::Anchor(2),
+            QueryTree::Anchor(3),
+        ]);
+        let mut dag = QueryDag::default();
+        dag.add_query(&tree, 5, vec![0, 1], "custom", true).unwrap();
+        dag.add_gradient_nodes();
+        let engine = Engine::new(&rt, EngineConfig::default());
+        let mut grads = Grads::default();
+        let err = engine.run(&dag, &st, &mut grads).unwrap_err();
+        assert!(format!("{err:#}").contains("intersect4"), "{err:#}");
+    }
+
+    #[test]
+    fn wrong_negative_count_is_a_clean_error() {
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let tree = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+        let mut dag = QueryDag::default();
+        dag.add_query(&tree, 1, vec![0; NEG + 3], "1p", true).unwrap();
+        dag.add_gradient_nodes();
+        let engine = Engine::new(&rt, EngineConfig::default());
+        let mut grads = Grads::default();
+        let err = engine.run(&dag, &st, &mut grads).unwrap_err();
+        assert!(format!("{err:#}").contains("negatives"), "{err:#}");
+    }
+
+    #[test]
+    fn grads_normalize_scales_by_query_count() {
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let t1 = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+        let t2 = QueryTree::instantiate(Pattern::P1, &[1], &[1]).unwrap();
+        let dag = train_dag(&[
+            (Pattern::P1, &t1, 2, vec![0, 1]),
+            (Pattern::P1, &t2, 3, vec![0, 1]),
+        ]);
+        let (_, mut grads) = run(&rt, &dag, &st, EngineConfig::default());
+        let before = grads.ent[&2].clone();
+        grads.normalize();
+        for (a, b) in grads.ent[&2].iter().zip(&before) {
+            assert!((a - b / 2.0).abs() < 1e-7);
+        }
+    }
+}

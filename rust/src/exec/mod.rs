@@ -1,0 +1,9 @@
+//! The operator-level execution engine (§4.1–4.3, Algorithm 1): operator
+//! pools, Max-Fillness dynamic scheduling, cross-query operator fusion,
+//! eager reference-counted reclamation, and gradient accumulation.
+
+pub mod engine;
+pub mod pools;
+
+pub use engine::{Engine, EngineConfig, Grads, StepStats};
+pub use pools::OperatorPools;

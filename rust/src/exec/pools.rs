@@ -1,0 +1,137 @@
+//! Operator pools + the Max-Fillness policy (§4.1, Fig. 4).
+//!
+//! Ready operators are distributed into per-type pools `P_τ`; the scheduler
+//! repeatedly executes the pool with the highest fillness
+//! `ρ(τ) = |P_τ| / B_max(τ)` (Eq. 4). Pool keys include set-operator
+//! cardinality (Eq. 8) and direction, so every popped batch is perfectly
+//! alignable.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::query::OpKind;
+
+/// FIFO pools keyed by operator type.
+#[derive(Debug, Default)]
+pub struct OperatorPools {
+    pools: BTreeMap<OpKind, VecDeque<u32>>,
+    len: usize,
+}
+
+impl OperatorPools {
+    /// Distribute a ready operator into its pool (Algorithm 1 line 6).
+    pub fn push(&mut self, op: OpKind, node: u32) {
+        self.pools.entry(op).or_default().push_back(node);
+        self.len += 1;
+    }
+
+    /// Total queued operators.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Fillness ρ(τ) of one pool.
+    pub fn fillness(&self, op: OpKind, b_max: usize) -> f64 {
+        let n = self.pools.get(&op).map_or(0, VecDeque::len);
+        n as f64 / b_max.max(1) as f64
+    }
+
+    /// Max-Fillness selection: `τ* = argmax_τ ρ(τ)` (Eq. 4). `b_max_of`
+    /// supplies the per-type maximum efficient batch size. Ties break on
+    /// the *larger* pool, then on the operator ordering (deterministic).
+    pub fn select_max_fillness(&self, b_max_of: impl Fn(OpKind) -> usize) -> Option<OpKind> {
+        let mut best: Option<(f64, usize, OpKind)> = None;
+        for (&op, q) in &self.pools {
+            if q.is_empty() {
+                continue;
+            }
+            let rho = q.len() as f64 / b_max_of(op).max(1) as f64;
+            let cand = (rho, q.len(), op);
+            best = Some(match best {
+                None => cand,
+                Some(b) => {
+                    if (cand.0, cand.1) > (b.0, b.1) {
+                        cand
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best.map(|(_, _, op)| op)
+    }
+
+    /// Pop up to `max` operators from pool `op` (Algorithm 1 line 9).
+    pub fn pop_batch(&mut self, op: OpKind, max: usize) -> Vec<u32> {
+        let Some(q) = self.pools.get_mut(&op) else {
+            return Vec::new();
+        };
+        let take = q.len().min(max);
+        let out: Vec<u32> = q.drain(..take).collect();
+        self.len -= out.len();
+        out
+    }
+
+    /// Current pool sizes (telemetry).
+    pub fn sizes(&self) -> Vec<(OpKind, usize)> {
+        self.pools.iter().filter(|(_, q)| !q.is_empty()).map(|(&k, q)| (k, q.len())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::VjpOf;
+
+    #[test]
+    fn max_fillness_prefers_fullest_pool() {
+        let mut p = OperatorPools::default();
+        for i in 0..3 {
+            p.push(OpKind::Project, i);
+        }
+        for i in 0..7 {
+            p.push(OpKind::Embed, 100 + i);
+        }
+        assert_eq!(p.select_max_fillness(|_| 8), Some(OpKind::Embed));
+        // with a tiny b_max for Project its fillness dominates
+        assert_eq!(
+            p.select_max_fillness(|op| if op == OpKind::Project { 2 } else { 8 }),
+            Some(OpKind::Project)
+        );
+    }
+
+    #[test]
+    fn pop_batch_is_fifo_and_bounded() {
+        let mut p = OperatorPools::default();
+        for i in 0..5 {
+            p.push(OpKind::Intersect(2), i);
+        }
+        let b = p.pop_batch(OpKind::Intersect(2), 3);
+        assert_eq!(b, vec![0, 1, 2]);
+        assert_eq!(p.len(), 2);
+        let rest = p.pop_batch(OpKind::Intersect(2), 99);
+        assert_eq!(rest, vec![3, 4]);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn cardinalities_and_directions_are_distinct_pools() {
+        let mut p = OperatorPools::default();
+        p.push(OpKind::Intersect(2), 0);
+        p.push(OpKind::Intersect(3), 1);
+        p.push(OpKind::Vjp(VjpOf::Intersect(2)), 2);
+        assert_eq!(p.sizes().len(), 3);
+        assert_eq!(p.pop_batch(OpKind::Intersect(2), 8), vec![0]);
+        assert_eq!(p.pop_batch(OpKind::Vjp(VjpOf::Intersect(2)), 8), vec![2]);
+    }
+
+    #[test]
+    fn empty_selection_is_none() {
+        let p = OperatorPools::default();
+        assert_eq!(p.select_max_fillness(|_| 8), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! Knowledge-graph substrate: CSR store, statistics-matched synthetic
+//! generator (Table 4 presets), and procedural entity descriptions for the
+//! simulated pre-trained text encoders.
+
+pub mod descriptions;
+pub mod generator;
+pub mod loader;
+pub mod store;
+
+pub use generator::KgSpec;
+pub use store::{KgStore, Triple};

@@ -1,0 +1,216 @@
+//! Compressed-sparse-row knowledge-graph store.
+//!
+//! The store keeps the *training* graph in forward and inverse CSR form,
+//! indexed by `(entity, relation)` pairs, which is exactly what both the
+//! online query sampler (reverse random walks) and the symbolic executor
+//! (forward BFS over a query DAG) need. Valid/test edges are kept separately
+//! so the Predictive Query Answering split (§3.2) — answers reachable on
+//! G_train vs answers only valid under G_full — is reproducible.
+
+use anyhow::{bail, Result};
+
+/// A fact triple `(head, relation, tail)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Triple {
+    pub h: u32,
+    pub r: u32,
+    pub t: u32,
+}
+
+/// One direction of adjacency in CSR-by-(node, relation) form.
+///
+/// `index[h]` gives the slice of `(relation, neighbor)` pairs sorted by
+/// `(relation, neighbor)`, so per-relation neighborhoods are contiguous and
+/// binary-searchable.
+#[derive(Debug, Clone, Default)]
+pub struct Adjacency {
+    offsets: Vec<u32>,
+    /// (relation, neighbor), sorted within each node's slice
+    edges: Vec<(u32, u32)>,
+}
+
+impl Adjacency {
+    fn build(n_entities: usize, mut pairs: Vec<(u32, u32, u32)>) -> Adjacency {
+        // pairs: (node, relation, neighbor)
+        pairs.sort_unstable();
+        let mut offsets = vec![0u32; n_entities + 1];
+        for &(n, _, _) in &pairs {
+            offsets[n as usize + 1] += 1;
+        }
+        for i in 0..n_entities {
+            offsets[i + 1] += offsets[i];
+        }
+        let edges = pairs.into_iter().map(|(_, r, t)| (r, t)).collect();
+        Adjacency { offsets, edges }
+    }
+
+    /// All `(relation, neighbor)` pairs of `node`.
+    #[inline]
+    pub fn neighbors(&self, node: u32) -> &[(u32, u32)] {
+        let lo = self.offsets[node as usize] as usize;
+        let hi = self.offsets[node as usize + 1] as usize;
+        &self.edges[lo..hi]
+    }
+
+    /// Neighbors of `node` via relation `r` (contiguous sub-slice).
+    pub fn neighbors_via(&self, node: u32, r: u32) -> &[(u32, u32)] {
+        let all = self.neighbors(node);
+        let lo = all.partition_point(|&(er, _)| er < r);
+        let hi = all.partition_point(|&(er, _)| er <= r);
+        &all[lo..hi]
+    }
+
+    /// Degree of `node` (over all relations).
+    #[inline]
+    pub fn degree(&self, node: u32) -> usize {
+        (self.offsets[node as usize + 1] - self.offsets[node as usize]) as usize
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// The knowledge graph with its train/valid/test edge split.
+#[derive(Debug, Clone)]
+pub struct KgStore {
+    pub n_entities: usize,
+    pub n_relations: usize,
+    /// training edges, forward: h -> (r, t)
+    pub fwd: Adjacency,
+    /// training edges, inverse: t -> (r, h)
+    pub inv: Adjacency,
+    pub train: Vec<Triple>,
+    pub valid: Vec<Triple>,
+    pub test: Vec<Triple>,
+    /// human-readable dataset name (e.g. "fb15k-sim")
+    pub name: String,
+}
+
+impl KgStore {
+    /// Build the CSR indexes from an edge split.
+    pub fn new(
+        name: &str,
+        n_entities: usize,
+        n_relations: usize,
+        train: Vec<Triple>,
+        valid: Vec<Triple>,
+        test: Vec<Triple>,
+    ) -> Result<KgStore> {
+        for t in train.iter().chain(&valid).chain(&test) {
+            if t.h as usize >= n_entities || t.t as usize >= n_entities {
+                bail!("entity id out of range: {t:?} (n={n_entities})");
+            }
+            if t.r as usize >= n_relations {
+                bail!("relation id out of range: {t:?} (nr={n_relations})");
+            }
+        }
+        let fwd = Adjacency::build(
+            n_entities,
+            train.iter().map(|t| (t.h, t.r, t.t)).collect(),
+        );
+        let inv = Adjacency::build(
+            n_entities,
+            train.iter().map(|t| (t.t, t.r, t.h)).collect(),
+        );
+        Ok(KgStore { n_entities, n_relations, fwd, inv, train, valid, test, name: name.into() })
+    }
+
+    /// Does the training graph contain `(h, r, t)`?
+    pub fn has_edge(&self, h: u32, r: u32, t: u32) -> bool {
+        self.fwd.neighbors_via(h, r).binary_search_by_key(&t, |&(_, n)| n).is_ok()
+    }
+
+    /// Tails reachable from `h` via `r` on the training graph.
+    pub fn tails(&self, h: u32, r: u32) -> impl Iterator<Item = u32> + '_ {
+        self.fwd.neighbors_via(h, r).iter().map(|&(_, t)| t)
+    }
+
+    /// Heads reaching `t` via `r` on the training graph.
+    pub fn heads(&self, t: u32, r: u32) -> impl Iterator<Item = u32> + '_ {
+        self.inv.neighbors_via(t, r).iter().map(|&(_, h)| h)
+    }
+
+    /// Total degree (in + out) per entity — the weight used by ATLAS-style
+    /// degree-weighted edge sampling and by the PTE description generator.
+    pub fn total_degree(&self, e: u32) -> usize {
+        self.fwd.degree(e) + self.inv.degree(e)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: |E|={} |R|={} train={} valid={} test={}",
+            self.name,
+            self.n_entities,
+            self.n_relations,
+            self.train.len(),
+            self.valid.len(),
+            self.test.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> KgStore {
+        // 0 -r0-> 1 -r1-> 2 ; 0 -r0-> 2 ; 3 isolated
+        KgStore::new(
+            "toy",
+            4,
+            2,
+            vec![
+                Triple { h: 0, r: 0, t: 1 },
+                Triple { h: 1, r: 1, t: 2 },
+                Triple { h: 0, r: 0, t: 2 },
+            ],
+            vec![Triple { h: 0, r: 1, t: 3 }],
+            vec![],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn csr_neighbors_sorted_and_complete() {
+        let kg = toy();
+        let tails: Vec<u32> = kg.tails(0, 0).collect();
+        assert_eq!(tails, vec![1, 2]);
+        assert_eq!(kg.tails(0, 1).count(), 0);
+        assert_eq!(kg.heads(2, 1).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(kg.fwd.degree(3), 0);
+    }
+
+    #[test]
+    fn has_edge_only_on_train() {
+        let kg = toy();
+        assert!(kg.has_edge(0, 0, 2));
+        assert!(!kg.has_edge(0, 1, 3)); // valid edge, not in train CSR
+        assert!(!kg.has_edge(2, 0, 0));
+    }
+
+    #[test]
+    fn degree_counts_both_directions() {
+        let kg = toy();
+        assert_eq!(kg.total_degree(0), 2);
+        assert_eq!(kg.total_degree(2), 2);
+        assert_eq!(kg.total_degree(3), 0);
+    }
+
+    #[test]
+    fn rejects_out_of_range_ids() {
+        assert!(KgStore::new("bad", 2, 1, vec![Triple { h: 0, r: 0, t: 5 }], vec![], vec![])
+            .is_err());
+        assert!(KgStore::new("bad", 2, 1, vec![Triple { h: 0, r: 3, t: 1 }], vec![], vec![])
+            .is_err());
+    }
+
+    #[test]
+    fn neighbors_via_is_contiguous_subslice() {
+        let kg = toy();
+        let all = kg.fwd.neighbors(0);
+        assert_eq!(all.len(), 2);
+        assert_eq!(kg.fwd.neighbors_via(0, 0).len(), 2);
+        assert_eq!(kg.fwd.neighbors_via(0, 1).len(), 0);
+    }
+}

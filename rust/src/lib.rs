@@ -1,0 +1,34 @@
+//! # NGDB-Zoo
+//!
+//! A reproduction of *"NGDB-Zoo: Towards Efficient and Scalable Neural Graph
+//! Databases Training"* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the Rust coordinator: online query sampling,
+//!   QueryDAG decomposition, operator pools, Max-Fillness dynamic scheduling,
+//!   eager reference counting, batched execution, baselines, eval, and the
+//!   benchmark harness that regenerates every table/figure of the paper.
+//! * **Layer 2 (`python/compile/model.py`)** — per-(model, operator) JAX
+//!   forward/VJP functions, AOT-lowered once to HLO text artifacts.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels (interpret mode)
+//!   for the compute hot-spots, checked against a pure-jnp oracle.
+//!
+//! Python never runs on the training hot path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (the `xla` crate) and drives everything.
+
+pub mod kg;
+pub mod bench_harness;
+pub mod config;
+pub mod eval;
+pub mod exec;
+pub mod model;
+pub mod optim;
+pub mod metrics;
+pub mod query;
+pub mod runtime;
+pub mod sampler;
+pub mod semantic;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

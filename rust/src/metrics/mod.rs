@@ -1,0 +1,169 @@
+//! Metrics: throughput, memory accounting, and experiment logging.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Queries/sec + operator/launch accounting over a training run.
+#[derive(Debug, Clone)]
+pub struct ThroughputMeter {
+    start: Instant,
+    pub queries: u64,
+    pub steps: u64,
+    pub operators: u64,
+    pub launches: u64,
+    pub padded_rows: u64,
+    /// wall-clock samples per step (secs)
+    pub step_times: Vec<f64>,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter {
+            start: Instant::now(),
+            queries: 0,
+            steps: 0,
+            operators: 0,
+            launches: 0,
+            padded_rows: 0,
+            step_times: Vec::new(),
+        }
+    }
+
+    pub fn restart(&mut self) {
+        *self = Self::new();
+    }
+
+    pub fn tick(&mut self, queries: usize, operators: usize, launches: usize,
+                padded: usize, step_secs: f64) {
+        self.queries += queries as u64;
+        self.steps += 1;
+        self.operators += operators as u64;
+        self.launches += launches as u64;
+        self.padded_rows += padded as u64;
+        self.step_times.push(step_secs);
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Headline queries/sec (wall clock).
+    pub fn qps(&self) -> f64 {
+        self.queries as f64 / self.elapsed().max(1e-9)
+    }
+
+    /// Mean operators fused per kernel launch (the batching win).
+    pub fn ops_per_launch(&self) -> f64 {
+        self.operators as f64 / self.launches.max(1) as f64
+    }
+
+    pub fn p50_step(&self) -> f64 {
+        stats::median(&self.step_times)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:.0} q/s | {} steps | {:.1} ops/launch | pad {:.1}% | p50 step {}",
+            self.qps(),
+            self.steps,
+            self.ops_per_launch(),
+            100.0 * self.padded_rows as f64
+                / (self.operators + self.padded_rows).max(1) as f64,
+            stats::fmt_secs(self.p50_step())
+        )
+    }
+}
+
+/// Peak-memory proxy for the paper's "GPU Memory (GB)" columns: trainable
+/// state + peak live intermediate tensors + resident caches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryEstimate {
+    pub state_bytes: usize,
+    pub peak_live_bytes: usize,
+    pub resident_bytes: usize,
+    /// encoder weights resident during training (joint semantic mode)
+    pub encoder_bytes: usize,
+}
+
+impl MemoryEstimate {
+    pub fn total(&self) -> usize {
+        self.state_bytes + self.peak_live_bytes + self.resident_bytes + self.encoder_bytes
+    }
+
+    pub fn gb(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0 * 1024.0)
+    }
+}
+
+/// Minimal TSV logger for experiment curves (loss, MRR, qps per step).
+pub struct TsvLogger {
+    file: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl TsvLogger {
+    /// `path = None` disables logging.
+    pub fn open(path: Option<&str>, header: &str) -> anyhow::Result<TsvLogger> {
+        let file = match path {
+            Some(p) => {
+                use std::io::Write;
+                let mut f = std::io::BufWriter::new(std::fs::File::create(p)?);
+                writeln!(f, "{header}")?;
+                Some(f)
+            }
+            None => None,
+        };
+        Ok(TsvLogger { file })
+    }
+
+    pub fn row(&mut self, cols: &[String]) {
+        if let Some(f) = &mut self.file {
+            use std::io::Write;
+            let _ = writeln!(f, "{}", cols.join("\t"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates() {
+        let mut m = ThroughputMeter::new();
+        m.tick(512, 100, 10, 12, 0.01);
+        m.tick(512, 100, 10, 12, 0.02);
+        assert_eq!(m.queries, 1024);
+        assert!((m.ops_per_launch() - 10.0).abs() < 1e-9);
+        assert!(m.qps() > 0.0);
+        assert!(m.summary().contains("ops/launch"));
+    }
+
+    #[test]
+    fn memory_totals() {
+        let m = MemoryEstimate {
+            state_bytes: 1 << 30,
+            peak_live_bytes: 1 << 20,
+            resident_bytes: 0,
+            encoder_bytes: 0,
+        };
+        assert!(m.gb() > 1.0 && m.gb() < 1.01);
+    }
+
+    #[test]
+    fn tsv_logger_writes() {
+        let p = std::env::temp_dir().join("ngdb_tsv_test.tsv");
+        let mut l = TsvLogger::open(Some(p.to_str().unwrap()), "a\tb").unwrap();
+        l.row(&["1".into(), "2".into()]);
+        drop(l);
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("a\tb"));
+        assert!(text.contains("1\t2"));
+    }
+}

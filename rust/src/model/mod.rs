@@ -1,0 +1,6 @@
+//! Model-state layer: host-resident embedding tables and dense operator
+//! parameters for each backbone model.
+
+pub mod state;
+
+pub use state::{EmbeddingTable, ModelState, ParamTensor};

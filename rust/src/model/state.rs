@@ -1,0 +1,261 @@
+//! Host-side model state: embedding tables + dense operator parameters.
+//!
+//! Embeddings live in host memory (SMORE-style heterogeneous pipelining,
+//! §4.3): the engine gathers rows into dense blocks before each artifact
+//! call and scatters gradients back; only the gathered blocks ever cross to
+//! the device. Dense parameters are the small shared MLPs of the operators,
+//! loaded from the deterministic binaries `aot.py` exports so that Rust and
+//! JAX start from identical values.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{HostTensor, Manifest};
+use crate::util::rng::Rng;
+
+/// A dense `[rows, dim]` embedding table with lazily allocated Adam moments.
+#[derive(Debug, Clone)]
+pub struct EmbeddingTable {
+    pub rows: usize,
+    pub dim: usize,
+    pub data: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl EmbeddingTable {
+    /// Uniform init in [-scale, scale] (the standard KGE init).
+    pub fn new(rows: usize, dim: usize, scale: f32, rng: &mut Rng) -> EmbeddingTable {
+        let data = (0..rows * dim).map(|_| rng.uniform_sym(scale)).collect();
+        EmbeddingTable { rows, dim, data, m: vec![0.0; rows * dim], v: vec![0.0; rows * dim] }
+    }
+
+    #[inline]
+    pub fn row(&self, i: u32) -> &[f32] {
+        &self.data[i as usize * self.dim..(i as usize + 1) * self.dim]
+    }
+
+    /// Gather `ids` into a `[bucket, dim]` block, zero-padding rows past
+    /// `ids.len()` (scheduler padding; see model.py on row-locality).
+    pub fn gather(&self, ids: &[u32], bucket: usize) -> HostTensor {
+        let mut out = HostTensor::zeros(vec![bucket, self.dim]);
+        for (i, &id) in ids.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(id));
+        }
+        out
+    }
+
+    /// Gather a nested `[bucket, per, dim]` block (negative samples).
+    pub fn gather_nested(&self, ids: &[&[u32]], bucket: usize, per: usize) -> HostTensor {
+        let mut out = HostTensor::zeros(vec![bucket, per, self.dim]);
+        for (i, row_ids) in ids.iter().enumerate() {
+            for (j, &id) in row_ids.iter().enumerate() {
+                let dst = i * per * self.dim + j * self.dim;
+                out.data[dst..dst + self.dim].copy_from_slice(self.row(id));
+            }
+        }
+        out
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4 * 3 // data + adam moments
+    }
+}
+
+/// One dense parameter tensor with Adam moments.
+#[derive(Debug, Clone)]
+pub struct ParamTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl ParamTensor {
+    pub fn as_host(&self) -> HostTensor {
+        HostTensor { shape: self.shape.clone(), data: self.data.clone() }
+    }
+}
+
+/// Full trainable state for one backbone model over one graph.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub model: String,
+    pub ent_dim: usize,
+    pub rel_dim: usize,
+    pub repr_dim: usize,
+    pub entities: EmbeddingTable,
+    pub relations: EmbeddingTable,
+    /// trainable dense params in manifest (sorted-name) order
+    pub dense: BTreeMap<String, ParamTensor>,
+    /// optimizer step counter (Adam bias correction)
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Initialize for `model` over a graph with the given vocab sizes.
+    /// Dense params load from `artifacts_dir` when given (the aot.py
+    /// binaries); otherwise they are seeded-random (mock/test paths).
+    pub fn init(
+        manifest: &Manifest,
+        model: &str,
+        n_entities: usize,
+        n_relations: usize,
+        artifacts_dir: Option<&str>,
+        seed: u64,
+    ) -> Result<ModelState> {
+        let dims = &manifest.dims;
+        let mut rng = Rng::new(seed);
+        let ent_dim = dims.ent(model);
+        let rel_dim = dims.rel(model);
+        let scale = 0.5 / (dims.d as f32).sqrt();
+        let entities = EmbeddingTable::new(n_entities, ent_dim, scale, &mut rng);
+        let relations = EmbeddingTable::new(n_relations, rel_dim, scale, &mut rng);
+
+        let mut dense = BTreeMap::new();
+        // models absent from the params section (e.g. ComplEx) have none
+        static EMPTY: Vec<crate::runtime::ParamFile> = Vec::new();
+        let specs = manifest.model_params.get(model).unwrap_or(&EMPTY);
+        for p in specs {
+            let n: usize = p.shape.iter().product();
+            let data = match artifacts_dir {
+                Some(dir) => read_f32_file(&format!("{dir}/{}", p.file), n)?,
+                None => (0..n).map(|_| rng.uniform_sym(0.1)).collect(),
+            };
+            dense.insert(
+                p.name.clone(),
+                ParamTensor { shape: p.shape.clone(), data, m: vec![0.0; n], v: vec![0.0; n] },
+            );
+        }
+        Ok(ModelState {
+            model: model.to_string(),
+            ent_dim,
+            rel_dim,
+            repr_dim: dims.repr(model),
+            entities,
+            relations,
+            dense,
+            step: 0,
+        })
+    }
+
+    /// Merge the semantic-fusion parameters (Eq. 12) into the trainable
+    /// dense set — required before training with a [`crate::semantic`]
+    /// source attached.
+    pub fn load_fusion(
+        &mut self,
+        manifest: &Manifest,
+        encoder: &str,
+        artifacts_dir: Option<&str>,
+        seed: u64,
+    ) -> Result<()> {
+        let key = format!("{}/{}", self.model, encoder);
+        let specs = manifest
+            .fusion_params
+            .get(&key)
+            .with_context(|| format!("no fusion params for {key:?} in manifest"))?;
+        let mut rng = Rng::new(seed ^ 0xF0510);
+        for p in specs {
+            let n: usize = p.shape.iter().product();
+            let data = match artifacts_dir {
+                Some(dir) => read_f32_file(&format!("{dir}/{}", p.file), n)?,
+                None => (0..n).map(|_| rng.uniform_sym(0.1)).collect(),
+            };
+            self.dense.insert(
+                p.name.clone(),
+                ParamTensor { shape: p.shape.clone(), data, m: vec![0.0; n], v: vec![0.0; n] },
+            );
+        }
+        Ok(())
+    }
+
+    /// Dense param tensors for an artifact's param-arg list, in order.
+    pub fn params_for(&self, names: impl Iterator<Item = impl AsRef<str>>) -> Result<Vec<HostTensor>> {
+        names
+            .map(|n| {
+                let n = n.as_ref();
+                self.dense
+                    .get(n)
+                    .map(ParamTensor::as_host)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dense param {n:?}"))
+            })
+            .collect()
+    }
+
+    /// Approximate resident bytes of the trainable state.
+    pub fn bytes(&self) -> usize {
+        self.entities.bytes()
+            + self.relations.bytes()
+            + self.dense.values().map(|p| p.data.len() * 12).sum::<usize>()
+    }
+}
+
+/// Read exactly `n` little-endian f32s.
+pub fn read_f32_file(path: &str, n: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() != n * 4 {
+        bail!("{path}: expected {} bytes, got {}", n * 4, bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockRuntime, Runtime};
+
+    fn state() -> ModelState {
+        let rt = MockRuntime::new();
+        ModelState::init(rt.manifest(), "mock", 10, 4, None, 1).unwrap()
+    }
+
+    #[test]
+    fn init_shapes() {
+        let s = state();
+        assert_eq!(s.entities.rows, 10);
+        assert_eq!(s.entities.dim, 4);
+        assert_eq!(s.relations.rows, 4);
+        assert!(s.dense.is_empty()); // mock model has no dense params
+    }
+
+    #[test]
+    fn gather_pads_with_zeros() {
+        let s = state();
+        let g = s.entities.gather(&[1, 3], 4);
+        assert_eq!(g.shape, vec![4, 4]);
+        assert_eq!(g.row(0), s.entities.row(1));
+        assert_eq!(g.row(1), s.entities.row(3));
+        assert_eq!(g.row(2), &[0.0; 4]);
+        assert_eq!(g.row(3), &[0.0; 4]);
+    }
+
+    #[test]
+    fn gather_nested_layout() {
+        let s = state();
+        let negs: Vec<&[u32]> = vec![&[0, 1], &[2, 3]];
+        let g = s.entities.gather_nested(&negs, 3, 2);
+        assert_eq!(g.shape, vec![3, 2, 4]);
+        assert_eq!(&g.data[0..4], s.entities.row(0));
+        assert_eq!(&g.data[4..8], s.entities.row(1));
+        assert_eq!(&g.data[8..12], s.entities.row(2));
+        assert_eq!(&g.data[16..24], &[0.0; 8]); // padded row
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let rt = MockRuntime::new();
+        let a = ModelState::init(rt.manifest(), "mock", 10, 4, None, 7).unwrap();
+        let b = ModelState::init(rt.manifest(), "mock", 10, 4, None, 7).unwrap();
+        assert_eq!(a.entities.data, b.entities.data);
+    }
+
+    #[test]
+    fn read_f32_checks_length(){
+        let dir = std::env::temp_dir().join("ngdb_f32_test.bin");
+        std::fs::write(&dir, [0u8; 8]).unwrap();
+        let p = dir.to_str().unwrap();
+        assert_eq!(read_f32_file(p, 2).unwrap(), vec![0.0, 0.0]);
+        assert!(read_f32_file(p, 3).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Adam optimizer: dense (operator MLPs) + sparse (embedding rows).
+//!
+//! The sparse path only touches rows that accumulated gradient this step —
+//! the standard trick for huge embedding tables (Marius/PBG/SMORE all do a
+//! variant of it). Moments for untouched rows stay put, matching jax/optax
+//! "sparse adam" semantics closely enough for reproduction purposes.
+
+use std::collections::HashMap;
+
+use crate::model::state::{EmbeddingTable, ParamTensor};
+
+/// Adam hyper-parameters (paper Table 5: lr = 1e-4).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// max gradient L∞ before clipping (0 = off)
+    pub clip: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-4, beta1: 0.9, beta2: 0.999, eps: 1e-8, clip: 10.0 }
+    }
+}
+
+impl AdamConfig {
+    #[inline]
+    fn bias_corr(&self, step: u64) -> (f32, f32) {
+        let t = step.max(1) as i32;
+        (1.0 - self.beta1.powi(t), 1.0 - self.beta2.powi(t))
+    }
+
+    #[inline]
+    fn clipped(&self, g: f32) -> f32 {
+        if self.clip > 0.0 {
+            g.clamp(-self.clip, self.clip)
+        } else {
+            g
+        }
+    }
+
+    /// One Adam step over a dense parameter.
+    pub fn apply_dense(&self, p: &mut ParamTensor, grad: &[f32], step: u64) {
+        debug_assert_eq!(p.data.len(), grad.len());
+        let (bc1, bc2) = self.bias_corr(step);
+        for i in 0..p.data.len() {
+            let g = self.clipped(grad[i]);
+            p.m[i] = self.beta1 * p.m[i] + (1.0 - self.beta1) * g;
+            p.v[i] = self.beta2 * p.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = p.m[i] / bc1;
+            let vhat = p.v[i] / bc2;
+            p.data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// Sparse Adam over the rows present in `grads`.
+    pub fn apply_sparse(
+        &self,
+        table: &mut EmbeddingTable,
+        grads: &HashMap<u32, Vec<f32>>,
+        step: u64,
+    ) {
+        let (bc1, bc2) = self.bias_corr(step);
+        let dim = table.dim;
+        for (&row, g) in grads {
+            debug_assert_eq!(g.len(), dim);
+            let base = row as usize * dim;
+            for c in 0..dim {
+                let gi = self.clipped(g[c]);
+                let i = base + c;
+                table.m[i] = self.beta1 * table.m[i] + (1.0 - self.beta1) * gi;
+                table.v[i] = self.beta2 * table.v[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = table.m[i] / bc1;
+                let vhat = table.v[i] / bc2;
+                table.data[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_step_descends_a_quadratic() {
+        // minimize f(x) = 0.5 * x^2, grad = x
+        let mut p = ParamTensor {
+            shape: vec![2],
+            data: vec![1.0, -2.0],
+            m: vec![0.0; 2],
+            v: vec![0.0; 2],
+        };
+        let cfg = AdamConfig { lr: 0.05, ..Default::default() };
+        for step in 1..400 {
+            let g = p.data.clone();
+            cfg.apply_dense(&mut p, &g, step);
+        }
+        assert!(p.data.iter().all(|x| x.abs() < 0.05), "{:?}", p.data);
+    }
+
+    #[test]
+    fn sparse_only_touches_gradient_rows() {
+        let mut rng = Rng::new(1);
+        let mut t = EmbeddingTable::new(4, 3, 0.5, &mut rng);
+        let before = t.data.clone();
+        let mut grads = HashMap::new();
+        grads.insert(2u32, vec![1.0, 1.0, 1.0]);
+        AdamConfig::default().apply_sparse(&mut t, &grads, 1);
+        for r in 0..4u32 {
+            if r == 2 {
+                assert_ne!(t.row(r), &before[6..9]);
+            } else {
+                assert_eq!(t.row(r), &before[r as usize * 3..r as usize * 3 + 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn clipping_bounds_the_update() {
+        let mut p = ParamTensor { shape: vec![1], data: vec![0.0], m: vec![0.0], v: vec![0.0] };
+        let cfg = AdamConfig { lr: 0.1, clip: 1.0, ..Default::default() };
+        cfg.apply_dense(&mut p, &[1e9], 1);
+        // first-step adam update magnitude ≈ lr regardless, but moments must
+        // be built from the clipped gradient
+        assert!(p.m[0] <= 0.11, "{}", p.m[0]);
+    }
+}

@@ -1,0 +1,5 @@
+//! Optimizers: dense + sparse Adam (paper Table 5 configuration).
+
+pub mod adam;
+
+pub use adam::AdamConfig;

@@ -1,0 +1,366 @@
+//! QueryDAG: the operator-level IR that Algorithm 1 schedules.
+//!
+//! [`super::tree::QueryTree`]s from many queries are lowered into one fused
+//! [`QueryDag`]: a flat array of operator nodes with explicit data
+//! dependencies. `add_gradient_nodes` then appends the backward operators
+//! (one VJP node per differentiable forward node, plus grad-accumulation
+//! edges), mirroring Algorithm 1 line 2 (`AddGradientNodes`).
+//!
+//! Node identity is an index into `nodes`; the engine stores per-node
+//! outputs in a slab keyed by the same index.
+
+use super::tree::QueryTree;
+use anyhow::{bail, Result};
+
+/// Operator type τ — the pool key of §4.1 (cardinality included per Eq. 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Entity lookup + input mapping Ψθ. Payload: entity id.
+    Embed,
+    /// Relational projection. Payload: relation id.
+    Project,
+    /// Set intersection of fixed cardinality k.
+    Intersect(u8),
+    /// Set union of fixed cardinality k.
+    Union(u8),
+    /// Logical complement (BetaE / FuzzQE only).
+    Negate,
+    /// Loss head: consumes the query root repr, emits loss + head grads.
+    Score,
+    /// Backward (VJP) of the forward op it mirrors.
+    Vjp(VjpOf),
+}
+
+/// What a VJP node differentiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum VjpOf {
+    Embed,
+    Project,
+    Intersect(u8),
+    Union(u8),
+    Negate,
+}
+
+impl OpKind {
+    /// Stable short name (metrics, pool display).
+    pub fn name(self) -> String {
+        match self {
+            OpKind::Embed => "embed".into(),
+            OpKind::Project => "project".into(),
+            OpKind::Intersect(k) => format!("intersect{k}"),
+            OpKind::Union(k) => format!("union{k}"),
+            OpKind::Negate => "negate".into(),
+            OpKind::Score => "score".into(),
+            OpKind::Vjp(v) => format!("vjp_{}", OpKind::from(v).name()),
+        }
+    }
+}
+
+impl From<VjpOf> for OpKind {
+    fn from(v: VjpOf) -> OpKind {
+        match v {
+            VjpOf::Embed => OpKind::Embed,
+            VjpOf::Project => OpKind::Project,
+            VjpOf::Intersect(k) => OpKind::Intersect(k),
+            VjpOf::Union(k) => OpKind::Union(k),
+            VjpOf::Negate => OpKind::Negate,
+        }
+    }
+}
+
+/// One operator instance in the fused DAG.
+#[derive(Debug, Clone)]
+pub struct DagNode {
+    pub op: OpKind,
+    /// Repr-producing predecessors, in operand order.
+    pub inputs: Vec<u32>,
+    /// Entity id for Embed, relation id for Project, query index for Score.
+    pub payload: u32,
+    /// Forward node this VJP mirrors (u32::MAX for forward nodes).
+    pub mirror: u32,
+}
+
+/// Per-query bookkeeping inside a fused DAG.
+#[derive(Debug, Clone)]
+pub struct QuerySlot {
+    /// index of this query's Score node
+    pub score_node: u32,
+    /// positive answer entity
+    pub positive: u32,
+    /// negative sample entity ids
+    pub negatives: Vec<u32>,
+    /// pattern name (metrics / per-pattern loss attribution)
+    pub pattern: &'static str,
+}
+
+/// A fused multi-query operator DAG.
+#[derive(Debug, Clone, Default)]
+pub struct QueryDag {
+    pub nodes: Vec<DagNode>,
+    pub queries: Vec<QuerySlot>,
+    /// number of forward nodes (backward nodes come after this index)
+    pub n_forward: u32,
+}
+
+pub const NO_MIRROR: u32 = u32::MAX;
+
+impl QueryDag {
+    /// Lower one grounded query into the DAG; returns the root node id.
+    ///
+    /// `supports_negation`: models without a Negate operator must not
+    /// receive negation patterns — callers filter, we double-check.
+    pub fn add_query(
+        &mut self,
+        tree: &QueryTree,
+        positive: u32,
+        negatives: Vec<u32>,
+        pattern: &'static str,
+        supports_negation: bool,
+    ) -> Result<u32> {
+        let root = self.lower(tree, supports_negation)?;
+        let score = self.push(DagNode {
+            op: OpKind::Score,
+            inputs: vec![root],
+            payload: self.queries.len() as u32,
+            mirror: NO_MIRROR,
+        });
+        self.queries.push(QuerySlot { score_node: score, positive, negatives, pattern });
+        self.n_forward = self.nodes.len() as u32;
+        Ok(root)
+    }
+
+    /// Lower a query *without* a Score head (evaluation path): the caller
+    /// reads the returned root node's repr via `Engine::run_with_outputs`.
+    pub fn add_query_eval(&mut self, tree: &QueryTree, supports_negation: bool) -> Result<u32> {
+        let root = self.lower(tree, supports_negation)?;
+        self.n_forward = self.nodes.len() as u32;
+        Ok(root)
+    }
+
+    fn lower(&mut self, tree: &QueryTree, neg_ok: bool) -> Result<u32> {
+        Ok(match tree {
+            QueryTree::Anchor(e) => self.push(DagNode {
+                op: OpKind::Embed,
+                inputs: vec![],
+                payload: *e,
+                mirror: NO_MIRROR,
+            }),
+            QueryTree::Project(c, r) => {
+                let cin = self.lower(c, neg_ok)?;
+                self.push(DagNode {
+                    op: OpKind::Project,
+                    inputs: vec![cin],
+                    payload: *r,
+                    mirror: NO_MIRROR,
+                })
+            }
+            QueryTree::Intersect(cs) => {
+                let ins: Vec<u32> =
+                    cs.iter().map(|c| self.lower(c, neg_ok)).collect::<Result<_>>()?;
+                self.push(DagNode {
+                    op: OpKind::Intersect(ins.len() as u8),
+                    inputs: ins,
+                    payload: 0,
+                    mirror: NO_MIRROR,
+                })
+            }
+            QueryTree::Union(cs) => {
+                let ins: Vec<u32> =
+                    cs.iter().map(|c| self.lower(c, neg_ok)).collect::<Result<_>>()?;
+                self.push(DagNode {
+                    op: OpKind::Union(ins.len() as u8),
+                    inputs: ins,
+                    payload: 0,
+                    mirror: NO_MIRROR,
+                })
+            }
+            QueryTree::Negate(c) => {
+                if !neg_ok {
+                    bail!("model does not support the Negate operator");
+                }
+                let cin = self.lower(c, neg_ok)?;
+                self.push(DagNode {
+                    op: OpKind::Negate,
+                    inputs: vec![cin],
+                    payload: 0,
+                    mirror: NO_MIRROR,
+                })
+            }
+        })
+    }
+
+    fn push(&mut self, node: DagNode) -> u32 {
+        self.nodes.push(node);
+        (self.nodes.len() - 1) as u32
+    }
+
+    /// Append backward (VJP) nodes — Algorithm 1 line 2.
+    ///
+    /// For every forward node `v` (except Score, whose gradient is produced
+    /// by its own artifact), we add one `Vjp` node. Its repr inputs are the
+    /// VJP nodes of `v`'s *consumers* (whose outputs carry ∂L/∂out(v)); the
+    /// engine also re-feeds `v`'s original forward inputs when executing it
+    /// (recompute-inside-VJP, see model.py).
+    ///
+    /// Embed VJPs are still materialized: their output is the gradient that
+    /// the sparse optimizer scatters into the entity table.
+    pub fn add_gradient_nodes(&mut self) {
+        let n_fwd = self.nodes.len() as u32;
+        self.n_forward = n_fwd;
+        // consumers[v] = forward nodes that read v
+        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); n_fwd as usize];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                consumers[inp as usize].push(i as u32);
+            }
+        }
+        // vjp_of[v] = id of v's VJP node (filled as we allocate)
+        let mut vjp_of: Vec<u32> = vec![NO_MIRROR; n_fwd as usize];
+        // Allocate VJP nodes in reverse topological (= reverse creation)
+        // order so that a VJP's upstream-grad producers exist first.
+        for v in (0..n_fwd).rev() {
+            let op = self.nodes[v as usize].op;
+            let vjp_kind = match op {
+                OpKind::Embed => VjpOf::Embed,
+                OpKind::Project => VjpOf::Project,
+                OpKind::Intersect(k) => VjpOf::Intersect(k),
+                OpKind::Union(k) => VjpOf::Union(k),
+                OpKind::Negate => VjpOf::Negate,
+                OpKind::Score | OpKind::Vjp(_) => continue,
+            };
+            // gradient sources: for each consumer c of v, the grad of v is
+            // an output of (c == Score ? the Score node : c's VJP node)
+            let grad_srcs: Vec<u32> = consumers[v as usize]
+                .iter()
+                .map(|&c| match self.nodes[c as usize].op {
+                    OpKind::Score => c,
+                    _ => vjp_of[c as usize],
+                })
+                .collect();
+            debug_assert!(
+                grad_srcs.iter().all(|&g| g != NO_MIRROR),
+                "VJP ordering violated"
+            );
+            let id = self.push(DagNode {
+                op: OpKind::Vjp(vjp_kind),
+                inputs: grad_srcs,
+                payload: self.nodes[v as usize].payload,
+                mirror: v,
+            });
+            vjp_of[v as usize] = id;
+        }
+    }
+
+    /// Number of operator nodes (fwd + bwd).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// In-degree per node in *schedulable* terms: how many producer outputs
+    /// must exist before the node is ready.
+    pub fn indegrees(&self) -> Vec<u32> {
+        self.nodes.iter().map(|n| n.inputs.len() as u32).collect()
+    }
+
+    /// Consumer lists (fwd + bwd edges), used for refcounting.
+    pub fn consumers(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &inp in &node.inputs {
+                out[inp as usize].push(i as u32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::pattern::Pattern;
+
+    fn dag_for(p: Pattern) -> QueryDag {
+        let a: Vec<u32> = (0..p.n_anchors() as u32).collect();
+        let r: Vec<u32> = (0..p.n_relations() as u32).collect();
+        let tree = QueryTree::instantiate(p, &a, &r).unwrap();
+        let mut dag = QueryDag::default();
+        dag.add_query(&tree, 9, vec![1, 2], p.name(), true).unwrap();
+        dag
+    }
+
+    #[test]
+    fn lowers_all_patterns() {
+        for p in Pattern::ALL {
+            let dag = dag_for(p);
+            // ops + score node
+            assert_eq!(dag.len(), {
+                let a: Vec<u32> = (0..p.n_anchors() as u32).collect();
+                let r: Vec<u32> = (0..p.n_relations() as u32).collect();
+                QueryTree::instantiate(p, &a, &r).unwrap().op_count() + 1
+            });
+            assert_eq!(dag.queries.len(), 1);
+        }
+    }
+
+    #[test]
+    fn negation_requires_support() {
+        let tree = QueryTree::instantiate(Pattern::In2, &[0, 1], &[0, 1]).unwrap();
+        let mut dag = QueryDag::default();
+        assert!(dag.add_query(&tree, 0, vec![], "2in", false).is_err());
+    }
+
+    #[test]
+    fn gradient_nodes_mirror_every_forward_op() {
+        for p in Pattern::ALL {
+            let mut dag = dag_for(p);
+            let n_fwd = dag.len();
+            dag.add_gradient_nodes();
+            // every fwd node except Score gets exactly one VJP
+            assert_eq!(dag.len(), 2 * n_fwd - 1, "{p}");
+            for node in &dag.nodes[n_fwd..] {
+                assert!(matches!(node.op, OpKind::Vjp(_)));
+                assert_ne!(node.mirror, NO_MIRROR);
+                // upstream grads exist: inputs reference Score or later VJPs
+                assert!(!node.inputs.is_empty(), "{p}: VJP without grad source");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_dag_accumulates_queries() {
+        let mut dag = QueryDag::default();
+        for (i, p) in [Pattern::P1, Pattern::I2, Pattern::Up].iter().enumerate() {
+            let a: Vec<u32> = (0..p.n_anchors() as u32).collect();
+            let r: Vec<u32> = (0..p.n_relations() as u32).collect();
+            let tree = QueryTree::instantiate(*p, &a, &r).unwrap();
+            dag.add_query(&tree, i as u32, vec![5], p.name(), true).unwrap();
+        }
+        assert_eq!(dag.queries.len(), 3);
+        // payload of score nodes indexes queries
+        for (qi, q) in dag.queries.iter().enumerate() {
+            assert_eq!(dag.nodes[q.score_node as usize].payload as usize, qi);
+        }
+    }
+
+    #[test]
+    fn vjp_grad_sources_point_at_score_or_vjp() {
+        let mut dag = dag_for(Pattern::Pi);
+        dag.add_gradient_nodes();
+        for node in dag.nodes.clone() {
+            if let OpKind::Vjp(_) = node.op {
+                for &g in &node.inputs {
+                    let src = &dag.nodes[g as usize];
+                    assert!(
+                        matches!(src.op, OpKind::Score | OpKind::Vjp(_)),
+                        "grad source must be Score or VJP, got {:?}",
+                        src.op
+                    );
+                }
+            }
+        }
+    }
+}

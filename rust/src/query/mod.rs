@@ -1,0 +1,11 @@
+//! Query layer: the 14 EFO patterns (§3.1), grounded query trees, and the
+//! fused operator-level QueryDAG IR that the scheduler executes
+//! (Algorithm 1).
+
+pub mod dag;
+pub mod pattern;
+pub mod tree;
+
+pub use dag::{DagNode, OpKind, QueryDag, QuerySlot, VjpOf, NO_MIRROR};
+pub use pattern::Pattern;
+pub use tree::QueryTree;

@@ -1,0 +1,178 @@
+//! The 14 EFO query patterns of §3.1 and their template trees.
+//!
+//! Patterns: `1p 2p 3p 2i 3i pi ip 2u up 2in 3in pin pni inp`. A *template*
+//! is the ungrounded shape; the sampler instantiates anchors/relations to
+//! produce a [`super::tree::QueryTree`].
+
+use anyhow::{bail, Result};
+
+/// One of the 14 benchmark query structures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Pattern {
+    P1,
+    P2,
+    P3,
+    I2,
+    I3,
+    Pi,
+    Ip,
+    U2,
+    Up,
+    In2,
+    In3,
+    Pin,
+    Pni,
+    Inp,
+}
+
+impl Pattern {
+    pub const ALL: [Pattern; 14] = [
+        Pattern::P1,
+        Pattern::P2,
+        Pattern::P3,
+        Pattern::I2,
+        Pattern::I3,
+        Pattern::Pi,
+        Pattern::Ip,
+        Pattern::U2,
+        Pattern::Up,
+        Pattern::In2,
+        Pattern::In3,
+        Pattern::Pin,
+        Pattern::Pni,
+        Pattern::Inp,
+    ];
+
+    /// Patterns with no negation — the set every backbone model supports.
+    pub const POSITIVE: [Pattern; 9] = [
+        Pattern::P1,
+        Pattern::P2,
+        Pattern::P3,
+        Pattern::I2,
+        Pattern::I3,
+        Pattern::Pi,
+        Pattern::Ip,
+        Pattern::U2,
+        Pattern::Up,
+    ];
+
+    /// The 5 negation patterns evaluated in Table 7.
+    pub const NEGATION: [Pattern; 5] =
+        [Pattern::In2, Pattern::In3, Pattern::Inp, Pattern::Pin, Pattern::Pni];
+
+    /// Canonical lowercase name as used in the paper (`2i`, `pni`, ...).
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::P1 => "1p",
+            Pattern::P2 => "2p",
+            Pattern::P3 => "3p",
+            Pattern::I2 => "2i",
+            Pattern::I3 => "3i",
+            Pattern::Pi => "pi",
+            Pattern::Ip => "ip",
+            Pattern::U2 => "2u",
+            Pattern::Up => "up",
+            Pattern::In2 => "2in",
+            Pattern::In3 => "3in",
+            Pattern::Pin => "pin",
+            Pattern::Pni => "pni",
+            Pattern::Inp => "inp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Pattern> {
+        for p in Pattern::ALL {
+            if p.name() == s {
+                return Ok(p);
+            }
+        }
+        bail!("unknown query pattern {s:?}")
+    }
+
+    pub fn has_negation(self) -> bool {
+        Pattern::NEGATION.contains(&self)
+    }
+
+    /// A crude difficulty rank used by the adaptive curriculum: number of
+    /// operators in the computation DAG (projections + set ops + negations).
+    pub fn difficulty(self) -> usize {
+        match self {
+            Pattern::P1 => 1,
+            Pattern::P2 => 2,
+            Pattern::P3 | Pattern::I2 | Pattern::U2 => 3,
+            Pattern::Pi | Pattern::Ip | Pattern::Up | Pattern::In2 => 4,
+            Pattern::I3 => 4,
+            Pattern::In3 | Pattern::Pin | Pattern::Pni | Pattern::Inp => 5,
+        }
+    }
+
+    /// Number of anchor entities the template needs.
+    pub fn n_anchors(self) -> usize {
+        match self {
+            Pattern::P1 | Pattern::P2 | Pattern::P3 => 1,
+            Pattern::I2
+            | Pattern::Pi
+            | Pattern::Ip
+            | Pattern::U2
+            | Pattern::Up
+            | Pattern::In2
+            | Pattern::Pin
+            | Pattern::Pni
+            | Pattern::Inp => 2,
+            Pattern::I3 | Pattern::In3 => 3,
+        }
+    }
+
+    /// Number of relation slots in the template.
+    pub fn n_relations(self) -> usize {
+        match self {
+            Pattern::P1 => 1,
+            Pattern::P2 | Pattern::I2 | Pattern::U2 | Pattern::In2 => 2,
+            Pattern::P3
+            | Pattern::Pi
+            | Pattern::Ip
+            | Pattern::Up
+            | Pattern::In3
+            | Pattern::Pin
+            | Pattern::Pni
+            | Pattern::Inp => 3,
+            Pattern::I3 => 3,
+        }
+    }
+}
+
+impl std::fmt::Display for Pattern {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in Pattern::ALL {
+            assert_eq!(Pattern::from_name(p.name()).unwrap(), p);
+        }
+        assert!(Pattern::from_name("4p").is_err());
+    }
+
+    #[test]
+    fn partitions_are_consistent() {
+        for p in Pattern::ALL {
+            let in_pos = Pattern::POSITIVE.contains(&p);
+            let in_neg = Pattern::NEGATION.contains(&p);
+            assert!(in_pos ^ in_neg, "{p} must be in exactly one class");
+            assert_eq!(p.has_negation(), in_neg);
+        }
+    }
+
+    #[test]
+    fn difficulty_monotone_in_hops() {
+        assert!(Pattern::P1.difficulty() < Pattern::P2.difficulty());
+        assert!(Pattern::P2.difficulty() < Pattern::P3.difficulty());
+        assert!(Pattern::I2.difficulty() < Pattern::In3.difficulty());
+    }
+}

@@ -1,0 +1,209 @@
+//! Grounded query trees (the logical form) and their construction from
+//! patterns + concrete anchors/relations.
+
+use super::pattern::Pattern;
+use anyhow::{bail, Result};
+
+/// A grounded EFO query: anchors and relation slots filled with ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryTree {
+    /// A constant anchor entity.
+    Anchor(u32),
+    /// Relational projection through relation `r`.
+    Project(Box<QueryTree>, u32),
+    /// Conjunction of branches (some possibly negated).
+    Intersect(Vec<QueryTree>),
+    /// Disjunction of branches.
+    Union(Vec<QueryTree>),
+    /// Logical complement — only valid directly under an Intersect.
+    Negate(Box<QueryTree>),
+}
+
+impl QueryTree {
+    /// Instantiate `pattern` with anchor entities `a` and relations `r`
+    /// (lengths must match `pattern.n_anchors()` / `n_relations()`).
+    pub fn instantiate(pattern: Pattern, a: &[u32], r: &[u32]) -> Result<QueryTree> {
+        if a.len() != pattern.n_anchors() || r.len() != pattern.n_relations() {
+            bail!(
+                "{pattern}: need {} anchors / {} relations, got {} / {}",
+                pattern.n_anchors(),
+                pattern.n_relations(),
+                a.len(),
+                r.len()
+            );
+        }
+        use QueryTree::*;
+        let p = |t: QueryTree, rel: u32| Project(Box::new(t), rel);
+        let n = |t: QueryTree| Negate(Box::new(t));
+        Ok(match pattern {
+            Pattern::P1 => p(Anchor(a[0]), r[0]),
+            Pattern::P2 => p(p(Anchor(a[0]), r[0]), r[1]),
+            Pattern::P3 => p(p(p(Anchor(a[0]), r[0]), r[1]), r[2]),
+            Pattern::I2 => Intersect(vec![p(Anchor(a[0]), r[0]), p(Anchor(a[1]), r[1])]),
+            Pattern::I3 => Intersect(vec![
+                p(Anchor(a[0]), r[0]),
+                p(Anchor(a[1]), r[1]),
+                p(Anchor(a[2]), r[2]),
+            ]),
+            Pattern::Pi => Intersect(vec![
+                p(p(Anchor(a[0]), r[0]), r[1]),
+                p(Anchor(a[1]), r[2]),
+            ]),
+            Pattern::Ip => p(
+                Intersect(vec![p(Anchor(a[0]), r[0]), p(Anchor(a[1]), r[1])]),
+                r[2],
+            ),
+            Pattern::U2 => Union(vec![p(Anchor(a[0]), r[0]), p(Anchor(a[1]), r[1])]),
+            Pattern::Up => p(
+                Union(vec![p(Anchor(a[0]), r[0]), p(Anchor(a[1]), r[1])]),
+                r[2],
+            ),
+            Pattern::In2 => Intersect(vec![
+                p(Anchor(a[0]), r[0]),
+                n(p(Anchor(a[1]), r[1])),
+            ]),
+            Pattern::In3 => Intersect(vec![
+                p(Anchor(a[0]), r[0]),
+                p(Anchor(a[1]), r[1]),
+                n(p(Anchor(a[2]), r[2])),
+            ]),
+            Pattern::Pin => Intersect(vec![
+                p(p(Anchor(a[0]), r[0]), r[1]),
+                n(p(Anchor(a[1]), r[2])),
+            ]),
+            Pattern::Pni => Intersect(vec![
+                n(p(p(Anchor(a[0]), r[0]), r[1])),
+                p(Anchor(a[1]), r[2]),
+            ]),
+            Pattern::Inp => p(
+                Intersect(vec![p(Anchor(a[0]), r[0]), n(p(Anchor(a[1]), r[1]))]),
+                r[2],
+            ),
+        })
+    }
+
+    /// Count of neural operators this tree lowers to (embed nodes included).
+    pub fn op_count(&self) -> usize {
+        match self {
+            QueryTree::Anchor(_) => 1,
+            QueryTree::Project(c, _) => 1 + c.op_count(),
+            QueryTree::Intersect(cs) | QueryTree::Union(cs) => {
+                1 + cs.iter().map(|c| c.op_count()).sum::<usize>()
+            }
+            QueryTree::Negate(c) => 1 + c.op_count(),
+        }
+    }
+
+    /// Validity: Negate may only appear directly under Intersect, and every
+    /// Intersect needs at least one positive branch (§3.1 EFO fragment).
+    pub fn validate(&self) -> Result<()> {
+        self.validate_inner(false)
+    }
+
+    fn validate_inner(&self, neg_ok: bool) -> Result<()> {
+        match self {
+            QueryTree::Anchor(_) => Ok(()),
+            QueryTree::Project(c, _) => c.validate_inner(false),
+            QueryTree::Union(cs) => {
+                if cs.len() < 2 {
+                    bail!("Union needs >= 2 branches");
+                }
+                cs.iter().try_for_each(|c| c.validate_inner(false))
+            }
+            QueryTree::Intersect(cs) => {
+                if cs.len() < 2 {
+                    bail!("Intersect needs >= 2 branches");
+                }
+                if cs.iter().all(|c| matches!(c, QueryTree::Negate(_))) {
+                    bail!("Intersect needs >= 1 positive branch");
+                }
+                cs.iter().try_for_each(|c| c.validate_inner(true))
+            }
+            QueryTree::Negate(c) => {
+                if !neg_ok {
+                    bail!("Negate only allowed directly under Intersect");
+                }
+                c.validate_inner(false)
+            }
+        }
+    }
+
+    /// All anchors in left-to-right order.
+    pub fn anchors(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.walk(&mut |t| {
+            if let QueryTree::Anchor(e) = t {
+                out.push(*e);
+            }
+        });
+        out
+    }
+
+    /// All relation slots in left-to-right order.
+    pub fn relations(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.walk(&mut |t| {
+            if let QueryTree::Project(_, r) = t {
+                out.push(*r);
+            }
+        });
+        out
+    }
+
+    fn walk(&self, f: &mut impl FnMut(&QueryTree)) {
+        f(self);
+        match self {
+            QueryTree::Anchor(_) => {}
+            QueryTree::Project(c, _) | QueryTree::Negate(c) => c.walk(f),
+            QueryTree::Intersect(cs) | QueryTree::Union(cs) => {
+                cs.iter().for_each(|c| c.walk(f))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_patterns_instantiate_and_validate() {
+        for p in Pattern::ALL {
+            let a: Vec<u32> = (0..p.n_anchors() as u32).collect();
+            let r: Vec<u32> = (0..p.n_relations() as u32).collect();
+            let t = QueryTree::instantiate(p, &a, &r).unwrap();
+            t.validate().unwrap_or_else(|e| panic!("{p}: {e}"));
+            assert_eq!(t.anchors().len(), p.n_anchors(), "{p}");
+            // relations() walks Project nodes; every slot appears once
+            assert_eq!(t.relations().len(), p.n_relations(), "{p}");
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(QueryTree::instantiate(Pattern::I2, &[1], &[0, 1]).is_err());
+        assert!(QueryTree::instantiate(Pattern::P1, &[1], &[]).is_err());
+    }
+
+    #[test]
+    fn op_count_matches_difficulty_order() {
+        let t1 = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+        let t3 = QueryTree::instantiate(Pattern::P3, &[0], &[0, 1, 2]).unwrap();
+        assert!(t1.op_count() < t3.op_count());
+    }
+
+    #[test]
+    fn validator_rejects_bad_shapes() {
+        use QueryTree::*;
+        // top-level negation
+        assert!(Negate(Box::new(Anchor(0))).validate().is_err());
+        // all-negative intersection
+        let t = Intersect(vec![
+            Negate(Box::new(Anchor(0))),
+            Negate(Box::new(Anchor(1))),
+        ]);
+        assert!(t.validate().is_err());
+        // degenerate union
+        assert!(Union(vec![Anchor(0)]).validate().is_err());
+    }
+}

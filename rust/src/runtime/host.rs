@@ -1,0 +1,99 @@
+//! Host-side tensor: the coordinator's in-memory f32 array format.
+//!
+//! Everything crossing the Rust ⇄ PJRT boundary is a [`HostTensor`];
+//! conversion to/from `xla::Literal` lives in the PJRT runtime so the rest
+//! of the crate has no xla dependency (and the mock runtime none at all).
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<HostTensor> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            bail!("shape {shape:?} wants {want} elements, got {}", data.len());
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> HostTensor {
+        HostTensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// Leading dimension (batch).
+    pub fn rows(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Elements per leading-dim row.
+    pub fn row_width(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    /// Borrow row `i` (leading dim).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.row_width();
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Mutable row `i`.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let w = self.row_width();
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn row_access() {
+        let mut t = HostTensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        t.row_mut(0)[0] = 9.0;
+        assert_eq!(t.data[0], 9.0);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row_width(), 3);
+    }
+
+    #[test]
+    fn nested_row_width() {
+        let t = HostTensor::zeros(vec![4, 2, 3]);
+        assert_eq!(t.row_width(), 6);
+        assert_eq!(t.bytes(), 96);
+    }
+}

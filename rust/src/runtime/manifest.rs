@@ -1,0 +1,312 @@
+//! `artifacts/manifest.json` — the contract between `aot.py` and the
+//! coordinator. Everything the engine needs to drive an artifact (argument
+//! order, shapes, parameter names, buckets) comes from here; no shape is
+//! ever guessed in Rust.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Global dimensions shared by all artifacts.
+#[derive(Debug, Clone)]
+pub struct Dims {
+    pub d: usize,
+    pub n_neg: usize,
+    /// ascending batch-size buckets compiled per operator
+    pub buckets: Vec<usize>,
+    pub b_max: usize,
+    pub eval_b: usize,
+    pub eval_chunk: usize,
+    pub intersect_cards: Vec<usize>,
+    pub union_cards: Vec<usize>,
+    pub tok_dim: usize,
+    pub pte_bucket: usize,
+    pub gamma: f32,
+    pub use_pallas: bool,
+    /// per-model repr / entity-row / relation-row widths
+    pub repr_dim: BTreeMap<String, usize>,
+    pub ent_dim: BTreeMap<String, usize>,
+    pub rel_dim: BTreeMap<String, usize>,
+    /// simulated PTEs: name -> (hidden, depth, out_dim)
+    pub ptes: BTreeMap<String, (usize, usize, usize)>,
+}
+
+impl Dims {
+    pub fn repr(&self, model: &str) -> usize {
+        self.repr_dim.get(model).copied().unwrap_or(self.d)
+    }
+
+    pub fn ent(&self, model: &str) -> usize {
+        self.ent_dim.get(model).copied().unwrap_or(self.d)
+    }
+
+    pub fn rel(&self, model: &str) -> usize {
+        self.rel_dim.get(model).copied().unwrap_or(self.d)
+    }
+
+    /// Smallest compiled bucket that fits `n` rows (or the largest bucket —
+    /// callers split pools larger than `b_max`).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= n {
+                return b;
+            }
+        }
+        self.b_max
+    }
+}
+
+/// One argument or output of an artifact.
+#[derive(Debug, Clone)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// true for trainable/frozen parameters (leading args)
+    pub is_param: bool,
+}
+
+impl ArgMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,
+    pub op: String,
+    pub direction: String,
+    pub bucket: usize,
+    pub args: Vec<ArgMeta>,
+    pub outputs: Vec<ArgMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn param_args(&self) -> impl Iterator<Item = &ArgMeta> {
+        self.args.iter().filter(|a| a.is_param)
+    }
+
+    pub fn input_args(&self) -> impl Iterator<Item = &ArgMeta> {
+        self.args.iter().filter(|a| !a.is_param)
+    }
+}
+
+/// Initial-parameter binary descriptor.
+#[derive(Debug, Clone)]
+pub struct ParamFile {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: Dims,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// model -> trainable dense params
+    pub model_params: BTreeMap<String, Vec<ParamFile>>,
+    /// encoder -> frozen PTE weights
+    pub pte_params: BTreeMap<String, Vec<ParamFile>>,
+    /// "model/encoder" -> fusion params
+    pub fusion_params: BTreeMap<String, Vec<ParamFile>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let d = j.get("dims")?;
+        let pair_map = |key: &str| -> Result<BTreeMap<String, usize>> {
+            Ok(d.get(key)?
+                .obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.usize()?)))
+                .collect::<Result<_>>()?)
+        };
+        let ptes = d
+            .get("ptes")?
+            .obj()?
+            .iter()
+            .map(|(k, v)| {
+                let t = v.usize_vec()?;
+                if t.len() != 3 {
+                    bail!("pte spec {k} must be [hidden, depth, out]");
+                }
+                Ok((k.clone(), (t[0], t[1], t[2])))
+            })
+            .collect::<Result<_>>()?;
+        let dims = Dims {
+            d: d.get("d")?.usize()?,
+            n_neg: d.get("n_neg")?.usize()?,
+            buckets: d.get("buckets")?.usize_vec()?,
+            b_max: d.get("b_max")?.usize()?,
+            eval_b: d.get("eval_b")?.usize()?,
+            eval_chunk: d.get("eval_chunk")?.usize()?,
+            intersect_cards: d.get("intersect_cards")?.usize_vec()?,
+            union_cards: d.get("union_cards")?.usize_vec()?,
+            tok_dim: d.get("tok_dim")?.usize()?,
+            pte_bucket: d.get("pte_bucket")?.usize()?,
+            gamma: d.get("gamma")?.num()? as f32,
+            use_pallas: d.get("use_pallas")?.boolean()?,
+            repr_dim: pair_map("repr_dim")?,
+            ent_dim: pair_map("ent_dim")?,
+            rel_dim: pair_map("rel_dim")?,
+            ptes,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.arr()? {
+            let args = a
+                .get("args")?
+                .arr()?
+                .iter()
+                .map(|x| {
+                    Ok(ArgMeta {
+                        name: x.get("name")?.str()?.to_string(),
+                        shape: x.get("shape")?.usize_vec()?,
+                        is_param: x.get("kind")?.str()? == "param",
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")?
+                .arr()?
+                .iter()
+                .map(|x| {
+                    Ok(ArgMeta {
+                        name: x.get("name")?.str()?.to_string(),
+                        shape: x.get("shape")?.usize_vec()?,
+                        is_param: false,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let meta = ArtifactMeta {
+                name: a.get("name")?.str()?.to_string(),
+                file: a.get("file")?.str()?.to_string(),
+                model: a.get("model")?.str()?.to_string(),
+                op: a.get("op")?.str()?.to_string(),
+                direction: a.get("direction")?.str()?.to_string(),
+                bucket: a.get("bucket")?.usize()?,
+                args,
+                outputs,
+            };
+            artifacts.insert(meta.name.clone(), meta);
+        }
+
+        let param_files = |v: &Json| -> Result<Vec<ParamFile>> {
+            v.arr()?
+                .iter()
+                .map(|e| {
+                    Ok(ParamFile {
+                        name: e.get("name")?.str()?.to_string(),
+                        shape: e.get("shape")?.usize_vec()?,
+                        file: e.get("file")?.str()?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        let p = j.get("params")?;
+        let section = |key: &str| -> Result<BTreeMap<String, Vec<ParamFile>>> {
+            p.get(key)?
+                .obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), param_files(v)?)))
+                .collect()
+        };
+
+        Ok(Manifest {
+            dims,
+            artifacts,
+            model_params: section("models")?,
+            pte_params: section("pte")?,
+            fusion_params: section("fusion")?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Canonical artifact name for an operator invocation.
+    pub fn op_artifact(&self, model: &str, op: &str, direction: &str, bucket: usize) -> String {
+        format!("{model}_{op}_{direction}_b{bucket}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "dims": {"d": 4, "n_neg": 2, "buckets": [2, 4], "b_max": 4,
+               "eval_b": 2, "eval_chunk": 4, "intersect_cards": [2, 3],
+               "union_cards": [2], "q2p_k": 2, "tok_dim": 8, "gamma": 12.0,
+               "seed": 1, "use_pallas": false, "pte_bucket": 2,
+               "ptes": {"bge_sim": [8, 2, 8]},
+               "repr_dim": {"gqe": 4}, "ent_dim": {"gqe": 4},
+               "rel_dim": {"gqe": 8}},
+      "params": {"models": {"gqe": [{"name": "proj.w1", "shape": [4, 4],
+                                     "file": "params/gqe/proj_w1.bin"}]},
+                 "pte": {}, "fusion": {}},
+      "artifacts": [
+        {"name": "gqe_project_fwd_b2", "file": "gqe_project_fwd_b2.hlo.txt",
+         "model": "gqe", "op": "project", "direction": "fwd", "bucket": 2,
+         "args": [{"name": "proj.w1", "shape": [4, 4], "kind": "param"},
+                  {"name": "x", "shape": [2, 4], "kind": "input"},
+                  {"name": "r", "shape": [2, 8], "kind": "input"}],
+         "outputs": [{"name": "out", "shape": [2, 4]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.dims.d, 4);
+        assert_eq!(m.dims.buckets, vec![2, 4]);
+        let a = m.artifact("gqe_project_fwd_b2").unwrap();
+        assert_eq!(a.param_args().count(), 1);
+        assert_eq!(a.input_args().count(), 2);
+        assert_eq!(a.outputs[0].shape, vec![2, 4]);
+        assert_eq!(m.model_params["gqe"][0].name, "proj.w1");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert_eq!(m.dims.bucket_for(1), 2);
+        assert_eq!(m.dims.bucket_for(2), 2);
+        assert_eq!(m.dims.bucket_for(3), 4);
+        assert_eq!(m.dims.bucket_for(99), 4);
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.len() > 100);
+            assert!(m.artifacts.contains_key("betae_negate_vjp_b16"));
+            assert_eq!(m.dims.repr("betae"), 2 * m.dims.d);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! Mock runtime: shape-exact stand-in for the PJRT runtime.
+//!
+//! Unit tests of the scheduler/engine must not depend on `make artifacts`
+//! or XLA compile times, so this runtime fabricates a manifest for a tiny
+//! synthetic model (`mock`, d = 4) with *linear* operator semantics whose
+//! gradients are trivial to compute by hand:
+//!
+//! | op          | forward                  | vjp                          |
+//! |-------------|--------------------------|------------------------------|
+//! | embed       | out = e                  | g_e = gout                   |
+//! | project     | out = x + r              | g_x = g_r = gout             |
+//! | intersectK  | out = mean_k(xs)         | g_xs[k] = gout / K           |
+//! | unionK      | out = mean_k(xs) + 1     | g_xs[k] = gout / K           |
+//! | negate      | out = -x                 | g_x = -gout                  |
+//! | score       | loss = Σ mask·(q·pos)    | g_q = mask·pos, g_pos = mask·q, g_neg = 0 |
+//! | eval        | scores = Q · Eᵀ          | —                            |
+//!
+//! These are *not* the model math (that is checked against the real
+//! artifacts in `rust/tests/`); they exist so engine tests can assert exact
+//! end-to-end gradient propagation through arbitrary DAGs.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::host::HostTensor;
+use super::manifest::{ArgMeta, ArtifactMeta, Dims, Manifest};
+use super::Runtime;
+
+pub const MOCK_D: usize = 4;
+pub const MOCK_NEG: usize = 2;
+pub const MOCK_BUCKETS: [usize; 3] = [2, 4, 8];
+
+pub struct MockRuntime {
+    manifest: Manifest,
+    resident: Mutex<HashMap<String, Vec<HostTensor>>>,
+    /// executions per artifact name (scheduler tests inspect this)
+    pub calls: Mutex<BTreeMap<String, u64>>,
+    pub executions: AtomicU64,
+}
+
+fn arg(name: &str, shape: Vec<usize>, is_param: bool) -> ArgMeta {
+    ArgMeta { name: name.into(), shape, is_param }
+}
+
+fn mk_artifact(
+    op: &str,
+    dir: &str,
+    b: usize,
+    args: Vec<ArgMeta>,
+    outputs: Vec<ArgMeta>,
+) -> ArtifactMeta {
+    let name = format!("mock_{op}_{dir}_b{b}");
+    ArtifactMeta {
+        name: name.clone(),
+        file: format!("{name}.hlo.txt"),
+        model: "mock".into(),
+        op: op.into(),
+        direction: dir.into(),
+        bucket: b,
+        args,
+        outputs,
+    }
+}
+
+impl MockRuntime {
+    pub fn new() -> MockRuntime {
+        let d = MOCK_D;
+        let n = MOCK_NEG;
+        let mut artifacts = BTreeMap::new();
+        for &b in &MOCK_BUCKETS {
+            let mut push = |a: ArtifactMeta| {
+                artifacts.insert(a.name.clone(), a);
+            };
+            push(mk_artifact("embed", "fwd", b, vec![arg("e", vec![b, d], false)],
+                vec![arg("out", vec![b, d], false)]));
+            push(mk_artifact("embed", "vjp", b,
+                vec![arg("e", vec![b, d], false), arg("gout", vec![b, d], false)],
+                vec![arg("g_e", vec![b, d], false)]));
+            push(mk_artifact("project", "fwd", b,
+                vec![arg("x", vec![b, d], false), arg("r", vec![b, d], false)],
+                vec![arg("out", vec![b, d], false)]));
+            push(mk_artifact("project", "vjp", b,
+                vec![arg("x", vec![b, d], false), arg("r", vec![b, d], false),
+                     arg("gout", vec![b, d], false)],
+                vec![arg("g_x", vec![b, d], false), arg("g_r", vec![b, d], false)]));
+            for k in [2usize, 3] {
+                for opn in ["intersect", "union"] {
+                    if opn == "union" && k == 3 {
+                        continue;
+                    }
+                    let op = format!("{opn}{k}");
+                    push(mk_artifact(&op, "fwd", b,
+                        vec![arg("xs", vec![b, k, d], false)],
+                        vec![arg("out", vec![b, d], false)]));
+                    push(mk_artifact(&op, "vjp", b,
+                        vec![arg("xs", vec![b, k, d], false), arg("gout", vec![b, d], false)],
+                        vec![arg("g_xs", vec![b, k, d], false)]));
+                }
+            }
+            push(mk_artifact("negate", "fwd", b, vec![arg("x", vec![b, d], false)],
+                vec![arg("out", vec![b, d], false)]));
+            push(mk_artifact("negate", "vjp", b,
+                vec![arg("x", vec![b, d], false), arg("gout", vec![b, d], false)],
+                vec![arg("g_x", vec![b, d], false)]));
+            push(mk_artifact("score", "fwd", b,
+                vec![arg("q", vec![b, d], false), arg("pos", vec![b, d], false),
+                     arg("neg", vec![b, n, d], false), arg("mask", vec![b], false)],
+                vec![arg("loss", vec![1], false), arg("g_q", vec![b, d], false),
+                     arg("g_pos", vec![b, d], false), arg("g_neg", vec![b, n, d], false)]));
+        }
+        let eval_b = 2;
+        let eval_chunk = 4;
+        artifacts.insert(
+            format!("mock_eval_fwd_b{eval_b}"),
+            mk_artifact("eval", "fwd", eval_b,
+                vec![arg("q", vec![eval_b, d], false),
+                     arg("ents", vec![eval_chunk, d], false)],
+                vec![arg("scores", vec![eval_b, eval_chunk], false)]),
+        );
+
+        let one = |m: &str| -> BTreeMap<String, usize> {
+            [(m.to_string(), d)].into_iter().collect()
+        };
+        let manifest = Manifest {
+            dims: Dims {
+                d,
+                n_neg: n,
+                buckets: MOCK_BUCKETS.to_vec(),
+                b_max: 8,
+                eval_b,
+                eval_chunk,
+                intersect_cards: vec![2, 3],
+                union_cards: vec![2],
+                tok_dim: 8,
+                pte_bucket: 2,
+                gamma: 12.0,
+                use_pallas: false,
+                repr_dim: one("mock"),
+                ent_dim: one("mock"),
+                rel_dim: one("mock"),
+                ptes: BTreeMap::new(),
+            },
+            artifacts,
+            model_params: [("mock".to_string(), vec![])].into_iter().collect(),
+            pte_params: BTreeMap::new(),
+            fusion_params: BTreeMap::new(),
+        };
+        MockRuntime {
+            manifest,
+            resident: Mutex::new(HashMap::new()),
+            calls: Mutex::new(BTreeMap::new()),
+            executions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn calls_of(&self, name: &str) -> u64 {
+        self.calls.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+}
+
+impl Default for MockRuntime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Runtime for MockRuntime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(name)?;
+        if meta.args.len() != inputs.len() {
+            bail!("{name}: expected {} args, got {}", meta.args.len(), inputs.len());
+        }
+        for (a, t) in meta.args.iter().zip(inputs) {
+            if a.shape != t.shape {
+                bail!("{name}: arg {} shape {:?} != manifest {:?}", a.name, t.shape, a.shape);
+            }
+        }
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+
+        let d = MOCK_D;
+        let b = meta.bucket;
+        let out = match (meta.op.as_str(), meta.direction.as_str()) {
+            ("embed", "fwd") => vec![inputs[0].clone()],
+            ("embed", "vjp") => vec![inputs[1].clone()],
+            ("project", "fwd") => {
+                let mut o = inputs[0].clone();
+                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
+                    *a += b;
+                }
+                vec![o]
+            }
+            ("project", "vjp") => vec![inputs[2].clone(), inputs[2].clone()],
+            (op, "fwd") if op.starts_with("intersect") || op.starts_with("union") => {
+                let k = op[op.len() - 1..].parse::<usize>().unwrap();
+                let xs = &inputs[0];
+                let bias = if op.starts_with("union") { 1.0 } else { 0.0 };
+                let mut o = HostTensor::zeros(vec![b, d]);
+                for i in 0..b {
+                    for j in 0..k {
+                        for c in 0..d {
+                            o.data[i * d + c] += xs.data[i * k * d + j * d + c] / k as f32;
+                        }
+                    }
+                    for c in 0..d {
+                        o.data[i * d + c] += bias;
+                    }
+                }
+                vec![o]
+            }
+            (op, "vjp") if op.starts_with("intersect") || op.starts_with("union") => {
+                let k = op[op.len() - 1..].parse::<usize>().unwrap();
+                let gout = &inputs[1];
+                let mut g = HostTensor::zeros(vec![b, k, d]);
+                for i in 0..b {
+                    for j in 0..k {
+                        for c in 0..d {
+                            g.data[i * k * d + j * d + c] = gout.data[i * d + c] / k as f32;
+                        }
+                    }
+                }
+                vec![g]
+            }
+            ("negate", "fwd") => {
+                let mut o = inputs[0].clone();
+                o.data.iter_mut().for_each(|x| *x = -*x);
+                vec![o]
+            }
+            ("negate", "vjp") => {
+                let mut g = inputs[1].clone();
+                g.data.iter_mut().for_each(|x| *x = -*x);
+                vec![g]
+            }
+            ("score", "fwd") => {
+                let (q, pos, _neg, mask) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
+                let mut loss = 0.0f32;
+                let mut gq = HostTensor::zeros(vec![b, d]);
+                let mut gpos = HostTensor::zeros(vec![b, d]);
+                let gneg = HostTensor::zeros(vec![b, MOCK_NEG, d]);
+                for i in 0..b {
+                    let m = mask.data[i];
+                    let dot: f32 =
+                        q.row(i).iter().zip(pos.row(i)).map(|(a, b)| a * b).sum();
+                    loss += m * dot;
+                    for c in 0..d {
+                        gq.data[i * d + c] = m * pos.data[i * d + c];
+                        gpos.data[i * d + c] = m * q.data[i * d + c];
+                    }
+                }
+                vec![HostTensor::scalar(loss), gq, gpos, gneg]
+            }
+            ("eval", "fwd") => {
+                let (q, ents) = (&inputs[0], &inputs[1]);
+                let (eb, ec) = (q.rows(), ents.rows());
+                let mut s = HostTensor::zeros(vec![eb, ec]);
+                for i in 0..eb {
+                    for j in 0..ec {
+                        s.data[i * ec + j] =
+                            q.row(i).iter().zip(ents.row(j)).map(|(a, b)| a * b).sum();
+                    }
+                }
+                vec![s]
+            }
+            _ => bail!("mock runtime: unimplemented artifact {name}"),
+        };
+        Ok(out)
+    }
+
+    fn upload_resident(&self, key: &str, tensors: &[HostTensor]) -> Result<()> {
+        self.resident.lock().unwrap().entry(key.to_string()).or_insert(tensors.to_vec());
+        Ok(())
+    }
+
+    fn execute_resident(
+        &self,
+        name: &str,
+        resident_key: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let res = self.resident.lock().unwrap();
+        let Some(lead) = res.get(resident_key) else {
+            bail!("resident set {resident_key:?} not uploaded");
+        };
+        let mut all = lead.clone();
+        drop(res);
+        all.extend_from_slice(inputs);
+        self.execute(name, &all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_has_all_ops_at_all_buckets() {
+        let rt = MockRuntime::new();
+        for &b in &MOCK_BUCKETS {
+            for op in ["embed", "project", "intersect2", "intersect3", "union2", "negate"] {
+                assert!(rt.manifest.artifacts.contains_key(&format!("mock_{op}_fwd_b{b}")));
+                assert!(rt.manifest.artifacts.contains_key(&format!("mock_{op}_vjp_b{b}")));
+            }
+            assert!(rt.manifest.artifacts.contains_key(&format!("mock_score_fwd_b{b}")));
+        }
+    }
+
+    #[test]
+    fn project_fwd_and_vjp() {
+        let rt = MockRuntime::new();
+        let x = HostTensor::new(vec![2, 4], vec![1.0; 8]).unwrap();
+        let r = HostTensor::new(vec![2, 4], vec![2.0; 8]).unwrap();
+        let out = rt.execute("mock_project_fwd_b2", &[x.clone(), r.clone()]).unwrap();
+        assert_eq!(out[0].data, vec![3.0; 8]);
+        let g = HostTensor::new(vec![2, 4], vec![0.5; 8]).unwrap();
+        let grads = rt.execute("mock_project_vjp_b2", &[x, r, g]).unwrap();
+        assert_eq!(grads[0].data, vec![0.5; 8]);
+        assert_eq!(grads[1].data, vec![0.5; 8]);
+    }
+
+    #[test]
+    fn score_masks_padding() {
+        let rt = MockRuntime::new();
+        let q = HostTensor::new(vec![2, 4], vec![1.0; 8]).unwrap();
+        let pos = HostTensor::new(vec![2, 4], vec![2.0; 8]).unwrap();
+        let neg = HostTensor::zeros(vec![2, 2, 4]);
+        let mask = HostTensor::new(vec![2], vec![1.0, 0.0]).unwrap();
+        let out = rt.execute("mock_score_fwd_b2", &[q, pos, neg, mask]).unwrap();
+        assert_eq!(out[0].data[0], 8.0); // only row 0 counted
+        assert_eq!(out[1].row(1), &[0.0; 4]); // padded row has zero grad
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let rt = MockRuntime::new();
+        let bad = HostTensor::zeros(vec![3, 4]);
+        assert!(rt.execute("mock_embed_fwd_b2", &[bad]).is_err());
+    }
+
+    #[test]
+    fn resident_path_prepends() {
+        let rt = MockRuntime::new();
+        let e = HostTensor::new(vec![2, 4], vec![7.0; 8]).unwrap();
+        rt.upload_resident("w", &[e]).unwrap();
+        let out = rt.execute_resident("mock_embed_fwd_b2", "w", &[]).unwrap();
+        assert_eq!(out[0].data, vec![7.0; 8]);
+    }
+
+    #[test]
+    fn call_counters() {
+        let rt = MockRuntime::new();
+        let x = HostTensor::zeros(vec![2, 4]);
+        rt.execute("mock_negate_fwd_b2", &[x.clone()]).unwrap();
+        rt.execute("mock_negate_fwd_b2", &[x]).unwrap();
+        assert_eq!(rt.calls_of("mock_negate_fwd_b2"), 2);
+        assert_eq!(rt.executions.load(Ordering::Relaxed), 2);
+    }
+}

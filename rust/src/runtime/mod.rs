@@ -1,0 +1,49 @@
+//! Runtime layer: the boundary between the coordinator and the AOT-compiled
+//! XLA artifacts.
+//!
+//! [`Runtime`] is the object-safe interface the engine programs against;
+//! [`pjrt::PjrtRuntime`] is the production implementation (HLO text →
+//! PJRT CPU client, lazy compile + executable cache, resident device
+//! buffers), and [`mock::MockRuntime`] is a shape-exact test double with
+//! linear operator semantics.
+
+pub mod host;
+pub mod manifest;
+pub mod mock;
+pub mod pjrt;
+
+pub use host::HostTensor;
+pub use manifest::{ArgMeta, ArtifactMeta, Dims, Manifest, ParamFile};
+pub use mock::MockRuntime;
+pub use pjrt::PjrtRuntime;
+
+use anyhow::Result;
+
+/// What the engine needs from an executor backend.
+pub trait Runtime: Send + Sync {
+    /// The artifact catalogue (arg order, shapes, dims).
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute an artifact with all arguments supplied from host memory.
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Upload a named set of device-resident tensors (uploaded once; the
+    /// emulation of the paper's GPU-resident caches, §4.4). Idempotent.
+    fn upload_resident(&self, _key: &str, _tensors: &[HostTensor]) -> Result<()> {
+        anyhow::bail!("this runtime has no resident-buffer support")
+    }
+
+    /// Execute with the named resident set prepended to `inputs`.
+    fn execute_resident(
+        &self,
+        _name: &str,
+        _resident_key: &str,
+        _inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        anyhow::bail!("this runtime has no resident-buffer support")
+    }
+
+    /// Free a resident set (e.g. unload the PTE after the offline
+    /// precompute, §4.4). No-op if the key is absent.
+    fn drop_resident(&self, _key: &str) {}
+}

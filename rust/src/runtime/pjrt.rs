@@ -1,0 +1,210 @@
+//! PJRT-backed runtime: loads HLO text artifacts, compiles them lazily on
+//! the CPU client, caches executables, and runs them from the hot path.
+//!
+//! Two execution paths:
+//! * [`PjrtRuntime::execute`] — all arguments from host (`Literal` per call).
+//! * [`PjrtRuntime::execute_resident`] — leading arguments come from a
+//!   named *resident set* of device buffers uploaded once and reused across
+//!   calls. This is the CPU emulation of the paper's GPU-resident caching
+//!   (frozen PTE weights, the semantic manifold H_sem): the transfer cost is
+//!   paid once, after which hot-path calls only upload the small fresh
+//!   inputs (§4.4).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::host::HostTensor;
+use super::manifest::Manifest;
+use super::Runtime;
+
+/// Executable + metadata cached after first use.
+struct CachedExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Telemetry counters (shared across threads).
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: std::sync::atomic::AtomicU64,
+    pub compiles: std::sync::atomic::AtomicU64,
+    pub host_to_device_bytes: std::sync::atomic::AtomicU64,
+    pub resident_bytes: std::sync::atomic::AtomicU64,
+}
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: String,
+    exes: Mutex<HashMap<String, std::sync::Arc<CachedExe>>>,
+    resident: Mutex<HashMap<String, Vec<xla::PjRtBuffer>>>,
+    pub stats: RuntimeStats,
+}
+
+// The PJRT CPU client is internally synchronized; buffers/executables are
+// reference-counted C++ objects. We only hand out shared references.
+unsafe impl Send for PjrtRuntime {}
+unsafe impl Sync for PjrtRuntime {}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &str) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            dir: dir.to_string(),
+            exes: Mutex::new(HashMap::new()),
+            resident: Mutex::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    fn exe(&self, name: &str) -> Result<std::sync::Arc<CachedExe>> {
+        if let Some(e) = self.exes.lock().unwrap().get(name) {
+            return Ok(std::sync::Arc::clone(e));
+        }
+        let meta = self.manifest.artifact(name)?;
+        let path = format!("{}/{}", self.dir, meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {name}"))?;
+        self.stats.compiles.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let cached = std::sync::Arc::new(CachedExe { exe });
+        self.exes.lock().unwrap().insert(name.to_string(), std::sync::Arc::clone(&cached));
+        Ok(cached)
+    }
+
+    fn literal_of(&self, t: &HostTensor) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        self.stats
+            .host_to_device_bytes
+            .fetch_add(bytes.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &t.shape,
+            bytes,
+        )?)
+    }
+
+    fn unpack(&self, name: &str, result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(name)?;
+        let buf = &result[0][0];
+        let mut tuple = buf.to_literal_sync()?.to_tuple()?;
+        if tuple.len() != meta.outputs.len() {
+            bail!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                tuple.len(),
+                meta.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, om) in tuple.drain(..).zip(&meta.outputs) {
+            let v: Vec<f32> = lit.to_vec()?;
+            out.push(HostTensor::new(om.shape.clone(), v)?);
+        }
+        Ok(out)
+    }
+
+    /// Upload a resident set once (no-op if the key already exists).
+    pub fn upload_resident(&self, key: &str, tensors: &[HostTensor]) -> Result<()> {
+        let mut res = self.resident.lock().unwrap();
+        if res.contains_key(key) {
+            return Ok(());
+        }
+        let mut bufs = Vec::with_capacity(tensors.len());
+        let mut bytes = 0u64;
+        for t in tensors {
+            bufs.push(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+            bytes += t.bytes() as u64;
+        }
+        self.stats.resident_bytes.fetch_add(bytes, std::sync::atomic::Ordering::Relaxed);
+        res.insert(key.to_string(), bufs);
+        Ok(())
+    }
+
+    /// Drop a resident set (e.g. unloading the PTE after precompute, §4.4).
+    /// The device buffers are freed on removal (refcounted C++ objects).
+    pub fn drop_resident(&self, key: &str) {
+        self.resident.lock().unwrap().remove(key);
+    }
+
+    /// Execute with the named resident set as leading arguments.
+    pub fn execute_resident(
+        &self,
+        name: &str,
+        resident_key: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let cached = self.exe(name)?;
+        let fresh: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| {
+                self.stats
+                    .host_to_device_bytes
+                    .fetch_add(t.bytes() as u64, std::sync::atomic::Ordering::Relaxed);
+                Ok(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?)
+            })
+            .collect::<Result<_>>()?;
+        let res = self.resident.lock().unwrap();
+        let Some(lead) = res.get(resident_key) else {
+            bail!("resident set {resident_key:?} not uploaded");
+        };
+        let mut args: Vec<&xla::PjRtBuffer> = lead.iter().collect();
+        args.extend(fresh.iter());
+        let result = cached.exe.execute_b(&args)?;
+        drop(res);
+        self.stats.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.unpack(name, result)
+    }
+}
+
+impl Runtime for PjrtRuntime {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn upload_resident(&self, key: &str, tensors: &[HostTensor]) -> Result<()> {
+        PjrtRuntime::upload_resident(self, key, tensors)
+    }
+
+    fn execute_resident(
+        &self,
+        name: &str,
+        resident_key: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        PjrtRuntime::execute_resident(self, name, resident_key, inputs)
+    }
+
+    fn drop_resident(&self, key: &str) {
+        PjrtRuntime::drop_resident(self, key)
+    }
+
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let cached = self.exe(name)?;
+        // shape check against the manifest before handing to XLA
+        let meta = self.manifest.artifact(name)?;
+        if meta.args.len() != inputs.len() {
+            bail!("{name}: expected {} args, got {}", meta.args.len(), inputs.len());
+        }
+        for (a, t) in meta.args.iter().zip(inputs) {
+            if a.shape != t.shape {
+                bail!("{name}: arg {} shape {:?} != manifest {:?}", a.name, t.shape, a.shape);
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| self.literal_of(t)).collect::<Result<_>>()?;
+        let result = cached.exe.execute::<xla::Literal>(&literals)?;
+        self.stats.executions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.unpack(name, result)
+    }
+}

@@ -1,0 +1,149 @@
+//! Adaptive online sampling distribution (§4.3 "Online Data Sampling",
+//! Fig. 9).
+//!
+//! The sampler maintains a per-pattern exponential moving average of the
+//! training loss. The sampling distribution over patterns mixes a base
+//! (workload) distribution with a softmax over the loss EMAs, so patterns
+//! the model currently finds hard are drawn more often — the curriculum
+//! that lets the system absorb the paper's "difficulty spikes every 15k
+//! steps" without stalling convergence.
+
+use crate::query::Pattern;
+
+/// Per-pattern loss tracker + adaptive mixture.
+#[derive(Debug, Clone)]
+pub struct AdaptiveSampler {
+    patterns: Vec<Pattern>,
+    /// base workload distribution (unnormalized)
+    base: Vec<f64>,
+    /// EMA of per-query loss per pattern
+    ema: Vec<f64>,
+    /// EMA decay
+    decay: f64,
+    /// softmax temperature over loss EMAs
+    temperature: f64,
+    /// mixture weight of the adaptive component, 0 = static sampling
+    lambda: f64,
+}
+
+impl AdaptiveSampler {
+    pub fn new(patterns: &[Pattern], lambda: f64) -> AdaptiveSampler {
+        AdaptiveSampler {
+            patterns: patterns.to_vec(),
+            base: vec![1.0; patterns.len()],
+            ema: vec![0.0; patterns.len()],
+            decay: 0.98,
+            temperature: 1.0,
+            lambda,
+        }
+    }
+
+    /// Replace the base workload distribution (steered workloads, Fig. 9).
+    pub fn set_base(&mut self, weights: &[f64]) {
+        assert_eq!(weights.len(), self.patterns.len());
+        self.base = weights.to_vec();
+    }
+
+    pub fn patterns(&self) -> &[Pattern] {
+        &self.patterns
+    }
+
+    /// Record an observed per-query loss for `pattern`.
+    pub fn observe(&mut self, pattern: Pattern, loss: f64) {
+        if let Some(i) = self.patterns.iter().position(|&p| p == pattern) {
+            let e = &mut self.ema[i];
+            *e = if *e == 0.0 { loss } else { self.decay * *e + (1.0 - self.decay) * loss };
+        }
+    }
+
+    /// Current sampling weights π over patterns (unnormalized).
+    pub fn weights(&self) -> Vec<f64> {
+        let base_sum: f64 = self.base.iter().sum();
+        let max_ema = self.ema.iter().cloned().fold(f64::MIN, f64::max);
+        let exp: Vec<f64> = self
+            .ema
+            .iter()
+            .map(|&e| {
+                if e == 0.0 {
+                    1.0 // unobserved patterns stay explorable
+                } else {
+                    ((e - max_ema) / self.temperature).exp()
+                }
+            })
+            .collect();
+        let exp_sum: f64 = exp.iter().sum();
+        self.base
+            .iter()
+            .zip(&exp)
+            .map(|(&b, &x)| (1.0 - self.lambda) * b / base_sum + self.lambda * x / exp_sum)
+            .collect()
+    }
+
+    pub fn ema_of(&self, pattern: Pattern) -> f64 {
+        self.patterns
+            .iter()
+            .position(|&p| p == pattern)
+            .map(|i| self.ema[i])
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_lambda_zero_ignores_losses() {
+        let ps = [Pattern::P1, Pattern::I2];
+        let mut s = AdaptiveSampler::new(&ps, 0.0);
+        s.observe(Pattern::I2, 100.0);
+        let w = s.weights();
+        assert!((w[0] - w[1]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hard_patterns_gain_weight() {
+        let ps = [Pattern::P1, Pattern::I2, Pattern::Up];
+        let mut s = AdaptiveSampler::new(&ps, 0.5);
+        for _ in 0..50 {
+            s.observe(Pattern::P1, 0.1);
+            s.observe(Pattern::I2, 5.0);
+            s.observe(Pattern::Up, 0.1);
+        }
+        let w = s.weights();
+        assert!(w[1] > w[0] * 1.5, "{w:?}");
+        assert!(w[1] > w[2] * 1.5, "{w:?}");
+    }
+
+    #[test]
+    fn ema_tracks_shifts() {
+        let ps = [Pattern::P1];
+        let mut s = AdaptiveSampler::new(&ps, 1.0);
+        for _ in 0..200 {
+            s.observe(Pattern::P1, 1.0);
+        }
+        assert!((s.ema_of(Pattern::P1) - 1.0).abs() < 0.05);
+        for _ in 0..400 {
+            s.observe(Pattern::P1, 3.0);
+        }
+        assert!(s.ema_of(Pattern::P1) > 2.5);
+    }
+
+    #[test]
+    fn weights_are_positive_and_finite() {
+        let mut s = AdaptiveSampler::new(&Pattern::ALL, 0.7);
+        s.observe(Pattern::Pni, 12.0);
+        for w in s.weights() {
+            assert!(w.is_finite() && w > 0.0);
+        }
+    }
+
+    #[test]
+    fn steered_base_shifts_mixture() {
+        let ps = [Pattern::P1, Pattern::P3];
+        let mut s = AdaptiveSampler::new(&ps, 0.0);
+        s.set_base(&[1.0, 9.0]);
+        let w = s.weights();
+        assert!(w[1] > w[0] * 5.0);
+    }
+}

@@ -1,0 +1,253 @@
+//! Reverse-walk query grounding with rejection sampling (Appendix F).
+//!
+//! A grounded training query is synthesized *backwards* from a target
+//! answer entity: projections pick a random inverse edge, intersections
+//! ground every positive branch from the same target, unions ground one
+//! branch through the target (the others from random entities), and negated
+//! branches are grounded from a different entity and then *verified* not to
+//! contain the target (rejection). Construction guarantees the answer set
+//! is non-empty — `P_accept(q) ∝ 1[q ∈ Q_valid]` of Eq. F.2 — without ever
+//! materializing A_q on the hot path.
+
+use crate::eval::symbolic;
+use crate::kg::KgStore;
+use crate::query::{Pattern, QueryTree};
+use crate::util::rng::Rng;
+
+/// One sampled training example.
+#[derive(Debug, Clone)]
+pub struct GroundedQuery {
+    pub pattern: Pattern,
+    pub tree: QueryTree,
+    /// a known positive answer (by construction)
+    pub answer: u32,
+    /// negative sample entity ids (filled by the negative sampler)
+    pub negatives: Vec<u32>,
+}
+
+/// Budget for re-drawing a candidate before giving up on this target.
+const BRANCH_RETRIES: usize = 8;
+
+/// Ground `pattern` ending at a random answer entity. Returns `None` when
+/// the local topology cannot realize the pattern (caller re-draws a target;
+/// this is the rejection loop).
+pub fn ground(kg: &KgStore, rng: &mut Rng, pattern: Pattern) -> Option<GroundedQuery> {
+    // Degree-weighted target choice: uniform over *edge endpoints* so that
+    // isolated entities (which cannot terminate a projection) are skipped.
+    let target = kg.train[rng.below(kg.train.len())].t;
+    let tree = ground_shape(kg, rng, &shape_of(pattern), target, 0)?;
+    debug_assert!(tree.validate().is_ok());
+    Some(GroundedQuery { pattern, tree, answer: target, negatives: Vec::new() })
+}
+
+/// Ungrounded template shape mirror of `QueryTree`.
+enum Shape {
+    Anchor,
+    Project(Box<Shape>),
+    Intersect(Vec<(Shape, bool)>), // (branch, negated?)
+    Union(Vec<Shape>),
+}
+
+fn shape_of(p: Pattern) -> Shape {
+    use Shape::*;
+    let pr = |s: Shape| Project(Box::new(s));
+    match p {
+        Pattern::P1 => pr(Anchor),
+        Pattern::P2 => pr(pr(Anchor)),
+        Pattern::P3 => pr(pr(pr(Anchor))),
+        Pattern::I2 => Intersect(vec![(pr(Anchor), false), (pr(Anchor), false)]),
+        Pattern::I3 => Intersect(vec![
+            (pr(Anchor), false),
+            (pr(Anchor), false),
+            (pr(Anchor), false),
+        ]),
+        Pattern::Pi => Intersect(vec![(pr(pr(Anchor)), false), (pr(Anchor), false)]),
+        Pattern::Ip => pr(Intersect(vec![(pr(Anchor), false), (pr(Anchor), false)])),
+        Pattern::U2 => Union(vec![pr(Anchor), pr(Anchor)]),
+        Pattern::Up => pr(Union(vec![pr(Anchor), pr(Anchor)])),
+        Pattern::In2 => Intersect(vec![(pr(Anchor), false), (pr(Anchor), true)]),
+        Pattern::In3 => Intersect(vec![
+            (pr(Anchor), false),
+            (pr(Anchor), false),
+            (pr(Anchor), true),
+        ]),
+        Pattern::Pin => Intersect(vec![(pr(pr(Anchor)), false), (pr(Anchor), true)]),
+        Pattern::Pni => Intersect(vec![(pr(pr(Anchor)), true), (pr(Anchor), false)]),
+        Pattern::Inp => pr(Intersect(vec![(pr(Anchor), false), (pr(Anchor), true)])),
+    }
+}
+
+fn ground_shape(
+    kg: &KgStore,
+    rng: &mut Rng,
+    shape: &Shape,
+    target: u32,
+    depth: usize,
+) -> Option<QueryTree> {
+    if depth > 16 {
+        return None;
+    }
+    match shape {
+        Shape::Anchor => Some(QueryTree::Anchor(target)),
+        Shape::Project(child) => {
+            let back = kg.inv.neighbors(target);
+            if back.is_empty() {
+                return None;
+            }
+            let &(r, h) = rng.choice(back);
+            let c = ground_shape(kg, rng, child, h, depth + 1)?;
+            Some(QueryTree::Project(Box::new(c), r))
+        }
+        Shape::Intersect(branches) => {
+            let mut out = Vec::with_capacity(branches.len());
+            for (branch, negated) in branches {
+                if *negated {
+                    out.push(QueryTree::Negate(Box::new(ground_negated_branch(
+                        kg, rng, branch, target, depth,
+                    )?)));
+                } else {
+                    out.push(ground_shape(kg, rng, branch, target, depth + 1)?);
+                }
+            }
+            Some(QueryTree::Intersect(out))
+        }
+        Shape::Union(branches) => {
+            // one branch carries the target; the rest ground independently
+            let carrier = rng.below(branches.len());
+            let mut out = Vec::with_capacity(branches.len());
+            for (i, branch) in branches.iter().enumerate() {
+                let t = if i == carrier {
+                    target
+                } else {
+                    kg.train[rng.below(kg.train.len())].t
+                };
+                out.push(ground_shape(kg, rng, branch, t, depth + 1)?);
+            }
+            Some(QueryTree::Union(out))
+        }
+    }
+}
+
+/// Ground a negated branch from a *different* random target, then verify the
+/// real target is not an answer of the branch (so negation doesn't erase the
+/// positive answer). Bounded retries keep tail latency predictable.
+fn ground_negated_branch(
+    kg: &KgStore,
+    rng: &mut Rng,
+    branch: &Shape,
+    target: u32,
+    depth: usize,
+) -> Option<QueryTree> {
+    for _ in 0..BRANCH_RETRIES {
+        let alt = kg.train[rng.below(kg.train.len())].t;
+        if alt == target {
+            continue;
+        }
+        let Some(candidate) = ground_shape(kg, rng, branch, alt, depth + 1) else {
+            continue;
+        };
+        match symbolic::answers(kg, &candidate) {
+            Ok(ans) if ans.binary_search(&target).is_err() => return Some(candidate),
+            _ => continue,
+        }
+    }
+    None
+}
+
+/// Draw `n` negatives: uniform entities, excluding the positive answer and
+/// (when `exclude` is given) the full observed answer set.
+pub fn negatives(
+    kg: &KgStore,
+    rng: &mut Rng,
+    answer: u32,
+    exclude: Option<&[u32]>,
+    n: usize,
+) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0;
+    while out.len() < n && guard < n * 50 {
+        guard += 1;
+        let e = rng.below(kg.n_entities) as u32;
+        if e == answer {
+            continue;
+        }
+        if let Some(ex) = exclude {
+            if ex.binary_search(&e).is_ok() {
+                continue;
+            }
+        }
+        out.push(e);
+    }
+    // pathological graphs (everything is an answer): pad with random ids
+    while out.len() < n {
+        out.push(rng.below(kg.n_entities) as u32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::KgSpec;
+
+    fn kg() -> KgStore {
+        KgSpec::preset("toy", 1.0).unwrap().generate().unwrap()
+    }
+
+    #[test]
+    fn grounded_queries_contain_their_answer() {
+        let kg = kg();
+        let mut rng = Rng::new(11);
+        for p in Pattern::ALL {
+            let mut ok = 0;
+            for _ in 0..40 {
+                let Some(q) = ground(&kg, &mut rng, p) else { continue };
+                ok += 1;
+                let ans = symbolic::answers(&kg, &q.tree)
+                    .unwrap_or_else(|e| panic!("{p}: {e}"));
+                assert!(
+                    ans.binary_search(&q.answer).is_ok(),
+                    "{p}: answer {} not in A_q (|A_q|={})",
+                    q.answer,
+                    ans.len()
+                );
+            }
+            assert!(ok > 10, "{p}: grounding succeeded only {ok}/40 times");
+        }
+    }
+
+    #[test]
+    fn grounding_respects_pattern_structure() {
+        let kg = kg();
+        let mut rng = Rng::new(5);
+        for p in Pattern::ALL {
+            if let Some(q) = ground(&kg, &mut rng, p) {
+                assert_eq!(q.pattern, p);
+                assert_eq!(q.tree.anchors().len(), p.n_anchors(), "{p}");
+                assert_eq!(q.tree.relations().len(), p.n_relations(), "{p}");
+                q.tree.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn negatives_exclude_answer_and_set() {
+        let kg = kg();
+        let mut rng = Rng::new(2);
+        let exclude: Vec<u32> = vec![3, 7, 9];
+        let negs = negatives(&kg, &mut rng, 7, Some(&exclude), 64);
+        assert_eq!(negs.len(), 64);
+        for &e in &negs {
+            assert_ne!(e, 7);
+            assert!(exclude.binary_search(&e).is_err());
+        }
+    }
+
+    #[test]
+    fn grounding_is_deterministic_per_seed() {
+        let kg = kg();
+        let q1 = ground(&kg, &mut Rng::new(77), Pattern::Pi);
+        let q2 = ground(&kg, &mut Rng::new(77), Pattern::Pi);
+        assert_eq!(q1.map(|q| q.tree), q2.map(|q| q.tree));
+    }
+}

@@ -1,0 +1,11 @@
+//! Online stochastic query sampling (§4.3, Appendix F): reverse-walk
+//! grounding with rejection, negative sampling, adaptive curriculum, and the
+//! producer–consumer stream that overlaps sampling with GPU execution.
+
+pub mod adaptive;
+pub mod ground;
+pub mod stream;
+
+pub use adaptive::AdaptiveSampler;
+pub use ground::{ground, negatives, GroundedQuery};
+pub use stream::{SamplerConfig, SamplerStream};

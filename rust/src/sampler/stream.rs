@@ -1,0 +1,269 @@
+//! Producer–consumer sampling pipeline (§4.3 Heterogeneous Pipelining).
+//!
+//! Sampler threads synthesize grounded queries concurrently with training:
+//! while the engine executes the current operator batches, producers fill a
+//! bounded channel (backpressure) with the next queries — the CPU side of
+//! the paper's consumer-producer pipeline. Adaptive pattern weights are
+//! shared through a mutex-guarded [`AdaptiveSampler`] so loss feedback from
+//! the trainer steers in-flight producers.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::adaptive::AdaptiveSampler;
+use super::ground::{self, GroundedQuery};
+use crate::kg::KgStore;
+use crate::query::Pattern;
+use crate::util::rng::Rng;
+
+/// Sampler configuration.
+#[derive(Debug, Clone)]
+pub struct SamplerConfig {
+    /// patterns in the workload
+    pub patterns: Vec<Pattern>,
+    /// negatives per query
+    pub n_neg: usize,
+    /// exact negative filtering (compute A_q and exclude it) — slower,
+    /// used by eval and small-graph runs
+    pub exact_negatives: bool,
+    /// adaptive mixture weight (0 = static)
+    pub adaptive_lambda: f64,
+    /// producer threads
+    pub threads: usize,
+    /// channel capacity (queries) — the pipeline depth
+    pub queue_depth: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            patterns: Pattern::POSITIVE.to_vec(),
+            n_neg: 32,
+            exact_negatives: false,
+            adaptive_lambda: 0.0,
+            threads: 1,
+            queue_depth: 4096,
+            seed: 0xD1CE,
+        }
+    }
+}
+
+/// Handle to the running sampling pipeline.
+pub struct SamplerStream {
+    rx: Receiver<GroundedQuery>,
+    stop: Arc<AtomicBool>,
+    pub adaptive: Arc<Mutex<AdaptiveSampler>>,
+    handles: Vec<JoinHandle<()>>,
+    /// total rejected grounding attempts (telemetry)
+    pub rejections: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl SamplerStream {
+    /// Spawn producer threads over a shared read-only graph.
+    pub fn spawn(kg: Arc<KgStore>, cfg: SamplerConfig) -> SamplerStream {
+        let (tx, rx) = sync_channel::<GroundedQuery>(cfg.queue_depth);
+        let stop = Arc::new(AtomicBool::new(false));
+        let adaptive =
+            Arc::new(Mutex::new(AdaptiveSampler::new(&cfg.patterns, cfg.adaptive_lambda)));
+        let rejections = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let mut handles = Vec::new();
+        let mut seed_rng = Rng::new(cfg.seed);
+        for t in 0..cfg.threads.max(1) {
+            let tx = tx.clone();
+            let kg = Arc::clone(&kg);
+            let stop = Arc::clone(&stop);
+            let adaptive = Arc::clone(&adaptive);
+            let rejections = Arc::clone(&rejections);
+            let cfg = cfg.clone();
+            let mut rng = seed_rng.fork(t as u64);
+            handles.push(std::thread::spawn(move || {
+                producer_loop(&kg, &cfg, &mut rng, &tx, &stop, &adaptive, &rejections)
+            }));
+        }
+        SamplerStream { rx, stop, adaptive, handles, rejections }
+    }
+
+    /// Blocking receive of up to `n` queries (at least 1 unless producers
+    /// are gone).
+    pub fn recv_batch(&self, n: usize) -> Vec<GroundedQuery> {
+        let mut out = Vec::with_capacity(n);
+        match self.rx.recv() {
+            Ok(q) => out.push(q),
+            Err(_) => return out,
+        }
+        while out.len() < n {
+            match self.rx.try_recv() {
+                Ok(q) => out.push(q),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Report a per-query loss to the adaptive curriculum.
+    pub fn feedback(&self, pattern: Pattern, loss: f64) {
+        self.adaptive.lock().unwrap().observe(pattern, loss);
+    }
+
+    /// Steer the base workload distribution (Fig. 9 experiments).
+    pub fn steer(&self, weights: &[f64]) {
+        self.adaptive.lock().unwrap().set_base(weights);
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // drain so producers blocked on a full channel can observe `stop`
+        while self.rx.try_recv().is_ok() {}
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SamplerStream {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        while self.rx.try_recv().is_ok() {}
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn producer_loop(
+    kg: &KgStore,
+    cfg: &SamplerConfig,
+    rng: &mut Rng,
+    tx: &SyncSender<GroundedQuery>,
+    stop: &AtomicBool,
+    adaptive: &Mutex<AdaptiveSampler>,
+    rejections: &std::sync::atomic::AtomicU64,
+) {
+    let mut weights = vec![1.0; cfg.patterns.len()];
+    let mut since_refresh = 0usize;
+    while !stop.load(Ordering::Relaxed) {
+        // refresh adaptive weights periodically (cheap lock amortization)
+        if since_refresh == 0 {
+            weights = adaptive.lock().unwrap().weights();
+            since_refresh = 256;
+        }
+        since_refresh -= 1;
+
+        let pattern = cfg.patterns[rng.weighted(&weights)];
+        let Some(mut q) = ground::ground(kg, rng, pattern) else {
+            rejections.fetch_add(1, Ordering::Relaxed);
+            continue;
+        };
+        let exclude = if cfg.exact_negatives {
+            crate::eval::symbolic::answers(kg, &q.tree).ok()
+        } else {
+            None
+        };
+        q.negatives = ground::negatives(kg, rng, q.answer, exclude.as_deref(), cfg.n_neg);
+
+        // Bounded-channel send with stop polling (backpressure point).
+        let mut item = q;
+        loop {
+            match tx.try_send(item) {
+                Ok(()) => break,
+                Err(TrySendError::Full(back)) => {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    item = back;
+                    std::thread::yield_now();
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::KgSpec;
+
+    fn kg() -> Arc<KgStore> {
+        Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap())
+    }
+
+    #[test]
+    fn stream_produces_valid_queries() {
+        let s = SamplerStream::spawn(
+            kg(),
+            SamplerConfig { n_neg: 4, queue_depth: 64, ..Default::default() },
+        );
+        let batch = s.recv_batch(32);
+        assert!(!batch.is_empty());
+        for q in &batch {
+            assert_eq!(q.negatives.len(), 4);
+            q.tree.validate().unwrap();
+            assert!(!q.negatives.contains(&q.answer));
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn backpressure_bounds_the_queue() {
+        let s = SamplerStream::spawn(
+            kg(),
+            SamplerConfig { queue_depth: 8, ..Default::default() },
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // queue holds at most 8; recv_batch returns at most what's buffered
+        let batch = s.recv_batch(1000);
+        assert!(batch.len() <= 9, "{}", batch.len());
+        s.shutdown();
+    }
+
+    #[test]
+    fn feedback_steers_the_mixture() {
+        let s = SamplerStream::spawn(
+            kg(),
+            SamplerConfig {
+                patterns: vec![Pattern::P1, Pattern::I2],
+                adaptive_lambda: 0.9,
+                ..Default::default()
+            },
+        );
+        for _ in 0..100 {
+            s.feedback(Pattern::I2, 10.0);
+            s.feedback(Pattern::P1, 0.01);
+        }
+        let w = s.adaptive.lock().unwrap().weights();
+        assert!(w[1] > w[0]);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_terminates_producers() {
+        let s = SamplerStream::spawn(kg(), SamplerConfig::default());
+        let _ = s.recv_batch(4);
+        s.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn exact_negatives_exclude_observed_answers() {
+        let kgr = kg();
+        let s = SamplerStream::spawn(
+            Arc::clone(&kgr),
+            SamplerConfig {
+                patterns: vec![Pattern::P1],
+                n_neg: 16,
+                exact_negatives: true,
+                ..Default::default()
+            },
+        );
+        for q in s.recv_batch(16) {
+            let ans = crate::eval::symbolic::answers(&kgr, &q.tree).unwrap();
+            for n in &q.negatives {
+                assert!(ans.binary_search(n).is_err());
+            }
+        }
+        s.shutdown();
+    }
+}

@@ -1,0 +1,149 @@
+//! Checkpointing: save/restore full trainable state (embedding tables with
+//! Adam moments + dense params) so long runs survive restarts and trained
+//! models can be served/evaluated later.
+//!
+//! Format: a directory with a small text header (`meta.txt`: model, dims,
+//! step) and one raw little-endian f32 file per tensor — deliberately the
+//! same trivial encoding `aot.py` uses for initial params, so checkpoints
+//! are toolable with numpy one-liners.
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::state::{read_f32_file, ModelState};
+
+fn write_f32(path: &str, data: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+/// Save `state` under `dir` (created if needed; overwrites).
+pub fn save(state: &ModelState, dir: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let meta = format!(
+        "model={}\nstep={}\nent_rows={}\nent_dim={}\nrel_rows={}\nrel_dim={}\n\
+         repr_dim={}\ndense={}\n",
+        state.model,
+        state.step,
+        state.entities.rows,
+        state.entities.dim,
+        state.relations.rows,
+        state.relations.dim,
+        state.repr_dim,
+        state.dense.keys().cloned().collect::<Vec<_>>().join(","),
+    );
+    std::fs::write(format!("{dir}/meta.txt"), meta)?;
+    for (tag, t) in [("ent", &state.entities), ("rel", &state.relations)] {
+        write_f32(&format!("{dir}/{tag}.data.bin"), &t.data)?;
+        write_f32(&format!("{dir}/{tag}.m.bin"), &t.m)?;
+        write_f32(&format!("{dir}/{tag}.v.bin"), &t.v)?;
+    }
+    for (name, p) in &state.dense {
+        let fname = name.replace('.', "_");
+        write_f32(&format!("{dir}/dense.{fname}.data.bin"), &p.data)?;
+        write_f32(&format!("{dir}/dense.{fname}.m.bin"), &p.m)?;
+        write_f32(&format!("{dir}/dense.{fname}.v.bin"), &p.v)?;
+    }
+    Ok(())
+}
+
+/// Restore a checkpoint into an already-initialized `state` (shapes must
+/// match — init the state from the same manifest/graph first).
+pub fn load(state: &mut ModelState, dir: &str) -> Result<()> {
+    let meta = std::fs::read_to_string(format!("{dir}/meta.txt"))
+        .with_context(|| format!("no checkpoint at {dir}"))?;
+    let field = |key: &str| -> Result<String> {
+        meta.lines()
+            .find_map(|l| l.strip_prefix(&format!("{key}=")))
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint meta missing {key}"))
+    };
+    if field("model")? != state.model {
+        bail!("checkpoint is for model {:?}, state is {:?}", field("model")?, state.model);
+    }
+    let ent_rows: usize = field("ent_rows")?.parse()?;
+    let ent_dim: usize = field("ent_dim")?.parse()?;
+    if ent_rows != state.entities.rows || ent_dim != state.entities.dim {
+        bail!(
+            "entity table shape mismatch: checkpoint {}x{}, state {}x{}",
+            ent_rows, ent_dim, state.entities.rows, state.entities.dim
+        );
+    }
+    state.step = field("step")?.parse()?;
+    for (tag, t) in [("ent", &mut state.entities), ("rel", &mut state.relations)] {
+        let n = t.data.len();
+        t.data = read_f32_file(&format!("{dir}/{tag}.data.bin"), n)?;
+        t.m = read_f32_file(&format!("{dir}/{tag}.m.bin"), n)?;
+        t.v = read_f32_file(&format!("{dir}/{tag}.v.bin"), n)?;
+    }
+    for (name, p) in &mut state.dense {
+        let fname = name.replace('.', "_");
+        let n = p.data.len();
+        p.data = read_f32_file(&format!("{dir}/dense.{fname}.data.bin"), n)?;
+        p.m = read_f32_file(&format!("{dir}/dense.{fname}.m.bin"), n)?;
+        p.v = read_f32_file(&format!("{dir}/dense.{fname}.v.bin"), n)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockRuntime, Runtime};
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir().join(format!("ngdb_ckpt_{name}")).to_string_lossy().into_owned()
+    }
+
+    fn state() -> ModelState {
+        let rt = MockRuntime::new();
+        ModelState::init(rt.manifest(), "mock", 10, 4, None, 1).unwrap()
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = tmp("rt");
+        let mut a = state();
+        a.step = 42;
+        let mut rng = Rng::new(7);
+        a.entities.data.iter_mut().for_each(|x| *x = rng.uniform_sym(1.0));
+        a.entities.m[3] = 0.5;
+        save(&a, &dir).unwrap();
+
+        let mut b = state();
+        load(&mut b, &dir).unwrap();
+        assert_eq!(b.step, 42);
+        assert_eq!(a.entities.data, b.entities.data);
+        assert_eq!(a.entities.m, b.entities.m);
+        assert_eq!(a.relations.v, b.relations.v);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn model_mismatch_rejected() {
+        let dir = tmp("mm");
+        let a = state();
+        save(&a, &dir).unwrap();
+        let mut b = state();
+        b.model = "gqe".into();
+        assert!(load(&mut b, &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let dir = tmp("sm");
+        let a = state();
+        save(&a, &dir).unwrap();
+        let rt = MockRuntime::new();
+        let mut b = ModelState::init(rt.manifest(), "mock", 12, 4, None, 1).unwrap();
+        assert!(load(&mut b, &dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_checkpoint_is_clean_error() {
+        let mut s = state();
+        assert!(load(&mut s, "/nonexistent/ckpt").is_err());
+    }
+}

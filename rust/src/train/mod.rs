@@ -1,0 +1,13 @@
+//! Training loops: the operator-level trainer, the query-level and
+//! per-query baselines, the multi-worker data-parallel path, and the
+//! single-hop (Table 2) trainer.
+
+pub mod checkpoint;
+pub mod multi_worker;
+pub mod single_hop;
+pub mod trainer;
+
+pub use multi_worker::{modeled_speedup, ring_allreduce_secs, train_multi_worker,
+                       MultiWorkerReport};
+pub use single_hop::{train_complex, SingleHopReport};
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,343 @@
+//! Training loops: NGDB-Zoo's operator-level trainer and the two baselines
+//! the paper measures against, unified behind one loop with two knobs
+//! (Fig. 2 / Fig. 3):
+//!
+//! * `Batching::OperatorLevel` — one fused DAG per step, cross-query
+//!   operator pools, Max-Fillness scheduling (ours);
+//! * `Batching::QueryLevel` — queries grouped by identical structure, one
+//!   fused DAG *per structure group* (KGReasoning-style fragmentation);
+//! * `Batching::PerQuery` — one DAG per query with singleton batches
+//!   (SQE-proxy, Fig. 2a's kernel stream).
+//!
+//! `Pipelining::Sync` generates queries on the critical path;
+//! `Pipelining::Async` consumes the producer-thread stream (§4.3).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Batching, ExperimentConfig, Pipelining};
+use crate::exec::{Engine, EngineConfig, Grads};
+use crate::kg::KgStore;
+use crate::metrics::{MemoryEstimate, ThroughputMeter, TsvLogger};
+use crate::model::ModelState;
+use crate::optim::AdamConfig;
+use crate::query::{Pattern, QueryDag};
+use crate::runtime::Runtime;
+use crate::sampler::{ground, GroundedQuery, SamplerStream};
+use crate::semantic::SemanticSource;
+use crate::util::rng::Rng;
+use crate::util::timer::{PhaseTimer, Stopwatch};
+
+/// Outcome of a training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// mean loss per step
+    pub loss_curve: Vec<f64>,
+    pub qps: f64,
+    pub steps: usize,
+    pub queries: u64,
+    pub mem: MemoryEstimate,
+    pub ops_per_launch: f64,
+    pub padded_frac: f64,
+    /// phase attribution of the run's wall clock
+    pub phases: Vec<(String, f64)>,
+}
+
+/// Drives one model over one graph per the experiment config.
+pub struct Trainer<'a> {
+    pub rt: &'a dyn Runtime,
+    pub kg: Arc<KgStore>,
+    pub cfg: ExperimentConfig,
+    pub adam: AdamConfig,
+    pub semantic: Option<&'a dyn SemanticSource>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a dyn Runtime, kg: Arc<KgStore>, cfg: ExperimentConfig) -> Trainer<'a> {
+        let adam = AdamConfig { lr: cfg.lr as f32, ..Default::default() };
+        Trainer { rt, kg, cfg, adam, semantic: None }
+    }
+
+    pub fn with_semantic(mut self, source: &'a dyn SemanticSource) -> Trainer<'a> {
+        self.semantic = Some(source);
+        self
+    }
+
+    fn engine(&self) -> Engine<'a> {
+        let ecfg = EngineConfig {
+            force_singleton: self.cfg.batching == Batching::PerQuery,
+            ..Default::default()
+        };
+        match self.semantic {
+            Some(s) => Engine::with_semantic(self.rt, ecfg, s),
+            None => Engine::new(self.rt, ecfg),
+        }
+    }
+
+    /// Run `cfg.steps` optimizer steps, mutating `state`.
+    pub fn train(&self, state: &mut ModelState) -> Result<TrainReport> {
+        let supports_neg = crate::config::model_supports_negation(&state.model);
+        if self.cfg.patterns.iter().any(|p| p.has_negation()) && !supports_neg {
+            bail!("model {} cannot train negation patterns", state.model);
+        }
+        let n_neg = self.rt.manifest().dims.n_neg;
+        let engine = self.engine();
+        let mut meter = ThroughputMeter::new();
+        let mut phases = PhaseTimer::default();
+        let mut logger = TsvLogger::open(
+            self.cfg.log_path.as_deref(),
+            "step\tloss\tqps\tops_per_launch\tpeak_live_bytes",
+        )?;
+        let mut report = TrainReport::default();
+
+        // async pipeline (producers) or a local synchronous sampler
+        let stream = match self.cfg.pipelining {
+            Pipelining::Async => Some(SamplerStream::spawn(
+                Arc::clone(&self.kg),
+                self.cfg.sampler(n_neg),
+            )),
+            Pipelining::Sync => None,
+        };
+        let mut sync_rng = Rng::new(self.cfg.seed ^ 0x5A);
+
+        let mut peak_live = 0usize;
+        for step in 0..self.cfg.steps {
+            let sw = Stopwatch::new();
+            // ---- sample -----------------------------------------------------
+            let batch: Vec<GroundedQuery> = phases.time("sample", || match &stream {
+                Some(s) => s.recv_batch(self.cfg.batch_queries),
+                None => self.sample_sync(&mut sync_rng, n_neg),
+            });
+            if batch.is_empty() {
+                bail!("sampler produced no queries");
+            }
+
+            // ---- build DAG(s) per batching policy ---------------------------
+            let dags: Vec<QueryDag> = phases.time("build_dag", || {
+                self.build_dags(&batch, supports_neg)
+            })?;
+
+            // ---- execute -----------------------------------------------------
+            let mut grads = Grads::default();
+            let mut step_ops = 0usize;
+            let mut step_launch = 0usize;
+            let mut step_pad = 0usize;
+            let mut per_pattern: Vec<(&'static str, f64, usize)> = Vec::new();
+            phases.time("execute", || -> Result<()> {
+                for dag in &dags {
+                    let stats = engine.run(dag, state, &mut grads)?;
+                    step_ops += stats.operators;
+                    step_launch += stats.executions;
+                    step_pad += stats.padded_rows;
+                    peak_live = peak_live.max(stats.peak_live_bytes);
+                    per_pattern.extend(stats.per_pattern_loss);
+                }
+                Ok(())
+            })?;
+
+            // ---- optimize ----------------------------------------------------
+            grads.normalize();
+            let mean_loss = grads.loss / grads.n_queries.max(1) as f64;
+            phases.time("optimize", || self.apply(state, &grads));
+
+            // ---- feedback + metrics ------------------------------------------
+            if let Some(s) = &stream {
+                for (pat, loss, count) in per_pattern {
+                    if count > 0 {
+                        if let Ok(p) = Pattern::from_name(pat) {
+                            s.feedback(p, loss / count as f64);
+                        }
+                    }
+                }
+            }
+            meter.tick(batch.len(), step_ops, step_launch, step_pad, sw.elapsed_secs());
+            report.loss_curve.push(mean_loss);
+            logger.row(&[
+                step.to_string(),
+                format!("{mean_loss:.6}"),
+                format!("{:.1}", meter.qps()),
+                format!("{:.2}", meter.ops_per_launch()),
+                peak_live.to_string(),
+            ]);
+        }
+
+        if let Some(s) = stream {
+            s.shutdown();
+        }
+        report.steps = self.cfg.steps;
+        report.queries = meter.queries;
+        report.qps = meter.qps();
+        report.ops_per_launch = meter.ops_per_launch();
+        report.padded_frac = meter.padded_rows as f64
+            / (meter.operators + meter.padded_rows).max(1) as f64;
+        report.mem = MemoryEstimate {
+            state_bytes: state.bytes(),
+            peak_live_bytes: peak_live,
+            resident_bytes: self.semantic.map_or(0, |s| s.resident_bytes()),
+            encoder_bytes: 0,
+        };
+        report.phases = phases.buckets.clone();
+        Ok(report)
+    }
+
+    fn sample_sync(&self, rng: &mut Rng, n_neg: usize) -> Vec<GroundedQuery> {
+        let mut out = Vec::with_capacity(self.cfg.batch_queries);
+        let mut guard = 0usize;
+        while out.len() < self.cfg.batch_queries && guard < self.cfg.batch_queries * 20 {
+            guard += 1;
+            let p = *rng.choice(&self.cfg.patterns);
+            if let Some(mut q) = ground(&self.kg, rng, p) {
+                q.negatives =
+                    crate::sampler::negatives(&self.kg, rng, q.answer, None, n_neg);
+                out.push(q);
+            }
+        }
+        out
+    }
+
+    fn build_dags(&self, batch: &[GroundedQuery], neg_ok: bool) -> Result<Vec<QueryDag>> {
+        match self.cfg.batching {
+            Batching::OperatorLevel => {
+                let mut dag = QueryDag::default();
+                for q in batch {
+                    dag.add_query(&q.tree, q.answer, q.negatives.clone(),
+                        q.pattern.name(), neg_ok)?;
+                }
+                dag.add_gradient_nodes();
+                Ok(vec![dag])
+            }
+            Batching::QueryLevel => {
+                // fragment by structure: one fused DAG per pattern group
+                let mut groups: std::collections::BTreeMap<&str, Vec<&GroundedQuery>> =
+                    Default::default();
+                for q in batch {
+                    groups.entry(q.pattern.name()).or_default().push(q);
+                }
+                groups
+                    .into_values()
+                    .map(|qs| {
+                        let mut dag = QueryDag::default();
+                        for q in qs {
+                            dag.add_query(&q.tree, q.answer, q.negatives.clone(),
+                                q.pattern.name(), neg_ok)?;
+                        }
+                        dag.add_gradient_nodes();
+                        Ok(dag)
+                    })
+                    .collect()
+            }
+            Batching::PerQuery => batch
+                .iter()
+                .map(|q| {
+                    let mut dag = QueryDag::default();
+                    dag.add_query(&q.tree, q.answer, q.negatives.clone(),
+                        q.pattern.name(), neg_ok)?;
+                    dag.add_gradient_nodes();
+                    Ok(dag)
+                })
+                .collect(),
+        }
+    }
+
+    /// Apply accumulated gradients (dense + sparse Adam).
+    pub fn apply(&self, state: &mut ModelState, grads: &Grads) {
+        state.step += 1;
+        let step = state.step;
+        for (name, g) in &grads.dense {
+            if let Some(p) = state.dense.get_mut(name) {
+                self.adam.apply_dense(p, g, step);
+            }
+        }
+        self.adam.apply_sparse(&mut state.entities, &grads.ent, step);
+        self.adam.apply_sparse(&mut state.relations, &grads.rel, step);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::KgSpec;
+    use crate::runtime::MockRuntime;
+
+    fn setup(batching: Batching, pipelining: Pipelining) -> (MockRuntime, Arc<KgStore>, ExperimentConfig) {
+        let rt = MockRuntime::new();
+        let kg = Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap());
+        let cfg = ExperimentConfig {
+            model: "mock".into(),
+            steps: 3,
+            batch_queries: 16,
+            batching,
+            pipelining,
+            patterns: vec![Pattern::P1, Pattern::P2, Pattern::I2],
+            ..Default::default()
+        };
+        (rt, kg, cfg)
+    }
+
+    fn mock_state(rt: &MockRuntime, kg: &KgStore) -> ModelState {
+        ModelState::init(
+            crate::runtime::Runtime::manifest(rt),
+            "mock",
+            kg.n_entities,
+            kg.n_relations,
+            None,
+            5,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn operator_level_trains_and_changes_state() {
+        let (rt, kg, cfg) = setup(Batching::OperatorLevel, Pipelining::Async);
+        let mut state = mock_state(&rt, &kg);
+        let before = state.entities.data.clone();
+        let report = Trainer::new(&rt, kg, cfg).train(&mut state).unwrap();
+        assert_eq!(report.steps, 3);
+        assert_eq!(report.loss_curve.len(), 3);
+        assert_ne!(state.entities.data, before, "optimizer must move embeddings");
+        assert!(report.qps > 0.0);
+    }
+
+    #[test]
+    fn all_batching_modes_run_sync_and_async() {
+        for b in [Batching::OperatorLevel, Batching::QueryLevel, Batching::PerQuery] {
+            for p in [Pipelining::Sync, Pipelining::Async] {
+                let (rt, kg, cfg) = setup(b, p);
+                let mut state = mock_state(&rt, &kg);
+                let r = Trainer::new(&rt, kg, cfg).train(&mut state).unwrap();
+                assert!(r.loss_curve.iter().all(|l| l.is_finite()), "{b:?}/{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn operator_level_fuses_more_than_query_level() {
+        let (rt, kg, mut cfg) = setup(Batching::OperatorLevel, Pipelining::Sync);
+        cfg.batch_queries = 32;
+        let mut state = mock_state(&rt, &kg);
+        let r_op = Trainer::new(&rt, Arc::clone(&kg), cfg.clone())
+            .train(&mut state)
+            .unwrap();
+        let (rt2, kg2, mut cfg2) = setup(Batching::PerQuery, Pipelining::Sync);
+        cfg2.batch_queries = 32;
+        let mut state2 = mock_state(&rt2, &kg2);
+        let r_pq = Trainer::new(&rt2, kg2, cfg2).train(&mut state2).unwrap();
+        assert!(
+            r_op.ops_per_launch > r_pq.ops_per_launch * 1.5,
+            "operator-level {} vs per-query {}",
+            r_op.ops_per_launch,
+            r_pq.ops_per_launch
+        );
+    }
+
+    #[test]
+    fn negation_patterns_rejected_for_unsupported_model() {
+        // the config layer filters; the trainer double-checks
+        let (rt, kg, mut cfg) = setup(Batching::OperatorLevel, Pipelining::Sync);
+        cfg.patterns = vec![Pattern::In2];
+        let mut state = mock_state(&rt, &kg);
+        state.model = "gqe".into();
+        assert!(Trainer::new(&rt, kg, cfg).train(&mut state).is_err());
+    }
+}

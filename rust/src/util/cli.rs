@@ -1,0 +1,146 @@
+//! Tiny CLI argument parser (the offline registry has no clap).
+//!
+//! Grammar: `prog <subcommand> [--flag] [--key=value] [pos...]`. A bare
+//! `--name` is always a boolean flag (no lookahead ambiguity); option values
+//! require `=`. The exception is `--set k=v`, which may also be spelled
+//! `--set=k=v`; repeated `--set` options accumulate (config overrides).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub sets: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — first token is NOT argv[0].
+    pub fn parse_tokens<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare -- not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.record(k, v.to_string())?;
+                } else if name == "set" {
+                    let kv = it.next().ok_or_else(|| anyhow::anyhow!("--set needs k=v"))?;
+                    let (k, v) =
+                        kv.split_once('=').ok_or_else(|| anyhow::anyhow!("--set needs k=v"))?;
+                    args.sets.push((k.to_string(), v.to_string()));
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse_tokens(std::env::args().skip(1))
+    }
+
+    fn record(&mut self, key: &str, value: String) -> Result<()> {
+        if key == "set" {
+            let (k, v) =
+                value.split_once('=').ok_or_else(|| anyhow::anyhow!("--set needs k=v"))?;
+            self.sets.push((k.to_string(), v.to_string()));
+        } else {
+            self.options.insert(key.to_string(), value);
+        }
+        Ok(())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse_tokens(toks(
+            "train --config=configs/fb15k.toml --steps=100 --verbose extra",
+        ))
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("config"), Some("configs/fb15k.toml"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn set_accumulates() {
+        let a = Args::parse_tokens(toks("bench --set a.b=1 --set c=x")).unwrap();
+        assert_eq!(a.sets.len(), 2);
+        assert_eq!(a.sets[0], ("a.b".into(), "1".into()));
+    }
+
+    #[test]
+    fn bare_dashes_are_flags() {
+        let a = Args::parse_tokens(toks("run --dry --out=path")).unwrap();
+        assert!(a.has_flag("dry"));
+        assert_eq!(a.opt("out"), Some("path"));
+    }
+
+    #[test]
+    fn set_with_equals_spelling() {
+        let a = Args::parse_tokens(toks("x --set=a.b=2")).unwrap();
+        assert_eq!(a.sets[0], ("a.b".into(), "2".into()));
+    }
+
+    #[test]
+    fn errors_on_bad_set() {
+        assert!(Args::parse_tokens(toks("x --set novalue")).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities: RNG, CLI parsing, JSON/TOML parsers,
+//! statistics, timers, and the in-repo property-testing harness.
+//!
+//! These exist because the offline crate registry only carries the `xla`
+//! dependency closure — see DESIGN.md §Substitutions.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+pub mod toml;

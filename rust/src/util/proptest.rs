@@ -1,0 +1,101 @@
+//! In-repo property-testing harness (offline registry has no proptest).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("refcounts reach zero", 200, |rng| {
+//!     let dag = gen_random_dag(rng, 1..40);
+//!     run_and_assert_invariants(&dag)  // -> Result<(), String>
+//! });
+//! ```
+//! Each case gets a derived seed; on failure the harness reports the exact
+//! seed so the case replays deterministically with `NGDB_PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Number of cases multiplier via env (CI can crank it up).
+fn case_multiplier() -> usize {
+    std::env::var("NGDB_PROP_MULT").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
+/// Run `cases` generative checks of `f`; panics (test failure) with the
+/// failing seed on the first counterexample.
+pub fn prop_check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("NGDB_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xA11CE);
+    let cases = cases * case_multiplier();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases} \
+                 (replay: NGDB_PROP_SEED={} case offset {case}):\n{msg}",
+                base
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::Rng;
+
+    /// Random length in `[lo, hi]`, biased toward small values.
+    pub fn size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        // square-bias toward the small end: small cases shrink "for free"
+        let u = rng.f64();
+        lo + ((u * u) * (hi - lo + 1) as f64) as usize
+    }
+
+    /// Vector of f32s in [-scale, scale].
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.uniform_sym(scale)).collect()
+    }
+
+    /// Random subset of 0..n (possibly empty).
+    pub fn subset(rng: &mut Rng, n: usize, p: f64) -> Vec<usize> {
+        (0..n).filter(|_| rng.chance(p)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        prop_check("reverse twice is identity", 50, |rng| {
+            let n = gen::size(rng, 0, 20);
+            let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failures() {
+        prop_check("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn size_respects_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = gen::size(&mut rng, 2, 9);
+            assert!((2..=9).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named time buckets — used to attribute a training step's
+/// wall-clock to sample/coalesce/execute/scatter/optimize phases.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    pub buckets: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(b) = self.buckets.iter_mut().find(|(n, _)| n == name) {
+            b.1 += secs;
+        } else {
+            self.buckets.push((name.to_string(), secs));
+        }
+    }
+
+    /// Time a closure into the named bucket.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn total(&self) -> f64 {
+        self.buckets.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut rows: Vec<_> = self.buckets.clone();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows.iter()
+            .map(|(n, s)| format!("{n}: {} ({:.1}%)", super::stats::fmt_secs(*s), 100.0 * s / total))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::new();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::default();
+        t.add("x", 1.0);
+        t.add("x", 0.5);
+        t.add("y", 0.25);
+        assert!((t.total() - 1.75).abs() < 1e-12);
+        assert!(t.report().starts_with("x:"));
+    }
+}

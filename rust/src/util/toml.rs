@@ -1,0 +1,246 @@
+//! TOML-subset parser for experiment config files (`configs/*.toml`).
+//!
+//! Supported: `[section]` / `[section.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans and flat arrays, plus `#` comments.
+//! Keys flatten to dotted paths (`section.key`). This covers everything the
+//! config system uses; it is not a general TOML implementation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A scalar config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// Flat map of dotted keys to values.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            doc.values.insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &str) -> Result<TomlDoc> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        TomlDoc::parse(&text)
+    }
+
+    /// Apply a `key=value` override (CLI `--set`); value re-parsed as TOML.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        self.values.insert(key.to_string(), parse_value(value)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    // bare word — treat as string (lets `--set model=betae` work unquoted)
+    Ok(TomlValue::Str(s.to_string()))
+}
+
+/// Split on commas not inside quotes (arrays are flat; no nesting needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # top comment
+            name = "fb15k"            # trailing comment
+            [train]
+            steps = 1_000
+            lr = 1e-4
+            adaptive = true
+            buckets = [16, 128, 512]
+            tags = ["a", "b,c"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fb15k");
+        assert_eq!(doc.i64_or("train.steps", 0), 1000);
+        assert!((doc.f64_or("train.lr", 0.0) - 1e-4).abs() < 1e-12);
+        assert!(doc.bool_or("train.adaptive", false));
+        match doc.get("train.buckets").unwrap() {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        match doc.get("train.tags").unwrap() {
+            TomlValue::Arr(v) => assert_eq!(v[1], TomlValue::Str("b,c".into())),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut doc = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        doc.set("a.x", "2").unwrap();
+        doc.set("a.name", "betae").unwrap();
+        assert_eq!(doc.i64_or("a.x", 0), 2);
+        assert_eq!(doc.str_or("a.name", ""), "betae");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TomlDoc::parse("[oops\n").is_err());
+        assert!(TomlDoc::parse("justakey\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.i64_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+    }
+}

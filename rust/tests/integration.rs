@@ -1,0 +1,246 @@
+//! End-to-end integration over the real AOT artifacts (requires
+//! `make artifacts`). These tests exercise the full three-layer stack:
+//! Rust coordinator → PJRT CPU client → XLA executables lowered from the
+//! JAX/Pallas compute path.
+
+use std::sync::Arc;
+
+use ngdb_zoo::config::{Batching, ExperimentConfig, Pipelining, Semantic};
+use ngdb_zoo::eval::rank;
+use ngdb_zoo::exec::{Engine, EngineConfig, Grads};
+use ngdb_zoo::kg::{descriptions::Descriptions, KgSpec, KgStore};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::{PjrtRuntime, Runtime};
+use ngdb_zoo::semantic::{DecoupledCache, JointEncoder, SemanticSource};
+use ngdb_zoo::train::Trainer;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::open(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn toy_kg() -> Arc<KgStore> {
+    Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap())
+}
+
+fn state_for(rt: &PjrtRuntime, model: &str, kg: &KgStore) -> ModelState {
+    ModelState::init(rt.manifest(), model, kg.n_entities, kg.n_relations,
+        Some(&artifacts_dir()), 11).unwrap()
+}
+
+fn cfg(model: &str, steps: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        model: model.into(),
+        steps,
+        batch_queries: 64,
+        batching: Batching::OperatorLevel,
+        pipelining: Pipelining::Sync,
+        patterns: vec![Pattern::P1, Pattern::P2, Pattern::I2, Pattern::U2],
+        lr: 1e-2, // aggressive lr so few steps show a trend on the toy graph
+        seed: 7,
+        artifacts_dir: artifacts_dir(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn gqe_end_to_end_loss_decreases() {
+    let rt = runtime();
+    let kg = toy_kg();
+    let mut state = state_for(&rt, "gqe", &kg);
+    let report = Trainer::new(&rt, Arc::clone(&kg), cfg("gqe", 12))
+        .train(&mut state)
+        .unwrap();
+    let first = report.loss_curve[0];
+    let last = *report.loss_curve.last().unwrap();
+    assert!(
+        last < first,
+        "loss should decrease: first={first:.4} last={last:.4} curve={:?}",
+        report.loss_curve
+    );
+    assert!(report.loss_curve.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn all_five_models_train_one_step() {
+    let rt = runtime();
+    let kg = toy_kg();
+    for model in ["gqe", "q2b", "betae", "q2p", "fuzzqe"] {
+        let mut c = cfg(model, 2);
+        if ngdb_zoo::config::model_supports_negation(model) {
+            c.patterns = Pattern::ALL.to_vec();
+        }
+        let mut state = state_for(&rt, model, &kg);
+        let report = Trainer::new(&rt, Arc::clone(&kg), c)
+            .train(&mut state)
+            .unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        assert!(
+            report.loss_curve.iter().all(|l| l.is_finite()),
+            "{model}: {:?}",
+            report.loss_curve
+        );
+    }
+}
+
+#[test]
+fn batching_policies_agree_numerically_on_real_artifacts() {
+    // operator-level fusion must not change the computed loss
+    let rt = runtime();
+    let kg = toy_kg();
+    let mut rng = ngdb_zoo::util::rng::Rng::new(3);
+    let mut queries = Vec::new();
+    for p in [Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Pi] {
+        for _ in 0..4 {
+            if let Some(mut q) = ngdb_zoo::sampler::ground(&kg, &mut rng, p) {
+                q.negatives = ngdb_zoo::sampler::negatives(
+                    &kg, &mut rng, q.answer, None, rt.manifest().dims.n_neg);
+                queries.push(q);
+            }
+        }
+    }
+    let state = state_for(&rt, "gqe", &kg);
+    let run = |singleton: bool| -> (f64, Grads) {
+        let mut dag = QueryDag::default();
+        for q in &queries {
+            dag.add_query(&q.tree, q.answer, q.negatives.clone(), q.pattern.name(), false)
+                .unwrap();
+        }
+        dag.add_gradient_nodes();
+        let engine = Engine::new(
+            &rt,
+            EngineConfig { force_singleton: singleton, nan_check: true, ..Default::default() },
+        );
+        let mut grads = Grads::default();
+        let stats = engine.run(&dag, &state, &mut grads).unwrap();
+        (stats.loss, grads)
+    };
+    let (loss_batched, g_b) = run(false);
+    let (loss_single, g_s) = run(true);
+    let rel = (loss_batched - loss_single).abs() / loss_single.abs().max(1e-9);
+    assert!(rel < 1e-3, "batched {loss_batched} vs singleton {loss_single}");
+    // spot-check a few embedding gradients
+    let mut checked = 0;
+    for (k, v) in &g_b.ent {
+        let w = &g_s.ent[k];
+        for (a, b) in v.iter().zip(w) {
+            assert!((a - b).abs() < 1e-2 * (1.0 + a.abs()), "ent {k}: {a} vs {b}");
+        }
+        checked += 1;
+        if checked > 10 {
+            break;
+        }
+    }
+}
+
+#[test]
+fn betae_trains_negation_patterns() {
+    let rt = runtime();
+    let kg = toy_kg();
+    let mut c = cfg("betae", 3);
+    c.patterns = Pattern::NEGATION.to_vec();
+    let mut state = state_for(&rt, "betae", &kg);
+    let report = Trainer::new(&rt, Arc::clone(&kg), c).train(&mut state).unwrap();
+    assert!(report.loss_curve.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn eval_mrr_improves_with_training() {
+    let rt = runtime();
+    let kg = toy_kg();
+    let full = rank::full_graph(&kg).unwrap();
+    let queries =
+        rank::sample_eval_queries(&kg, &full, &[Pattern::P1, Pattern::I2], 12, 5);
+    assert!(!queries.is_empty());
+    let mut state = state_for(&rt, "gqe", &kg);
+    let before = rank::evaluate(&rt, &state, &kg, &queries, None).unwrap();
+    let mut c = cfg("gqe", 30);
+    c.batch_queries = 128;
+    Trainer::new(&rt, Arc::clone(&kg), c).train(&mut state).unwrap();
+    let after = rank::evaluate(&rt, &state, &kg, &queries, None).unwrap();
+    assert!(
+        after.mrr > before.mrr,
+        "training should improve MRR: {:.4} -> {:.4}",
+        before.mrr,
+        after.mrr
+    );
+}
+
+#[test]
+fn decoupled_and_joint_semantic_paths_agree() {
+    let rt = runtime();
+    let kg = toy_kg();
+    let dims = rt.manifest().dims.clone();
+    let desc = Arc::new(Descriptions::build(&kg, dims.tok_dim, 9));
+    let joint = JointEncoder::new(&rt, "bge_sim", Arc::clone(&desc), &artifacts_dir()).unwrap();
+    let cache = DecoupledCache::precompute(&rt, "bge_sim", &desc, &artifacts_dir()).unwrap();
+
+    let mut state = state_for(&rt, "gqe", &kg);
+    state.load_fusion(rt.manifest(), "bge_sim", Some(&artifacts_dir()), 1).unwrap();
+
+    let tree = QueryTree::instantiate(Pattern::P2, &[3], &[0, 1]).unwrap();
+    let run = |sem: &dyn ngdb_zoo::semantic::SemanticSource| -> Vec<f32> {
+        let mut dag = QueryDag::default();
+        let root = dag.add_query_eval(&tree, false).unwrap();
+        let engine = Engine::with_semantic(&rt, EngineConfig::default(), sem);
+        let mut grads = Grads::default();
+        let (_, outs) = engine.run_with_outputs(&dag, &state, &mut grads, &[root]).unwrap();
+        outs.into_iter().next().unwrap()
+    };
+    let a = run(&joint);
+    let b = run(&cache);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4, "joint {x} vs decoupled {y}");
+    }
+    // decoupled keeps H_sem resident; joint keeps the encoder weights
+    assert!(cache.resident_bytes() > 0);
+    assert!(joint.resident_bytes() > cache.resident_bytes() / 64);
+}
+
+#[test]
+fn semantic_trainer_runs_decoupled() {
+    let rt = runtime();
+    let kg = toy_kg();
+    let dims = rt.manifest().dims.clone();
+    let desc = Descriptions::build(&kg, dims.tok_dim, 9);
+    let cache = DecoupledCache::precompute(&rt, "bge_sim", &desc, &artifacts_dir()).unwrap();
+    let mut c = cfg("gqe", 3);
+    c.semantic = Semantic::Decoupled { encoder: "bge_sim".into() };
+    let mut state = state_for(&rt, "gqe", &kg);
+    state.load_fusion(rt.manifest(), "bge_sim", Some(&artifacts_dir()), 1).unwrap();
+    let report = Trainer::new(&rt, Arc::clone(&kg), c)
+        .with_semantic(&cache)
+        .train(&mut state)
+        .unwrap();
+    assert!(report.loss_curve.iter().all(|l| l.is_finite()));
+    assert!(report.mem.resident_bytes > 0);
+}
+
+#[test]
+fn complex_single_hop_epoch() {
+    let rt = runtime();
+    let kg = toy_kg();
+    let mut state = ModelState::init(rt.manifest(), "complex", kg.n_entities,
+        kg.n_relations, Some(&artifacts_dir()), 4).unwrap();
+    let report =
+        ngdb_zoo::train::train_complex(&rt, Arc::clone(&kg), &mut state, 2, 512, 1e-2, 3)
+            .unwrap();
+    assert_eq!(report.epoch_secs.len(), 2);
+    assert!(report.triples_per_sec > 0.0);
+    assert!(
+        report.loss_curve[1] < report.loss_curve[0],
+        "epoch loss should fall: {:?}",
+        report.loss_curve
+    );
+}
+
+#[test]
+fn runtime_rejects_bad_shapes_and_unknown_artifacts() {
+    let rt = runtime();
+    let bad = ngdb_zoo::runtime::HostTensor::zeros(vec![3, 3]);
+    assert!(rt.execute("gqe_embed_fwd_b16", &[bad]).is_err());
+    assert!(rt.execute("not_a_thing", &[]).is_err());
+}

@@ -1,0 +1,312 @@
+//! Property tests over coordinator invariants (mock runtime — no
+//! artifacts needed, fast). Complements the unit-level properties inside
+//! each module with cross-module algebraic laws.
+
+use std::sync::Arc;
+
+use ngdb_zoo::eval::symbolic::answers;
+use ngdb_zoo::exec::{Engine, EngineConfig, Grads};
+use ngdb_zoo::kg::{KgSpec, KgStore, Triple};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::sampler::ground;
+use ngdb_zoo::util::proptest::{gen, prop_check};
+use ngdb_zoo::util::rng::Rng;
+
+fn random_kg(rng: &mut Rng) -> KgStore {
+    let n_ent = gen::size(rng, 8, 60);
+    let n_rel = gen::size(rng, 2, 6);
+    let n_edges = gen::size(rng, n_ent, n_ent * 4);
+    let mut triples = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..n_edges * 3 {
+        if triples.len() >= n_edges {
+            break;
+        }
+        let h = rng.below(n_ent) as u32;
+        let t = rng.below(n_ent) as u32;
+        let r = rng.below(n_rel) as u32;
+        if h != t && seen.insert((h, r, t)) {
+            triples.push(Triple { h, r, t });
+        }
+    }
+    KgStore::new("prop", n_ent, n_rel, triples, vec![], vec![]).unwrap()
+}
+
+#[test]
+fn intersection_is_subset_of_branches_and_union_superset() {
+    prop_check("set-operator algebra", 60, |rng| {
+        let kg = random_kg(rng);
+        let mk = |rng: &mut Rng| {
+            QueryTree::Project(
+                Box::new(QueryTree::Anchor(rng.below(kg.n_entities) as u32)),
+                rng.below(kg.n_relations) as u32,
+            )
+        };
+        let (a, b) = (mk(rng), mk(rng));
+        let ia = answers(&kg, &a).map_err(|e| e.to_string())?;
+        let ib = answers(&kg, &b).map_err(|e| e.to_string())?;
+        let inter = answers(&kg, &QueryTree::Intersect(vec![a.clone(), b.clone()]))
+            .map_err(|e| e.to_string())?;
+        let uni = answers(&kg, &QueryTree::Union(vec![a.clone(), b.clone()]))
+            .map_err(|e| e.to_string())?;
+        for x in &inter {
+            if ia.binary_search(x).is_err() || ib.binary_search(x).is_err() {
+                return Err(format!("{x} in A∩B but not in both branches"));
+            }
+        }
+        for x in ia.iter().chain(&ib) {
+            if uni.binary_search(x).is_err() {
+                return Err(format!("{x} in a branch but missing from A∪B"));
+            }
+        }
+        // |A∪B| = |A| + |B| - |A∩B|
+        if uni.len() + inter.len() != ia.len() + ib.len() {
+            return Err("inclusion-exclusion violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn negation_never_contains_negated_branch() {
+    prop_check("¬ branch excluded from 2in answers", 40, |rng| {
+        let kg = random_kg(rng);
+        let Some(q) = ground(&kg, rng, Pattern::In2) else { return Ok(()) };
+        let ans = answers(&kg, &q.tree).map_err(|e| e.to_string())?;
+        let QueryTree::Intersect(branches) = &q.tree else {
+            return Err("2in must lower to an intersection".into());
+        };
+        let neg = branches
+            .iter()
+            .find_map(|b| match b {
+                QueryTree::Negate(inner) => Some(inner.as_ref()),
+                _ => None,
+            })
+            .ok_or("missing negated branch")?;
+        let neg_ans = answers(&kg, neg).map_err(|e| e.to_string())?;
+        for x in &ans {
+            if neg_ans.binary_search(x).is_ok() {
+                return Err(format!("{x} survives its own negation"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn grounded_answer_is_always_in_answer_set() {
+    prop_check("sampler soundness across patterns/graphs", 40, |rng| {
+        let kg = random_kg(rng);
+        let p = *rng.choice(&Pattern::ALL);
+        let Some(q) = ground(&kg, rng, p) else { return Ok(()) };
+        let ans = answers(&kg, &q.tree).map_err(|e| e.to_string())?;
+        if ans.binary_search(&q.answer).is_err() {
+            return Err(format!("{p}: grounded answer not in A_q"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_equals_query_level_equals_singleton_loss() {
+    // all three batching granularities must compute the same numbers
+    prop_check("scheduling-policy numerics invariance", 15, |rng| {
+        let rt = MockRuntime::new();
+        let state =
+            ModelState::init(rt.manifest(), "mock", 64, 8, None, 3).unwrap();
+        let kg = KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+        let n_q = gen::size(rng, 2, 12);
+        let mut dag_all = QueryDag::default();
+        let mut per_query_dags = Vec::new();
+        for _ in 0..n_q {
+            let p = *rng.choice(&[Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Up]);
+            let Some(q) = ground(&kg, rng, p) else { continue };
+            let remap = |e: u32| e % 64;
+            let tree = remap_tree(&q.tree, 64, 8);
+            dag_all
+                .add_query(&tree, remap(q.answer), vec![0, 1], p.name(), true)
+                .unwrap();
+            let mut d1 = QueryDag::default();
+            d1.add_query(&tree, remap(q.answer), vec![0, 1], p.name(), true).unwrap();
+            d1.add_gradient_nodes();
+            per_query_dags.push(d1);
+        }
+        if per_query_dags.is_empty() {
+            return Ok(());
+        }
+        dag_all.add_gradient_nodes();
+        let engine = Engine::new(&rt, EngineConfig::default());
+        let mut g_all = Grads::default();
+        engine.run(&dag_all, &state, &mut g_all).map_err(|e| e.to_string())?;
+        let mut g_sep = Grads::default();
+        for d in &per_query_dags {
+            engine.run(d, &state, &mut g_sep).map_err(|e| e.to_string())?;
+        }
+        if (g_all.loss - g_sep.loss).abs() > 1e-4 * (1.0 + g_sep.loss.abs()) {
+            return Err(format!("loss mismatch {} vs {}", g_all.loss, g_sep.loss));
+        }
+        for (k, v) in &g_all.ent {
+            let w = g_sep.ent.get(k).ok_or(format!("missing ent grad {k}"))?;
+            for (a, b) in v.iter().zip(w) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("ent {k} grad {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn remap_tree(tree: &QueryTree, ne: u32, nr: u32) -> QueryTree {
+    match tree {
+        QueryTree::Anchor(e) => QueryTree::Anchor(e % ne),
+        QueryTree::Project(c, r) => {
+            QueryTree::Project(Box::new(remap_tree(c, ne, nr)), r % nr)
+        }
+        QueryTree::Intersect(cs) => {
+            QueryTree::Intersect(cs.iter().map(|c| remap_tree(c, ne, nr)).collect())
+        }
+        QueryTree::Union(cs) => {
+            QueryTree::Union(cs.iter().map(|c| remap_tree(c, ne, nr)).collect())
+        }
+        QueryTree::Negate(c) => QueryTree::Negate(Box::new(remap_tree(c, ne, nr))),
+    }
+}
+
+#[test]
+fn adjacency_matches_bruteforce() {
+    prop_check("CSR neighbors == brute-force scan", 40, |rng| {
+        let kg = random_kg(rng);
+        for _ in 0..20 {
+            let h = rng.below(kg.n_entities) as u32;
+            let r = rng.below(kg.n_relations) as u32;
+            let mut want: Vec<u32> = kg
+                .train
+                .iter()
+                .filter(|t| t.h == h && t.r == r)
+                .map(|t| t.t)
+                .collect();
+            want.sort_unstable();
+            let got: Vec<u32> = kg.tails(h, r).collect();
+            if got != want {
+                return Err(format!("tails({h},{r}): {got:?} != {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_worker_gradients_match_single_worker_totals() {
+    // merging shard gradients must equal running the shards in one engine
+    prop_check("all-reduce equivalence", 10, |rng| {
+        let rt = MockRuntime::new();
+        let state = ModelState::init(rt.manifest(), "mock", 32, 4, None, 1).unwrap();
+        let kg = KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+        let n = gen::size(rng, 2, 8);
+        let mut queries = Vec::new();
+        for _ in 0..n {
+            if let Some(q) = ground(&kg, rng, Pattern::P1) {
+                queries.push((remap_tree(&q.tree, 32, 4), q.answer % 32));
+            }
+        }
+        if queries.len() < 2 {
+            return Ok(());
+        }
+        let engine = Engine::new(&rt, EngineConfig::default());
+        // "two workers": split in half, merge grads
+        let mut merged = Grads::default();
+        for half in queries.chunks(queries.len().div_ceil(2)) {
+            let mut dag = QueryDag::default();
+            for (t, a) in half {
+                dag.add_query(t, *a, vec![0, 1], "1p", true).unwrap();
+            }
+            dag.add_gradient_nodes();
+            engine.run(&dag, &state, &mut merged).map_err(|e| e.to_string())?;
+        }
+        // "one worker": all at once
+        let mut dag = QueryDag::default();
+        for (t, a) in &queries {
+            dag.add_query(t, *a, vec![0, 1], "1p", true).unwrap();
+        }
+        dag.add_gradient_nodes();
+        let mut single = Grads::default();
+        engine.run(&dag, &state, &mut single).map_err(|e| e.to_string())?;
+
+        if (merged.loss - single.loss).abs() > 1e-4 {
+            return Err(format!("loss {} vs {}", merged.loss, single.loss));
+        }
+        for (k, v) in &single.ent {
+            let w = merged.ent.get(k).ok_or(format!("missing {k}"))?;
+            for (a, b) in v.iter().zip(w) {
+                if (a - b).abs() > 1e-4 {
+                    return Err(format!("grad {k}: {a} vs {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_degenerate_dags_are_handled() {
+    let rt = MockRuntime::new();
+    let state = ModelState::init(rt.manifest(), "mock", 8, 2, None, 1).unwrap();
+    let engine = Engine::new(&rt, EngineConfig::default());
+    // empty DAG: nothing to do, no panic
+    let dag = QueryDag::default();
+    let mut grads = Grads::default();
+    let stats = engine.run(&dag, &state, &mut grads).unwrap();
+    assert_eq!(stats.operators, 0);
+    // eval-only DAG (no score node)
+    let mut dag = QueryDag::default();
+    let tree = QueryTree::instantiate(Pattern::P1, &[1], &[0]).unwrap();
+    let root = dag.add_query_eval(&tree, true).unwrap();
+    let (_, outs) = engine
+        .run_with_outputs(&dag, &state, &mut grads, &[root])
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+}
+
+#[test]
+fn fused_dag_pools_share_across_queries() {
+    // Arc-level check that cross-query fusion actually happens: N 1p
+    // queries -> ~1 embed launch, ~1 project launch, ~1 score launch.
+    let rt = MockRuntime::new();
+    let state = ModelState::init(rt.manifest(), "mock", 32, 4, None, 1).unwrap();
+    let mut dag = QueryDag::default();
+    for i in 0..8u32 {
+        let tree = QueryTree::instantiate(Pattern::P1, &[i % 32], &[i % 4]).unwrap();
+        dag.add_query(&tree, (i + 1) % 32, vec![0, 1], "1p", true).unwrap();
+    }
+    dag.add_gradient_nodes();
+    let engine = Engine::new(&rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    let stats = engine.run(&dag, &state, &mut grads).unwrap();
+    // 5 op types (embed, project, score, vjp_project, vjp_embed) and 8
+    // queries -> exactly 5 launches if fusion is perfect
+    assert_eq!(stats.executions, 5, "fusion should hit one launch per type");
+    assert_eq!(stats.operators, dag.len());
+}
+
+#[test]
+fn sampler_stream_is_arc_safe_under_shutdown_races() {
+    // failure injection: shutdown while producers are mid-grounding
+    for seed in 0..5 {
+        let kg: Arc<KgStore> =
+            Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap());
+        let s = ngdb_zoo::sampler::SamplerStream::spawn(
+            kg,
+            ngdb_zoo::sampler::SamplerConfig {
+                threads: 2,
+                queue_depth: 4,
+                seed,
+                ..Default::default()
+            },
+        );
+        let _ = s.recv_batch(2);
+        s.shutdown(); // must not deadlock or panic
+    }
+}
