@@ -1,44 +1,129 @@
-//! Microbenchmark: scheduler/pool overhead on the mock runtime (no XLA) —
-//! isolates L3 coordinator cost for the §Perf pass.
-use std::time::Instant;
+//! Microbenchmark: scheduler/pool overhead plus the gather/execute
+//! pipelining win, both on the mock runtime (no XLA).
+//!
+//! Part 1 isolates L3 coordinator cost (tiny mock dims, instant execute).
+//! Part 2 measures the double-buffered engine against the synchronous one
+//! on a slow-execute mock (wide `d`, artificial per-launch latency standing
+//! in for device compute), and checks the two engines agree to 1e-6 —
+//! they run the identical schedule, so they should agree bit-exactly.
+//!
+//! Env knobs: `NGDB_BENCH_QUERIES` (default 384), `NGDB_BENCH_DELAY_US`
+//! (default 300), `NGDB_BENCH_REPS` (default 5).
 
-use ngdb_zoo::exec::{Engine, EngineConfig, Grads};
-use ngdb_zoo::kg::KgSpec;
+use std::time::{Duration, Instant};
+
+use ngdb_zoo::exec::{Engine, EngineConfig, Grads, StepStats};
+use ngdb_zoo::kg::{KgSpec, KgStore};
 use ngdb_zoo::model::ModelState;
 use ngdb_zoo::query::{Pattern, QueryDag};
 use ngdb_zoo::runtime::{MockRuntime, Runtime};
 use ngdb_zoo::util::rng::Rng;
 
+fn knob(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_dag(kg: &KgStore, n_queries: usize, n_neg: usize, seed: u64) -> QueryDag {
+    let mut rng = Rng::new(seed);
+    let mut dag = QueryDag::default();
+    for _ in 0..n_queries {
+        let p = *rng.choice(&Pattern::ALL);
+        if let Some(q) = ngdb_zoo::sampler::ground(kg, &mut rng, p) {
+            let negs: Vec<u32> = (0..n_neg as u32).collect();
+            dag.add_query(&q.tree, q.answer, negs, p.name(), true).unwrap();
+        }
+    }
+    dag.add_gradient_nodes();
+    dag
+}
+
+fn timed_run(
+    rt: &MockRuntime,
+    dag: &QueryDag,
+    state: &ModelState,
+    cfg: &EngineConfig,
+    reps: usize,
+) -> (f64, StepStats, Grads) {
+    let engine = Engine::new(rt, cfg.clone());
+    // warmup (allocator, page faults)
+    let mut grads = Grads::default();
+    let mut stats = engine.run(dag, state, &mut grads).unwrap();
+    let t = Instant::now();
+    for _ in 0..reps {
+        let mut g = Grads::default();
+        stats = engine.run(dag, state, &mut g).unwrap();
+        grads = g;
+    }
+    (t.elapsed().as_secs_f64() / reps as f64, stats, grads)
+}
+
 fn main() {
+    // ---- part 1: coordinator-side overhead (instant execute) --------------
     let rt = MockRuntime::new();
     let kg = KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
     let state =
         ModelState::init(rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 1)
             .unwrap();
-    let mut rng = Rng::new(1);
-    let mut dag = QueryDag::default();
-    for _ in 0..256 {
-        let p = *rng.choice(&Pattern::ALL);
-        if let Some(q) = ngdb_zoo::sampler::ground(&kg, &mut rng, p) {
-            dag.add_query(&q.tree, q.answer, vec![0, 1], p.name(), true).unwrap();
-        }
-    }
-    dag.add_gradient_nodes();
-    let engine = Engine::new(&rt, EngineConfig::default());
-    // warmup
-    let mut grads = Grads::default();
-    engine.run(&dag, &state, &mut grads).unwrap();
-    let reps = 20;
-    let t = Instant::now();
-    for _ in 0..reps {
-        let mut grads = Grads::default();
-        engine.run(&dag, &state, &mut grads).unwrap();
-    }
-    let per = t.elapsed().as_secs_f64() / reps as f64;
+    let dag = build_dag(&kg, 256, rt.manifest().dims.n_neg, 1);
+    // pipeline off: this number isolates bare scheduler+coalesce cost, and
+    // with an instant execute the per-round spawn would only add noise
+    let part1_cfg = EngineConfig { pipeline: false, ..Default::default() };
+    let (per, _, _) = timed_run(&rt, &dag, &state, &part1_cfg, 20);
     println!(
         "scheduler+coalesce over {} nodes: {:.3} ms/dag ({:.0} ops/s coordinator-side)",
         dag.len(),
         per * 1e3,
         dag.len() as f64 / per
     );
+
+    // ---- part 2: pipelined vs synchronous on a slow-execute runtime -------
+    let n_queries = knob("NGDB_BENCH_QUERIES", 384) as usize;
+    let delay = Duration::from_micros(knob("NGDB_BENCH_DELAY_US", 300));
+    let reps = knob("NGDB_BENCH_REPS", 5) as usize;
+    let rt = MockRuntime::with_config(64, 4, &[16, 64, 256]).with_exec_delay(delay);
+    let state =
+        ModelState::init(rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 1)
+            .unwrap();
+    let dag = build_dag(&kg, n_queries, rt.manifest().dims.n_neg, 2);
+
+    let sync_cfg = EngineConfig { pipeline: false, ..Default::default() };
+    let (t_sync, s_sync, g_sync) = timed_run(&rt, &dag, &state, &sync_cfg, reps);
+    let (t_pipe, s_pipe, g_pipe) =
+        timed_run(&rt, &dag, &state, &EngineConfig::default(), reps);
+
+    // schedule-identity check: same launches, grads agree to 1e-6
+    assert_eq!(s_sync.executions, s_pipe.executions, "schedules must match");
+    assert!(
+        (g_sync.loss - g_pipe.loss).abs() < 1e-6,
+        "loss diverged: {} vs {}",
+        g_sync.loss,
+        g_pipe.loss
+    );
+    for (k, v) in &g_sync.ent {
+        for (a, b) in v.iter().zip(&g_pipe.ent[k]) {
+            assert!((a - b).abs() < 1e-6, "grad diverged on entity {k}: {a} vs {b}");
+        }
+    }
+
+    println!(
+        "\npipeline bench: {} nodes, {} launches, execute delay {:?}, {} reps",
+        dag.len(),
+        s_sync.executions,
+        delay,
+        reps
+    );
+    println!(
+        "  synchronous : {:>8.3} ms/dag (gather {:.3} ms + execute {:.3} ms)",
+        t_sync * 1e3,
+        s_sync.gather_secs * 1e3,
+        s_sync.execute_secs * 1e3
+    );
+    println!(
+        "  pipelined   : {:>8.3} ms/dag (overlap {:.3} ms, spec {} hit / {} miss)",
+        t_pipe * 1e3,
+        s_pipe.overlap_secs * 1e3,
+        s_pipe.spec_hits,
+        s_pipe.spec_misses
+    );
+    println!("  speedup     : {:>8.2}x (gradients agree to 1e-6)", t_sync / t_pipe);
 }

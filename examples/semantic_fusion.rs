@@ -44,7 +44,9 @@ fn main() -> anyhow::Result<()> {
         state.load_fusion(rt.manifest(), encoder, Some(&dir), 1)?;
 
         let t0 = std::time::Instant::now();
-        let source: Box<dyn SemanticSource> = match mode {
+        // `+ '_`: JointEncoder borrows the runtime, so the trait object
+        // cannot default to 'static
+        let source: Box<dyn SemanticSource + '_> = match mode {
             "joint" => Box::new(JointEncoder::new(&rt, encoder, Arc::clone(&desc), &dir)?),
             _ => Box::new(DecoupledCache::precompute(&rt, encoder, &desc, &dir)?),
         };

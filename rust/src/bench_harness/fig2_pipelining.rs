@@ -34,11 +34,15 @@ pub fn run(dataset: &str, model: &str) -> Result<()> {
         if base_qps == 0.0 {
             base_qps = r.qps;
         }
+        // top-level phases only: "execute/..." sub-buckets re-attribute time
+        // already counted under "execute"
+        let top_total: f64 =
+            r.phases.iter().filter(|(n, _)| !n.contains('/')).map(|(_, t)| t).sum();
         let sample_frac = r
             .phases
             .iter()
             .find(|(n, _)| n == "sample")
-            .map(|(_, t)| t / r.phases.iter().map(|(_, t)| t).sum::<f64>())
+            .map(|(_, t)| t / top_total.max(1e-12))
             .unwrap_or(0.0);
         rows.push(vec![
             label.to_string(),

@@ -27,7 +27,15 @@ use anyhow::Result;
 use crate::config::ExperimentConfig;
 use crate::kg::{KgSpec, KgStore};
 use crate::model::ModelState;
-use crate::runtime::PjrtRuntime;
+
+/// Concrete runtime the harness drives. The real artifact runtime needs the
+/// `pjrt` feature; the alias keeps every harness module (and all ten bench
+/// targets) compiling hermetically without it — [`BenchCtx::open`] then
+/// fails fast with rebuild instructions instead of failing to link.
+#[cfg(feature = "pjrt")]
+pub type BenchRuntime = crate::runtime::PjrtRuntime;
+#[cfg(not(feature = "pjrt"))]
+pub type BenchRuntime = crate::runtime::MockRuntime;
 
 /// Env-tunable bench knobs.
 pub fn knob(name: &str, default: f64) -> f64 {
@@ -44,15 +52,25 @@ pub fn scale(default: f64) -> f64 {
 
 /// Shared bench context.
 pub struct BenchCtx {
-    pub rt: PjrtRuntime,
+    pub rt: BenchRuntime,
     pub dir: String,
 }
 
 impl BenchCtx {
+    #[cfg(feature = "pjrt")]
     pub fn open() -> Result<BenchCtx> {
         let dir = std::env::var("NGDB_ARTIFACTS")
             .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
-        Ok(BenchCtx { rt: PjrtRuntime::open(&dir)?, dir })
+        Ok(BenchCtx { rt: crate::runtime::PjrtRuntime::open(&dir)?, dir })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn open() -> Result<BenchCtx> {
+        anyhow::bail!(
+            "this harness replays paper tables over real AOT artifacts; \
+             rebuild with `cargo bench --features pjrt` (after `make artifacts`). \
+             `cargo bench --bench micro_scheduler` runs without artifacts."
+        )
     }
 
     pub fn kg(&self, dataset: &str, s: f64) -> Result<Arc<KgStore>> {

@@ -45,7 +45,9 @@ pub fn run(datasets: &[&str], models: &[&str], encoders: &[&str]) -> Result<()> 
                     };
                     let mut state = ctx.state(model, &kg, 5)?;
                     state.load_fusion(ctx.rt.manifest(), encoder, Some(&ctx.dir), 5)?;
-                    let source: Box<dyn SemanticSource> = match mode {
+                    // `+ '_`: JointEncoder borrows the runtime, so the trait
+                    // object cannot default to 'static
+                    let source: Box<dyn SemanticSource + '_> = match mode {
                         "joint" => Box::new(JointEncoder::new(
                             &ctx.rt, encoder, Arc::clone(&desc), &ctx.dir)?),
                         _ => Box::new(DecoupledCache::precompute(

@@ -1,4 +1,4 @@
-//! The operator-level execution engine — Algorithm 1.
+//! The operator-level execution engine — Algorithm 1, pipelined.
 //!
 //! Given a fused multi-query [`QueryDag`] (with gradient nodes), the engine:
 //!
@@ -17,8 +17,37 @@
 //! 5. accumulates gradients: dense-param grads (already batch-summed inside
 //!    the VJP artifact), relation-row and entity-row grads (scatter-add),
 //!    and the loss from Score nodes.
+//!
+//! # Two-stage pipelining
+//!
+//! The hot loop is split into a *gather* stage (input coalescing + padding,
+//! pure host work reading the immutable output slab) and an *execute +
+//! scatter* stage (artifact invocation, then output scatter/bookkeeping).
+//! With [`EngineConfig::pipeline`] on (the default), the gather for round
+//! N+1 runs on a worker thread **overlapped** with `rt.execute` of round N —
+//! the I/O-stall pattern the paper's Fig. 2 targets.
+//!
+//! Because the Max-Fillness selection for round N+1 is recomputed after
+//! round N completes (newly-ready operators join the pools), the overlap is
+//! *speculative*: the engine predicts round N+1 from the current ready set
+//! (pools minus round N), and validates the prediction after round N's
+//! bookkeeping. On a mis-speculation (a newly-ready operator changed the
+//! argmax pool or extended the popped batch) the prefetched inputs are
+//! discarded and the gather reruns synchronously, so the executed schedule —
+//! and therefore every loss/gradient bit — is identical to the synchronous
+//! engine. Speculative gathers are always *safe*: pools hold only ready
+//! operators, whose operand tensors already exist in the slab and are
+//! refcount-pinned until their consumers execute.
+//!
+//! Cost model: each overlapped round pays one scoped-thread spawn+join
+//! (~tens of µs) to hide the gather, which wins whenever artifact execution
+//! dominates (the intended regime: real device artifacts, large buckets).
+//! Workloads with near-instant executes should set
+//! [`EngineConfig::pipeline`] to `false`; a persistent worker thread that
+//! amortizes the spawn is a ROADMAP open item.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -74,6 +103,20 @@ pub struct StepStats {
     pub per_pattern_loss: Vec<(&'static str, f64, usize)>,
     /// observed fillness ρ(τ*) per scheduling round
     pub fillness: Vec<f64>,
+    /// wall-clock spent coalescing inputs (gather + pad), including
+    /// speculative gathers that were later discarded
+    pub gather_secs: f64,
+    /// wall-clock spent inside `rt.execute`
+    pub execute_secs: f64,
+    /// portion of gather time hidden under artifact execution — per round
+    /// with an in-flight prefetch, `min(gather, execute)`
+    pub overlap_secs: f64,
+    /// speculative prefetches whose predicted (pool, batch) matched the
+    /// actual Max-Fillness selection and were consumed
+    pub spec_hits: usize,
+    /// speculative prefetches discarded because newly-ready operators
+    /// changed the selection (the engine re-gathered synchronously)
+    pub spec_misses: usize,
 }
 
 /// Per-node stored output.
@@ -95,6 +138,17 @@ impl NodeOut {
     }
 }
 
+/// One scheduling round with its inputs fully coalesced — the unit handed
+/// from the gather stage to the execute stage.
+struct PreparedBatch {
+    op: OpKind,
+    batch: Vec<u32>,
+    artifact: String,
+    /// bucket rows minus real rows (padding waste, accounted at scatter)
+    padded: usize,
+    inputs: Vec<HostTensor>,
+}
+
 /// Engine configuration knobs.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -104,11 +158,14 @@ pub struct EngineConfig {
     pub nan_check: bool,
     /// force per-operator batch size 1 (the SQE-like naive baseline)
     pub force_singleton: bool,
+    /// overlap the next round's gather with the current round's execute
+    /// (speculative double-buffering; numerics are schedule-identical)
+    pub pipeline: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { b_max: 0, nan_check: false, force_singleton: false }
+        EngineConfig { b_max: 0, nan_check: false, force_singleton: false, pipeline: true }
     }
 }
 
@@ -135,16 +192,27 @@ impl<'a> Engine<'a> {
         Engine { rt, cfg, semantic: Some(source) }
     }
 
+    /// Maximum efficient batch size for one operator type: the manifest's
+    /// per-op cap when present (`dims.b_max_by_op`), else the global
+    /// `dims.b_max`, optionally tightened by the config override.
+    ///
+    /// Called per pool on every Max-Fillness selection, so the common
+    /// no-override case must stay a plain field read — `op.name()` allocates
+    /// and is only paid when a per-op cap map is actually configured.
     fn b_max(&self, op: OpKind) -> usize {
         if self.cfg.force_singleton {
             return 1;
         }
-        let m = self.rt.manifest();
-        let _ = op;
-        if self.cfg.b_max > 0 {
-            self.cfg.b_max.min(m.dims.b_max)
+        let dims = &self.rt.manifest().dims;
+        let cap = if dims.b_max_by_op.is_empty() {
+            dims.b_max
         } else {
-            m.dims.b_max
+            dims.b_max_for(&op.name())
+        };
+        if self.cfg.b_max > 0 {
+            self.cfg.b_max.min(cap)
+        } else {
+            cap
         }
     }
 
@@ -195,33 +263,86 @@ impl<'a> Engine<'a> {
         let mut storage: Vec<Option<NodeOut>> = (0..n).map(|_| None).collect();
         let mut live_bytes = 0usize;
         let mut pending = n;
-        let mut ready: Vec<u32> =
-            (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut ready: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
         let mut pools = OperatorPools::default();
+        // Algorithm 1 line 6: distribute the ready set into pools.
+        for node in ready.drain(..) {
+            pools.push(dag.nodes[node as usize].op, node);
+        }
 
-        while pending > 0 {
-            // Algorithm 1 line 6: distribute the ready set into pools.
-            for node in ready.drain(..) {
-                pools.push(dag.nodes[node as usize].op, node);
-            }
-            // line 8: Max-Fillness selection
-            let Some(op) = pools.select_max_fillness(|op| self.b_max(op)) else {
-                bail!("scheduler stalled with {pending} pending operators (cycle?)");
+        // Speculation is disabled under semantic fusion: a speculative Embed
+        // gather calls `SemanticSource::gather`, which (in joint mode) runs
+        // encoder artifacts on the same runtime — concurrent `rt.execute`
+        // calls are an assumption no backend currently guarantees, and a
+        // mis-speculation would silently re-run the encoder forward.
+        let pipeline = self.cfg.pipeline && self.semantic.is_none();
+
+        // First round: selection + synchronous gather (nothing to overlap).
+        let mut current: Option<PreparedBatch> =
+            match self.next_round(&mut pools, &mut stats, pending)? {
+                Some((op, batch)) => {
+                    Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
+                }
+                None => None,
             };
-            stats.fillness.push(pools.fillness(op, self.b_max(op)));
-            let batch = pools.pop_batch(op, self.b_max(op));
-            debug_assert!(!batch.is_empty());
 
-            // line 10: one fused artifact invocation for the whole batch
-            self.execute_batch(
-                dag, state, op, &batch, &mut storage, &mut live_bytes, grads, &mut stats,
+        while let Some(prep) = current.take() {
+            // -- speculate round N+1 from the current ready set (pools minus
+            //    this round); newly-ready operators from round N are not in
+            //    the pools yet, which is exactly what makes this a guess.
+            let spec: Option<(OpKind, Vec<u32>)> = if pipeline {
+                pools
+                    .select_max_fillness(|op| self.b_max(op))
+                    .map(|op| (op, pools.peek_batch(op, self.b_max(op))))
+            } else {
+                None
+            };
+
+            // -- execute round N; overlap the speculative gather on a worker
+            let mut prefetched: Option<Result<PreparedBatch>> = None;
+            let exec_result = match spec {
+                Some((sop, sbatch)) => {
+                    let storage_ref: &[Option<NodeOut>] = &storage;
+                    let (out, pf, exec_dt, gather_dt) = std::thread::scope(|s| {
+                        let worker = s.spawn(move || {
+                            let t0 = Instant::now();
+                            let r = self.gather_batch(dag, state, sop, sbatch, storage_ref);
+                            (r, t0.elapsed().as_secs_f64())
+                        });
+                        let t0 = Instant::now();
+                        let out = self.rt.execute(&prep.artifact, &prep.inputs);
+                        let exec_dt = t0.elapsed().as_secs_f64();
+                        let (pf, gather_dt) =
+                            worker.join().expect("speculative gather thread panicked");
+                        (out, pf, exec_dt, gather_dt)
+                    });
+                    stats.execute_secs += exec_dt;
+                    stats.gather_secs += gather_dt;
+                    stats.overlap_secs += exec_dt.min(gather_dt);
+                    prefetched = Some(pf);
+                    out
+                }
+                None => {
+                    let t0 = Instant::now();
+                    let out = self.rt.execute(&prep.artifact, &prep.inputs);
+                    stats.execute_secs += t0.elapsed().as_secs_f64();
+                    out
+                }
+            };
+            let outputs =
+                exec_result.with_context(|| format!("executing pool {}", prep.op.name()))?;
+            stats.executions += 1;
+
+            // -- scatter outputs, account padding, reclaim eagerly
+            self.scatter_batch(
+                dag, state, &prep, &outputs, &mut storage, &mut live_bytes, grads, &mut stats,
                 &mut pat_loss,
             )
-            .with_context(|| format!("executing pool {}", op.name()))?;
+            .with_context(|| format!("scattering pool {}", prep.op.name()))?;
             stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
 
             // lines 12-18: bookkeeping, eager reclamation, ready updates
-            for &o in &batch {
+            for &o in &prep.batch {
                 pending -= 1;
                 stats.operators += 1;
                 for &p in &deps[o as usize] {
@@ -239,12 +360,31 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
+            for node in ready.drain(..) {
+                pools.push(dag.nodes[node as usize].op, node);
+            }
+
+            // -- actual Max-Fillness selection; validate the speculation
+            current = match self.next_round(&mut pools, &mut stats, pending)? {
+                None => None,
+                Some((op, batch)) => match prefetched {
+                    Some(Ok(p)) if p.op == op && p.batch == batch => {
+                        stats.spec_hits += 1;
+                        Some(p)
+                    }
+                    other => {
+                        if other.is_some() {
+                            stats.spec_misses += 1;
+                        }
+                        Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
+                    }
+                },
+            };
         }
 
         grads.loss += stats.loss;
         grads.n_queries += stats.n_queries;
-        stats.per_pattern_loss =
-            pat_loss.into_iter().map(|(k, (l, c))| (k, l, c)).collect();
+        stats.per_pattern_loss = pat_loss.into_iter().map(|(k, (l, c))| (k, l, c)).collect();
         let outputs = wanted
             .iter()
             .map(|&w| match &storage[w as usize] {
@@ -255,29 +395,68 @@ impl<'a> Engine<'a> {
         Ok((stats, outputs))
     }
 
-    /// Build inputs, invoke the artifact, scatter outputs.
-    #[allow(clippy::too_many_arguments)]
-    fn execute_batch(
+    /// Max-Fillness selection of the next round (Algorithm 1 lines 8-9).
+    /// `None` when every operator has executed; an error when operators are
+    /// pending but none is ready (dependency cycle).
+    fn next_round(
+        &self,
+        pools: &mut OperatorPools,
+        stats: &mut StepStats,
+        pending: usize,
+    ) -> Result<Option<(OpKind, Vec<u32>)>> {
+        if pending == 0 {
+            return Ok(None);
+        }
+        let Some(op) = pools.select_max_fillness(|op| self.b_max(op)) else {
+            bail!("scheduler stalled with {pending} pending operators (cycle?)");
+        };
+        stats.fillness.push(pools.fillness(op, self.b_max(op)));
+        let batch = pools.pop_batch(op, self.b_max(op));
+        debug_assert!(!batch.is_empty());
+        Ok(Some((op, batch)))
+    }
+
+    /// Synchronous gather with wall-clock accounting.
+    fn gather_timed(
         &self,
         dag: &QueryDag,
         state: &ModelState,
         op: OpKind,
-        batch: &[u32],
-        storage: &mut [Option<NodeOut>],
-        live_bytes: &mut usize,
-        grads: &mut Grads,
+        batch: Vec<u32>,
+        storage: &[Option<NodeOut>],
         stats: &mut StepStats,
-        pat_loss: &mut HashMap<&'static str, (f64, usize)>,
-    ) -> Result<()> {
+    ) -> Result<PreparedBatch> {
+        let t0 = Instant::now();
+        let prep = self
+            .gather_batch(dag, state, op, batch, storage)
+            .with_context(|| format!("gathering pool {}", op.name()))?;
+        stats.gather_secs += t0.elapsed().as_secs_f64();
+        Ok(prep)
+    }
+
+    /// Stage 1: coalesce one round's operand rows into padded input blocks.
+    /// Without a semantic source this reads only immutable state and is safe
+    /// to run concurrently with stage 2; with one attached it may execute
+    /// encoder artifacts, so the run loop never overlaps it (see `pipeline`
+    /// in [`Engine::run_with_outputs`]).
+    fn gather_batch(
+        &self,
+        dag: &QueryDag,
+        state: &ModelState,
+        op: OpKind,
+        batch: Vec<u32>,
+        storage: &[Option<NodeOut>],
+    ) -> Result<PreparedBatch> {
         let m = self.rt.manifest();
         let dims = &m.dims;
-        let b = if self.cfg.force_singleton { dims.buckets[0].min(dims.bucket_for(1)) } else { dims.bucket_for(batch.len()) };
-        let bucket = b;
-        stats.padded_rows += bucket - batch.len();
+        let bucket = if self.cfg.force_singleton {
+            dims.buckets[0].min(dims.bucket_for(1))
+        } else {
+            dims.bucket_for(batch.len())
+        };
         let (mut op_name, direction) = artifact_op_name(op);
         // semantic fusion: EmbedE (fwd + vjp) swaps to the fused artifact
-        let is_embed =
-            matches!(op, OpKind::Embed | OpKind::Vjp(crate::query::VjpOf::Embed));
+        let is_embed = matches!(op, OpKind::Embed | OpKind::Vjp(crate::query::VjpOf::Embed));
         if is_embed {
             if let Some(sem) = self.semantic {
                 op_name = format!("fused-{}", sem.encoder());
@@ -417,10 +596,8 @@ impl<'a> Engine<'a> {
                 };
                 match mirror_op {
                     OpKind::Embed => {
-                        let ids: Vec<u32> = batch
-                            .iter()
-                            .map(|&i| dag.nodes[i as usize].payload)
-                            .collect();
+                        let ids: Vec<u32> =
+                            batch.iter().map(|&i| dag.nodes[i as usize].payload).collect();
                         inputs.push(state.entities.gather(&ids, bucket));
                         if let Some(sem) = self.semantic {
                             inputs.push(sem.gather(&ids, bucket)?);
@@ -430,8 +607,7 @@ impl<'a> Engine<'a> {
                         let mut x = HostTensor::zeros(vec![bucket, rd]);
                         let mut rels = Vec::with_capacity(batch.len());
                         for (row, &i) in batch.iter().enumerate() {
-                            let mirror =
-                                &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            let mirror = &dag.nodes[dag.nodes[i as usize].mirror as usize];
                             x.row_mut(row)
                                 .copy_from_slice(&repr_of(storage, mirror.inputs[0])?);
                             rels.push(mirror.payload);
@@ -443,8 +619,7 @@ impl<'a> Engine<'a> {
                         let k = k as usize;
                         let mut xs = HostTensor::zeros(vec![bucket, k, rd]);
                         for (row, &i) in batch.iter().enumerate() {
-                            let mirror =
-                                &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            let mirror = &dag.nodes[dag.nodes[i as usize].mirror as usize];
                             for (j, &inp) in mirror.inputs.iter().enumerate() {
                                 let src = repr_of(storage, inp)?;
                                 let dst = row * k * rd + j * rd;
@@ -456,8 +631,7 @@ impl<'a> Engine<'a> {
                     OpKind::Negate => {
                         let mut x = HostTensor::zeros(vec![bucket, rd]);
                         for (row, &i) in batch.iter().enumerate() {
-                            let mirror =
-                                &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            let mirror = &dag.nodes[dag.nodes[i as usize].mirror as usize];
                             x.row_mut(row)
                                 .copy_from_slice(&repr_of(storage, mirror.inputs[0])?);
                         }
@@ -474,26 +648,44 @@ impl<'a> Engine<'a> {
             }
         }
 
-        // --- execute --------------------------------------------------------
-        let outputs = self.rt.execute(&artifact, &inputs)?;
-        stats.executions += 1;
+        let padded = bucket - batch.len();
+        Ok(PreparedBatch { op, batch, artifact, padded, inputs })
+    }
+
+    /// Stage 2 (post-execute): scatter artifact outputs into the slab and
+    /// the gradient accumulators.
+    #[allow(clippy::too_many_arguments)]
+    fn scatter_batch(
+        &self,
+        dag: &QueryDag,
+        state: &ModelState,
+        prep: &PreparedBatch,
+        outputs: &[HostTensor],
+        storage: &mut [Option<NodeOut>],
+        live_bytes: &mut usize,
+        grads: &mut Grads,
+        stats: &mut StepStats,
+        pat_loss: &mut HashMap<&'static str, (f64, usize)>,
+    ) -> Result<()> {
+        let m = self.rt.manifest();
+        let meta = m.artifact(&prep.artifact)?;
         if self.cfg.nan_check {
             for (o, om) in outputs.iter().zip(&meta.outputs) {
                 if !o.is_finite() {
-                    bail!("{artifact}: output {} contains NaN/Inf", om.name);
+                    bail!("{}: output {} contains NaN/Inf", prep.artifact, om.name);
                 }
             }
         }
+        stats.padded_rows += prep.padded;
+        let rd = state.repr_dim;
+        let batch = &prep.batch;
 
-        // --- scatter outputs --------------------------------------------------
-        let store = |storage: &mut [Option<NodeOut>],
-                         live: &mut usize,
-                         id: u32,
-                         out: NodeOut| {
-            *live += out.bytes();
-            storage[id as usize] = Some(out);
-        };
-        match op {
+        let store =
+            |storage: &mut [Option<NodeOut>], live: &mut usize, id: u32, out: NodeOut| {
+                *live += out.bytes();
+                storage[id as usize] = Some(out);
+            };
+        match prep.op {
             OpKind::Embed | OpKind::Project | OpKind::Intersect(_) | OpKind::Union(_)
             | OpKind::Negate => {
                 let out = &outputs[0];
@@ -505,7 +697,7 @@ impl<'a> Engine<'a> {
                 let loss = outputs[0].data[0] as f64;
                 stats.loss += loss;
                 let (g_q, g_pos, g_neg) = (&outputs[1], &outputs[2], &outputs[3]);
-                let n_neg = dims.n_neg;
+                let n_neg = m.dims.n_neg;
                 let ed = state.ent_dim;
                 for (row, &i) in batch.iter().enumerate() {
                     let slot = &dag.queries[dag.nodes[i as usize].payload as usize];
@@ -633,6 +825,34 @@ mod tests {
         (stats, grads)
     }
 
+    fn grads_equal(a: &Grads, b: &Grads, tol: f32) -> std::result::Result<(), String> {
+        if (a.loss - b.loss).abs() > tol as f64 {
+            return Err(format!("loss {} vs {}", a.loss, b.loss));
+        }
+        for (map_a, map_b, tag) in [(&a.ent, &b.ent, "ent"), (&a.rel, &b.rel, "rel")] {
+            if map_a.len() != map_b.len() {
+                return Err(format!("{tag} key count {} vs {}", map_a.len(), map_b.len()));
+            }
+            for (k, v) in map_a {
+                let w = map_b.get(k).ok_or_else(|| format!("{tag} missing key {k}"))?;
+                for (x, y) in v.iter().zip(w) {
+                    if (x - y).abs() > tol {
+                        return Err(format!("{tag} {k}: {x} vs {y}"));
+                    }
+                }
+            }
+        }
+        for (k, v) in &a.dense {
+            let w = b.dense.get(k).ok_or_else(|| format!("dense missing key {k}"))?;
+            for (x, y) in v.iter().zip(w) {
+                if (x - y).abs() > tol {
+                    return Err(format!("dense {k}: {x} vs {y}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
     #[test]
     fn one_p1_query_analytic_gradients() {
         // mock semantics: q = e[anchor] + r[rel]; loss = q · e[pos]
@@ -743,6 +963,29 @@ mod tests {
         }
     }
 
+    /// Random training DAG over the toy graph, remapped into the mock tables.
+    fn random_dag(rng: &mut Rng, st: &ModelState, max_q: usize) -> Option<QueryDag> {
+        let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+        let n_q = gen::size(rng, 1, max_q);
+        let mut trees = Vec::new();
+        for _ in 0..n_q {
+            let p = *rng.choice(&Pattern::ALL);
+            if let Some(g) = crate::sampler::ground(&kg, rng, p) {
+                trees.push((
+                    p,
+                    remap(&g.tree, st.entities.rows as u32, st.relations.rows as u32),
+                    g.answer % st.entities.rows as u32,
+                ));
+            }
+        }
+        if trees.is_empty() {
+            return None;
+        }
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> =
+            trees.iter().map(|(p, t, a)| (*p, t, *a, vec![0u32, 1])).collect();
+        Some(train_dag(&refs))
+    }
+
     #[test]
     fn eval_dag_returns_root_reprs() {
         let rt = MockRuntime::new();
@@ -794,27 +1037,7 @@ mod tests {
         prop_check("engine invariants on random query mixtures", 30, |rng| {
             let rt = MockRuntime::new();
             let st = state(&rt);
-            let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
-            let n_q = gen::size(rng, 1, 24);
-            let mut trees = Vec::new();
-            for _ in 0..n_q {
-                let p = *rng.choice(&Pattern::ALL);
-                if let Some(g) = crate::sampler::ground(&kg, rng, p) {
-                    trees.push((
-                        p,
-                        remap(&g.tree, st.entities.rows as u32, st.relations.rows as u32),
-                        g.answer % st.entities.rows as u32,
-                    ));
-                }
-            }
-            if trees.is_empty() {
-                return Ok(());
-            }
-            let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
-                .iter()
-                .map(|(p, t, a)| (*p, t, *a, vec![0u32, 1]))
-                .collect();
-            let dag = train_dag(&refs);
+            let Some(dag) = random_dag(rng, &st, 24) else { return Ok(()) };
             let engine = Engine::new(&rt, EngineConfig { nan_check: true, ..Default::default() });
             let mut grads = Grads::default();
             let stats = engine
@@ -833,8 +1056,148 @@ mod tests {
             if stats.executions > stats.operators {
                 return Err("more launches than operators".into());
             }
+            if stats.spec_hits + stats.spec_misses >= stats.executions {
+                return Err(format!(
+                    "speculation bookkeeping broken: {} hits + {} misses vs {} rounds",
+                    stats.spec_hits, stats.spec_misses, stats.executions
+                ));
+            }
+
+            // The pipelined schedule must be indistinguishable from the
+            // synchronous one: same rounds, same fillness trace, and
+            // bit-identical loss + gradients.
+            let sync = Engine::new(&rt, EngineConfig { pipeline: false, ..Default::default() });
+            let mut g_sync = Grads::default();
+            let s_sync = sync
+                .run(&dag, &st, &mut g_sync)
+                .map_err(|e| format!("sync engine failed: {e:#}"))?;
+            if stats.executions != s_sync.executions {
+                return Err(format!(
+                    "round counts diverge: pipelined {} vs sync {}",
+                    stats.executions, s_sync.executions
+                ));
+            }
+            if stats.fillness != s_sync.fillness {
+                return Err("fillness traces diverge".into());
+            }
+            if stats.loss.to_bits() != s_sync.loss.to_bits() {
+                return Err(format!(
+                    "loss not bit-identical: {} vs {}",
+                    stats.loss, s_sync.loss
+                ));
+            }
+            grads_equal(&grads, &g_sync, 0.0)?;
             Ok(())
         });
+    }
+
+    #[test]
+    fn mis_speculated_prefetch_falls_back_correctly() {
+        // 10 independent 1p queries with B_max = 8: round 1 pops 8 embeds and
+        // speculates on the 2 leftovers, but completing round 1 readies 8
+        // projects whose pool out-fills the leftover embeds — a guaranteed
+        // mis-speculation the engine must absorb without changing a bit.
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let trees: Vec<QueryTree> = (0..10)
+            .map(|i| QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P1, t, 3u32, vec![0u32, 1]))
+            .collect();
+        let dag = train_dag(&refs);
+        let (s_pipe, g_pipe) = run(&rt, &dag, &st, EngineConfig::default());
+        assert!(
+            s_pipe.spec_misses >= 1,
+            "expected at least one mis-speculation, stats: hits={} misses={}",
+            s_pipe.spec_hits,
+            s_pipe.spec_misses
+        );
+        let (s_sync, g_sync) =
+            run(&rt, &dag, &st, EngineConfig { pipeline: false, ..Default::default() });
+        assert_eq!(s_pipe.executions, s_sync.executions);
+        assert_eq!(s_pipe.loss.to_bits(), s_sync.loss.to_bits());
+        grads_equal(&g_pipe, &g_sync, 0.0).unwrap();
+    }
+
+    #[test]
+    fn speculative_prefetch_hits_on_stable_pools() {
+        // With B_max forced to 1, a deep embed pool drains one node per
+        // round while keeping the argmax stable — consecutive rounds come
+        // from the same pool, so speculation must hit.
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let trees: Vec<QueryTree> = (0..6)
+            .map(|i| QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P1, t, 3u32, vec![0u32, 1]))
+            .collect();
+        let dag = train_dag(&refs);
+        let (s_pipe, g_pipe) = run(&rt, &dag, &st, EngineConfig { b_max: 1, ..Default::default() });
+        assert!(
+            s_pipe.spec_hits >= 1,
+            "expected speculative hits, stats: hits={} misses={}",
+            s_pipe.spec_hits,
+            s_pipe.spec_misses
+        );
+        let (_, g_sync) = run(
+            &rt,
+            &dag,
+            &st,
+            EngineConfig { b_max: 1, pipeline: false, ..Default::default() },
+        );
+        grads_equal(&g_pipe, &g_sync, 0.0).unwrap();
+    }
+
+    #[test]
+    fn pipeline_stats_account_gather_and_execute() {
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let trees: Vec<QueryTree> = (0..12)
+            .map(|i| QueryTree::instantiate(Pattern::P2, &[i % 12], &[i % 6, (i + 1) % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P2, t, 3u32, vec![0u32, 1]))
+            .collect();
+        let dag = train_dag(&refs);
+        let (stats, _) = run(&rt, &dag, &st, EngineConfig::default());
+        assert!(stats.gather_secs > 0.0, "gather time must be accounted");
+        assert!(stats.execute_secs > 0.0, "execute time must be accounted");
+        assert!(stats.overlap_secs >= 0.0);
+        // overlap is bounded by both stage totals
+        assert!(stats.overlap_secs <= stats.execute_secs + 1e-9);
+        assert!(stats.overlap_secs <= stats.gather_secs + 1e-9);
+    }
+
+    #[test]
+    fn per_op_b_max_caps_batches_through_the_manifest() {
+        // An embed-specific cap of 2 must split 8 ready embeds into 4
+        // launches of the b=2 artifact without touching other pools.
+        let mut rt = MockRuntime::new();
+        rt.set_b_max_for("embed", 2);
+        let st = state(&rt);
+        let trees: Vec<QueryTree> = (0..8)
+            .map(|i| QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P1, t, 3u32, vec![0u32, 1]))
+            .collect();
+        let dag = train_dag(&refs);
+        let (_, g_capped) = run(&rt, &dag, &st, EngineConfig::default());
+        assert_eq!(rt.calls_of("mock_embed_fwd_b2"), 4, "8 embeds under a cap of 2");
+        assert_eq!(rt.calls_of("mock_embed_fwd_b8"), 0);
+        // projects keep the global B_max of 8
+        assert_eq!(rt.calls_of("mock_project_fwd_b8"), 1);
+
+        // numerics are unchanged by the cap
+        let rt_free = MockRuntime::new();
+        let (_, g_free) = run(&rt_free, &dag, &st, EngineConfig::default());
+        grads_equal(&g_capped, &g_free, 1e-6).unwrap();
     }
 
     #[test]

@@ -65,6 +65,16 @@ impl OperatorPools {
         best.map(|(_, _, op)| op)
     }
 
+    /// Non-destructive preview of [`OperatorPools::pop_batch`]: the first
+    /// `max` operators of pool `op`, in FIFO order. The pipelined engine
+    /// uses this to gather a speculative next round without committing the
+    /// scheduling decision.
+    pub fn peek_batch(&self, op: OpKind, max: usize) -> Vec<u32> {
+        self.pools
+            .get(&op)
+            .map_or_else(Vec::new, |q| q.iter().take(max).copied().collect())
+    }
+
     /// Pop up to `max` operators from pool `op` (Algorithm 1 line 9).
     pub fn pop_batch(&mut self, op: OpKind, max: usize) -> Vec<u32> {
         let Some(q) = self.pools.get_mut(&op) else {
@@ -133,5 +143,18 @@ mod tests {
     fn empty_selection_is_none() {
         let p = OperatorPools::default();
         assert_eq!(p.select_max_fillness(|_| 8), None);
+    }
+
+    #[test]
+    fn peek_batch_previews_without_draining() {
+        let mut p = OperatorPools::default();
+        for i in 0..5 {
+            p.push(OpKind::Embed, i);
+        }
+        assert_eq!(p.peek_batch(OpKind::Embed, 3), vec![0, 1, 2]);
+        assert_eq!(p.len(), 5, "peek must not drain");
+        assert_eq!(p.peek_batch(OpKind::Project, 3), Vec::<u32>::new());
+        // peek agrees with the pop that follows it
+        assert_eq!(p.peek_batch(OpKind::Embed, 8), p.pop_batch(OpKind::Embed, 8));
     }
 }

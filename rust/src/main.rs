@@ -6,19 +6,14 @@
 //! ngdb-zoo gen    --dataset=fb15k [--scale=0.05] # inspect a synthetic graph
 //! ngdb-zoo info                                  # artifact manifest summary
 //! ```
+//!
+//! `train` and `eval` execute AOT artifacts through PJRT and are gated
+//! behind the `pjrt` cargo feature; the default (hermetic) build still
+//! provides `gen` and `info` and reports a clear error for the rest.
 
-use std::sync::Arc;
-
-use anyhow::{bail, Result};
-use ngdb_zoo::config::{ExperimentConfig, Semantic};
-use ngdb_zoo::eval::rank;
-use ngdb_zoo::kg::{descriptions::Descriptions, KgSpec};
-use ngdb_zoo::model::ModelState;
-use ngdb_zoo::runtime::{PjrtRuntime, Runtime};
-use ngdb_zoo::semantic::{DecoupledCache, JointEncoder, SemanticSource};
-use ngdb_zoo::train::Trainer;
+use anyhow::Result;
+use ngdb_zoo::kg::KgSpec;
 use ngdb_zoo::util::cli::Args;
-use ngdb_zoo::util::stats::fmt_bytes;
 
 fn main() {
     if let Err(e) = run() {
@@ -52,114 +47,150 @@ USAGE:
   ngdb-zoo gen   --dataset=D [--scale=S]
   ngdb-zoo info  [--artifacts_dir=DIR]
 
-Run `make artifacts` first; benches live under `cargo bench`.";
+`train`/`eval` need a build with `--features pjrt` plus `make artifacts`;
+benches live under `cargo bench`.";
 
-fn open(cfg: &ExperimentConfig) -> Result<PjrtRuntime> {
-    PjrtRuntime::open(&cfg.artifacts_dir)
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "`train` executes AOT artifacts through PJRT; rebuild with \
+         `cargo build --release --features pjrt` (and run `make artifacts` first)"
+    )
 }
 
-fn build_kg(cfg: &ExperimentConfig) -> Result<Arc<ngdb_zoo::kg::KgStore>> {
-    let spec = KgSpec::preset(&cfg.dataset, cfg.scale)?;
-    eprintln!("generating {} ...", spec.name);
-    Ok(Arc::new(spec.generate()?))
+#[cfg(not(feature = "pjrt"))]
+fn cmd_eval(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "`eval` executes AOT artifacts through PJRT; rebuild with \
+         `cargo build --release --features pjrt` (and run `make artifacts` first)"
+    )
 }
 
-/// Build the semantic source for a config (precompute for decoupled).
-fn semantic_source<'a>(
-    rt: &'a PjrtRuntime,
-    cfg: &ExperimentConfig,
-    kg: &ngdb_zoo::kg::KgStore,
-) -> Result<Option<Box<dyn SemanticSource + 'a>>> {
-    let dims = rt.manifest().dims.clone();
-    Ok(match &cfg.semantic {
-        Semantic::Off => None,
-        Semantic::Joint { encoder } => {
-            let desc = Arc::new(Descriptions::build(kg, dims.tok_dim, cfg.seed));
-            Some(Box::new(JointEncoder::new(rt, encoder, desc, &cfg.artifacts_dir)?))
-        }
-        Semantic::Decoupled { encoder } => {
-            let desc = Descriptions::build(kg, dims.tok_dim, cfg.seed);
-            eprintln!("precomputing H_sem with {encoder} (offline phase)...");
-            Some(Box::new(DecoupledCache::precompute(rt, encoder, &desc, &cfg.artifacts_dir)?))
-        }
-    })
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_commands {
+    use std::sync::Arc;
 
-fn init_state(rt: &PjrtRuntime, cfg: &ExperimentConfig, kg: &ngdb_zoo::kg::KgStore)
-    -> Result<ModelState> {
-    let mut state = ModelState::init(rt.manifest(), &cfg.model, kg.n_entities,
-        kg.n_relations, Some(&cfg.artifacts_dir), cfg.seed)?;
-    if let Some(enc) = cfg.semantic.encoder() {
-        state.load_fusion(rt.manifest(), enc, Some(&cfg.artifacts_dir), cfg.seed)?;
+    use anyhow::{bail, Result};
+    use ngdb_zoo::config::{ExperimentConfig, Semantic};
+    use ngdb_zoo::eval::rank;
+    use ngdb_zoo::kg::{descriptions::Descriptions, KgSpec};
+    use ngdb_zoo::model::ModelState;
+    use ngdb_zoo::runtime::{PjrtRuntime, Runtime};
+    use ngdb_zoo::semantic::{DecoupledCache, JointEncoder, SemanticSource};
+    use ngdb_zoo::train::Trainer;
+    use ngdb_zoo::util::cli::Args;
+    use ngdb_zoo::util::stats::fmt_bytes;
+
+    fn open(cfg: &ExperimentConfig) -> Result<PjrtRuntime> {
+        PjrtRuntime::open(&cfg.artifacts_dir)
     }
-    Ok(state)
-}
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = ExperimentConfig::from_args(args)?;
-    let rt = open(&cfg)?;
-    let kg = build_kg(&cfg)?;
-    let mut state = init_state(&rt, &cfg, &kg)?;
-    println!("{}", kg.summary());
-    println!(
-        "model={} batching={} steps={} batch={} workers={}",
-        cfg.model, cfg.batching.name(), cfg.steps, cfg.batch_queries, cfg.workers
-    );
+    fn build_kg(cfg: &ExperimentConfig) -> Result<Arc<ngdb_zoo::kg::KgStore>> {
+        let spec = KgSpec::preset(&cfg.dataset, cfg.scale)?;
+        eprintln!("generating {} ...", spec.name);
+        Ok(Arc::new(spec.generate()?))
+    }
 
-    if cfg.workers > 1 {
-        let r = ngdb_zoo::train::train_multi_worker(&rt, Arc::clone(&kg), &cfg, &mut state)?;
+    /// Build the semantic source for a config (precompute for decoupled).
+    fn semantic_source<'a>(
+        rt: &'a PjrtRuntime,
+        cfg: &ExperimentConfig,
+        kg: &ngdb_zoo::kg::KgStore,
+    ) -> Result<Option<Box<dyn SemanticSource + 'a>>> {
+        let dims = rt.manifest().dims.clone();
+        Ok(match &cfg.semantic {
+            Semantic::Off => None,
+            Semantic::Joint { encoder } => {
+                let desc = Arc::new(Descriptions::build(kg, dims.tok_dim, cfg.seed));
+                Some(Box::new(JointEncoder::new(rt, encoder, desc, &cfg.artifacts_dir)?))
+            }
+            Semantic::Decoupled { encoder } => {
+                let desc = Descriptions::build(kg, dims.tok_dim, cfg.seed);
+                eprintln!("precomputing H_sem with {encoder} (offline phase)...");
+                Some(Box::new(DecoupledCache::precompute(rt, encoder, &desc, &cfg.artifacts_dir)?))
+            }
+        })
+    }
+
+    fn init_state(rt: &PjrtRuntime, cfg: &ExperimentConfig, kg: &ngdb_zoo::kg::KgStore)
+        -> Result<ModelState> {
+        let mut state = ModelState::init(rt.manifest(), &cfg.model, kg.n_entities,
+            kg.n_relations, Some(&cfg.artifacts_dir), cfg.seed)?;
+        if let Some(enc) = cfg.semantic.encoder() {
+            state.load_fusion(rt.manifest(), enc, Some(&cfg.artifacts_dir), cfg.seed)?;
+        }
+        Ok(state)
+    }
+
+    pub fn cmd_train(args: &Args) -> Result<()> {
+        let cfg = ExperimentConfig::from_args(args)?;
+        let rt = open(&cfg)?;
+        let kg = build_kg(&cfg)?;
+        let mut state = init_state(&rt, &cfg, &kg)?;
+        println!("{}", kg.summary());
         println!(
-            "done: {:.0} q/s over {} workers | allreduce {}/step | loss {:.4} -> {:.4}",
-            r.qps, r.workers, fmt_bytes(r.allreduce_bytes_per_step),
+            "model={} batching={} steps={} batch={} workers={}",
+            cfg.model, cfg.batching.name(), cfg.steps, cfg.batch_queries, cfg.workers
+        );
+
+        if cfg.workers > 1 {
+            let r = ngdb_zoo::train::train_multi_worker(&rt, Arc::clone(&kg), &cfg, &mut state)?;
+            println!(
+                "done: {:.0} q/s over {} workers | allreduce {}/step | loss {:.4} -> {:.4}",
+                r.qps, r.workers, fmt_bytes(r.allreduce_bytes_per_step),
+                r.loss_curve.first().unwrap_or(&0.0), r.loss_curve.last().unwrap_or(&0.0)
+            );
+            return Ok(());
+        }
+
+        let sem = semantic_source(&rt, &cfg, &kg)?;
+        let trainer = Trainer::new(&rt, Arc::clone(&kg), cfg.clone());
+        let trainer = match &sem {
+            Some(s) => trainer.with_semantic(s.as_ref()),
+            None => trainer,
+        };
+        let r = trainer.train(&mut state)?;
+        println!(
+            "done: {:.0} q/s | {:.1} ops/launch | pad {:.1}% | mem {} | loss {:.4} -> {:.4}",
+            r.qps, r.ops_per_launch, 100.0 * r.padded_frac, fmt_bytes(r.mem.total()),
             r.loss_curve.first().unwrap_or(&0.0), r.loss_curve.last().unwrap_or(&0.0)
         );
-        return Ok(());
+        for (phase, secs) in &r.phases {
+            println!("  {phase}: {secs:.2}s");
+        }
+        Ok(())
     }
 
-    let sem = semantic_source(&rt, &cfg, &kg)?;
-    let trainer = Trainer::new(&rt, Arc::clone(&kg), cfg.clone());
-    let trainer = match &sem {
-        Some(s) => trainer.with_semantic(s.as_ref()),
-        None => trainer,
-    };
-    let r = trainer.train(&mut state)?;
-    println!(
-        "done: {:.0} q/s | {:.1} ops/launch | pad {:.1}% | mem {} | loss {:.4} -> {:.4}",
-        r.qps, r.ops_per_launch, 100.0 * r.padded_frac, fmt_bytes(r.mem.total()),
-        r.loss_curve.first().unwrap_or(&0.0), r.loss_curve.last().unwrap_or(&0.0)
-    );
-    for (phase, secs) in &r.phases {
-        println!("  {phase}: {secs:.2}s");
+    pub fn cmd_eval(args: &Args) -> Result<()> {
+        let cfg = ExperimentConfig::from_args(args)?;
+        let rt = open(&cfg)?;
+        let kg = build_kg(&cfg)?;
+        let full = rank::full_graph(&kg)?;
+        let mut state = init_state(&rt, &cfg, &kg)?;
+        // brief training so eval isn't over a random model
+        if cfg.steps > 0 {
+            Trainer::new(&rt, Arc::clone(&kg), cfg.clone()).train(&mut state)?;
+        }
+        let n_per = (cfg.eval_queries / cfg.patterns.len()).max(1);
+        let queries =
+            rank::sample_eval_queries(&kg, &full, &cfg.patterns, n_per, cfg.seed ^ 0xE7A1);
+        if queries.is_empty() {
+            bail!("no eval queries with predictive answers found; increase --scale");
+        }
+        let r = rank::evaluate(&rt, &state, &kg, &queries, None)?;
+        println!(
+            "MRR {:.4} | Hits@1 {:.4} | Hits@3 {:.4} | Hits@10 {:.4} | answers {}",
+            r.mrr, r.hits1, r.hits3, r.hits10, r.n_answers
+        );
+        for (p, mrr, h10, n) in &r.per_pattern {
+            println!("  {p:>4}: MRR {mrr:.4}  Hits@10 {h10:.4}  (n={n})");
+        }
+        Ok(())
     }
-    Ok(())
 }
 
-fn cmd_eval(args: &Args) -> Result<()> {
-    let cfg = ExperimentConfig::from_args(args)?;
-    let rt = open(&cfg)?;
-    let kg = build_kg(&cfg)?;
-    let full = rank::full_graph(&kg)?;
-    let mut state = init_state(&rt, &cfg, &kg)?;
-    // brief training so eval isn't over a random model
-    if cfg.steps > 0 {
-        Trainer::new(&rt, Arc::clone(&kg), cfg.clone()).train(&mut state)?;
-    }
-    let n_per = (cfg.eval_queries / cfg.patterns.len()).max(1);
-    let queries =
-        rank::sample_eval_queries(&kg, &full, &cfg.patterns, n_per, cfg.seed ^ 0xE7A1);
-    if queries.is_empty() {
-        bail!("no eval queries with predictive answers found; increase --scale");
-    }
-    let r = rank::evaluate(&rt, &state, &kg, &queries, None)?;
-    println!(
-        "MRR {:.4} | Hits@1 {:.4} | Hits@3 {:.4} | Hits@10 {:.4} | answers {}",
-        r.mrr, r.hits1, r.hits3, r.hits10, r.n_answers
-    );
-    for (p, mrr, h10, n) in &r.per_pattern {
-        println!("  {p:>4}: MRR {mrr:.4}  Hits@10 {h10:.4}  (n={n})");
-    }
-    Ok(())
-}
+#[cfg(feature = "pjrt")]
+use pjrt_commands::{cmd_eval, cmd_train};
 
 fn cmd_gen(args: &Args) -> Result<()> {
     let dataset = args.str_or("dataset", "fb15k");

@@ -31,6 +31,11 @@ pub struct Dims {
     pub rel_dim: BTreeMap<String, usize>,
     /// simulated PTEs: name -> (hidden, depth, out_dim)
     pub ptes: BTreeMap<String, (usize, usize, usize)>,
+    /// per-operator overrides of `b_max`, keyed by op name (`"embed"`,
+    /// `"intersect3"`, `"vjp_project"`, ...). Operators absent from the map
+    /// use the global `b_max`. Optional in `manifest.json` — aot.py emits it
+    /// only when an operator's efficient batch size differs from the rest.
+    pub b_max_by_op: BTreeMap<String, usize>,
 }
 
 impl Dims {
@@ -44,6 +49,17 @@ impl Dims {
 
     pub fn rel(&self, model: &str) -> usize {
         self.rel_dim.get(model).copied().unwrap_or(self.d)
+    }
+
+    /// Effective B_max for operator `op`: the per-op override when present,
+    /// clamped into `[1, b_max]` (buckets above the global cap are never
+    /// compiled), else the global `b_max`.
+    pub fn b_max_for(&self, op: &str) -> usize {
+        self.b_max_by_op
+            .get(op)
+            .copied()
+            .unwrap_or(self.b_max)
+            .clamp(1, self.b_max.max(1))
     }
 
     /// Smallest compiled bucket that fits `n` rows (or the largest bucket —
@@ -147,6 +163,14 @@ impl Manifest {
                 Ok((k.clone(), (t[0], t[1], t[2])))
             })
             .collect::<Result<_>>()?;
+        let b_max_by_op = match d.opt("b_max_by_op") {
+            Some(v) => v
+                .obj()?
+                .iter()
+                .map(|(k, x)| Ok((k.clone(), x.usize()?)))
+                .collect::<Result<_>>()?,
+            None => BTreeMap::new(),
+        };
         let dims = Dims {
             d: d.get("d")?.usize()?,
             n_neg: d.get("n_neg")?.usize()?,
@@ -164,6 +188,7 @@ impl Manifest {
             ent_dim: pair_map("ent_dim")?,
             rel_dim: pair_map("rel_dim")?,
             ptes,
+            b_max_by_op,
         };
 
         let mut artifacts = BTreeMap::new();
@@ -308,5 +333,23 @@ mod tests {
     fn missing_artifact_is_an_error() {
         let m = Manifest::parse(MINI).unwrap();
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn per_op_b_max_defaults_and_overrides() {
+        // MINI has no b_max_by_op: every op falls back to the global cap.
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.dims.b_max_by_op.is_empty());
+        assert_eq!(m.dims.b_max_for("project"), m.dims.b_max);
+
+        let with_caps = MINI.replace(
+            "\"b_max\": 4,",
+            "\"b_max\": 4, \"b_max_by_op\": {\"project\": 2, \"score\": 99},",
+        );
+        let m = Manifest::parse(&with_caps).unwrap();
+        assert_eq!(m.dims.b_max_for("project"), 2);
+        // overrides above the global cap clamp down (no such buckets exist)
+        assert_eq!(m.dims.b_max_for("score"), 4);
+        assert_eq!(m.dims.b_max_for("embed"), 4);
     }
 }

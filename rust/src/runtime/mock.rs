@@ -22,6 +22,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
@@ -39,6 +40,10 @@ pub struct MockRuntime {
     /// executions per artifact name (scheduler tests inspect this)
     pub calls: Mutex<BTreeMap<String, u64>>,
     pub executions: AtomicU64,
+    /// artificial latency added to every `execute` call — emulates device
+    /// launch+compute time so pipeline benches can measure gather/execute
+    /// overlap without XLA
+    exec_delay: Option<Duration>,
 }
 
 fn arg(name: &str, shape: Vec<usize>, is_param: bool) -> ArgMeta {
@@ -67,10 +72,16 @@ fn mk_artifact(
 
 impl MockRuntime {
     pub fn new() -> MockRuntime {
-        let d = MOCK_D;
-        let n = MOCK_NEG;
+        MockRuntime::with_config(MOCK_D, MOCK_NEG, &MOCK_BUCKETS)
+    }
+
+    /// Build a mock runtime with custom dimensions — the pipeline benches
+    /// use wider `d` and larger buckets than the unit-test default so that
+    /// host-side gather work is big enough to measure.
+    pub fn with_config(d: usize, n: usize, buckets: &[usize]) -> MockRuntime {
+        assert!(!buckets.is_empty(), "mock runtime needs at least one bucket");
         let mut artifacts = BTreeMap::new();
-        for &b in &MOCK_BUCKETS {
+        for &b in buckets {
             let mut push = |a: ArtifactMeta| {
                 artifacts.insert(a.name.clone(), a);
             };
@@ -128,8 +139,8 @@ impl MockRuntime {
             dims: Dims {
                 d,
                 n_neg: n,
-                buckets: MOCK_BUCKETS.to_vec(),
-                b_max: 8,
+                buckets: buckets.to_vec(),
+                b_max: *buckets.last().unwrap(),
                 eval_b,
                 eval_chunk,
                 intersect_cards: vec![2, 3],
@@ -142,6 +153,7 @@ impl MockRuntime {
                 ent_dim: one("mock"),
                 rel_dim: one("mock"),
                 ptes: BTreeMap::new(),
+                b_max_by_op: BTreeMap::new(),
             },
             artifacts,
             model_params: [("mock".to_string(), vec![])].into_iter().collect(),
@@ -153,7 +165,22 @@ impl MockRuntime {
             resident: Mutex::new(HashMap::new()),
             calls: Mutex::new(BTreeMap::new()),
             executions: AtomicU64::new(0),
+            exec_delay: None,
         }
+    }
+
+    /// Sleep `delay` inside every `execute` call (slow-execute mode): the
+    /// stand-in for artifact launch + device compute latency that the
+    /// pipelined engine is supposed to hide gathers under.
+    pub fn with_exec_delay(mut self, delay: Duration) -> MockRuntime {
+        self.exec_delay = Some(delay);
+        self
+    }
+
+    /// Override the manifest's per-operator B_max cap (tests of the
+    /// `dims.b_max_by_op` routing).
+    pub fn set_b_max_for(&mut self, op: &str, cap: usize) {
+        self.manifest.dims.b_max_by_op.insert(op.to_string(), cap);
     }
 
     pub fn calls_of(&self, name: &str) -> u64 {
@@ -184,8 +211,11 @@ impl Runtime for MockRuntime {
         }
         self.executions.fetch_add(1, Ordering::Relaxed);
         *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        if let Some(delay) = self.exec_delay {
+            std::thread::sleep(delay);
+        }
 
-        let d = MOCK_D;
+        let d = self.manifest.dims.d;
         let b = meta.bucket;
         let out = match (meta.op.as_str(), meta.direction.as_str()) {
             ("embed", "fwd") => vec![inputs[0].clone()],
@@ -243,7 +273,7 @@ impl Runtime for MockRuntime {
                 let mut loss = 0.0f32;
                 let mut gq = HostTensor::zeros(vec![b, d]);
                 let mut gpos = HostTensor::zeros(vec![b, d]);
-                let gneg = HostTensor::zeros(vec![b, MOCK_NEG, d]);
+                let gneg = HostTensor::zeros(vec![b, self.manifest.dims.n_neg, d]);
                 for i in 0..b {
                     let m = mask.data[i];
                     let dot: f32 =
@@ -350,6 +380,28 @@ mod tests {
         rt.upload_resident("w", &[e]).unwrap();
         let out = rt.execute_resident("mock_embed_fwd_b2", "w", &[]).unwrap();
         assert_eq!(out[0].data, vec![7.0; 8]);
+    }
+
+    #[test]
+    fn custom_config_scales_dims_and_buckets() {
+        let rt = MockRuntime::with_config(16, 4, &[4, 32]);
+        assert_eq!(rt.manifest.dims.d, 16);
+        assert_eq!(rt.manifest.dims.n_neg, 4);
+        assert_eq!(rt.manifest.dims.b_max, 32);
+        assert!(rt.manifest.artifacts.contains_key("mock_project_fwd_b32"));
+        let x = HostTensor::zeros(vec![4, 16]);
+        let r = HostTensor::new(vec![4, 16], vec![2.0; 64]).unwrap();
+        let out = rt.execute("mock_project_fwd_b4", &[x, r]).unwrap();
+        assert_eq!(out[0].data, vec![2.0; 64]);
+    }
+
+    #[test]
+    fn exec_delay_slows_execution() {
+        let rt = MockRuntime::new().with_exec_delay(std::time::Duration::from_millis(5));
+        let x = HostTensor::zeros(vec![2, 4]);
+        let t = std::time::Instant::now();
+        rt.execute("mock_negate_fwd_b2", &[x]).unwrap();
+        assert!(t.elapsed() >= std::time::Duration::from_millis(5));
     }
 
     #[test]

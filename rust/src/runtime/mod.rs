@@ -10,11 +10,13 @@
 pub mod host;
 pub mod manifest;
 pub mod mock;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use host::HostTensor;
 pub use manifest::{ArgMeta, ArtifactMeta, Dims, Manifest, ParamFile};
 pub use mock::MockRuntime;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
 
 use anyhow::Result;

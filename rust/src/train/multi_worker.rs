@@ -88,7 +88,7 @@ pub fn train_multi_worker(
                 let patterns = cfg.patterns.clone();
                 handles.push(scope.spawn(move || -> Result<()> {
                     let mut rng =
-                        Rng::new(cfg.seed ^ (step as u64) << 8 ^ w as u64);
+                        Rng::new(cfg.seed ^ ((step as u64) << 8) ^ w as u64);
                     // sample this worker's shard
                     let mut batch: Vec<GroundedQuery> = Vec::with_capacity(shard);
                     let mut guard = 0;

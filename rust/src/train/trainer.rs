@@ -123,6 +123,7 @@ impl<'a> Trainer<'a> {
             let mut step_ops = 0usize;
             let mut step_launch = 0usize;
             let mut step_pad = 0usize;
+            let (mut step_gather, mut step_exec, mut step_overlap) = (0.0f64, 0.0f64, 0.0f64);
             let mut per_pattern: Vec<(&'static str, f64, usize)> = Vec::new();
             phases.time("execute", || -> Result<()> {
                 for dag in &dags {
@@ -130,11 +131,19 @@ impl<'a> Trainer<'a> {
                     step_ops += stats.operators;
                     step_launch += stats.executions;
                     step_pad += stats.padded_rows;
+                    step_gather += stats.gather_secs;
+                    step_exec += stats.execute_secs;
+                    step_overlap += stats.overlap_secs;
                     peak_live = peak_live.max(stats.peak_live_bytes);
                     per_pattern.extend(stats.per_pattern_loss);
                 }
                 Ok(())
             })?;
+            // sub-attribution of the execute phase (pipelined engine):
+            // overlap is gather time hidden under artifact execution
+            phases.add("execute/gather", step_gather);
+            phases.add("execute/artifacts", step_exec);
+            phases.add("execute/overlap", step_overlap);
 
             // ---- optimize ----------------------------------------------------
             grads.normalize();

@@ -2,6 +2,11 @@
 //! `make artifacts`). These tests exercise the full three-layer stack:
 //! Rust coordinator → PJRT CPU client → XLA executables lowered from the
 //! JAX/Pallas compute path.
+//!
+//! Gated behind the `pjrt` feature: the default hermetic build has no
+//! artifact runtime, and CI has no XLA libraries (see ROADMAP open items).
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 

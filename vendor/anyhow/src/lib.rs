@@ -1,0 +1,178 @@
+//! Minimal `anyhow`-compatible error handling, vendored for hermetic builds.
+//!
+//! The offline crate registry this repo builds against is not guaranteed to
+//! carry `anyhow`, so the workspace pins this path crate instead (see the
+//! root `Cargo.toml`). It implements exactly the surface the coordinator
+//! uses — `Result`, `Error`, `anyhow!`, `bail!`, and the `Context` trait on
+//! both `Result` and `Option` — with `anyhow`-compatible semantics:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole chain joined by `": "`.
+//! * `Error` deliberately does **not** implement `std::error::Error`, so the
+//!   blanket `From<E: std::error::Error>` impl cannot overlap the reflexive
+//!   `From<Error>` conversion (the same trick the real crate uses).
+//!
+//! Swapping back to the real `anyhow` is a one-line change in the root
+//! manifest; no call site needs to move.
+
+use std::fmt;
+
+/// Drop-in alias for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error chain: outermost context first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The error chain, outermost first (mirrors `anyhow::Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost message (mirrors `anyhow::Error::root_cause`).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))?;
+        for cause in &self.chain[1.min(self.chain.len())..] {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Context`: attach context to failures of `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing file");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("no value").unwrap_err();
+        assert_eq!(format!("{e:#}"), "no value");
+        assert_eq!(Some(7u32).context("no value").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<()> {
+            bail!("failed with code {}", 3);
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(e.to_string(), "failed with code 3");
+        fn via_qmark() -> Result<u32> {
+            let n: u32 = "17".parse()?;
+            Ok(n)
+        }
+        assert_eq!(via_qmark().unwrap(), 17);
+    }
+
+    #[test]
+    fn context_stacks_outermost_first() {
+        let base: Result<()> = Err(anyhow!("root"));
+        let e = base.context("mid").context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().count(), 3);
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync + 'static>() {}
+        assert_send_sync::<Error>();
+    }
+}
