@@ -55,11 +55,21 @@ fn main() -> anyhow::Result<()> {
         let report = Trainer::new(&rt, Arc::clone(&kg), cfg)
             .with_semantic(source.as_ref())
             .train(&mut state)?;
+        // fusion no longer disables the pipelined engine: encoder gathers
+        // serialize with round executions via the runtime concurrency
+        // contract, so overlap shows up even in joint mode
+        let overlap = report
+            .phases
+            .iter()
+            .find(|(n, _)| n == "execute/overlap")
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0);
         println!(
-            "{mode:>9}: {:.0} q/s | setup {:.2}s | resident {} | loss -> {:.4}",
+            "{mode:>9}: {:.0} q/s | setup {:.2}s | resident {} | overlap {:.1} ms | loss -> {:.4}",
             report.qps,
             setup,
             fmt_bytes(source.resident_bytes()),
+            overlap * 1e3,
             report.loss_curve.last().unwrap()
         );
     }

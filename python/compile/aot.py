@@ -74,7 +74,7 @@ def input_hash() -> str:
                 with open(os.path.join(root, f), "rb") as fh:
                     h.update(fh.read())
     for k in ("NGDB_DIM", "NGDB_NEG", "NGDB_BUCKETS", "NGDB_USE_PALLAS",
-              "NGDB_SEED"):
+              "NGDB_SEED", "NGDB_B_MAX_BY_OP"):
         h.update(f"{k}={os.environ.get(k, '')};".encode())
     h.update(jax.__version__.encode())
     return h.hexdigest()
@@ -153,24 +153,9 @@ def main() -> int:
         return 0
 
     manifest = {
-        "dims": {
-            "d": config.D, "n_neg": config.N_NEG,
-            "buckets": list(config.BUCKETS), "b_max": config.B_MAX,
-            "eval_b": config.EVAL_B, "eval_chunk": config.EVAL_CHUNK,
-            "intersect_cards": list(config.INTERSECT_CARDS),
-            "union_cards": list(config.UNION_CARDS),
-            "q2p_k": config.Q2P_K, "tok_dim": config.TOK_DIM,
-            "gamma": config.GAMMA, "seed": config.SEED,
-            "use_pallas": config.USE_PALLAS,
-            "pte_bucket": config.PTE_BUCKET,
-            "ptes": {k: list(v) for k, v in config.PTES.items()},
-            "repr_dim": {m: config.repr_dim(m)
-                         for m in config.MODELS + ("complex",)},
-            "ent_dim": {m: config.ent_dim(m)
-                        for m in config.MODELS + ("complex",)},
-            "rel_dim": {m: config.rel_dim(m)
-                        for m in config.MODELS + ("complex",)},
-        },
+        # dims schema lives in config.manifest_dims() — importable without
+        # jax, so the dependency-free test suite validates the contract
+        "dims": config.manifest_dims(),
         "params": write_params(out),
         "artifacts": [],
     }

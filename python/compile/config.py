@@ -10,6 +10,8 @@ Override via environment (picked up by ``make artifacts``):
 * ``NGDB_NEG``       negatives per query ``N``            (default 32)
 * ``NGDB_BUCKETS``   comma-separated batch-size buckets   (default 16,128,512)
 * ``NGDB_USE_PALLAS`` 1/0 — route matmuls through the Pallas kernel (default 1)
+* ``NGDB_B_MAX_BY_OP`` per-operator ``B_max`` overrides, e.g.
+  ``"intersect3=64,score=128"`` (default empty — every op uses ``B_MAX``)
 """
 
 from __future__ import annotations
@@ -26,6 +28,34 @@ BUCKETS: tuple[int, ...] = tuple(
 )
 #: max efficient batch size B_max used by the Max-Fillness policy
 B_MAX: int = max(BUCKETS)
+
+
+def _parse_b_max_by_op(spec: str) -> dict[str, int]:
+    """Parse ``"op=cap,op=cap"`` into per-operator B_max overrides."""
+    out: dict[str, int] = {}
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        op, _, cap = item.partition("=")
+        if not op or not cap:
+            raise ValueError(f"NGDB_B_MAX_BY_OP entry {item!r} is not 'op=cap'")
+        cap_n = int(cap)
+        if cap_n < 1:
+            # fail at export time, not at Rust manifest load (usize) or via
+            # silent clamping in Dims::b_max_for
+            raise ValueError(f"NGDB_B_MAX_BY_OP cap for {op.strip()!r} must be >= 1")
+        out[op.strip()] = cap_n
+    return out
+
+
+#: per-operator overrides of ``B_MAX`` keyed by op name ("embed",
+#: "intersect3", "vjp_project", ...); ops absent from the map use ``B_MAX``.
+#: Serialized into ``manifest.json`` as ``dims.b_max_by_op`` only when
+#: non-empty (the Rust engine's empty-map fast path skips per-op lookups).
+B_MAX_BY_OP: dict[str, int] = _parse_b_max_by_op(
+    os.environ.get("NGDB_B_MAX_BY_OP", "")
+)
 
 # --- evaluation ------------------------------------------------------------
 #: queries per eval call
@@ -102,3 +132,32 @@ def rel_dim(model: str) -> int:
 
 
 MODELS: tuple[str, ...] = ("gqe", "q2b", "betae", "q2p", "fuzzqe")
+
+
+def manifest_dims() -> dict:
+    """The resolved ``dims`` fragment of ``manifest.json``.
+
+    Lives here (not in aot.py) so it is importable without jax: the schema
+    is a contract with the Rust coordinator (``runtime::manifest``) and is
+    validated by the dependency-free test suite. ``b_max_by_op`` is emitted
+    only when non-empty — the Rust side treats the absent key as "use the
+    global ``b_max`` everywhere" and skips per-op lookups.
+    """
+    dims = {
+        "d": D, "n_neg": N_NEG,
+        "buckets": list(BUCKETS), "b_max": B_MAX,
+        "eval_b": EVAL_B, "eval_chunk": EVAL_CHUNK,
+        "intersect_cards": list(INTERSECT_CARDS),
+        "union_cards": list(UNION_CARDS),
+        "q2p_k": Q2P_K, "tok_dim": TOK_DIM,
+        "gamma": GAMMA, "seed": SEED,
+        "use_pallas": USE_PALLAS,
+        "pte_bucket": PTE_BUCKET,
+        "ptes": {k: list(v) for k, v in PTES.items()},
+        "repr_dim": {m: repr_dim(m) for m in MODELS + ("complex",)},
+        "ent_dim": {m: ent_dim(m) for m in MODELS + ("complex",)},
+        "rel_dim": {m: rel_dim(m) for m in MODELS + ("complex",)},
+    }
+    if B_MAX_BY_OP:
+        dims["b_max_by_op"] = dict(B_MAX_BY_OP)
+    return dims

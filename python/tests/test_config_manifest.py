@@ -1,0 +1,67 @@
+"""Manifest ``dims`` schema contract with the Rust coordinator.
+
+Dependency-free (no jax): ``config.manifest_dims()`` is the exact fragment
+aot.py serializes, and ``runtime::manifest::Manifest::parse`` on the Rust
+side requires every key checked here. ``b_max_by_op`` is optional and must
+be *omitted* (not emitted empty) when no per-op cap is configured — the
+engine's empty-map fast path depends on that.
+"""
+
+import importlib
+import json
+
+import pytest
+
+from compile import config
+
+
+#: every dims key Manifest::parse requires (rust/src/runtime/manifest.rs)
+REQUIRED_DIMS_KEYS = {
+    "d", "n_neg", "buckets", "b_max", "eval_b", "eval_chunk",
+    "intersect_cards", "union_cards", "tok_dim", "pte_bucket", "gamma",
+    "use_pallas", "ptes", "repr_dim", "ent_dim", "rel_dim",
+}
+
+
+def test_manifest_dims_carries_every_required_key_and_is_json_safe():
+    dims = config.manifest_dims()
+    missing = REQUIRED_DIMS_KEYS - set(dims)
+    assert not missing, f"Manifest::parse would reject this fragment: {missing}"
+    # round-trips through JSON with types intact
+    back = json.loads(json.dumps(dims))
+    assert back["b_max"] == max(back["buckets"])
+    assert all(isinstance(b, int) for b in back["buckets"])
+    assert set(back["repr_dim"]) == set(config.MODELS + ("complex",))
+
+
+def test_b_max_by_op_is_omitted_when_unset():
+    assert not config.B_MAX_BY_OP, "test assumes a default environment"
+    assert "b_max_by_op" not in config.manifest_dims()
+
+
+def test_b_max_by_op_env_round_trips_into_the_dims_fragment(monkeypatch):
+    monkeypatch.setenv("NGDB_B_MAX_BY_OP", "intersect3=64, score=128")
+    cfg = importlib.reload(config)
+    try:
+        assert cfg.B_MAX_BY_OP == {"intersect3": 64, "score": 128}
+        dims = cfg.manifest_dims()
+        assert dims["b_max_by_op"] == {"intersect3": 64, "score": 128}
+        # survives serialization with int values (Rust parses usize)
+        assert json.loads(json.dumps(dims))["b_max_by_op"]["score"] == 128
+    finally:
+        monkeypatch.delenv("NGDB_B_MAX_BY_OP")
+        importlib.reload(config)
+
+
+def test_malformed_b_max_by_op_is_rejected():
+    with pytest.raises(ValueError):
+        config._parse_b_max_by_op("embed")
+    with pytest.raises(ValueError):
+        config._parse_b_max_by_op("=4")
+    # zero/negative caps fail at export, not at Rust manifest load
+    with pytest.raises(ValueError):
+        config._parse_b_max_by_op("score=0")
+    with pytest.raises(ValueError):
+        config._parse_b_max_by_op("score=-1")
+    assert config._parse_b_max_by_op("") == {}
+    assert config._parse_b_max_by_op("embed=2,") == {"embed": 2}

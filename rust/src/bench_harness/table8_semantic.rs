@@ -13,12 +13,17 @@ use crate::kg::descriptions::Descriptions;
 use crate::query::Pattern;
 use crate::runtime::Runtime;
 use crate::semantic::{DecoupledCache, JointEncoder, SemanticSource};
-use crate::train::Trainer;
+use crate::train::{TrainReport, Trainer};
 use crate::util::stats::fmt_bytes;
 
 /// Paper averages: joint 347 q/s -> decoupled 1915 q/s (5.5x), memory
 /// 9.60 GB -> 8.34 GB, MRR +4.74 pts.
 const PAPER_TPUT_GAIN: f64 = 1915.0 / 347.0;
+
+/// Seconds attributed to one trainer phase (0.0 when absent).
+fn phase_secs(report: &TrainReport, name: &str) -> f64 {
+    report.phases.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0.0)
+}
 
 pub fn run(datasets: &[&str], models: &[&str], encoders: &[&str]) -> Result<()> {
     let ctx = BenchCtx::open()?;
@@ -37,6 +42,7 @@ pub fn run(datasets: &[&str], models: &[&str], encoders: &[&str]) -> Result<()> 
         for &model in models {
             for &encoder in encoders {
                 let mut measured: Vec<(String, f64, f64, usize)> = Vec::new();
+                let mut overlap_line = String::new();
                 for mode in ["joint", "decoupled"] {
                     let mut cfg = ctx.base_cfg(dataset, model, s, n_steps);
                     cfg.semantic = match mode {
@@ -66,8 +72,19 @@ pub fn run(datasets: &[&str], models: &[&str], encoders: &[&str]) -> Result<()> 
                     };
                     // joint keeps the encoder weights resident all run
                     let mem = report.mem.total();
+                    // gather/execute overlap stays ACTIVE under fusion (the
+                    // engine no longer falls back to synchronous gathers —
+                    // encoder executions serialize through the runtime's
+                    // concurrency contract instead)
+                    overlap_line.push_str(&format!(
+                        " {mode}: overlap {:.1} ms, worker idle {:.1} ms, gather wait {:.1} ms;",
+                        phase_secs(&report, "execute/overlap") * 1e3,
+                        phase_secs(&report, "execute/worker_idle") * 1e3,
+                        phase_secs(&report, "execute/gather_wait") * 1e3,
+                    ));
                     measured.push((mode.to_string(), report.qps, mrr, mem));
                 }
+                println!("[pipeline] {model}+{encoder}:{overlap_line}");
                 let (joint, dec) = (&measured[0], &measured[1]);
                 rows.push(vec![
                     dataset.to_string(),

@@ -39,14 +39,36 @@
 //! operators, whose operand tensors already exist in the slab and are
 //! refcount-pinned until their consumers execute.
 //!
-//! Cost model: each overlapped round pays one scoped-thread spawn+join
-//! (~tens of µs) to hide the gather, which wins whenever artifact execution
-//! dominates (the intended regime: real device artifacts, large buckets).
-//! Workloads with near-instant executes should set
-//! [`EngineConfig::pipeline`] to `false`; a persistent worker thread that
-//! amortizes the spawn is a ROADMAP open item.
+//! # The persistent gather worker
+//!
+//! One worker thread lives for the whole of [`Engine::run`] (a scoped
+//! thread + a job/response channel pair), so an overlapped round costs one
+//! channel round-trip (~1 µs) instead of a thread spawn+join (~tens of µs):
+//! overlap is never a regression, even for near-instant executes. Jobs
+//! carry a raw view of the output slab; the protocol keeps it sound — the
+//! main thread never mutates the slab while a job is in flight (scatter and
+//! reclamation happen only after the response is received), and the scope
+//! joins the worker before the slab drops. [`StepStats`] exposes the two
+//! contention counters: `worker_idle_secs` (worker parked, waiting for
+//! work) and `gather_wait_secs` (main thread blocked on an unfinished
+//! prefetch — gathers outlasting executes).
+//!
+//! # Overlap under semantic fusion
+//!
+//! A speculative Embed gather calls [`crate::semantic::SemanticSource::gather`],
+//! which in joint mode executes encoder artifacts on the same runtime —
+//! concurrently with the main thread's round execution. The runtime
+//! concurrency contract makes this safe: the engine submits rounds through
+//! [`Runtime::execute_gated`] and encoder gathers go through
+//! `execute_resident_gated`, which serialize on the backend's submission
+//! lock unless it reports `concurrent_execute_safe()`. A discarded
+//! speculative gather merely re-runs a frozen (pure) encoder forward, so
+//! schedules, losses, and gradients stay bit-identical to the synchronous
+//! engine — the `scheduler_equivalence` suite proves it across fusion
+//! on/off, per-op caps, timing skews, and forced mis-speculation.
 
 use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -109,7 +131,11 @@ pub struct StepStats {
     /// wall-clock spent inside `rt.execute`
     pub execute_secs: f64,
     /// portion of gather time hidden under artifact execution — per round
-    /// with an in-flight prefetch, `min(gather, execute)`
+    /// with an in-flight prefetch, `min(gather, execute)`. Conservative:
+    /// rounds whose gather may itself execute artifacts behind the
+    /// submission lock (encoder-executing Embed gathers on a backend
+    /// without concurrent execute) claim **zero** overlap, since most of
+    /// their gather wall-clock is lock wait, not hidden work
     pub overlap_secs: f64,
     /// speculative prefetches whose predicted (pool, batch) matched the
     /// actual Max-Fillness selection and were consumed
@@ -117,6 +143,15 @@ pub struct StepStats {
     /// speculative prefetches discarded because newly-ready operators
     /// changed the selection (the engine re-gathered synchronously)
     pub spec_misses: usize,
+    /// time the persistent gather worker spent parked waiting for a job
+    /// (large values: gathers are cheap relative to the rest of the round)
+    pub worker_idle_secs: f64,
+    /// time the main thread spent blocked on a prefetch that outlasted its
+    /// round's execution (contention: gather is the bottleneck)
+    pub gather_wait_secs: f64,
+    /// executed schedule: one `(op, batch_len)` per round, in order — the
+    /// golden-schedule regression tests diff this against snapshots
+    pub schedule: Vec<(OpKind, usize)>,
 }
 
 /// Per-node stored output.
@@ -147,6 +182,43 @@ struct PreparedBatch {
     /// bucket rows minus real rows (padding waste, accounted at scatter)
     padded: usize,
     inputs: Vec<HostTensor>,
+}
+
+/// Raw, `Send` view of the output slab handed to the gather worker with
+/// each job.
+///
+/// # Safety protocol
+///
+/// The run loop upholds three invariants that make dereferencing sound:
+/// 1. the slab is never mutated while a job is in flight — scatter and
+///    eager reclamation happen only after the matching [`GatherDone`] has
+///    been received;
+/// 2. speculative batches reference only *ready* operators, whose operand
+///    rows already exist and are refcount-pinned until they execute;
+/// 3. the worker is scope-joined before the slab is dropped.
+struct SlabView {
+    ptr: *const Option<NodeOut>,
+    len: usize,
+}
+
+// SAFETY: see the protocol above — the view is only read, between the
+// channel round-trip's happens-before edges.
+unsafe impl Send for SlabView {}
+
+/// One speculative gather request for the persistent worker.
+struct GatherJob {
+    op: OpKind,
+    batch: Vec<u32>,
+    slab: SlabView,
+}
+
+/// The worker's response to one [`GatherJob`].
+struct GatherDone {
+    result: Result<PreparedBatch>,
+    /// wall-clock of the gather itself
+    gather_secs: f64,
+    /// how long the worker sat parked before this job arrived
+    idle_secs: f64,
 }
 
 /// Engine configuration knobs.
@@ -270,117 +342,137 @@ impl<'a> Engine<'a> {
             pools.push(dag.nodes[node as usize].op, node);
         }
 
-        // Speculation is disabled under semantic fusion: a speculative Embed
-        // gather calls `SemanticSource::gather`, which (in joint mode) runs
-        // encoder artifacts on the same runtime — concurrent `rt.execute`
-        // calls are an assumption no backend currently guarantees, and a
-        // mis-speculation would silently re-run the encoder forward.
-        let pipeline = self.cfg.pipeline && self.semantic.is_none();
+        // Overlap is on whenever the config asks for it — semantic fusion
+        // included, since encoder gathers and round executions serialize
+        // through the runtime's concurrency contract (`execute_gated`).
+        let pipeline = self.cfg.pipeline;
 
-        // First round: selection + synchronous gather (nothing to overlap).
-        let mut current: Option<PreparedBatch> =
-            match self.next_round(&mut pools, &mut stats, pending)? {
-                Some((op, batch)) => {
-                    Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
-                }
-                None => None,
-            };
-
-        while let Some(prep) = current.take() {
-            // -- speculate round N+1 from the current ready set (pools minus
-            //    this round); newly-ready operators from round N are not in
-            //    the pools yet, which is exactly what makes this a guess.
-            let spec: Option<(OpKind, Vec<u32>)> = if pipeline {
-                pools
-                    .select_max_fillness(|op| self.b_max(op))
-                    .map(|op| (op, pools.peek_batch(op, self.b_max(op))))
-            } else {
-                None
-            };
-
-            // -- execute round N; overlap the speculative gather on a worker
-            let mut prefetched: Option<Result<PreparedBatch>> = None;
-            let exec_result = match spec {
-                Some((sop, sbatch)) => {
-                    let storage_ref: &[Option<NodeOut>] = &storage;
-                    let (out, pf, exec_dt, gather_dt) = std::thread::scope(|s| {
-                        let worker = s.spawn(move || {
-                            let t0 = Instant::now();
-                            let r = self.gather_batch(dag, state, sop, sbatch, storage_ref);
-                            (r, t0.elapsed().as_secs_f64())
-                        });
-                        let t0 = Instant::now();
-                        let out = self.rt.execute(&prep.artifact, &prep.inputs);
-                        let exec_dt = t0.elapsed().as_secs_f64();
-                        let (pf, gather_dt) =
-                            worker.join().expect("speculative gather thread panicked");
-                        (out, pf, exec_dt, gather_dt)
-                    });
-                    stats.execute_secs += exec_dt;
-                    stats.gather_secs += gather_dt;
-                    stats.overlap_secs += exec_dt.min(gather_dt);
-                    prefetched = Some(pf);
-                    out
-                }
-                None => {
-                    let t0 = Instant::now();
-                    let out = self.rt.execute(&prep.artifact, &prep.inputs);
-                    stats.execute_secs += t0.elapsed().as_secs_f64();
-                    out
-                }
-            };
-            let outputs =
-                exec_result.with_context(|| format!("executing pool {}", prep.op.name()))?;
-            stats.executions += 1;
-
-            // -- scatter outputs, account padding, reclaim eagerly
-            self.scatter_batch(
-                dag, state, &prep, &outputs, &mut storage, &mut live_bytes, grads, &mut stats,
-                &mut pat_loss,
-            )
-            .with_context(|| format!("scattering pool {}", prep.op.name()))?;
-            stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
-
-            // lines 12-18: bookkeeping, eager reclamation, ready updates
-            for &o in &prep.batch {
-                pending -= 1;
-                stats.operators += 1;
-                for &p in &deps[o as usize] {
-                    refcnt[p as usize] -= 1;
-                    if refcnt[p as usize] == 0 {
-                        if let Some(out) = storage[p as usize].take() {
-                            live_bytes -= out.bytes(); // Eq. 7: RECLAIM(T)
-                        }
-                    }
-                }
-                for &c in &consumers[o as usize] {
-                    indeg[c as usize] -= 1;
-                    if indeg[c as usize] == 0 {
-                        ready.push(c);
-                    }
-                }
-            }
-            for node in ready.drain(..) {
-                pools.push(dag.nodes[node as usize].op, node);
+        // The persistent gather worker lives exactly as long as this scope:
+        // `job_tx` is dropped before the scope closes, the worker's `recv`
+        // then errors out, and the scope joins it — always before `storage`
+        // (declared above) can drop.
+        std::thread::scope(|scope| -> Result<()> {
+            let (job_tx, job_rx) = std::sync::mpsc::channel::<GatherJob>();
+            let (done_tx, done_rx) = std::sync::mpsc::channel::<GatherDone>();
+            if pipeline {
+                scope.spawn(move || self.gather_worker(dag, state, job_rx, done_tx));
             }
 
-            // -- actual Max-Fillness selection; validate the speculation
-            current = match self.next_round(&mut pools, &mut stats, pending)? {
-                None => None,
-                Some((op, batch)) => match prefetched {
-                    Some(Ok(p)) if p.op == op && p.batch == batch => {
-                        stats.spec_hits += 1;
-                        Some(p)
-                    }
-                    other => {
-                        if other.is_some() {
-                            stats.spec_misses += 1;
-                        }
+            // First round: selection + synchronous gather (nothing to
+            // overlap yet).
+            let mut current: Option<PreparedBatch> =
+                match self.next_round(&mut pools, &mut stats, pending)? {
+                    Some((op, batch)) => {
                         Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
                     }
-                },
-            };
-        }
+                    None => None,
+                };
+
+            while let Some(prep) = current.take() {
+                // -- speculate round N+1 from the current ready set (pools
+                //    minus this round); newly-ready operators from round N
+                //    are not in the pools yet, which is exactly what makes
+                //    this a guess.
+                let mut in_flight: Option<OpKind> = None;
+                if pipeline {
+                    if let Some(sop) = pools.select_max_fillness(|op| self.b_max(op)) {
+                        let sbatch = pools.peek_batch(sop, self.b_max(sop));
+                        let slab = SlabView { ptr: storage.as_ptr(), len: storage.len() };
+                        job_tx
+                            .send(GatherJob { op: sop, batch: sbatch, slab })
+                            .expect("gather worker hung up");
+                        in_flight = Some(sop);
+                    }
+                }
+
+                // -- execute round N (overlapping the in-flight prefetch)
+                let t0 = Instant::now();
+                let exec_result = self.rt.execute_gated(&prep.artifact, &prep.inputs);
+                let exec_dt = t0.elapsed().as_secs_f64();
+                stats.execute_secs += exec_dt;
+
+                // -- collect the prefetch BEFORE any slab mutation (the
+                //    SlabView safety protocol), even on execute errors
+                let mut prefetched: Option<Result<PreparedBatch>> = None;
+                if let Some(spec_op) = in_flight {
+                    let t_wait = Instant::now();
+                    let done = done_rx.recv().expect("gather worker died");
+                    stats.gather_wait_secs += t_wait.elapsed().as_secs_f64();
+                    stats.gather_secs += done.gather_secs;
+                    stats.worker_idle_secs += done.idle_secs;
+                    // An encoder-executing gather on a backend without
+                    // concurrent execute spends most of its wall-clock
+                    // blocked on the submission lock we are holding —
+                    // claiming that as "hidden under execution" would
+                    // fabricate a pipelining win, so such rounds report no
+                    // overlap (a conservative lower bound: their host-side
+                    // coalescing may still have overlapped).
+                    let gather_serialized = self.semantic.is_some()
+                        && !self.rt.concurrent_execute_safe()
+                        && matches!(
+                            spec_op,
+                            OpKind::Embed | OpKind::Vjp(crate::query::VjpOf::Embed)
+                        );
+                    if !gather_serialized {
+                        stats.overlap_secs += exec_dt.min(done.gather_secs);
+                    }
+                    prefetched = Some(done.result);
+                }
+                let outputs =
+                    exec_result.with_context(|| format!("executing pool {}", prep.op.name()))?;
+                stats.executions += 1;
+
+                // -- scatter outputs, account padding, reclaim eagerly
+                self.scatter_batch(
+                    dag, state, &prep, &outputs, &mut storage, &mut live_bytes, grads,
+                    &mut stats, &mut pat_loss,
+                )
+                .with_context(|| format!("scattering pool {}", prep.op.name()))?;
+                stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
+
+                // lines 12-18: bookkeeping, eager reclamation, ready updates
+                for &o in &prep.batch {
+                    pending -= 1;
+                    stats.operators += 1;
+                    for &p in &deps[o as usize] {
+                        refcnt[p as usize] -= 1;
+                        if refcnt[p as usize] == 0 {
+                            if let Some(out) = storage[p as usize].take() {
+                                live_bytes -= out.bytes(); // Eq. 7: RECLAIM(T)
+                            }
+                        }
+                    }
+                    for &c in &consumers[o as usize] {
+                        indeg[c as usize] -= 1;
+                        if indeg[c as usize] == 0 {
+                            ready.push(c);
+                        }
+                    }
+                }
+                for node in ready.drain(..) {
+                    pools.push(dag.nodes[node as usize].op, node);
+                }
+
+                // -- actual Max-Fillness selection; validate the speculation
+                current = match self.next_round(&mut pools, &mut stats, pending)? {
+                    None => None,
+                    Some((op, batch)) => match prefetched {
+                        Some(Ok(p)) if p.op == op && p.batch == batch => {
+                            stats.spec_hits += 1;
+                            Some(p)
+                        }
+                        other => {
+                            if other.is_some() {
+                                stats.spec_misses += 1;
+                            }
+                            Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
+                        }
+                    },
+                };
+            }
+            drop(job_tx); // hang up; the scope joins the worker
+            Ok(())
+        })?;
 
         grads.loss += stats.loss;
         grads.n_queries += stats.n_queries;
@@ -393,6 +485,31 @@ impl<'a> Engine<'a> {
             })
             .collect::<Result<Vec<_>>>()?;
         Ok((stats, outputs))
+    }
+
+    /// The persistent gather worker's loop: block on the job channel,
+    /// coalesce, respond. Runs on one scoped thread for the whole of
+    /// [`Engine::run_with_outputs`]; exits when the job sender hangs up.
+    fn gather_worker(
+        &self,
+        dag: &QueryDag,
+        state: &ModelState,
+        jobs: Receiver<GatherJob>,
+        done: Sender<GatherDone>,
+    ) {
+        let mut parked = Instant::now();
+        while let Ok(job) = jobs.recv() {
+            let idle_secs = parked.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            // SAFETY: upheld by the run loop — see [`SlabView`].
+            let slab = unsafe { std::slice::from_raw_parts(job.slab.ptr, job.slab.len) };
+            let result = self.gather_batch(dag, state, job.op, job.batch, slab);
+            let gather_secs = t0.elapsed().as_secs_f64();
+            parked = Instant::now();
+            if done.send(GatherDone { result, gather_secs, idle_secs }).is_err() {
+                break; // run loop gone (error path); nothing left to do
+            }
+        }
     }
 
     /// Max-Fillness selection of the next round (Algorithm 1 lines 8-9).
@@ -413,6 +530,7 @@ impl<'a> Engine<'a> {
         stats.fillness.push(pools.fillness(op, self.b_max(op)));
         let batch = pools.pop_batch(op, self.b_max(op));
         debug_assert!(!batch.is_empty());
+        stats.schedule.push((op, batch.len()));
         Ok(Some((op, batch)))
     }
 
@@ -437,8 +555,9 @@ impl<'a> Engine<'a> {
     /// Stage 1: coalesce one round's operand rows into padded input blocks.
     /// Without a semantic source this reads only immutable state and is safe
     /// to run concurrently with stage 2; with one attached it may execute
-    /// encoder artifacts, so the run loop never overlaps it (see `pipeline`
-    /// in [`Engine::run_with_outputs`]).
+    /// encoder artifacts, which stay safe under overlap because the source
+    /// submits through the runtime's gated path (see the module docs on the
+    /// concurrency contract).
     fn gather_batch(
         &self,
         dag: &QueryDag,
@@ -798,8 +917,7 @@ mod tests {
     use super::*;
     use crate::query::{Pattern, QueryTree};
     use crate::runtime::{MockRuntime, Runtime};
-    use crate::util::proptest::{gen, prop_check};
-    use crate::util::rng::Rng;
+    use crate::util::proptest::{prop_check, queries};
 
     const D: usize = crate::runtime::mock::MOCK_D;
     const NEG: usize = crate::runtime::mock::MOCK_NEG;
@@ -911,21 +1029,24 @@ mod tests {
         // scheduling/fusion policy must not change the numbers.
         let rt = MockRuntime::new();
         let st = state(&rt);
-        let mut rng = Rng::new(9);
-        let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
-        let mut queries = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(9);
+        let kg = queries::toy_kg();
+        let mut qs = Vec::new();
         for p in [Pattern::P1, Pattern::P2, Pattern::I2, Pattern::U2, Pattern::In2] {
             for _ in 0..3 {
                 if let Some(g) = crate::sampler::ground(&kg, &mut rng, p) {
                     // remap ids into the tiny mock tables
-                    let tree = remap(&g.tree, st.entities.rows as u32, st.relations.rows as u32);
-                    queries.push((p, tree, g.answer % st.entities.rows as u32,
-                        vec![0u32, 1]));
+                    let tree = queries::remap_tree(
+                        &g.tree,
+                        st.entities.rows as u32,
+                        st.relations.rows as u32,
+                    );
+                    qs.push((p, tree, g.answer % st.entities.rows as u32, vec![0u32, 1]));
                 }
             }
         }
         let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> =
-            queries.iter().map(|(p, t, a, n)| (*p, t, *a, n.clone())).collect();
+            qs.iter().map(|(p, t, a, n)| (*p, t, *a, n.clone())).collect();
         let dag = train_dag(&refs);
 
         let (s_b, g_b) = run(&rt, &dag, &st, EngineConfig::default());
@@ -945,45 +1066,6 @@ mod tests {
                 assert!((a - b).abs() < 1e-4);
             }
         }
-    }
-
-    fn remap(tree: &QueryTree, ne: u32, nr: u32) -> QueryTree {
-        match tree {
-            QueryTree::Anchor(e) => QueryTree::Anchor(e % ne),
-            QueryTree::Project(c, r) => {
-                QueryTree::Project(Box::new(remap(c, ne, nr)), r % nr)
-            }
-            QueryTree::Intersect(cs) => {
-                QueryTree::Intersect(cs.iter().map(|c| remap(c, ne, nr)).collect())
-            }
-            QueryTree::Union(cs) => {
-                QueryTree::Union(cs.iter().map(|c| remap(c, ne, nr)).collect())
-            }
-            QueryTree::Negate(c) => QueryTree::Negate(Box::new(remap(c, ne, nr))),
-        }
-    }
-
-    /// Random training DAG over the toy graph, remapped into the mock tables.
-    fn random_dag(rng: &mut Rng, st: &ModelState, max_q: usize) -> Option<QueryDag> {
-        let kg = crate::kg::KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
-        let n_q = gen::size(rng, 1, max_q);
-        let mut trees = Vec::new();
-        for _ in 0..n_q {
-            let p = *rng.choice(&Pattern::ALL);
-            if let Some(g) = crate::sampler::ground(&kg, rng, p) {
-                trees.push((
-                    p,
-                    remap(&g.tree, st.entities.rows as u32, st.relations.rows as u32),
-                    g.answer % st.entities.rows as u32,
-                ));
-            }
-        }
-        if trees.is_empty() {
-            return None;
-        }
-        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> =
-            trees.iter().map(|(p, t, a)| (*p, t, *a, vec![0u32, 1])).collect();
-        Some(train_dag(&refs))
     }
 
     #[test]
@@ -1034,10 +1116,23 @@ mod tests {
 
     #[test]
     fn scheduler_invariants_hold_on_random_workloads() {
+        let kg = queries::toy_kg();
         prop_check("engine invariants on random query mixtures", 30, |rng| {
             let rt = MockRuntime::new();
             let st = state(&rt);
-            let Some(dag) = random_dag(rng, &st, 24) else { return Ok(()) };
+            let set = queries::random_set(
+                rng,
+                &kg,
+                &Pattern::ALL,
+                24,
+                st.entities.rows as u32,
+                st.relations.rows as u32,
+                NEG,
+            );
+            if set.is_empty() {
+                return Ok(());
+            }
+            let dag = set.train_dag();
             let engine = Engine::new(&rt, EngineConfig { nan_check: true, ..Default::default() });
             let mut grads = Grads::default();
             let stats = engine
@@ -1079,6 +1174,9 @@ mod tests {
             }
             if stats.fillness != s_sync.fillness {
                 return Err("fillness traces diverge".into());
+            }
+            if stats.schedule != s_sync.schedule {
+                return Err("schedule traces diverge".into());
             }
             if stats.loss.to_bits() != s_sync.loss.to_bits() {
                 return Err(format!(
@@ -1262,6 +1360,75 @@ mod tests {
         let mut grads = Grads::default();
         let err = engine.run(&dag, &st, &mut grads).unwrap_err();
         assert!(format!("{err:#}").contains("negatives"), "{err:#}");
+    }
+
+    #[test]
+    fn fusion_pipelines_and_matches_sync_bitwise() {
+        // The tentpole claim: speculation stays ACTIVE under semantic
+        // fusion (no sync fallback) and the numbers still match the
+        // synchronous engine bit-for-bit.
+        let rt = MockRuntime::new();
+        let st = state(&rt);
+        let sem = crate::semantic::mock::TableSource::linear(st.entities.rows, D);
+        let trees: Vec<QueryTree> = (0..10)
+            .map(|i| QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P1, t, 3u32, vec![0u32, 1]))
+            .collect();
+        let dag = train_dag(&refs);
+        let run_sem = |pipeline: bool| {
+            let cfg = EngineConfig { pipeline, ..Default::default() };
+            let engine = Engine::with_semantic(&rt, cfg, &sem);
+            let mut grads = Grads::default();
+            let stats = engine.run(&dag, &st, &mut grads).unwrap();
+            (stats, grads)
+        };
+        let (s_pipe, g_pipe) = run_sem(true);
+        let (s_sync, g_sync) = run_sem(false);
+        assert!(
+            s_pipe.spec_hits + s_pipe.spec_misses > 0,
+            "speculation must be active under fusion (hits={} misses={})",
+            s_pipe.spec_hits,
+            s_pipe.spec_misses
+        );
+        assert_eq!(s_pipe.schedule, s_sync.schedule);
+        assert_eq!(s_pipe.loss.to_bits(), s_sync.loss.to_bits());
+        grads_equal(&g_pipe, &g_sync, 0.0).unwrap();
+        // the fused artifact (not plain embed) carried the anchor batches
+        assert!(rt.calls_of("mock_fused-sem_fwd_b8") > 0);
+        assert_eq!(rt.calls_of("mock_embed_fwd_b8"), 0);
+    }
+
+    #[test]
+    fn encoder_gathers_serialize_against_round_executes() {
+        // Joint-style fusion on a runtime that forbids concurrent execute:
+        // the worker's encoder executions must serialize through the
+        // submission lock — the mock's breach detector stays at zero while
+        // overlap is genuinely exercised (2 ms per launch).
+        let mut rt =
+            MockRuntime::new().with_exec_delay(std::time::Duration::from_millis(2));
+        rt.set_concurrent_execute_safe(false);
+        let st = state(&rt);
+        let sem = crate::semantic::mock::EncoderSource::new(&rt, st.entities.rows);
+        let trees: Vec<QueryTree> = (0..10)
+            .map(|i| QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap())
+            .collect();
+        let refs: Vec<(Pattern, &QueryTree, u32, Vec<u32>)> = trees
+            .iter()
+            .map(|t| (Pattern::P1, t, 3u32, vec![0u32, 1]))
+            .collect();
+        let dag = train_dag(&refs);
+        let engine = Engine::with_semantic(&rt, EngineConfig::default(), &sem);
+        let mut grads = Grads::default();
+        let stats = engine.run(&dag, &st, &mut grads).unwrap();
+        assert!(stats.spec_hits + stats.spec_misses > 0, "overlap must be exercised");
+        assert_eq!(
+            rt.contract_violations.load(std::sync::atomic::Ordering::SeqCst),
+            0,
+            "gated submissions must never overlap on an unsafe runtime"
+        );
     }
 
     #[test]

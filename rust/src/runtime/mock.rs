@@ -14,10 +14,26 @@
 //! | negate      | out = -x                 | g_x = -gout                  |
 //! | score       | loss = Σ mask·(q·pos)    | g_q = mask·pos, g_pos = mask·q, g_neg = 0 |
 //! | eval        | scores = Q · Eᵀ          | —                            |
+//! | fused-sem   | out = e + s              | g_e = gout                   |
 //!
 //! These are *not* the model math (that is checked against the real
 //! artifacts in `rust/tests/`); they exist so engine tests can assert exact
-//! end-to-end gradient propagation through arbitrary DAGs.
+//! end-to-end gradient propagation through arbitrary DAGs. `fused-sem` is
+//! the mock counterpart of the `fused-<encoder>` semantic artifacts, paired
+//! with [`crate::semantic::mock`] sources.
+//!
+//! # Concurrency instrumentation
+//!
+//! The mock's host math is pure, so concurrent `execute` calls are
+//! genuinely safe and [`Runtime::concurrent_execute_safe`] defaults to
+//! `true`. Tests of the runtime concurrency contract flip it off with
+//! [`MockRuntime::set_concurrent_execute_safe`]: the mock then *detects*
+//! contract breaches — any `execute` entered while another is in flight
+//! bumps [`MockRuntime::contract_violations`] — while well-behaved callers
+//! (routing through the `*_gated` wrappers) serialize on the submission
+//! lock and never trip it. [`MockRuntime::with_call_log`] additionally
+//! records begin/end events per call so tests can assert the exact
+//! interleaving.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,6 +50,20 @@ pub const MOCK_D: usize = 4;
 pub const MOCK_NEG: usize = 2;
 pub const MOCK_BUCKETS: [usize; 3] = [2, 4, 8];
 
+/// Encoder tag of the mock fused-semantic artifacts
+/// (`mock_fused-sem_{fwd,vjp}_b*`); pairs with [`crate::semantic::mock`].
+pub const MOCK_ENCODER: &str = "sem";
+
+/// One entry of the mock's optional execution call log: `(event, artifact)`
+/// where `event` is [`CallEvent::Begin`] on entry (after the shape checks)
+/// and [`CallEvent::End`] on exit. With serialized submission the log is a
+/// sequence of balanced Begin/End pairs; interleaved pairs are concurrency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallEvent {
+    Begin,
+    End,
+}
+
 pub struct MockRuntime {
     manifest: Manifest,
     resident: Mutex<HashMap<String, Vec<HostTensor>>>,
@@ -44,6 +74,37 @@ pub struct MockRuntime {
     /// launch+compute time so pipeline benches can measure gather/execute
     /// overlap without XLA
     exec_delay: Option<Duration>,
+    /// what this runtime *claims* about concurrent execute (the contract
+    /// under test); the mock itself is always internally race-free
+    concurrent_safe: bool,
+    /// serialized-submission handle for `concurrent_safe == false`
+    submission: Mutex<()>,
+    /// `execute` calls currently in flight (contract breach detector)
+    in_flight: AtomicU64,
+    /// `execute` entries observed while another call was in flight *and*
+    /// the runtime was marked not concurrency-safe — each one is a caller
+    /// that bypassed the submission lock
+    pub contract_violations: AtomicU64,
+    /// begin/end event log, recorded only when enabled via `with_call_log`
+    call_log: Option<Mutex<Vec<(CallEvent, String)>>>,
+}
+
+/// Deepest Begin-without-End nesting of a [`MockRuntime`] call log: 1 means
+/// strictly serialized execution, ≥ 2 means two artifact executions
+/// overlapped in time. Companion analyzer to
+/// [`MockRuntime::take_call_log`] for concurrency-contract tests.
+pub fn max_call_depth(log: &[(CallEvent, String)]) -> usize {
+    let (mut depth, mut max) = (0usize, 0usize);
+    for (e, _) in log {
+        match e {
+            CallEvent::Begin => {
+                depth += 1;
+                max = max.max(depth);
+            }
+            CallEvent::End => depth -= 1,
+        }
+    }
+    max
 }
 
 fn arg(name: &str, shape: Vec<usize>, is_param: bool) -> ArgMeta {
@@ -121,6 +182,15 @@ impl MockRuntime {
                      arg("neg", vec![b, n, d], false), arg("mask", vec![b], false)],
                 vec![arg("loss", vec![1], false), arg("g_q", vec![b, d], false),
                      arg("g_pos", vec![b, d], false), arg("g_neg", vec![b, n, d], false)]));
+            // semantic fusion (EmbedE swap-in): anchor rows + H_sem rows
+            let fused = format!("fused-{MOCK_ENCODER}");
+            push(mk_artifact(&fused, "fwd", b,
+                vec![arg("e", vec![b, d], false), arg("s", vec![b, d], false)],
+                vec![arg("out", vec![b, d], false)]));
+            push(mk_artifact(&fused, "vjp", b,
+                vec![arg("e", vec![b, d], false), arg("s", vec![b, d], false),
+                     arg("gout", vec![b, d], false)],
+                vec![arg("g_e", vec![b, d], false)]));
         }
         let eval_b = 2;
         let eval_chunk = 4;
@@ -166,6 +236,11 @@ impl MockRuntime {
             calls: Mutex::new(BTreeMap::new()),
             executions: AtomicU64::new(0),
             exec_delay: None,
+            concurrent_safe: true,
+            submission: Mutex::new(()),
+            in_flight: AtomicU64::new(0),
+            contract_violations: AtomicU64::new(0),
+            call_log: None,
         }
     }
 
@@ -177,6 +252,28 @@ impl MockRuntime {
         self
     }
 
+    /// Record a `(CallEvent, artifact)` log entry on entry/exit of every
+    /// `execute` call (deterministic-interleaving tests).
+    pub fn with_call_log(mut self) -> MockRuntime {
+        self.call_log = Some(Mutex::new(Vec::new()));
+        self
+    }
+
+    /// Override what the runtime reports for
+    /// [`Runtime::concurrent_execute_safe`]. Marking it `false` arms the
+    /// contract-breach detector: concurrent `execute` entries then count
+    /// into [`MockRuntime::contract_violations`].
+    pub fn set_concurrent_execute_safe(&mut self, safe: bool) {
+        self.concurrent_safe = safe;
+    }
+
+    /// Drain the call log (empty when logging was not enabled).
+    pub fn take_call_log(&self) -> Vec<(CallEvent, String)> {
+        self.call_log
+            .as_ref()
+            .map_or_else(Vec::new, |l| std::mem::take(&mut *l.lock().unwrap()))
+    }
+
     /// Override the manifest's per-operator B_max cap (tests of the
     /// `dims.b_max_by_op` routing).
     pub fn set_b_max_for(&mut self, op: &str, cap: usize) {
@@ -185,6 +282,38 @@ impl MockRuntime {
 
     pub fn calls_of(&self, name: &str) -> u64 {
         self.calls.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    fn log_event(&self, event: CallEvent, name: &str) {
+        if let Some(log) = &self.call_log {
+            log.lock().unwrap().push((event, name.to_string()));
+        }
+    }
+}
+
+/// RAII marker for one in-flight `execute`: logs Begin/End and flags a
+/// contract violation when a second call enters a runtime that reported
+/// `concurrent_execute_safe() == false`.
+struct InFlight<'a> {
+    rt: &'a MockRuntime,
+    name: &'a str,
+}
+
+impl<'a> InFlight<'a> {
+    fn enter(rt: &'a MockRuntime, name: &'a str) -> InFlight<'a> {
+        let concurrent = rt.in_flight.fetch_add(1, Ordering::SeqCst) > 0;
+        if concurrent && !rt.concurrent_safe {
+            rt.contract_violations.fetch_add(1, Ordering::SeqCst);
+        }
+        rt.log_event(CallEvent::Begin, name);
+        InFlight { rt, name }
+    }
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        self.rt.log_event(CallEvent::End, self.name);
+        self.rt.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -199,6 +328,14 @@ impl Runtime for MockRuntime {
         &self.manifest
     }
 
+    fn concurrent_execute_safe(&self) -> bool {
+        self.concurrent_safe
+    }
+
+    fn submission_lock(&self) -> &Mutex<()> {
+        &self.submission
+    }
+
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let meta = self.manifest.artifact(name)?;
         if meta.args.len() != inputs.len() {
@@ -209,6 +346,7 @@ impl Runtime for MockRuntime {
                 bail!("{name}: arg {} shape {:?} != manifest {:?}", a.name, t.shape, a.shape);
             }
         }
+        let _in_flight = InFlight::enter(self, name);
         self.executions.fetch_add(1, Ordering::Relaxed);
         *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
         if let Some(delay) = self.exec_delay {
@@ -220,6 +358,14 @@ impl Runtime for MockRuntime {
         let out = match (meta.op.as_str(), meta.direction.as_str()) {
             ("embed", "fwd") => vec![inputs[0].clone()],
             ("embed", "vjp") => vec![inputs[1].clone()],
+            ("fused-sem", "fwd") => {
+                let mut o = inputs[0].clone();
+                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
+                    *a += b;
+                }
+                vec![o]
+            }
+            ("fused-sem", "vjp") => vec![inputs[2].clone()],
             ("project", "fwd") => {
                 let mut o = inputs[0].clone();
                 for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
@@ -402,6 +548,63 @@ mod tests {
         let t = std::time::Instant::now();
         rt.execute("mock_negate_fwd_b2", &[x]).unwrap();
         assert!(t.elapsed() >= std::time::Duration::from_millis(5));
+    }
+
+    #[test]
+    fn gated_submission_serializes_on_an_unsafe_runtime() {
+        // Two threads hammer the gated path of a runtime that reports
+        // concurrent execute unsafe: the submission lock must serialize
+        // them — zero violations, call log strictly depth-1.
+        let mut rt = MockRuntime::new().with_exec_delay(Duration::from_millis(2)).with_call_log();
+        rt.set_concurrent_execute_safe(false);
+        let x = HostTensor::zeros(vec![2, 4]);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    for _ in 0..5 {
+                        rt.execute_gated("mock_negate_fwd_b2", std::slice::from_ref(&x))
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(rt.contract_violations.load(Ordering::SeqCst), 0);
+        let log = rt.take_call_log();
+        assert_eq!(log.len(), 20, "10 calls, Begin+End each");
+        assert_eq!(max_call_depth(&log), 1, "gated calls must never interleave: {log:?}");
+    }
+
+    #[test]
+    fn seeded_violation_is_caught_by_the_detector() {
+        // The same workload bypassing the gate (raw `execute`) must trip
+        // the breach detector: with a 5 ms in-call sleep and a barrier
+        // start, overlap is guaranteed.
+        let mut rt = MockRuntime::new().with_exec_delay(Duration::from_millis(5)).with_call_log();
+        rt.set_concurrent_execute_safe(false);
+        let x = HostTensor::zeros(vec![2, 4]);
+        let barrier = std::sync::Barrier::new(2);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                s.spawn(|| {
+                    barrier.wait();
+                    rt.execute("mock_negate_fwd_b2", std::slice::from_ref(&x)).unwrap();
+                });
+            }
+        });
+        assert!(rt.contract_violations.load(Ordering::SeqCst) >= 1);
+        assert!(max_call_depth(&rt.take_call_log()) >= 2, "overlap must show in the log");
+    }
+
+    #[test]
+    fn fused_semantic_artifact_sums_rows_and_passes_gradients() {
+        let rt = MockRuntime::new();
+        let e = HostTensor::new(vec![2, 4], vec![1.0; 8]).unwrap();
+        let s = HostTensor::new(vec![2, 4], vec![0.5; 8]).unwrap();
+        let out = rt.execute("mock_fused-sem_fwd_b2", &[e.clone(), s.clone()]).unwrap();
+        assert_eq!(out[0].data, vec![1.5; 8]);
+        let g = HostTensor::new(vec![2, 4], vec![0.25; 8]).unwrap();
+        let grads = rt.execute("mock_fused-sem_vjp_b2", &[e, s, g]).unwrap();
+        assert_eq!(grads[0].data, vec![0.25; 8]);
     }
 
     #[test]

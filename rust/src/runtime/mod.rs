@@ -15,19 +15,76 @@ pub mod pjrt;
 
 pub use host::HostTensor;
 pub use manifest::{ArgMeta, ArtifactMeta, Dims, Manifest, ParamFile};
-pub use mock::MockRuntime;
+pub use mock::{CallEvent, MockRuntime};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRuntime;
+
+use std::sync::Mutex;
 
 use anyhow::Result;
 
 /// What the engine needs from an executor backend.
+///
+/// # Concurrency contract
+///
+/// The pipelined engine overlaps host-side gathers with artifact execution
+/// on a persistent worker thread. Under semantic fusion a gather may itself
+/// execute encoder artifacts, so two threads can reach the backend at once.
+/// Backends declare what they tolerate via
+/// [`Runtime::concurrent_execute_safe`]; callers that may race another
+/// thread submit through the `*_gated` wrappers, which are free when the
+/// backend is concurrency-safe and serialize on
+/// [`Runtime::submission_lock`] otherwise. Plain [`Runtime::execute`] /
+/// [`Runtime::execute_resident`] remain single-thread entry points and must
+/// never be called from a second thread unless the backend reports safe.
 pub trait Runtime: Send + Sync {
     /// The artifact catalogue (arg order, shapes, dims).
     fn manifest(&self) -> &Manifest;
 
     /// Execute an artifact with all arguments supplied from host memory.
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Whether [`Runtime::execute`] may be invoked concurrently from
+    /// multiple threads. Backends returning `false` still work with the
+    /// pipelined engine — cross-thread submissions serialize through
+    /// [`Runtime::submission_lock`] via the `*_gated` wrappers.
+    fn concurrent_execute_safe(&self) -> bool {
+        false
+    }
+
+    /// Serialization point for backends without concurrent execute: the
+    /// engine's serialized-submission handle. Implementations own one
+    /// `Mutex<()>`; it is only contended when a gather worker executes
+    /// encoder artifacts while the main thread executes a round.
+    fn submission_lock(&self) -> &Mutex<()>;
+
+    /// [`Runtime::execute`] through the concurrency contract: a free call
+    /// when the backend tolerates concurrent submission, a serialized one
+    /// otherwise.
+    fn execute_gated(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if self.concurrent_execute_safe() {
+            self.execute(name, inputs)
+        } else {
+            let _serialized = self.submission_lock().lock().unwrap();
+            self.execute(name, inputs)
+        }
+    }
+
+    /// [`Runtime::execute_resident`] through the concurrency contract (the
+    /// encoder-artifact path of `SemanticSource::gather`).
+    fn execute_resident_gated(
+        &self,
+        name: &str,
+        resident_key: &str,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        if self.concurrent_execute_safe() {
+            self.execute_resident(name, resident_key, inputs)
+        } else {
+            let _serialized = self.submission_lock().lock().unwrap();
+            self.execute_resident(name, resident_key, inputs)
+        }
+    }
 
     /// Upload a named set of device-resident tensors (uploaded once; the
     /// emulation of the paper's GPU-resident caches, §4.4). Idempotent.

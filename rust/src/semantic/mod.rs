@@ -23,6 +23,16 @@ use crate::model::state::read_f32_file;
 use crate::runtime::{HostTensor, Runtime};
 
 /// Engine hook: supply `[bucket, d_l]` semantic rows for anchor entities.
+///
+/// # Concurrency
+///
+/// The pipelined engine may call [`SemanticSource::gather`] from its
+/// persistent gather worker *while the main thread executes an artifact*.
+/// Implementations that run encoder artifacts (joint mode) must therefore
+/// submit through the runtime's gated path
+/// ([`Runtime::execute_resident_gated`] / `execute_gated`), which
+/// serializes against the main thread on backends without concurrent
+/// execute; pure host-memory sources (the decoupled cache) need nothing.
 pub trait SemanticSource: Send + Sync {
     fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor>;
     /// encoder tag — selects the `fused-<enc>` artifacts
@@ -75,7 +85,10 @@ fn encode_chunk(
         tok.row_mut(i).copy_from_slice(desc.row(id));
     }
     let name = format!("pte_{encoder}_fwd_b{bucket}");
-    let out = rt.execute_resident(&name, &resident_key(encoder, purpose), &[tok])?;
+    // gated: joint-mode gathers run on the engine's gather worker while the
+    // main thread executes a round — the contract serializes the two on
+    // backends that cannot take concurrent submissions
+    let out = rt.execute_resident_gated(&name, &resident_key(encoder, purpose), &[tok])?;
     Ok(out.into_iter().next().unwrap())
 }
 
@@ -184,5 +197,91 @@ impl SemanticSource for DecoupledCache {
 
     fn resident_bytes(&self) -> usize {
         self.bytes() // H_sem stays resident; the encoder is gone
+    }
+}
+
+/// Test-double sources pairing with [`crate::runtime::MockRuntime`]'s
+/// `fused-sem` artifacts: the semantic-layer counterpart of the mock
+/// runtime, used by the scheduler-equivalence suite and the fusion bench
+/// smoke (no AOT artifacts needed).
+pub mod mock {
+    use anyhow::Result;
+
+    use crate::runtime::mock::MOCK_ENCODER;
+    use crate::runtime::{HostTensor, Runtime};
+
+    use super::SemanticSource;
+
+    /// Deterministic in-memory H_sem table (decoupled-style): `gather` is a
+    /// pure host copy and never touches the runtime, so it is trivially
+    /// safe under any engine overlap.
+    pub struct TableSource {
+        d_l: usize,
+        rows: Vec<f32>,
+    }
+
+    impl TableSource {
+        /// `n` rows of width `d_l` with `row[i][c] = 0.01·(i + c)` —
+        /// deterministic and distinct per entity, so fused numerics are
+        /// visibly different from plain embedding lookups.
+        pub fn linear(n: usize, d_l: usize) -> TableSource {
+            let rows = (0..n * d_l).map(|k| 0.01 * ((k / d_l + k % d_l) as f32)).collect();
+            TableSource { d_l, rows }
+        }
+    }
+
+    impl SemanticSource for TableSource {
+        fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor> {
+            let mut out = HostTensor::zeros(vec![bucket, self.d_l]);
+            for (i, &id) in ids.iter().enumerate() {
+                let src = id as usize * self.d_l;
+                out.row_mut(i).copy_from_slice(&self.rows[src..src + self.d_l]);
+            }
+            Ok(out)
+        }
+
+        fn encoder(&self) -> &str {
+            MOCK_ENCODER
+        }
+
+        fn resident_bytes(&self) -> usize {
+            self.rows.len() * 4
+        }
+    }
+
+    /// Encoder-simulating source (joint-style): every `gather` routes the
+    /// rows of a [`TableSource`] through the runtime's mock embed artifact
+    /// (identity) via the **gated** submission path, generating real
+    /// cross-thread artifact executions for concurrency-contract tests
+    /// while keeping numerics identical to [`TableSource`].
+    pub struct EncoderSource<'a> {
+        rt: &'a dyn Runtime,
+        table: TableSource,
+    }
+
+    impl<'a> EncoderSource<'a> {
+        /// The table width must equal the mock `d` so the embed artifact
+        /// shapes line up.
+        pub fn new(rt: &'a dyn Runtime, n: usize) -> EncoderSource<'a> {
+            let d = rt.manifest().dims.d;
+            EncoderSource { rt, table: TableSource::linear(n, d) }
+        }
+    }
+
+    impl SemanticSource for EncoderSource<'_> {
+        fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor> {
+            let rows = self.table.gather(ids, bucket)?;
+            let name = format!("mock_embed_fwd_b{bucket}");
+            let out = self.rt.execute_gated(&name, std::slice::from_ref(&rows))?;
+            Ok(out.into_iter().next().unwrap())
+        }
+
+        fn encoder(&self) -> &str {
+            MOCK_ENCODER
+        }
+
+        fn resident_bytes(&self) -> usize {
+            self.table.resident_bytes()
+        }
     }
 }

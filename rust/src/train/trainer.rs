@@ -124,6 +124,7 @@ impl<'a> Trainer<'a> {
             let mut step_launch = 0usize;
             let mut step_pad = 0usize;
             let (mut step_gather, mut step_exec, mut step_overlap) = (0.0f64, 0.0f64, 0.0f64);
+            let (mut step_idle, mut step_wait) = (0.0f64, 0.0f64);
             let mut per_pattern: Vec<(&'static str, f64, usize)> = Vec::new();
             phases.time("execute", || -> Result<()> {
                 for dag in &dags {
@@ -134,16 +135,23 @@ impl<'a> Trainer<'a> {
                     step_gather += stats.gather_secs;
                     step_exec += stats.execute_secs;
                     step_overlap += stats.overlap_secs;
+                    step_idle += stats.worker_idle_secs;
+                    step_wait += stats.gather_wait_secs;
                     peak_live = peak_live.max(stats.peak_live_bytes);
                     per_pattern.extend(stats.per_pattern_loss);
                 }
                 Ok(())
             })?;
             // sub-attribution of the execute phase (pipelined engine):
-            // overlap is gather time hidden under artifact execution
+            // overlap is gather time hidden under artifact execution;
+            // worker_idle / gather_wait are the persistent-worker contention
+            // counters (worker starved of jobs vs main thread starved of
+            // prefetches)
             phases.add("execute/gather", step_gather);
             phases.add("execute/artifacts", step_exec);
             phases.add("execute/overlap", step_overlap);
+            phases.add("execute/worker_idle", step_idle);
+            phases.add("execute/gather_wait", step_wait);
 
             // ---- optimize ----------------------------------------------------
             grads.normalize();

@@ -17,26 +17,198 @@ fn case_multiplier() -> usize {
     std::env::var("NGDB_PROP_MULT").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
 }
 
+fn base_seed() -> u64 {
+    std::env::var("NGDB_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xA11CE)
+}
+
+fn case_seed(base: u64, case: usize) -> u64 {
+    base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
 /// Run `cases` generative checks of `f`; panics (test failure) with the
 /// failing seed on the first counterexample.
 pub fn prop_check<F>(name: &str, cases: usize, mut f: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
-    let base: u64 = std::env::var("NGDB_PROP_SEED")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0xA11CE);
+    let base = base_seed();
     let cases = cases * case_multiplier();
     for case in 0..cases {
-        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        let mut rng = Rng::new(seed);
+        let mut rng = Rng::new(case_seed(base, case));
         if let Err(msg) = f(&mut rng) {
             panic!(
                 "property {name:?} failed on case {case}/{cases} \
                  (replay: NGDB_PROP_SEED={} case offset {case}):\n{msg}",
                 base
             );
+        }
+    }
+}
+
+/// Cap on greedy shrink iterations (each iteration re-runs `check` on every
+/// candidate, so the worst case is `SHRINK_BUDGET * max-candidates` runs).
+const SHRINK_BUDGET: usize = 200;
+
+/// Like [`prop_check`], but with generation split from checking so failing
+/// values can be **shrunk**: on a counterexample the harness greedily walks
+/// `shrink` candidates (re-checking each) to a local minimum before
+/// reporting, so the panic message carries the smallest failing value it
+/// could find instead of the raw random one.
+pub fn prop_check_shrink<T, G, S, C>(name: &str, cases: usize, mut generate: G, shrink: S, check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    C: Fn(&T) -> Result<(), String>,
+{
+    let base = base_seed();
+    let cases = cases * case_multiplier();
+    for case in 0..cases {
+        let mut rng = Rng::new(case_seed(base, case));
+        let value = generate(&mut rng);
+        let Err(msg) = check(&value) else { continue };
+
+        // greedy descent: take the first failing shrink candidate, repeat
+        let (mut cur, mut cur_msg, mut steps) = (value, msg, 0usize);
+        'descend: while steps < SHRINK_BUDGET {
+            for cand in shrink(&cur) {
+                if let Err(m) = check(&cand) {
+                    cur = cand;
+                    cur_msg = m;
+                    steps += 1;
+                    continue 'descend;
+                }
+            }
+            break; // local minimum: every candidate passes
+        }
+        panic!(
+            "property {name:?} failed on case {case}/{cases} \
+             (replay: NGDB_PROP_SEED={base} case offset {case}); \
+             shrunk {steps} steps to minimal counterexample:\n{cur:#?}\n{cur_msg}"
+        );
+    }
+}
+
+/// Shared random-workload generator for engine/scheduler property tests:
+/// grounded query mixtures over the toy graph, remapped into small
+/// embedding tables, with [`QuerySet::shrink`] candidates for
+/// [`prop_check_shrink`]. One generator, reused by the in-crate engine
+/// tests, `rust/tests/proptests.rs`, and the scheduler-equivalence suite —
+/// instead of three ad-hoc copies.
+pub mod queries {
+    use super::gen;
+    use super::Rng;
+    use crate::kg::{KgSpec, KgStore};
+    use crate::query::{Pattern, QueryDag, QueryTree};
+    use crate::sampler::ground;
+
+    /// One grounded training query (ids already remapped into the target
+    /// vocabulary sizes).
+    #[derive(Clone, Debug)]
+    pub struct QuerySpec {
+        pub pattern: Pattern,
+        pub tree: QueryTree,
+        pub answer: u32,
+        pub negatives: Vec<u32>,
+    }
+
+    /// A shrinkable random workload.
+    #[derive(Clone, Debug)]
+    pub struct QuerySet(pub Vec<QuerySpec>);
+
+    /// The small deterministic graph every engine property test samples
+    /// from.
+    pub fn toy_kg() -> KgStore {
+        KgSpec::preset("toy", 1.0).unwrap().generate().unwrap()
+    }
+
+    /// Remap every entity/relation id into `[0, ne)` / `[0, nr)` so trees
+    /// grounded on an arbitrary graph index small test embedding tables.
+    pub fn remap_tree(tree: &QueryTree, ne: u32, nr: u32) -> QueryTree {
+        match tree {
+            QueryTree::Anchor(e) => QueryTree::Anchor(e % ne),
+            QueryTree::Project(c, r) => {
+                QueryTree::Project(Box::new(remap_tree(c, ne, nr)), r % nr)
+            }
+            QueryTree::Intersect(cs) => {
+                QueryTree::Intersect(cs.iter().map(|c| remap_tree(c, ne, nr)).collect())
+            }
+            QueryTree::Union(cs) => {
+                QueryTree::Union(cs.iter().map(|c| remap_tree(c, ne, nr)).collect())
+            }
+            QueryTree::Negate(c) => QueryTree::Negate(Box::new(remap_tree(c, ne, nr))),
+        }
+    }
+
+    /// Up to `max_q` grounded queries over `kg` drawn from `patterns`,
+    /// remapped into `ne`/`nr`-sized tables, each with `n_neg` random
+    /// negatives. May return fewer queries (grounding can fail) — callers
+    /// should skip empty sets.
+    pub fn random_set(
+        rng: &mut Rng,
+        kg: &KgStore,
+        patterns: &[Pattern],
+        max_q: usize,
+        ne: u32,
+        nr: u32,
+        n_neg: usize,
+    ) -> QuerySet {
+        let n_q = gen::size(rng, 1, max_q);
+        let mut specs = Vec::new();
+        for _ in 0..n_q {
+            let p = *rng.choice(patterns);
+            if let Some(g) = ground(kg, rng, p) {
+                specs.push(QuerySpec {
+                    pattern: p,
+                    tree: remap_tree(&g.tree, ne, nr),
+                    answer: g.answer % ne,
+                    negatives: (0..n_neg).map(|_| rng.below(ne as usize) as u32).collect(),
+                });
+            }
+        }
+        QuerySet(specs)
+    }
+
+    impl QuerySet {
+        pub fn is_empty(&self) -> bool {
+            self.0.is_empty()
+        }
+
+        pub fn len(&self) -> usize {
+            self.0.len()
+        }
+
+        /// Lower the workload into one fused training DAG (gradient nodes
+        /// appended).
+        pub fn train_dag(&self) -> QueryDag {
+            let mut dag = QueryDag::default();
+            for q in &self.0 {
+                dag.add_query(&q.tree, q.answer, q.negatives.clone(), q.pattern.name(), true)
+                    .expect("generated query must lower");
+            }
+            dag.add_gradient_nodes();
+            dag
+        }
+
+        /// Shrink candidates, biggest cuts first: the two halves, then each
+        /// drop-one subset (only for small sets — drop-one on a large set
+        /// explodes the candidate count without shrinking much).
+        pub fn shrink(&self) -> Vec<QuerySet> {
+            let n = self.0.len();
+            if n <= 1 {
+                return Vec::new();
+            }
+            let mut out = Vec::new();
+            out.push(QuerySet(self.0[..n / 2].to_vec()));
+            out.push(QuerySet(self.0[n / 2..].to_vec()));
+            if n <= 12 {
+                for i in 0..n {
+                    let mut v = self.0.clone();
+                    v.remove(i);
+                    out.push(QuerySet(v));
+                }
+            }
+            out
         }
     }
 }

@@ -1,0 +1,83 @@
+//! `dims.b_max_by_op` round-trip: manifest JSON → `Dims::b_max_for` →
+//! `Engine::b_max` routing (observed through the artifacts the engine
+//! launches), covering the empty-map fast path (no per-op lookups, global
+//! cap everywhere) and a per-op override sourced from JSON.
+
+use ngdb_zoo::exec::{Engine, EngineConfig, Grads};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::{Manifest, MockRuntime, Runtime};
+
+/// A dims fragment in exactly the schema aot.py emits.
+fn manifest_json(b_max_by_op: &str) -> String {
+    format!(
+        r#"{{
+      "dims": {{"d": 4, "n_neg": 2, "buckets": [2, 4, 8], "b_max": 8,{b_max_by_op}
+               "eval_b": 2, "eval_chunk": 4, "intersect_cards": [2, 3],
+               "union_cards": [2], "tok_dim": 8, "gamma": 12.0,
+               "use_pallas": false, "pte_bucket": 2, "ptes": {{}},
+               "repr_dim": {{"mock": 4}}, "ent_dim": {{"mock": 4}},
+               "rel_dim": {{"mock": 4}}}},
+      "params": {{"models": {{"mock": []}}, "pte": {{}}, "fusion": {{}}}},
+      "artifacts": []
+    }}"#
+    )
+}
+
+fn eight_p1_dag() -> QueryDag {
+    let mut dag = QueryDag::default();
+    for i in 0..8u32 {
+        let tree = QueryTree::instantiate(Pattern::P1, &[i % 12], &[i % 6]).unwrap();
+        dag.add_query(&tree, 3, vec![0, 1], Pattern::P1.name(), true).unwrap();
+    }
+    dag.add_gradient_nodes();
+    dag
+}
+
+fn run(rt: &MockRuntime, dag: &QueryDag) {
+    let st = ModelState::init(rt.manifest(), "mock", 12, 6, None, 3).unwrap();
+    let engine = Engine::new(rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    engine.run(dag, &st, &mut grads).unwrap();
+}
+
+#[test]
+fn per_op_caps_round_trip_from_json_into_engine_routing() {
+    // parse the JSON exactly as a real manifest.json would arrive …
+    let parsed = Manifest::parse(&manifest_json(
+        r#" "b_max_by_op": {"embed": 2, "score": 99},"#,
+    ))
+    .unwrap();
+    assert_eq!(parsed.dims.b_max_for("embed"), 2);
+    assert_eq!(parsed.dims.b_max_for("score"), 8, "overrides clamp to the global cap");
+    assert_eq!(parsed.dims.b_max_for("project"), 8, "absent ops fall back");
+
+    // … and route the parsed caps through a live engine: 8 ready embeds
+    // under a cap of 2 must launch the b=2 artifact 4 times while projects
+    // keep the global cap (one b=8 launch).
+    let mut rt = MockRuntime::new();
+    for (op, cap) in &parsed.dims.b_max_by_op {
+        rt.set_b_max_for(op, *cap);
+    }
+    run(&rt, &eight_p1_dag());
+    assert_eq!(rt.calls_of("mock_embed_fwd_b2"), 4);
+    assert_eq!(rt.calls_of("mock_embed_fwd_b8"), 0);
+    assert_eq!(rt.calls_of("mock_project_fwd_b8"), 1);
+}
+
+#[test]
+fn missing_map_takes_the_empty_fast_path() {
+    // aot.py omits the key entirely when no op needs a custom cap: the
+    // parsed map must be empty (the engine then skips per-op lookups —
+    // `Engine::b_max` reads `dims.b_max` without allocating an op name)
+    // and every pool batches at the global cap.
+    let parsed = Manifest::parse(&manifest_json("")).unwrap();
+    assert!(parsed.dims.b_max_by_op.is_empty());
+    assert_eq!(parsed.dims.b_max_for("embed"), 8);
+
+    let rt = MockRuntime::new();
+    assert!(rt.manifest().dims.b_max_by_op.is_empty());
+    run(&rt, &eight_p1_dag());
+    assert_eq!(rt.calls_of("mock_embed_fwd_b8"), 1, "uncapped: one fused launch");
+    assert_eq!(rt.calls_of("mock_embed_fwd_b2"), 0);
+}

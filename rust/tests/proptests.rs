@@ -11,7 +11,8 @@ use ngdb_zoo::model::ModelState;
 use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
 use ngdb_zoo::runtime::{MockRuntime, Runtime};
 use ngdb_zoo::sampler::ground;
-use ngdb_zoo::util::proptest::{gen, prop_check};
+use ngdb_zoo::util::proptest::queries::{self, QuerySet};
+use ngdb_zoo::util::proptest::{gen, prop_check, prop_check_shrink};
 use ngdb_zoo::util::rng::Rng;
 
 fn random_kg(rng: &mut Rng) -> KgStore {
@@ -111,68 +112,52 @@ fn grounded_answer_is_always_in_answer_set() {
 
 #[test]
 fn batched_equals_query_level_equals_singleton_loss() {
-    // all three batching granularities must compute the same numbers
-    prop_check("scheduling-policy numerics invariance", 15, |rng| {
-        let rt = MockRuntime::new();
-        let state =
-            ModelState::init(rt.manifest(), "mock", 64, 8, None, 3).unwrap();
-        let kg = KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
-        let n_q = gen::size(rng, 2, 12);
-        let mut dag_all = QueryDag::default();
-        let mut per_query_dags = Vec::new();
-        for _ in 0..n_q {
-            let p = *rng.choice(&[Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Up]);
-            let Some(q) = ground(&kg, rng, p) else { continue };
-            let remap = |e: u32| e % 64;
-            let tree = remap_tree(&q.tree, 64, 8);
-            dag_all
-                .add_query(&tree, remap(q.answer), vec![0, 1], p.name(), true)
-                .unwrap();
-            let mut d1 = QueryDag::default();
-            d1.add_query(&tree, remap(q.answer), vec![0, 1], p.name(), true).unwrap();
-            d1.add_gradient_nodes();
-            per_query_dags.push(d1);
-        }
-        if per_query_dags.is_empty() {
-            return Ok(());
-        }
-        dag_all.add_gradient_nodes();
-        let engine = Engine::new(&rt, EngineConfig::default());
-        let mut g_all = Grads::default();
-        engine.run(&dag_all, &state, &mut g_all).map_err(|e| e.to_string())?;
-        let mut g_sep = Grads::default();
-        for d in &per_query_dags {
-            engine.run(d, &state, &mut g_sep).map_err(|e| e.to_string())?;
-        }
-        if (g_all.loss - g_sep.loss).abs() > 1e-4 * (1.0 + g_sep.loss.abs()) {
-            return Err(format!("loss mismatch {} vs {}", g_all.loss, g_sep.loss));
-        }
-        for (k, v) in &g_all.ent {
-            let w = g_sep.ent.get(k).ok_or(format!("missing ent grad {k}"))?;
-            for (a, b) in v.iter().zip(w) {
-                if (a - b).abs() > 1e-4 {
-                    return Err(format!("ent {k} grad {a} vs {b}"));
+    // all three batching granularities must compute the same numbers; on a
+    // counterexample the shared QuerySet shrinker minimizes the workload
+    let rt = MockRuntime::new();
+    let state = ModelState::init(rt.manifest(), "mock", 64, 8, None, 3).unwrap();
+    let kg = queries::toy_kg();
+    prop_check_shrink(
+        "scheduling-policy numerics invariance",
+        15,
+        |rng| {
+            queries::random_set(
+                rng,
+                &kg,
+                &[Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Up],
+                12,
+                64,
+                8,
+                2,
+            )
+        },
+        QuerySet::shrink,
+        |set| {
+            if set.is_empty() {
+                return Ok(());
+            }
+            let engine = Engine::new(&rt, EngineConfig::default());
+            let mut g_all = Grads::default();
+            engine.run(&set.train_dag(), &state, &mut g_all).map_err(|e| e.to_string())?;
+            let mut g_sep = Grads::default();
+            for q in &set.0 {
+                let one = QuerySet(vec![q.clone()]);
+                engine.run(&one.train_dag(), &state, &mut g_sep).map_err(|e| e.to_string())?;
+            }
+            if (g_all.loss - g_sep.loss).abs() > 1e-4 * (1.0 + g_sep.loss.abs()) {
+                return Err(format!("loss mismatch {} vs {}", g_all.loss, g_sep.loss));
+            }
+            for (k, v) in &g_all.ent {
+                let w = g_sep.ent.get(k).ok_or(format!("missing ent grad {k}"))?;
+                for (a, b) in v.iter().zip(w) {
+                    if (a - b).abs() > 1e-4 {
+                        return Err(format!("ent {k} grad {a} vs {b}"));
+                    }
                 }
             }
-        }
-        Ok(())
-    });
-}
-
-fn remap_tree(tree: &QueryTree, ne: u32, nr: u32) -> QueryTree {
-    match tree {
-        QueryTree::Anchor(e) => QueryTree::Anchor(e % ne),
-        QueryTree::Project(c, r) => {
-            QueryTree::Project(Box::new(remap_tree(c, ne, nr)), r % nr)
-        }
-        QueryTree::Intersect(cs) => {
-            QueryTree::Intersect(cs.iter().map(|c| remap_tree(c, ne, nr)).collect())
-        }
-        QueryTree::Union(cs) => {
-            QueryTree::Union(cs.iter().map(|c| remap_tree(c, ne, nr)).collect())
-        }
-        QueryTree::Negate(c) => QueryTree::Negate(Box::new(remap_tree(c, ne, nr))),
-    }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -204,21 +189,21 @@ fn multi_worker_gradients_match_single_worker_totals() {
     prop_check("all-reduce equivalence", 10, |rng| {
         let rt = MockRuntime::new();
         let state = ModelState::init(rt.manifest(), "mock", 32, 4, None, 1).unwrap();
-        let kg = KgSpec::preset("toy", 1.0).unwrap().generate().unwrap();
+        let kg = queries::toy_kg();
         let n = gen::size(rng, 2, 8);
-        let mut queries = Vec::new();
+        let mut qs = Vec::new();
         for _ in 0..n {
             if let Some(q) = ground(&kg, rng, Pattern::P1) {
-                queries.push((remap_tree(&q.tree, 32, 4), q.answer % 32));
+                qs.push((queries::remap_tree(&q.tree, 32, 4), q.answer % 32));
             }
         }
-        if queries.len() < 2 {
+        if qs.len() < 2 {
             return Ok(());
         }
         let engine = Engine::new(&rt, EngineConfig::default());
         // "two workers": split in half, merge grads
         let mut merged = Grads::default();
-        for half in queries.chunks(queries.len().div_ceil(2)) {
+        for half in qs.chunks(qs.len().div_ceil(2)) {
             let mut dag = QueryDag::default();
             for (t, a) in half {
                 dag.add_query(t, *a, vec![0, 1], "1p", true).unwrap();
@@ -228,7 +213,7 @@ fn multi_worker_gradients_match_single_worker_totals() {
         }
         // "one worker": all at once
         let mut dag = QueryDag::default();
-        for (t, a) in &queries {
+        for (t, a) in &qs {
             dag.add_query(t, *a, vec![0, 1], "1p", true).unwrap();
         }
         dag.add_gradient_nodes();

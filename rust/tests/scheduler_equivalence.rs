@@ -1,0 +1,385 @@
+//! Scheduler-equivalence property suite: the pipelined engine (persistent
+//! gather worker + speculation, overlap active under semantic fusion) must
+//! be **indistinguishable** from the synchronous engine — same round
+//! schedule, same fillness trace, bit-identical loss and gradients — across
+//! every configuration axis:
+//!
+//! * randomized query DAGs (shared shrinking generator in
+//!   `util::proptest::queries`);
+//! * per-operator `B_max` caps (`dims.b_max_by_op` routing);
+//! * slow-execute vs instant-execute MockRuntime timings;
+//! * semantic fusion off / on (pure table source and joint-style
+//!   encoder-executing source);
+//! * forced mis-speculation (constructed pool flips).
+//!
+//! `NGDB_STRESS=1` (the CI forced-contention job, run with
+//! `--test-threads=1`) widens the timing matrix so gathers and executes
+//! race in both directions, and multiplies the case counts.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use ngdb_zoo::exec::{Engine, EngineConfig, Grads, StepStats};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::mock::max_call_depth;
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::semantic::mock::{EncoderSource, TableSource};
+use ngdb_zoo::semantic::SemanticSource;
+use ngdb_zoo::util::proptest::queries::{self, QuerySet};
+use ngdb_zoo::util::proptest::{gen, prop_check_shrink};
+use ngdb_zoo::util::rng::Rng;
+
+const NE: usize = 12; // mock entity rows
+const NR: usize = 6; // mock relation rows
+const NEG: usize = 2; // mock n_neg
+
+fn stress() -> bool {
+    std::env::var("NGDB_STRESS").as_deref() == Ok("1")
+}
+
+fn mock_state(rt: &MockRuntime) -> ModelState {
+    ModelState::init(rt.manifest(), "mock", NE, NR, None, 3).unwrap()
+}
+
+/// Run one engine configuration and return its telemetry + gradients.
+fn run_one(
+    rt: &MockRuntime,
+    dag: &QueryDag,
+    st: &ModelState,
+    cfg: EngineConfig,
+    semantic: Option<&dyn SemanticSource>,
+) -> Result<(StepStats, Grads), String> {
+    let engine = match semantic {
+        Some(s) => Engine::with_semantic(rt, cfg, s),
+        None => Engine::new(rt, cfg),
+    };
+    let mut grads = Grads::default();
+    let stats = engine.run(dag, st, &mut grads).map_err(|e| format!("{e:#}"))?;
+    Ok((stats, grads))
+}
+
+/// Bit-exact comparison of two runs: schedule, fillness, loss bits, and
+/// every gradient entry (`f32::to_bits`). Returns the first divergence.
+fn assert_equivalent(
+    (s_a, g_a): &(StepStats, Grads),
+    (s_b, g_b): &(StepStats, Grads),
+) -> Result<(), String> {
+    if s_a.executions != s_b.executions {
+        return Err(format!("round counts: {} vs {}", s_a.executions, s_b.executions));
+    }
+    if s_a.schedule != s_b.schedule {
+        return Err(format!("schedules diverge: {:?} vs {:?}", s_a.schedule, s_b.schedule));
+    }
+    if s_a.fillness != s_b.fillness {
+        return Err("fillness traces diverge".into());
+    }
+    if s_a.loss.to_bits() != s_b.loss.to_bits() {
+        return Err(format!("loss not bit-identical: {} vs {}", s_a.loss, s_b.loss));
+    }
+    for (map_a, map_b, tag) in
+        [(&g_a.ent, &g_b.ent, "ent"), (&g_a.rel, &g_b.rel, "rel")]
+    {
+        if map_a.len() != map_b.len() {
+            return Err(format!("{tag} key counts: {} vs {}", map_a.len(), map_b.len()));
+        }
+        for (k, v) in map_a {
+            let w = map_b.get(k).ok_or_else(|| format!("{tag} missing key {k}"))?;
+            for (i, (x, y)) in v.iter().zip(w).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{tag}[{k}][{i}]: {x} vs {y} (bits differ)"));
+                }
+            }
+        }
+    }
+    if g_a.dense.len() != g_b.dense.len() {
+        return Err("dense key counts differ".into());
+    }
+    for (k, v) in &g_a.dense {
+        let w = g_b.dense.get(k).ok_or_else(|| format!("dense missing key {k}"))?;
+        for (i, (x, y)) in v.iter().zip(w).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("dense[{k}][{i}]: {x} vs {y} (bits differ)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One sampled engine/runtime configuration of the equivalence matrix.
+#[derive(Clone, Debug)]
+struct EquivCase {
+    set: QuerySet,
+    /// per-op caps applied to the mock manifest (op name, cap)
+    caps: Vec<(&'static str, usize)>,
+    /// global override through `EngineConfig::b_max` (0 = off)
+    b_max: usize,
+    /// artificial per-launch latency (slow-execute regime)
+    delay_ms: u64,
+    /// 0 = no fusion, 1 = pure table source, 2 = encoder-executing source
+    fusion: u8,
+}
+
+fn build_runtime(case: &EquivCase) -> MockRuntime {
+    let mut rt = MockRuntime::new();
+    for (op, cap) in &case.caps {
+        rt.set_b_max_for(op, *cap);
+    }
+    if case.delay_ms > 0 {
+        rt = rt.with_exec_delay(Duration::from_millis(case.delay_ms));
+    }
+    rt
+}
+
+/// Build the semantic source selected by a case's `fusion` axis and hand it
+/// to `f` (closure shape keeps the borrow of the temporaries simple):
+/// 0 = none, 1 = pure table source, 2 = encoder-executing source.
+fn with_fusion_source<R>(
+    rt: &MockRuntime,
+    fusion: u8,
+    f: impl FnOnce(Option<&dyn SemanticSource>) -> R,
+) -> R {
+    match fusion {
+        0 => f(None),
+        1 => f(Some(&TableSource::linear(NE, rt.manifest().dims.d))),
+        _ => f(Some(&EncoderSource::new(rt, NE))),
+    }
+}
+
+fn check_case(case: &EquivCase) -> Result<(), String> {
+    if case.set.is_empty() {
+        return Ok(());
+    }
+    let rt = build_runtime(case);
+    let st = mock_state(&rt);
+    let dag = case.set.train_dag();
+    let cfg = |pipeline: bool| EngineConfig { b_max: case.b_max, pipeline, ..Default::default() };
+
+    with_fusion_source(&rt, case.fusion, |semantic| {
+        let pipe = run_one(&rt, &dag, &st, cfg(true), semantic)?;
+        let sync = run_one(&rt, &dag, &st, cfg(false), semantic)?;
+        assert_equivalent(&pipe, &sync)?;
+        if pipe.0.operators != dag.len() {
+            return Err(format!("executed {} of {} operators", pipe.0.operators, dag.len()));
+        }
+        Ok(())
+    })
+}
+
+#[test]
+fn pipelined_equals_sync_across_the_configuration_matrix() {
+    let kg = queries::toy_kg();
+    let cap_ops: [&'static str; 4] = ["embed", "project", "score", "vjp_project"];
+    let cases = if stress() { 60 } else { 25 };
+    prop_check_shrink(
+        "scheduler equivalence (caps × timing × fusion)",
+        cases,
+        |rng| {
+            let set = queries::random_set(
+                rng,
+                &kg,
+                &Pattern::ALL,
+                if stress() { 32 } else { 16 },
+                NE as u32,
+                NR as u32,
+                NEG,
+            );
+            let mut caps = Vec::new();
+            for op in cap_ops {
+                if rng.chance(0.3) {
+                    caps.push((op, gen::size(rng, 1, 4)));
+                }
+            }
+            let b_max = if rng.chance(0.25) { gen::size(rng, 1, 8) } else { 0 };
+            // slow-execute rounds are expensive; sample them sparsely, and
+            // only under stress make them common (forced contention)
+            let delay_ms =
+                if stress() && rng.chance(0.5) { 1 } else { u64::from(rng.chance(0.1)) };
+            let fusion = rng.below(3) as u8;
+            EquivCase { set, caps, b_max, delay_ms, fusion }
+        },
+        |case| {
+            // shrink the workload only; the config axes stay fixed so the
+            // minimal counterexample still reproduces the same regime
+            case.set
+                .shrink()
+                .into_iter()
+                .map(|set| EquivCase { set, ..case.clone() })
+                .collect()
+        },
+        check_case,
+    );
+}
+
+/// Workload that *guarantees* a mis-speculation: round 1 pops B_max embeds
+/// and speculates on the leftovers, but completing round 1 readies a
+/// project pool that out-fills them — the prefetch must be discarded
+/// without changing a bit, with and without fusion.
+fn mis_spec_set() -> QuerySet {
+    let specs = (0..10)
+        .map(|i| {
+            let tree =
+                QueryTree::instantiate(Pattern::P1, &[i % NE as u32], &[i % NR as u32]).unwrap();
+            queries::QuerySpec {
+                pattern: Pattern::P1,
+                tree,
+                answer: 3,
+                negatives: vec![0, 1],
+            }
+        })
+        .collect();
+    QuerySet(specs)
+}
+
+#[test]
+fn forced_mis_speculation_is_absorbed_with_and_without_fusion() {
+    for fusion in [0u8, 1, 2] {
+        let case = EquivCase {
+            set: mis_spec_set(),
+            caps: vec![],
+            b_max: 0,
+            delay_ms: 0,
+            fusion,
+        };
+        let rt = build_runtime(&case);
+        let st = mock_state(&rt);
+        let dag = case.set.train_dag();
+        with_fusion_source(&rt, fusion, |semantic| {
+            let pipe = run_one(&rt, &dag, &st, EngineConfig::default(), semantic).unwrap();
+            assert!(
+                pipe.0.spec_misses >= 1,
+                "fusion={fusion}: expected a forced mis-speculation, hits={} misses={}",
+                pipe.0.spec_hits,
+                pipe.0.spec_misses
+            );
+            let sync = run_one(
+                &rt,
+                &dag,
+                &st,
+                EngineConfig { pipeline: false, ..Default::default() },
+                semantic,
+            )
+            .unwrap();
+            assert_equivalent(&pipe, &sync).unwrap();
+        });
+    }
+}
+
+#[test]
+fn joint_style_fusion_respects_the_concurrency_contract_under_load() {
+    // Encoder-executing gathers overlapping slow round executions on a
+    // runtime that reports concurrent execute UNSAFE: the gated submission
+    // path must serialize everything (zero contract violations, strictly
+    // depth-1 interleaving log) while the numbers stay bit-identical to
+    // sync.
+    let mut rt =
+        MockRuntime::new().with_exec_delay(Duration::from_millis(2)).with_call_log();
+    rt.set_concurrent_execute_safe(false);
+    let st = mock_state(&rt);
+    let encoder = EncoderSource::new(&rt, NE);
+    let dag = mis_spec_set().train_dag();
+    let pipe = run_one(&rt, &dag, &st, EngineConfig::default(), Some(&encoder)).unwrap();
+    assert!(pipe.0.spec_hits + pipe.0.spec_misses > 0, "overlap must be exercised");
+    let sync = run_one(
+        &rt,
+        &dag,
+        &st,
+        EngineConfig { pipeline: false, ..Default::default() },
+        Some(&encoder),
+    )
+    .unwrap();
+    assert_equivalent(&pipe, &sync).unwrap();
+    assert_eq!(
+        rt.contract_violations.load(Ordering::SeqCst),
+        0,
+        "no execute may enter while another is in flight on an unsafe backend"
+    );
+    let log = rt.take_call_log();
+    assert!(!log.is_empty(), "call log must have recorded the runs");
+    assert_eq!(
+        max_call_depth(&log),
+        1,
+        "encoder gathers must serialize against round executions"
+    );
+}
+
+#[test]
+fn contention_counters_are_consistent() {
+    // Heavy gathers + instant executes: the main thread should sometimes
+    // block on unfinished prefetches; the counters must stay within the
+    // stage totals they attribute.
+    let rt = MockRuntime::new();
+    let st = mock_state(&rt);
+    let mut rng = Rng::new(7);
+    let kg = queries::toy_kg();
+    let set = queries::random_set(&mut rng, &kg, &Pattern::ALL, 24, NE as u32, NR as u32, NEG);
+    if set.is_empty() {
+        return;
+    }
+    let dag = set.train_dag();
+    let (stats, _) = run_one(&rt, &dag, &st, EngineConfig::default(), None).unwrap();
+    assert!(stats.gather_wait_secs >= 0.0);
+    assert!(stats.worker_idle_secs >= 0.0);
+    assert!(stats.overlap_secs <= stats.gather_secs + 1e-9);
+    assert!(stats.overlap_secs <= stats.execute_secs + 1e-9);
+    // every speculated round contributed one idle measurement, so with any
+    // speculation at all the worker must have recorded parked time
+    if stats.spec_hits + stats.spec_misses > 0 {
+        assert!(stats.worker_idle_secs > 0.0, "worker idle time must be accounted");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden-schedule regression: the Max-Fillness schedule of a fixed workload
+// (8×1p, embed capped at 2) is pinned to a checked-in snapshot so future
+// scheduler edits diff visibly. Re-bless with NGDB_BLESS=1 after an
+// *intentional* policy change.
+// ---------------------------------------------------------------------------
+
+const GOLDEN: &str = include_str!("golden/max_fillness_schedule.txt");
+
+fn render_schedule(stats: &StepStats) -> String {
+    stats
+        .schedule
+        .iter()
+        .zip(&stats.fillness)
+        .map(|((op, n), rho)| format!("{} x{} rho={:.3}\n", op.name(), n, rho))
+        .collect()
+}
+
+#[test]
+fn golden_max_fillness_schedule() {
+    let mut rt = MockRuntime::new();
+    rt.set_b_max_for("embed", 2);
+    let st = mock_state(&rt);
+    let set = QuerySet(
+        (0..8)
+            .map(|i| queries::QuerySpec {
+                pattern: Pattern::P1,
+                tree: QueryTree::instantiate(Pattern::P1, &[i % NE as u32], &[i % NR as u32])
+                    .unwrap(),
+                answer: 3,
+                negatives: vec![0, 1],
+            })
+            .collect(),
+    );
+    let dag = set.train_dag();
+    let pipe = run_one(&rt, &dag, &st, EngineConfig::default(), None).unwrap();
+    let sync =
+        run_one(&rt, &dag, &st, EngineConfig { pipeline: false, ..Default::default() }, None)
+            .unwrap();
+    assert_equivalent(&pipe, &sync).unwrap();
+
+    let rendered = render_schedule(&pipe.0);
+    if std::env::var("NGDB_BLESS").as_deref() == Ok("1") {
+        let path =
+            format!("{}/tests/golden/max_fillness_schedule.txt", env!("CARGO_MANIFEST_DIR"));
+        std::fs::write(&path, &rendered).unwrap();
+        eprintln!("blessed golden schedule -> {path}");
+        return;
+    }
+    assert_eq!(
+        rendered, GOLDEN,
+        "Max-Fillness schedule changed; if intentional, re-bless with NGDB_BLESS=1"
+    );
+}
