@@ -4,6 +4,11 @@
 //! Part 0 compares the two overlap primitives head-to-head: a per-round
 //! scoped thread spawn+join (the pre-persistent-worker design) vs one
 //! channel round-trip to a long-lived worker (the current engine).
+//! Part 0.5 lifts the same comparison one level: per-run engines (one
+//! worker spawn per DAG — the pre-session design) vs one reused
+//! `EngineSession` over a stream of small DAGs, asserting via the global
+//! spawn counter that the session's steady state spawns **zero** workers
+//! per run (the CI smoke run gates on this).
 //! Part 1 isolates L3 coordinator cost (tiny mock dims, instant execute)
 //! and checks the persistent worker is not a regression there.
 //! Part 2 measures the double-buffered engine against the synchronous one
@@ -19,7 +24,7 @@
 
 use std::time::{Duration, Instant};
 
-use ngdb_zoo::exec::{Engine, EngineConfig, Grads, StepStats};
+use ngdb_zoo::exec::{worker_spawns_total, Engine, EngineConfig, EngineSession, Grads, StepStats};
 use ngdb_zoo::kg::{KgSpec, KgStore};
 use ngdb_zoo::model::ModelState;
 use ngdb_zoo::query::{Pattern, QueryDag};
@@ -109,6 +114,53 @@ fn bench_overlap_primitives(rounds: usize) {
     });
 }
 
+/// Part 0.5: the session-level version of part 0 — a stream of small DAGs
+/// through per-run engines (one worker spawn each) vs one reused
+/// `EngineSession` (one spawn total). Steady-state session runs must spawn
+/// nothing: the CI smoke run gates on the counter assertion below.
+fn bench_session_reuse(rt: &MockRuntime, kg: &KgStore, state: &ModelState, n_dags: usize) {
+    let n_neg = rt.manifest().dims.n_neg;
+    let dags: Vec<QueryDag> =
+        (0..n_dags).map(|i| build_dag(kg, 24, n_neg, 100 + i as u64)).collect();
+
+    let before_per_run = worker_spawns_total();
+    let t = Instant::now();
+    for dag in &dags {
+        let engine = Engine::new(rt, EngineConfig::default());
+        let mut grads = Grads::default();
+        engine.run(dag, state, &mut grads).unwrap();
+    }
+    let per_run_us = t.elapsed().as_secs_f64() * 1e6 / n_dags as f64;
+    let per_run_spawns = worker_spawns_total() - before_per_run;
+
+    let mut session = EngineSession::new(rt, EngineConfig::default());
+    {
+        // warm the session (its single spawn happened at creation)
+        let mut grads = Grads::default();
+        session.run(&dags[0], state, &mut grads).unwrap();
+    }
+    let steady_state_base = worker_spawns_total();
+    let t = Instant::now();
+    for dag in &dags {
+        let mut grads = Grads::default();
+        session.run(dag, state, &mut grads).unwrap();
+    }
+    let session_us = t.elapsed().as_secs_f64() * 1e6 / n_dags as f64;
+    let session_spawns = worker_spawns_total() - steady_state_base;
+
+    assert_eq!(per_run_spawns, n_dags as u64, "per-run engines spawn once per DAG");
+    assert_eq!(
+        session_spawns, 0,
+        "steady-state session runs must spawn zero workers per run"
+    );
+    println!(
+        "session reuse over {n_dags} DAGs: per-run engines {per_run_us:.1} us/dag \
+         ({per_run_spawns} spawns) vs one session {session_us:.1} us/dag \
+         ({session_spawns} spawns in steady state, {:.1}x)",
+        per_run_us / session_us.max(1e-9)
+    );
+}
+
 fn main() {
     // ---- part 0: spawn-per-round vs persistent worker primitives ----------
     bench_overlap_primitives(2000);
@@ -119,6 +171,9 @@ fn main() {
     let state =
         ModelState::init(rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 1)
             .unwrap();
+
+    // ---- part 0.5: per-run engine spawns vs one reused session ------------
+    bench_session_reuse(&rt, &kg, &state, 64);
     let dag = build_dag(&kg, 256, rt.manifest().dims.n_neg, 1);
     // pipeline off isolates bare scheduler+coalesce cost; pipeline on shows
     // the persistent worker's overhead on the fast-execute case — with

@@ -37,6 +37,9 @@ fn main() -> anyhow::Result<()> {
         r.qps, r.worker_exec_secs, fmt_bytes(r.allreduce_bytes_per_step)
     );
     println!("loss curve: {:?}", r.loss_curve);
+    // where the step wall-clock goes (same buckets as the single trainer,
+    // plus `allreduce`; worker-parallel phases are per-worker means)
+    println!("phases: {}", ngdb_zoo::util::timer::report_of(&r.phases));
 
     println!("\nmodeled scaling (10 GB/s links, 5 µs hops):");
     for w in [1usize, 2, 4, 8] {

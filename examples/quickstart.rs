@@ -48,6 +48,9 @@ fn main() -> anyhow::Result<()> {
         report.loss_curve.first().unwrap(),
         report.loss_curve.last().unwrap()
     );
+    // phase attribution: sample / build_dag / execute (+ engine
+    // sub-buckets) / optimize — one warm EngineSession serves every step
+    println!("phases: {}", ngdb_zoo::util::timer::report_of(&report.phases));
 
     // 4. evaluate predictive answers (filtered MRR)
     let full = rank::full_graph(&kg)?;

@@ -38,6 +38,12 @@ pub fn run() -> Result<()> {
             }
             row.push(crate::util::stats::fmt_bytes(bytes));
             rows.push(row);
+            // where the modeled speedup would go: the same phase
+            // attribution the single trainer reports, plus `allreduce`
+            println!(
+                "  {dataset}/{model} phases: {}",
+                crate::util::timer::report_of(&r1.phases)
+            );
         }
     }
     print_table(

@@ -52,6 +52,10 @@ pub fn run(dataset: &str, models: &[&str]) -> Result<()> {
             let mut chunk_cfg = cfg.clone();
             chunk_cfg.steps = spike_every;
             let chunks = n_steps / spike_every;
+            // one warm session for every manual step of this run (the old
+            // per-step Engine::run spawned a gather worker per step)
+            let mut session = crate::exec::EngineSession::new(
+                &ctx.rt, crate::exec::EngineConfig::default());
             for c in 0..chunks {
                 stream.steer(if c % 2 == 0 { &easy } else { &hard });
                 // reuse trainer in sync mode over the steered stream's
@@ -68,10 +72,8 @@ pub fn run(dataset: &str, models: &[&str]) -> Result<()> {
                             crate::config::model_supports_negation(model))?;
                     }
                     dag.add_gradient_nodes();
-                    let engine = crate::exec::Engine::new(
-                        &ctx.rt, crate::exec::EngineConfig::default());
                     let mut grads = crate::exec::Grads::default();
-                    let stats = engine.run(&dag, &state, &mut grads)?;
+                    let stats = session.run(&dag, &state, &mut grads)?;
                     for (pat, loss, count) in stats.per_pattern_loss {
                         if count > 0 {
                             if let Ok(p) = Pattern::from_name(pat) {

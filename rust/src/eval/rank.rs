@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::exec::{Engine, EngineConfig, Grads};
+use crate::exec::{EngineConfig, EngineSession, Grads};
 use crate::kg::KgStore;
 use crate::model::ModelState;
 use crate::query::{Pattern, QueryDag, QueryTree};
@@ -88,9 +88,11 @@ pub fn evaluate(
     let dims = &rt.manifest().dims;
     let (eval_b, chunk) = (dims.eval_b, dims.eval_chunk);
     let supports_neg = crate::config::model_supports_negation(&state.model);
-    let engine = match semantic {
-        Some(s) => Engine::with_semantic(rt, EngineConfig::default(), s),
-        None => Engine::new(rt, EngineConfig::default()),
+    // one warm session for every forward block (the old per-block
+    // Engine::run_with_outputs spawned a gather worker per block)
+    let mut session = match semantic {
+        Some(s) => EngineSession::with_semantic(rt, EngineConfig::default(), s),
+        None => EngineSession::new(rt, EngineConfig::default()),
     };
     let mut report = EvalReport::default();
     let mut per: std::collections::BTreeMap<Pattern, (f64, f64, usize)> = Default::default();
@@ -103,7 +105,7 @@ pub fn evaluate(
             roots.push(dag.add_query_eval(&q.tree, supports_neg)?);
         }
         let mut grads = Grads::default();
-        let (_, reprs) = engine.run_with_outputs(&dag, state, &mut grads, &roots)?;
+        let (_, reprs) = session.run_with_outputs(&dag, state, &mut grads, &roots)?;
 
         // Q block [eval_b, repr_dim] (pad rows zero)
         let mut qb = HostTensor::zeros(vec![eval_b, state.repr_dim]);

@@ -39,19 +39,22 @@
 //! operators, whose operand tensors already exist in the slab and are
 //! refcount-pinned until their consumers execute.
 //!
-//! # The persistent gather worker
+//! # Sessions and the persistent gather worker
 //!
-//! One worker thread lives for the whole of [`Engine::run`] (a scoped
-//! thread + a job/response channel pair), so an overlapped round costs one
-//! channel round-trip (~1 µs) instead of a thread spawn+join (~tens of µs):
-//! overlap is never a regression, even for near-instant executes. Jobs
-//! carry a raw view of the output slab; the protocol keeps it sound — the
-//! main thread never mutates the slab while a job is in flight (scatter and
-//! reclamation happen only after the response is received), and the scope
-//! joins the worker before the slab drops. [`StepStats`] exposes the two
-//! contention counters: `worker_idle_secs` (worker parked, waiting for
-//! work) and `gather_wait_secs` (main thread blocked on an unfinished
-//! prefetch — gathers outlasting executes).
+//! Since the session split, `Engine` is the *immutable planning core*:
+//! Max-Fillness selection ([`Engine::next_round`]), input coalescing
+//! ([`Engine::gather_batch`]) and output scatter ([`Engine::scatter_batch`])
+//! — pure functions over a DAG, a model state and the output slab. The run
+//! loop, the persistent gather worker and its job/response channels live in
+//! [`super::EngineSession`], which keeps **one** warm worker for its whole
+//! lifetime: back-to-back DAGs (per-query batching, query-level groups,
+//! multi-step training) cost a channel round-trip (~1 µs) per overlapped
+//! round instead of a thread spawn+join (~tens of µs) per *run*.
+//! [`Engine::run`] remains as a one-shot convenience that stands up a
+//! transient session (one spawn per call — loops should hold a session).
+//! [`StepStats`] exposes the two contention counters: `worker_idle_secs`
+//! (worker parked, waiting for work) and `gather_wait_secs` (main thread
+//! blocked on an unfinished prefetch — gathers outlasting executes).
 //!
 //! # Overlap under semantic fusion
 //!
@@ -68,14 +71,13 @@
 //! on/off, per-op caps, timing skews, and forced mis-speculation.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::pools::OperatorPools;
 use crate::model::state::ModelState;
-use crate::query::{OpKind, QueryDag, NO_MIRROR};
+use crate::query::{OpKind, QueryDag};
 use crate::runtime::{HostTensor, Runtime};
 
 /// Gradient accumulators for one optimizer step.
@@ -89,11 +91,44 @@ pub struct Grads {
 }
 
 impl Grads {
-    fn add_rows(map: &mut HashMap<u32, Vec<f32>>, id: u32, row: &[f32]) {
+    /// Scatter-add one row into a sparse accumulator map.
+    pub fn add_rows(map: &mut HashMap<u32, Vec<f32>>, id: u32, row: &[f32]) {
         let e = map.entry(id).or_insert_with(|| vec![0.0; row.len()]);
         for (a, b) in e.iter_mut().zip(row) {
             *a += b;
         }
+    }
+
+    /// Sum one sparse accumulator map into another. New keys move without a
+    /// copy; existing rows element-wise add.
+    fn merge_rows<K: std::hash::Hash + Eq>(
+        into: &mut HashMap<K, Vec<f32>>,
+        from: HashMap<K, Vec<f32>>,
+    ) {
+        for (k, v) in from {
+            match into.entry(k) {
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(v);
+                }
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    for (a, b) in e.get_mut().iter_mut().zip(&v) {
+                        *a += b;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fold another accumulator into this one — the all-reduce merge of the
+    /// data-parallel trainers. Consumes `other` so rows whose keys are new
+    /// here move without a copy. Callers that need determinism must fold
+    /// workers in a fixed order (float addition is not associative).
+    pub fn accumulate(&mut self, other: Grads) {
+        self.loss += other.loss;
+        self.n_queries += other.n_queries;
+        Grads::merge_rows(&mut self.ent, other.ent);
+        Grads::merge_rows(&mut self.rel, other.rel);
+        Grads::merge_rows(&mut self.dense, other.dense);
     }
 
     /// Scale everything by `1/n_queries` (loss is summed per Eq. 6).
@@ -154,8 +189,8 @@ pub struct StepStats {
     pub schedule: Vec<(OpKind, usize)>,
 }
 
-/// Per-node stored output.
-enum NodeOut {
+/// Per-node stored output (the session's output slab entries).
+pub(crate) enum NodeOut {
     /// forward repr row `[repr_dim]`
     Repr(Vec<f32>),
     /// VJP: one grad block per mirrored-node input slot
@@ -165,7 +200,7 @@ enum NodeOut {
 }
 
 impl NodeOut {
-    fn bytes(&self) -> usize {
+    pub(crate) fn bytes(&self) -> usize {
         match self {
             NodeOut::Repr(v) | NodeOut::HeadGrad(v) => v.len() * 4,
             NodeOut::Grads(vs) => vs.iter().map(|v| v.len() * 4).sum(),
@@ -175,50 +210,13 @@ impl NodeOut {
 
 /// One scheduling round with its inputs fully coalesced — the unit handed
 /// from the gather stage to the execute stage.
-struct PreparedBatch {
-    op: OpKind,
-    batch: Vec<u32>,
-    artifact: String,
+pub(crate) struct PreparedBatch {
+    pub(crate) op: OpKind,
+    pub(crate) batch: Vec<u32>,
+    pub(crate) artifact: String,
     /// bucket rows minus real rows (padding waste, accounted at scatter)
-    padded: usize,
-    inputs: Vec<HostTensor>,
-}
-
-/// Raw, `Send` view of the output slab handed to the gather worker with
-/// each job.
-///
-/// # Safety protocol
-///
-/// The run loop upholds three invariants that make dereferencing sound:
-/// 1. the slab is never mutated while a job is in flight — scatter and
-///    eager reclamation happen only after the matching [`GatherDone`] has
-///    been received;
-/// 2. speculative batches reference only *ready* operators, whose operand
-///    rows already exist and are refcount-pinned until they execute;
-/// 3. the worker is scope-joined before the slab is dropped.
-struct SlabView {
-    ptr: *const Option<NodeOut>,
-    len: usize,
-}
-
-// SAFETY: see the protocol above — the view is only read, between the
-// channel round-trip's happens-before edges.
-unsafe impl Send for SlabView {}
-
-/// One speculative gather request for the persistent worker.
-struct GatherJob {
-    op: OpKind,
-    batch: Vec<u32>,
-    slab: SlabView,
-}
-
-/// The worker's response to one [`GatherJob`].
-struct GatherDone {
-    result: Result<PreparedBatch>,
-    /// wall-clock of the gather itself
-    gather_secs: f64,
-    /// how long the worker sat parked before this job arrived
-    idle_secs: f64,
+    pub(crate) padded: usize,
+    pub(crate) inputs: Vec<HostTensor>,
 }
 
 /// Engine configuration knobs.
@@ -241,12 +239,15 @@ impl Default for EngineConfig {
     }
 }
 
-/// The operator-level executor for one model over one runtime.
+/// The operator-level planner for one model over one runtime: selection,
+/// coalescing and scatter, with no threads or channels of its own. Cheap to
+/// clone (two references + the config); [`super::EngineSession`] drives it.
+#[derive(Clone)]
 pub struct Engine<'a> {
-    rt: &'a dyn Runtime,
+    pub(crate) rt: &'a dyn Runtime,
     pub cfg: EngineConfig,
     /// when set, EmbedE routes through the fused semantic artifacts (§4.4)
-    semantic: Option<&'a dyn crate::semantic::SemanticSource>,
+    pub(crate) semantic: Option<&'a dyn crate::semantic::SemanticSource>,
 }
 
 impl<'a> Engine<'a> {
@@ -271,7 +272,7 @@ impl<'a> Engine<'a> {
     /// Called per pool on every Max-Fillness selection, so the common
     /// no-override case must stay a plain field read — `op.name()` allocates
     /// and is only paid when a per-op cap map is actually configured.
-    fn b_max(&self, op: OpKind) -> usize {
+    pub(crate) fn b_max(&self, op: OpKind) -> usize {
         if self.cfg.force_singleton {
             return 1;
         }
@@ -292,6 +293,10 @@ impl<'a> Engine<'a> {
     ///
     /// `dag` must already contain gradient nodes if training; a fwd-only DAG
     /// (eval) works too — Score nodes are then simply absent.
+    ///
+    /// One-shot convenience: stands up a transient [`super::EngineSession`]
+    /// (one worker spawn per call when pipelined). Loops that execute many
+    /// DAGs should hold a session instead and reuse its warm worker.
     pub fn run(&self, dag: &QueryDag, state: &ModelState, grads: &mut Grads) -> Result<StepStats> {
         Ok(self.run_with_outputs(dag, state, grads, &[])?.0)
     }
@@ -306,216 +311,14 @@ impl<'a> Engine<'a> {
         grads: &mut Grads,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
-        let n = dag.nodes.len();
-        let mut stats = StepStats { n_queries: dag.queries.len(), ..Default::default() };
-        // per-pattern loss accumulation
-        let mut pat_loss: HashMap<&'static str, (f64, usize)> = HashMap::new();
-
-        // -- effective dependency graph (fwd inputs + VJP recompute inputs)
-        let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
-        for node in &dag.nodes {
-            let mut d = node.inputs.clone();
-            if node.mirror != NO_MIRROR {
-                d.extend_from_slice(&dag.nodes[node.mirror as usize].inputs);
-            }
-            deps.push(d);
-        }
-        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (i, d) in deps.iter().enumerate() {
-            for &p in d {
-                consumers[p as usize].push(i as u32);
-            }
-        }
-        let mut refcnt: Vec<u32> = consumers.iter().map(|c| c.len() as u32).collect();
-        for &w in wanted {
-            refcnt[w as usize] += 1; // pin: never reclaimed during the run
-        }
-        let mut indeg: Vec<u32> = deps.iter().map(|d| d.len() as u32).collect();
-
-        let mut storage: Vec<Option<NodeOut>> = (0..n).map(|_| None).collect();
-        let mut live_bytes = 0usize;
-        let mut pending = n;
-        let mut ready: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
-        let mut pools = OperatorPools::default();
-        // Algorithm 1 line 6: distribute the ready set into pools.
-        for node in ready.drain(..) {
-            pools.push(dag.nodes[node as usize].op, node);
-        }
-
-        // Overlap is on whenever the config asks for it — semantic fusion
-        // included, since encoder gathers and round executions serialize
-        // through the runtime's concurrency contract (`execute_gated`).
-        let pipeline = self.cfg.pipeline;
-
-        // The persistent gather worker lives exactly as long as this scope:
-        // `job_tx` is dropped before the scope closes, the worker's `recv`
-        // then errors out, and the scope joins it — always before `storage`
-        // (declared above) can drop.
-        std::thread::scope(|scope| -> Result<()> {
-            let (job_tx, job_rx) = std::sync::mpsc::channel::<GatherJob>();
-            let (done_tx, done_rx) = std::sync::mpsc::channel::<GatherDone>();
-            if pipeline {
-                scope.spawn(move || self.gather_worker(dag, state, job_rx, done_tx));
-            }
-
-            // First round: selection + synchronous gather (nothing to
-            // overlap yet).
-            let mut current: Option<PreparedBatch> =
-                match self.next_round(&mut pools, &mut stats, pending)? {
-                    Some((op, batch)) => {
-                        Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
-                    }
-                    None => None,
-                };
-
-            while let Some(prep) = current.take() {
-                // -- speculate round N+1 from the current ready set (pools
-                //    minus this round); newly-ready operators from round N
-                //    are not in the pools yet, which is exactly what makes
-                //    this a guess.
-                let mut in_flight: Option<OpKind> = None;
-                if pipeline {
-                    if let Some(sop) = pools.select_max_fillness(|op| self.b_max(op)) {
-                        let sbatch = pools.peek_batch(sop, self.b_max(sop));
-                        let slab = SlabView { ptr: storage.as_ptr(), len: storage.len() };
-                        job_tx
-                            .send(GatherJob { op: sop, batch: sbatch, slab })
-                            .expect("gather worker hung up");
-                        in_flight = Some(sop);
-                    }
-                }
-
-                // -- execute round N (overlapping the in-flight prefetch)
-                let t0 = Instant::now();
-                let exec_result = self.rt.execute_gated(&prep.artifact, &prep.inputs);
-                let exec_dt = t0.elapsed().as_secs_f64();
-                stats.execute_secs += exec_dt;
-
-                // -- collect the prefetch BEFORE any slab mutation (the
-                //    SlabView safety protocol), even on execute errors
-                let mut prefetched: Option<Result<PreparedBatch>> = None;
-                if let Some(spec_op) = in_flight {
-                    let t_wait = Instant::now();
-                    let done = done_rx.recv().expect("gather worker died");
-                    stats.gather_wait_secs += t_wait.elapsed().as_secs_f64();
-                    stats.gather_secs += done.gather_secs;
-                    stats.worker_idle_secs += done.idle_secs;
-                    // An encoder-executing gather on a backend without
-                    // concurrent execute spends most of its wall-clock
-                    // blocked on the submission lock we are holding —
-                    // claiming that as "hidden under execution" would
-                    // fabricate a pipelining win, so such rounds report no
-                    // overlap (a conservative lower bound: their host-side
-                    // coalescing may still have overlapped).
-                    let gather_serialized = self.semantic.is_some()
-                        && !self.rt.concurrent_execute_safe()
-                        && matches!(
-                            spec_op,
-                            OpKind::Embed | OpKind::Vjp(crate::query::VjpOf::Embed)
-                        );
-                    if !gather_serialized {
-                        stats.overlap_secs += exec_dt.min(done.gather_secs);
-                    }
-                    prefetched = Some(done.result);
-                }
-                let outputs =
-                    exec_result.with_context(|| format!("executing pool {}", prep.op.name()))?;
-                stats.executions += 1;
-
-                // -- scatter outputs, account padding, reclaim eagerly
-                self.scatter_batch(
-                    dag, state, &prep, &outputs, &mut storage, &mut live_bytes, grads,
-                    &mut stats, &mut pat_loss,
-                )
-                .with_context(|| format!("scattering pool {}", prep.op.name()))?;
-                stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
-
-                // lines 12-18: bookkeeping, eager reclamation, ready updates
-                for &o in &prep.batch {
-                    pending -= 1;
-                    stats.operators += 1;
-                    for &p in &deps[o as usize] {
-                        refcnt[p as usize] -= 1;
-                        if refcnt[p as usize] == 0 {
-                            if let Some(out) = storage[p as usize].take() {
-                                live_bytes -= out.bytes(); // Eq. 7: RECLAIM(T)
-                            }
-                        }
-                    }
-                    for &c in &consumers[o as usize] {
-                        indeg[c as usize] -= 1;
-                        if indeg[c as usize] == 0 {
-                            ready.push(c);
-                        }
-                    }
-                }
-                for node in ready.drain(..) {
-                    pools.push(dag.nodes[node as usize].op, node);
-                }
-
-                // -- actual Max-Fillness selection; validate the speculation
-                current = match self.next_round(&mut pools, &mut stats, pending)? {
-                    None => None,
-                    Some((op, batch)) => match prefetched {
-                        Some(Ok(p)) if p.op == op && p.batch == batch => {
-                            stats.spec_hits += 1;
-                            Some(p)
-                        }
-                        other => {
-                            if other.is_some() {
-                                stats.spec_misses += 1;
-                            }
-                            Some(self.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
-                        }
-                    },
-                };
-            }
-            drop(job_tx); // hang up; the scope joins the worker
-            Ok(())
-        })?;
-
-        grads.loss += stats.loss;
-        grads.n_queries += stats.n_queries;
-        stats.per_pattern_loss = pat_loss.into_iter().map(|(k, (l, c))| (k, l, c)).collect();
-        let outputs = wanted
-            .iter()
-            .map(|&w| match &storage[w as usize] {
-                Some(NodeOut::Repr(v)) => Ok(v.clone()),
-                _ => bail!("wanted node {w} produced no repr"),
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok((stats, outputs))
-    }
-
-    /// The persistent gather worker's loop: block on the job channel,
-    /// coalesce, respond. Runs on one scoped thread for the whole of
-    /// [`Engine::run_with_outputs`]; exits when the job sender hangs up.
-    fn gather_worker(
-        &self,
-        dag: &QueryDag,
-        state: &ModelState,
-        jobs: Receiver<GatherJob>,
-        done: Sender<GatherDone>,
-    ) {
-        let mut parked = Instant::now();
-        while let Ok(job) = jobs.recv() {
-            let idle_secs = parked.elapsed().as_secs_f64();
-            let t0 = Instant::now();
-            // SAFETY: upheld by the run loop — see [`SlabView`].
-            let slab = unsafe { std::slice::from_raw_parts(job.slab.ptr, job.slab.len) };
-            let result = self.gather_batch(dag, state, job.op, job.batch, slab);
-            let gather_secs = t0.elapsed().as_secs_f64();
-            parked = Instant::now();
-            if done.send(GatherDone { result, gather_secs, idle_secs }).is_err() {
-                break; // run loop gone (error path); nothing left to do
-            }
-        }
+        let mut session = super::EngineSession::from_engine(self.clone());
+        session.run_with_outputs(dag, state, grads, wanted)
     }
 
     /// Max-Fillness selection of the next round (Algorithm 1 lines 8-9).
     /// `None` when every operator has executed; an error when operators are
     /// pending but none is ready (dependency cycle).
-    fn next_round(
+    pub(crate) fn next_round(
         &self,
         pools: &mut OperatorPools,
         stats: &mut StepStats,
@@ -535,7 +338,7 @@ impl<'a> Engine<'a> {
     }
 
     /// Synchronous gather with wall-clock accounting.
-    fn gather_timed(
+    pub(crate) fn gather_timed(
         &self,
         dag: &QueryDag,
         state: &ModelState,
@@ -558,7 +361,7 @@ impl<'a> Engine<'a> {
     /// encoder artifacts, which stay safe under overlap because the source
     /// submits through the runtime's gated path (see the module docs on the
     /// concurrency contract).
-    fn gather_batch(
+    pub(crate) fn gather_batch(
         &self,
         dag: &QueryDag,
         state: &ModelState,
@@ -774,7 +577,7 @@ impl<'a> Engine<'a> {
     /// Stage 2 (post-execute): scatter artifact outputs into the slab and
     /// the gradient accumulators.
     #[allow(clippy::too_many_arguments)]
-    fn scatter_batch(
+    pub(crate) fn scatter_batch(
         &self,
         dag: &QueryDag,
         state: &ModelState,

@@ -1,9 +1,14 @@
 //! The operator-level execution engine (§4.1–4.3, Algorithm 1): operator
 //! pools, Max-Fillness dynamic scheduling, cross-query operator fusion,
-//! eager reference-counted reclamation, and gradient accumulation.
+//! eager reference-counted reclamation, and gradient accumulation —
+//! split into the immutable planning core ([`Engine`]) and the reusable
+//! execution session ([`EngineSession`]) that owns the persistent gather
+//! worker for its whole lifetime.
 
 pub mod engine;
 pub mod pools;
+pub mod session;
 
 pub use engine::{Engine, EngineConfig, Grads, StepStats};
 pub use pools::OperatorPools;
+pub use session::{worker_spawns_total, EngineSession};

@@ -1,0 +1,541 @@
+//! [`EngineSession`] — the execution half of the engine split.
+//!
+//! [`super::Engine`] is the immutable planning core (Max-Fillness
+//! selection, input coalescing, output scatter); the session owns the
+//! *mutable execution machinery*: the pipelined run loop, the persistent
+//! gather worker and its job/response channels. One worker thread is
+//! spawned when the session is created (none for a sync session) and lives
+//! until the session drops, so back-to-back DAGs — per-query batching,
+//! query-level structure groups, multi-step training — pay one channel
+//! round-trip (~1 µs) per overlapped round and **zero thread spawns per
+//! run**, where the pre-session engine spawned and joined a scoped worker
+//! inside every `Engine::run`.
+//!
+//! # Session job protocol
+//!
+//! The worker is a `'static` thread, but a run's DAG, model state and
+//! output slab are per-run borrows, so each [`SessionJob`] carries
+//! type-erased raw pointers to them. The run loop upholds the invariants
+//! that make the worker's dereferences sound:
+//!
+//! 1. at most one job is in flight, and its response is received before
+//!    *any* mutation of the output slab — scatter and eager reclamation
+//!    happen only after the matching [`GatherDone`] arrives;
+//! 2. speculative batches reference only *ready* operators, whose operand
+//!    rows already exist in the slab and are refcount-pinned until their
+//!    consumers execute;
+//! 3. the run's borrows (engine, DAG, state, slab) stay alive and
+//!    unmutated until the response is received — enforced on every exit
+//!    path, including unwinds out of `rt.execute`, by the [`PendingGather`]
+//!    drain guard;
+//! 4. the session's `Drop` hangs up the job channel and joins the worker,
+//!    so the thread never outlives the runtime/semantic-source borrows the
+//!    engine holds.
+//!
+//! The executed schedule — and therefore every loss/gradient bit — is
+//! identical to the synchronous engine and to per-run engines; the
+//! `session_reuse` and `scheduler_equivalence` suites assert it bitwise.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, EngineConfig, Grads, NodeOut, PreparedBatch, StepStats};
+use super::pools::OperatorPools;
+use crate::model::state::ModelState;
+use crate::query::{OpKind, QueryDag, NO_MIRROR};
+use crate::runtime::Runtime;
+
+/// Gather-worker threads spawned by any [`EngineSession`] since process
+/// start (monotone). Benches and the CI smoke assert a *delta* of zero
+/// across a session's steady-state runs — the spawn cost exists once, at
+/// session creation, never per run.
+static WORKER_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide gather-worker spawn count — see [`WORKER_SPAWNS`].
+pub fn worker_spawns_total() -> u64 {
+    WORKER_SPAWNS.load(Ordering::SeqCst)
+}
+
+/// Messages to the session's persistent gather worker.
+enum SessionMsg {
+    /// A run begins: reset the worker's idle baseline so
+    /// `worker_idle_secs` attributes parked time *within* the run, not the
+    /// stretches between runs (sampling, optimizing, the caller thinking).
+    BeginRun,
+    Gather(SessionJob),
+}
+
+/// One speculative gather request. Raw pointers type-erase the per-run
+/// borrows so one `'static` worker thread can serve every run of the
+/// session — validity is upheld by the run loop (see the module docs).
+struct SessionJob {
+    op: OpKind,
+    batch: Vec<u32>,
+    /// type-erased `*const Engine<'_>` (the session's planning core)
+    engine: *const (),
+    dag: *const QueryDag,
+    state: *const ModelState,
+    /// the run's output slab (read-only while the job is in flight)
+    slab: *const Option<NodeOut>,
+    slab_len: usize,
+}
+
+// SAFETY: the pointers are only dereferenced between the job/response
+// channel round-trip's happens-before edges, while the run loop keeps
+// every referent alive and unmutated — the module-level protocol.
+unsafe impl Send for SessionJob {}
+
+/// The worker's response to one gather job.
+struct GatherDone {
+    result: Result<PreparedBatch>,
+    /// wall-clock of the gather itself
+    gather_secs: f64,
+    /// how long the worker sat parked before this job arrived
+    idle_secs: f64,
+}
+
+/// Drain guard for the in-flight gather job: its response MUST be received
+/// before the run's borrows are mutated or dropped — including on an
+/// unwind out of `rt.execute` — or the worker would read freed memory.
+struct PendingGather<'s> {
+    done_rx: &'s Receiver<GatherDone>,
+    op: OpKind,
+    taken: bool,
+}
+
+impl PendingGather<'_> {
+    fn take(mut self) -> GatherDone {
+        self.taken = true;
+        self.done_rx.recv().expect("gather worker died")
+    }
+}
+
+impl Drop for PendingGather<'_> {
+    fn drop(&mut self) {
+        if !self.taken {
+            let _ = self.done_rx.recv();
+        }
+    }
+}
+
+/// The persistent worker's channel endpoints + join handle.
+struct SessionWorker {
+    job_tx: Sender<SessionMsg>,
+    done_rx: Receiver<GatherDone>,
+    handle: JoinHandle<()>,
+}
+
+/// A reusable execution session over one [`Engine`]: call
+/// [`EngineSession::run`] for as many DAGs as you like; the warm gather
+/// worker and channels persist across all of them.
+pub struct EngineSession<'a> {
+    engine: Engine<'a>,
+    worker: Option<SessionWorker>,
+}
+
+impl<'a> EngineSession<'a> {
+    pub fn new(rt: &'a dyn Runtime, cfg: EngineConfig) -> EngineSession<'a> {
+        EngineSession::from_engine(Engine::new(rt, cfg))
+    }
+
+    /// Session over a semantically-fused engine (see
+    /// [`Engine::with_semantic`]).
+    pub fn with_semantic(
+        rt: &'a dyn Runtime,
+        cfg: EngineConfig,
+        source: &'a dyn crate::semantic::SemanticSource,
+    ) -> EngineSession<'a> {
+        EngineSession::from_engine(Engine::with_semantic(rt, cfg, source))
+    }
+
+    /// Wrap an existing planning core. The persistent gather worker is
+    /// spawned here — once — iff the config pipelines; a sync session
+    /// needs no thread at all.
+    pub fn from_engine(engine: Engine<'a>) -> EngineSession<'a> {
+        let worker = engine.cfg.pipeline.then(|| {
+            let (job_tx, job_rx) = channel::<SessionMsg>();
+            let (done_tx, done_rx) = channel::<GatherDone>();
+            WORKER_SPAWNS.fetch_add(1, Ordering::SeqCst);
+            let handle = std::thread::spawn(move || session_worker(job_rx, done_tx));
+            SessionWorker { job_tx, done_rx, handle }
+        });
+        EngineSession { engine, worker }
+    }
+
+    /// The immutable planning core this session drives.
+    pub fn engine(&self) -> &Engine<'a> {
+        &self.engine
+    }
+
+    /// Worker threads this session owns: 1 pipelined, 0 sync. Constant
+    /// over the session's lifetime — the session-reuse tests assert it
+    /// never grows with the number of runs.
+    pub fn worker_spawns(&self) -> usize {
+        usize::from(self.worker.is_some())
+    }
+
+    /// Execute a fused DAG; accumulate grads; return step telemetry.
+    /// Identical numerics/schedule to [`Engine::run`], minus the per-run
+    /// worker spawn.
+    pub fn run(
+        &mut self,
+        dag: &QueryDag,
+        state: &ModelState,
+        grads: &mut Grads,
+    ) -> Result<StepStats> {
+        Ok(self.run_with_outputs(dag, state, grads, &[])?.0)
+    }
+
+    /// Like [`EngineSession::run`], additionally returning the final repr
+    /// of the `wanted` nodes (kept alive past reclamation).
+    pub fn run_with_outputs(
+        &mut self,
+        dag: &QueryDag,
+        state: &ModelState,
+        grads: &mut Grads,
+        wanted: &[u32],
+    ) -> Result<(StepStats, Vec<Vec<f32>>)> {
+        let engine = &self.engine;
+        let worker = self.worker.as_ref();
+        let n = dag.nodes.len();
+        let mut stats = StepStats { n_queries: dag.queries.len(), ..Default::default() };
+        // per-pattern loss accumulation
+        let mut pat_loss: HashMap<&'static str, (f64, usize)> = HashMap::new();
+
+        // -- effective dependency graph (fwd inputs + VJP recompute inputs)
+        let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
+        for node in &dag.nodes {
+            let mut d = node.inputs.clone();
+            if node.mirror != NO_MIRROR {
+                d.extend_from_slice(&dag.nodes[node.mirror as usize].inputs);
+            }
+            deps.push(d);
+        }
+        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, d) in deps.iter().enumerate() {
+            for &p in d {
+                consumers[p as usize].push(i as u32);
+            }
+        }
+        let mut refcnt: Vec<u32> = consumers.iter().map(|c| c.len() as u32).collect();
+        for &w in wanted {
+            refcnt[w as usize] += 1; // pin: never reclaimed during the run
+        }
+        let mut indeg: Vec<u32> = deps.iter().map(|d| d.len() as u32).collect();
+
+        let mut storage: Vec<Option<NodeOut>> = (0..n).map(|_| None).collect();
+        let mut live_bytes = 0usize;
+        let mut pending = n;
+        let mut ready: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut pools = OperatorPools::default();
+        // Algorithm 1 line 6: distribute the ready set into pools.
+        for node in ready.drain(..) {
+            pools.push(dag.nodes[node as usize].op, node);
+        }
+
+        if let Some(w) = worker {
+            w.job_tx.send(SessionMsg::BeginRun).expect("gather worker hung up");
+        }
+
+        // First round: selection + synchronous gather (nothing to overlap
+        // yet).
+        let mut current: Option<PreparedBatch> =
+            match engine.next_round(&mut pools, &mut stats, pending)? {
+                Some((op, batch)) => {
+                    Some(engine.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
+                }
+                None => None,
+            };
+
+        while let Some(prep) = current.take() {
+            // -- speculate round N+1 from the current ready set (pools
+            //    minus this round); newly-ready operators from round N are
+            //    not in the pools yet, which is exactly what makes this a
+            //    guess.
+            let mut inflight: Option<PendingGather<'_>> = None;
+            if let Some(w) = worker {
+                if let Some(sop) = pools.select_max_fillness(|op| engine.b_max(op)) {
+                    let sbatch = pools.peek_batch(sop, engine.b_max(sop));
+                    let job = SessionJob {
+                        op: sop,
+                        batch: sbatch,
+                        engine: (engine as *const Engine<'a>).cast(),
+                        dag: dag as *const QueryDag,
+                        state: state as *const ModelState,
+                        slab: storage.as_ptr(),
+                        slab_len: storage.len(),
+                    };
+                    w.job_tx.send(SessionMsg::Gather(job)).expect("gather worker hung up");
+                    inflight =
+                        Some(PendingGather { done_rx: &w.done_rx, op: sop, taken: false });
+                }
+            }
+
+            // -- execute round N (overlapping the in-flight prefetch)
+            let t0 = Instant::now();
+            let exec_result = engine.rt.execute_gated(&prep.artifact, &prep.inputs);
+            let exec_dt = t0.elapsed().as_secs_f64();
+            stats.execute_secs += exec_dt;
+
+            // -- collect the prefetch BEFORE any slab mutation (the session
+            //    job protocol), even on execute errors
+            let mut prefetched: Option<Result<PreparedBatch>> = None;
+            if let Some(pending_job) = inflight.take() {
+                let spec_op = pending_job.op;
+                let t_wait = Instant::now();
+                let done = pending_job.take();
+                stats.gather_wait_secs += t_wait.elapsed().as_secs_f64();
+                stats.gather_secs += done.gather_secs;
+                stats.worker_idle_secs += done.idle_secs;
+                // An encoder-executing gather on a backend without
+                // concurrent execute spends most of its wall-clock blocked
+                // on the submission lock we are holding — claiming that as
+                // "hidden under execution" would fabricate a pipelining
+                // win, so such rounds report no overlap (a conservative
+                // lower bound: their host-side coalescing may still have
+                // overlapped).
+                let gather_serialized = engine.semantic.is_some()
+                    && !engine.rt.concurrent_execute_safe()
+                    && matches!(
+                        spec_op,
+                        OpKind::Embed | OpKind::Vjp(crate::query::VjpOf::Embed)
+                    );
+                if !gather_serialized {
+                    stats.overlap_secs += exec_dt.min(done.gather_secs);
+                }
+                prefetched = Some(done.result);
+            }
+            let outputs =
+                exec_result.with_context(|| format!("executing pool {}", prep.op.name()))?;
+            stats.executions += 1;
+
+            // -- scatter outputs, account padding, reclaim eagerly
+            engine
+                .scatter_batch(
+                    dag, state, &prep, &outputs, &mut storage, &mut live_bytes, grads,
+                    &mut stats, &mut pat_loss,
+                )
+                .with_context(|| format!("scattering pool {}", prep.op.name()))?;
+            stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
+
+            // lines 12-18: bookkeeping, eager reclamation, ready updates
+            for &o in &prep.batch {
+                pending -= 1;
+                stats.operators += 1;
+                for &p in &deps[o as usize] {
+                    refcnt[p as usize] -= 1;
+                    if refcnt[p as usize] == 0 {
+                        if let Some(out) = storage[p as usize].take() {
+                            live_bytes -= out.bytes(); // Eq. 7: RECLAIM(T)
+                        }
+                    }
+                }
+                for &c in &consumers[o as usize] {
+                    indeg[c as usize] -= 1;
+                    if indeg[c as usize] == 0 {
+                        ready.push(c);
+                    }
+                }
+            }
+            for node in ready.drain(..) {
+                pools.push(dag.nodes[node as usize].op, node);
+            }
+
+            // -- actual Max-Fillness selection; validate the speculation
+            current = match engine.next_round(&mut pools, &mut stats, pending)? {
+                None => None,
+                Some((op, batch)) => match prefetched {
+                    Some(Ok(p)) if p.op == op && p.batch == batch => {
+                        stats.spec_hits += 1;
+                        Some(p)
+                    }
+                    other => {
+                        if other.is_some() {
+                            stats.spec_misses += 1;
+                        }
+                        Some(engine.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
+                    }
+                },
+            };
+        }
+
+        grads.loss += stats.loss;
+        grads.n_queries += stats.n_queries;
+        stats.per_pattern_loss = pat_loss.into_iter().map(|(k, (l, c))| (k, l, c)).collect();
+        let outputs = wanted
+            .iter()
+            .map(|&w| match &storage[w as usize] {
+                Some(NodeOut::Repr(v)) => Ok(v.clone()),
+                _ => bail!("wanted node {w} produced no repr"),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((stats, outputs))
+    }
+}
+
+impl Drop for EngineSession<'_> {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            drop(w.job_tx); // hang up: the worker's recv errors and it exits
+            drop(w.done_rx);
+            let _ = w.handle.join();
+        }
+    }
+}
+
+/// The session-long gather worker loop: park on the job channel, coalesce,
+/// respond. One `'static` thread per pipelined session; exits when the
+/// session drops its sender.
+fn session_worker(jobs: Receiver<SessionMsg>, done: Sender<GatherDone>) {
+    let mut parked = Instant::now();
+    while let Ok(msg) = jobs.recv() {
+        let job = match msg {
+            SessionMsg::BeginRun => {
+                parked = Instant::now();
+                continue;
+            }
+            SessionMsg::Gather(job) => job,
+        };
+        let idle_secs = parked.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        // SAFETY: upheld by the run loop — see [`SessionJob`] and the
+        // module-level protocol.
+        let result = unsafe {
+            let engine: &Engine<'_> = &*job.engine.cast();
+            let dag: &QueryDag = &*job.dag;
+            let state: &ModelState = &*job.state;
+            let slab = std::slice::from_raw_parts(job.slab, job.slab_len);
+            engine.gather_batch(dag, state, job.op, job.batch, slab)
+        };
+        let gather_secs = t0.elapsed().as_secs_f64();
+        parked = Instant::now();
+        if done.send(GatherDone { result, gather_secs, idle_secs }).is_err() {
+            break; // session gone (drop racing an in-flight error path)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::query::{Pattern, QueryTree};
+    use crate::runtime::MockRuntime;
+
+    fn mock_state(rt: &MockRuntime) -> ModelState {
+        ModelState::init(crate::runtime::Runtime::manifest(rt), "mock", 12, 6, None, 3)
+            .unwrap()
+    }
+
+    fn dag_of(n: usize, salt: u32) -> QueryDag {
+        let mut dag = QueryDag::default();
+        for i in 0..n as u32 {
+            let tree =
+                QueryTree::instantiate(Pattern::P1, &[(i + salt) % 12], &[i % 6]).unwrap();
+            dag.add_query(&tree, 5, vec![0, 1], Pattern::P1.name(), true).unwrap();
+        }
+        dag.add_gradient_nodes();
+        dag
+    }
+
+    #[test]
+    fn session_runs_many_dags_on_one_worker() {
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let mut session = EngineSession::new(&rt, EngineConfig::default());
+        assert_eq!(session.worker_spawns(), 1, "one worker at creation");
+        let mut losses = Vec::new();
+        for salt in 0..5 {
+            let mut grads = Grads::default();
+            let stats = session.run(&dag_of(6, salt), &st, &mut grads).unwrap();
+            assert_eq!(stats.operators, dag_of(6, salt).len());
+            losses.push(stats.loss);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()));
+        assert_eq!(session.worker_spawns(), 1, "reuse must not spawn more workers");
+    }
+
+    #[test]
+    fn sync_session_spawns_no_worker() {
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let mut session =
+            EngineSession::new(&rt, EngineConfig { pipeline: false, ..Default::default() });
+        assert_eq!(session.worker_spawns(), 0);
+        let mut grads = Grads::default();
+        let stats = session.run(&dag_of(4, 0), &st, &mut grads).unwrap();
+        assert_eq!(stats.spec_hits + stats.spec_misses, 0, "sync never speculates");
+    }
+
+    #[test]
+    fn session_matches_per_run_engine_bitwise() {
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let mut session = EngineSession::new(&rt, EngineConfig::default());
+        for salt in [0u32, 3, 9] {
+            let dag = dag_of(8, salt);
+            let mut g_sess = Grads::default();
+            let s_sess = session.run(&dag, &st, &mut g_sess).unwrap();
+            let engine = Engine::new(&rt, EngineConfig::default());
+            let mut g_run = Grads::default();
+            let s_run = engine.run(&dag, &st, &mut g_run).unwrap();
+            assert_eq!(s_sess.schedule, s_run.schedule);
+            assert_eq!(s_sess.loss.to_bits(), s_run.loss.to_bits());
+            for (k, v) in &g_sess.ent {
+                let w = &g_run.ent[k];
+                for (a, b) in v.iter().zip(w) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn session_survives_a_failed_run() {
+        // intersect4 has no compiled artifact: the run errors cleanly, the
+        // drain guard settles any in-flight job, and the next run through
+        // the same session (and the same worker) is clean.
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let mut session = EngineSession::new(&rt, EngineConfig::default());
+        let bad_tree = QueryTree::Intersect(vec![
+            QueryTree::Anchor(0),
+            QueryTree::Anchor(1),
+            QueryTree::Anchor(2),
+            QueryTree::Anchor(3),
+        ]);
+        let mut bad = QueryDag::default();
+        bad.add_query(&bad_tree, 5, vec![0, 1], "custom", true).unwrap();
+        bad.add_gradient_nodes();
+        let mut grads = Grads::default();
+        assert!(session.run(&bad, &st, &mut grads).is_err());
+        let mut grads = Grads::default();
+        let stats = session.run(&dag_of(6, 1), &st, &mut grads).unwrap();
+        assert!(stats.loss.is_finite());
+        assert_eq!(session.worker_spawns(), 1);
+    }
+
+    #[test]
+    fn accumulate_merges_like_the_manual_loop() {
+        let mut a = Grads::default();
+        Grads::add_rows(&mut a.ent, 1, &[1.0, 2.0]);
+        a.loss = 0.5;
+        a.n_queries = 1;
+        let mut b = Grads::default();
+        Grads::add_rows(&mut b.ent, 1, &[0.25, 0.25]);
+        Grads::add_rows(&mut b.rel, 7, &[3.0]);
+        b.dense.insert("w".into(), vec![1.0, 1.0]);
+        b.loss = 1.5;
+        b.n_queries = 2;
+        a.accumulate(b);
+        assert_eq!(a.ent[&1], vec![1.25, 2.25]);
+        assert_eq!(a.rel[&7], vec![3.0]);
+        assert_eq!(a.dense["w"], vec![1.0, 1.0]);
+        assert_eq!(a.loss, 2.0);
+        assert_eq!(a.n_queries, 3);
+    }
+}

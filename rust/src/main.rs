@@ -140,6 +140,9 @@ mod pjrt_commands {
                 r.qps, r.workers, fmt_bytes(r.allreduce_bytes_per_step),
                 r.loss_curve.first().unwrap_or(&0.0), r.loss_curve.last().unwrap_or(&0.0)
             );
+            for (phase, secs) in &r.phases {
+                println!("  {phase}: {secs:.2}s");
+            }
             return Ok(());
         }
 

@@ -87,7 +87,9 @@ impl SamplerStream {
     }
 
     /// Blocking receive of up to `n` queries (at least 1 unless producers
-    /// are gone).
+    /// are gone). The batch size depends on what is buffered — callers that
+    /// need deterministic batch composition (trainer replay, sharded
+    /// multi-worker receives) use [`SamplerStream::recv_exact`] instead.
     pub fn recv_batch(&self, n: usize) -> Vec<GroundedQuery> {
         let mut out = Vec::with_capacity(n);
         match self.rx.recv() {
@@ -96,6 +98,22 @@ impl SamplerStream {
         }
         while out.len() < n {
             match self.rx.try_recv() {
+                Ok(q) => out.push(q),
+                Err(_) => break,
+            }
+        }
+        out
+    }
+
+    /// Blocking receive of *exactly* `n` queries (fewer only if every
+    /// producer has hung up). Sharded multi-worker receives use this so a
+    /// shard is never silently short when the queue is momentarily
+    /// drained, and with a single producer thread it makes the consumed
+    /// sequence a pure function of the seed.
+    pub fn recv_exact(&self, n: usize) -> Vec<GroundedQuery> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            match self.rx.recv() {
                 Ok(q) => out.push(q),
                 Err(_) => break,
             }
@@ -113,7 +131,9 @@ impl SamplerStream {
         self.adaptive.lock().unwrap().set_base(weights);
     }
 
-    pub fn shutdown(mut self) {
+    /// Stop, drain and join — idempotent, shared by [`SamplerStream::shutdown`]
+    /// and `Drop`.
+    fn teardown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // drain so producers blocked on a full channel can observe `stop`
         while self.rx.try_recv().is_ok() {}
@@ -121,15 +141,15 @@ impl SamplerStream {
             let _ = h.join();
         }
     }
+
+    pub fn shutdown(mut self) {
+        self.teardown();
+    }
 }
 
 impl Drop for SamplerStream {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        while self.rx.try_recv().is_ok() {}
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.teardown();
     }
 }
 
@@ -237,6 +257,39 @@ mod tests {
         let w = s.adaptive.lock().unwrap().weights();
         assert!(w[1] > w[0]);
         s.shutdown();
+    }
+
+    #[test]
+    fn recv_exact_fills_the_shard_even_when_the_queue_drains() {
+        // tiny queue: a request far larger than the buffered depth must
+        // still come back complete (blocking receives, not try_recv)
+        let s = SamplerStream::spawn(
+            kg(),
+            SamplerConfig { n_neg: 4, queue_depth: 4, ..Default::default() },
+        );
+        let batch = s.recv_exact(64);
+        assert_eq!(batch.len(), 64);
+        for q in &batch {
+            assert_eq!(q.negatives.len(), 4);
+        }
+        s.shutdown();
+    }
+
+    #[test]
+    fn recv_exact_single_producer_sequence_is_deterministic() {
+        let pull = || {
+            let s = SamplerStream::spawn(
+                kg(),
+                SamplerConfig { threads: 1, ..Default::default() },
+            );
+            let batch = s.recv_exact(40);
+            s.shutdown();
+            batch
+                .into_iter()
+                .map(|q| (q.answer, q.negatives))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(pull(), pull(), "same seed, same single-producer sequence");
     }
 
     #[test]

@@ -1,13 +1,17 @@
 //! Training loops: the operator-level trainer, the query-level and
 //! per-query baselines, the multi-worker data-parallel path, and the
-//! single-hop (Table 2) trainer.
+//! single-hop (Table 2) trainer — all thin drivers over the shared
+//! [`step`] pipeline (sample → build DAGs → execute → reduce → optimize)
+//! and its warm per-session execution engine.
 
 pub mod checkpoint;
 pub mod multi_worker;
 pub mod single_hop;
+pub mod step;
 pub mod trainer;
 
 pub use multi_worker::{modeled_speedup, ring_allreduce_secs, train_multi_worker,
                        MultiWorkerReport};
 pub use single_hop::{train_complex, SingleHopReport};
+pub use step::{DagPrefetcher, ExecStats, StepOutcome, StepPipeline};
 pub use trainer::{TrainReport, Trainer};

@@ -1,25 +1,45 @@
 //! Data-parallel multi-worker training (Fig. 7 / Table 2 multi-GPU).
 //!
-//! W workers each sample and execute their shard of every global batch,
-//! then all-reduce gradients and apply one optimizer step. On this one-core
-//! testbed the workers are OS threads sharing the PJRT CPU client, so
-//! *measured* wall-clock cannot scale; correctness (worker-count-invariant
-//! gradients) is tested, and the Fig. 7 harness combines the measured
-//! single-worker compute time with the measured all-reduce volume in an
-//! explicit ring-allreduce cost model (DESIGN.md §Substitutions).
+//! W workers each execute their shard of every global batch through the
+//! shared [`step::StepPipeline`] (sample → build → execute happen per
+//! worker; reduce → optimize on the driver), then gradients all-reduce
+//! **deterministically in worker order** via
+//! [`crate::exec::Grads::accumulate`] and one optimizer step applies.
+//! Per-worker [`EngineSession`]s persist across steps — one warm gather
+//! worker per training worker for the whole run, no per-step (let alone
+//! per-run) thread spawning inside the engine.
+//!
+//! Shards come from the shared async [`SamplerStream`] via exact-size
+//! sharded receives (`Pipelining::Async`, the default: one stream feeds
+//! all workers, no per-worker sampling code), or — `Pipelining::Sync` —
+//! from per-worker/per-step [`Rng::fork`] streams (forking by step, then
+//! by worker, is collision-free by construction; the previous
+//! `seed ^ (step << 8) ^ w` scheme collided worker 256 at step 0 with
+//! worker 0 at step 1).
+//!
+//! On this one-core testbed the workers are OS threads sharing the PJRT
+//! CPU client, so *measured* wall-clock cannot scale; correctness
+//! (worker-count-invariant gradients) is tested, and the Fig. 7 harness
+//! combines the measured single-worker compute time with the measured
+//! all-reduce volume in an explicit ring-allreduce cost model (DESIGN.md
+//! §Substitutions). [`MultiWorkerReport::phases`] attributes where each
+//! step's wall-clock goes (worker-parallel phases as per-worker means).
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::config::ExperimentConfig;
-use crate::exec::{Engine, EngineConfig, Grads};
+use super::step::{self, ExecStats, StepPipeline};
+use crate::config::{Batching, ExperimentConfig, Pipelining};
+use crate::exec::{EngineConfig, EngineSession, Grads};
 use crate::kg::KgStore;
 use crate::model::ModelState;
-use crate::query::QueryDag;
+use crate::optim::AdamConfig;
 use crate::runtime::Runtime;
-use crate::sampler::{ground, negatives, GroundedQuery};
+use crate::sampler::{GroundedQuery, SamplerStream};
 use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
 
 /// Report of a multi-worker run.
 #[derive(Debug, Clone, Default)]
@@ -32,6 +52,11 @@ pub struct MultiWorkerReport {
     /// mean per-worker execute seconds per step
     pub worker_exec_secs: f64,
     pub loss_curve: Vec<f64>,
+    /// phase attribution of the run's wall clock, same vocabulary as
+    /// [`super::TrainReport::phases`] plus `allreduce`; worker-parallel
+    /// phases (`build_dag`, `execute` and its sub-buckets) are per-worker
+    /// means so they stay comparable to step wall-clock
+    pub phases: Vec<(String, f64)>,
 }
 
 /// Ring all-reduce cost model: each of W workers sends and receives
@@ -63,108 +88,112 @@ pub fn train_multi_worker(
     let workers = cfg.workers.max(1);
     let n_neg = rt.manifest().dims.n_neg;
     let supports_neg = crate::config::model_supports_negation(&state.model);
-    let adam = crate::optim::AdamConfig { lr: cfg.lr as f32, ..Default::default() };
+    let adam = AdamConfig { lr: cfg.lr as f32, ..Default::default() };
     let mut report = MultiWorkerReport {
         workers,
         steps: cfg.steps,
         ..Default::default()
     };
     let shard = cfg.batch_queries.div_ceil(workers);
-    let t0 = std::time::Instant::now();
+    let mut phases = PhaseTimer::default();
+
+    // Per-worker step pipelines persist across every step: one warm engine
+    // session (and gather worker) per training worker for the whole run.
+    // Each worker fuses its shard operator-level.
+    let mut pipelines: Vec<StepPipeline<'_>> = (0..workers)
+        .map(|_| {
+            StepPipeline::new(
+                EngineSession::new(rt, EngineConfig::default()),
+                adam,
+                Batching::OperatorLevel,
+                supports_neg,
+            )
+        })
+        .collect();
+
+    // Query feed: one shared producer stream sharded across workers, or
+    // deterministic per-worker/per-step forked sync streams.
+    let stream = match cfg.pipelining {
+        Pipelining::Async => {
+            Some(SamplerStream::spawn(Arc::clone(&kg), cfg.sampler(n_neg)))
+        }
+        Pipelining::Sync => None,
+    };
+    let mut root_rng = Rng::new(cfg.seed);
+
+    let t0 = Instant::now();
     let mut exec_secs_total = 0.0f64;
-
     for step in 0..cfg.steps {
-        // merged gradient accumulator + per-worker wall clocks
-        let merged: Mutex<Grads> = Mutex::new(Grads::default());
-        let exec_secs: Mutex<Vec<f64>> = Mutex::new(vec![0.0; workers]);
+        // ---- sample: one shard per worker, received in worker order ------
+        let shards: Vec<Vec<GroundedQuery>> = phases.time("sample", || match &stream {
+            Some(s) => (0..workers).map(|_| s.recv_exact(shard)).collect(),
+            None => {
+                let mut step_rng = root_rng.fork(step as u64);
+                (0..workers)
+                    .map(|w| {
+                        let mut rng = step_rng.fork(w as u64);
+                        step::sample_sync(&kg, &mut rng, &cfg.patterns, shard, n_neg)
+                    })
+                    .collect()
+            }
+        });
+        if shards.iter().all(|s| s.is_empty()) {
+            bail!("sampler produced no queries for the multi-worker step");
+        }
+
+        // ---- build + execute: every worker drives the shared pipeline
+        //      over its shard, on its own warm session ----------------------
         let state_ref: &ModelState = state;
-
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::new();
-            for w in 0..workers {
-                let kg = Arc::clone(&kg);
-                let merged = &merged;
-                let exec_secs = &exec_secs;
-                let patterns = cfg.patterns.clone();
-                handles.push(scope.spawn(move || -> Result<()> {
-                    let mut rng =
-                        Rng::new(cfg.seed ^ ((step as u64) << 8) ^ w as u64);
-                    // sample this worker's shard
-                    let mut batch: Vec<GroundedQuery> = Vec::with_capacity(shard);
-                    let mut guard = 0;
-                    while batch.len() < shard && guard < shard * 30 {
-                        guard += 1;
-                        let p = *rng.choice(&patterns);
-                        if let Some(mut q) = ground(&kg, &mut rng, p) {
-                            q.negatives = negatives(&kg, &mut rng, q.answer, None, n_neg);
-                            batch.push(q);
-                        }
-                    }
-                    let mut dag = QueryDag::default();
-                    for q in &batch {
-                        dag.add_query(&q.tree, q.answer, q.negatives.clone(),
-                            q.pattern.name(), supports_neg)?;
-                    }
-                    dag.add_gradient_nodes();
-                    let engine = Engine::new(rt, EngineConfig::default());
+        let mut results: Vec<Option<Result<(Grads, ExecStats)>>> =
+            (0..workers).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            for (pipeline, (shard_batch, slot)) in
+                pipelines.iter_mut().zip(shards.into_iter().zip(results.iter_mut()))
+            {
+                scope.spawn(move || {
                     let mut grads = Grads::default();
-                    let sw = std::time::Instant::now();
-                    engine.run(&dag, state_ref, &mut grads)?;
-                    exec_secs.lock().unwrap()[w] = sw.elapsed().as_secs_f64();
-                    // all-reduce contribution (shared-memory merge)
-                    let mut m = merged.lock().unwrap();
-                    m.loss += grads.loss;
-                    m.n_queries += grads.n_queries;
-                    for (k, v) in grads.ent {
-                        let e = m.ent.entry(k).or_insert_with(|| vec![0.0; v.len()]);
-                        for (a, b) in e.iter_mut().zip(&v) {
-                            *a += b;
-                        }
-                    }
-                    for (k, v) in grads.rel {
-                        let e = m.rel.entry(k).or_insert_with(|| vec![0.0; v.len()]);
-                        for (a, b) in e.iter_mut().zip(&v) {
-                            *a += b;
-                        }
-                    }
-                    for (k, v) in grads.dense {
-                        let e = m.dense.entry(k).or_insert_with(|| vec![0.0; v.len()]);
-                        for (a, b) in e.iter_mut().zip(&v) {
-                            *a += b;
-                        }
-                    }
-                    Ok(())
-                }));
+                    let r = pipeline.run_batch(&shard_batch, state_ref, &mut grads);
+                    *slot = Some(r.map(|exec| (grads, exec)));
+                });
             }
-            for h in handles {
-                h.join().expect("worker panicked")?;
-            }
-            Ok(())
-        })?;
+        });
 
-        let mut grads = merged.into_inner().unwrap();
+        // ---- all-reduce: fold worker contributions in worker order (the
+        //      shared-memory stand-in; float addition order is pinned so
+        //      replays are bit-identical) ---------------------------------
+        let t_reduce = Instant::now();
+        let mut grads = Grads::default();
+        let mut exec = ExecStats::default();
+        for r in results {
+            let (g, e) = r.expect("worker did not run")?;
+            grads.accumulate(g);
+            exec.merge(e);
+        }
+        phases.add("allreduce", t_reduce.elapsed().as_secs_f64());
+        let wf = workers as f64;
+        phases.add("build_dag", exec.build_secs / wf);
+        phases.add("execute", exec.execute_wall_secs / wf);
+        exec.attribute_execute(&mut phases, 1.0 / wf);
+        exec_secs_total += exec.execute_wall_secs / wf;
+
         // gradient traffic the real system would all-reduce
         let bytes: usize = grads.ent.values().map(|v| v.len() * 4).sum::<usize>()
             + grads.rel.values().map(|v| v.len() * 4).sum::<usize>()
             + grads.dense.values().map(|v| v.len() * 4).sum::<usize>();
         report.allreduce_bytes_per_step = bytes;
-        exec_secs_total += crate::util::stats::mean(&exec_secs.into_inner().unwrap());
 
+        // ---- reduce + optimize (shared pipeline tail) --------------------
         grads.normalize();
         report.loss_curve.push(grads.loss / grads.n_queries.max(1) as f64);
-        state.step += 1;
-        let s = state.step;
-        for (name, g) in &grads.dense {
-            if let Some(p) = state.dense.get_mut(name) {
-                adam.apply_dense(p, g, s);
-            }
-        }
-        adam.apply_sparse(&mut state.entities, &grads.ent, s);
-        adam.apply_sparse(&mut state.relations, &grads.rel, s);
+        phases.time("optimize", || step::optimize(state, &grads, &adam));
     }
 
+    if let Some(s) = stream {
+        s.shutdown();
+    }
     report.qps = (cfg.steps * cfg.batch_queries) as f64 / t0.elapsed().as_secs_f64();
     report.worker_exec_secs = exec_secs_total / cfg.steps.max(1) as f64;
+    report.phases = phases.buckets.clone();
     Ok(report)
 }
 
@@ -190,13 +219,17 @@ mod tests {
         Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap())
     }
 
+    fn mk_state(rt: &MockRuntime, kg: &KgStore) -> ModelState {
+        ModelState::init(
+            crate::runtime::Runtime::manifest(rt), "mock",
+            kg.n_entities, kg.n_relations, None, 1).unwrap()
+    }
+
     #[test]
     fn multi_worker_runs_and_reports() {
         let rt = MockRuntime::new();
         let kg = kg();
-        let mut state = ModelState::init(
-            crate::runtime::Runtime::manifest(&rt), "mock",
-            kg.n_entities, kg.n_relations, None, 1).unwrap();
+        let mut state = mk_state(&rt, &kg);
         let r = train_multi_worker(&rt, kg, &cfg(4), &mut state).unwrap();
         assert_eq!(r.workers, 4);
         assert!(r.allreduce_bytes_per_step > 0);
@@ -206,19 +239,49 @@ mod tests {
     #[test]
     fn worker_count_does_not_change_sampled_gradient_semantics() {
         // same total batch across 1 vs 2 workers won't sample the same
-        // queries (independent streams), but state must evolve finitely and
+        // queries (independent shards), but state must evolve finitely and
         // deterministically per seed.
         let rt = MockRuntime::new();
         let kg = kg();
-        let mk_state = || ModelState::init(
-            crate::runtime::Runtime::manifest(&rt), "mock",
-            kg.n_entities, kg.n_relations, None, 1).unwrap();
-        let mut s1 = mk_state();
-        let mut s2 = mk_state();
+        let mut s1 = mk_state(&rt, &kg);
+        let mut s2 = mk_state(&rt, &kg);
         let r1 = train_multi_worker(&rt, Arc::clone(&kg), &cfg(2), &mut s1).unwrap();
         let r2 = train_multi_worker(&rt, Arc::clone(&kg), &cfg(2), &mut s2).unwrap();
         assert_eq!(r1.loss_curve, r2.loss_curve, "replay must be deterministic");
         assert_eq!(s1.entities.data, s2.entities.data);
+    }
+
+    #[test]
+    fn sync_pipelining_forks_deterministic_worker_streams() {
+        // the Rng::fork(step) -> fork(worker) derivation must replay
+        // bit-identically (and, unlike the old xor scheme, cannot collide
+        // across (step, worker) pairs)
+        let rt = MockRuntime::new();
+        let kg = kg();
+        let mut c = cfg(3);
+        c.pipelining = Pipelining::Sync;
+        let mut s1 = mk_state(&rt, &kg);
+        let mut s2 = mk_state(&rt, &kg);
+        let r1 = train_multi_worker(&rt, Arc::clone(&kg), &c, &mut s1).unwrap();
+        let r2 = train_multi_worker(&rt, Arc::clone(&kg), &c, &mut s2).unwrap();
+        assert_eq!(r1.loss_curve, r2.loss_curve);
+        assert_eq!(s1.entities.data, s2.entities.data);
+        assert!(r1.loss_curve.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn report_attributes_phases_like_the_single_trainer() {
+        let rt = MockRuntime::new();
+        let kg = kg();
+        let mut state = mk_state(&rt, &kg);
+        let r = train_multi_worker(&rt, kg, &cfg(2), &mut state).unwrap();
+        for bucket in ["sample", "build_dag", "execute", "allreduce", "optimize"] {
+            assert!(
+                r.phases.iter().any(|(n, _)| n == bucket),
+                "missing phase bucket {bucket}: {:?}",
+                r.phases
+            );
+        }
     }
 
     #[test]

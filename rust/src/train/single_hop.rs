@@ -1,20 +1,28 @@
 //! Single-hop (link-prediction) trainer — the Table 2 runtime comparison.
 //!
-//! ComplEx over plain triples, epoch-based like Marius/PBG/SMORE measure it:
-//! one epoch = one pass over the training edges in shuffled order, batched
-//! through the fused `complex_score` artifact (loss + all gradients in one
-//! launch), sparse Adam on both tables.
+//! ComplEx over plain triples, epoch-based like Marius/PBG/SMORE measure
+//! it: one epoch = one pass over the training edges in shuffled order,
+//! batched through the fused `complex_score` artifact (loss + all
+//! gradients in one launch), sparse Adam on both tables.
+//!
+//! There is no QueryDAG here (one fused launch scores a whole triple
+//! batch), so of the shared [`super::step`] pipeline this driver uses the
+//! reduce + optimize tail — [`Grads`] scatter-adds and [`step::optimize`]
+//! — plus the same phase-bucket vocabulary (`sample` / `gather` /
+//! `execute` / `reduce` / `optimize`) in [`SingleHopReport::phases`].
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use super::step;
 use crate::exec::Grads;
 use crate::kg::KgStore;
 use crate::model::ModelState;
 use crate::optim::AdamConfig;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
 
 /// Result of an epoch-based single-hop run.
 #[derive(Debug, Clone, Default)]
@@ -22,6 +30,8 @@ pub struct SingleHopReport {
     pub epoch_secs: Vec<f64>,
     pub triples_per_sec: f64,
     pub loss_curve: Vec<f64>,
+    /// phase attribution of the run's wall clock
+    pub phases: Vec<(String, f64)>,
 }
 
 /// Train ComplEx for `epochs` epochs; `batch` is the triple batch size
@@ -41,6 +51,7 @@ pub fn train_complex(
     let adam = AdamConfig { lr, ..Default::default() };
     let mut rng = Rng::new(seed);
     let mut report = SingleHopReport::default();
+    let mut phases = PhaseTimer::default();
     let mut order: Vec<u32> = (0..kg.train.len() as u32).collect();
 
     for _epoch in 0..epochs {
@@ -50,66 +61,72 @@ pub fn train_complex(
         let mut seen = 0usize;
         for chunk in order.chunks(bucket) {
             let b = chunk.len();
-            let mut h_ids = Vec::with_capacity(b);
-            let mut r_ids = Vec::with_capacity(b);
-            let mut t_ids = Vec::with_capacity(b);
-            let mut negs: Vec<Vec<u32>> = Vec::with_capacity(b);
-            for &ti in chunk {
-                let t = kg.train[ti as usize];
-                h_ids.push(t.h);
-                r_ids.push(t.r);
-                t_ids.push(t.t);
-                negs.push(
-                    (0..n_neg)
-                        .map(|_| rng.below(kg.n_entities) as u32)
-                        .collect(),
-                );
-            }
-            let neg_refs: Vec<&[u32]> = negs.iter().map(Vec::as_slice).collect();
-            let mut mask = HostTensor::zeros(vec![bucket]);
-            mask.data[..b].fill(1.0);
-            let inputs = vec![
-                state.entities.gather(&h_ids, bucket),
-                state.relations.gather(&r_ids, bucket),
-                state.entities.gather(&t_ids, bucket),
-                state.entities.gather_nested(&neg_refs, bucket, n_neg),
-                mask,
-            ];
+            // ---- sample: triple ids + fresh uniform negatives ------------
+            let (h_ids, r_ids, t_ids, negs) = phases.time("sample", || {
+                let mut h_ids = Vec::with_capacity(b);
+                let mut r_ids = Vec::with_capacity(b);
+                let mut t_ids = Vec::with_capacity(b);
+                let mut negs: Vec<Vec<u32>> = Vec::with_capacity(b);
+                for &ti in chunk {
+                    let t = kg.train[ti as usize];
+                    h_ids.push(t.h);
+                    r_ids.push(t.r);
+                    t_ids.push(t.t);
+                    negs.push(
+                        (0..n_neg)
+                            .map(|_| rng.below(kg.n_entities) as u32)
+                            .collect(),
+                    );
+                }
+                (h_ids, r_ids, t_ids, negs)
+            });
+
+            // ---- gather: coalesce embedding rows into the bucket ---------
+            let inputs = phases.time("gather", || {
+                let neg_refs: Vec<&[u32]> = negs.iter().map(Vec::as_slice).collect();
+                let mut mask = HostTensor::zeros(vec![bucket]);
+                mask.data[..b].fill(1.0);
+                vec![
+                    state.entities.gather(&h_ids, bucket),
+                    state.relations.gather(&r_ids, bucket),
+                    state.entities.gather(&t_ids, bucket),
+                    state.entities.gather_nested(&neg_refs, bucket, n_neg),
+                    mask,
+                ]
+            });
+
+            // ---- execute: one fused loss+grads launch --------------------
             let name = format!("complex_score_fwd_b{bucket}");
-            let out = rt.execute(&name, &inputs)?;
+            let out = phases.time("execute", || rt.execute(&name, &inputs))?;
             epoch_loss += out[0].data[0] as f64;
             seen += b;
 
-            // scatter grads
+            // ---- reduce: scatter grads into the shared accumulator -------
             let mut grads = Grads::default();
-            let (g_h, g_r, g_pos, g_neg) = (&out[1], &out[2], &out[3], &out[4]);
-            let ed = state.ent_dim;
-            for i in 0..b {
-                add(&mut grads.ent, h_ids[i], g_h.row(i));
-                add(&mut grads.rel, r_ids[i], g_r.row(i));
-                add(&mut grads.ent, t_ids[i], g_pos.row(i));
-                for (j, &nid) in negs[i].iter().enumerate() {
-                    let base = i * n_neg * ed + j * ed;
-                    add(&mut grads.ent, nid, &g_neg.data[base..base + ed]);
+            phases.time("reduce", || {
+                let (g_h, g_r, g_pos, g_neg) = (&out[1], &out[2], &out[3], &out[4]);
+                let ed = state.ent_dim;
+                for i in 0..b {
+                    Grads::add_rows(&mut grads.ent, h_ids[i], g_h.row(i));
+                    Grads::add_rows(&mut grads.rel, r_ids[i], g_r.row(i));
+                    Grads::add_rows(&mut grads.ent, t_ids[i], g_pos.row(i));
+                    for (j, &nid) in negs[i].iter().enumerate() {
+                        let base = i * n_neg * ed + j * ed;
+                        Grads::add_rows(&mut grads.ent, nid, &g_neg.data[base..base + ed]);
+                    }
                 }
-            }
-            grads.n_queries = b;
-            grads.normalize();
-            state.step += 1;
-            adam.apply_sparse(&mut state.entities, &grads.ent, state.step);
-            adam.apply_sparse(&mut state.relations, &grads.rel, state.step);
+                grads.n_queries = b;
+                grads.normalize();
+            });
+
+            // ---- optimize: the shared Adam tail --------------------------
+            phases.time("optimize", || step::optimize(state, &grads, &adam));
         }
         report.epoch_secs.push(sw.elapsed().as_secs_f64());
         report.loss_curve.push(epoch_loss / seen.max(1) as f64);
     }
     let total: f64 = report.epoch_secs.iter().sum();
     report.triples_per_sec = (kg.train.len() * epochs) as f64 / total.max(1e-9);
+    report.phases = phases.buckets.clone();
     Ok(report)
-}
-
-fn add(map: &mut std::collections::HashMap<u32, Vec<f32>>, id: u32, row: &[f32]) {
-    let e = map.entry(id).or_insert_with(|| vec![0.0; row.len()]);
-    for (a, b) in e.iter_mut().zip(row) {
-        *a += b;
-    }
 }

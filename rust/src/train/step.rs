@@ -1,0 +1,442 @@
+//! The shared training-step pipeline: **sample → build DAGs → execute →
+//! reduce → optimize**, with uniform phase attribution.
+//!
+//! All three trainers are thin drivers over this module:
+//!
+//! * [`super::Trainer::train`] — samples (sync rng or async stream), feeds
+//!   [`StepPipeline::execute_step`]; under `Pipelining::Async` a
+//!   [`DagPrefetcher`] builds step N+1's DAGs while step N's artifacts
+//!   execute (double-buffered step pipelining — §4.3's heterogeneous
+//!   pipeline one layer up).
+//! * [`super::train_multi_worker`] — W workers each drive
+//!   [`StepPipeline::run_batch`] over their shard (per-worker
+//!   [`EngineSession`]s persist across steps), then gradients fold through
+//!   [`crate::exec::Grads::accumulate`] in worker order and one
+//!   [`optimize`] applies.
+//! * [`super::train_complex`] — no DAGs (fused single-launch scoring), but
+//!   the same [`crate::exec::Grads`] reduce + [`optimize`] tail and the
+//!   same phase-bucket vocabulary.
+//!
+//! The pipeline owns an [`EngineSession`], so back-to-back DAGs within and
+//! across steps reuse one warm gather worker — zero per-run thread spawns.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::Batching;
+use crate::exec::{EngineSession, Grads, StepStats};
+use crate::kg::KgStore;
+use crate::model::ModelState;
+use crate::optim::AdamConfig;
+use crate::query::{Pattern, QueryDag};
+use crate::sampler::{ground, negatives, GroundedQuery};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+
+/// Synchronous on-the-critical-path sampling (the `Pipelining::Sync`
+/// baseline): draw up to `count` grounded queries with negatives attached.
+pub fn sample_sync(
+    kg: &KgStore,
+    rng: &mut Rng,
+    patterns: &[Pattern],
+    count: usize,
+    n_neg: usize,
+) -> Vec<GroundedQuery> {
+    let mut out = Vec::with_capacity(count);
+    let mut guard = 0usize;
+    while out.len() < count && guard < count * 30 {
+        guard += 1;
+        let p = *rng.choice(patterns);
+        if let Some(mut q) = ground(kg, rng, p) {
+            q.negatives = negatives(kg, rng, q.answer, None, n_neg);
+            out.push(q);
+        }
+    }
+    out
+}
+
+/// Build the step's DAG(s) per the batching policy: one fused DAG
+/// (operator-level), one per structure group (query-level), or one per
+/// query (the SQE-like per-query baseline).
+pub fn build_dags(
+    batching: Batching,
+    batch: &[GroundedQuery],
+    neg_ok: bool,
+) -> Result<Vec<QueryDag>> {
+    match batching {
+        Batching::OperatorLevel => {
+            let mut dag = QueryDag::default();
+            for q in batch {
+                dag.add_query(&q.tree, q.answer, q.negatives.clone(), q.pattern.name(),
+                    neg_ok)?;
+            }
+            dag.add_gradient_nodes();
+            Ok(vec![dag])
+        }
+        Batching::QueryLevel => {
+            // fragment by structure: one fused DAG per pattern group
+            let mut groups: std::collections::BTreeMap<&str, Vec<&GroundedQuery>> =
+                Default::default();
+            for q in batch {
+                groups.entry(q.pattern.name()).or_default().push(q);
+            }
+            groups
+                .into_values()
+                .map(|qs| {
+                    let mut dag = QueryDag::default();
+                    for q in qs {
+                        dag.add_query(&q.tree, q.answer, q.negatives.clone(),
+                            q.pattern.name(), neg_ok)?;
+                    }
+                    dag.add_gradient_nodes();
+                    Ok(dag)
+                })
+                .collect()
+        }
+        Batching::PerQuery => batch
+            .iter()
+            .map(|q| {
+                let mut dag = QueryDag::default();
+                dag.add_query(&q.tree, q.answer, q.negatives.clone(),
+                    q.pattern.name(), neg_ok)?;
+                dag.add_gradient_nodes();
+                Ok(dag)
+            })
+            .collect(),
+    }
+}
+
+/// Apply accumulated (already-normalized) gradients: dense + sparse Adam,
+/// bumping the optimizer step — the single optimize stage every trainer
+/// routes through.
+pub fn optimize(state: &mut ModelState, grads: &Grads, adam: &AdamConfig) {
+    state.step += 1;
+    let step = state.step;
+    for (name, g) in &grads.dense {
+        if let Some(p) = state.dense.get_mut(name) {
+            adam.apply_dense(p, g, step);
+        }
+    }
+    adam.apply_sparse(&mut state.entities, &grads.ent, step);
+    adam.apply_sparse(&mut state.relations, &grads.rel, step);
+}
+
+/// Execution telemetry of one step (or one worker's shard of it),
+/// aggregated over the step's DAGs.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub queries: usize,
+    pub operators: usize,
+    /// artifact invocations (= fused kernel launches)
+    pub launches: usize,
+    pub padded_rows: usize,
+    pub peak_live_bytes: usize,
+    /// wall-clock of DAG construction (`run_batch` only)
+    pub build_secs: f64,
+    /// wall-clock of the execute stage end to end
+    pub execute_wall_secs: f64,
+    /// engine sub-attribution (see [`StepStats`])
+    pub gather_secs: f64,
+    pub execute_secs: f64,
+    pub overlap_secs: f64,
+    pub worker_idle_secs: f64,
+    pub gather_wait_secs: f64,
+    /// per-pattern loss observations (adaptive-sampler feedback)
+    pub per_pattern: Vec<(&'static str, f64, usize)>,
+}
+
+impl ExecStats {
+    /// Fold one DAG run's telemetry in.
+    pub fn absorb(&mut self, stats: StepStats) {
+        self.queries += stats.n_queries;
+        self.operators += stats.operators;
+        self.launches += stats.executions;
+        self.padded_rows += stats.padded_rows;
+        self.peak_live_bytes = self.peak_live_bytes.max(stats.peak_live_bytes);
+        self.gather_secs += stats.gather_secs;
+        self.execute_secs += stats.execute_secs;
+        self.overlap_secs += stats.overlap_secs;
+        self.worker_idle_secs += stats.worker_idle_secs;
+        self.gather_wait_secs += stats.gather_wait_secs;
+        self.per_pattern.extend(stats.per_pattern_loss);
+    }
+
+    /// Attribute the engine's execute sub-buckets into a phase timer,
+    /// scaled by `scale` (1.0 for a single trainer; `1/workers` for
+    /// summed-across-workers stats so they stay per-worker means). The one
+    /// place the `execute/*` bucket vocabulary is defined — the single and
+    /// multi-worker trainers both route through it.
+    pub fn attribute_execute(&self, phases: &mut PhaseTimer, scale: f64) {
+        phases.add("execute/gather", self.gather_secs * scale);
+        phases.add("execute/artifacts", self.execute_secs * scale);
+        phases.add("execute/overlap", self.overlap_secs * scale);
+        phases.add("execute/worker_idle", self.worker_idle_secs * scale);
+        phases.add("execute/gather_wait", self.gather_wait_secs * scale);
+    }
+
+    /// Fold another worker's shard telemetry in (sums; divide by the
+    /// worker count for per-worker means of the wall-clock fields).
+    pub fn merge(&mut self, other: ExecStats) {
+        self.queries += other.queries;
+        self.operators += other.operators;
+        self.launches += other.launches;
+        self.padded_rows += other.padded_rows;
+        self.peak_live_bytes = self.peak_live_bytes.max(other.peak_live_bytes);
+        self.build_secs += other.build_secs;
+        self.execute_wall_secs += other.execute_wall_secs;
+        self.gather_secs += other.gather_secs;
+        self.execute_secs += other.execute_secs;
+        self.overlap_secs += other.overlap_secs;
+        self.worker_idle_secs += other.worker_idle_secs;
+        self.gather_wait_secs += other.gather_wait_secs;
+        self.per_pattern.extend(other.per_pattern);
+    }
+}
+
+/// Outcome of one full optimizer step through [`StepPipeline::execute_step`].
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// mean per-query loss
+    pub mean_loss: f64,
+    pub exec: ExecStats,
+}
+
+/// One trainer's (or one data-parallel worker's) step pipeline: a warm
+/// [`EngineSession`], the optimizer config, and the batching policy.
+pub struct StepPipeline<'a> {
+    pub session: EngineSession<'a>,
+    pub adam: AdamConfig,
+    pub batching: Batching,
+    pub supports_neg: bool,
+}
+
+impl<'a> StepPipeline<'a> {
+    pub fn new(
+        session: EngineSession<'a>,
+        adam: AdamConfig,
+        batching: Batching,
+        supports_neg: bool,
+    ) -> StepPipeline<'a> {
+        StepPipeline { session, adam, batching, supports_neg }
+    }
+
+    /// Build this pipeline's DAG(s) for one batch.
+    pub fn build_dags(&self, batch: &[GroundedQuery]) -> Result<Vec<QueryDag>> {
+        build_dags(self.batching, batch, self.supports_neg)
+    }
+
+    /// Build + execute one batch, accumulating into `grads` — the
+    /// data-parallel worker's half-step (reduce and optimize happen on the
+    /// driver after the worker-order all-reduce).
+    pub fn run_batch(
+        &mut self,
+        batch: &[GroundedQuery],
+        state: &ModelState,
+        grads: &mut Grads,
+    ) -> Result<ExecStats> {
+        let mut exec = ExecStats::default();
+        let t0 = Instant::now();
+        let dags = self.build_dags(batch)?;
+        exec.build_secs = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        for dag in &dags {
+            exec.absorb(self.session.run(dag, state, grads)?);
+        }
+        exec.execute_wall_secs = t1.elapsed().as_secs_f64();
+        Ok(exec)
+    }
+
+    /// Execute pre-built DAGs, reduce, and optimize — one full step with
+    /// the uniform phase attribution (`execute` + engine sub-buckets,
+    /// `optimize`).
+    pub fn execute_step(
+        &mut self,
+        dags: &[QueryDag],
+        state: &mut ModelState,
+        phases: &mut PhaseTimer,
+    ) -> Result<StepOutcome> {
+        let mut grads = Grads::default();
+        let mut exec = ExecStats::default();
+        let session = &mut self.session;
+        phases.time("execute", || -> Result<()> {
+            let t1 = Instant::now();
+            for dag in dags {
+                exec.absorb(session.run(dag, state, &mut grads)?);
+            }
+            exec.execute_wall_secs = t1.elapsed().as_secs_f64();
+            Ok(())
+        })?;
+        // sub-attribution of the execute phase (pipelined engine): overlap
+        // is gather time hidden under artifact execution; worker_idle /
+        // gather_wait are the persistent-worker contention counters (worker
+        // starved of jobs vs main thread starved of prefetches)
+        exec.attribute_execute(phases, 1.0);
+
+        // ---- reduce + optimize
+        grads.normalize();
+        let mean_loss = grads.loss / grads.n_queries.max(1) as f64;
+        phases.time("optimize", || optimize(state, &grads, &self.adam));
+        Ok(StepOutcome { mean_loss, exec })
+    }
+}
+
+/// Double-buffered DAG building: a session-long builder thread turns
+/// sampled batches into DAGs off the critical path, so step N+1's DAGs
+/// build while step N's artifacts execute. Safe (no raw pointers): batches
+/// move in, DAGs move out. Submissions are FIFO; numerics are untouched —
+/// the same batches produce the same DAGs, only earlier.
+pub struct DagPrefetcher {
+    job_tx: Option<Sender<Vec<GroundedQuery>>>,
+    out_rx: Receiver<Result<(usize, Vec<QueryDag>)>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DagPrefetcher {
+    pub fn spawn(batching: Batching, supports_neg: bool) -> DagPrefetcher {
+        let (job_tx, job_rx) = channel::<Vec<GroundedQuery>>();
+        let (out_tx, out_rx) = channel();
+        let handle = std::thread::spawn(move || {
+            while let Ok(batch) = job_rx.recv() {
+                let n = batch.len();
+                let built = build_dags(batching, &batch, supports_neg).map(|d| (n, d));
+                if out_tx.send(built).is_err() {
+                    break;
+                }
+            }
+        });
+        DagPrefetcher { job_tx: Some(job_tx), out_rx, handle: Some(handle) }
+    }
+
+    /// Queue the next step's batch for building.
+    pub fn submit(&self, batch: Vec<GroundedQuery>) {
+        if let Some(tx) = &self.job_tx {
+            tx.send(batch).expect("DAG builder hung up");
+        }
+    }
+
+    /// Block until the oldest submitted batch is built; returns its query
+    /// count and DAGs.
+    pub fn recv(&self) -> Result<(usize, Vec<QueryDag>)> {
+        match self.out_rx.recv() {
+            Ok(built) => built,
+            Err(_) => bail!("DAG builder died"),
+        }
+    }
+}
+
+impl Drop for DagPrefetcher {
+    fn drop(&mut self) {
+        self.job_tx.take(); // hang up: the builder's recv errors and it exits
+        while self.out_rx.try_recv().is_ok() {} // discard unclaimed builds
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::EngineConfig;
+    use crate::kg::KgSpec;
+    use crate::runtime::{MockRuntime, Runtime};
+    use std::sync::Arc;
+
+    fn kg() -> Arc<KgStore> {
+        Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap())
+    }
+
+    fn sample(kg: &KgStore, n: usize) -> Vec<GroundedQuery> {
+        let mut rng = Rng::new(11);
+        sample_sync(kg, &mut rng, &[Pattern::P1, Pattern::I2], n, 2)
+    }
+
+    #[test]
+    fn build_dags_respects_the_batching_policy() {
+        let kg = kg();
+        let batch = sample(&kg, 12);
+        assert!(!batch.is_empty());
+        let op = build_dags(Batching::OperatorLevel, &batch, true).unwrap();
+        assert_eq!(op.len(), 1);
+        let pq = build_dags(Batching::PerQuery, &batch, true).unwrap();
+        assert_eq!(pq.len(), batch.len());
+        let ql = build_dags(Batching::QueryLevel, &batch, true).unwrap();
+        assert!(ql.len() <= 2, "at most one group per pattern");
+    }
+
+    #[test]
+    fn prefetcher_builds_identically_to_inline_building() {
+        let kg = kg();
+        let b1 = sample(&kg, 8);
+        let b2 = sample(&kg, 8);
+        let p = DagPrefetcher::spawn(Batching::OperatorLevel, true);
+        p.submit(b1.clone());
+        p.submit(b2.clone());
+        for b in [b1, b2] {
+            let (n, dags) = p.recv().unwrap();
+            assert_eq!(n, b.len());
+            let inline = build_dags(Batching::OperatorLevel, &b, true).unwrap();
+            assert_eq!(dags.len(), inline.len());
+            assert_eq!(dags[0].len(), inline[0].len());
+            assert_eq!(dags[0].queries.len(), inline[0].queries.len());
+        }
+    }
+
+    #[test]
+    fn pipeline_step_trains_and_attributes_phases() {
+        let rt = MockRuntime::new();
+        let kg = kg();
+        let mut state = ModelState::init(
+            rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 5,
+        )
+        .unwrap();
+        let before = state.entities.data.clone();
+        let mut pipeline = StepPipeline::new(
+            EngineSession::new(&rt, EngineConfig::default()),
+            AdamConfig::default(),
+            Batching::OperatorLevel,
+            true,
+        );
+        let batch = sample(&kg, 16);
+        let dags = pipeline.build_dags(&batch).unwrap();
+        let mut phases = PhaseTimer::default();
+        let outcome = pipeline.execute_step(&dags, &mut state, &mut phases).unwrap();
+        assert!(outcome.mean_loss.is_finite());
+        assert_eq!(outcome.exec.queries, batch.len());
+        assert_ne!(state.entities.data, before, "optimize must move embeddings");
+        assert_eq!(state.step, 1);
+        for bucket in ["execute", "execute/gather", "execute/artifacts", "optimize"] {
+            assert!(
+                phases.buckets.iter().any(|(n, _)| n == bucket),
+                "missing phase bucket {bucket}"
+            );
+        }
+    }
+
+    #[test]
+    fn run_batch_accumulates_without_optimizing() {
+        let rt = MockRuntime::new();
+        let kg = kg();
+        let state = ModelState::init(
+            rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 5,
+        )
+        .unwrap();
+        let mut pipeline = StepPipeline::new(
+            EngineSession::new(&rt, EngineConfig::default()),
+            AdamConfig::default(),
+            Batching::OperatorLevel,
+            true,
+        );
+        let batch = sample(&kg, 8);
+        let mut grads = Grads::default();
+        let exec = pipeline.run_batch(&batch, &state, &mut grads).unwrap();
+        assert_eq!(exec.queries, batch.len());
+        assert_eq!(grads.n_queries, batch.len());
+        assert!(exec.launches > 0);
+        assert!(!grads.ent.is_empty());
+        assert_eq!(state.step, 0, "run_batch must not touch the optimizer");
+    }
+}

@@ -9,22 +9,37 @@
 //! * `Batching::PerQuery` — one DAG per query with singleton batches
 //!   (SQE-proxy, Fig. 2a's kernel stream).
 //!
-//! `Pipelining::Sync` generates queries on the critical path;
-//! `Pipelining::Async` consumes the producer-thread stream (§4.3).
+//! The trainer is a thin driver over the shared [`step`] pipeline: it
+//! samples, then hands DAGs to [`step::StepPipeline::execute_step`], whose
+//! warm [`crate::exec::EngineSession`] persists across all steps (and all
+//! DAGs of a step — the per-query baseline no longer spawns a gather
+//! worker per query).
+//!
+//! `Pipelining::Sync` samples and builds DAGs on the critical path;
+//! `Pipelining::Async` consumes the producer-thread stream (§4.3) with
+//! exact-size receives *and* double-buffers DAG construction through a
+//! [`step::DagPrefetcher`] — step N+1's DAGs build while step N's
+//! artifacts execute. Both paths replay deterministically per seed (Async
+//! needs a single producer thread: exact receives then make the query
+//! sequence a pure function of the seed). Adaptive feedback under Async
+//! reaches the producers one step later than Sync would apply it — the
+//! price of sampling ahead; with `adaptive_lambda = 0` the sequences are
+//! identical.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use super::step::{self, DagPrefetcher, StepPipeline};
 use crate::config::{Batching, ExperimentConfig, Pipelining};
-use crate::exec::{Engine, EngineConfig, Grads};
+use crate::exec::{EngineConfig, EngineSession, Grads};
 use crate::kg::KgStore;
 use crate::metrics::{MemoryEstimate, ThroughputMeter, TsvLogger};
 use crate::model::ModelState;
 use crate::optim::AdamConfig;
-use crate::query::{Pattern, QueryDag};
+use crate::query::Pattern;
 use crate::runtime::Runtime;
-use crate::sampler::{ground, GroundedQuery, SamplerStream};
+use crate::sampler::SamplerStream;
 use crate::semantic::SemanticSource;
 use crate::util::rng::Rng;
 use crate::util::timer::{PhaseTimer, Stopwatch};
@@ -64,15 +79,18 @@ impl<'a> Trainer<'a> {
         self
     }
 
-    fn engine(&self) -> Engine<'a> {
+    /// Stand up this run's step pipeline: one engine session (one warm
+    /// gather worker) for the entire training run.
+    fn pipeline(&self, supports_neg: bool) -> StepPipeline<'a> {
         let ecfg = EngineConfig {
             force_singleton: self.cfg.batching == Batching::PerQuery,
             ..Default::default()
         };
-        match self.semantic {
-            Some(s) => Engine::with_semantic(self.rt, ecfg, s),
-            None => Engine::new(self.rt, ecfg),
-        }
+        let session = match self.semantic {
+            Some(s) => EngineSession::with_semantic(self.rt, ecfg, s),
+            None => EngineSession::new(self.rt, ecfg),
+        };
+        StepPipeline::new(session, self.adam, self.cfg.batching, supports_neg)
     }
 
     /// Run `cfg.steps` optimizer steps, mutating `state`.
@@ -82,7 +100,7 @@ impl<'a> Trainer<'a> {
             bail!("model {} cannot train negation patterns", state.model);
         }
         let n_neg = self.rt.manifest().dims.n_neg;
-        let engine = self.engine();
+        let mut pipeline = self.pipeline(supports_neg);
         let mut meter = ThroughputMeter::new();
         let mut phases = PhaseTimer::default();
         let mut logger = TsvLogger::open(
@@ -90,8 +108,11 @@ impl<'a> Trainer<'a> {
             "step\tloss\tqps\tops_per_launch\tpeak_live_bytes",
         )?;
         let mut report = TrainReport::default();
+        let mut peak_live = 0usize;
 
-        // async pipeline (producers) or a local synchronous sampler
+        // Async: producer stream + double-buffered DAG building (prime the
+        // builder with step 0's batch). Sync: a local sampler on the
+        // critical path.
         let stream = match self.cfg.pipelining {
             Pipelining::Async => Some(SamplerStream::spawn(
                 Arc::clone(&self.kg),
@@ -99,86 +120,78 @@ impl<'a> Trainer<'a> {
             )),
             Pipelining::Sync => None,
         };
+        let prefetch = stream.as_ref().map(|s| {
+            let p = DagPrefetcher::spawn(self.cfg.batching, supports_neg);
+            p.submit(phases.time("sample", || s.recv_exact(self.cfg.batch_queries)));
+            p
+        });
         let mut sync_rng = Rng::new(self.cfg.seed ^ 0x5A);
 
-        let mut peak_live = 0usize;
         for step in 0..self.cfg.steps {
             let sw = Stopwatch::new();
-            // ---- sample -----------------------------------------------------
-            let batch: Vec<GroundedQuery> = phases.time("sample", || match &stream {
-                Some(s) => s.recv_batch(self.cfg.batch_queries),
-                None => self.sample_sync(&mut sync_rng, n_neg),
-            });
-            if batch.is_empty() {
+            // ---- sample + build DAG(s); both prefetched under Async ------
+            let (n_q, dags) = match (&stream, &prefetch) {
+                (Some(s), Some(p)) => {
+                    // `build_dag` here is only the *wait* for the builder —
+                    // construction itself overlapped step N-1's execution
+                    let built = phases.time("build_dag", || p.recv())?;
+                    if step + 1 < self.cfg.steps {
+                        let next =
+                            phases.time("sample", || s.recv_exact(self.cfg.batch_queries));
+                        p.submit(next);
+                    }
+                    built
+                }
+                _ => {
+                    let batch = phases.time("sample", || {
+                        step::sample_sync(
+                            &self.kg,
+                            &mut sync_rng,
+                            &self.cfg.patterns,
+                            self.cfg.batch_queries,
+                            n_neg,
+                        )
+                    });
+                    let dags = phases.time("build_dag", || pipeline.build_dags(&batch))?;
+                    (batch.len(), dags)
+                }
+            };
+            if n_q == 0 {
                 bail!("sampler produced no queries");
             }
 
-            // ---- build DAG(s) per batching policy ---------------------------
-            let dags: Vec<QueryDag> = phases.time("build_dag", || {
-                self.build_dags(&batch, supports_neg)
-            })?;
+            // ---- execute + reduce + optimize (shared step pipeline) ------
+            let outcome = pipeline.execute_step(&dags, state, &mut phases)?;
+            peak_live = peak_live.max(outcome.exec.peak_live_bytes);
 
-            // ---- execute -----------------------------------------------------
-            let mut grads = Grads::default();
-            let mut step_ops = 0usize;
-            let mut step_launch = 0usize;
-            let mut step_pad = 0usize;
-            let (mut step_gather, mut step_exec, mut step_overlap) = (0.0f64, 0.0f64, 0.0f64);
-            let (mut step_idle, mut step_wait) = (0.0f64, 0.0f64);
-            let mut per_pattern: Vec<(&'static str, f64, usize)> = Vec::new();
-            phases.time("execute", || -> Result<()> {
-                for dag in &dags {
-                    let stats = engine.run(dag, state, &mut grads)?;
-                    step_ops += stats.operators;
-                    step_launch += stats.executions;
-                    step_pad += stats.padded_rows;
-                    step_gather += stats.gather_secs;
-                    step_exec += stats.execute_secs;
-                    step_overlap += stats.overlap_secs;
-                    step_idle += stats.worker_idle_secs;
-                    step_wait += stats.gather_wait_secs;
-                    peak_live = peak_live.max(stats.peak_live_bytes);
-                    per_pattern.extend(stats.per_pattern_loss);
-                }
-                Ok(())
-            })?;
-            // sub-attribution of the execute phase (pipelined engine):
-            // overlap is gather time hidden under artifact execution;
-            // worker_idle / gather_wait are the persistent-worker contention
-            // counters (worker starved of jobs vs main thread starved of
-            // prefetches)
-            phases.add("execute/gather", step_gather);
-            phases.add("execute/artifacts", step_exec);
-            phases.add("execute/overlap", step_overlap);
-            phases.add("execute/worker_idle", step_idle);
-            phases.add("execute/gather_wait", step_wait);
-
-            // ---- optimize ----------------------------------------------------
-            grads.normalize();
-            let mean_loss = grads.loss / grads.n_queries.max(1) as f64;
-            phases.time("optimize", || self.apply(state, &grads));
-
-            // ---- feedback + metrics ------------------------------------------
+            // ---- feedback + metrics --------------------------------------
             if let Some(s) = &stream {
-                for (pat, loss, count) in per_pattern {
-                    if count > 0 {
+                for (pat, loss, count) in &outcome.exec.per_pattern {
+                    if *count > 0 {
                         if let Ok(p) = Pattern::from_name(pat) {
-                            s.feedback(p, loss / count as f64);
+                            s.feedback(p, *loss / *count as f64);
                         }
                     }
                 }
             }
-            meter.tick(batch.len(), step_ops, step_launch, step_pad, sw.elapsed_secs());
-            report.loss_curve.push(mean_loss);
+            meter.tick(
+                n_q,
+                outcome.exec.operators,
+                outcome.exec.launches,
+                outcome.exec.padded_rows,
+                sw.elapsed_secs(),
+            );
+            report.loss_curve.push(outcome.mean_loss);
             logger.row(&[
                 step.to_string(),
-                format!("{mean_loss:.6}"),
+                format!("{:.6}", outcome.mean_loss),
                 format!("{:.1}", meter.qps()),
                 format!("{:.2}", meter.ops_per_launch()),
                 peak_live.to_string(),
             ]);
         }
 
+        drop(prefetch);
         if let Some(s) = stream {
             s.shutdown();
         }
@@ -198,76 +211,10 @@ impl<'a> Trainer<'a> {
         Ok(report)
     }
 
-    fn sample_sync(&self, rng: &mut Rng, n_neg: usize) -> Vec<GroundedQuery> {
-        let mut out = Vec::with_capacity(self.cfg.batch_queries);
-        let mut guard = 0usize;
-        while out.len() < self.cfg.batch_queries && guard < self.cfg.batch_queries * 20 {
-            guard += 1;
-            let p = *rng.choice(&self.cfg.patterns);
-            if let Some(mut q) = ground(&self.kg, rng, p) {
-                q.negatives =
-                    crate::sampler::negatives(&self.kg, rng, q.answer, None, n_neg);
-                out.push(q);
-            }
-        }
-        out
-    }
-
-    fn build_dags(&self, batch: &[GroundedQuery], neg_ok: bool) -> Result<Vec<QueryDag>> {
-        match self.cfg.batching {
-            Batching::OperatorLevel => {
-                let mut dag = QueryDag::default();
-                for q in batch {
-                    dag.add_query(&q.tree, q.answer, q.negatives.clone(),
-                        q.pattern.name(), neg_ok)?;
-                }
-                dag.add_gradient_nodes();
-                Ok(vec![dag])
-            }
-            Batching::QueryLevel => {
-                // fragment by structure: one fused DAG per pattern group
-                let mut groups: std::collections::BTreeMap<&str, Vec<&GroundedQuery>> =
-                    Default::default();
-                for q in batch {
-                    groups.entry(q.pattern.name()).or_default().push(q);
-                }
-                groups
-                    .into_values()
-                    .map(|qs| {
-                        let mut dag = QueryDag::default();
-                        for q in qs {
-                            dag.add_query(&q.tree, q.answer, q.negatives.clone(),
-                                q.pattern.name(), neg_ok)?;
-                        }
-                        dag.add_gradient_nodes();
-                        Ok(dag)
-                    })
-                    .collect()
-            }
-            Batching::PerQuery => batch
-                .iter()
-                .map(|q| {
-                    let mut dag = QueryDag::default();
-                    dag.add_query(&q.tree, q.answer, q.negatives.clone(),
-                        q.pattern.name(), neg_ok)?;
-                    dag.add_gradient_nodes();
-                    Ok(dag)
-                })
-                .collect(),
-        }
-    }
-
-    /// Apply accumulated gradients (dense + sparse Adam).
+    /// Apply accumulated gradients (dense + sparse Adam) — the shared
+    /// pipeline's optimize stage, exposed for manual stepping (fig9).
     pub fn apply(&self, state: &mut ModelState, grads: &Grads) {
-        state.step += 1;
-        let step = state.step;
-        for (name, g) in &grads.dense {
-            if let Some(p) = state.dense.get_mut(name) {
-                self.adam.apply_dense(p, g, step);
-            }
-        }
-        self.adam.apply_sparse(&mut state.entities, &grads.ent, step);
-        self.adam.apply_sparse(&mut state.relations, &grads.rel, step);
+        step::optimize(state, grads, &self.adam);
     }
 }
 
@@ -277,7 +224,10 @@ mod tests {
     use crate::kg::KgSpec;
     use crate::runtime::MockRuntime;
 
-    fn setup(batching: Batching, pipelining: Pipelining) -> (MockRuntime, Arc<KgStore>, ExperimentConfig) {
+    fn setup(
+        batching: Batching,
+        pipelining: Pipelining,
+    ) -> (MockRuntime, Arc<KgStore>, ExperimentConfig) {
         let rt = MockRuntime::new();
         let kg = Arc::new(KgSpec::preset("toy", 1.0).unwrap().generate().unwrap());
         let cfg = ExperimentConfig {
@@ -356,5 +306,56 @@ mod tests {
         let mut state = mock_state(&rt, &kg);
         state.model = "gqe".into();
         assert!(Trainer::new(&rt, kg, cfg).train(&mut state).is_err());
+    }
+
+    #[test]
+    fn sync_training_replays_deterministically_per_seed() {
+        let (rt, kg, cfg) = setup(Batching::OperatorLevel, Pipelining::Sync);
+        let run = || {
+            let mut state = mock_state(&rt, &kg);
+            let r = Trainer::new(&rt, Arc::clone(&kg), cfg.clone())
+                .train(&mut state)
+                .unwrap();
+            (r.loss_curve, state.entities.data)
+        };
+        let (c1, e1) = run();
+        let (c2, e2) = run();
+        assert_eq!(c1, c2, "same seed must give the same loss curve");
+        assert_eq!(e1, e2, "same seed must give the same final state");
+    }
+
+    #[test]
+    fn async_single_producer_training_replays_deterministically_per_seed() {
+        // With one producer thread, exact-size receives make the query
+        // sequence a pure function of the seed — so the double-buffered
+        // Async path must replay bit-identically too.
+        let (rt, kg, cfg) = setup(Batching::OperatorLevel, Pipelining::Async);
+        assert_eq!(cfg.sampler_threads, 1);
+        assert_eq!(cfg.adaptive_lambda, 0.0);
+        let run = || {
+            let mut state = mock_state(&rt, &kg);
+            let r = Trainer::new(&rt, Arc::clone(&kg), cfg.clone())
+                .train(&mut state)
+                .unwrap();
+            (r.loss_curve, state.entities.data)
+        };
+        let (c1, e1) = run();
+        let (c2, e2) = run();
+        assert_eq!(c1, c2, "same seed must give the same loss curve");
+        assert_eq!(e1, e2, "same seed must give the same final state");
+    }
+
+    #[test]
+    fn phase_attribution_covers_the_full_pipeline() {
+        let (rt, kg, cfg) = setup(Batching::OperatorLevel, Pipelining::Async);
+        let mut state = mock_state(&rt, &kg);
+        let r = Trainer::new(&rt, kg, cfg).train(&mut state).unwrap();
+        for bucket in ["sample", "build_dag", "execute", "execute/gather", "optimize"] {
+            assert!(
+                r.phases.iter().any(|(n, _)| n == bucket),
+                "missing phase bucket {bucket}: {:?}",
+                r.phases
+            );
+        }
     }
 }

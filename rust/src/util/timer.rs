@@ -59,14 +59,22 @@ impl PhaseTimer {
     }
 
     pub fn report(&self) -> String {
-        let total = self.total().max(1e-12);
-        let mut rows: Vec<_> = self.buckets.clone();
-        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        rows.iter()
-            .map(|(n, s)| format!("{n}: {} ({:.1}%)", super::stats::fmt_secs(*s), 100.0 * s / total))
-            .collect::<Vec<_>>()
-            .join(", ")
+        report_of(&self.buckets)
     }
+}
+
+/// Render a phase-attribution bucket list (largest first, with percent of
+/// total) — shared by [`PhaseTimer::report`] and report structs that carry
+/// their buckets as a plain `Vec<(String, f64)>` (trainer / multi-worker
+/// reports).
+pub fn report_of(buckets: &[(String, f64)]) -> String {
+    let total: f64 = buckets.iter().map(|(_, s)| s).sum::<f64>().max(1e-12);
+    let mut rows: Vec<_> = buckets.to_vec();
+    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    rows.iter()
+        .map(|(n, s)| format!("{n}: {} ({:.1}%)", super::stats::fmt_secs(*s), 100.0 * s / total))
+        .collect::<Vec<_>>()
+        .join(", ")
 }
 
 #[cfg(test)]
@@ -89,5 +97,14 @@ mod tests {
         t.add("y", 0.25);
         assert!((t.total() - 1.75).abs() < 1e-12);
         assert!(t.report().starts_with("x:"));
+    }
+
+    #[test]
+    fn report_of_matches_the_timer_report() {
+        let mut t = PhaseTimer::default();
+        t.add("a", 2.0);
+        t.add("b", 1.0);
+        assert_eq!(t.report(), report_of(&t.buckets));
+        assert!(report_of(&t.buckets).starts_with("a:"));
     }
 }

@@ -10,7 +10,9 @@
 //! * slow-execute vs instant-execute MockRuntime timings;
 //! * semantic fusion off / on (pure table source and joint-style
 //!   encoder-executing source);
-//! * forced mis-speculation (constructed pool flips).
+//! * forced mis-speculation (constructed pool flips);
+//! * per-run engines vs a reused `EngineSession` (every case also runs its
+//!   DAG twice through one warm session and diffs both runs bitwise).
 //!
 //! `NGDB_STRESS=1` (the CI forced-contention job, run with
 //! `--test-threads=1`) widens the timing matrix so gathers and executes
@@ -19,7 +21,7 @@
 use std::sync::atomic::Ordering;
 use std::time::Duration;
 
-use ngdb_zoo::exec::{Engine, EngineConfig, Grads, StepStats};
+use ngdb_zoo::exec::{Engine, EngineConfig, EngineSession, Grads, StepStats};
 use ngdb_zoo::model::ModelState;
 use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
 use ngdb_zoo::runtime::mock::max_call_depth;
@@ -161,6 +163,21 @@ fn check_case(case: &EquivCase) -> Result<(), String> {
         assert_equivalent(&pipe, &sync)?;
         if pipe.0.operators != dag.len() {
             return Err(format!("executed {} of {} operators", pipe.0.operators, dag.len()));
+        }
+        // session-reuse leg: the same DAG twice through ONE warm session
+        // must match the per-run engines bit for bit on both runs — the
+        // worker, channels, and any state they carry are run-invariant
+        let mut session = match semantic {
+            Some(s) => EngineSession::with_semantic(&rt, cfg(true), s),
+            None => EngineSession::new(&rt, cfg(true)),
+        };
+        for rep in 0..2 {
+            let mut grads = Grads::default();
+            let stats = session
+                .run(&dag, &st, &mut grads)
+                .map_err(|e| format!("session run {rep}: {e:#}"))?;
+            assert_equivalent(&(stats, grads), &sync)
+                .map_err(|e| format!("session run {rep}: {e}"))?;
         }
         Ok(())
     })

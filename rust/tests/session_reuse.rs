@@ -1,0 +1,278 @@
+//! Session-reuse equivalence suite: N sequential DAGs through one
+//! [`EngineSession`] must produce bit-identical losses, gradients and
+//! schedules to N fresh per-run engines — with and without semantic
+//! fusion — while spawning exactly **one** gather worker for the whole
+//! session (the per-run engines spawn one per DAG). The spawn accounting
+//! reads the process-global counter `exec::worker_spawns_total()`, so
+//! every test in this binary serializes on one lock to keep the deltas
+//! attributable.
+
+use std::sync::{Mutex, MutexGuard};
+
+use ngdb_zoo::exec::{
+    worker_spawns_total, Engine, EngineConfig, EngineSession, Grads, StepStats,
+};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::semantic::mock::{EncoderSource, TableSource};
+use ngdb_zoo::semantic::SemanticSource;
+use ngdb_zoo::util::proptest::queries;
+use ngdb_zoo::util::rng::Rng;
+
+const NE: usize = 12; // mock entity rows
+const NR: usize = 6; // mock relation rows
+const NEG: usize = 2; // mock n_neg
+
+/// Every test here measures deltas of the process-global worker-spawn
+/// counter, so tests must not create sessions concurrently.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn mock_state(rt: &MockRuntime) -> ModelState {
+    ModelState::init(rt.manifest(), "mock", NE, NR, None, 3).unwrap()
+}
+
+/// A varied workload: several DAGs of mixed patterns, deterministic.
+fn workload(n_dags: usize, queries_per_dag: usize) -> Vec<QueryDag> {
+    let kg = queries::toy_kg();
+    let mut rng = Rng::new(0xD06);
+    (0..n_dags)
+        .map(|_| {
+            loop {
+                let set = queries::random_set(
+                    &mut rng,
+                    &kg,
+                    &Pattern::ALL,
+                    queries_per_dag,
+                    NE as u32,
+                    NR as u32,
+                    NEG,
+                );
+                if !set.is_empty() {
+                    return set.train_dag();
+                }
+            }
+        })
+        .collect()
+}
+
+fn assert_bit_identical(
+    (s_a, g_a): &(StepStats, Grads),
+    (s_b, g_b): &(StepStats, Grads),
+    ctx: &str,
+) {
+    assert_eq!(s_a.schedule, s_b.schedule, "{ctx}: schedules diverge");
+    assert_eq!(s_a.fillness, s_b.fillness, "{ctx}: fillness traces diverge");
+    assert_eq!(
+        s_a.loss.to_bits(),
+        s_b.loss.to_bits(),
+        "{ctx}: loss not bit-identical ({} vs {})",
+        s_a.loss,
+        s_b.loss
+    );
+    for (map_a, map_b, tag) in
+        [(&g_a.ent, &g_b.ent, "ent"), (&g_a.rel, &g_b.rel, "rel")]
+    {
+        assert_eq!(map_a.len(), map_b.len(), "{ctx}: {tag} key counts");
+        for (k, v) in map_a {
+            let w = &map_b[k];
+            for (i, (x, y)) in v.iter().zip(w).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {tag}[{k}][{i}]: {x} vs {y}");
+            }
+        }
+    }
+    assert_eq!(g_a.dense.len(), g_b.dense.len(), "{ctx}: dense key counts");
+    for (k, v) in &g_a.dense {
+        let w = &g_b.dense[k];
+        for (i, (x, y)) in v.iter().zip(w).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: dense[{k}][{i}]: {x} vs {y}");
+        }
+    }
+}
+
+/// Run the workload once through a single reused session and once through
+/// fresh per-run engines; assert bitwise equality per DAG and the spawn
+/// accounting: 1 spawn for the session (at creation, none per run), one
+/// per DAG for the per-run path.
+fn check_session_vs_per_run(rt: &MockRuntime, semantic: Option<&dyn SemanticSource>) {
+    let st = mock_state(rt);
+    let dags = workload(6, 12);
+
+    let before_session = worker_spawns_total();
+    let mut session = match semantic {
+        Some(s) => EngineSession::with_semantic(rt, EngineConfig::default(), s),
+        None => EngineSession::new(rt, EngineConfig::default()),
+    };
+    assert_eq!(worker_spawns_total() - before_session, 1, "one spawn at creation");
+    let after_create = worker_spawns_total();
+
+    let session_runs: Vec<(StepStats, Grads)> = dags
+        .iter()
+        .map(|dag| {
+            let mut grads = Grads::default();
+            let stats = session.run(dag, &st, &mut grads).unwrap();
+            (stats, grads)
+        })
+        .collect();
+    assert_eq!(
+        worker_spawns_total(),
+        after_create,
+        "no scoped/owned thread may be spawned inside EngineSession::run"
+    );
+    assert_eq!(session.worker_spawns(), 1);
+
+    let before_per_run = worker_spawns_total();
+    let per_runs: Vec<(StepStats, Grads)> = dags
+        .iter()
+        .map(|dag| {
+            let engine = match semantic {
+                Some(s) => Engine::with_semantic(rt, EngineConfig::default(), s),
+                None => Engine::new(rt, EngineConfig::default()),
+            };
+            let mut grads = Grads::default();
+            let stats = engine.run(dag, &st, &mut grads).unwrap();
+            (stats, grads)
+        })
+        .collect();
+    assert_eq!(
+        worker_spawns_total() - before_per_run,
+        dags.len() as u64,
+        "per-run engines pay one spawn per DAG — the cost the session amortizes"
+    );
+
+    for (i, (sess, per)) in session_runs.iter().zip(&per_runs).enumerate() {
+        assert_bit_identical(sess, per, &format!("dag {i}"));
+    }
+}
+
+#[test]
+fn session_reuse_matches_per_run_engines_bitwise() {
+    let _guard = serial();
+    let rt = MockRuntime::new();
+    check_session_vs_per_run(&rt, None);
+}
+
+#[test]
+fn session_reuse_matches_per_run_engines_under_table_fusion() {
+    let _guard = serial();
+    let rt = MockRuntime::new();
+    let sem = TableSource::linear(NE, rt.manifest().dims.d);
+    check_session_vs_per_run(&rt, Some(&sem));
+}
+
+#[test]
+fn session_reuse_matches_per_run_engines_under_encoder_fusion() {
+    // joint-style fusion: the session's gather worker executes encoder
+    // artifacts through the gated path while rounds execute on the main
+    // thread — reuse must stay bit-identical AND contract-clean
+    let _guard = serial();
+    let mut rt = MockRuntime::new();
+    rt.set_concurrent_execute_safe(false);
+    let sem = EncoderSource::new(&rt, NE);
+    check_session_vs_per_run(&rt, Some(&sem));
+    assert_eq!(
+        rt.contract_violations.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "session-reused encoder gathers must respect the submission lock"
+    );
+}
+
+#[test]
+fn per_op_caps_survive_session_reuse() {
+    // b_max_by_op routing goes through the planning core; a reused session
+    // must keep honoring it on every run
+    let _guard = serial();
+    let mut rt = MockRuntime::new();
+    rt.set_b_max_for("embed", 2);
+    check_session_vs_per_run(&rt, None);
+}
+
+#[test]
+fn sync_sessions_spawn_no_workers_and_match_pipelined_sessions() {
+    let _guard = serial();
+    let rt = MockRuntime::new();
+    let st = mock_state(&rt);
+    let dags = workload(4, 10);
+
+    let before = worker_spawns_total();
+    let mut sync_session =
+        EngineSession::new(&rt, EngineConfig { pipeline: false, ..Default::default() });
+    assert_eq!(worker_spawns_total(), before, "sync sessions need no thread");
+    assert_eq!(sync_session.worker_spawns(), 0);
+
+    let mut pipe_session = EngineSession::new(&rt, EngineConfig::default());
+    for (i, dag) in dags.iter().enumerate() {
+        let mut g_sync = Grads::default();
+        let s_sync = sync_session.run(dag, &st, &mut g_sync).unwrap();
+        let mut g_pipe = Grads::default();
+        let s_pipe = pipe_session.run(dag, &st, &mut g_pipe).unwrap();
+        assert_bit_identical(
+            &(s_pipe, g_pipe),
+            &(s_sync, g_sync),
+            &format!("sync-vs-pipelined dag {i}"),
+        );
+    }
+}
+
+#[test]
+fn failed_runs_do_not_poison_the_session() {
+    // a DAG whose artifact is missing errors cleanly; the same session —
+    // same worker — then runs a valid DAG bit-identically to a fresh engine
+    let _guard = serial();
+    let rt = MockRuntime::new();
+    let st = mock_state(&rt);
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let after_create = worker_spawns_total();
+
+    let bad_tree = QueryTree::Intersect(vec![
+        QueryTree::Anchor(0),
+        QueryTree::Anchor(1),
+        QueryTree::Anchor(2),
+        QueryTree::Anchor(3),
+    ]);
+    let mut bad = QueryDag::default();
+    bad.add_query(&bad_tree, 5, vec![0, 1], "custom", true).unwrap();
+    bad.add_gradient_nodes();
+    let mut grads = Grads::default();
+    let err = session.run(&bad, &st, &mut grads).unwrap_err();
+    assert!(format!("{err:#}").contains("intersect4"), "{err:#}");
+
+    let dags = workload(1, 12);
+    let dag = &dags[0];
+    let mut g_sess = Grads::default();
+    let s_sess = session.run(dag, &st, &mut g_sess).unwrap();
+    let engine = Engine::new(&rt, EngineConfig::default());
+    let mut g_run = Grads::default();
+    let s_run = engine.run(dag, &st, &mut g_run).unwrap();
+    assert_bit_identical(&(s_sess, g_sess), &(s_run, g_run), "post-error run");
+    assert_eq!(worker_spawns_total() - after_create, 1, "only the fresh engine spawned");
+}
+
+#[test]
+fn eval_outputs_survive_session_reuse() {
+    // run_with_outputs through a reused session returns the same pinned
+    // reprs on every run
+    let _guard = serial();
+    let rt = MockRuntime::new();
+    let st = mock_state(&rt);
+    let tree = QueryTree::instantiate(Pattern::P1, &[4], &[2]).unwrap();
+    let mut dag = QueryDag::default();
+    let root = dag.add_query_eval(&tree, true).unwrap();
+    let want: Vec<f32> = st
+        .entities
+        .row(4)
+        .iter()
+        .zip(st.relations.row(2))
+        .map(|(a, b)| a + b)
+        .collect();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    for _ in 0..3 {
+        let mut grads = Grads::default();
+        let (_, outs) = session.run_with_outputs(&dag, &st, &mut grads, &[root]).unwrap();
+        assert_eq!(outs[0], want);
+    }
+}
