@@ -18,12 +18,21 @@
 //! Part 3 repeats the comparison under semantic fusion (mock table source,
 //! `fused-sem` artifacts): the fusion smoke CI runs — overlap must be
 //! active (speculation counters non-zero), not the old sync fallback.
+//! Part 4 measures arena recycling on the **fast-execute** configuration
+//! (wide dims, no artificial launch delay — the coordinator-bound regime
+//! where allocator traffic actually shows): one warm session with pooling
+//! on vs the pooling-off baseline, gated — like the zero-spawn gate — on
+//! the documented steady-state allocation budget, and written out as
+//! `BENCH_micro_scheduler.json` (rounds/sec, spawns, allocs-per-round,
+//! peak pool bytes) so CI can archive the perf trajectory.
 //!
 //! Env knobs: `NGDB_BENCH_QUERIES` (default 384), `NGDB_BENCH_DELAY_US`
-//! (default 300), `NGDB_BENCH_REPS` (default 5).
+//! (default 300), `NGDB_BENCH_REPS` (default 5), `NGDB_BENCH_JSON`
+//! (output path, default `BENCH_micro_scheduler.json`).
 
 use std::time::{Duration, Instant};
 
+use ngdb_zoo::exec::arena::{ROUND_ALLOC_BUDGET, RUN_ALLOC_OVERHEAD};
 use ngdb_zoo::exec::{worker_spawns_total, Engine, EngineConfig, EngineSession, Grads, StepStats};
 use ngdb_zoo::kg::{KgSpec, KgStore};
 use ngdb_zoo::model::ModelState;
@@ -31,7 +40,14 @@ use ngdb_zoo::query::{Pattern, QueryDag};
 use ngdb_zoo::runtime::{MockRuntime, Runtime};
 use ngdb_zoo::semantic::mock::TableSource;
 use ngdb_zoo::semantic::SemanticSource;
+use ngdb_zoo::util::counting_alloc::{snapshot, CountingAlloc};
 use ngdb_zoo::util::rng::Rng;
+
+// Count every heap allocation in this binary — the alloc gate of part 4.
+// The two relaxed atomic bumps per allocation are noise next to the
+// allocations themselves, so parts 0–3 are unaffected.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn knob(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -161,6 +177,142 @@ fn bench_session_reuse(rt: &MockRuntime, kg: &KgStore, state: &ModelState, n_dag
     );
 }
 
+/// One measured leg of part 4 (pooling on or off).
+struct AllocLeg {
+    rounds_per_sec: f64,
+    allocs_per_round: f64,
+    bytes_per_round: f64,
+    pool_misses_steady: u64,
+    peak_pool_bytes: usize,
+    slab_capacity_bytes: usize,
+    rounds_per_run: u64,
+    loss_bits: u64,
+}
+
+/// Part 4: arena recycling on the fast-execute configuration. One warm
+/// session per leg; measurement starts after a warmup run so the pooled
+/// leg is in steady state. Gated on the documented allocation budget and
+/// on pooled-vs-unpooled bitwise loss agreement.
+fn bench_alloc_recycling(kg: &KgStore, n_queries: usize, reps: usize) {
+    let rt = MockRuntime::with_config(64, 4, &[16, 64, 256]); // no exec delay
+    let state =
+        ModelState::init(rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 1)
+            .unwrap();
+    let dag = build_dag(kg, n_queries, rt.manifest().dims.n_neg, 7);
+
+    let spawn_base = worker_spawns_total();
+    let leg = |pooling: bool| -> AllocLeg {
+        let cfg = EngineConfig { pooling, ..Default::default() };
+        let mut session = EngineSession::new(&rt, cfg);
+        let mut grads = Grads::default();
+        let warm = session.run(&dag, &state, &mut grads).unwrap(); // warmup
+        let rounds_per_run = warm.executions as u64;
+        let base = snapshot();
+        let t = Instant::now();
+        let mut last_stats = warm;
+        let mut last_loss = 0.0f64;
+        for _ in 0..reps {
+            let mut g = Grads::default();
+            last_stats = session.run(&dag, &state, &mut g).unwrap();
+            last_loss = g.loss;
+        }
+        let secs = t.elapsed().as_secs_f64();
+        let d = snapshot().delta_since(&base);
+        let rounds = (reps as u64 * rounds_per_run).max(1);
+        AllocLeg {
+            rounds_per_sec: rounds as f64 / secs,
+            allocs_per_round: d.allocs as f64 / rounds as f64,
+            bytes_per_round: d.bytes as f64 / rounds as f64,
+            pool_misses_steady: last_stats.pool_misses,
+            peak_pool_bytes: session.pool().stats().peak_pooled_bytes,
+            slab_capacity_bytes: session.slab_capacity_bytes(),
+            rounds_per_run,
+            loss_bits: last_loss.to_bits(),
+        }
+    };
+
+    let pooled = leg(true);
+    let bare = leg(false);
+    let spawns = worker_spawns_total() - spawn_base;
+    assert_eq!(spawns, 2, "part 4 spawns exactly one worker per session leg");
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    assert_eq!(
+        pooled.pool_misses_steady, 0,
+        "steady-state pooled rounds must be fully served by the pool"
+    );
+    let budget = reps as u64
+        * (RUN_ALLOC_OVERHEAD + pooled.rounds_per_run * ROUND_ALLOC_BUDGET);
+    let measured = (pooled.allocs_per_round * (reps as u64 * pooled.rounds_per_run) as f64)
+        .round() as u64;
+    assert!(
+        measured <= budget,
+        "pooled steady state allocated {measured} times, budget {budget} \
+         ({ROUND_ALLOC_BUDGET}/round + {RUN_ALLOC_OVERHEAD}/run)"
+    );
+    assert!(
+        pooled.allocs_per_round < bare.allocs_per_round,
+        "pooling must reduce allocations per round ({:.1} vs {:.1})",
+        pooled.allocs_per_round,
+        bare.allocs_per_round
+    );
+    assert_eq!(
+        pooled.loss_bits, bare.loss_bits,
+        "pooling must not change one output bit"
+    );
+
+    let speedup = pooled.rounds_per_sec / bare.rounds_per_sec.max(1e-9);
+    println!(
+        "\nalloc recycling ({} nodes, {} rounds/run, fast execute):",
+        dag.len(),
+        pooled.rounds_per_run
+    );
+    println!(
+        "  pooled   : {:>9.0} rounds/s, {:>6.1} allocs/round, {:>9.0} B/round, \
+         peak pool {} B, slab {} B",
+        pooled.rounds_per_sec,
+        pooled.allocs_per_round,
+        pooled.bytes_per_round,
+        pooled.peak_pool_bytes,
+        pooled.slab_capacity_bytes
+    );
+    println!(
+        "  unpooled : {:>9.0} rounds/s, {:>6.1} allocs/round, {:>9.0} B/round",
+        bare.rounds_per_sec, bare.allocs_per_round, bare.bytes_per_round
+    );
+    println!("  speedup  : {speedup:>9.2}x rounds/sec (loss bit-identical)");
+
+    // ---- perf-trajectory artifact -----------------------------------------
+    let path = std::env::var("NGDB_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_micro_scheduler.json".to_string());
+    let json = format!(
+        "{{\n  \"bench\": \"micro_scheduler\",\n  \"config\": {{\"queries\": {}, \"d\": 64, \
+         \"buckets\": [16, 64, 256], \"reps\": {}, \"nodes\": {}}},\n  \
+         \"rounds_per_run\": {},\n  \"steady_state_worker_spawns_per_run\": 0,\n  \
+         \"pooled\": {{\"rounds_per_sec\": {:.1}, \"allocs_per_round\": {:.2}, \
+         \"bytes_per_round\": {:.0}, \"pool_misses_steady\": {}, \
+         \"peak_pool_bytes\": {}, \"slab_capacity_bytes\": {}}},\n  \
+         \"unpooled\": {{\"rounds_per_sec\": {:.1}, \"allocs_per_round\": {:.2}, \
+         \"bytes_per_round\": {:.0}}},\n  \"speedup_rounds_per_sec\": {:.3}\n}}\n",
+        n_queries,
+        reps,
+        dag.len(),
+        pooled.rounds_per_run,
+        pooled.rounds_per_sec,
+        pooled.allocs_per_round,
+        pooled.bytes_per_round,
+        pooled.pool_misses_steady,
+        pooled.peak_pool_bytes,
+        pooled.slab_capacity_bytes,
+        bare.rounds_per_sec,
+        bare.allocs_per_round,
+        bare.bytes_per_round,
+        speedup
+    );
+    std::fs::write(&path, &json).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    println!("  wrote {path}");
+}
+
 fn main() {
     // ---- part 0: spawn-per-round vs persistent worker primitives ----------
     bench_overlap_primitives(2000);
@@ -274,4 +426,7 @@ fn main() {
         s_fpipe.spec_hits,
         s_fpipe.spec_misses
     );
+
+    // ---- part 4: arena recycling (alloc gate + BENCH json) ----------------
+    bench_alloc_recycling(&kg, n_queries, reps.max(3));
 }

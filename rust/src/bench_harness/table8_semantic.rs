@@ -75,12 +75,18 @@ pub fn run(datasets: &[&str], models: &[&str], encoders: &[&str]) -> Result<()> 
                     // gather/execute overlap stays ACTIVE under fusion (the
                     // engine no longer falls back to synchronous gathers —
                     // encoder executions serialize through the runtime's
-                    // concurrency contract instead)
+                    // concurrency contract instead); cache/gather counters
+                    // show the decoupled mode serving anchor batches from
+                    // the resident H_sem manifold (pooled — one recycled
+                    // block per gather, no per-call HostTensor)
                     overlap_line.push_str(&format!(
-                        " {mode}: overlap {:.1} ms, worker idle {:.1} ms, gather wait {:.1} ms;",
+                        " {mode}: overlap {:.1} ms, worker idle {:.1} ms, gather wait \
+                         {:.1} ms, cache {} / {} gathers;",
                         phase_secs(&report, "execute/overlap") * 1e3,
                         phase_secs(&report, "execute/worker_idle") * 1e3,
                         phase_secs(&report, "execute/gather_wait") * 1e3,
+                        fmt_bytes(source.resident_bytes()),
+                        source.gather_calls(),
                     ));
                     measured.push((mode.to_string(), report.qps, mrr, mem));
                 }

@@ -1,0 +1,367 @@
+//! Buffer recycling for the execute hot loop: a shape-keyed [`TensorPool`]
+//! and a per-run bump [`ReprSlab`].
+//!
+//! Every scheduling round of the engine used to heap-allocate its working
+//! set from scratch: staging blocks (`HostTensor::zeros` per operand),
+//! per-node output rows (`row(row).to_vec()` at scatter, `v.clone()` in
+//! `repr_of`), and a fresh `Vec<HostTensor>` of kernel outputs from every
+//! `Runtime::execute`. That is per-query memory churn on the exact loop the
+//! paper's throughput claim needs to stay compute-bound, so the session now
+//! owns two recyclers that live across rounds, runs and training steps:
+//!
+//! * [`TensorPool`] — a checkout/checkin shelf of [`HostTensor`]s keyed by
+//!   exact shape. Steady state, every staging block and every pooled kernel
+//!   output is a recycled buffer: checkout is a `HashMap` lookup + pop,
+//!   checkin a push — no allocator traffic for the tensor payloads at all.
+//!   The pool is internally locked (`&self` API) because the session's
+//!   gather worker checks staging blocks out concurrently with the main
+//!   thread checking round outputs in.
+//! * [`ReprSlab`] — a bump arena for node outputs. Scatter appends rows;
+//!   [`super::engine`]'s `NodeOut` stores [`SlabRange`] offsets instead of
+//!   owned `Vec<f32>`s, so reading a producer's repr during gather is a
+//!   borrowed slice, not a clone. `reset()` (start of each run) truncates
+//!   without freeing, so across runs the slab settles at the high-water
+//!   mark and steady-state runs never grow it.
+//!
+//! # The steady-state allocation budget
+//!
+//! With both recyclers warm, a scheduling round's remaining heap traffic is
+//! a small, explicitly documented constant: the popped batch id `Vec`, the
+//! tiny id/name vectors built during coalescing, the artifact-name
+//! `String`, the `Vec` *spines* of the input/output tensor lists, and one
+//! mpsc node per worker message. [`ROUND_ALLOC_BUDGET`] /
+//! [`RUN_ALLOC_OVERHEAD`] (plus [`ROUND_ALLOC_BYTES_BUDGET`]) bound them;
+//! `rust/tests/alloc_regression.rs` and the micro_scheduler bench enforce
+//! the bound with a counting global allocator
+//! ([`crate::util::counting_alloc`]), mirroring the zero-spawn gate on
+//! [`super::worker_spawns_total`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::runtime::HostTensor;
+
+/// Steady-state heap allocations a warm session may perform per scheduling
+/// round (see the module docs for the inventory). A deliberate over-bound:
+/// typical rounds measure well under half of it. Rounds whose speculation
+/// mis-predicts gather twice and stay within it too.
+pub const ROUND_ALLOC_BUDGET: u64 = 48;
+
+/// Per-`run` (not per-round) allocation overhead on top of
+/// [`ROUND_ALLOC_BUDGET`]: `StepStats` trace vectors growing from empty,
+/// the per-pattern loss report, and the first (synchronous) gather.
+pub const RUN_ALLOC_OVERHEAD: u64 = 192;
+
+/// Steady-state heap *bytes* per round. Tensor payloads dominate the
+/// unpooled engine (tens to hundreds of KiB per round at bench dims); the
+/// pooled loop must stay under this small bookkeeping bound (id vectors
+/// for the largest buckets, name strings, channel nodes).
+pub const ROUND_ALLOC_BYTES_BUDGET: u64 = 32 * 1024;
+
+/// Counters of one [`TensorPool`], snapshotted by [`TensorPool::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// checkouts served by recycling a parked buffer
+    pub hits: u64,
+    /// checkouts that had to allocate (cold shape, or pool disabled)
+    pub misses: u64,
+    /// bytes currently parked on the shelves
+    pub pooled_bytes: usize,
+    /// high-water mark of `pooled_bytes`
+    pub peak_pooled_bytes: usize,
+}
+
+/// Shape-keyed checkout/checkin shelf of [`HostTensor`]s.
+///
+/// `checkout_*` hands out a tensor of exactly the requested shape —
+/// recycled when one is parked, freshly allocated otherwise; `checkin`
+/// parks a tensor for reuse. A disabled pool (the `EngineConfig::pooling =
+/// false` baseline) allocates on every checkout and drops on checkin,
+/// reproducing the pre-pool allocation behavior bit-for-bit.
+pub struct TensorPool {
+    enabled: bool,
+    shelves: Mutex<Shelves>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    pooled_bytes: AtomicUsize,
+    peak_pooled_bytes: AtomicUsize,
+}
+
+/// Parked buffers, shelved by exact shape.
+type Shelves = HashMap<Vec<usize>, Vec<HostTensor>>;
+
+impl TensorPool {
+    pub fn new() -> TensorPool {
+        TensorPool::with_enabled(true)
+    }
+
+    /// A pool that never recycles: every checkout allocates, every checkin
+    /// drops. The measurable pre-pool baseline.
+    pub fn disabled() -> TensorPool {
+        TensorPool::with_enabled(false)
+    }
+
+    pub fn with_enabled(enabled: bool) -> TensorPool {
+        TensorPool {
+            enabled,
+            shelves: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            pooled_bytes: AtomicUsize::new(0),
+            peak_pooled_bytes: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn shelves(&self) -> MutexGuard<'_, Shelves> {
+        // a panicking checkin cannot leave the map inconsistent (single
+        // push/pop), so poisoning is safe to ignore
+        self.shelves.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Check out a tensor of `shape` with **unspecified contents** — the
+    /// caller must overwrite (or explicitly zero) every element. This is
+    /// the fast path for staging blocks whose real rows are copied in full
+    /// and whose padding tail is zeroed by hand.
+    pub fn checkout_dirty(&self, shape: &[usize]) -> HostTensor {
+        if self.enabled {
+            if let Some(t) = self.shelves().get_mut(shape).and_then(Vec::pop) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.pooled_bytes.fetch_sub(t.bytes(), Ordering::Relaxed);
+                return t;
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        HostTensor::zeros(shape.to_vec())
+    }
+
+    /// Check out a fully zeroed tensor of `shape` (recycled buffers are
+    /// `fill(0.0)`-ed; fresh ones come zeroed from the allocator).
+    pub fn checkout_zeroed(&self, shape: &[usize]) -> HostTensor {
+        let mut t = self.checkout_dirty(shape);
+        t.zero();
+        t
+    }
+
+    /// Park a tensor for reuse by a later checkout of the same shape. Any
+    /// tensor may be checked in, pooled origin or not.
+    pub fn checkin(&self, t: HostTensor) {
+        if !self.enabled {
+            return; // baseline mode: drop, like the pre-pool engine
+        }
+        let bytes = t.bytes();
+        let pooled = self.pooled_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_pooled_bytes.fetch_max(pooled, Ordering::Relaxed);
+        let mut shelves = self.shelves();
+        match shelves.get_mut(t.shape.as_slice()) {
+            Some(shelf) => shelf.push(t),
+            None => {
+                shelves.insert(t.shape.clone(), vec![t]);
+            }
+        }
+    }
+
+    /// Check `tensors` back in, draining the vector (its spine survives
+    /// with the caller). Convenience for recycling a round's input/output
+    /// lists and error-path cleanup.
+    pub fn checkin_all(&self, tensors: &mut Vec<HostTensor>) {
+        for t in tensors.drain(..) {
+            self.checkin(t);
+        }
+    }
+
+    /// Drop every parked buffer (capacity released back to the allocator).
+    /// Counters for hits/misses keep accumulating; `pooled_bytes` resets.
+    pub fn reset(&self) {
+        self.shelves().clear();
+        self.pooled_bytes.store(0, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            pooled_bytes: self.pooled_bytes.load(Ordering::Relaxed),
+            peak_pooled_bytes: self.peak_pooled_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for TensorPool {
+    fn default() -> Self {
+        TensorPool::new()
+    }
+}
+
+/// One contiguous block of floats inside a [`ReprSlab`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlabRange {
+    pub off: usize,
+    pub len: usize,
+}
+
+/// Bump arena for per-node engine outputs (reprs, head grads, VJP input
+/// grads). Appended to during scatter, truncated — capacity kept — by
+/// `reset()` at the start of every run.
+///
+/// # Sharing protocol
+///
+/// The session's gather worker reads the slab through a raw pointer while a
+/// job is in flight (the same `SlabView`-style protocol that covers the
+/// output-slab `NodeOut` array): the run loop never mutates the slab —
+/// `push_row` can reallocate the backing `Vec` — until the worker's
+/// response has been received.
+#[derive(Debug, Default)]
+pub struct ReprSlab {
+    data: Vec<f32>,
+}
+
+impl ReprSlab {
+    pub fn new() -> ReprSlab {
+        ReprSlab::default()
+    }
+
+    /// Truncate to empty, keeping capacity — the per-run reset.
+    pub fn reset(&mut self) {
+        self.data.clear();
+    }
+
+    /// Append one row, returning its range.
+    pub fn push_row(&mut self, row: &[f32]) -> SlabRange {
+        let off = self.data.len();
+        self.data.extend_from_slice(row);
+        SlabRange { off, len: row.len() }
+    }
+
+    /// Borrow a previously pushed range.
+    pub fn get(&self, r: SlabRange) -> &[f32] {
+        &self.data[r.off..r.off + r.len]
+    }
+
+    /// Borrow block `j` of `k` equal-width blocks starting at `off`
+    /// (the layout of `NodeOut::Grads`).
+    pub fn block(&self, off: usize, j: usize, w: usize) -> &[f32] {
+        &self.data[off + j * w..off + (j + 1) * w]
+    }
+
+    /// Floats currently live in the slab.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes of backing capacity (the cross-run high-water mark).
+    pub fn capacity_bytes(&self) -> usize {
+        self.data.capacity() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_miss_then_hit_recycles_the_same_buffer() {
+        let pool = TensorPool::new();
+        let t = pool.checkout_zeroed(&[2, 3]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(t.data, vec![0.0; 6]);
+        assert_eq!(pool.stats().misses, 1);
+        pool.checkin(t);
+        assert_eq!(pool.stats().pooled_bytes, 24);
+        let t2 = pool.checkout_dirty(&[2, 3]);
+        assert_eq!(pool.stats().hits, 1);
+        assert_eq!(t2.shape, vec![2, 3]);
+        assert_eq!(pool.stats().pooled_bytes, 0);
+    }
+
+    #[test]
+    fn checkout_zeroed_scrubs_recycled_contents() {
+        let pool = TensorPool::new();
+        let mut t = pool.checkout_zeroed(&[4]);
+        t.data.fill(7.5);
+        pool.checkin(t);
+        let t = pool.checkout_zeroed(&[4]);
+        assert_eq!(t.data, vec![0.0; 4], "recycled buffers must be re-zeroed");
+    }
+
+    #[test]
+    fn shapes_are_distinct_shelves() {
+        let pool = TensorPool::new();
+        pool.checkin(HostTensor::zeros(vec![2, 3]));
+        pool.checkin(HostTensor::zeros(vec![3, 2]));
+        let a = pool.checkout_dirty(&[2, 3]);
+        let b = pool.checkout_dirty(&[3, 2]);
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(b.shape, vec![3, 2]);
+        assert_eq!(pool.stats().hits, 2);
+        // a third checkout of an exhausted shelf is a miss
+        let _ = pool.checkout_dirty(&[2, 3]);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates_and_drops() {
+        let pool = TensorPool::disabled();
+        pool.checkin(HostTensor::zeros(vec![8]));
+        assert_eq!(pool.stats().pooled_bytes, 0, "disabled checkin drops");
+        let t = pool.checkout_dirty(&[8]);
+        assert_eq!(t.data, vec![0.0; 8], "disabled checkout is a fresh zeros");
+        assert_eq!(pool.stats().hits, 0);
+        assert_eq!(pool.stats().misses, 1);
+    }
+
+    #[test]
+    fn reset_releases_parked_buffers_but_keeps_counters() {
+        let pool = TensorPool::new();
+        pool.checkin(HostTensor::zeros(vec![16]));
+        assert_eq!(pool.stats().pooled_bytes, 64);
+        assert_eq!(pool.stats().peak_pooled_bytes, 64);
+        pool.reset();
+        assert_eq!(pool.stats().pooled_bytes, 0);
+        assert_eq!(pool.stats().peak_pooled_bytes, 64, "peak survives reset");
+        let _ = pool.checkout_dirty(&[16]);
+        assert_eq!(pool.stats().misses, 1, "post-reset checkout re-allocates");
+    }
+
+    #[test]
+    fn peak_tracks_the_high_water_mark() {
+        let pool = TensorPool::new();
+        pool.checkin(HostTensor::zeros(vec![4])); // 16 bytes
+        pool.checkin(HostTensor::zeros(vec![8])); // +32 = 48
+        let _ = pool.checkout_dirty(&[8]); // back to 16
+        pool.checkin(HostTensor::zeros(vec![2])); // 24
+        assert_eq!(pool.stats().peak_pooled_bytes, 48);
+    }
+
+    #[test]
+    fn slab_rows_round_trip_and_reset_keeps_capacity() {
+        let mut slab = ReprSlab::new();
+        let a = slab.push_row(&[1.0, 2.0]);
+        let b = slab.push_row(&[3.0, 4.0, 5.0]);
+        assert_eq!(slab.get(a), &[1.0, 2.0]);
+        assert_eq!(slab.get(b), &[3.0, 4.0, 5.0]);
+        assert_eq!(slab.len(), 5);
+        let cap = slab.capacity_bytes();
+        slab.reset();
+        assert!(slab.is_empty());
+        assert_eq!(slab.capacity_bytes(), cap, "reset must not free");
+        let c = slab.push_row(&[9.0]);
+        assert_eq!(c.off, 0, "reset rewinds the bump pointer");
+    }
+
+    #[test]
+    fn slab_blocks_address_equal_width_chunks() {
+        let mut slab = ReprSlab::new();
+        let r = slab.push_row(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(slab.block(r.off, 0, 3), &[0.0, 1.0, 2.0]);
+        assert_eq!(slab.block(r.off, 1, 3), &[3.0, 4.0, 5.0]);
+    }
+}

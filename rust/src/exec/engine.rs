@@ -12,8 +12,12 @@
 //! 3. coalesces operand rows into contiguous blocks (host-side gather),
 //!    pads to the compiled bucket (padding is exact: ops are row-local and
 //!    VJPs are linear in the cotangent, so zero rows contribute zero);
-//! 4. scatters outputs back into a per-node slab, decrements reference
-//!    counts and frees tensors eagerly (Eq. 7), tracking live/peak bytes;
+//! 4. scatters outputs back into a per-node slab (bump rows in the
+//!    session's [`super::ReprSlab`]), decrements reference counts and
+//!    reclaims *logically* eagerly (Eq. 7), tracking live/peak bytes —
+//!    physical memory recycles at run granularity: the slab rewinds at the
+//!    top of the next run without freeing, and staging/output tensors
+//!    circulate through the session's [`super::TensorPool`];
 //! 5. accumulates gradients: dense-param grads (already batch-summed inside
 //!    the VJP artifact), relation-row and entity-row grads (scatter-add),
 //!    and the loss from Score nodes.
@@ -62,7 +66,7 @@
 //! which in joint mode executes encoder artifacts on the same runtime —
 //! concurrently with the main thread's round execution. The runtime
 //! concurrency contract makes this safe: the engine submits rounds through
-//! [`Runtime::execute_gated`] and encoder gathers go through
+//! [`Runtime::execute_pooled_gated`] and encoder gathers go through
 //! `execute_resident_gated`, which serialize on the backend's submission
 //! lock unless it reports `concurrent_execute_safe()`. A discarded
 //! speculative gather merely re-runs a frozen (pure) encoder forward, so
@@ -75,6 +79,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::arena::{ReprSlab, SlabRange, TensorPool};
 use super::pools::OperatorPools;
 use crate::model::state::ModelState;
 use crate::query::{OpKind, QueryDag};
@@ -187,25 +192,128 @@ pub struct StepStats {
     /// executed schedule: one `(op, batch_len)` per round, in order — the
     /// golden-schedule regression tests diff this against snapshots
     pub schedule: Vec<(OpKind, usize)>,
+    /// staging/output buffers served from the session's tensor pool this
+    /// run (recycled — no heap allocation)
+    pub pool_hits: u64,
+    /// pool checkouts that had to allocate this run (cold shapes, or
+    /// `EngineConfig::pooling` off); zero in a warm session's steady state
+    pub pool_misses: u64,
+    /// high-water bytes parked in the session pool (session-cumulative)
+    pub peak_pool_bytes: usize,
 }
 
-/// Per-node stored output (the session's output slab entries).
+/// Per-node stored output (the session's output slab entries): plain-`Copy`
+/// offsets into the session's [`ReprSlab`] — the rows themselves live in
+/// the slab, so storing, reading (`repr_of` borrows) and reclaiming a node
+/// output never touches the heap.
+#[derive(Debug, Clone, Copy)]
 pub(crate) enum NodeOut {
     /// forward repr row `[repr_dim]`
-    Repr(Vec<f32>),
-    /// VJP: one grad block per mirrored-node input slot
-    Grads(Vec<Vec<f32>>),
+    Repr(SlabRange),
+    /// VJP: `k` contiguous grad blocks of width `w` (one per mirrored-node
+    /// input slot) starting at slab offset `off`
+    Grads { off: usize, k: usize, w: usize },
     /// Score: gradient w.r.t. the query root repr
-    HeadGrad(Vec<f32>),
+    HeadGrad(SlabRange),
 }
 
 impl NodeOut {
     pub(crate) fn bytes(&self) -> usize {
         match self {
-            NodeOut::Repr(v) | NodeOut::HeadGrad(v) => v.len() * 4,
-            NodeOut::Grads(vs) => vs.iter().map(|v| v.len() * 4).sum(),
+            NodeOut::Repr(r) | NodeOut::HeadGrad(r) => r.len * 4,
+            NodeOut::Grads { k, w, .. } => k * w * 4,
         }
     }
+}
+
+/// Borrow the repr row of a producer node out of the slab (the pre-arena
+/// engine cloned it into a fresh `Vec` on every operand read).
+fn repr_of<'s>(
+    storage: &[Option<NodeOut>],
+    slab: &'s ReprSlab,
+    id: u32,
+) -> Result<&'s [f32]> {
+    match &storage[id as usize] {
+        Some(NodeOut::Repr(r)) => Ok(slab.get(*r)),
+        other => bail!(
+            "node {id} expected Repr output, found {}",
+            match other {
+                None => "nothing (freed too early?)",
+                Some(NodeOut::Grads { .. }) => "Grads",
+                Some(NodeOut::HeadGrad(_)) => "HeadGrad",
+                Some(NodeOut::Repr(_)) => unreachable!(),
+            }
+        ),
+    }
+}
+
+/// Fill a checked-out staging block in place; on error the block goes back
+/// to the pool instead of dropping, so gather bails never bleed buffers
+/// (the alloc-regression suite asserts the pool survives failing runs).
+fn filled(
+    pool: &TensorPool,
+    mut t: HostTensor,
+    f: impl FnOnce(&mut HostTensor) -> Result<()>,
+) -> Result<HostTensor> {
+    match f(&mut t) {
+        Ok(()) => Ok(t),
+        Err(e) => {
+            pool.checkin(t);
+            Err(e)
+        }
+    }
+}
+
+/// Accumulate the summed upstream gradient for a VJP node's mirrored output
+/// directly into `acc` (a pre-zeroed staging row — no temporary vector).
+/// Source order matches the pre-arena engine exactly, so float sums are
+/// bit-identical.
+fn accum_gout(
+    dag: &QueryDag,
+    storage: &[Option<NodeOut>],
+    slab: &ReprSlab,
+    vjp_node: u32,
+    acc: &mut [f32],
+) -> Result<()> {
+    let node = &dag.nodes[vjp_node as usize];
+    let mirror = node.mirror;
+    for &src in &node.inputs {
+        match &storage[src as usize] {
+            Some(NodeOut::HeadGrad(g)) => {
+                for (a, x) in acc.iter_mut().zip(slab.get(*g)) {
+                    *a += x;
+                }
+            }
+            Some(NodeOut::Grads { off, k, w }) => {
+                // which operand slots of src's mirror held `mirror`?
+                let c = dag.nodes[src as usize].mirror;
+                let cin = &dag.nodes[c as usize].inputs;
+                if cin.len() != *k {
+                    // hard check: with j >= k the slab read below would
+                    // silently alias another node's rows (the pre-slab
+                    // Vec-indexing panicked here)
+                    bail!(
+                        "grad block arity mismatch: node {c} has {} inputs, {k} blocks stored",
+                        cin.len()
+                    );
+                }
+                let mut found = false;
+                for (j, &slot) in cin.iter().enumerate() {
+                    if slot == mirror {
+                        found = true;
+                        for (a, x) in acc.iter_mut().zip(slab.block(*off, j, *w)) {
+                            *a += x;
+                        }
+                    }
+                }
+                if !found {
+                    bail!("grad source {src} does not feed node {mirror}");
+                }
+            }
+            _ => bail!("grad source {src} has no gradient output"),
+        }
+    }
+    Ok(())
 }
 
 /// One scheduling round with its inputs fully coalesced — the unit handed
@@ -231,11 +339,22 @@ pub struct EngineConfig {
     /// overlap the next round's gather with the current round's execute
     /// (speculative double-buffering; numerics are schedule-identical)
     pub pipeline: bool,
+    /// recycle staging tensors and kernel outputs through the session's
+    /// [`TensorPool`] (on by default; off reproduces the pre-pool
+    /// allocate-per-round behavior — the measurable baseline of the
+    /// micro_scheduler bench). Numerics are identical either way.
+    pub pooling: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { b_max: 0, nan_check: false, force_singleton: false, pipeline: true }
+        EngineConfig {
+            b_max: 0,
+            nan_check: false,
+            force_singleton: false,
+            pipeline: true,
+            pooling: true,
+        }
     }
 }
 
@@ -311,7 +430,10 @@ impl<'a> Engine<'a> {
         grads: &mut Grads,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
-        let mut session = super::EngineSession::from_engine(self.clone());
+        // the transient session *borrows* this planning core (no clone);
+        // its arena/worker still cost one setup per call — loops should
+        // hold a session
+        let mut session = super::EngineSession::over(self);
         session.run_with_outputs(dag, state, grads, wanted)
     }
 
@@ -338,6 +460,7 @@ impl<'a> Engine<'a> {
     }
 
     /// Synchronous gather with wall-clock accounting.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn gather_timed(
         &self,
         dag: &QueryDag,
@@ -345,22 +468,31 @@ impl<'a> Engine<'a> {
         op: OpKind,
         batch: Vec<u32>,
         storage: &[Option<NodeOut>],
+        slab: &ReprSlab,
+        pool: &TensorPool,
         stats: &mut StepStats,
     ) -> Result<PreparedBatch> {
         let t0 = Instant::now();
         let prep = self
-            .gather_batch(dag, state, op, batch, storage)
+            .gather_batch(dag, state, op, batch, storage, slab, pool)
             .with_context(|| format!("gathering pool {}", op.name()))?;
         stats.gather_secs += t0.elapsed().as_secs_f64();
         Ok(prep)
     }
 
     /// Stage 1: coalesce one round's operand rows into padded input blocks.
-    /// Without a semantic source this reads only immutable state and is safe
-    /// to run concurrently with stage 2; with one attached it may execute
+    /// Without a semantic source this reads only immutable state (plus the
+    /// shared [`TensorPool`], which is internally locked) and is safe to
+    /// run concurrently with stage 2; with one attached it may execute
     /// encoder artifacts, which stay safe under overlap because the source
     /// submits through the runtime's gated path (see the module docs on the
     /// concurrency contract).
+    ///
+    /// Every staging block is checked out of `pool` (recycled when warm)
+    /// and operand rows are *borrowed* from `slab` — steady state this
+    /// performs no tensor-sized heap allocations (see
+    /// [`super::arena::ROUND_ALLOC_BUDGET`] for the residual constant).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn gather_batch(
         &self,
         dag: &QueryDag,
@@ -368,6 +500,8 @@ impl<'a> Engine<'a> {
         op: OpKind,
         batch: Vec<u32>,
         storage: &[Option<NodeOut>],
+        slab: &ReprSlab,
+        pool: &TensorPool,
     ) -> Result<PreparedBatch> {
         let m = self.rt.manifest();
         let dims = &m.dims;
@@ -388,186 +522,196 @@ impl<'a> Engine<'a> {
         let meta = m.artifact(&artifact)?;
 
         // --- coalesce inputs ------------------------------------------------
-        let mut inputs: Vec<HostTensor> =
-            state.params_for(meta.param_args().map(|a| a.name.clone()))?;
+        // Buffer-safe error discipline: every checked-out block is either
+        // already in `inputs` (returned wholesale below on a bail) or held
+        // by `filled`, which checks it back in before propagating — gather
+        // failures never bleed pool buffers.
         let rd = state.repr_dim;
-
-        // repr row of a producer node
-        let repr_of = |storage: &[Option<NodeOut>], id: u32| -> Result<Vec<f32>> {
-            match &storage[id as usize] {
-                Some(NodeOut::Repr(v)) => Ok(v.clone()),
-                other => bail!(
-                    "node {id} expected Repr output, found {}",
-                    match other {
-                        None => "nothing (freed too early?)",
-                        Some(NodeOut::Grads(_)) => "Grads",
-                        Some(NodeOut::HeadGrad(_)) => "HeadGrad",
-                        Some(NodeOut::Repr(_)) => unreachable!(),
-                    }
-                ),
-            }
-        };
-
-        // summed upstream gradient for a VJP node's mirrored output
-        let gout_of = |storage: &[Option<NodeOut>], vjp_node: u32| -> Result<Vec<f32>> {
-            let node = &dag.nodes[vjp_node as usize];
-            let mirror = node.mirror;
-            let mut acc = vec![0.0f32; rd];
-            for &src in &node.inputs {
-                match &storage[src as usize] {
-                    Some(NodeOut::HeadGrad(g)) => {
-                        for (a, x) in acc.iter_mut().zip(g) {
-                            *a += x;
-                        }
-                    }
-                    Some(NodeOut::Grads(blocks)) => {
-                        // which operand slots of src's mirror held `mirror`?
-                        let c = dag.nodes[src as usize].mirror;
-                        let cin = &dag.nodes[c as usize].inputs;
-                        let mut found = false;
-                        for (j, &slot) in cin.iter().enumerate() {
-                            if slot == mirror {
-                                found = true;
-                                for (a, x) in acc.iter_mut().zip(&blocks[j]) {
-                                    *a += x;
-                                }
-                            }
-                        }
-                        if !found {
-                            bail!("grad source {src} does not feed node {mirror}");
-                        }
-                    }
-                    _ => bail!("grad source {src} has no gradient output"),
-                }
-            }
-            Ok(acc)
-        };
-
-        match op {
-            OpKind::Embed => {
-                let ids: Vec<u32> =
-                    batch.iter().map(|&i| dag.nodes[i as usize].payload).collect();
-                inputs.push(state.entities.gather(&ids, bucket));
-                if let Some(sem) = self.semantic {
-                    inputs.push(sem.gather(&ids, bucket)?);
-                }
-            }
-            OpKind::Project => {
-                let mut x = HostTensor::zeros(vec![bucket, rd]);
-                let mut rels = Vec::with_capacity(batch.len());
-                for (row, &i) in batch.iter().enumerate() {
-                    let node = &dag.nodes[i as usize];
-                    x.row_mut(row).copy_from_slice(&repr_of(storage, node.inputs[0])?);
-                    rels.push(node.payload);
-                }
-                inputs.push(x);
-                inputs.push(state.relations.gather(&rels, bucket));
-            }
-            OpKind::Intersect(k) | OpKind::Union(k) => {
-                let k = k as usize;
-                let mut xs = HostTensor::zeros(vec![bucket, k, rd]);
-                for (row, &i) in batch.iter().enumerate() {
-                    let node = &dag.nodes[i as usize];
-                    for (j, &inp) in node.inputs.iter().enumerate() {
-                        let src = repr_of(storage, inp)?;
-                        let dst = row * k * rd + j * rd;
-                        xs.data[dst..dst + rd].copy_from_slice(&src);
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        let coalesce = (|| -> Result<()> {
+            state.params_for_pooled(
+                meta.param_args().map(|a| a.name.as_str()),
+                pool,
+                &mut inputs,
+            )?;
+            match op {
+                OpKind::Embed => {
+                    let ids: Vec<u32> =
+                        batch.iter().map(|&i| dag.nodes[i as usize].payload).collect();
+                    inputs.push(state.entities.gather_pooled(&ids, bucket, pool));
+                    if let Some(sem) = self.semantic {
+                        inputs.push(sem.gather_pooled(&ids, bucket, pool)?);
                     }
                 }
-                inputs.push(xs);
-            }
-            OpKind::Negate => {
-                let mut x = HostTensor::zeros(vec![bucket, rd]);
-                for (row, &i) in batch.iter().enumerate() {
-                    x.row_mut(row)
-                        .copy_from_slice(&repr_of(storage, dag.nodes[i as usize].inputs[0])?);
-                }
-                inputs.push(x);
-            }
-            OpKind::Score => {
-                let n_neg = dims.n_neg;
-                let mut q = HostTensor::zeros(vec![bucket, rd]);
-                let mut pos_ids = Vec::with_capacity(batch.len());
-                let mut neg_ids: Vec<&[u32]> = Vec::with_capacity(batch.len());
-                let mut mask = HostTensor::zeros(vec![bucket]);
-                for (row, &i) in batch.iter().enumerate() {
-                    let node = &dag.nodes[i as usize];
-                    let slot = &dag.queries[node.payload as usize];
-                    if slot.negatives.len() != n_neg {
-                        bail!(
-                            "query has {} negatives; artifacts were compiled for {}",
-                            slot.negatives.len(),
-                            n_neg
-                        );
-                    }
-                    q.row_mut(row).copy_from_slice(&repr_of(storage, node.inputs[0])?);
-                    pos_ids.push(slot.positive);
-                    neg_ids.push(&slot.negatives);
-                    mask.data[row] = 1.0;
-                }
-                inputs.push(q);
-                inputs.push(state.entities.gather(&pos_ids, bucket));
-                inputs.push(state.entities.gather_nested(&neg_ids, bucket, n_neg));
-                inputs.push(mask);
-            }
-            OpKind::Vjp(_) => {
-                // original forward inputs of the mirrored nodes...
-                let mirror_op = {
-                    let m0 = dag.nodes[batch[0] as usize].mirror;
-                    dag.nodes[m0 as usize].op
-                };
-                match mirror_op {
-                    OpKind::Embed => {
-                        let ids: Vec<u32> =
-                            batch.iter().map(|&i| dag.nodes[i as usize].payload).collect();
-                        inputs.push(state.entities.gather(&ids, bucket));
-                        if let Some(sem) = self.semantic {
-                            inputs.push(sem.gather(&ids, bucket)?);
-                        }
-                    }
-                    OpKind::Project => {
-                        let mut x = HostTensor::zeros(vec![bucket, rd]);
-                        let mut rels = Vec::with_capacity(batch.len());
+                OpKind::Project => {
+                    let mut rels = Vec::with_capacity(batch.len());
+                    let x = filled(pool, pool.checkout_dirty(&[bucket, rd]), |x| {
                         for (row, &i) in batch.iter().enumerate() {
-                            let mirror = &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                            let node = &dag.nodes[i as usize];
                             x.row_mut(row)
-                                .copy_from_slice(&repr_of(storage, mirror.inputs[0])?);
-                            rels.push(mirror.payload);
+                                .copy_from_slice(repr_of(storage, slab, node.inputs[0])?);
+                            rels.push(node.payload);
                         }
-                        inputs.push(x);
-                        inputs.push(state.relations.gather(&rels, bucket));
-                    }
-                    OpKind::Intersect(k) | OpKind::Union(k) => {
-                        let k = k as usize;
-                        let mut xs = HostTensor::zeros(vec![bucket, k, rd]);
+                        x.zero_rows_from(batch.len());
+                        Ok(())
+                    })?;
+                    inputs.push(x);
+                    inputs.push(state.relations.gather_pooled(&rels, bucket, pool));
+                }
+                OpKind::Intersect(k) | OpKind::Union(k) => {
+                    let k = k as usize;
+                    let xs = filled(pool, pool.checkout_dirty(&[bucket, k, rd]), |xs| {
                         for (row, &i) in batch.iter().enumerate() {
-                            let mirror = &dag.nodes[dag.nodes[i as usize].mirror as usize];
-                            for (j, &inp) in mirror.inputs.iter().enumerate() {
-                                let src = repr_of(storage, inp)?;
+                            let node = &dag.nodes[i as usize];
+                            for (j, &inp) in node.inputs.iter().enumerate() {
+                                let src = repr_of(storage, slab, inp)?;
                                 let dst = row * k * rd + j * rd;
-                                xs.data[dst..dst + rd].copy_from_slice(&src);
+                                xs.data[dst..dst + rd].copy_from_slice(src);
                             }
                         }
-                        inputs.push(xs);
-                    }
-                    OpKind::Negate => {
-                        let mut x = HostTensor::zeros(vec![bucket, rd]);
+                        xs.zero_rows_from(batch.len());
+                        Ok(())
+                    })?;
+                    inputs.push(xs);
+                }
+                OpKind::Negate => {
+                    let x = filled(pool, pool.checkout_dirty(&[bucket, rd]), |x| {
                         for (row, &i) in batch.iter().enumerate() {
-                            let mirror = &dag.nodes[dag.nodes[i as usize].mirror as usize];
-                            x.row_mut(row)
-                                .copy_from_slice(&repr_of(storage, mirror.inputs[0])?);
+                            x.row_mut(row).copy_from_slice(repr_of(
+                                storage,
+                                slab,
+                                dag.nodes[i as usize].inputs[0],
+                            )?);
                         }
-                        inputs.push(x);
+                        x.zero_rows_from(batch.len());
+                        Ok(())
+                    })?;
+                    inputs.push(x);
+                }
+                OpKind::Score => {
+                    let n_neg = dims.n_neg;
+                    let mut pos_ids = Vec::with_capacity(batch.len());
+                    let mut neg_ids: Vec<&[u32]> = Vec::with_capacity(batch.len());
+                    let q = filled(pool, pool.checkout_dirty(&[bucket, rd]), |q| {
+                        for (row, &i) in batch.iter().enumerate() {
+                            let node = &dag.nodes[i as usize];
+                            let slot = &dag.queries[node.payload as usize];
+                            if slot.negatives.len() != n_neg {
+                                bail!(
+                                    "query has {} negatives; artifacts were compiled for {}",
+                                    slot.negatives.len(),
+                                    n_neg
+                                );
+                            }
+                            q.row_mut(row)
+                                .copy_from_slice(repr_of(storage, slab, node.inputs[0])?);
+                            pos_ids.push(slot.positive);
+                            neg_ids.push(&slot.negatives);
+                        }
+                        q.zero_rows_from(batch.len());
+                        Ok(())
+                    })?;
+                    inputs.push(q);
+                    inputs.push(state.entities.gather_pooled(&pos_ids, bucket, pool));
+                    inputs.push(
+                        state.entities.gather_nested_pooled(&neg_ids, bucket, n_neg, pool),
+                    );
+                    // ones over real rows, zero padding — same values as the
+                    // old zeros-then-set-per-row loop
+                    let mut mask = pool.checkout_dirty(&[bucket]);
+                    mask.data[..batch.len()].fill(1.0);
+                    mask.zero_rows_from(batch.len());
+                    inputs.push(mask);
+                }
+                OpKind::Vjp(_) => {
+                    // original forward inputs of the mirrored nodes...
+                    let mirror_op = {
+                        let m0 = dag.nodes[batch[0] as usize].mirror;
+                        dag.nodes[m0 as usize].op
+                    };
+                    match mirror_op {
+                        OpKind::Embed => {
+                            let ids: Vec<u32> = batch
+                                .iter()
+                                .map(|&i| dag.nodes[i as usize].payload)
+                                .collect();
+                            inputs.push(state.entities.gather_pooled(&ids, bucket, pool));
+                            if let Some(sem) = self.semantic {
+                                inputs.push(sem.gather_pooled(&ids, bucket, pool)?);
+                            }
+                        }
+                        OpKind::Project => {
+                            let mut rels = Vec::with_capacity(batch.len());
+                            let x = filled(pool, pool.checkout_dirty(&[bucket, rd]), |x| {
+                                for (row, &i) in batch.iter().enumerate() {
+                                    let mirror =
+                                        &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                                    x.row_mut(row).copy_from_slice(repr_of(
+                                        storage,
+                                        slab,
+                                        mirror.inputs[0],
+                                    )?);
+                                    rels.push(mirror.payload);
+                                }
+                                x.zero_rows_from(batch.len());
+                                Ok(())
+                            })?;
+                            inputs.push(x);
+                            inputs.push(state.relations.gather_pooled(&rels, bucket, pool));
+                        }
+                        OpKind::Intersect(k) | OpKind::Union(k) => {
+                            let k = k as usize;
+                            let xs =
+                                filled(pool, pool.checkout_dirty(&[bucket, k, rd]), |xs| {
+                                    for (row, &i) in batch.iter().enumerate() {
+                                        let mirror =
+                                            &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                                        for (j, &inp) in mirror.inputs.iter().enumerate() {
+                                            let src = repr_of(storage, slab, inp)?;
+                                            let dst = row * k * rd + j * rd;
+                                            xs.data[dst..dst + rd].copy_from_slice(src);
+                                        }
+                                    }
+                                    xs.zero_rows_from(batch.len());
+                                    Ok(())
+                                })?;
+                            inputs.push(xs);
+                        }
+                        OpKind::Negate => {
+                            let x = filled(pool, pool.checkout_dirty(&[bucket, rd]), |x| {
+                                for (row, &i) in batch.iter().enumerate() {
+                                    let mirror =
+                                        &dag.nodes[dag.nodes[i as usize].mirror as usize];
+                                    x.row_mut(row).copy_from_slice(repr_of(
+                                        storage,
+                                        slab,
+                                        mirror.inputs[0],
+                                    )?);
+                                }
+                                x.zero_rows_from(batch.len());
+                                Ok(())
+                            })?;
+                            inputs.push(x);
+                        }
+                        other => bail!("VJP of unexpected op {other:?}"),
                     }
-                    other => bail!("VJP of unexpected op {other:?}"),
+                    // ...plus the summed upstream cotangent (zeros on pad
+                    // rows), accumulated in place into the pre-zeroed block
+                    let gout = filled(pool, pool.checkout_zeroed(&[bucket, rd]), |gout| {
+                        for (row, &i) in batch.iter().enumerate() {
+                            accum_gout(dag, storage, slab, i, gout.row_mut(row))?;
+                        }
+                        Ok(())
+                    })?;
+                    inputs.push(gout);
                 }
-                // ...plus the summed upstream cotangent (zeros on pad rows)
-                let mut gout = HostTensor::zeros(vec![bucket, rd]);
-                for (row, &i) in batch.iter().enumerate() {
-                    gout.row_mut(row).copy_from_slice(&gout_of(storage, i)?);
-                }
-                inputs.push(gout);
             }
+            Ok(())
+        })();
+        if let Err(e) = coalesce {
+            // return the partially coalesced round's buffers before bailing
+            pool.checkin_all(&mut inputs);
+            return Err(e);
         }
 
         let padded = bucket - batch.len();
@@ -575,7 +719,10 @@ impl<'a> Engine<'a> {
     }
 
     /// Stage 2 (post-execute): scatter artifact outputs into the slab and
-    /// the gradient accumulators.
+    /// the gradient accumulators. Output rows are appended to the bump
+    /// `slab` (the pre-arena engine allocated one `Vec` per node here);
+    /// only after the caller has received any in-flight gather response may
+    /// this run — `push_row` can reallocate the slab's backing store.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn scatter_batch(
         &self,
@@ -584,6 +731,7 @@ impl<'a> Engine<'a> {
         prep: &PreparedBatch,
         outputs: &[HostTensor],
         storage: &mut [Option<NodeOut>],
+        slab: &mut ReprSlab,
         live_bytes: &mut usize,
         grads: &mut Grads,
         stats: &mut StepStats,
@@ -612,7 +760,7 @@ impl<'a> Engine<'a> {
             | OpKind::Negate => {
                 let out = &outputs[0];
                 for (row, &i) in batch.iter().enumerate() {
-                    store(storage, live_bytes, i, NodeOut::Repr(out.row(row).to_vec()));
+                    store(storage, live_bytes, i, NodeOut::Repr(slab.push_row(out.row(row))));
                 }
             }
             OpKind::Score => {
@@ -627,7 +775,12 @@ impl<'a> Engine<'a> {
                     let e = pat_loss.entry(slot.pattern).or_insert((0.0, 0));
                     e.0 += loss / batch.len() as f64;
                     e.1 += 1;
-                    store(storage, live_bytes, i, NodeOut::HeadGrad(g_q.row(row).to_vec()));
+                    store(
+                        storage,
+                        live_bytes,
+                        i,
+                        NodeOut::HeadGrad(slab.push_row(g_q.row(row))),
+                    );
                     Grads::add_rows(&mut grads.ent, slot.positive, g_pos.row(row));
                     for (j, &nid) in slot.negatives.iter().enumerate() {
                         let base = row * n_neg * ed + j * ed;
@@ -664,11 +817,12 @@ impl<'a> Engine<'a> {
                         let g_x = &outputs[n_params];
                         let g_r = &outputs[n_params + 1];
                         for (row, &i) in batch.iter().enumerate() {
+                            let r = slab.push_row(g_x.row(row));
                             store(
                                 storage,
                                 live_bytes,
                                 i,
-                                NodeOut::Grads(vec![g_x.row(row).to_vec()]),
+                                NodeOut::Grads { off: r.off, k: 1, w: r.len },
                             );
                             let rel = dag.nodes[i as usize].payload;
                             Grads::add_rows(&mut grads.rel, rel, g_r.row(row));
@@ -678,23 +832,25 @@ impl<'a> Engine<'a> {
                         let k = k as usize;
                         let g_xs = &outputs[n_params];
                         for (row, &i) in batch.iter().enumerate() {
-                            let blocks: Vec<Vec<f32>> = (0..k)
-                                .map(|j| {
-                                    let base = row * k * rd + j * rd;
-                                    g_xs.data[base..base + rd].to_vec()
-                                })
-                                .collect();
-                            store(storage, live_bytes, i, NodeOut::Grads(blocks));
+                            // one [k*rd] row = k contiguous grad blocks
+                            let r = slab.push_row(g_xs.row(row));
+                            store(
+                                storage,
+                                live_bytes,
+                                i,
+                                NodeOut::Grads { off: r.off, k, w: rd },
+                            );
                         }
                     }
                     OpKind::Negate => {
                         let g_x = &outputs[n_params];
                         for (row, &i) in batch.iter().enumerate() {
+                            let r = slab.push_row(g_x.row(row));
                             store(
                                 storage,
                                 live_bytes,
                                 i,
-                                NodeOut::Grads(vec![g_x.row(row).to_vec()]),
+                                NodeOut::Grads { off: r.off, k: 1, w: r.len },
                             );
                         }
                     }

@@ -3,12 +3,16 @@
 //! eager reference-counted reclamation, and gradient accumulation —
 //! split into the immutable planning core ([`Engine`]) and the reusable
 //! execution session ([`EngineSession`]) that owns the persistent gather
-//! worker for its whole lifetime.
+//! worker for its whole lifetime, plus the [`arena`] buffer recyclers
+//! ([`TensorPool`] / [`ReprSlab`]) that keep the session's steady-state
+//! rounds off the heap allocator.
 
+pub mod arena;
 pub mod engine;
 pub mod pools;
 pub mod session;
 
+pub use arena::{PoolStats, ReprSlab, SlabRange, TensorPool};
 pub use engine::{Engine, EngineConfig, Grads, StepStats};
 pub use pools::OperatorPools;
 pub use session::{worker_spawns_total, EngineSession};

@@ -25,6 +25,16 @@ impl OperatorPools {
         self.len += 1;
     }
 
+    /// Empty every pool, keeping the queues' capacity — the session reuses
+    /// one `OperatorPools` across runs, so seeding a run's ready set does
+    /// not allocate once the op-kind set has been seen.
+    pub fn clear(&mut self) {
+        for q in self.pools.values_mut() {
+            q.clear();
+        }
+        self.len = 0;
+    }
+
     /// Total queued operators.
     pub fn len(&self) -> usize {
         self.len
@@ -143,6 +153,18 @@ mod tests {
     fn empty_selection_is_none() {
         let p = OperatorPools::default();
         assert_eq!(p.select_max_fillness(|_| 8), None);
+    }
+
+    #[test]
+    fn clear_empties_all_pools_for_reuse() {
+        let mut p = OperatorPools::default();
+        p.push(OpKind::Embed, 0);
+        p.push(OpKind::Project, 1);
+        p.clear();
+        assert!(p.is_empty());
+        assert_eq!(p.select_max_fillness(|_| 8), None);
+        p.push(OpKind::Embed, 7);
+        assert_eq!(p.pop_batch(OpKind::Embed, 8), vec![7]);
     }
 
     #[test]

@@ -3,38 +3,55 @@
 //! [`super::Engine`] is the immutable planning core (Max-Fillness
 //! selection, input coalescing, output scatter); the session owns the
 //! *mutable execution machinery*: the pipelined run loop, the persistent
-//! gather worker and its job/response channels. One worker thread is
-//! spawned when the session is created (none for a sync session) and lives
-//! until the session drops, so back-to-back DAGs — per-query batching,
-//! query-level structure groups, multi-step training — pay one channel
-//! round-trip (~1 µs) per overlapped round and **zero thread spawns per
-//! run**, where the pre-session engine spawned and joined a scoped worker
-//! inside every `Engine::run`.
+//! gather worker and its job/response channels, and — since the arena
+//! refactor — the buffer recyclers that keep the hot loop off the
+//! allocator:
+//!
+//! * a [`TensorPool`] serving every staging block and (via
+//!   [`crate::runtime::Runtime::execute_pooled`]) every kernel output,
+//! * a [`ReprSlab`] holding all per-node outputs as bump-allocated rows,
+//! * a [`RunScratch`] recycling the run-level bookkeeping (dependency
+//!   CSRs, refcounts, the output-slab spine, operator pools).
+//!
+//! All three live as long as the session, so back-to-back DAGs — per-query
+//! batching, query-level structure groups, multi-step training — pay one
+//! channel round-trip (~1 µs) per overlapped round, **zero thread spawns
+//! per run**, and (steady state) **zero tensor-sized heap allocations per
+//! round**: buffers circulate pool → gather staging → execute → scatter →
+//! pool, and the slab rewinds at the top of every run without freeing.
+//! `rust/tests/alloc_regression.rs` pins the budget with a counting global
+//! allocator, the same way `session_reuse` pins the zero-spawn property.
 //!
 //! # Session job protocol
 //!
-//! The worker is a `'static` thread, but a run's DAG, model state and
-//! output slab are per-run borrows, so each [`SessionJob`] carries
-//! type-erased raw pointers to them. The run loop upholds the invariants
-//! that make the worker's dereferences sound:
+//! The worker is a `'static` thread, but a run's DAG, model state, output
+//! slab, repr slab and pool are per-run/per-session borrows, so each
+//! [`SessionJob`] carries type-erased raw pointers to them. The run loop
+//! upholds the invariants that make the worker's dereferences sound:
 //!
 //! 1. at most one job is in flight, and its response is received before
-//!    *any* mutation of the output slab — scatter and eager reclamation
+//!    *any* mutation of the output slab or the repr slab — scatter (which
+//!    may reallocate the slab's backing store) and eager reclamation
 //!    happen only after the matching [`GatherDone`] arrives;
 //! 2. speculative batches reference only *ready* operators, whose operand
 //!    rows already exist in the slab and are refcount-pinned until their
 //!    consumers execute;
-//! 3. the run's borrows (engine, DAG, state, slab) stay alive and
+//! 3. the run's borrows (engine, DAG, state, slabs) stay alive and
 //!    unmutated until the response is received — enforced on every exit
 //!    path, including unwinds out of `rt.execute`, by the [`PendingGather`]
-//!    drain guard;
-//! 4. the session's `Drop` hangs up the job channel and joins the worker,
+//!    drain guard (which also checks an unclaimed prefetch's staging
+//!    buffers back into the pool, so error paths do not bleed buffers);
+//! 4. the [`TensorPool`] is the one resource both threads touch
+//!    concurrently (worker checks staging out while the main thread checks
+//!    outputs in) — it is internally locked, so no protocol is needed;
+//! 5. the session's `Drop` hangs up the job channel and joins the worker,
 //!    so the thread never outlives the runtime/semantic-source borrows the
 //!    engine holds.
 //!
 //! The executed schedule — and therefore every loss/gradient bit — is
-//! identical to the synchronous engine and to per-run engines; the
-//! `session_reuse` and `scheduler_equivalence` suites assert it bitwise.
+//! identical to the synchronous engine, to per-run engines, and to the
+//! pooling-disabled baseline; the `session_reuse`, `scheduler_equivalence`
+//! and `alloc_regression` suites assert it bitwise.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -44,6 +61,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use super::arena::{ReprSlab, TensorPool};
 use super::engine::{Engine, EngineConfig, Grads, NodeOut, PreparedBatch, StepStats};
 use super::pools::OperatorPools;
 use crate::model::state::ModelState;
@@ -81,13 +99,20 @@ struct SessionJob {
     dag: *const QueryDag,
     state: *const ModelState,
     /// the run's output slab (read-only while the job is in flight)
-    slab: *const Option<NodeOut>,
-    slab_len: usize,
+    storage: *const Option<NodeOut>,
+    storage_len: usize,
+    /// the run's repr slab — operand rows are borrowed out of it
+    /// (read-only while the job is in flight; `push_row` may reallocate)
+    slab: *const ReprSlab,
+    /// the session's staging-buffer pool (internally locked — safe to
+    /// share with the main thread's concurrent output checkins)
+    pool: *const TensorPool,
 }
 
 // SAFETY: the pointers are only dereferenced between the job/response
 // channel round-trip's happens-before edges, while the run loop keeps
-// every referent alive and unmutated — the module-level protocol.
+// every referent alive and unmutated — the module-level protocol. The
+// pool is additionally internally synchronized.
 unsafe impl Send for SessionJob {}
 
 /// The worker's response to one gather job.
@@ -101,9 +126,12 @@ struct GatherDone {
 
 /// Drain guard for the in-flight gather job: its response MUST be received
 /// before the run's borrows are mutated or dropped — including on an
-/// unwind out of `rt.execute` — or the worker would read freed memory.
+/// unwind out of `rt.execute` — or the worker would read freed memory. A
+/// response drained here (not consumed by the run loop) has its staging
+/// buffers checked back into the pool so error exits do not bleed them.
 struct PendingGather<'s> {
     done_rx: &'s Receiver<GatherDone>,
+    pool: &'s TensorPool,
     op: OpKind,
     taken: bool,
 }
@@ -118,7 +146,11 @@ impl PendingGather<'_> {
 impl Drop for PendingGather<'_> {
     fn drop(&mut self) {
         if !self.taken {
-            let _ = self.done_rx.recv();
+            if let Ok(done) = self.done_rx.recv() {
+                if let Ok(mut prep) = done.result {
+                    self.pool.checkin_all(&mut prep.inputs);
+                }
+            }
         }
     }
 }
@@ -130,12 +162,129 @@ struct SessionWorker {
     handle: JoinHandle<()>,
 }
 
+/// The session's planning core, either owned (the normal construction
+/// paths) or borrowed (the [`Engine::run`] compat shim, which used to
+/// clone the core per call).
+enum CoreRef<'a> {
+    Owned(Engine<'a>),
+    Borrowed(&'a Engine<'a>),
+}
+
+impl<'a> CoreRef<'a> {
+    fn get(&self) -> &Engine<'a> {
+        match self {
+            CoreRef::Owned(e) => e,
+            CoreRef::Borrowed(e) => *e,
+        }
+    }
+}
+
+/// Run-level bookkeeping recycled across a session's runs: every vector is
+/// `clear()`-ed and refilled, so once the session has seen a DAG of
+/// comparable size, starting a run performs no heap allocation. The
+/// dependency structures are CSR-shaped (offsets + flat payload) — the
+/// pre-arena engine built `Vec<Vec<u32>>`s, two allocations per node per
+/// run.
+#[derive(Default)]
+struct RunScratch {
+    /// effective deps CSR: fwd inputs + the mirrored node's inputs
+    deps_off: Vec<u32>,
+    deps: Vec<u32>,
+    /// consumers CSR (reverse of deps), filled in node order — the same
+    /// order the old per-node `Vec` push produced, keeping the ready-queue
+    /// order (and so the schedule) bit-identical
+    cons_off: Vec<u32>,
+    cons: Vec<u32>,
+    /// scratch write cursors for the CSR fill
+    cursor: Vec<u32>,
+    refcnt: Vec<u32>,
+    indeg: Vec<u32>,
+    ready: Vec<u32>,
+    /// the output slab spine (entries are `Copy` slab offsets)
+    storage: Vec<Option<NodeOut>>,
+    pools: OperatorPools,
+    pat_loss: HashMap<&'static str, (f64, usize)>,
+}
+
+impl RunScratch {
+    /// Rebuild the per-run bookkeeping for `dag`, reusing all capacity.
+    fn prepare(&mut self, dag: &QueryDag, wanted: &[u32]) {
+        let n = dag.nodes.len();
+
+        // -- effective dependency CSR (fwd inputs + VJP recompute inputs)
+        self.deps.clear();
+        self.deps_off.clear();
+        self.deps_off.push(0);
+        for node in &dag.nodes {
+            self.deps.extend_from_slice(&node.inputs);
+            if node.mirror != NO_MIRROR {
+                self.deps.extend_from_slice(&dag.nodes[node.mirror as usize].inputs);
+            }
+            self.deps_off.push(self.deps.len() as u32);
+        }
+
+        // -- indegrees
+        self.indeg.clear();
+        for w in self.deps_off.windows(2) {
+            self.indeg.push(w[1] - w[0]);
+        }
+
+        // -- consumer counts (into cursor), refcounts = consumer counts
+        self.cursor.clear();
+        self.cursor.resize(n, 0);
+        for &p in &self.deps {
+            self.cursor[p as usize] += 1;
+        }
+        self.refcnt.clear();
+        self.refcnt.extend_from_slice(&self.cursor);
+        for &w in wanted {
+            self.refcnt[w as usize] += 1; // pin: never reclaimed during the run
+        }
+
+        // -- consumers CSR: prefix-sum offsets, then fill in node order
+        self.cons_off.clear();
+        self.cons_off.push(0);
+        let mut acc = 0u32;
+        for &c in &self.cursor {
+            acc += c;
+            self.cons_off.push(acc);
+        }
+        self.cursor.copy_from_slice(&self.cons_off[..n]);
+        self.cons.clear();
+        self.cons.resize(self.deps.len(), 0);
+        for i in 0..n {
+            for di in self.deps_off[i]..self.deps_off[i + 1] {
+                let p = self.deps[di as usize] as usize;
+                self.cons[self.cursor[p] as usize] = i as u32;
+                self.cursor[p] += 1;
+            }
+        }
+
+        // -- output slab spine, ready set, pools
+        self.storage.clear();
+        self.storage.resize(n, None);
+        self.ready.clear();
+        self.pools.clear();
+        // Algorithm 1 line 6: distribute the ready set into pools.
+        for i in 0..n {
+            if self.indeg[i] == 0 {
+                self.pools.push(dag.nodes[i].op, i as u32);
+            }
+        }
+        self.pat_loss.clear();
+    }
+}
+
 /// A reusable execution session over one [`Engine`]: call
 /// [`EngineSession::run`] for as many DAGs as you like; the warm gather
-/// worker and channels persist across all of them.
+/// worker, channels, tensor pool, repr slab and run scratch persist across
+/// all of them.
 pub struct EngineSession<'a> {
-    engine: Engine<'a>,
+    core: CoreRef<'a>,
     worker: Option<SessionWorker>,
+    pool: TensorPool,
+    slab: ReprSlab,
+    scratch: RunScratch,
 }
 
 impl<'a> EngineSession<'a> {
@@ -153,23 +302,52 @@ impl<'a> EngineSession<'a> {
         EngineSession::from_engine(Engine::with_semantic(rt, cfg, source))
     }
 
-    /// Wrap an existing planning core. The persistent gather worker is
-    /// spawned here — once — iff the config pipelines; a sync session
-    /// needs no thread at all.
+    /// Wrap an existing planning core, taking ownership.
     pub fn from_engine(engine: Engine<'a>) -> EngineSession<'a> {
-        let worker = engine.cfg.pipeline.then(|| {
+        EngineSession::build(CoreRef::Owned(engine))
+    }
+
+    /// Borrow an existing planning core — the [`Engine::run`] compat shim
+    /// (the pre-arena shim deep-cloned the core per call).
+    pub fn over(engine: &'a Engine<'a>) -> EngineSession<'a> {
+        EngineSession::build(CoreRef::Borrowed(engine))
+    }
+
+    /// The persistent gather worker is spawned here — once — iff the
+    /// config pipelines; a sync session needs no thread at all. The tensor
+    /// pool honors `EngineConfig::pooling`.
+    fn build(core: CoreRef<'a>) -> EngineSession<'a> {
+        let cfg = core.get().cfg.clone();
+        let worker = cfg.pipeline.then(|| {
             let (job_tx, job_rx) = channel::<SessionMsg>();
             let (done_tx, done_rx) = channel::<GatherDone>();
             WORKER_SPAWNS.fetch_add(1, Ordering::SeqCst);
             let handle = std::thread::spawn(move || session_worker(job_rx, done_tx));
             SessionWorker { job_tx, done_rx, handle }
         });
-        EngineSession { engine, worker }
+        EngineSession {
+            core,
+            worker,
+            pool: TensorPool::with_enabled(cfg.pooling),
+            slab: ReprSlab::new(),
+            scratch: RunScratch::default(),
+        }
     }
 
     /// The immutable planning core this session drives.
     pub fn engine(&self) -> &Engine<'a> {
-        &self.engine
+        self.core.get()
+    }
+
+    /// The session's buffer recycler (telemetry: hits/misses/peak bytes).
+    pub fn pool(&self) -> &TensorPool {
+        &self.pool
+    }
+
+    /// Backing capacity of the repr slab — the cross-run high-water mark
+    /// of per-node output bytes.
+    pub fn slab_capacity_bytes(&self) -> usize {
+        self.slab.capacity_bytes()
     }
 
     /// Worker threads this session owns: 1 pipelined, 0 sync. Constant
@@ -200,43 +378,37 @@ impl<'a> EngineSession<'a> {
         grads: &mut Grads,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
-        let engine = &self.engine;
-        let worker = self.worker.as_ref();
+        // disjoint field borrows: the core is read-only, the arena pieces
+        // are mutated, the pool is shared with the worker
+        let EngineSession { core, worker, pool, slab, scratch } = self;
+        let engine: &Engine<'a> = core.get();
+        let worker = worker.as_ref();
+        let pool: &TensorPool = pool;
+        let pool_base = pool.stats();
+
         let n = dag.nodes.len();
         let mut stats = StepStats { n_queries: dag.queries.len(), ..Default::default() };
-        // per-pattern loss accumulation
-        let mut pat_loss: HashMap<&'static str, (f64, usize)> = HashMap::new();
 
-        // -- effective dependency graph (fwd inputs + VJP recompute inputs)
-        let mut deps: Vec<Vec<u32>> = Vec::with_capacity(n);
-        for node in &dag.nodes {
-            let mut d = node.inputs.clone();
-            if node.mirror != NO_MIRROR {
-                d.extend_from_slice(&dag.nodes[node.mirror as usize].inputs);
-            }
-            deps.push(d);
-        }
-        let mut consumers: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (i, d) in deps.iter().enumerate() {
-            for &p in d {
-                consumers[p as usize].push(i as u32);
-            }
-        }
-        let mut refcnt: Vec<u32> = consumers.iter().map(|c| c.len() as u32).collect();
-        for &w in wanted {
-            refcnt[w as usize] += 1; // pin: never reclaimed during the run
-        }
-        let mut indeg: Vec<u32> = deps.iter().map(|d| d.len() as u32).collect();
+        // -- per-run arena reset: rewind the slab (capacity kept), rebuild
+        //    the bookkeeping into recycled vectors
+        slab.reset();
+        scratch.prepare(dag, wanted);
+        let RunScratch {
+            deps_off,
+            deps,
+            cons_off,
+            cons,
+            cursor: _,
+            refcnt,
+            indeg,
+            ready,
+            storage,
+            pools,
+            pat_loss,
+        } = scratch;
 
-        let mut storage: Vec<Option<NodeOut>> = (0..n).map(|_| None).collect();
         let mut live_bytes = 0usize;
         let mut pending = n;
-        let mut ready: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
-        let mut pools = OperatorPools::default();
-        // Algorithm 1 line 6: distribute the ready set into pools.
-        for node in ready.drain(..) {
-            pools.push(dag.nodes[node as usize].op, node);
-        }
 
         if let Some(w) = worker {
             w.job_tx.send(SessionMsg::BeginRun).expect("gather worker hung up");
@@ -245,14 +417,14 @@ impl<'a> EngineSession<'a> {
         // First round: selection + synchronous gather (nothing to overlap
         // yet).
         let mut current: Option<PreparedBatch> =
-            match engine.next_round(&mut pools, &mut stats, pending)? {
-                Some((op, batch)) => {
-                    Some(engine.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
-                }
+            match engine.next_round(pools, &mut stats, pending)? {
+                Some((op, batch)) => Some(engine.gather_timed(
+                    dag, state, op, batch, storage, slab, pool, &mut stats,
+                )?),
                 None => None,
             };
 
-        while let Some(prep) = current.take() {
+        while let Some(mut prep) = current.take() {
             // -- speculate round N+1 from the current ready set (pools
             //    minus this round); newly-ready operators from round N are
             //    not in the pools yet, which is exactly what makes this a
@@ -267,18 +439,25 @@ impl<'a> EngineSession<'a> {
                         engine: (engine as *const Engine<'a>).cast(),
                         dag: dag as *const QueryDag,
                         state: state as *const ModelState,
-                        slab: storage.as_ptr(),
-                        slab_len: storage.len(),
+                        storage: storage.as_ptr(),
+                        storage_len: storage.len(),
+                        slab: &*slab as *const ReprSlab,
+                        pool: pool as *const TensorPool,
                     };
                     w.job_tx.send(SessionMsg::Gather(job)).expect("gather worker hung up");
-                    inflight =
-                        Some(PendingGather { done_rx: &w.done_rx, op: sop, taken: false });
+                    inflight = Some(PendingGather {
+                        done_rx: &w.done_rx,
+                        pool,
+                        op: sop,
+                        taken: false,
+                    });
                 }
             }
 
             // -- execute round N (overlapping the in-flight prefetch)
+            let round_op = prep.op;
             let t0 = Instant::now();
-            let exec_result = engine.rt.execute_gated(&prep.artifact, &prep.inputs);
+            let exec_result = engine.rt.execute_pooled_gated(&prep.artifact, &prep.inputs, pool);
             let exec_dt = t0.elapsed().as_secs_f64();
             stats.execute_secs += exec_dt;
 
@@ -310,24 +489,41 @@ impl<'a> EngineSession<'a> {
                 }
                 prefetched = Some(done.result);
             }
-            let outputs =
-                exec_result.with_context(|| format!("executing pool {}", prep.op.name()))?;
+            let mut outputs = match exec_result {
+                Ok(o) => o,
+                Err(e) => {
+                    // return the round's buffers before bailing — the pool
+                    // must not bleed on failure paths
+                    pool.checkin_all(&mut prep.inputs);
+                    if let Some(Ok(mut p)) = prefetched {
+                        pool.checkin_all(&mut p.inputs);
+                    }
+                    return Err(e).context(format!("executing pool {}", round_op.name()));
+                }
+            };
             stats.executions += 1;
 
             // -- scatter outputs, account padding, reclaim eagerly
-            engine
-                .scatter_batch(
-                    dag, state, &prep, &outputs, &mut storage, &mut live_bytes, grads,
-                    &mut stats, &mut pat_loss,
-                )
-                .with_context(|| format!("scattering pool {}", prep.op.name()))?;
+            if let Err(e) = engine.scatter_batch(
+                dag, state, &prep, &outputs, storage, slab, &mut live_bytes, grads,
+                &mut stats, pat_loss,
+            ) {
+                pool.checkin_all(&mut prep.inputs);
+                pool.checkin_all(&mut outputs);
+                if let Some(Ok(mut p)) = prefetched {
+                    pool.checkin_all(&mut p.inputs);
+                }
+                return Err(e).context(format!("scattering pool {}", round_op.name()));
+            }
             stats.peak_live_bytes = stats.peak_live_bytes.max(live_bytes);
 
             // lines 12-18: bookkeeping, eager reclamation, ready updates
             for &o in &prep.batch {
                 pending -= 1;
                 stats.operators += 1;
-                for &p in &deps[o as usize] {
+                let (d0, d1) =
+                    (deps_off[o as usize] as usize, deps_off[o as usize + 1] as usize);
+                for &p in &deps[d0..d1] {
                     refcnt[p as usize] -= 1;
                     if refcnt[p as usize] == 0 {
                         if let Some(out) = storage[p as usize].take() {
@@ -335,7 +531,9 @@ impl<'a> EngineSession<'a> {
                         }
                     }
                 }
-                for &c in &consumers[o as usize] {
+                let (c0, c1) =
+                    (cons_off[o as usize] as usize, cons_off[o as usize + 1] as usize);
+                for &c in &cons[c0..c1] {
                     indeg[c as usize] -= 1;
                     if indeg[c as usize] == 0 {
                         ready.push(c);
@@ -346,19 +544,41 @@ impl<'a> EngineSession<'a> {
                 pools.push(dag.nodes[node as usize].op, node);
             }
 
+            // -- round N's buffers go back on the shelf (staging + outputs)
+            pool.checkin_all(&mut prep.inputs);
+            pool.checkin_all(&mut outputs);
+
             // -- actual Max-Fillness selection; validate the speculation
-            current = match engine.next_round(&mut pools, &mut stats, pending)? {
-                None => None,
-                Some((op, batch)) => match prefetched {
+            current = match engine.next_round(pools, &mut stats, pending) {
+                Err(e) => {
+                    if let Some(Ok(mut p)) = prefetched {
+                        pool.checkin_all(&mut p.inputs);
+                    }
+                    return Err(e);
+                }
+                Ok(None) => {
+                    // unreachable in practice (a sent job implies pending
+                    // work), but recycle defensively
+                    if let Some(Ok(mut p)) = prefetched {
+                        pool.checkin_all(&mut p.inputs);
+                    }
+                    None
+                }
+                Ok(Some((op, batch))) => match prefetched {
                     Some(Ok(p)) if p.op == op && p.batch == batch => {
                         stats.spec_hits += 1;
                         Some(p)
                     }
                     other => {
-                        if other.is_some() {
+                        if let Some(res) = other {
                             stats.spec_misses += 1;
+                            if let Ok(mut p) = res {
+                                pool.checkin_all(&mut p.inputs);
+                            }
                         }
-                        Some(engine.gather_timed(dag, state, op, batch, &storage, &mut stats)?)
+                        Some(engine.gather_timed(
+                            dag, state, op, batch, storage, slab, pool, &mut stats,
+                        )?)
                     }
                 },
             };
@@ -366,11 +586,15 @@ impl<'a> EngineSession<'a> {
 
         grads.loss += stats.loss;
         grads.n_queries += stats.n_queries;
-        stats.per_pattern_loss = pat_loss.into_iter().map(|(k, (l, c))| (k, l, c)).collect();
+        stats.per_pattern_loss = pat_loss.iter().map(|(k, &(l, c))| (*k, l, c)).collect();
+        let ps = pool.stats();
+        stats.pool_hits = ps.hits - pool_base.hits;
+        stats.pool_misses = ps.misses - pool_base.misses;
+        stats.peak_pool_bytes = ps.peak_pooled_bytes;
         let outputs = wanted
             .iter()
             .map(|&w| match &storage[w as usize] {
-                Some(NodeOut::Repr(v)) => Ok(v.clone()),
+                Some(NodeOut::Repr(r)) => Ok(slab.get(*r).to_vec()),
                 _ => bail!("wanted node {w} produced no repr"),
             })
             .collect::<Result<Vec<_>>>()?;
@@ -409,8 +633,10 @@ fn session_worker(jobs: Receiver<SessionMsg>, done: Sender<GatherDone>) {
             let engine: &Engine<'_> = &*job.engine.cast();
             let dag: &QueryDag = &*job.dag;
             let state: &ModelState = &*job.state;
-            let slab = std::slice::from_raw_parts(job.slab, job.slab_len);
-            engine.gather_batch(dag, state, job.op, job.batch, slab)
+            let storage = std::slice::from_raw_parts(job.storage, job.storage_len);
+            let slab: &ReprSlab = &*job.slab;
+            let pool: &TensorPool = &*job.pool;
+            engine.gather_batch(dag, state, job.op, job.batch, storage, slab, pool)
         };
         let gather_secs = t0.elapsed().as_secs_f64();
         parked = Instant::now();
@@ -492,6 +718,90 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pooling_disabled_matches_pooled_bitwise() {
+        // the pool must be a pure recycler: flipping it off (the pre-pool
+        // baseline) changes allocation behavior, not one output bit
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let mut pooled = EngineSession::new(&rt, EngineConfig::default());
+        let mut bare = EngineSession::new(
+            &rt,
+            EngineConfig { pooling: false, ..Default::default() },
+        );
+        for salt in [0u32, 7] {
+            let dag = dag_of(8, salt);
+            let mut g_a = Grads::default();
+            let s_a = pooled.run(&dag, &st, &mut g_a).unwrap();
+            let mut g_b = Grads::default();
+            let s_b = bare.run(&dag, &st, &mut g_b).unwrap();
+            assert_eq!(s_a.schedule, s_b.schedule);
+            assert_eq!(s_a.loss.to_bits(), s_b.loss.to_bits());
+            for (k, v) in &g_a.ent {
+                let w = &g_b.ent[k];
+                for (a, b) in v.iter().zip(w) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+        assert_eq!(bare.pool().stats().hits, 0, "disabled pool never recycles");
+        assert!(pooled.pool().stats().hits > 0, "warm pooled session recycles");
+    }
+
+    #[test]
+    fn warm_sessions_recycle_buffers_and_slab_capacity() {
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let mut session = EngineSession::new(&rt, EngineConfig::default());
+        let dag = dag_of(8, 1);
+        let mut grads = Grads::default();
+        session.run(&dag, &st, &mut grads).unwrap();
+        let misses_after_warmup = session.pool().stats().misses;
+        let slab_cap = session.slab_capacity_bytes();
+        assert!(slab_cap > 0, "the run must have used the repr slab");
+        for _ in 0..3 {
+            let mut grads = Grads::default();
+            let stats = session.run(&dag, &st, &mut grads).unwrap();
+            assert_eq!(
+                stats.pool_misses, 0,
+                "steady-state runs must be fully served by the pool"
+            );
+            assert!(stats.pool_hits > 0);
+        }
+        assert_eq!(
+            session.pool().stats().misses,
+            misses_after_warmup,
+            "no new allocations after the warmup run"
+        );
+        assert_eq!(
+            session.slab_capacity_bytes(),
+            slab_cap,
+            "slab capacity settles at the high-water mark"
+        );
+    }
+
+    #[test]
+    fn borrowed_core_sessions_run_like_owned_ones() {
+        // Engine::run routes through EngineSession::over (borrow, no
+        // clone); drive `over` directly and diff against from_engine
+        let rt = MockRuntime::new();
+        let st = mock_state(&rt);
+        let engine = Engine::new(&rt, EngineConfig::default());
+        let dag = dag_of(6, 2);
+        let mut g_over = Grads::default();
+        let s_over = {
+            let mut session = EngineSession::over(&engine);
+            session.run(&dag, &st, &mut g_over).unwrap()
+        };
+        let mut g_owned = Grads::default();
+        let s_owned = {
+            let mut session = EngineSession::from_engine(engine.clone());
+            session.run(&dag, &st, &mut g_owned).unwrap()
+        };
+        assert_eq!(s_over.schedule, s_owned.schedule);
+        assert_eq!(s_over.loss.to_bits(), s_owned.loss.to_bits());
     }
 
     #[test]

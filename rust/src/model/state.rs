@@ -40,22 +40,66 @@ impl EmbeddingTable {
     /// `ids.len()` (scheduler padding; see model.py on row-locality).
     pub fn gather(&self, ids: &[u32], bucket: usize) -> HostTensor {
         let mut out = HostTensor::zeros(vec![bucket, self.dim]);
+        self.gather_into(ids, &mut out);
+        out
+    }
+
+    /// [`EmbeddingTable::gather`] with a recycled staging block from `pool`
+    /// — the hot-loop path (zero heap allocations once the pool is warm).
+    pub fn gather_pooled(
+        &self,
+        ids: &[u32],
+        bucket: usize,
+        pool: &crate::exec::TensorPool,
+    ) -> HostTensor {
+        let mut out = pool.checkout_dirty(&[bucket, self.dim]);
+        self.gather_into(ids, &mut out);
+        out
+    }
+
+    /// Gather into an existing `[bucket, dim]` block, overwriting every
+    /// element: real rows are copied, the padding tail is zeroed (cheaper
+    /// than zeroing the whole block first — padding is usually thin).
+    pub fn gather_into(&self, ids: &[u32], out: &mut HostTensor) {
         for (i, &id) in ids.iter().enumerate() {
             out.row_mut(i).copy_from_slice(self.row(id));
         }
-        out
+        out.zero_rows_from(ids.len());
     }
 
     /// Gather a nested `[bucket, per, dim]` block (negative samples).
     pub fn gather_nested(&self, ids: &[&[u32]], bucket: usize, per: usize) -> HostTensor {
         let mut out = HostTensor::zeros(vec![bucket, per, self.dim]);
+        self.gather_nested_into(ids, per, &mut out);
+        out
+    }
+
+    /// [`EmbeddingTable::gather_nested`] from a recycled pool block.
+    pub fn gather_nested_pooled(
+        &self,
+        ids: &[&[u32]],
+        bucket: usize,
+        per: usize,
+        pool: &crate::exec::TensorPool,
+    ) -> HostTensor {
+        let mut out = pool.checkout_dirty(&[bucket, per, self.dim]);
+        self.gather_nested_into(ids, per, &mut out);
+        out
+    }
+
+    /// Nested gather into an existing block, overwriting every element
+    /// (short inner rows and the padding tail are zeroed).
+    pub fn gather_nested_into(&self, ids: &[&[u32]], per: usize, out: &mut HostTensor) {
         for (i, row_ids) in ids.iter().enumerate() {
             for (j, &id) in row_ids.iter().enumerate() {
                 let dst = i * per * self.dim + j * self.dim;
                 out.data[dst..dst + self.dim].copy_from_slice(self.row(id));
             }
+            // inner padding: negative lists shorter than `per`
+            let tail = i * per * self.dim + row_ids.len() * self.dim;
+            out.data[tail..(i + 1) * per * self.dim].fill(0.0);
         }
-        out
+        out.zero_rows_from(ids.len());
     }
 
     pub fn bytes(&self) -> usize {
@@ -183,6 +227,30 @@ impl ModelState {
             .collect()
     }
 
+    /// [`ModelState::params_for`] into recycled pool blocks — the engine's
+    /// hot-loop path: the old `ParamTensor::as_host` cloned shape and data
+    /// on every scheduling round. Pushes into `out` so that on an
+    /// unknown-param error the already-checked-out blocks remain with the
+    /// caller (who returns them to the pool) instead of dropping.
+    pub fn params_for_pooled(
+        &self,
+        names: impl Iterator<Item = impl AsRef<str>>,
+        pool: &crate::exec::TensorPool,
+        out: &mut Vec<HostTensor>,
+    ) -> Result<()> {
+        for n in names {
+            let n = n.as_ref();
+            let p = self
+                .dense
+                .get(n)
+                .ok_or_else(|| anyhow::anyhow!("unknown dense param {n:?}"))?;
+            let mut t = pool.checkout_dirty(&p.shape);
+            t.data.copy_from_slice(&p.data);
+            out.push(t);
+        }
+        Ok(())
+    }
+
     /// Approximate resident bytes of the trainable state.
     pub fn bytes(&self) -> usize {
         self.entities.bytes()
@@ -240,6 +308,24 @@ mod tests {
         assert_eq!(&g.data[4..8], s.entities.row(1));
         assert_eq!(&g.data[8..12], s.entities.row(2));
         assert_eq!(&g.data[16..24], &[0.0; 8]); // padded row
+    }
+
+    #[test]
+    fn pooled_gathers_match_plain_gathers_even_on_dirty_buffers() {
+        let s = state();
+        let pool = crate::exec::TensorPool::new();
+        // poison the pool with a dirty buffer of the exact target shape
+        let mut dirty = HostTensor::zeros(vec![4, 4]);
+        dirty.data.fill(9.0);
+        pool.checkin(dirty);
+        let g = s.entities.gather_pooled(&[1, 3], 4, &pool);
+        assert_eq!(g, s.entities.gather(&[1, 3], 4));
+        let mut dirty = HostTensor::zeros(vec![3, 2, 4]);
+        dirty.data.fill(9.0);
+        pool.checkin(dirty);
+        let negs: Vec<&[u32]> = vec![&[0, 1], &[2]];
+        let n = s.entities.gather_nested_pooled(&negs, 3, 2, &pool);
+        assert_eq!(n, s.entities.gather_nested(&negs, 3, 2));
     }
 
     #[test]

@@ -68,6 +68,19 @@ impl HostTensor {
     pub fn is_finite(&self) -> bool {
         self.data.iter().all(|x| x.is_finite())
     }
+
+    /// Zero every element in place — the scrub applied to recycled pool
+    /// buffers ([`crate::exec::TensorPool::checkout_zeroed`]).
+    pub fn zero(&mut self) {
+        self.data.fill(0.0);
+    }
+
+    /// Zero rows `from..` (leading dim) — the padding tail of a staging
+    /// block whose real rows were fully overwritten.
+    pub fn zero_rows_from(&mut self, from: usize) {
+        let w = self.row_width();
+        self.data[from * w..].fill(0.0);
+    }
 }
 
 #[cfg(test)]
@@ -95,5 +108,14 @@ mod tests {
         let t = HostTensor::zeros(vec![4, 2, 3]);
         assert_eq!(t.row_width(), 6);
         assert_eq!(t.bytes(), 96);
+    }
+
+    #[test]
+    fn zero_helpers() {
+        let mut t = HostTensor::new(vec![3, 2], vec![1.0; 6]).unwrap();
+        t.zero_rows_from(1);
+        assert_eq!(t.data, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        t.zero();
+        assert_eq!(t.data, vec![0.0; 6]);
     }
 }

@@ -289,6 +289,148 @@ impl MockRuntime {
             log.lock().unwrap().push((event, name.to_string()));
         }
     }
+
+    /// The shared execute core: `pool == None` fabricates every output
+    /// fresh (the classic `execute` contract); `Some(pool)` draws outputs
+    /// from the recycler instead, with **bit-identical** values — the
+    /// alloc-regression and equivalence suites rely on both properties.
+    fn execute_with(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+        pool: Option<&crate::exec::TensorPool>,
+    ) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(name)?;
+        if meta.args.len() != inputs.len() {
+            bail!("{name}: expected {} args, got {}", meta.args.len(), inputs.len());
+        }
+        for (a, t) in meta.args.iter().zip(inputs) {
+            if a.shape != t.shape {
+                bail!("{name}: arg {} shape {:?} != manifest {:?}", a.name, t.shape, a.shape);
+            }
+        }
+        let _in_flight = InFlight::enter(self, name);
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        if let Some(delay) = self.exec_delay {
+            std::thread::sleep(delay);
+        }
+
+        // output fabrication primitives: recycled when a pool is supplied
+        let copy_of = |t: &HostTensor| -> HostTensor {
+            match pool {
+                Some(p) => {
+                    let mut o = p.checkout_dirty(&t.shape);
+                    o.data.copy_from_slice(&t.data);
+                    o
+                }
+                None => t.clone(),
+            }
+        };
+        let zeros = |shape: &[usize]| -> HostTensor {
+            match pool {
+                Some(p) => p.checkout_zeroed(shape),
+                None => HostTensor::zeros(shape.to_vec()),
+            }
+        };
+
+        let d = self.manifest.dims.d;
+        let b = meta.bucket;
+        let out = match (meta.op.as_str(), meta.direction.as_str()) {
+            ("embed", "fwd") => vec![copy_of(&inputs[0])],
+            ("embed", "vjp") => vec![copy_of(&inputs[1])],
+            ("fused-sem", "fwd") => {
+                let mut o = copy_of(&inputs[0]);
+                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
+                    *a += b;
+                }
+                vec![o]
+            }
+            ("fused-sem", "vjp") => vec![copy_of(&inputs[2])],
+            ("project", "fwd") => {
+                let mut o = copy_of(&inputs[0]);
+                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
+                    *a += b;
+                }
+                vec![o]
+            }
+            ("project", "vjp") => vec![copy_of(&inputs[2]), copy_of(&inputs[2])],
+            (op, "fwd") if op.starts_with("intersect") || op.starts_with("union") => {
+                let k = op[op.len() - 1..].parse::<usize>().unwrap();
+                let xs = &inputs[0];
+                let bias = if op.starts_with("union") { 1.0 } else { 0.0 };
+                let mut o = zeros(&[b, d]);
+                for i in 0..b {
+                    for j in 0..k {
+                        for c in 0..d {
+                            o.data[i * d + c] += xs.data[i * k * d + j * d + c] / k as f32;
+                        }
+                    }
+                    for c in 0..d {
+                        o.data[i * d + c] += bias;
+                    }
+                }
+                vec![o]
+            }
+            (op, "vjp") if op.starts_with("intersect") || op.starts_with("union") => {
+                let k = op[op.len() - 1..].parse::<usize>().unwrap();
+                let gout = &inputs[1];
+                let mut g = zeros(&[b, k, d]);
+                for i in 0..b {
+                    for j in 0..k {
+                        for c in 0..d {
+                            g.data[i * k * d + j * d + c] = gout.data[i * d + c] / k as f32;
+                        }
+                    }
+                }
+                vec![g]
+            }
+            ("negate", "fwd") => {
+                let mut o = copy_of(&inputs[0]);
+                o.data.iter_mut().for_each(|x| *x = -*x);
+                vec![o]
+            }
+            ("negate", "vjp") => {
+                let mut g = copy_of(&inputs[1]);
+                g.data.iter_mut().for_each(|x| *x = -*x);
+                vec![g]
+            }
+            ("score", "fwd") => {
+                let (q, pos, _neg, mask) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
+                let mut loss = 0.0f32;
+                let mut gq = zeros(&[b, d]);
+                let mut gpos = zeros(&[b, d]);
+                let gneg = zeros(&[b, self.manifest.dims.n_neg, d]);
+                for i in 0..b {
+                    let m = mask.data[i];
+                    let dot: f32 =
+                        q.row(i).iter().zip(pos.row(i)).map(|(a, b)| a * b).sum();
+                    loss += m * dot;
+                    for c in 0..d {
+                        gq.data[i * d + c] = m * pos.data[i * d + c];
+                        gpos.data[i * d + c] = m * q.data[i * d + c];
+                    }
+                }
+                let mut l = zeros(&[1]);
+                l.data[0] = loss;
+                vec![l, gq, gpos, gneg]
+            }
+            ("eval", "fwd") => {
+                let (q, ents) = (&inputs[0], &inputs[1]);
+                let (eb, ec) = (q.rows(), ents.rows());
+                let mut s = zeros(&[eb, ec]);
+                for i in 0..eb {
+                    for j in 0..ec {
+                        s.data[i * ec + j] =
+                            q.row(i).iter().zip(ents.row(j)).map(|(a, b)| a * b).sum();
+                    }
+                }
+                vec![s]
+            }
+            _ => bail!("mock runtime: unimplemented artifact {name}"),
+        };
+        Ok(out)
+    }
 }
 
 /// RAII marker for one in-flight `execute`: logs Begin/End and flags a
@@ -337,116 +479,16 @@ impl Runtime for MockRuntime {
     }
 
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        let meta = self.manifest.artifact(name)?;
-        if meta.args.len() != inputs.len() {
-            bail!("{name}: expected {} args, got {}", meta.args.len(), inputs.len());
-        }
-        for (a, t) in meta.args.iter().zip(inputs) {
-            if a.shape != t.shape {
-                bail!("{name}: arg {} shape {:?} != manifest {:?}", a.name, t.shape, a.shape);
-            }
-        }
-        let _in_flight = InFlight::enter(self, name);
-        self.executions.fetch_add(1, Ordering::Relaxed);
-        *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
-        if let Some(delay) = self.exec_delay {
-            std::thread::sleep(delay);
-        }
+        self.execute_with(name, inputs, None)
+    }
 
-        let d = self.manifest.dims.d;
-        let b = meta.bucket;
-        let out = match (meta.op.as_str(), meta.direction.as_str()) {
-            ("embed", "fwd") => vec![inputs[0].clone()],
-            ("embed", "vjp") => vec![inputs[1].clone()],
-            ("fused-sem", "fwd") => {
-                let mut o = inputs[0].clone();
-                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
-                    *a += b;
-                }
-                vec![o]
-            }
-            ("fused-sem", "vjp") => vec![inputs[2].clone()],
-            ("project", "fwd") => {
-                let mut o = inputs[0].clone();
-                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
-                    *a += b;
-                }
-                vec![o]
-            }
-            ("project", "vjp") => vec![inputs[2].clone(), inputs[2].clone()],
-            (op, "fwd") if op.starts_with("intersect") || op.starts_with("union") => {
-                let k = op[op.len() - 1..].parse::<usize>().unwrap();
-                let xs = &inputs[0];
-                let bias = if op.starts_with("union") { 1.0 } else { 0.0 };
-                let mut o = HostTensor::zeros(vec![b, d]);
-                for i in 0..b {
-                    for j in 0..k {
-                        for c in 0..d {
-                            o.data[i * d + c] += xs.data[i * k * d + j * d + c] / k as f32;
-                        }
-                    }
-                    for c in 0..d {
-                        o.data[i * d + c] += bias;
-                    }
-                }
-                vec![o]
-            }
-            (op, "vjp") if op.starts_with("intersect") || op.starts_with("union") => {
-                let k = op[op.len() - 1..].parse::<usize>().unwrap();
-                let gout = &inputs[1];
-                let mut g = HostTensor::zeros(vec![b, k, d]);
-                for i in 0..b {
-                    for j in 0..k {
-                        for c in 0..d {
-                            g.data[i * k * d + j * d + c] = gout.data[i * d + c] / k as f32;
-                        }
-                    }
-                }
-                vec![g]
-            }
-            ("negate", "fwd") => {
-                let mut o = inputs[0].clone();
-                o.data.iter_mut().for_each(|x| *x = -*x);
-                vec![o]
-            }
-            ("negate", "vjp") => {
-                let mut g = inputs[1].clone();
-                g.data.iter_mut().for_each(|x| *x = -*x);
-                vec![g]
-            }
-            ("score", "fwd") => {
-                let (q, pos, _neg, mask) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
-                let mut loss = 0.0f32;
-                let mut gq = HostTensor::zeros(vec![b, d]);
-                let mut gpos = HostTensor::zeros(vec![b, d]);
-                let gneg = HostTensor::zeros(vec![b, self.manifest.dims.n_neg, d]);
-                for i in 0..b {
-                    let m = mask.data[i];
-                    let dot: f32 =
-                        q.row(i).iter().zip(pos.row(i)).map(|(a, b)| a * b).sum();
-                    loss += m * dot;
-                    for c in 0..d {
-                        gq.data[i * d + c] = m * pos.data[i * d + c];
-                        gpos.data[i * d + c] = m * q.data[i * d + c];
-                    }
-                }
-                vec![HostTensor::scalar(loss), gq, gpos, gneg]
-            }
-            ("eval", "fwd") => {
-                let (q, ents) = (&inputs[0], &inputs[1]);
-                let (eb, ec) = (q.rows(), ents.rows());
-                let mut s = HostTensor::zeros(vec![eb, ec]);
-                for i in 0..eb {
-                    for j in 0..ec {
-                        s.data[i * ec + j] =
-                            q.row(i).iter().zip(ents.row(j)).map(|(a, b)| a * b).sum();
-                    }
-                }
-                vec![s]
-            }
-            _ => bail!("mock runtime: unimplemented artifact {name}"),
-        };
-        Ok(out)
+    fn execute_pooled(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+        pool: &crate::exec::TensorPool,
+    ) -> Result<Vec<HostTensor>> {
+        self.execute_with(name, inputs, Some(pool))
     }
 
     fn upload_resident(&self, key: &str, tensors: &[HostTensor]) -> Result<()> {
@@ -605,6 +647,24 @@ mod tests {
         let g = HostTensor::new(vec![2, 4], vec![0.25; 8]).unwrap();
         let grads = rt.execute("mock_fused-sem_vjp_b2", &[e, s, g]).unwrap();
         assert_eq!(grads[0].data, vec![0.25; 8]);
+    }
+
+    #[test]
+    fn pooled_execution_matches_plain_and_recycles_outputs() {
+        let rt = MockRuntime::new();
+        let pool = crate::exec::TensorPool::new();
+        let x = HostTensor::new(vec![2, 4], (0..8).map(|i| i as f32).collect()).unwrap();
+        let r = HostTensor::new(vec![2, 4], vec![2.0; 8]).unwrap();
+        let plain = rt.execute("mock_project_fwd_b2", &[x.clone(), r.clone()]).unwrap();
+        let pooled =
+            rt.execute_pooled("mock_project_fwd_b2", &[x.clone(), r.clone()], &pool).unwrap();
+        assert_eq!(plain, pooled, "pooled outputs must be bit-identical");
+        for t in pooled {
+            pool.checkin(t);
+        }
+        let again = rt.execute_pooled("mock_project_fwd_b2", &[x, r], &pool).unwrap();
+        assert_eq!(plain, again);
+        assert!(pool.stats().hits >= 1, "second pooled call must recycle a buffer");
     }
 
     #[test]

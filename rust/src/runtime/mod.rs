@@ -23,6 +23,8 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::exec::TensorPool;
+
 /// What the engine needs from an executor backend.
 ///
 /// # Concurrency contract
@@ -43,6 +45,23 @@ pub trait Runtime: Send + Sync {
 
     /// Execute an artifact with all arguments supplied from host memory.
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// [`Runtime::execute`] with output buffers drawn from (and, by the
+    /// caller, eventually returned to) `pool` — the engine's hot-loop entry
+    /// point. The default implementation ignores the pool and falls back to
+    /// plain `execute`, so third-party `Runtime` impls keep working
+    /// unchanged; backends that fabricate host outputs (the mock) override
+    /// it to recycle output tensors instead of allocating per call.
+    /// Numerics must be identical to `execute` — the equivalence suites
+    /// compare the two paths bit for bit.
+    fn execute_pooled(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+        _pool: &TensorPool,
+    ) -> Result<Vec<HostTensor>> {
+        self.execute(name, inputs)
+    }
 
     /// Whether [`Runtime::execute`] may be invoked concurrently from
     /// multiple threads. Backends returning `false` still work with the
@@ -67,6 +86,22 @@ pub trait Runtime: Send + Sync {
         } else {
             let _serialized = self.submission_lock().lock().unwrap();
             self.execute(name, inputs)
+        }
+    }
+
+    /// [`Runtime::execute_pooled`] through the concurrency contract — the
+    /// pooled twin of [`Runtime::execute_gated`].
+    fn execute_pooled_gated(
+        &self,
+        name: &str,
+        inputs: &[HostTensor],
+        pool: &TensorPool,
+    ) -> Result<Vec<HostTensor>> {
+        if self.concurrent_execute_safe() {
+            self.execute_pooled(name, inputs, pool)
+        } else {
+            let _serialized = self.submission_lock().lock().unwrap();
+            self.execute_pooled(name, inputs, pool)
         }
     }
 

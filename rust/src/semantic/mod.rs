@@ -14,10 +14,12 @@
 //! EmbedE path, so *numerics are identical by construction* — a property
 //! the integration tests assert.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::exec::TensorPool;
 use crate::kg::descriptions::Descriptions;
 use crate::model::state::read_f32_file;
 use crate::runtime::{HostTensor, Runtime};
@@ -35,10 +37,29 @@ use crate::runtime::{HostTensor, Runtime};
 /// execute; pure host-memory sources (the decoupled cache) need nothing.
 pub trait SemanticSource: Send + Sync {
     fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor>;
+
+    /// [`SemanticSource::gather`] with the output block drawn from the
+    /// engine's recycled [`TensorPool`] — the hot-loop entry point. The
+    /// default falls back to the plain path (fresh allocation), so
+    /// third-party sources keep working unchanged; values must be
+    /// identical either way.
+    fn gather_pooled(
+        &self,
+        ids: &[u32],
+        bucket: usize,
+        _pool: &TensorPool,
+    ) -> Result<HostTensor> {
+        self.gather(ids, bucket)
+    }
+
     /// encoder tag — selects the `fused-<enc>` artifacts
     fn encoder(&self) -> &str;
     /// bytes this source keeps resident during training
     fn resident_bytes(&self) -> usize;
+    /// gathers served since construction (telemetry; 0 when untracked)
+    fn gather_calls(&self) -> u64 {
+        0
+    }
 }
 
 /// Load the frozen PTE weights exported by aot.py.
@@ -99,6 +120,7 @@ pub struct JointEncoder<'a> {
     desc: Arc<Descriptions>,
     d_l: usize,
     weight_bytes: usize,
+    gathers: AtomicU64,
 }
 
 impl<'a> JointEncoder<'a> {
@@ -112,12 +134,20 @@ impl<'a> JointEncoder<'a> {
         let weight_bytes = weights.iter().map(HostTensor::bytes).sum();
         rt.upload_resident(&resident_key(encoder, "joint"), &weights)?;
         let d_l = rt.manifest().dims.ptes[encoder].2;
-        Ok(JointEncoder { rt, encoder: encoder.to_string(), desc, d_l, weight_bytes })
+        Ok(JointEncoder {
+            rt,
+            encoder: encoder.to_string(),
+            desc,
+            d_l,
+            weight_bytes,
+            gathers: AtomicU64::new(0),
+        })
     }
 }
 
 impl SemanticSource for JointEncoder<'_> {
     fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor> {
+        self.gathers.fetch_add(1, Ordering::Relaxed);
         let m = self.rt.manifest();
         let chunk = m.dims.pte_bucket;
         let mut out = HostTensor::zeros(vec![bucket, self.d_l]);
@@ -138,6 +168,10 @@ impl SemanticSource for JointEncoder<'_> {
     fn resident_bytes(&self) -> usize {
         self.weight_bytes // the encoder never leaves memory in joint mode
     }
+
+    fn gather_calls(&self) -> u64 {
+        self.gathers.load(Ordering::Relaxed)
+    }
 }
 
 /// Decoupled mode: offline precompute + resident manifold (Eq. 10–11).
@@ -146,6 +180,7 @@ pub struct DecoupledCache {
     d_l: usize,
     /// H_sem, row-major `[n_entities, d_l]`
     cache: Vec<f32>,
+    gathers: AtomicU64,
 }
 
 impl DecoupledCache {
@@ -173,21 +208,46 @@ impl DecoupledCache {
         // §4.4: once H_sem exists, the PTE is *unloaded* — only the
         // manifold stays resident for the training phase.
         rt.drop_resident(&resident_key(encoder, "precompute"));
-        Ok(DecoupledCache { encoder: encoder.to_string(), d_l, cache })
+        Ok(DecoupledCache {
+            encoder: encoder.to_string(),
+            d_l,
+            cache,
+            gathers: AtomicU64::new(0),
+        })
     }
 
     pub fn bytes(&self) -> usize {
         self.cache.len() * 4
+    }
+
+    /// Copy rows of H_sem into `out` (every element overwritten).
+    fn gather_into(&self, ids: &[u32], out: &mut HostTensor) {
+        self.gathers.fetch_add(1, Ordering::Relaxed);
+        for (i, &id) in ids.iter().enumerate() {
+            let src = id as usize * self.d_l;
+            out.row_mut(i).copy_from_slice(&self.cache[src..src + self.d_l]);
+        }
+        out.zero_rows_from(ids.len());
     }
 }
 
 impl SemanticSource for DecoupledCache {
     fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor> {
         let mut out = HostTensor::zeros(vec![bucket, self.d_l]);
-        for (i, &id) in ids.iter().enumerate() {
-            let src = id as usize * self.d_l;
-            out.row_mut(i).copy_from_slice(&self.cache[src..src + self.d_l]);
-        }
+        self.gather_into(ids, &mut out);
+        Ok(out)
+    }
+
+    /// The hot-path gather: one recycled block per call instead of a fresh
+    /// `HostTensor` per anchor batch.
+    fn gather_pooled(
+        &self,
+        ids: &[u32],
+        bucket: usize,
+        pool: &TensorPool,
+    ) -> Result<HostTensor> {
+        let mut out = pool.checkout_dirty(&[bucket, self.d_l]);
+        self.gather_into(ids, &mut out);
         Ok(out)
     }
 
@@ -197,6 +257,10 @@ impl SemanticSource for DecoupledCache {
 
     fn resident_bytes(&self) -> usize {
         self.bytes() // H_sem stays resident; the encoder is gone
+    }
+
+    fn gather_calls(&self) -> u64 {
+        self.gathers.load(Ordering::Relaxed)
     }
 }
 
@@ -230,13 +294,31 @@ pub mod mock {
         }
     }
 
-    impl SemanticSource for TableSource {
-        fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor> {
-            let mut out = HostTensor::zeros(vec![bucket, self.d_l]);
+    impl TableSource {
+        fn gather_into(&self, ids: &[u32], out: &mut HostTensor) {
             for (i, &id) in ids.iter().enumerate() {
                 let src = id as usize * self.d_l;
                 out.row_mut(i).copy_from_slice(&self.rows[src..src + self.d_l]);
             }
+            out.zero_rows_from(ids.len());
+        }
+    }
+
+    impl SemanticSource for TableSource {
+        fn gather(&self, ids: &[u32], bucket: usize) -> Result<HostTensor> {
+            let mut out = HostTensor::zeros(vec![bucket, self.d_l]);
+            self.gather_into(ids, &mut out);
+            Ok(out)
+        }
+
+        fn gather_pooled(
+            &self,
+            ids: &[u32],
+            bucket: usize,
+            pool: &crate::exec::TensorPool,
+        ) -> Result<HostTensor> {
+            let mut out = pool.checkout_dirty(&[bucket, self.d_l]);
+            self.gather_into(ids, &mut out);
             Ok(out)
         }
 

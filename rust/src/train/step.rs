@@ -144,6 +144,12 @@ pub struct ExecStats {
     pub overlap_secs: f64,
     pub worker_idle_secs: f64,
     pub gather_wait_secs: f64,
+    /// staging/output buffers recycled by the session's tensor pool
+    pub pool_hits: u64,
+    /// pool checkouts that had to allocate (cold shapes; zero once warm)
+    pub pool_misses: u64,
+    /// high-water bytes parked in the session pool
+    pub peak_pool_bytes: usize,
     /// per-pattern loss observations (adaptive-sampler feedback)
     pub per_pattern: Vec<(&'static str, f64, usize)>,
 }
@@ -161,6 +167,9 @@ impl ExecStats {
         self.overlap_secs += stats.overlap_secs;
         self.worker_idle_secs += stats.worker_idle_secs;
         self.gather_wait_secs += stats.gather_wait_secs;
+        self.pool_hits += stats.pool_hits;
+        self.pool_misses += stats.pool_misses;
+        self.peak_pool_bytes = self.peak_pool_bytes.max(stats.peak_pool_bytes);
         self.per_pattern.extend(stats.per_pattern_loss);
     }
 
@@ -192,6 +201,9 @@ impl ExecStats {
         self.overlap_secs += other.overlap_secs;
         self.worker_idle_secs += other.worker_idle_secs;
         self.gather_wait_secs += other.gather_wait_secs;
+        self.pool_hits += other.pool_hits;
+        self.pool_misses += other.pool_misses;
+        self.peak_pool_bytes = self.peak_pool_bytes.max(other.peak_pool_bytes);
         self.per_pattern.extend(other.per_pattern);
     }
 }
@@ -436,6 +448,10 @@ mod tests {
         assert_eq!(exec.queries, batch.len());
         assert_eq!(grads.n_queries, batch.len());
         assert!(exec.launches > 0);
+        assert!(
+            exec.pool_hits + exec.pool_misses > 0,
+            "pool telemetry must flow through ExecStats"
+        );
         assert!(!grads.ent.is_empty());
         assert_eq!(state.step, 0, "run_batch must not touch the optimizer");
     }

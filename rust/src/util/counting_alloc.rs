@@ -1,0 +1,103 @@
+//! Test/bench-only counting global allocator — the measurement half of the
+//! allocation-regression gate, mirroring how `exec::worker_spawns_total()`
+//! anchors the zero-spawn gate.
+//!
+//! The library never installs this allocator; a test or bench binary opts
+//! in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: ngdb_zoo::util::counting_alloc::CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! after which [`snapshot`] / [`AllocSnapshot::delta_since`] measure heap
+//! traffic across a region of interest. Counters are process-global
+//! (allocations from *any* thread count, including the session's gather
+//! worker — deliberately: speculative gathers are part of a round's cost),
+//! so tests sharing a binary must serialize, the same discipline the
+//! spawn-counter suites already use. When no binary installs the
+//! allocator, the counters simply stay at zero and cost nothing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static FREES: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Forwarding wrapper around [`System`] that counts every allocation and
+/// its size. Counting uses relaxed atomics only — the allocator itself
+/// never allocates.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        FREES.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocation counters at one instant.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// `alloc` + `alloc_zeroed` + `realloc` calls
+    pub allocs: u64,
+    /// `dealloc` calls
+    pub frees: u64,
+    /// bytes requested across all allocating calls
+    pub bytes: u64,
+}
+
+impl AllocSnapshot {
+    /// Counter growth since `earlier`.
+    pub fn delta_since(&self, earlier: &AllocSnapshot) -> AllocSnapshot {
+        AllocSnapshot {
+            allocs: self.allocs - earlier.allocs,
+            frees: self.frees - earlier.frees,
+            bytes: self.bytes - earlier.bytes,
+        }
+    }
+}
+
+/// Current process-wide counters (all zero unless a binary installed
+/// [`CountingAlloc`] as its `#[global_allocator]`).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: ALLOCS.load(Ordering::Relaxed),
+        frees: FREES.load(Ordering::Relaxed),
+        bytes: BYTES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_delta_arithmetic() {
+        let a = AllocSnapshot { allocs: 10, frees: 4, bytes: 1024 };
+        let b = AllocSnapshot { allocs: 25, frees: 9, bytes: 4096 };
+        assert_eq!(
+            b.delta_since(&a),
+            AllocSnapshot { allocs: 15, frees: 5, bytes: 3072 }
+        );
+    }
+}

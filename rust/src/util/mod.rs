@@ -5,6 +5,7 @@
 //! dependency closure — see DESIGN.md §Substitutions.
 
 pub mod cli;
+pub mod counting_alloc;
 pub mod json;
 pub mod proptest;
 pub mod rng;

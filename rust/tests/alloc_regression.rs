@@ -1,0 +1,274 @@
+//! Allocation-regression suite: a warm [`EngineSession`]'s steady-state
+//! rounds must stay within the documented heap-allocation budget
+//! (`exec::arena::{ROUND_ALLOC_BUDGET, RUN_ALLOC_OVERHEAD,
+//! ROUND_ALLOC_BYTES_BUDGET}`), the pool must actually recycle (zero
+//! steady-state misses), `reset` must release and then re-warm, and error
+//! paths must return their buffers instead of bleeding them.
+//!
+//! This binary installs the counting global allocator, so — like the
+//! spawn-counter suites — every test serializes on one lock to keep the
+//! process-global deltas attributable. Counters include the gather
+//! worker's allocations (speculative gathers are part of a round's cost).
+
+use std::sync::{Mutex, MutexGuard};
+
+use ngdb_zoo::exec::arena::{
+    ROUND_ALLOC_BUDGET, ROUND_ALLOC_BYTES_BUDGET, RUN_ALLOC_OVERHEAD,
+};
+use ngdb_zoo::exec::{EngineConfig, EngineSession, Grads};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::util::counting_alloc::{snapshot, CountingAlloc};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// Process-global allocation counters: tests must not run concurrently.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const NE: usize = 12; // entity rows
+const NR: usize = 6; // relation rows
+const N_NEG: usize = 4; // must match the mock config below
+
+/// Wide mock dims so tensor payloads dwarf bookkeeping: one un-recycled
+/// staging block here is tens of KiB, far outside the per-round byte
+/// budget — the test genuinely distinguishes pooled from unpooled.
+fn wide_runtime() -> MockRuntime {
+    MockRuntime::with_config(64, N_NEG, &[16, 64, 256])
+}
+
+fn state(rt: &MockRuntime) -> ModelState {
+    ModelState::init(rt.manifest(), "mock", NE, NR, None, 3).unwrap()
+}
+
+/// Fixed mixed workload (embed / project / intersect / negate chains with
+/// their VJP mirrors): deterministic schedule, deterministic allocation
+/// counts.
+fn workload() -> QueryDag {
+    let mut dag = QueryDag::default();
+    let negs: Vec<u32> = (0..N_NEG as u32).collect();
+    for i in 0..8u32 {
+        let tree = QueryTree::instantiate(Pattern::P1, &[i % NE as u32], &[i % NR as u32])
+            .unwrap();
+        dag.add_query(&tree, (i + 1) % NE as u32, negs.clone(), Pattern::P1.name(), true)
+            .unwrap();
+    }
+    for i in 0..6u32 {
+        let tree = QueryTree::instantiate(
+            Pattern::P2,
+            &[(i + 3) % NE as u32],
+            &[i % NR as u32, (i + 1) % NR as u32],
+        )
+        .unwrap();
+        dag.add_query(&tree, i % NE as u32, negs.clone(), Pattern::P2.name(), true)
+            .unwrap();
+    }
+    for i in 0..6u32 {
+        let tree = QueryTree::instantiate(
+            Pattern::I2,
+            &[i % NE as u32, (i + 5) % NE as u32],
+            &[i % NR as u32, (i + 2) % NR as u32],
+        )
+        .unwrap();
+        dag.add_query(&tree, (i + 2) % NE as u32, negs.clone(), Pattern::I2.name(), true)
+            .unwrap();
+    }
+    for i in 0..4u32 {
+        let tree = QueryTree::instantiate(
+            Pattern::In2,
+            &[i % NE as u32, (i + 1) % NE as u32],
+            &[i % NR as u32, (i + 3) % NR as u32],
+        )
+        .unwrap();
+        dag.add_query(&tree, (i + 4) % NE as u32, negs.clone(), Pattern::In2.name(), true)
+            .unwrap();
+    }
+    dag.add_gradient_nodes();
+    dag
+}
+
+#[test]
+fn steady_state_rounds_stay_within_the_documented_alloc_budget() {
+    let _guard = serial();
+    let rt = wide_runtime();
+    let st = state(&rt);
+    let dag = workload();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    // one reused Grads so sparse-accumulator keys are warm like a real
+    // training loop's per-step accumulation
+    let mut grads = Grads::default();
+
+    // warmup: populate pool shelves, slab capacity, scratch capacity
+    let s0 = session.run(&dag, &st, &mut grads).unwrap();
+    session.run(&dag, &st, &mut grads).unwrap();
+    let rounds_per_run = s0.executions as u64;
+    assert!(rounds_per_run > 0);
+
+    const RUNS: u64 = 5;
+    let base = snapshot();
+    for _ in 0..RUNS {
+        let stats = session.run(&dag, &st, &mut grads).unwrap();
+        assert_eq!(stats.executions as u64, rounds_per_run, "schedule must be stable");
+        assert_eq!(
+            stats.pool_misses, 0,
+            "steady-state rounds must be fully served by the pool"
+        );
+        assert!(stats.pool_hits > 0);
+    }
+    let d = snapshot().delta_since(&base);
+
+    let alloc_budget = RUNS * (RUN_ALLOC_OVERHEAD + rounds_per_run * ROUND_ALLOC_BUDGET);
+    assert!(
+        d.allocs <= alloc_budget,
+        "steady state allocated {} times over {} rounds ({} runs); budget {} \
+         ({} per round + {} per run)",
+        d.allocs,
+        RUNS * rounds_per_run,
+        RUNS,
+        alloc_budget,
+        ROUND_ALLOC_BUDGET,
+        RUN_ALLOC_OVERHEAD
+    );
+    // byte form of the same gate: no tensor-sized allocations survive
+    let bytes_budget =
+        RUNS * rounds_per_run * ROUND_ALLOC_BYTES_BUDGET + RUNS * 64 * 1024;
+    assert!(
+        d.bytes <= bytes_budget,
+        "steady state allocated {} bytes; budget {}",
+        d.bytes,
+        bytes_budget
+    );
+}
+
+#[test]
+fn pooling_disabled_baseline_allocates_tensor_payloads_every_round() {
+    // the counterpart measurement: with recycling off (the pre-pool
+    // engine), per-round heap traffic includes the staging blocks and
+    // kernel outputs — orders of magnitude above the pooled byte budget
+    let _guard = serial();
+    let rt = wide_runtime();
+    let st = state(&rt);
+    let dag = workload();
+
+    let measure = |pooling: bool| -> (u64, u64, u64) {
+        let cfg = EngineConfig { pooling, ..Default::default() };
+        let mut session = EngineSession::new(&rt, cfg);
+        let mut grads = Grads::default();
+        let stats = session.run(&dag, &st, &mut grads).unwrap(); // warmup
+        let base = snapshot();
+        for _ in 0..3 {
+            let mut grads = Grads::default();
+            session.run(&dag, &st, &mut grads).unwrap();
+        }
+        let d = snapshot().delta_since(&base);
+        (d.allocs, d.bytes, 3 * stats.executions as u64)
+    };
+
+    let (pooled_allocs, pooled_bytes, rounds) = measure(true);
+    let (bare_allocs, bare_bytes, _) = measure(false);
+    assert!(
+        bare_bytes > 4 * pooled_bytes,
+        "unpooled rounds must allocate tensor payloads: {bare_bytes} vs {pooled_bytes} \
+         pooled bytes over {rounds} rounds"
+    );
+    assert!(
+        bare_allocs > pooled_allocs,
+        "unpooled rounds must allocate more often: {bare_allocs} vs {pooled_allocs}"
+    );
+}
+
+#[test]
+fn pool_reset_releases_then_rewarms() {
+    let _guard = serial();
+    let rt = wide_runtime();
+    let st = state(&rt);
+    let dag = workload();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    session.run(&dag, &st, &mut grads).unwrap();
+    session.run(&dag, &st, &mut grads).unwrap();
+    assert!(session.pool().stats().pooled_bytes > 0, "warm pool parks buffers");
+
+    // shrink: a memory-pressure hook — drop every parked buffer
+    session.pool().reset();
+    assert_eq!(session.pool().stats().pooled_bytes, 0);
+
+    // the next run re-allocates (misses), the one after is warm again
+    let stats = session.run(&dag, &st, &mut grads).unwrap();
+    assert!(stats.pool_misses > 0, "post-reset run must repopulate the pool");
+    let stats = session.run(&dag, &st, &mut grads).unwrap();
+    assert_eq!(stats.pool_misses, 0, "pool must re-warm after one run");
+}
+
+#[test]
+fn failed_runs_return_buffers_and_do_not_poison_steady_state() {
+    let _guard = serial();
+    let rt = wide_runtime();
+    let st = state(&rt);
+    let dag = workload();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    session.run(&dag, &st, &mut grads).unwrap();
+    session.run(&dag, &st, &mut grads).unwrap();
+    let parked_before = session.pool().stats().pooled_bytes;
+
+    // intersect4 has no compiled artifact: the run fails mid-DAG, after
+    // several successful rounds whose buffers must all come back
+    let bad_tree = QueryTree::Intersect(vec![
+        QueryTree::Anchor(0),
+        QueryTree::Anchor(1),
+        QueryTree::Anchor(2),
+        QueryTree::Anchor(3),
+    ]);
+    let mut bad = QueryDag::default();
+    let negs: Vec<u32> = (0..N_NEG as u32).collect();
+    bad.add_query(&bad_tree, 5, negs, "custom", true).unwrap();
+    bad.add_gradient_nodes();
+    let mut bad_grads = Grads::default();
+    assert!(session.run(&bad, &st, &mut bad_grads).is_err());
+    assert!(
+        session.pool().stats().pooled_bytes >= parked_before,
+        "the failed run must return its buffers (parked {} -> {})",
+        parked_before,
+        session.pool().stats().pooled_bytes
+    );
+
+    // steady state on the good workload survives the failure
+    let stats = session.run(&dag, &st, &mut grads).unwrap();
+    assert_eq!(stats.pool_misses, 0, "failure must not cost the pool its shelves");
+
+    // repeated failures settle too: identical failing runs stop growing
+    // the pool once their (few) shapes are parked
+    let mut bad_grads = Grads::default();
+    assert!(session.run(&bad, &st, &mut bad_grads).is_err());
+    let parked_a = session.pool().stats().pooled_bytes;
+    let mut bad_grads = Grads::default();
+    assert!(session.run(&bad, &st, &mut bad_grads).is_err());
+    assert_eq!(
+        session.pool().stats().pooled_bytes,
+        parked_a,
+        "identical failing runs must not grow the pool"
+    );
+
+    // a *mid-gather* failure: the wrong-negative-count bail fires inside
+    // the Score coalesce AFTER staging blocks were checked out — the
+    // engine's buffer-safe error discipline (`filled` + the coalesce
+    // wrapper) must hand them back, so the steady state survives this too
+    let tree = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+    let mut bad_negs = QueryDag::default();
+    bad_negs.add_query(&tree, 1, vec![0, 1], Pattern::P1.name(), true).unwrap();
+    bad_negs.add_gradient_nodes();
+    let mut g = Grads::default();
+    let err = session.run(&bad_negs, &st, &mut g).unwrap_err();
+    assert!(format!("{err:#}").contains("negatives"), "{err:#}");
+    let stats = session.run(&dag, &st, &mut grads).unwrap();
+    assert_eq!(
+        stats.pool_misses, 0,
+        "a gather-path failure must not cost the pool its shelves"
+    );
+}

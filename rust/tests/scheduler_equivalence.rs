@@ -120,6 +120,9 @@ struct EquivCase {
     delay_ms: u64,
     /// 0 = no fusion, 1 = pure table source, 2 = encoder-executing source
     fusion: u8,
+    /// arena recycling on (the default hot path) or off (the pre-pool
+    /// baseline) — every case also cross-checks the flipped setting
+    pooling: bool,
 }
 
 fn build_runtime(case: &EquivCase) -> MockRuntime {
@@ -155,7 +158,12 @@ fn check_case(case: &EquivCase) -> Result<(), String> {
     let rt = build_runtime(case);
     let st = mock_state(&rt);
     let dag = case.set.train_dag();
-    let cfg = |pipeline: bool| EngineConfig { b_max: case.b_max, pipeline, ..Default::default() };
+    let cfg = |pipeline: bool| EngineConfig {
+        b_max: case.b_max,
+        pipeline,
+        pooling: case.pooling,
+        ..Default::default()
+    };
 
     with_fusion_source(&rt, case.fusion, |semantic| {
         let pipe = run_one(&rt, &dag, &st, cfg(true), semantic)?;
@@ -166,7 +174,9 @@ fn check_case(case: &EquivCase) -> Result<(), String> {
         }
         // session-reuse leg: the same DAG twice through ONE warm session
         // must match the per-run engines bit for bit on both runs — the
-        // worker, channels, and any state they carry are run-invariant
+        // worker, channels, the tensor pool and the repr slab are
+        // run-invariant (the second run executes entirely from recycled
+        // buffers when pooling is on)
         let mut session = match semantic {
             Some(s) => EngineSession::with_semantic(&rt, cfg(true), s),
             None => EngineSession::new(&rt, cfg(true)),
@@ -179,6 +189,16 @@ fn check_case(case: &EquivCase) -> Result<(), String> {
             assert_equivalent(&(stats, grads), &sync)
                 .map_err(|e| format!("session run {rep}: {e}"))?;
         }
+        // pooling cross-check: flipping the recycler must not change a bit
+        let flipped = EngineConfig {
+            b_max: case.b_max,
+            pipeline: true,
+            pooling: !case.pooling,
+            ..Default::default()
+        };
+        let other = run_one(&rt, &dag, &st, flipped, semantic)?;
+        assert_equivalent(&other, &sync)
+            .map_err(|e| format!("pooling={} leg: {e}", !case.pooling))?;
         Ok(())
     })
 }
@@ -213,7 +233,8 @@ fn pipelined_equals_sync_across_the_configuration_matrix() {
             let delay_ms =
                 if stress() && rng.chance(0.5) { 1 } else { u64::from(rng.chance(0.1)) };
             let fusion = rng.below(3) as u8;
-            EquivCase { set, caps, b_max, delay_ms, fusion }
+            let pooling = !rng.chance(0.25);
+            EquivCase { set, caps, b_max, delay_ms, fusion, pooling }
         },
         |case| {
             // shrink the workload only; the config axes stay fixed so the
@@ -257,6 +278,7 @@ fn forced_mis_speculation_is_absorbed_with_and_without_fusion() {
             b_max: 0,
             delay_ms: 0,
             fusion,
+            pooling: true,
         };
         let rt = build_runtime(&case);
         let st = mock_state(&rt);
