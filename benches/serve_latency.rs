@@ -1,0 +1,87 @@
+//! Serve-plane bench: QPS + latency percentiles per micro-batching window,
+//! on the mock runtime (no XLA). See `bench_harness::serve_latency` for the
+//! methodology. Gated (the CI smoke runs this): micro-batched windows
+//! (≥ 16) must clear **2× the batch=1 QPS baseline**, fused batches must
+//! actually form, and every request must be answered.
+//!
+//! Env knobs: `NGDB_SERVE_QUERIES` (default 256), `NGDB_SERVE_CLIENTS` (8),
+//! `NGDB_SERVE_WORKERS` (2), `NGDB_SERVE_DELAY_US` (300),
+//! `NGDB_SERVE_PATTERNS` (comma-separated pattern names, e.g. `1p,2i,ip`),
+//! `NGDB_SERVE_JSON` (output path, default `BENCH_serve_latency.json`).
+
+use ngdb_zoo::bench_harness::knob;
+use ngdb_zoo::bench_harness::serve_latency::{run, write_json, ServeBenchOpts};
+use ngdb_zoo::query::Pattern;
+
+fn main() {
+    let mut opts = ServeBenchOpts {
+        n_requests: knob("NGDB_SERVE_QUERIES", 256.0) as usize,
+        clients: knob("NGDB_SERVE_CLIENTS", 8.0) as usize,
+        workers: knob("NGDB_SERVE_WORKERS", 2.0) as usize,
+        delay_us: knob("NGDB_SERVE_DELAY_US", 300.0) as u64,
+        ..Default::default()
+    };
+    if let Ok(names) = std::env::var("NGDB_SERVE_PATTERNS") {
+        // textual pattern selection via Pattern::from_str
+        opts.patterns = names
+            .split(',')
+            .map(|s| s.trim().parse::<Pattern>())
+            .collect::<Result<Vec<_>, _>>()
+            .unwrap_or_else(|e| panic!("NGDB_SERVE_PATTERNS: {e:#}"));
+    }
+
+    let report = run(&opts).unwrap_or_else(|e| panic!("serve_latency failed: {e:#}"));
+
+    println!(
+        "\nserve_latency: {} requests, {} clients, {} workers, {} entities, \
+         {} us/launch",
+        report.n_requests,
+        report.opts.clients,
+        report.opts.workers,
+        report.n_entities,
+        report.opts.delay_us
+    );
+    println!(
+        "{:>7}  {:>9}  {:>10}  {:>9}  {:>9}  {:>9}  {:>10}",
+        "window", "answered", "qps", "p50 ms", "p95 ms", "p99 ms", "mean batch"
+    );
+    for w in &report.windows {
+        println!(
+            "{:>7}  {:>9}  {:>10.1}  {:>9.3}  {:>9.3}  {:>9.3}  {:>10.2}",
+            w.window, w.answered, w.qps, w.p50_ms, w.p95_ms, w.p99_ms, w.mean_batch
+        );
+    }
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    let base = report.baseline_qps();
+    assert!(base > 0.0, "the batch=1 baseline must have been measured");
+    for w in &report.windows {
+        assert_eq!(
+            w.answered, report.n_requests,
+            "window {}: every submitted request must be answered",
+            w.window
+        );
+        if w.window >= 16 {
+            assert!(
+                w.qps >= 2.0 * base,
+                "window {} must clear 2x the batch=1 baseline: {:.1} vs {:.1} qps",
+                w.window,
+                w.qps,
+                base
+            );
+            assert!(
+                w.mean_batch > 1.5,
+                "window {}: cross-request fusion never formed (mean batch {:.2})",
+                w.window,
+                w.mean_batch
+            );
+        }
+    }
+    let best = report.windows.iter().map(|w| w.qps).fold(0.0f64, f64::max);
+    println!("\n  speedup  : {:.2}x best-window vs batch=1 QPS", best / base);
+
+    let path = std::env::var("NGDB_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve_latency.json".to_string());
+    write_json(&report, &path).unwrap_or_else(|e| panic!("{e:#}"));
+    println!("  wrote {path}");
+}

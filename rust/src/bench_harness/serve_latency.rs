@@ -1,0 +1,244 @@
+//! serve_latency — online query serving under cross-request operator-level
+//! micro-batching, on the mock runtime (no XLA).
+//!
+//! For each batching window `max_batch ∈ {1, 4, 16, 64}` the harness
+//! stands up a [`QueryService`] over one published [`ModelSnapshot`],
+//! fires `n_requests` grounded queries from `clients` concurrent client
+//! threads (async submit, then wait — so windows genuinely fill), and
+//! reports wall-clock QPS plus p50/p95/p99 end-to-end latency. Window 1
+//! is the no-fusion baseline: every request lowers, executes and ranks
+//! alone, exactly like a naive per-query server. Larger windows fuse
+//! concurrent requests into one forward DAG (the paper's operator-level
+//! fusion applied *across users*), amortizing artifact launches — with a
+//! per-launch delay standing in for device compute, throughput scales
+//! with the fusion factor.
+//!
+//! The eval artifact is widened (`with_eval_dims`) so rank-against-all
+//! launches also fuse across the window; the unit-test default (block 2,
+//! chunk 4) would make ranking launch cost identical in every window and
+//! mask the forward-plane win.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kg::KgSpec;
+use crate::model::{ModelSnapshot, ModelState, SnapshotCell};
+use crate::query::Pattern;
+use crate::runtime::{MockRuntime, Runtime};
+use crate::sampler::ground;
+use crate::serve::{QueryRequest, QueryService, ServeConfig};
+use crate::util::rng::Rng;
+use crate::util::stats::percentile;
+
+/// Knobs of one harness run.
+#[derive(Debug, Clone)]
+pub struct ServeBenchOpts {
+    /// total requests per measured window
+    pub n_requests: usize,
+    /// concurrent client threads
+    pub clients: usize,
+    /// forward-session worker threads
+    pub workers: usize,
+    /// per-artifact-launch delay (device-compute stand-in), microseconds
+    pub delay_us: u64,
+    /// batching windows to sweep
+    pub windows: Vec<usize>,
+    /// query patterns to sample (textual via `Pattern::from_str`)
+    pub patterns: Vec<Pattern>,
+    pub seed: u64,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> ServeBenchOpts {
+        ServeBenchOpts {
+            n_requests: 256,
+            clients: 8,
+            workers: 2,
+            delay_us: 300,
+            windows: vec![1, 4, 16, 64],
+            patterns: vec![Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Ip],
+            seed: 17,
+        }
+    }
+}
+
+/// Measured outcome of one batching window.
+#[derive(Debug, Clone)]
+pub struct WindowReport {
+    pub window: usize,
+    pub answered: usize,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// mean fused-DAG size over all answers (→ window when saturated)
+    pub mean_batch: f64,
+}
+
+/// Full sweep report.
+#[derive(Debug, Clone)]
+pub struct ServeLatencyReport {
+    pub opts: ServeBenchOpts,
+    pub n_entities: usize,
+    /// requests actually sampled (== opts.n_requests unless grounding
+    /// rejected some draws) — every window serves exactly this set
+    pub n_requests: usize,
+    pub windows: Vec<WindowReport>,
+}
+
+impl ServeLatencyReport {
+    /// QPS of the `window == 1` baseline (0.0 if it was not swept).
+    pub fn baseline_qps(&self) -> f64 {
+        self.windows.iter().find(|w| w.window == 1).map_or(0.0, |w| w.qps)
+    }
+}
+
+/// Run the sweep. Mock-only (like micro_scheduler): serving exercises the
+/// coordinator, not artifact numerics, so no XLA is needed.
+pub fn run(opts: &ServeBenchOpts) -> Result<ServeLatencyReport> {
+    let kg = KgSpec::preset("toy", 1.0)?.generate()?;
+    // wide-ish dims so gathers are real work; one eval block ranks 32
+    // queries against all entities in a single chunked launch
+    let rt: Arc<MockRuntime> = Arc::new(
+        MockRuntime::with_config(32, 2, &[4, 16, 64])
+            .with_eval_dims(32, kg.n_entities.next_power_of_two())
+            .with_exec_delay(Duration::from_micros(opts.delay_us)),
+    );
+    let state = ModelState::init(
+        rt.manifest(),
+        "mock",
+        kg.n_entities,
+        kg.n_relations,
+        None,
+        opts.seed,
+    )?;
+
+    // pre-sample one shared request set so every window serves identical work
+    let mut rng = Rng::new(opts.seed ^ 0x5E7);
+    let mut requests: Vec<QueryRequest> = Vec::with_capacity(opts.n_requests);
+    let mut guard = 0usize;
+    while requests.len() < opts.n_requests && guard < opts.n_requests * 40 {
+        guard += 1;
+        let p = *rng.choice(&opts.patterns);
+        if let Some(g) = ground(&kg, &mut rng, p) {
+            requests.push(QueryRequest { tree: g.tree, filter: vec![g.answer], top_k: 10 });
+        }
+    }
+    if requests.is_empty() || opts.clients == 0 || opts.workers == 0 {
+        anyhow::bail!(
+            "degenerate bench config: {} requests sampled, {} clients, {} workers",
+            requests.len(),
+            opts.clients,
+            opts.workers
+        );
+    }
+    let n_requests = requests.len();
+
+    let mut windows = Vec::with_capacity(opts.windows.len());
+    for &window in &opts.windows {
+        let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+        let service = QueryService::start(
+            Arc::clone(&rt) as Arc<dyn Runtime>,
+            cell,
+            ServeConfig {
+                workers: opts.workers,
+                max_batch: window,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 2 * n_requests,
+                default_top_k: 10,
+                ..Default::default()
+            },
+        );
+        let client = service.client();
+
+        let t0 = Instant::now();
+        let per_request: Vec<(f64, usize)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..opts.clients)
+                .map(|c| {
+                    let client = client.clone();
+                    let shard: Vec<QueryRequest> = requests
+                        .iter()
+                        .skip(c)
+                        .step_by(opts.clients)
+                        .cloned()
+                        .collect();
+                    s.spawn(move || -> Result<Vec<(f64, usize)>> {
+                        // submit the whole shard first so concurrent
+                        // requests exist for the batcher to fuse
+                        let mut pending = Vec::with_capacity(shard.len());
+                        for req in shard {
+                            pending.push(client.submit(req)?);
+                        }
+                        pending
+                            .into_iter()
+                            .map(|p| {
+                                let a = p.wait()?;
+                                Ok((a.latency.as_secs_f64(), a.batch_size))
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread panicked"))
+                .collect::<Result<Vec<_>>>()
+                .map(|per_client| per_client.into_iter().flatten().collect())
+        })
+        .context("serving the request sweep")?;
+        let wall = t0.elapsed().as_secs_f64();
+        drop(client);
+        service.shutdown();
+
+        let lat_ms: Vec<f64> = per_request.iter().map(|(l, _)| l * 1e3).collect();
+        let mean_batch = per_request.iter().map(|(_, b)| *b as f64).sum::<f64>()
+            / per_request.len().max(1) as f64;
+        windows.push(WindowReport {
+            window,
+            answered: per_request.len(),
+            qps: per_request.len() as f64 / wall.max(1e-9),
+            p50_ms: percentile(&lat_ms, 50.0),
+            p95_ms: percentile(&lat_ms, 95.0),
+            p99_ms: percentile(&lat_ms, 99.0),
+            mean_batch,
+        });
+    }
+
+    Ok(ServeLatencyReport {
+        opts: opts.clone(),
+        n_entities: kg.n_entities,
+        n_requests,
+        windows,
+    })
+}
+
+/// Hand-rolled JSON artifact (same dependency-free style as
+/// `BENCH_micro_scheduler.json`).
+pub fn write_json(report: &ServeLatencyReport, path: &str) -> Result<()> {
+    let mut rows = String::new();
+    for (i, w) in report.windows.iter().enumerate() {
+        let sep = if i + 1 < report.windows.len() { "," } else { "" };
+        rows.push_str(&format!(
+            "    {{\"window\": {}, \"answered\": {}, \"qps\": {:.1}, \
+             \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \"p99_ms\": {:.3}, \
+             \"mean_batch\": {:.2}}}{sep}\n",
+            w.window, w.answered, w.qps, w.p50_ms, w.p95_ms, w.p99_ms, w.mean_batch
+        ));
+    }
+    let base = report.baseline_qps();
+    let best = report.windows.iter().map(|w| w.qps).fold(0.0f64, f64::max);
+    let json = format!(
+        "{{\n  \"bench\": \"serve_latency\",\n  \"config\": {{\"requests\": {}, \
+         \"clients\": {}, \"workers\": {}, \"delay_us\": {}, \"entities\": {}}},\n  \
+         \"windows\": [\n{rows}  ],\n  \"speedup_best_vs_batch1\": {:.3}\n}}\n",
+        report.n_requests,
+        report.opts.clients,
+        report.opts.workers,
+        report.opts.delay_us,
+        report.n_entities,
+        best / base.max(1e-9),
+    );
+    std::fs::write(path, json).with_context(|| format!("writing {path}"))
+}

@@ -5,12 +5,21 @@
 //! (Predictive Answers). We rank every hard answer against all entities,
 //! filtering out the other true answers, via the chunked `eval` artifact
 //! (rank-against-all logits, Eq. 6's HBM-friendly form).
-
-
+//!
+//! Ranking runs on the engine's **forward plane**
+//! ([`EngineSession::run_forward`]): no `Grads`, no gradient nodes — the
+//! pre-split implementation threaded a dummy accumulator through the
+//! training path. The rank-against-all kernel itself lives in
+//! [`EntityRanker`], shared verbatim with the serve plane's
+//! [`crate::serve::QueryService`], so eval and online serving are one code
+//! path. Every block buffer (query block, entity chunks, score outputs)
+//! circulates through the session's [`TensorPool`] — steady-state eval and
+//! serve blocks perform no tensor-sized heap allocations, pinned by
+//! `rust/tests/alloc_regression.rs` against the budgets below.
 
 use anyhow::Result;
 
-use crate::exec::{EngineConfig, EngineSession, Grads};
+use crate::exec::{EngineConfig, EngineSession, TensorPool};
 use crate::kg::KgStore;
 use crate::model::ModelState;
 use crate::query::{Pattern, QueryDag, QueryTree};
@@ -20,6 +29,18 @@ use crate::semantic::SemanticSource;
 use crate::util::rng::Rng;
 
 use super::symbolic;
+
+/// Steady-state heap allocations one [`EntityRanker::score_all`] call may
+/// perform beyond the per-launch term — small bookkeeping only: the
+/// artifact name, the input-list spine and the id scratch all live in the
+/// ranker and recycle across calls. A deliberate over-bound, like
+/// [`crate::exec::arena::ROUND_ALLOC_BUDGET`].
+pub const RANK_ALLOC_OVERHEAD: u64 = 16;
+
+/// Steady-state heap allocations per eval-artifact launch inside
+/// [`EntityRanker::score_all`]: the kernel-output `Vec` spine plus pool
+/// shelf churn (the tensors themselves recycle through the pool).
+pub const RANK_ALLOC_PER_EXEC: u64 = 12;
 
 /// One evaluation query with its answer split.
 #[derive(Debug, Clone)]
@@ -42,6 +63,113 @@ pub struct EvalReport {
     pub n_answers: usize,
     /// per-pattern (mrr, hits@10, n)
     pub per_pattern: Vec<(Pattern, f64, f64, usize)>,
+}
+
+/// Rank query reprs against **all** entities via the chunked `eval`
+/// artifact — the one scoring kernel behind both offline evaluation and
+/// the online [`crate::serve::QueryService`].
+///
+/// Reprs are processed in blocks of the compiled `eval_b` bucket; entities
+/// stream through in `eval_chunk`-row chunks. All staging (the query
+/// block, each entity chunk) and every kernel output recycles through the
+/// caller's [`TensorPool`]; the chunk-id scratch lives in the ranker, so a
+/// warm ranker's steady-state allocations are bounded by
+/// [`RANK_ALLOC_OVERHEAD`] + launches × [`RANK_ALLOC_PER_EXEC`].
+#[derive(Debug, Default)]
+pub struct EntityRanker {
+    /// entity-id scratch for the current chunk (capacity kept across calls)
+    ids: Vec<u32>,
+    /// artifact input-list spine, recycled across blocks and calls
+    inputs: Vec<HostTensor>,
+    /// cached artifact name + its (model, eval_b) key — rebuilt only when
+    /// the served model changes, so steady-state calls never format
+    eval_name: String,
+    eval_model: String,
+    eval_b: usize,
+}
+
+impl EntityRanker {
+    pub fn new() -> EntityRanker {
+        EntityRanker::default()
+    }
+
+    /// Fill `scores` with `scores[qi * n_entities + e]` = score of entity
+    /// `e` for `reprs[qi]` (resized + overwritten; capacity reused).
+    pub fn score_all(
+        &mut self,
+        rt: &dyn Runtime,
+        state: &ModelState,
+        reprs: &[Vec<f32>],
+        pool: &TensorPool,
+        scores: &mut Vec<f32>,
+    ) -> Result<()> {
+        let dims = &rt.manifest().dims;
+        let (eval_b, chunk) = (dims.eval_b, dims.eval_chunk);
+        let n_ent = state.entities.rows;
+        // resize only (no clear-then-refill): the chunk sweep below
+        // overwrites every element — all qi of every block, all e in
+        // 0..n_ent — so stale warm-capacity contents never survive and the
+        // double memset over a |queries| x |entities| buffer is avoided
+        scores.resize(reprs.len() * n_ent, 0.0);
+        if self.eval_model != state.model || self.eval_b != eval_b {
+            self.eval_name = format!("{}_eval_fwd_b{eval_b}", state.model);
+            self.eval_model.clear();
+            self.eval_model.push_str(&state.model);
+            self.eval_b = eval_b;
+        }
+
+        for (bi, block) in reprs.chunks(eval_b).enumerate() {
+            // Q block [eval_b, repr_dim] (pad rows zero), pushed into the
+            // input list once and reused across every entity chunk — the
+            // pre-pool implementation cloned it per chunk
+            debug_assert!(self.inputs.is_empty());
+            let mut qb = pool.checkout_dirty(&[eval_b, state.repr_dim]);
+            for (i, r) in block.iter().enumerate() {
+                qb.row_mut(i).copy_from_slice(r);
+            }
+            qb.zero_rows_from(block.len());
+            self.inputs.push(qb);
+
+            // buffer-safe error discipline (mirrors the engine's): the
+            // chunk is reclaimed before `exec` is inspected, and the query
+            // block goes back on the shelf on BOTH exits — a failed launch
+            // must not bleed a pooled buffer from a long-lived serve worker
+            let mut base = 0usize;
+            let mut failure = None;
+            while base < n_ent {
+                self.ids.clear();
+                self.ids.extend((base..(base + chunk).min(n_ent)).map(|e| e as u32));
+                self.inputs.push(state.entities.gather_pooled(&self.ids, chunk, pool));
+                // gated: serve workers rank concurrently from N threads —
+                // the runtime concurrency contract serializes submissions
+                // on backends that cannot take them in parallel
+                let exec = rt.execute_pooled_gated(&self.eval_name, &self.inputs, pool);
+                let ents = self.inputs.pop().expect("entity chunk was just pushed");
+                pool.checkin(ents);
+                let mut out = match exec {
+                    Ok(out) => out,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                };
+                let s = &out[0];
+                for qi in 0..block.len() {
+                    for (j, &e) in self.ids.iter().enumerate() {
+                        scores[(bi * eval_b + qi) * n_ent + e as usize] =
+                            s.data[qi * chunk + j];
+                    }
+                }
+                pool.checkin_all(&mut out);
+                base += chunk;
+            }
+            pool.checkin(self.inputs.pop().expect("query block was pushed first"));
+            if let Some(e) = failure {
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Sample `n` eval queries per pattern that have at least one hard answer.
@@ -86,7 +214,7 @@ pub fn evaluate(
     semantic: Option<&dyn SemanticSource>,
 ) -> Result<EvalReport> {
     let dims = &rt.manifest().dims;
-    let (eval_b, chunk) = (dims.eval_b, dims.eval_chunk);
+    let eval_b = dims.eval_b;
     let supports_neg = crate::config::model_supports_negation(&state.model);
     // one warm session for every forward block (the old per-block
     // Engine::run_with_outputs spawned a gather worker per block)
@@ -94,48 +222,32 @@ pub fn evaluate(
         Some(s) => EngineSession::with_semantic(rt, EngineConfig::default(), s),
         None => EngineSession::new(rt, EngineConfig::default()),
     };
+    let mut ranker = EntityRanker::new();
+    let n_ent = state.entities.rows;
+    // block scratch recycled across blocks (scores/filtered) — the
+    // pre-split loop allocated both fresh per block/query
+    let mut scores: Vec<f32> = Vec::new();
+    let mut filtered: Vec<bool> = vec![false; n_ent];
     let mut report = EvalReport::default();
     let mut per: std::collections::BTreeMap<Pattern, (f64, f64, usize)> = Default::default();
 
     for block in queries.chunks(eval_b) {
-        // forward-only fused DAG for this block of query roots
+        // forward-only fused DAG for this block of query roots — the
+        // forward plane: no Grads, no gradient nodes
         let mut dag = QueryDag::default();
         let mut roots = Vec::with_capacity(block.len());
         for q in block {
             roots.push(dag.add_query_eval(&q.tree, supports_neg)?);
         }
-        let mut grads = Grads::default();
-        let (_, reprs) = session.run_with_outputs(&dag, state, &mut grads, &roots)?;
+        let (_, reprs) = session.run_forward(&dag, state, &roots)?;
 
-        // Q block [eval_b, repr_dim] (pad rows zero)
-        let mut qb = HostTensor::zeros(vec![eval_b, state.repr_dim]);
-        for (i, r) in reprs.iter().enumerate() {
-            qb.row_mut(i).copy_from_slice(r);
-        }
-
-        // rank against all entities, chunked
-        let n_ent = state.entities.rows;
-        let mut scores = vec![0.0f32; block.len() * n_ent];
-        let eval_name = format!("{}_eval_fwd_b{eval_b}", state.model);
-        let mut base = 0usize;
-        while base < n_ent {
-            let ids: Vec<u32> =
-                (base..(base + chunk).min(n_ent)).map(|e| e as u32).collect();
-            let ents = state.entities.gather(&ids, chunk);
-            let out = rt.execute(&eval_name, &[qb.clone(), ents])?;
-            let s = &out[0];
-            for (qi, _) in block.iter().enumerate() {
-                for (j, &e) in ids.iter().enumerate() {
-                    scores[qi * n_ent + e as usize] = s.data[qi * chunk + j];
-                }
-            }
-            base += chunk;
-        }
+        // rank against all entities (chunked, pooled)
+        ranker.score_all(rt, state, &reprs, session.pool(), &mut scores)?;
 
         // filtered ranks
         for (qi, q) in block.iter().enumerate() {
             let row = &scores[qi * n_ent..(qi + 1) * n_ent];
-            let mut filtered: Vec<bool> = vec![false; n_ent];
+            filtered.iter_mut().for_each(|f| *f = false);
             for &e in q.easy.iter().chain(&q.hard) {
                 filtered[e as usize] = true;
             }

@@ -22,6 +22,15 @@
 //!    the VJP artifact), relation-row and entity-row grads (scatter-add),
 //!    and the loss from Score nodes.
 //!
+//! Step 5 only exists on the *training plane*. The same scheduler, pools,
+//! gather worker and arena also drive a first-class *forward plane*
+//! ([`super::EngineSession::run_forward`] / [`super::ForwardSession`]): no
+//! [`Grads`] parameter, no VJP mirror staging, no grad-scatter — the seam
+//! is [`GradSink`], which on the forward plane turns any gradient-producing
+//! node into a hard error. Eval and the serve-side
+//! [`crate::serve::QueryService`] both run on it, over immutable
+//! [`crate::model::ModelSnapshot`]s.
+//!
 //! # Two-stage pipelining
 //!
 //! The hot loop is split into a *gather* stage (input coalescing + padding,
@@ -314,6 +323,34 @@ fn accum_gout(
         }
     }
     Ok(())
+}
+
+/// Where a run's gradient-producing nodes (Score heads, VJP mirrors)
+/// deposit their output — the seam between the training plane and the
+/// forward plane.
+///
+/// The training plane carries a borrow of the step's accumulators; the
+/// forward plane carries nothing, and *reaching* a gradient-producing node
+/// there is a hard error rather than a silent no-op: forward DAGs are
+/// lowered with [`QueryDag::add_query_eval`] and never see
+/// `add_gradient_nodes`, so no Score/VJP node can exist, no VJP mirror is
+/// ever staged, and the run loop performs no grad-scatter at all.
+pub(crate) enum GradSink<'g> {
+    Train(&'g mut Grads),
+    Forward,
+}
+
+impl GradSink<'_> {
+    /// The training accumulators, or a hard error on the forward plane.
+    fn train(&mut self, op: OpKind) -> Result<&mut Grads> {
+        match self {
+            GradSink::Train(g) => Ok(&mut **g),
+            GradSink::Forward => bail!(
+                "forward plane cannot execute gradient-producing node {}",
+                op.name()
+            ),
+        }
+    }
 }
 
 /// One scheduling round with its inputs fully coalesced — the unit handed
@@ -719,10 +756,12 @@ impl<'a> Engine<'a> {
     }
 
     /// Stage 2 (post-execute): scatter artifact outputs into the slab and
-    /// the gradient accumulators. Output rows are appended to the bump
-    /// `slab` (the pre-arena engine allocated one `Vec` per node here);
-    /// only after the caller has received any in-flight gather response may
-    /// this run — `push_row` can reallocate the slab's backing store.
+    /// — on the training plane — the gradient accumulators. Output rows are
+    /// appended to the bump `slab` (the pre-arena engine allocated one
+    /// `Vec` per node here); only after the caller has received any
+    /// in-flight gather response may this run — `push_row` can reallocate
+    /// the slab's backing store. Score/VJP rounds demand
+    /// [`GradSink::Train`]; the forward plane never schedules them.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn scatter_batch(
         &self,
@@ -733,7 +772,7 @@ impl<'a> Engine<'a> {
         storage: &mut [Option<NodeOut>],
         slab: &mut ReprSlab,
         live_bytes: &mut usize,
-        grads: &mut Grads,
+        sink: &mut GradSink<'_>,
         stats: &mut StepStats,
         pat_loss: &mut HashMap<&'static str, (f64, usize)>,
     ) -> Result<()> {
@@ -764,6 +803,7 @@ impl<'a> Engine<'a> {
                 }
             }
             OpKind::Score => {
+                let grads = sink.train(prep.op)?;
                 let loss = outputs[0].data[0] as f64;
                 stats.loss += loss;
                 let (g_q, g_pos, g_neg) = (&outputs[1], &outputs[2], &outputs[3]);
@@ -789,6 +829,7 @@ impl<'a> Engine<'a> {
                 }
             }
             OpKind::Vjp(_) => {
+                let grads = sink.train(prep.op)?;
                 let n_params = meta.param_args().count();
                 // batch-summed dense param grads
                 for (pi, pa) in meta.param_args().enumerate() {

@@ -15,4 +15,4 @@ pub mod session;
 pub use arena::{PoolStats, ReprSlab, SlabRange, TensorPool};
 pub use engine::{Engine, EngineConfig, Grads, StepStats};
 pub use pools::OperatorPools;
-pub use session::{worker_spawns_total, EngineSession};
+pub use session::{worker_spawns_total, EngineSession, ForwardSession};

@@ -62,7 +62,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::arena::{ReprSlab, TensorPool};
-use super::engine::{Engine, EngineConfig, Grads, NodeOut, PreparedBatch, StepStats};
+use super::engine::{Engine, EngineConfig, GradSink, Grads, NodeOut, PreparedBatch, StepStats};
 use super::pools::OperatorPools;
 use crate::model::state::ModelState;
 use crate::query::{OpKind, QueryDag, NO_MIRROR};
@@ -378,6 +378,48 @@ impl<'a> EngineSession<'a> {
         grads: &mut Grads,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
+        self.run_inner(dag, state, GradSink::Train(grads), wanted)
+    }
+
+    /// The forward plane: execute a **forward-only** DAG — lowered with
+    /// [`QueryDag::add_query_eval`], `add_gradient_nodes` never called — and
+    /// return the reprs of the `wanted` roots. No [`Grads`] parameter, no
+    /// VJP mirror staging, no grad-scatter: the run is a pure read of
+    /// `state`, driven by the same Max-Fillness scheduler, pools, gather
+    /// worker and arena as training (the `forward_parity` suite proves the
+    /// reprs bitwise identical to the training path's). Because nothing is
+    /// accumulated, many sessions can serve one immutable state (a
+    /// [`crate::model::ModelSnapshot`]) from many threads — see
+    /// [`ForwardSession`] and [`crate::serve::QueryService`].
+    pub fn run_forward(
+        &mut self,
+        dag: &QueryDag,
+        state: &ModelState,
+        wanted: &[u32],
+    ) -> Result<(StepStats, Vec<Vec<f32>>)> {
+        if let Some(node) = dag
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, OpKind::Score | OpKind::Vjp(_)))
+        {
+            bail!(
+                "forward plane requires a forward-only DAG (lower with \
+                 add_query_eval; found a {} node)",
+                node.op.name()
+            );
+        }
+        self.run_inner(dag, state, GradSink::Forward, wanted)
+    }
+
+    /// The shared run loop behind both planes; `sink` decides whether
+    /// gradient-producing rounds accumulate (training) or error (forward).
+    fn run_inner(
+        &mut self,
+        dag: &QueryDag,
+        state: &ModelState,
+        mut sink: GradSink<'_>,
+        wanted: &[u32],
+    ) -> Result<(StepStats, Vec<Vec<f32>>)> {
         // disjoint field borrows: the core is read-only, the arena pieces
         // are mutated, the pool is shared with the worker
         let EngineSession { core, worker, pool, slab, scratch } = self;
@@ -505,7 +547,7 @@ impl<'a> EngineSession<'a> {
 
             // -- scatter outputs, account padding, reclaim eagerly
             if let Err(e) = engine.scatter_batch(
-                dag, state, &prep, &outputs, storage, slab, &mut live_bytes, grads,
+                dag, state, &prep, &outputs, storage, slab, &mut live_bytes, &mut sink,
                 &mut stats, pat_loss,
             ) {
                 pool.checkin_all(&mut prep.inputs);
@@ -584,8 +626,10 @@ impl<'a> EngineSession<'a> {
             };
         }
 
-        grads.loss += stats.loss;
-        grads.n_queries += stats.n_queries;
+        if let GradSink::Train(grads) = &mut sink {
+            grads.loss += stats.loss;
+            grads.n_queries += stats.n_queries;
+        }
         stats.per_pattern_loss = pat_loss.iter().map(|(k, &(l, c))| (*k, l, c)).collect();
         let ps = pool.stats();
         stats.pool_hits = ps.hits - pool_base.hits;
@@ -609,6 +653,57 @@ impl Drop for EngineSession<'_> {
             drop(w.done_rx);
             let _ = w.handle.join();
         }
+    }
+}
+
+/// A forward-only execution session over immutable [`ModelSnapshot`]s —
+/// the serve plane's per-worker handle.
+///
+/// Wraps an [`EngineSession`] but rules the training surface out at the
+/// type level: there is no way to hand it a [`Grads`], an optimizer, or a
+/// gradient DAG — just fused forward runs ([`EngineSession::run_forward`])
+/// over an `Arc`-shared snapshot. Many forward sessions (one per serve
+/// worker thread) read one published snapshot concurrently; each owns its
+/// own gather worker, tensor pool, repr slab and run scratch, so workers
+/// never contend on arena state.
+pub struct ForwardSession<'a> {
+    inner: EngineSession<'a>,
+}
+
+impl<'a> ForwardSession<'a> {
+    pub fn new(rt: &'a dyn Runtime, cfg: EngineConfig) -> ForwardSession<'a> {
+        ForwardSession { inner: EngineSession::new(rt, cfg) }
+    }
+
+    /// Forward session with semantic fusion (fused `EmbedE` artifacts).
+    pub fn with_semantic(
+        rt: &'a dyn Runtime,
+        cfg: EngineConfig,
+        source: &'a dyn crate::semantic::SemanticSource,
+    ) -> ForwardSession<'a> {
+        ForwardSession { inner: EngineSession::with_semantic(rt, cfg, source) }
+    }
+
+    /// Execute a forward-only DAG over `snapshot`, returning telemetry and
+    /// the reprs of the `wanted` roots.
+    pub fn run(
+        &mut self,
+        dag: &QueryDag,
+        snapshot: &crate::model::ModelSnapshot,
+        wanted: &[u32],
+    ) -> Result<(StepStats, Vec<Vec<f32>>)> {
+        self.inner.run_forward(dag, snapshot.state(), wanted)
+    }
+
+    /// The session's buffer recycler (shared with ranking helpers).
+    pub fn pool(&self) -> &TensorPool {
+        self.inner.pool()
+    }
+
+    /// Worker threads this session owns (1 pipelined, 0 sync) — constant
+    /// over its lifetime, like [`EngineSession::worker_spawns`].
+    pub fn worker_spawns(&self) -> usize {
+        self.inner.worker_spawns()
     }
 }
 

@@ -27,6 +27,7 @@ pub mod query;
 pub mod runtime;
 pub mod sampler;
 pub mod semantic;
+pub mod serve;
 pub mod train;
 pub mod util;
 

@@ -1,6 +1,9 @@
 //! Model-state layer: host-resident embedding tables and dense operator
-//! parameters for each backbone model.
+//! parameters for each backbone model, plus the immutable
+//! [`ModelSnapshot`]s the serve plane reads.
 
+pub mod snapshot;
 pub mod state;
 
+pub use snapshot::{ModelSnapshot, SnapshotCell};
 pub use state::{EmbeddingTable, ModelState, ParamTensor};

@@ -1,0 +1,190 @@
+//! Immutable model snapshots — the handoff from the training plane to the
+//! serve plane.
+//!
+//! A trainer mutates one [`ModelState`] in place; serving needs a view of
+//! those weights that (a) never changes under a reader's feet, (b) can be
+//! read from many threads at once, and (c) does not drag the optimizer's
+//! Adam moments along (two extra copies of every table that forward passes
+//! never touch). [`ModelSnapshot::capture`] produces exactly that: a
+//! moment-free deep copy of the embedding tables + dense params, frozen at
+//! the optimizer step it was taken.
+//!
+//! [`SnapshotCell`] is the publish point. The trainer calls
+//! [`SnapshotCell::publish`] after `optimize` (see
+//! [`crate::train::Trainer::publish_snapshot`]); serve workers call
+//! [`SnapshotCell::load`] to pin the current snapshot for one micro-batch.
+//! The swap itself is one `Arc` store under a short write lock — readers
+//! mid-batch keep their pinned `Arc` alive, so a publish never tears an
+//! in-flight answer: every response is computed against exactly one
+//! published snapshot, and old snapshots free themselves when the last
+//! reader drops.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock};
+
+use super::state::{EmbeddingTable, ModelState, ParamTensor};
+
+/// An immutable, share-from-many-threads view of one model's weights:
+/// embedding tables + dense params, **no Adam moments** (the `m`/`v`
+/// vectors are empty, making a snapshot ~1/3 the resident size of the
+/// training state). The engine's forward plane never reads moments, so a
+/// forward run over a snapshot is bitwise identical to one over the live
+/// state it was captured from — `forward_parity` asserts it.
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    state: ModelState,
+}
+
+impl ModelSnapshot {
+    /// Deep-copy `live`'s weights (data only — moments are dropped) at its
+    /// current optimizer step.
+    pub fn capture(live: &ModelState) -> ModelSnapshot {
+        let strip = |t: &EmbeddingTable| EmbeddingTable {
+            rows: t.rows,
+            dim: t.dim,
+            data: t.data.clone(),
+            m: Vec::new(),
+            v: Vec::new(),
+        };
+        let dense = live
+            .dense
+            .iter()
+            .map(|(k, p)| {
+                let p = ParamTensor {
+                    shape: p.shape.clone(),
+                    data: p.data.clone(),
+                    m: Vec::new(),
+                    v: Vec::new(),
+                };
+                (k.clone(), p)
+            })
+            .collect();
+        ModelSnapshot {
+            state: ModelState {
+                model: live.model.clone(),
+                ent_dim: live.ent_dim,
+                rel_dim: live.rel_dim,
+                repr_dim: live.repr_dim,
+                entities: strip(&live.entities),
+                relations: strip(&live.relations),
+                dense,
+                step: live.step,
+            },
+        }
+    }
+
+    /// The frozen weights, shaped like a [`ModelState`] so the engine's
+    /// forward plane runs over it unchanged. The moments are empty — only
+    /// forward reads (rows, gathers, dense params) are valid.
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    /// Optimizer step at capture time (serving telemetry / staleness).
+    pub fn step(&self) -> u64 {
+        self.state.step
+    }
+
+    /// Resident bytes of the snapshot (weights only — no moments).
+    pub fn bytes(&self) -> usize {
+        (self.state.entities.data.len() + self.state.relations.data.len()) * 4
+            + self.state.dense.values().map(|p| p.data.len() * 4).sum::<usize>()
+    }
+}
+
+/// The train→serve publish point: an atomically swappable
+/// `Arc<ModelSnapshot>`. One trainer publishes; any number of serve workers
+/// load. Loads are wait-free in practice (a read lock + `Arc` clone);
+/// publishes swap a pointer — the snapshot copy itself happens on the
+/// trainer's thread *before* the lock is taken.
+pub struct SnapshotCell {
+    cur: RwLock<Arc<ModelSnapshot>>,
+    /// publishes since construction (the initial snapshot counts as 1)
+    published: AtomicU64,
+}
+
+impl SnapshotCell {
+    pub fn new(first: ModelSnapshot) -> SnapshotCell {
+        SnapshotCell {
+            cur: RwLock::new(Arc::new(first)),
+            published: AtomicU64::new(1),
+        }
+    }
+
+    /// Swap the served snapshot. Readers that already loaded the previous
+    /// one keep it alive until their batch completes (no torn reads).
+    pub fn publish(&self, snap: ModelSnapshot) {
+        let snap = Arc::new(snap);
+        // a panic can't poison meaningfully here (the critical section is
+        // one pointer store), so recover like the tensor pool does
+        *self.cur.write().unwrap_or_else(PoisonError::into_inner) = snap;
+        self.published.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Pin the currently published snapshot.
+    pub fn load(&self) -> Arc<ModelSnapshot> {
+        self.cur.read().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Total snapshots published (monotone; starts at 1).
+    pub fn published(&self) -> u64 {
+        self.published.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{MockRuntime, Runtime};
+
+    fn live() -> ModelState {
+        let rt = MockRuntime::new();
+        ModelState::init(rt.manifest(), "mock", 10, 4, None, 1).unwrap()
+    }
+
+    #[test]
+    fn capture_is_bitwise_faithful_and_moment_free() {
+        let mut st = live();
+        st.step = 7;
+        st.entities.m[0] = 0.5; // moments must NOT survive capture
+        let snap = ModelSnapshot::capture(&st);
+        assert_eq!(snap.state().entities.data, st.entities.data);
+        assert_eq!(snap.state().relations.data, st.relations.data);
+        assert!(snap.state().entities.m.is_empty());
+        assert!(snap.state().entities.v.is_empty());
+        assert_eq!(snap.step(), 7);
+        assert_eq!(snap.bytes(), (10 * 4 + 4 * 4) * 4);
+    }
+
+    #[test]
+    fn capture_is_isolated_from_later_training() {
+        let mut st = live();
+        let snap = ModelSnapshot::capture(&st);
+        let before = snap.state().entities.data.clone();
+        st.entities.data.iter_mut().for_each(|x| *x += 1.0);
+        assert_eq!(snap.state().entities.data, before, "snapshot must not alias");
+    }
+
+    #[test]
+    fn cell_publishes_and_loads_latest() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        assert_eq!(cell.published(), 1);
+        assert_eq!(cell.load().step(), 0);
+        st.step = 3;
+        cell.publish(ModelSnapshot::capture(&st));
+        assert_eq!(cell.published(), 2);
+        assert_eq!(cell.load().step(), 3);
+    }
+
+    #[test]
+    fn pinned_snapshots_survive_a_publish() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        let pinned = cell.load();
+        st.step = 9;
+        cell.publish(ModelSnapshot::capture(&st));
+        assert_eq!(pinned.step(), 0, "a reader's pin outlives the swap");
+        assert_eq!(cell.load().step(), 9);
+    }
+}

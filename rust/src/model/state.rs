@@ -260,10 +260,12 @@ impl ModelState {
 }
 
 /// Read exactly `n` little-endian f32s.
-pub fn read_f32_file(path: &str, n: usize) -> Result<Vec<f32>> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+pub fn read_f32_file(path: impl AsRef<std::path::Path>, n: usize) -> Result<Vec<f32>> {
+    let path = path.as_ref();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
     if bytes.len() != n * 4 {
-        bail!("{path}: expected {} bytes, got {}", n * 4, bytes.len());
+        bail!("{}: expected {} bytes, got {}", path.display(), n * 4, bytes.len());
     }
     Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
 }

@@ -147,6 +147,17 @@ impl std::fmt::Display for Pattern {
     }
 }
 
+/// Inverse of `Display`/[`Pattern::name`] — serve requests, bench knobs and
+/// CLI flags can name patterns textually (`"2i".parse::<Pattern>()`)
+/// instead of hardcoding variants.
+impl std::str::FromStr for Pattern {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Pattern> {
+        Pattern::from_name(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +168,15 @@ mod tests {
             assert_eq!(Pattern::from_name(p.name()).unwrap(), p);
         }
         assert!(Pattern::from_name("4p").is_err());
+    }
+
+    #[test]
+    fn from_str_round_trips_display() {
+        for p in Pattern::ALL {
+            assert_eq!(p.to_string().parse::<Pattern>().unwrap(), p);
+        }
+        assert!("4p".parse::<Pattern>().is_err());
+        assert!("".parse::<Pattern>().is_err());
     }
 
     #[test]

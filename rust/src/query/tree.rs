@@ -128,6 +128,32 @@ impl QueryTree {
         }
     }
 
+    /// Whether any node of this tree is a Negate — serve-side admission
+    /// checks this against models that lack the operator before lowering.
+    pub fn contains_negation(&self) -> bool {
+        let mut found = false;
+        self.walk(&mut |t| {
+            if matches!(t, QueryTree::Negate(_)) {
+                found = true;
+            }
+        });
+        found
+    }
+
+    /// Largest anchor entity id and relation id referenced anywhere in the
+    /// tree (`None` when the tree has no anchors / no projections).
+    /// Allocation-free — serve admission range-checks every request with
+    /// this instead of materializing [`QueryTree::anchors`]/`relations`.
+    pub fn max_ids(&self) -> (Option<u32>, Option<u32>) {
+        let (mut a, mut r): (Option<u32>, Option<u32>) = (None, None);
+        self.walk(&mut |t| match t {
+            QueryTree::Anchor(e) => a = Some(a.map_or(*e, |x| x.max(*e))),
+            QueryTree::Project(_, rel) => r = Some(r.map_or(*rel, |x| x.max(*rel))),
+            _ => {}
+        });
+        (a, r)
+    }
+
     /// All anchors in left-to-right order.
     pub fn anchors(&self) -> Vec<u32> {
         let mut out = Vec::new();
@@ -176,6 +202,29 @@ mod tests {
             assert_eq!(t.anchors().len(), p.n_anchors(), "{p}");
             // relations() walks Project nodes; every slot appears once
             assert_eq!(t.relations().len(), p.n_relations(), "{p}");
+        }
+    }
+
+    #[test]
+    fn max_ids_match_the_materialized_lists() {
+        for p in Pattern::ALL {
+            let a: Vec<u32> = (3..3 + p.n_anchors() as u32).collect();
+            let r: Vec<u32> = (5..5 + p.n_relations() as u32).collect();
+            let t = QueryTree::instantiate(p, &a, &r).unwrap();
+            let (ma, mr) = t.max_ids();
+            assert_eq!(ma, t.anchors().iter().copied().max(), "{p}");
+            assert_eq!(mr, t.relations().iter().copied().max(), "{p}");
+        }
+        assert_eq!(QueryTree::Anchor(9).max_ids(), (Some(9), None));
+    }
+
+    #[test]
+    fn contains_negation_matches_the_pattern_class() {
+        for p in Pattern::ALL {
+            let a: Vec<u32> = (0..p.n_anchors() as u32).collect();
+            let r: Vec<u32> = (0..p.n_relations() as u32).collect();
+            let t = QueryTree::instantiate(p, &a, &r).unwrap();
+            assert_eq!(t.contains_negation(), p.has_negation(), "{p}");
         }
     }
 

@@ -252,6 +252,34 @@ impl MockRuntime {
         self
     }
 
+    /// Recompile the rank-against-all `eval` artifact for a different
+    /// (query-block, entity-chunk) bucket pair. The unit-test default
+    /// (`eval_b = 2`, chunk 4) makes ranking maximally launch-heavy; the
+    /// serve bench widens both so micro-batched forward fusion — not
+    /// ranking launches — dominates the measurement.
+    pub fn with_eval_dims(mut self, eval_b: usize, chunk: usize) -> MockRuntime {
+        assert!(eval_b > 0 && chunk > 0);
+        let d = self.manifest.dims.d;
+        let old = format!("mock_eval_fwd_b{}", self.manifest.dims.eval_b);
+        self.manifest.artifacts.remove(&old);
+        self.manifest.dims.eval_b = eval_b;
+        self.manifest.dims.eval_chunk = chunk;
+        self.manifest.artifacts.insert(
+            format!("mock_eval_fwd_b{eval_b}"),
+            mk_artifact(
+                "eval",
+                "fwd",
+                eval_b,
+                vec![
+                    arg("q", vec![eval_b, d], false),
+                    arg("ents", vec![chunk, d], false),
+                ],
+                vec![arg("scores", vec![eval_b, chunk], false)],
+            ),
+        );
+        self
+    }
+
     /// Record a `(CallEvent, artifact)` log entry on entry/exit of every
     /// `execute` call (deterministic-interleaving tests).
     pub fn with_call_log(mut self) -> MockRuntime {
@@ -581,6 +609,18 @@ mod tests {
         let r = HostTensor::new(vec![4, 16], vec![2.0; 64]).unwrap();
         let out = rt.execute("mock_project_fwd_b4", &[x, r]).unwrap();
         assert_eq!(out[0].data, vec![2.0; 64]);
+    }
+
+    #[test]
+    fn with_eval_dims_recompiles_the_eval_artifact() {
+        let rt = MockRuntime::new().with_eval_dims(8, 16);
+        assert_eq!(rt.manifest.dims.eval_b, 8);
+        assert_eq!(rt.manifest.dims.eval_chunk, 16);
+        assert!(!rt.manifest.artifacts.contains_key("mock_eval_fwd_b2"));
+        let q = HostTensor::zeros(vec![8, 4]);
+        let ents = HostTensor::new(vec![16, 4], vec![1.0; 64]).unwrap();
+        let out = rt.execute("mock_eval_fwd_b8", &[q, ents]).unwrap();
+        assert_eq!(out[0].shape, vec![8, 16]);
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! The serve plane: a concurrent query service with **cross-request
+//! operator-level micro-batching**.
+//!
+//! The paper's central move — decoupling logical operators from query
+//! topologies so one scheduler can fuse work across queries (§4.1,
+//! Algorithm 1) — applies to *answering* queries exactly as it does to
+//! training them. [`QueryService`] accepts grounded
+//! [`crate::query::QueryTree`] requests on a bounded queue, a batcher
+//! thread coalesces concurrent requests into one fused forward
+//! [`crate::query::QueryDag`] per *(batch-size, deadline)* window, and a
+//! pool of worker threads executes the fused DAGs on per-worker
+//! [`crate::exec::ForwardSession`]s — the engine's forward plane: same
+//! Max-Fillness scheduler, pools, gather worker and arena as training, but
+//! no `Grads`, no gradient nodes, no VJP staging. Each root then ranks
+//! against **all** entities through the same chunked
+//! [`crate::eval::rank::EntityRanker`] the offline evaluator uses, and the
+//! request gets back filtered top-k answers with its end-to-end latency.
+//!
+//! Serving reads [`crate::model::ModelSnapshot`]s through a
+//! [`crate::model::SnapshotCell`]: a trainer publishes a moment-free copy
+//! of its weights after `optimize`
+//! ([`crate::train::Trainer::publish_snapshot`]); each micro-batch pins
+//! exactly one published snapshot for its whole lifetime, so answers are
+//! never computed against half-updated weights no matter how often the
+//! trainer steps.
+//!
+//! The knobs that matter ([`ServeConfig`]): `max_batch` bounds how many
+//! concurrent requests fuse into one DAG (the cross-user analogue of
+//! `B_max`), `max_wait` bounds how long the batcher holds the first
+//! request of a window open for stragglers, and `queue_cap` bounds the
+//! request queue (submitters block — backpressure, not unbounded growth).
+//! `benches/serve_latency.rs` sweeps `max_batch` ∈ {1, 4, 16, 64} and
+//! writes `BENCH_serve_latency.json` (p50/p95/p99 latency + QPS); CI gates
+//! micro-batched throughput at ≥ 2× the batch=1 baseline.
+//!
+//! **Limitation — semantic fusion (§4.4) is not served yet.** Worker
+//! sessions are plain [`crate::exec::ForwardSession::new`]: a model
+//! *trained* with a semantic source would be served without its fused
+//! EmbedE path (answers would diverge from `eval::rank::evaluate` run
+//! `with_semantic`). Snapshots do not record fusion provenance, so the
+//! service cannot reject such models on its own — do not point a
+//! `QueryService` at a fusion-trained snapshot until the ROADMAP
+//! follow-up (an `Arc`-shared `SemanticSource` threaded through
+//! [`ServeConfig`]) lands. [`crate::exec::ForwardSession::with_semantic`]
+//! is the forward-plane half of that wiring, available today for callers
+//! driving forward sessions by hand.
+
+pub mod service;
+
+pub use service::{PendingQuery, QueryService, ServeClient};
+
+use std::time::Duration;
+
+use crate::exec::EngineConfig;
+use crate::query::QueryTree;
+
+/// Query-service tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// forward-session worker threads executing fused batches
+    pub workers: usize,
+    /// micro-batch window: max concurrent requests fused into one DAG
+    pub max_batch: usize,
+    /// micro-batch deadline: how long the batcher waits for a window to
+    /// fill after its first request arrives
+    pub max_wait: Duration,
+    /// bounded request-queue depth (submitters block when full)
+    pub queue_cap: usize,
+    /// top-k answers returned when a request asks for `top_k == 0`
+    pub default_top_k: usize,
+    /// engine config of the per-worker forward sessions
+    pub engine: EngineConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            default_top_k: 10,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// One grounded query to answer.
+#[derive(Debug, Clone)]
+pub struct QueryRequest {
+    /// the grounded logical form (anchors/relations must be in range for
+    /// the served model; validated at admission)
+    pub tree: QueryTree,
+    /// entity ids excluded from the ranking (known answers — the filtered
+    /// protocol's "easy" set)
+    pub filter: Vec<u32>,
+    /// answers wanted; 0 uses [`ServeConfig::default_top_k`]
+    pub top_k: usize,
+}
+
+/// A served answer.
+#[derive(Debug, Clone)]
+pub struct QueryAnswer {
+    /// top-k `(entity, score)` pairs, score-descending (ties break toward
+    /// the lower entity id — deterministic)
+    pub top: Vec<(u32, f32)>,
+    /// end-to-end latency, enqueue → answer
+    pub latency: Duration,
+    /// how many requests shared this answer's fused DAG
+    pub batch_size: usize,
+    /// optimizer step of the published snapshot that answered
+    pub snapshot_step: u64,
+}

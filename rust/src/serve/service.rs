@@ -1,0 +1,544 @@
+//! [`QueryService`] — bounded intake, a micro-batching batcher thread, and
+//! a pool of forward-session workers.
+//!
+//! # Threads and channels
+//!
+//! ```text
+//! clients --(sync_channel, cap = queue_cap)--> batcher --(channel)--> workers
+//!   ^                                                                   |
+//!   +--------------- per-request response channel ---------------------+
+//! ```
+//!
+//! * Clients ([`ServeClient`], cloneable) submit [`QueryRequest`]s; the
+//!   bounded queue blocks submitters when full (backpressure).
+//! * The batcher takes the oldest request, eagerly drains whatever else is
+//!   already queued, and holds the window open until either `max_batch`
+//!   requests are in hand or `max_wait` has elapsed — the *(batch-size,
+//!   deadline)* window.
+//! * Workers pull whole batches, pin one published [`ModelSnapshot`], lower
+//!   every admitted request into **one fused forward DAG**, execute it on a
+//!   per-worker [`ForwardSession`], rank all roots against all entities
+//!   via the shared [`EntityRanker`], and answer each request with its
+//!   filtered top-k. Per-request failures (invalid tree, out-of-range ids,
+//!   unsupported negation) are answered individually and never poison the
+//!   rest of the batch.
+//!
+//! # Shutdown
+//!
+//! `QueryService`'s `Drop` (and `shutdown()`) pushes an [`Intake::Shutdown`]
+//! sentinel: the batcher flushes the window in hand and exits — even while
+//! client clones are still alive — then workers drain the remaining batches
+//! and exit as the batch channel drops. Requests queued behind the sentinel
+//! (and submits racing the shutdown) fail cleanly: their response senders
+//! drop, so [`PendingQuery::wait`] returns an error instead of hanging.
+//! The batcher also exits if every client drops first (channel
+//! disconnect), so either termination order is safe.
+
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
+};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{QueryAnswer, QueryRequest, ServeConfig};
+use crate::eval::rank::EntityRanker;
+use crate::exec::{EngineConfig, ForwardSession};
+use crate::model::{ModelState, SnapshotCell};
+use crate::query::QueryDag;
+use crate::runtime::Runtime;
+
+/// One queued request with its response channel and enqueue stamp.
+struct Inflight {
+    req: QueryRequest,
+    enqueued: Instant,
+    resp: Sender<Result<QueryAnswer>>,
+}
+
+/// What flows through the intake queue: requests, or the service's own
+/// shutdown sentinel — so `Drop` can stop the batcher even while client
+/// clones are still alive (their later submits then error cleanly).
+enum Intake {
+    Request(Inflight),
+    Shutdown,
+}
+
+/// A submitted-but-unanswered query; [`PendingQuery::wait`] blocks for the
+/// answer. Lets one client thread keep many requests in flight so batching
+/// windows actually fill.
+pub struct PendingQuery {
+    rx: Receiver<Result<QueryAnswer>>,
+}
+
+impl PendingQuery {
+    pub fn wait(self) -> Result<QueryAnswer> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("query service dropped the request (shut down?)"))?
+    }
+}
+
+/// Cloneable submission handle to a running [`QueryService`].
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: SyncSender<Intake>,
+}
+
+impl ServeClient {
+    /// Enqueue a request (blocks while the bounded queue is full); the
+    /// answer arrives on the returned [`PendingQuery`].
+    pub fn submit(&self, req: QueryRequest) -> Result<PendingQuery> {
+        let (resp, rx) = channel();
+        let inflight = Inflight { req, enqueued: Instant::now(), resp };
+        self.tx
+            .send(Intake::Request(inflight))
+            .map_err(|_| anyhow!("query service is shut down"))?;
+        Ok(PendingQuery { rx })
+    }
+
+    /// Submit and block for the answer.
+    pub fn query(&self, req: QueryRequest) -> Result<QueryAnswer> {
+        self.submit(req)?.wait()
+    }
+}
+
+/// The running service: batcher + worker threads. See the module docs.
+pub struct QueryService {
+    client: Option<ServeClient>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl QueryService {
+    /// Spawn the batcher and `cfg.workers` forward-session workers over
+    /// the snapshots published through `snapshots`.
+    pub fn start(
+        rt: Arc<dyn Runtime>,
+        snapshots: Arc<SnapshotCell>,
+        cfg: ServeConfig,
+    ) -> QueryService {
+        assert!(cfg.workers > 0, "a service needs at least one worker");
+        assert!(cfg.max_batch > 0 && cfg.queue_cap > 0);
+        let (req_tx, req_rx) = sync_channel::<Intake>(cfg.queue_cap);
+        // the batch stage is bounded too (one queued window per worker):
+        // when workers fall behind, the batcher blocks here, the intake
+        // queue fills to queue_cap, and submitters block — backpressure
+        // propagates to clients instead of queued requests growing without
+        // bound
+        let (batch_tx, batch_rx) = sync_channel::<Vec<Inflight>>(cfg.workers);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
+        let batcher =
+            std::thread::spawn(move || batcher_loop(req_rx, batch_tx, max_batch, max_wait));
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let rt = Arc::clone(&rt);
+                let snapshots = Arc::clone(&snapshots);
+                let rx = Arc::clone(&batch_rx);
+                let ecfg = cfg.engine.clone();
+                let top_k = cfg.default_top_k;
+                std::thread::spawn(move || worker_loop(rt, snapshots, rx, ecfg, top_k))
+            })
+            .collect();
+        QueryService {
+            client: Some(ServeClient { tx: req_tx }),
+            batcher: Some(batcher),
+            workers,
+        }
+    }
+
+    /// A new submission handle (cheap clone; see the shutdown note in the
+    /// module docs).
+    pub fn client(&self) -> ServeClient {
+        self.client.as_ref().expect("service is running").clone()
+    }
+
+    /// Hang up and join every thread (equivalent to dropping the service).
+    pub fn shutdown(self) {}
+}
+
+impl Drop for QueryService {
+    fn drop(&mut self) {
+        if let Some(c) = self.client.take() {
+            // sentinel, not just a hang-up: the batcher exits even while
+            // client clones are still alive (their next submit errors).
+            // This send cannot block indefinitely — workers keep draining,
+            // and if every thread already died the channel is disconnected
+            // and the send returns an error immediately.
+            let _ = c.tx.send(Intake::Shutdown);
+        }
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Form micro-batches: oldest request first, eager drain of the backlog,
+/// then wait out the window's deadline for stragglers.
+fn batcher_loop(
+    rx: Receiver<Intake>,
+    tx: SyncSender<Vec<Inflight>>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    while let Ok(msg) = rx.recv() {
+        let first = match msg {
+            Intake::Request(r) => r,
+            Intake::Shutdown => return,
+        };
+        let deadline = Instant::now() + max_wait;
+        let mut batch = Vec::with_capacity(max_batch);
+        batch.push(first);
+        let mut shutdown = false;
+        while batch.len() < max_batch && !shutdown {
+            match rx.try_recv() {
+                Ok(Intake::Request(r)) => {
+                    batch.push(r);
+                    continue;
+                }
+                Ok(Intake::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(TryRecvError::Disconnected) => break,
+                Err(TryRecvError::Empty) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Intake::Request(r)) => batch.push(r),
+                Ok(Intake::Shutdown) => shutdown = true,
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+            if shutdown {
+                break;
+            }
+        }
+        // flush the window in hand, then honor a shutdown sentinel —
+        // requests still queued behind it are dropped with the receiver,
+        // which errors their pending waits cleanly
+        if tx.send(batch).is_err() {
+            return; // workers gone
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+/// One worker: a warm [`ForwardSession`] + [`EntityRanker`] + block
+/// scratch, fed whole batches off the shared channel. Holding the mutex
+/// while parked serializes *dequeue*, not processing — the winner releases
+/// it the moment a batch arrives.
+fn worker_loop(
+    rt: Arc<dyn Runtime>,
+    snapshots: Arc<SnapshotCell>,
+    batches: Arc<Mutex<Receiver<Vec<Inflight>>>>,
+    ecfg: EngineConfig,
+    default_top_k: usize,
+) {
+    let rt_ref: &dyn Runtime = &*rt;
+    let mut session = ForwardSession::new(rt_ref, ecfg);
+    let mut ranker = EntityRanker::new();
+    let mut scores: Vec<f32> = Vec::new();
+    let mut filtered: Vec<bool> = Vec::new();
+    loop {
+        let batch = {
+            let guard = batches.lock().unwrap_or_else(PoisonError::into_inner);
+            match guard.recv() {
+                Ok(b) => b,
+                Err(_) => return, // batcher gone: shutdown
+            }
+        };
+        serve_batch(
+            rt_ref,
+            &mut session,
+            &mut ranker,
+            &mut scores,
+            &mut filtered,
+            &snapshots,
+            batch,
+            default_top_k,
+        );
+    }
+}
+
+/// Admission: structural validity, operator support, id ranges — checked
+/// *before* lowering so a rejected request never leaves orphan nodes in
+/// the batch's fused DAG.
+fn admit(req: &QueryRequest, state: &ModelState, supports_neg: bool) -> Result<()> {
+    req.tree.validate()?;
+    if req.tree.contains_negation() && !supports_neg {
+        bail!("model {} does not support the Negate operator", state.model);
+    }
+    let n_ent = state.entities.rows as u32;
+    let n_rel = state.relations.rows as u32;
+    let (max_a, max_r) = req.tree.max_ids(); // allocation-free walk
+    if let Some(a) = max_a.filter(|&a| a >= n_ent) {
+        bail!("anchor entity {a} out of range (model serves {n_ent} entities)");
+    }
+    if let Some(r) = max_r.filter(|&r| r >= n_rel) {
+        bail!("relation {r} out of range (model serves {n_rel} relations)");
+    }
+    Ok(())
+}
+
+/// Answer one micro-batch: pin a snapshot, fuse, execute, rank, respond.
+#[allow(clippy::too_many_arguments)]
+fn serve_batch(
+    rt: &dyn Runtime,
+    session: &mut ForwardSession<'_>,
+    ranker: &mut EntityRanker,
+    scores: &mut Vec<f32>,
+    filtered: &mut Vec<bool>,
+    snapshots: &SnapshotCell,
+    batch: Vec<Inflight>,
+    default_top_k: usize,
+) {
+    // one snapshot per batch: every answer in the window is computed
+    // against exactly this published state, however often the trainer
+    // swaps meanwhile
+    let snap = snapshots.load();
+    let state = snap.state();
+    let supports_neg = crate::config::model_supports_negation(&state.model);
+    let n_ent = state.entities.rows;
+
+    // -- admission + lowering into ONE fused forward DAG
+    let mut dag = QueryDag::default();
+    let mut admitted: Vec<Inflight> = Vec::with_capacity(batch.len());
+    let mut roots: Vec<u32> = Vec::with_capacity(batch.len());
+    for inflight in batch {
+        let lowered = admit(&inflight.req, state, supports_neg)
+            .and_then(|()| dag.add_query_eval(&inflight.req.tree, supports_neg));
+        match lowered {
+            Ok(root) => {
+                roots.push(root);
+                admitted.push(inflight);
+            }
+            Err(e) => {
+                let _ = inflight.resp.send(Err(e));
+            }
+        }
+    }
+    if admitted.is_empty() {
+        return;
+    }
+    let fused = admitted.len();
+
+    // -- forward plane + rank-against-all (shared with eval)
+    let reprs = match session.run(&dag, &snap, &roots) {
+        Ok((_, reprs)) => reprs,
+        Err(e) => return fail_all(admitted, &e),
+    };
+    if let Err(e) = ranker.score_all(rt, state, &reprs, session.pool(), scores) {
+        return fail_all(admitted, &e);
+    }
+
+    // -- per-request filtered top-k
+    if filtered.len() != n_ent {
+        filtered.clear();
+        filtered.resize(n_ent, false);
+    }
+    for (qi, inflight) in admitted.into_iter().enumerate() {
+        let row = &scores[qi * n_ent..(qi + 1) * n_ent];
+        for &e in &inflight.req.filter {
+            if (e as usize) < n_ent {
+                filtered[e as usize] = true;
+            }
+        }
+        let k = if inflight.req.top_k == 0 { default_top_k } else { inflight.req.top_k };
+        let top = select_top_k(row, filtered, k);
+        for &e in &inflight.req.filter {
+            if (e as usize) < n_ent {
+                filtered[e as usize] = false; // scratch reset for the next request
+            }
+        }
+        let answer = QueryAnswer {
+            top,
+            latency: inflight.enqueued.elapsed(),
+            batch_size: fused,
+            snapshot_step: snap.step(),
+        };
+        let _ = inflight.resp.send(Ok(answer));
+    }
+}
+
+/// Answer every admitted request with the batch-wide failure.
+fn fail_all(admitted: Vec<Inflight>, e: &anyhow::Error) {
+    let msg = format!("{e:#}");
+    for a in admitted {
+        let _ = a.resp.send(Err(anyhow!("serving batch failed: {msg}")));
+    }
+}
+
+/// Top-k by score (descending) over one score row, skipping filtered
+/// entities and non-finite scores (a diverged snapshot must degrade an
+/// answer, not scramble the ordering — NaN breaks the partition
+/// invariant). Ties break toward the lower entity id — with a fixed
+/// snapshot, answers are deterministic regardless of batching window or
+/// worker count.
+fn select_top_k(row: &[f32], filtered: &[bool], k: usize) -> Vec<(u32, f32)> {
+    // clamp the client-supplied k: more than n_entities answers cannot
+    // exist, and an unclamped huge k would otherwise drive the capacity
+    // allocation below (one hostile request must not panic a worker)
+    let k = k.min(row.len());
+    let mut top: Vec<(u32, f32)> = Vec::with_capacity(k + 1);
+    if k == 0 {
+        return top;
+    }
+    for (e, &s) in row.iter().enumerate() {
+        if filtered[e] || !s.is_finite() {
+            continue;
+        }
+        if top.len() == k && s <= top.last().expect("top is non-empty at cap").1 {
+            continue;
+        }
+        // first slot past every strictly-better-or-equal score: earlier
+        // (lower-id) entities stay ahead on ties
+        let pos = top.partition_point(|&(_, ts)| ts >= s);
+        top.insert(pos, (e as u32, s));
+        if top.len() > k {
+            top.pop();
+        }
+    }
+    top
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelSnapshot, ModelState};
+    use crate::query::{Pattern, QueryTree};
+    use crate::runtime::MockRuntime;
+
+    fn setup() -> (Arc<MockRuntime>, ModelState, Arc<SnapshotCell>) {
+        let rt = Arc::new(MockRuntime::new());
+        let state = ModelState::init(
+            crate::runtime::Runtime::manifest(&*rt),
+            "mock",
+            12,
+            6,
+            None,
+            3,
+        )
+        .unwrap();
+        let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+        (rt, state, cell)
+    }
+
+    fn p1(anchor: u32, rel: u32) -> QueryRequest {
+        QueryRequest {
+            tree: QueryTree::instantiate(Pattern::P1, &[anchor], &[rel]).unwrap(),
+            filter: vec![],
+            top_k: 3,
+        }
+    }
+
+    #[test]
+    fn select_top_k_orders_and_breaks_ties_deterministically() {
+        let row = [1.0, 5.0, 5.0, 0.0, 7.0];
+        let filtered = [false; 5];
+        let top = select_top_k(&row, &filtered, 3);
+        assert_eq!(top, vec![(4, 7.0), (1, 5.0), (2, 5.0)], "lower id wins ties");
+        let top = select_top_k(&row, &[false, true, false, false, false], 2);
+        assert_eq!(top, vec![(4, 7.0), (2, 5.0)], "filtered ids never answer");
+        assert!(select_top_k(&row, &filtered, 0).is_empty());
+        assert_eq!(select_top_k(&row, &filtered, 9).len(), 5, "k caps at n_ent");
+    }
+
+    #[test]
+    fn single_query_round_trip_matches_brute_force() {
+        let (rt, state, cell) = setup();
+        let service = QueryService::start(rt, cell, ServeConfig::default());
+        let client = service.client();
+        let answer = client.query(p1(2, 1)).unwrap();
+        assert_eq!(answer.top.len(), 3);
+        // mock semantics: repr = e[2] + r[1]; score_e = repr · e[e]
+        let q: Vec<f32> = state
+            .entities
+            .row(2)
+            .iter()
+            .zip(state.relations.row(1))
+            .map(|(a, b)| a + b)
+            .collect();
+        let mut want: Vec<(u32, f32)> = (0..12u32)
+            .map(|e| (e, q.iter().zip(state.entities.row(e)).map(|(a, b)| a * b).sum()))
+            .collect();
+        want.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for (got, want) in answer.top.iter().zip(&want) {
+            assert_eq!(got.0, want.0);
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "scores bit-exact");
+        }
+        assert!(answer.latency > Duration::ZERO);
+        assert_eq!(answer.snapshot_step, 0);
+        drop(client);
+        service.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_error_without_poisoning_the_batch() {
+        let (rt, _, cell) = setup();
+        let service = QueryService::start(
+            rt,
+            cell,
+            ServeConfig { max_batch: 4, max_wait: Duration::from_millis(20), ..Default::default() },
+        );
+        let client = service.client();
+        let bad_union = QueryRequest {
+            tree: QueryTree::Union(vec![QueryTree::Anchor(0)]),
+            filter: vec![],
+            top_k: 2,
+        };
+        let out_of_range = p1(999, 0);
+        // submit the bad ones alongside a good one so they ride one window
+        let pends = [
+            client.submit(bad_union).unwrap(),
+            client.submit(out_of_range).unwrap(),
+            client.submit(p1(1, 1)).unwrap(),
+        ];
+        let [a, b, c] = pends;
+        assert!(a.wait().is_err(), "degenerate union must be rejected");
+        assert!(b.wait().is_err(), "out-of-range anchor must be rejected");
+        let good = c.wait().unwrap();
+        assert_eq!(good.top.len(), 3, "p1() asks for top_k = 3");
+        drop(client);
+    }
+
+    #[test]
+    fn zero_top_k_uses_the_configured_default() {
+        let (rt, _, cell) = setup();
+        let service = QueryService::start(
+            rt,
+            cell,
+            ServeConfig { default_top_k: 5, ..Default::default() },
+        );
+        let client = service.client();
+        let mut req = p1(0, 0);
+        req.top_k = 0;
+        assert_eq!(client.query(req).unwrap().top.len(), 5);
+        drop(client);
+    }
+
+    #[test]
+    fn filtered_entities_never_appear() {
+        let (rt, _, cell) = setup();
+        let service = QueryService::start(rt, cell, ServeConfig::default());
+        let client = service.client();
+        let mut req = p1(3, 2);
+        req.filter = vec![0, 1, 2, 3, 4, 5];
+        req.top_k = 6;
+        let ans = client.query(req).unwrap();
+        assert_eq!(ans.top.len(), 6, "12 entities minus 6 filtered");
+        for (e, _) in &ans.top {
+            assert!(*e >= 6, "filtered entity {e} leaked into the answers");
+        }
+        drop(client);
+    }
+}

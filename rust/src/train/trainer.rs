@@ -35,7 +35,7 @@ use crate::config::{Batching, ExperimentConfig, Pipelining};
 use crate::exec::{EngineConfig, EngineSession, Grads};
 use crate::kg::KgStore;
 use crate::metrics::{MemoryEstimate, ThroughputMeter, TsvLogger};
-use crate::model::ModelState;
+use crate::model::{ModelSnapshot, ModelState, SnapshotCell};
 use crate::optim::AdamConfig;
 use crate::query::Pattern;
 use crate::runtime::Runtime;
@@ -66,17 +66,39 @@ pub struct Trainer<'a> {
     pub cfg: ExperimentConfig,
     pub adam: AdamConfig,
     pub semantic: Option<&'a dyn SemanticSource>,
+    /// when set, every optimizer step publishes a moment-free
+    /// [`ModelSnapshot`] here — the train→serve handoff (see
+    /// [`crate::serve::QueryService`])
+    pub snapshots: Option<Arc<SnapshotCell>>,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(rt: &'a dyn Runtime, kg: Arc<KgStore>, cfg: ExperimentConfig) -> Trainer<'a> {
         let adam = AdamConfig { lr: cfg.lr as f32, ..Default::default() };
-        Trainer { rt, kg, cfg, adam, semantic: None }
+        Trainer { rt, kg, cfg, adam, semantic: None, snapshots: None }
     }
 
     pub fn with_semantic(mut self, source: &'a dyn SemanticSource) -> Trainer<'a> {
         self.semantic = Some(source);
         self
+    }
+
+    /// Publish the trained weights into `cell` after every `optimize` —
+    /// concurrent [`crate::serve::QueryService`] workers then always read
+    /// a fully published snapshot, never a half-updated state.
+    pub fn with_snapshots(mut self, cell: Arc<SnapshotCell>) -> Trainer<'a> {
+        self.snapshots = Some(cell);
+        self
+    }
+
+    /// The publish hook: capture + swap (a no-op without a cell). The copy
+    /// happens here on the trainer thread; the serve-side swap is one
+    /// `Arc` store. Public so manual steppers ([`Trainer::apply`] users
+    /// like fig9) can publish on their own cadence.
+    pub fn publish_snapshot(&self, state: &ModelState) {
+        if let Some(cell) = &self.snapshots {
+            cell.publish(ModelSnapshot::capture(state));
+        }
     }
 
     /// Stand up this run's step pipeline: one engine session (one warm
@@ -163,6 +185,8 @@ impl<'a> Trainer<'a> {
             // ---- execute + reduce + optimize (shared step pipeline) ------
             let outcome = pipeline.execute_step(&dags, state, &mut phases)?;
             peak_live = peak_live.max(outcome.exec.peak_live_bytes);
+            // serve handoff: swap the published snapshot post-optimize
+            self.publish_snapshot(state);
 
             // ---- feedback + metrics --------------------------------------
             if let Some(s) = &stream {
@@ -343,6 +367,29 @@ mod tests {
         let (c2, e2) = run();
         assert_eq!(c1, c2, "same seed must give the same loss curve");
         assert_eq!(e1, e2, "same seed must give the same final state");
+    }
+
+    #[test]
+    fn training_publishes_a_snapshot_per_step() {
+        let (rt, kg, cfg) = setup(Batching::OperatorLevel, Pipelining::Sync);
+        let mut state = mock_state(&rt, &kg);
+        let cell = Arc::new(crate::model::SnapshotCell::new(
+            crate::model::ModelSnapshot::capture(&state),
+        ));
+        let steps = cfg.steps;
+        Trainer::new(&rt, kg, cfg)
+            .with_snapshots(Arc::clone(&cell))
+            .train(&mut state)
+            .unwrap();
+        assert_eq!(cell.published(), 1 + steps as u64, "one publish per step");
+        let snap = cell.load();
+        assert_eq!(snap.step(), steps as u64, "served snapshot is post-optimize");
+        assert_eq!(
+            snap.state().entities.data,
+            state.entities.data,
+            "published weights match the final trained state bitwise"
+        );
+        assert!(snap.state().entities.m.is_empty(), "snapshots carry no moments");
     }
 
     #[test]

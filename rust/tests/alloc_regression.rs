@@ -12,6 +12,7 @@
 
 use std::sync::{Mutex, MutexGuard};
 
+use ngdb_zoo::eval::rank::{EntityRanker, RANK_ALLOC_OVERHEAD, RANK_ALLOC_PER_EXEC};
 use ngdb_zoo::exec::arena::{
     ROUND_ALLOC_BUDGET, ROUND_ALLOC_BYTES_BUDGET, RUN_ALLOC_OVERHEAD,
 };
@@ -179,6 +180,88 @@ fn pooling_disabled_baseline_allocates_tensor_payloads_every_round() {
     assert!(
         bare_allocs > pooled_allocs,
         "unpooled rounds must allocate more often: {bare_allocs} vs {pooled_allocs}"
+    );
+}
+
+#[test]
+fn eval_and_serve_blocks_stay_within_the_rank_alloc_budget() {
+    // The eval/serve hot block — forward plane + rank-against-all — must
+    // recycle like the training loop does: the query block, every entity
+    // chunk and every score output come from the session pool, and the
+    // steady-state heap traffic stays under the documented rank budget
+    // (eval::rank::{RANK_ALLOC_OVERHEAD, RANK_ALLOC_PER_EXEC}).
+    let _guard = serial();
+    let rt = wide_runtime();
+    let st = state(&rt);
+    let (eval_b, eval_chunk) =
+        (rt.manifest().dims.eval_b, rt.manifest().dims.eval_chunk);
+
+    // a forward-only eval block: 4 query roots, no Score, no gradients
+    let mut dag = QueryDag::default();
+    let mut roots = Vec::new();
+    for i in 0..4u32 {
+        let tree = QueryTree::instantiate(
+            Pattern::P2,
+            &[i % NE as u32],
+            &[i % NR as u32, (i + 1) % NR as u32],
+        )
+        .unwrap();
+        roots.push(dag.add_query_eval(&tree, true).unwrap());
+    }
+
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let mut ranker = EntityRanker::new();
+    let mut scores: Vec<f32> = Vec::new();
+
+    // warmup: pool shelves, slab, ranker scratch, scores capacity
+    for _ in 0..2 {
+        let (_, reprs) = session.run_forward(&dag, &st, &roots).unwrap();
+        ranker.score_all(&rt, &st, &reprs, session.pool(), &mut scores).unwrap();
+    }
+    let misses_warm = session.pool().stats().misses;
+
+    const RUNS: u64 = 5;
+    let blocks = roots.len().div_ceil(eval_b) as u64;
+    let chunks = NE.div_ceil(eval_chunk) as u64;
+    let execs_per_call = blocks * chunks;
+    let mut rounds_per_run = 0u64;
+    let base = snapshot();
+    for _ in 0..RUNS {
+        let (stats, reprs) = session.run_forward(&dag, &st, &roots).unwrap();
+        assert_eq!(stats.pool_misses, 0, "steady-state forward blocks must pool");
+        rounds_per_run = stats.executions as u64;
+        ranker.score_all(&rt, &st, &reprs, session.pool(), &mut scores).unwrap();
+    }
+    let d = snapshot().delta_since(&base);
+    assert_eq!(
+        session.pool().stats().misses,
+        misses_warm,
+        "ranking must be fully served by the warm pool"
+    );
+
+    let budget = RUNS
+        * (RUN_ALLOC_OVERHEAD
+            + rounds_per_run * ROUND_ALLOC_BUDGET
+            + RANK_ALLOC_OVERHEAD
+            + execs_per_call * RANK_ALLOC_PER_EXEC);
+    assert!(
+        d.allocs <= budget,
+        "eval/serve steady state allocated {} times over {} runs; budget {} \
+         ({RANK_ALLOC_OVERHEAD}/call + {RANK_ALLOC_PER_EXEC} x {execs_per_call} launches \
+         on top of the engine budget)",
+        d.allocs,
+        RUNS,
+        budget
+    );
+    // the run_forward reprs (one Vec per root) are the only tensor-sized
+    // copies left; everything else is pooled — bytes stay bounded
+    let bytes_budget =
+        RUNS * (rounds_per_run * ROUND_ALLOC_BYTES_BUDGET + 64 * 1024);
+    assert!(
+        d.bytes <= bytes_budget,
+        "eval/serve steady state allocated {} bytes; budget {}",
+        d.bytes,
+        bytes_budget
     );
 }
 

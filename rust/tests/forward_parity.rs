@@ -1,0 +1,212 @@
+//! Train/serve parity: the forward plane must produce **bitwise** the same
+//! reprs as the training path — for the same queries fused into a training
+//! DAG (Score + VJP nodes present) and for the very same forward-only DAG
+//! driven through both entry points — and forward runs over a
+//! moment-free [`ModelSnapshot`] must match runs over the live state.
+
+use ngdb_zoo::exec::{EngineConfig, EngineSession, ForwardSession, Grads};
+use ngdb_zoo::model::{ModelSnapshot, ModelState};
+use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+
+const NE: usize = 12;
+const NR: usize = 6;
+
+fn state(rt: &MockRuntime) -> ModelState {
+    ModelState::init(rt.manifest(), "mock", NE, NR, None, 3).unwrap()
+}
+
+/// A deterministic mixed workload covering every operator family.
+fn trees() -> Vec<QueryTree> {
+    let mut out = Vec::new();
+    for i in 0..6u32 {
+        out.push(
+            QueryTree::instantiate(Pattern::P1, &[i % NE as u32], &[i % NR as u32]).unwrap(),
+        );
+    }
+    for i in 0..4u32 {
+        out.push(
+            QueryTree::instantiate(
+                Pattern::P2,
+                &[(i + 2) % NE as u32],
+                &[i % NR as u32, (i + 1) % NR as u32],
+            )
+            .unwrap(),
+        );
+    }
+    for i in 0..4u32 {
+        out.push(
+            QueryTree::instantiate(
+                Pattern::I2,
+                &[i % NE as u32, (i + 5) % NE as u32],
+                &[i % NR as u32, (i + 2) % NR as u32],
+            )
+            .unwrap(),
+        );
+    }
+    for i in 0..2u32 {
+        out.push(
+            QueryTree::instantiate(
+                Pattern::Up,
+                &[i % NE as u32, (i + 3) % NE as u32],
+                &[i % NR as u32, (i + 1) % NR as u32, (i + 2) % NR as u32],
+            )
+            .unwrap(),
+        );
+        out.push(
+            QueryTree::instantiate(
+                Pattern::In2,
+                &[i % NE as u32, (i + 1) % NE as u32],
+                &[i % NR as u32, (i + 3) % NR as u32],
+            )
+            .unwrap(),
+        );
+    }
+    out
+}
+
+fn assert_bitwise(a: &[Vec<f32>], b: &[Vec<f32>], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: root count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{tag}: root {i} width");
+        for (p, q) in x.iter().zip(y) {
+            assert_eq!(p.to_bits(), q.to_bits(), "{tag}: root {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn forward_plane_matches_the_training_path_bitwise() {
+    // Same queries, two lowerings: the training DAG carries Score heads +
+    // gradient nodes and runs with Grads; the forward DAG carries neither
+    // and runs with none. Operators are row-local, so the root reprs must
+    // agree bit for bit even though the fused schedules differ.
+    let rt = MockRuntime::new();
+    let st = state(&rt);
+    let trees = trees();
+
+    let mut train_dag = QueryDag::default();
+    let mut train_roots = Vec::new();
+    for t in &trees {
+        train_roots.push(train_dag.add_query(t, 5, vec![0, 1], "mixed", true).unwrap());
+    }
+    train_dag.add_gradient_nodes();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    let (_, train_reprs) =
+        session.run_with_outputs(&train_dag, &st, &mut grads, &train_roots).unwrap();
+    assert!(!grads.ent.is_empty(), "the training leg really trained");
+
+    let mut fwd_dag = QueryDag::default();
+    let mut fwd_roots = Vec::new();
+    for t in &trees {
+        fwd_roots.push(fwd_dag.add_query_eval(t, true).unwrap());
+    }
+    let (stats, fwd_reprs) = session.run_forward(&fwd_dag, &st, &fwd_roots).unwrap();
+    assert_eq!(stats.operators, fwd_dag.len(), "forward plane ran every node");
+    assert_eq!(stats.loss, 0.0, "no Score node, no loss");
+
+    assert_bitwise(&train_reprs, &fwd_reprs, "train-vs-forward");
+}
+
+#[test]
+fn both_entry_points_agree_on_the_same_forward_dag() {
+    // The crisp acceptance check: ONE fused forward-only DAG, executed
+    // through the training entry point (dummy Grads) and the forward
+    // plane — identical schedule, identical reprs.
+    let rt = MockRuntime::new();
+    let st = state(&rt);
+    let mut dag = QueryDag::default();
+    let mut roots = Vec::new();
+    for t in &trees() {
+        roots.push(dag.add_query_eval(t, true).unwrap());
+    }
+
+    let mut s_train = EngineSession::new(&rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    let (st_train, reprs_train) =
+        s_train.run_with_outputs(&dag, &st, &mut grads, &roots).unwrap();
+    assert_eq!(grads.ent.len(), 0, "a forward-only DAG accumulates nothing");
+
+    let mut s_fwd = EngineSession::new(&rt, EngineConfig::default());
+    let (st_fwd, reprs_fwd) = s_fwd.run_forward(&dag, &st, &roots).unwrap();
+
+    assert_eq!(st_train.schedule, st_fwd.schedule, "same Max-Fillness schedule");
+    assert_eq!(st_train.fillness, st_fwd.fillness);
+    assert_bitwise(&reprs_train, &reprs_fwd, "same-dag");
+}
+
+#[test]
+fn forward_plane_rejects_gradient_dags() {
+    let rt = MockRuntime::new();
+    let st = state(&rt);
+    let tree = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+
+    // Score head without gradient nodes
+    let mut scored = QueryDag::default();
+    scored.add_query(&tree, 1, vec![0, 1], "1p", true).unwrap();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let err = session.run_forward(&scored, &st, &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("forward"), "{err:#}");
+
+    // full training DAG
+    let mut train = QueryDag::default();
+    train.add_query(&tree, 1, vec![0, 1], "1p", true).unwrap();
+    train.add_gradient_nodes();
+    let err = session.run_forward(&train, &st, &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("forward"), "{err:#}");
+
+    // the session survives the rejections and still trains
+    let mut grads = Grads::default();
+    assert!(session.run(&train, &st, &mut grads).is_ok());
+}
+
+#[test]
+fn snapshots_serve_bitwise_identically_and_stay_isolated() {
+    let rt = MockRuntime::new();
+    let mut st = state(&rt);
+    let snap = ModelSnapshot::capture(&st);
+    let mut dag = QueryDag::default();
+    let mut roots = Vec::new();
+    for t in &trees() {
+        roots.push(dag.add_query_eval(t, true).unwrap());
+    }
+
+    let mut live_session = EngineSession::new(&rt, EngineConfig::default());
+    let (_, live_reprs) = live_session.run_forward(&dag, &st, &roots).unwrap();
+
+    let mut fwd = ForwardSession::new(&rt, EngineConfig::default());
+    let (_, snap_reprs) = fwd.run(&dag, &snap, &roots).unwrap();
+    assert_bitwise(&live_reprs, &snap_reprs, "live-vs-snapshot");
+
+    // mutate the live state (a trainer stepping): the snapshot must not move
+    st.entities.data.iter_mut().for_each(|x| *x += 1.0);
+    let (_, snap_again) = fwd.run(&dag, &snap, &roots).unwrap();
+    assert_bitwise(&snap_reprs, &snap_again, "snapshot-after-train");
+    let (_, live_after) = live_session.run_forward(&dag, &st, &roots).unwrap();
+    assert_ne!(
+        live_after[0][0].to_bits(),
+        snap_reprs[0][0].to_bits(),
+        "the live state really moved — isolation was actually exercised"
+    );
+}
+
+#[test]
+fn forward_sessions_reuse_one_worker_across_runs() {
+    let rt = MockRuntime::new();
+    let st = state(&rt);
+    let snap = ModelSnapshot::capture(&st);
+    let mut fwd = ForwardSession::new(&rt, EngineConfig::default());
+    assert_eq!(fwd.worker_spawns(), 1);
+    for salt in 0..4u32 {
+        let mut dag = QueryDag::default();
+        let tree =
+            QueryTree::instantiate(Pattern::P1, &[salt % NE as u32], &[salt % NR as u32])
+                .unwrap();
+        let root = dag.add_query_eval(&tree, true).unwrap();
+        let (stats, reprs) = fwd.run(&dag, &snap, &[root]).unwrap();
+        assert_eq!(reprs.len(), 1);
+        assert!(stats.executions > 0);
+    }
+    assert_eq!(fwd.worker_spawns(), 1, "forward runs must not spawn workers");
+}

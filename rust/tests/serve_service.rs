@@ -1,0 +1,246 @@
+//! QueryService integration: determinism across batching windows, and the
+//! concurrent-clients smoke — N client threads submitting while a real
+//! trainer steps and publishes snapshots in parallel. Run serially in CI
+//! (`NGDB_STRESS` job) so thread timing actually exercises the windows.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ngdb_zoo::config::{Batching, ExperimentConfig, Pipelining};
+use ngdb_zoo::kg::{KgSpec, KgStore};
+use ngdb_zoo::model::{ModelSnapshot, ModelState, SnapshotCell};
+use ngdb_zoo::query::{Pattern, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::sampler::ground;
+use ngdb_zoo::serve::{QueryAnswer, QueryRequest, QueryService, ServeConfig};
+use ngdb_zoo::train::Trainer;
+use ngdb_zoo::util::rng::Rng;
+
+fn small_state(rt: &MockRuntime) -> ModelState {
+    ModelState::init(rt.manifest(), "mock", 24, 6, None, 11).unwrap()
+}
+
+/// Deterministic request set over the small 24-entity state.
+fn requests(n: usize) -> Vec<QueryRequest> {
+    (0..n as u32)
+        .map(|i| {
+            let tree = match i % 3 {
+                0 => QueryTree::instantiate(Pattern::P1, &[i % 24], &[i % 6]).unwrap(),
+                1 => QueryTree::instantiate(
+                    Pattern::P2,
+                    &[(i + 7) % 24],
+                    &[i % 6, (i + 1) % 6],
+                )
+                .unwrap(),
+                _ => QueryTree::instantiate(
+                    Pattern::I2,
+                    &[i % 24, (i + 5) % 24],
+                    &[i % 6, (i + 2) % 6],
+                )
+                .unwrap(),
+            };
+            QueryRequest { tree, filter: vec![i % 24], top_k: 5 }
+        })
+        .collect()
+}
+
+fn serve_all(cfg: ServeConfig, reqs: &[QueryRequest]) -> Vec<QueryAnswer> {
+    let rt = Arc::new(MockRuntime::new());
+    let state = small_state(&rt);
+    let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+    let service = QueryService::start(rt, cell, cfg);
+    let client = service.client();
+    let pending: Vec<_> =
+        reqs.iter().map(|r| client.submit(r.clone()).unwrap()).collect();
+    let answers: Vec<QueryAnswer> =
+        pending.into_iter().map(|p| p.wait().unwrap()).collect();
+    drop(client);
+    service.shutdown();
+    answers
+}
+
+#[test]
+fn same_requests_same_snapshot_same_top_k_across_windows_and_workers() {
+    // Scoring is row-local, so the answers must be INDEPENDENT of how
+    // requests were micro-batched and how many workers raced — the serving
+    // analogue of "batched equals singleton numerics".
+    let reqs = requests(24);
+    let singleton = serve_all(
+        ServeConfig { workers: 1, max_batch: 1, ..Default::default() },
+        &reqs,
+    );
+    let fused = serve_all(
+        ServeConfig {
+            workers: 4,
+            max_batch: 16,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        },
+        &reqs,
+    );
+    let fused_again = serve_all(
+        ServeConfig {
+            workers: 4,
+            max_batch: 16,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        },
+        &reqs,
+    );
+    for ((a, b), c) in singleton.iter().zip(&fused).zip(&fused_again) {
+        assert_eq!(a.top.len(), b.top.len());
+        for ((ea, sa), (eb, sb)) in a.top.iter().zip(&b.top) {
+            assert_eq!(ea, eb, "answers depend on the batching window");
+            assert_eq!(sa.to_bits(), sb.to_bits(), "scores must be bit-identical");
+        }
+        assert_eq!(b.top, c.top, "same requests + same snapshot must replay");
+    }
+    // fusion actually happened in the fused run
+    assert!(
+        fused.iter().any(|a| a.batch_size > 1),
+        "no fused batch formed under a 16-wide window"
+    );
+}
+
+#[test]
+fn filtered_answers_respect_each_requests_own_filter() {
+    let reqs = requests(12);
+    let answers = serve_all(ServeConfig::default(), &reqs);
+    for (req, ans) in reqs.iter().zip(&answers) {
+        for (e, _) in &ans.top {
+            assert!(!req.filter.contains(e), "filtered id {e} appeared");
+        }
+        assert_eq!(ans.top.len(), 5);
+        assert!(ans.top.windows(2).all(|w| w[0].1 >= w[1].1), "score-descending");
+        assert!(ans.top.iter().all(|(_, s)| s.is_finite()));
+    }
+}
+
+/// The headline smoke: ≥4 client threads hammer the service while a real
+/// `Trainer` runs in parallel, publishing a snapshot after every optimizer
+/// step. Every answer must come from a *published* snapshot (step within
+/// the published range — never a torn/partial state, which cannot exist
+/// by construction since workers pin one `Arc` per batch), and serving
+/// must keep answering across the swaps.
+#[test]
+fn concurrent_clients_while_a_trainer_publishes_snapshots() {
+    const STEPS: usize = 6;
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 30;
+
+    // the serve backend CLAIMS no concurrent execute: with 2 workers
+    // ranking in parallel, every submission must route through the gated
+    // path — the mock's breach detector (asserted at the end) pins the
+    // runtime concurrency contract on the serve plane
+    let rt_serve = {
+        let mut m = MockRuntime::new();
+        m.set_concurrent_execute_safe(false);
+        Arc::new(m)
+    };
+    let rt_train = MockRuntime::new(); // same manifest, separate backend
+    let kg: Arc<KgStore> = Arc::new(KgSpec::preset("toy", 0.1).unwrap().generate().unwrap());
+    let mut state = ModelState::init(
+        rt_train.manifest(),
+        "mock",
+        kg.n_entities,
+        kg.n_relations,
+        None,
+        5,
+    )
+    .unwrap();
+    let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+
+    let service = QueryService::start(
+        Arc::clone(&rt_serve) as Arc<dyn Runtime>,
+        Arc::clone(&cell),
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    );
+    let client = service.client();
+
+    let tcfg = ExperimentConfig {
+        model: "mock".into(),
+        steps: STEPS,
+        batch_queries: 16,
+        batching: Batching::OperatorLevel,
+        pipelining: Pipelining::Sync,
+        patterns: vec![Pattern::P1, Pattern::P2, Pattern::I2],
+        ..Default::default()
+    };
+
+    let answers: Vec<QueryAnswer> = std::thread::scope(|s| {
+        let trainer_cell = Arc::clone(&cell);
+        let trainer_kg = Arc::clone(&kg);
+        let state_ref = &mut state;
+        let trainer = s.spawn(move || {
+            Trainer::new(&rt_train, trainer_kg, tcfg)
+                .with_snapshots(trainer_cell)
+                .train(state_ref)
+                .unwrap();
+        });
+
+        let clients: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let client = client.clone();
+                let kg = Arc::clone(&kg);
+                s.spawn(move || {
+                    let mut rng = Rng::new(100 + c as u64);
+                    let mut got = Vec::with_capacity(PER_CLIENT);
+                    let mut guard = 0usize;
+                    while got.len() < PER_CLIENT && guard < PER_CLIENT * 40 {
+                        guard += 1;
+                        let p = *rng.choice(&[Pattern::P1, Pattern::P2, Pattern::I2]);
+                        let Some(g) = ground(&kg, &mut rng, p) else { continue };
+                        let req = QueryRequest {
+                            tree: g.tree,
+                            filter: vec![g.answer],
+                            top_k: 4,
+                        };
+                        got.push(client.query(req).unwrap());
+                    }
+                    got
+                })
+            })
+            .collect();
+        let answers: Vec<QueryAnswer> = clients
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread panicked"))
+            .collect();
+        trainer.join().expect("trainer thread panicked");
+        answers
+    });
+
+    assert!(answers.len() >= CLIENTS * PER_CLIENT / 2, "clients were starved");
+    for a in &answers {
+        assert!(
+            a.snapshot_step as usize <= STEPS,
+            "answer from an unpublished snapshot step {}",
+            a.snapshot_step
+        );
+        assert_eq!(a.top.len(), 4);
+        assert!(a.top.iter().all(|(_, s)| s.is_finite()));
+    }
+    assert_eq!(cell.published(), 1 + STEPS as u64);
+
+    // after the trainer finished, serving must observe its final publish
+    let final_tree = QueryTree::instantiate(Pattern::P1, &[0], &[0]).unwrap();
+    let late = client
+        .query(QueryRequest { tree: final_tree, filter: vec![], top_k: 3 })
+        .unwrap();
+    assert_eq!(late.snapshot_step as usize, STEPS, "final snapshot must be served");
+
+    assert_eq!(
+        rt_serve
+            .contract_violations
+            .load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "concurrent serve workers must never bypass the submission lock"
+    );
+
+    drop(client);
+    service.shutdown();
+}
