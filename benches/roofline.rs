@@ -1,0 +1,79 @@
+//! Roofline bench: per-op host-kernel throughput (GB/s, elem/s) at
+//! 1/2/4/N threads vs the pre-vectorization scalar baseline. See
+//! `bench_harness::roofline` for the methodology — including the
+//! equivalence contract checked before any timing is trusted (vectorized
+//! legs bitwise identical across thread counts; close to the reference).
+//!
+//! Gated (the CI smoke runs this): the vectorized score kernel at 4
+//! threads must clear **2× the scalar baseline** (skipped on single-core
+//! machines or with `NGDB_ROOFLINE_GATE=0`).
+//!
+//! Env knobs: `NGDB_ROOFLINE_ROWS` (default 2048), `NGDB_ROOFLINE_D`
+//! (128), `NGDB_ROOFLINE_REPS` (5), `NGDB_ROOFLINE_EVAL_B` (256),
+//! `NGDB_ROOFLINE_EVAL_CHUNK` (1024), `NGDB_ROOFLINE_MIN_SPEEDUP` (2.0),
+//! `NGDB_ROOFLINE_GATE` (1), `NGDB_ROOFLINE_JSON` (output path, default
+//! `BENCH_roofline.json`).
+
+use ngdb_zoo::bench_harness::roofline::{run, write_json, RooflineOpts};
+use ngdb_zoo::bench_harness::{banner, knob, print_table};
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut threads = vec![1usize, 2, 4];
+    if cores > 4 {
+        threads.push(cores);
+    }
+    let opts = RooflineOpts {
+        rows: knob("NGDB_ROOFLINE_ROWS", 2048.0) as usize,
+        d: knob("NGDB_ROOFLINE_D", 128.0) as usize,
+        reps: knob("NGDB_ROOFLINE_REPS", 5.0) as usize,
+        eval_b: knob("NGDB_ROOFLINE_EVAL_B", 256.0) as usize,
+        eval_chunk: knob("NGDB_ROOFLINE_EVAL_CHUNK", 1024.0) as usize,
+        threads,
+        ..RooflineOpts::default()
+    };
+    let min_speedup = knob("NGDB_ROOFLINE_MIN_SPEEDUP", 2.0);
+
+    let report = run(&opts).unwrap_or_else(|e| panic!("roofline failed: {e:#}"));
+
+    banner(&format!(
+        "roofline: rows={} d={} eval={}x{} reps={} cores={}",
+        opts.rows, opts.d, opts.eval_b, opts.eval_chunk, opts.reps, report.cores
+    ));
+    let mut rows = Vec::new();
+    for o in &report.ops {
+        let mut cells = vec![
+            o.op.clone(),
+            format!("{:.1}", o.reference.gb_per_s),
+            format!("{:.1e}", o.reference.elems_per_s),
+        ];
+        for l in &o.vectorized {
+            cells.push(format!("{:.1} ({:.2}x)", l.gb_per_s, o.speedup_at(l.threads)));
+        }
+        rows.push(cells);
+    }
+    let thread_headers: Vec<String> =
+        opts.threads.iter().map(|t| format!("vec@{t}T GB/s")).collect();
+    let mut headers = vec!["op", "ref GB/s", "ref elem/s"];
+    headers.extend(thread_headers.iter().map(|s| s.as_str()));
+    print_table(&headers, &rows);
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    let sp4 = report.score_speedup_at(4);
+    let gate_on = knob("NGDB_ROOFLINE_GATE", 1.0) != 0.0 && report.cores >= 2;
+    println!("\n  score speedup @4T vs scalar: {sp4:.2}x (gate: >= {min_speedup:.2}x)");
+    if gate_on {
+        assert!(
+            sp4 >= min_speedup,
+            "vectorized score at 4 threads must clear {min_speedup:.2}x the scalar \
+             baseline, measured {sp4:.2}x"
+        );
+    } else {
+        println!("  gate skipped ({} cores, NGDB_ROOFLINE_GATE)", report.cores);
+    }
+
+    let path = std::env::var("NGDB_ROOFLINE_JSON")
+        .unwrap_or_else(|_| "BENCH_roofline.json".to_string());
+    write_json(&report, min_speedup, &path).unwrap_or_else(|e| panic!("{e:#}"));
+    println!("  wrote {path}");
+}

@@ -6,6 +6,7 @@
 //!
 //! Env knobs: `NGDB_SERVE_QUERIES` (default 256), `NGDB_SERVE_CLIENTS` (8),
 //! `NGDB_SERVE_WORKERS` (2), `NGDB_SERVE_DELAY_US` (300),
+//! `NGDB_SERVE_THREADS` (1 — host-kernel lanes per execute; bitwise-safe),
 //! `NGDB_SERVE_PATTERNS` (comma-separated pattern names, e.g. `1p,2i,ip`),
 //! `NGDB_SERVE_JSON` (output path, default `BENCH_serve_latency.json`).
 
@@ -19,6 +20,7 @@ fn main() {
         clients: knob("NGDB_SERVE_CLIENTS", 8.0) as usize,
         workers: knob("NGDB_SERVE_WORKERS", 2.0) as usize,
         delay_us: knob("NGDB_SERVE_DELAY_US", 300.0) as u64,
+        host_threads: knob("NGDB_SERVE_THREADS", 1.0) as usize,
         ..Default::default()
     };
     if let Ok(names) = std::env::var("NGDB_SERVE_PATTERNS") {

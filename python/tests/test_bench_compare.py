@@ -1,0 +1,159 @@
+"""Unit tests for the CI perf-regression gate (``scripts/bench_compare.py``).
+
+The script is stdlib-only and lives outside the package tree, so it is
+loaded by file path. These tests pin the contract CI relies on: direction
+inference from key names, the tolerance band, exact-zero gating, and the
+missing-key failure mode — plus a check that the committed
+``benches/baselines/BENCH_micro_scheduler.json`` parses and only pins
+gated (direction-matched) fields.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+SCRIPT = os.path.join(ROOT, "scripts", "bench_compare.py")
+BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_micro_scheduler.json")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("bench_compare", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bc = _load()
+
+
+# ---------------------------------------------------------------------------
+# flatten
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_walks_dicts_lists_and_skips_non_numbers():
+    doc = {
+        "a": 1,
+        "b": {"c": 2.5, "s": "text", "n": None, "t": True},
+        "l": [{"x": 3}, 4],
+    }
+    got = dict(bc.flatten(doc))
+    assert got == {"a": 1.0, "b.c": 2.5, "l.0.x": 3.0, "l.1": 4.0}
+
+
+# ---------------------------------------------------------------------------
+# direction inference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "path,expected",
+    [
+        ("pooled.rounds_per_sec", "higher"),
+        ("speedup_rounds_per_sec", "higher"),  # "speedup" wins over "secs"
+        ("windows.0.qps", "higher"),
+        ("pooled.allocs_per_round", "lower"),
+        ("pooled.pool_misses_steady", "lower"),
+        ("steady_state_worker_spawns_per_run", "lower"),
+        ("windows.0.p95_ms", "lower"),
+        ("config.queries", None),  # config subtree is never gated
+        ("rounds_per_run", None),  # no pattern match -> informational
+    ],
+)
+def test_direction(path, expected):
+    assert bc.direction(path) == expected
+
+
+# ---------------------------------------------------------------------------
+# compare: tolerance band, exact-zero, missing keys
+# ---------------------------------------------------------------------------
+
+
+def test_throughput_within_band_passes_and_below_fails():
+    base = {"rounds_per_sec": 100.0}
+    _, ok = bc.compare(base, {"rounds_per_sec": 80.0}, 25.0)
+    assert ok == []
+    _, bad = bc.compare(base, {"rounds_per_sec": 74.0}, 25.0)
+    assert len(bad) == 1 and "rounds_per_sec" in bad[0]
+
+
+def test_cost_within_band_passes_and_above_fails():
+    base = {"allocs_per_round": 48.0}
+    _, ok = bc.compare(base, {"allocs_per_round": 59.0}, 25.0)
+    assert ok == []
+    _, bad = bc.compare(base, {"allocs_per_round": 61.0}, 25.0)
+    assert len(bad) == 1
+
+
+def test_zero_baseline_cost_is_an_exact_gate():
+    base = {"pool_misses_steady": 0}
+    _, ok = bc.compare(base, {"pool_misses_steady": 0}, 25.0)
+    assert ok == []
+    # a percentage band around zero is meaningless: any rise fails
+    _, bad = bc.compare(base, {"pool_misses_steady": 1}, 25.0)
+    assert len(bad) == 1 and "exact zero" in bad[0]
+
+
+def test_missing_gated_key_fails_but_missing_info_key_does_not():
+    base = {"qps": 50.0, "rounds_per_run": 7}
+    _, failures = bc.compare(base, {}, 25.0)
+    assert len(failures) == 1 and "qps" in failures[0]
+
+
+def test_extra_candidate_keys_are_ignored():
+    base = {"qps": 50.0}
+    _, failures = bc.compare(base, {"qps": 50.0, "brand_new_metric_per_s": 1.0}, 25.0)
+    assert failures == []
+
+
+def test_improvements_always_pass():
+    base = {"qps": 50.0, "allocs_per_round": 48.0}
+    cand = {"qps": 500.0, "allocs_per_round": 1.0}
+    _, failures = bc.compare(base, cand, 25.0)
+    assert failures == []
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", {"qps": 100.0, "allocs_per_round": 10.0})
+    good = _write(tmp_path, "good.json", {"qps": 95.0, "allocs_per_round": 11.0})
+    bad = _write(tmp_path, "bad.json", {"qps": 10.0, "allocs_per_round": 11.0})
+    assert bc.main(["--baseline", base, "--candidate", good]) == 0
+    assert bc.main(["--baseline", base, "--candidate", bad]) == 1
+    out = capsys.readouterr()
+    assert "regression" in out.err
+
+
+# ---------------------------------------------------------------------------
+# the committed baseline itself
+# ---------------------------------------------------------------------------
+
+
+def test_committed_baseline_parses_and_its_gates_are_directional():
+    with open(BASELINE) as fh:
+        doc = json.load(fh)
+    assert doc["bench"] == "micro_scheduler"
+    leaves = dict(bc.flatten(doc))
+    gated = {p: v for p, v in leaves.items() if bc.direction(p) is not None}
+    # every pinned numeric leaf must actually gate something; an ungated
+    # pin is dead weight that rots silently
+    assert gated == leaves
+    # the zero contracts the scheduler bench asserts are pinned here too
+    assert gated["steady_state_worker_spawns_per_run"] == 0.0
+    assert gated["pooled.pool_misses_steady"] == 0.0
+    # and a self-consistency check: the baseline passes against itself
+    _, failures = bc.compare(doc, doc, 25.0)
+    assert failures == []

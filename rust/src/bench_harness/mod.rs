@@ -13,6 +13,7 @@
 pub mod fig2_pipelining;
 pub mod fig7_multi_gpu;
 pub mod fig9_adaptive;
+pub mod roofline;
 pub mod serve_latency;
 pub mod table1_massive;
 pub mod table2_single_hop;

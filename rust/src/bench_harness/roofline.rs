@@ -1,0 +1,330 @@
+//! roofline — per-op host-kernel throughput table (GB/s and elem/s per
+//! kernel at 1/2/4/N threads), on the mock runtime (no XLA).
+//!
+//! Each swept op executes one artifact at a bench-sized bucket through
+//! `execute_pooled` on three kinds of legs:
+//!
+//! * **reference** — [`crate::runtime::KernelPath::Reference`], the
+//!   pre-vectorization scalar loops, single-threaded: the baseline every
+//!   speedup is quoted against;
+//! * **vectorized @ t** — the lane-chunked kernels at each thread count in
+//!   the sweep, with the parallel threshold dropped to zero so the worker
+//!   pool engages even for the smaller ops.
+//!
+//! Before any timing is trusted the harness checks the equivalence
+//! contract: every vectorized leg must be **bitwise identical** to the
+//! first (deterministic-reduction mode), and the first must match the
+//! reference leg within a small relative tolerance (the lane fold reorders
+//! the reduction, so bit equality vs the *old* order is not expected at
+//! bench widths). `benches/roofline.rs` adds the CI gate — vectorized
+//! score at 4 threads ≥ 2× reference — and writes `BENCH_roofline.json`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::exec::TensorPool;
+use crate::runtime::{HostKernelConfig, HostTensor, KernelPath, MockRuntime, Runtime};
+use crate::util::rng::Rng;
+
+/// Knobs of one roofline run.
+#[derive(Debug, Clone)]
+pub struct RooflineOpts {
+    /// batch rows of every training-plane op (one compiled bucket)
+    pub rows: usize,
+    /// embedding width
+    pub d: usize,
+    pub n_neg: usize,
+    /// eval artifact dims (query block x entity chunk)
+    pub eval_b: usize,
+    pub eval_chunk: usize,
+    /// timed executions per leg (one untimed warmup precedes them)
+    pub reps: usize,
+    /// thread counts to sweep on the vectorized path
+    pub threads: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for RooflineOpts {
+    fn default() -> RooflineOpts {
+        RooflineOpts {
+            rows: 2048,
+            d: 128,
+            n_neg: 2,
+            eval_b: 256,
+            eval_chunk: 1024,
+            reps: 5,
+            threads: vec![1, 2, 4],
+            seed: 7,
+        }
+    }
+}
+
+/// One measured (path, thread-count) cell.
+#[derive(Debug, Clone)]
+pub struct LegReport {
+    pub threads: usize,
+    pub secs_per_exec: f64,
+    pub elems_per_s: f64,
+    pub gb_per_s: f64,
+}
+
+/// One op's row of the table.
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    pub op: String,
+    pub artifact: String,
+    /// elements touched per exec (inputs + outputs)
+    pub elems: usize,
+    pub bytes: usize,
+    /// reference scalar loops, 1 thread
+    pub reference: LegReport,
+    pub vectorized: Vec<LegReport>,
+}
+
+impl OpReport {
+    /// Vectorized-vs-reference throughput ratio at `threads` (0.0 when that
+    /// leg was not swept).
+    pub fn speedup_at(&self, threads: usize) -> f64 {
+        self.vectorized
+            .iter()
+            .find(|l| l.threads == threads)
+            .map_or(0.0, |l| l.elems_per_s / self.reference.elems_per_s.max(1e-12))
+    }
+}
+
+/// Full sweep report.
+#[derive(Debug, Clone)]
+pub struct RooflineReport {
+    pub opts: RooflineOpts,
+    pub cores: usize,
+    pub ops: Vec<OpReport>,
+}
+
+impl RooflineReport {
+    /// The gated headline: score-kernel speedup at `threads`.
+    pub fn score_speedup_at(&self, threads: usize) -> f64 {
+        self.ops.iter().find(|o| o.op == "score").map_or(0.0, |o| o.speedup_at(threads))
+    }
+}
+
+fn runtime(opts: &RooflineOpts, cfg: HostKernelConfig) -> MockRuntime {
+    MockRuntime::with_config(opts.d, opts.n_neg, &[opts.rows])
+        .with_eval_dims(opts.eval_b, opts.eval_chunk)
+        .with_kernel_config(cfg)
+}
+
+/// Fabricate seeded inputs straight from the artifact's manifest arg
+/// shapes — the same inputs feed every leg of an op.
+fn build_inputs(rt: &MockRuntime, name: &str, seed: u64) -> Result<Vec<HostTensor>> {
+    let meta = rt.manifest().artifact(name)?;
+    let mut rng = Rng::new(seed);
+    Ok(meta
+        .args
+        .iter()
+        .map(|a| {
+            let n: usize = a.shape.iter().product();
+            HostTensor {
+                shape: a.shape.clone(),
+                data: (0..n).map(|_| rng.uniform_sym(1.0)).collect(),
+            }
+        })
+        .collect())
+}
+
+fn footprint(rt: &MockRuntime, name: &str) -> Result<usize> {
+    let meta = rt.manifest().artifact(name)?;
+    let count = |args: &[crate::runtime::ArgMeta]| -> usize {
+        args.iter().map(|a| a.shape.iter().product::<usize>()).sum()
+    };
+    Ok(count(&meta.args) + count(&meta.outputs))
+}
+
+/// Time `reps` pooled executions (after one untimed warmup that also
+/// spawns the kernel worker pool); returns mean seconds per exec plus the
+/// final outputs for the equivalence checks.
+fn measure(
+    rt: &MockRuntime,
+    name: &str,
+    inputs: &[HostTensor],
+    reps: usize,
+) -> Result<(f64, Vec<HostTensor>)> {
+    let pool = TensorPool::new();
+    let mut out = rt.execute_pooled(name, inputs, &pool)?;
+    let t = Instant::now();
+    for _ in 0..reps.max(1) {
+        pool.checkin_all(&mut out);
+        out = rt.execute_pooled(name, inputs, &pool)?;
+    }
+    Ok((t.elapsed().as_secs_f64() / reps.max(1) as f64, out))
+}
+
+fn assert_bitwise(a: &[HostTensor], b: &[HostTensor], what: &str) -> Result<()> {
+    for (ti, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.shape != y.shape {
+            bail!("{what}: output {ti} shape {:?} vs {:?}", x.shape, y.shape);
+        }
+        for (i, (u, v)) in x.data.iter().zip(&y.data).enumerate() {
+            if u.to_bits() != v.to_bits() {
+                bail!(
+                    "{what}: output {ti} element {i} not bitwise equal across \
+                     thread counts: {u} vs {v}"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn assert_close(a: &[HostTensor], b: &[HostTensor], what: &str) -> Result<()> {
+    for (ti, (x, y)) in a.iter().zip(b).enumerate() {
+        for (i, (u, v)) in x.data.iter().zip(&y.data).enumerate() {
+            let tol = 1e-3 * (1.0 + v.abs());
+            if (u - v).abs() > tol {
+                bail!("{what}: output {ti} element {i}: vectorized {u} vs reference {v}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn leg(threads: usize, secs: f64, elems: usize, bytes: usize) -> LegReport {
+    let s = secs.max(1e-12);
+    LegReport {
+        threads,
+        secs_per_exec: secs,
+        elems_per_s: elems as f64 / s,
+        gb_per_s: bytes as f64 / s / 1e9,
+    }
+}
+
+/// Run the sweep. Mock-only: the roofline measures the host kernels
+/// themselves, so no XLA is involved.
+pub fn run(opts: &RooflineOpts) -> Result<RooflineReport> {
+    let b = opts.rows;
+    let specs: Vec<(&str, String)> = vec![
+        ("score", format!("mock_score_fwd_b{b}")),
+        ("project", format!("mock_project_fwd_b{b}")),
+        ("intersect2", format!("mock_intersect2_fwd_b{b}")),
+        ("union2", format!("mock_union2_fwd_b{b}")),
+        ("intersect2-vjp", format!("mock_intersect2_vjp_b{b}")),
+        ("negate", format!("mock_negate_fwd_b{b}")),
+        ("eval", format!("mock_eval_fwd_b{}", opts.eval_b)),
+    ];
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut ops = Vec::with_capacity(specs.len());
+    for (oi, (label, artifact)) in specs.iter().enumerate() {
+        let ref_cfg =
+            HostKernelConfig { path: KernelPath::Reference, ..HostKernelConfig::default() };
+        let ref_rt = runtime(opts, ref_cfg);
+        let inputs = build_inputs(&ref_rt, artifact, opts.seed.wrapping_add(oi as u64))
+            .with_context(|| format!("fabricating inputs for {artifact}"))?;
+        let elems = footprint(&ref_rt, artifact)?;
+        let bytes = elems * 4;
+        let (ref_secs, ref_out) =
+            measure(&ref_rt, artifact, &inputs, opts.reps).with_context(|| artifact.clone())?;
+
+        let mut vectorized = Vec::with_capacity(opts.threads.len());
+        let mut first_out: Option<Vec<HostTensor>> = None;
+        for &t in &opts.threads {
+            let cfg =
+                HostKernelConfig { threads: t, par_min_elems: 0, ..HostKernelConfig::default() };
+            let rt = runtime(opts, cfg);
+            let (secs, out) =
+                measure(&rt, artifact, &inputs, opts.reps).with_context(|| artifact.clone())?;
+            match &first_out {
+                None => {
+                    assert_close(&out, &ref_out, label)?;
+                    first_out = Some(out);
+                }
+                Some(base) => assert_bitwise(&out, base, label)?,
+            }
+            vectorized.push(leg(t, secs, elems, bytes));
+        }
+        ops.push(OpReport {
+            op: label.to_string(),
+            artifact: artifact.clone(),
+            elems,
+            bytes,
+            reference: leg(1, ref_secs, elems, bytes),
+            vectorized,
+        });
+    }
+    Ok(RooflineReport { opts: opts.clone(), cores, ops })
+}
+
+/// Hand-rolled JSON artifact (same dependency-free style as the other
+/// bench artifacts).
+pub fn write_json(report: &RooflineReport, min_speedup: f64, path: &str) -> Result<()> {
+    let mut rows = String::new();
+    for (i, o) in report.ops.iter().enumerate() {
+        let sep = if i + 1 < report.ops.len() { "," } else { "" };
+        let mut legs = String::new();
+        for (j, l) in o.vectorized.iter().enumerate() {
+            let lsep = if j + 1 < o.vectorized.len() { ", " } else { "" };
+            legs.push_str(&format!(
+                "{{\"threads\": {}, \"elems_per_s\": {:.0}, \"gb_per_s\": {:.3}}}{lsep}",
+                l.threads, l.elems_per_s, l.gb_per_s
+            ));
+        }
+        rows.push_str(&format!(
+            "    {{\"op\": \"{}\", \"artifact\": \"{}\", \"elems_per_exec\": {}, \
+             \"bytes_per_exec\": {}, \
+             \"scalar_1t\": {{\"elems_per_s\": {:.0}, \"gb_per_s\": {:.3}}}, \
+             \"vectorized\": [{legs}], \
+             \"speedup_4t_vs_scalar\": {:.3}}}{sep}\n",
+            o.op,
+            o.artifact,
+            o.elems,
+            o.bytes,
+            o.reference.elems_per_s,
+            o.reference.gb_per_s,
+            o.speedup_at(4)
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"roofline\",\n  \"config\": {{\"rows\": {}, \"d\": {}, \
+         \"n_neg\": {}, \"eval_b\": {}, \"eval_chunk\": {}, \"reps\": {}, \
+         \"cores\": {}}},\n  \"gate\": {{\"min_score_speedup_4t\": {:.2}}},\n  \
+         \"ops\": [\n{rows}  ],\n  \"score_speedup_4t_vs_scalar\": {:.3}\n}}\n",
+        report.opts.rows,
+        report.opts.d,
+        report.opts.n_neg,
+        report.opts.eval_b,
+        report.opts.eval_chunk,
+        report.opts.reps,
+        report.cores,
+        min_speedup,
+        report.score_speedup_at(4),
+    );
+    std::fs::write(path, json).with_context(|| format!("writing {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_sweep_passes_equivalence_and_reports_every_op() {
+        // small dims keep this a unit test; the equivalence checks inside
+        // run() are the real assertions
+        let opts = RooflineOpts {
+            rows: 64,
+            d: 16,
+            eval_b: 8,
+            eval_chunk: 32,
+            reps: 1,
+            threads: vec![1, 2],
+            ..RooflineOpts::default()
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.ops.len(), 7);
+        for o in &report.ops {
+            assert!(o.reference.elems_per_s > 0.0, "{}", o.op);
+            assert_eq!(o.vectorized.len(), 2, "{}", o.op);
+        }
+        // 4 threads was not swept here: the ratio degrades to 0, not junk
+        assert_eq!(report.score_speedup_at(4), 0.0);
+        assert!(report.score_speedup_at(2) > 0.0);
+    }
+}

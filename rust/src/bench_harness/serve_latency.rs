@@ -47,6 +47,9 @@ pub struct ServeBenchOpts {
     pub windows: Vec<usize>,
     /// query patterns to sample (textual via `Pattern::from_str`)
     pub patterns: Vec<Pattern>,
+    /// host-kernel compute lanes per execute (1 = serial; deterministic-
+    /// reduction mode keeps results bitwise identical at any setting)
+    pub host_threads: usize,
     pub seed: u64,
 }
 
@@ -59,6 +62,7 @@ impl Default for ServeBenchOpts {
             delay_us: 300,
             windows: vec![1, 4, 16, 64],
             patterns: vec![Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Ip],
+            host_threads: 1,
             seed: 17,
         }
     }
@@ -104,7 +108,8 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeLatencyReport> {
     let rt: Arc<MockRuntime> = Arc::new(
         MockRuntime::with_config(32, 2, &[4, 16, 64])
             .with_eval_dims(32, kg.n_entities.next_power_of_two())
-            .with_exec_delay(Duration::from_micros(opts.delay_us)),
+            .with_exec_delay(Duration::from_micros(opts.delay_us))
+            .with_threads(opts.host_threads),
     );
     let state = ModelState::init(
         rt.manifest(),

@@ -154,11 +154,14 @@ impl EntityRanker {
                     }
                 };
                 let s = &out[0];
+                // the chunk ids are the contiguous run base..base+n, so the
+                // scatter is a straight row copy (memcpy-able, and on the
+                // vectorized kernel path the scores were produced by the
+                // same lane-chunked dot the training plane uses)
+                let n = self.ids.len();
                 for qi in 0..block.len() {
-                    for (j, &e) in self.ids.iter().enumerate() {
-                        scores[(bi * eval_b + qi) * n_ent + e as usize] =
-                            s.data[qi * chunk + j];
-                    }
+                    let dst = (bi * eval_b + qi) * n_ent + base;
+                    scores[dst..dst + n].copy_from_slice(&s.data[qi * chunk..qi * chunk + n]);
                 }
                 pool.checkin_all(&mut out);
                 base += chunk;

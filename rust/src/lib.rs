@@ -15,6 +15,8 @@
 //! Python never runs on the training hot path: the Rust binary loads
 //! `artifacts/*.hlo.txt` through PJRT (the `xla` crate) and drives everything.
 
+#![cfg_attr(feature = "unstable-simd", feature(portable_simd))]
+
 pub mod kg;
 pub mod bench_harness;
 pub mod config;

@@ -81,6 +81,29 @@ impl HostTensor {
         let w = self.row_width();
         self.data[from * w..].fill(0.0);
     }
+
+    /// Elementwise `self += other` (shapes must match).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// Dot of this tensor's row `i` with `other`'s row `j`, via the
+    /// canonical lane-chunked reduction ([`super::kernels::dot`]) — the
+    /// same order every kernel uses, so host-side checks reproduce kernel
+    /// results bit for bit.
+    pub fn dot_rows(&self, i: usize, other: &HostTensor, j: usize) -> f32 {
+        super::kernels::dot(self.row(i), other.row(j))
+    }
 }
 
 #[cfg(test)]
@@ -117,5 +140,19 @@ mod tests {
         assert_eq!(t.data, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
         t.zero();
         assert_eq!(t.data, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn dense_helpers() {
+        let mut a = HostTensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = HostTensor::new(vec![2, 3], vec![0.5; 6]).unwrap();
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![1.5, 2.5, 3.5, 4.5, 5.5, 6.5]);
+        a.scale(2.0);
+        assert_eq!(a.data[0], 3.0);
+        let q = HostTensor::new(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let e = HostTensor::new(vec![2, 3], vec![1.0, 1.0, 1.0, 0.0, 1.0, 0.0]).unwrap();
+        assert_eq!(q.dot_rows(0, &e, 0), 6.0);
+        assert_eq!(q.dot_rows(0, &e, 1), 2.0);
     }
 }

@@ -1,0 +1,751 @@
+//! Lane-chunked, multi-core host kernels — the vectorized compute path
+//! behind [`super::mock::MockRuntime`] and the dense helpers in
+//! [`super::host`].
+//!
+//! # Lane chunking
+//!
+//! Every inner loop walks its rows with `chunks_exact(LANES)` and a fixed
+//! array of `LANES` independent accumulators, then folds lanes and the
+//! scalar remainder *in index order*. The shape is what LLVM's
+//! autovectorizer wants (no cross-iteration dependence inside a lane
+//! group), and the explicit fold order makes the reduction a deterministic
+//! function of the data alone. With the `unstable-simd` feature the same
+//! loops run on `std::simd::f32x8`, preserving the identical lane fold so
+//! the two builds are bitwise interchangeable.
+//!
+//! # Deterministic reduction
+//!
+//! Multi-threading splits a batch into row chunks. In deterministic mode
+//! (the default) the chunk boundaries are a pure function of the row count
+//! — **never** of the thread count — and every cross-chunk reduction
+//! (the score loss) stores per-chunk partials indexed by chunk id, folded
+//! sequentially by the submitting thread after the join. Consequences the
+//! test suite pins down:
+//!
+//! * results are bitwise identical across thread counts {1, 2, 4, N};
+//! * the pool-contended inline fallback ([`super::parallel::HostPool`])
+//!   is bitwise identical too, so concurrent serve workers never observe
+//!   scheduling-dependent numerics;
+//! * elementwise kernels write disjoint rows and are trivially exact.
+//!
+//! [`KernelPath::Reference`] retains the pre-vectorization scalar loops —
+//! the roofline bench's baseline and the tolerance-checked cross-check for
+//! the reordered reductions.
+
+use std::sync::OnceLock;
+
+use super::parallel::HostPool;
+
+/// Lane width of the chunked iteration (f32x8: one AVX2 register, two
+/// NEON registers).
+pub const LANES: usize = 8;
+
+/// Upper bound on chunks per kernel invocation; also the size of the
+/// stack-allocated per-chunk partials array in [`score_rows`], so raising
+/// it costs stack, not heap.
+pub const MAX_PAR_CHUNKS: usize = 64;
+
+/// Minimum rows per chunk in deterministic mode. Boundaries depend only on
+/// the row count, so any thread count — including 1 — sees the same
+/// chunks.
+pub const DET_CHUNK_ROWS: usize = 16;
+
+/// Default minimum problem size (rows × row width) before a kernel engages
+/// the worker pool; smaller problems run inline — at unit-test dims the
+/// pool never wakes.
+pub const PAR_MIN_ELEMS_DEFAULT: usize = 4096;
+
+/// Which inner-loop implementation the kernels run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPath {
+    /// lane-chunked + fused accumulators (the production path)
+    #[default]
+    Vectorized,
+    /// pre-vectorization scalar loops (bench baseline / cross-check)
+    Reference,
+}
+
+/// Host-kernel tuning knobs; see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostKernelConfig {
+    /// total compute lanes: the submitting thread plus `threads - 1` pool
+    /// workers (clamped to `[1, MAX_PAR_CHUNKS]`)
+    pub threads: usize,
+    /// fixed chunk boundaries + ordered fold (bitwise across thread
+    /// counts); `false` trades that for thread-count-sized chunks
+    pub deterministic: bool,
+    pub path: KernelPath,
+    /// problems smaller than this many elements stay on the caller
+    pub par_min_elems: usize,
+}
+
+impl Default for HostKernelConfig {
+    fn default() -> HostKernelConfig {
+        HostKernelConfig {
+            threads: 1,
+            deterministic: true,
+            path: KernelPath::Vectorized,
+            par_min_elems: PAR_MIN_ELEMS_DEFAULT,
+        }
+    }
+}
+
+/// How one kernel invocation over `rows` rows is diced. `chunk_rows` is a
+/// pure function of `rows` in deterministic mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPlan {
+    pub rows: usize,
+    pub chunk_rows: usize,
+    pub n_chunks: usize,
+}
+
+/// A kernel executor: configuration plus a lazily spawned worker pool.
+/// `HostKernels::serial()` (the default) never spawns anything.
+pub struct HostKernels {
+    cfg: HostKernelConfig,
+    pool: OnceLock<HostPool>,
+}
+
+impl Default for HostKernels {
+    fn default() -> HostKernels {
+        HostKernels::serial()
+    }
+}
+
+impl HostKernels {
+    /// Single-threaded vectorized kernels (no pool, ever).
+    pub fn serial() -> HostKernels {
+        HostKernels::with_config(HostKernelConfig::default())
+    }
+
+    pub fn with_config(mut cfg: HostKernelConfig) -> HostKernels {
+        cfg.threads = cfg.threads.clamp(1, MAX_PAR_CHUNKS);
+        HostKernels { cfg, pool: OnceLock::new() }
+    }
+
+    pub fn config(&self) -> HostKernelConfig {
+        self.cfg
+    }
+
+    fn reference(&self) -> bool {
+        self.cfg.path == KernelPath::Reference
+    }
+
+    /// Dice `rows` rows into chunks. Deterministic mode ignores the thread
+    /// count entirely; otherwise one chunk per thread.
+    pub fn plan(&self, rows: usize) -> ChunkPlan {
+        let chunk_rows = if self.cfg.deterministic || self.cfg.threads <= 1 {
+            DET_CHUNK_ROWS.max(rows.div_ceil(MAX_PAR_CHUNKS))
+        } else {
+            rows.div_ceil(self.cfg.threads).max(1)
+        };
+        ChunkPlan { rows, chunk_rows, n_chunks: rows.div_ceil(chunk_rows).max(1) }
+    }
+
+    /// Run `f(chunk_idx, row_lo, row_hi)` over every chunk of `plan`,
+    /// parallel when the problem clears `par_min_elems` (`width` = elements
+    /// touched per row), inline otherwise. Chunk results must only depend
+    /// on the chunk id — the dispatch order is unspecified.
+    pub fn run_chunks<F>(&self, plan: &ChunkPlan, width: usize, f: F)
+    where
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        let bounds = |ci: usize| {
+            let r0 = ci * plan.chunk_rows;
+            (r0, plan.rows.min(r0 + plan.chunk_rows))
+        };
+        let parallel = self.cfg.threads > 1
+            && plan.n_chunks > 1
+            && plan.rows.saturating_mul(width) >= self.cfg.par_min_elems;
+        if !parallel {
+            for ci in 0..plan.n_chunks {
+                let (r0, r1) = bounds(ci);
+                f(ci, r0, r1);
+            }
+            return;
+        }
+        let pool = self.pool.get_or_init(|| HostPool::new(self.cfg.threads - 1));
+        pool.run(plan.n_chunks, &|ci| {
+            let (r0, r1) = bounds(ci);
+            f(ci, r0, r1);
+        });
+    }
+}
+
+/// Shared-nothing view of a mutable row-major buffer: each chunk of a
+/// kernel touches a disjoint row range, so handing every worker the same
+/// base pointer is race-free by construction.
+struct SyncRows {
+    ptr: *mut f32,
+    w: usize,
+    len: usize,
+}
+
+// SAFETY: all access goes through `row`/`span`, whose callers guarantee
+// disjoint row ranges per chunk (the ChunkPlan invariant).
+unsafe impl Send for SyncRows {}
+unsafe impl Sync for SyncRows {}
+
+impl SyncRows {
+    fn new(s: &mut [f32], w: usize) -> SyncRows {
+        debug_assert!(w > 0 && s.len() % w == 0, "len {} not a multiple of width {w}", s.len());
+        SyncRows { ptr: s.as_mut_ptr(), w, len: s.len() }
+    }
+
+    /// SAFETY: caller must ensure no other live reference overlaps row `i`
+    /// (chunks own disjoint row ranges).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn row(&self, i: usize) -> &mut [f32] {
+        debug_assert!((i + 1) * self.w <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.w), self.w)
+    }
+
+    /// SAFETY: as [`SyncRows::row`], for the contiguous rows `r0..r1`.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn span(&self, r0: usize, r1: usize) -> &mut [f32] {
+        debug_assert!(r0 <= r1 && r1 * self.w <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r0 * self.w), (r1 - r0) * self.w)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dot product — the canonical lane-chunked reduction
+// ---------------------------------------------------------------------------
+
+/// Lane-chunked dot product: `LANES` independent accumulators over the
+/// `chunks_exact` body, lanes folded in index order, then the remainder in
+/// element order. The reduction order is fixed — it is the *definition* of
+/// the deterministic dot in this crate.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(feature = "unstable-simd")]
+    {
+        dot_simd(a, b)
+    }
+    #[cfg(not(feature = "unstable-simd"))]
+    {
+        dot_lanes(a, b)
+    }
+}
+
+#[cfg_attr(feature = "unstable-simd", allow(dead_code))]
+#[inline]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for ((s, x), y) in acc.iter_mut().zip(xa).zip(xb) {
+            *s += x * y;
+        }
+    }
+    let mut s = 0.0f32;
+    for lane in acc {
+        s += lane;
+    }
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+#[cfg(feature = "unstable-simd")]
+#[inline]
+fn dot_simd(a: &[f32], b: &[f32]) -> f32 {
+    use std::simd::f32x8;
+    let mut acc = f32x8::splat(0.0);
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        acc += f32x8::from_slice(xa) * f32x8::from_slice(xb);
+    }
+    // Fold lanes in index order — the same reduction order as `dot_lanes`,
+    // so the simd and non-simd builds are bitwise interchangeable.
+    let mut s = 0.0f32;
+    for lane in acc.to_array() {
+        s += lane;
+    }
+    for (x, y) in ra.iter().zip(rb) {
+        s += x * y;
+    }
+    s
+}
+
+/// Pre-vectorization sequential dot (the seed-era reduction order).
+#[inline]
+pub fn dot_reference(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// row-parallel elementwise kernels
+// ---------------------------------------------------------------------------
+
+/// `out[..rows*w] = v` — the (optionally threaded) memset behind scrubbing
+/// recycled gradient buffers.
+pub fn fill_rows(h: &HostKernels, out: &mut [f32], rows: usize, w: usize, v: f32) {
+    debug_assert_eq!(out.len(), rows * w);
+    if h.reference() {
+        out.fill(v);
+        return;
+    }
+    let plan = h.plan(rows);
+    let ov = SyncRows::new(out, w);
+    h.run_chunks(&plan, w, |_ci, r0, r1| {
+        // SAFETY: chunks own disjoint row ranges.
+        unsafe { ov.span(r0, r1) }.fill(v);
+    });
+}
+
+/// `out[i] += addend[i]` over `rows` rows of width `w` (project /
+/// fused-semantic forward).
+pub fn add_assign_rows(h: &HostKernels, out: &mut [f32], addend: &[f32], rows: usize, w: usize) {
+    debug_assert_eq!(out.len(), rows * w);
+    debug_assert_eq!(addend.len(), rows * w);
+    if h.reference() {
+        for (o, a) in out.iter_mut().zip(addend) {
+            *o += a;
+        }
+        return;
+    }
+    let plan = h.plan(rows);
+    let ov = SyncRows::new(out, w);
+    h.run_chunks(&plan, 2 * w, |_ci, r0, r1| {
+        // SAFETY: chunks own disjoint row ranges.
+        let span = unsafe { ov.span(r0, r1) };
+        for (o, a) in span.iter_mut().zip(&addend[r0 * w..r1 * w]) {
+            *o += a;
+        }
+    });
+}
+
+/// `out[i] = -out[i]` over `rows` rows of width `w`.
+pub fn negate_rows(h: &HostKernels, out: &mut [f32], rows: usize, w: usize) {
+    debug_assert_eq!(out.len(), rows * w);
+    if h.reference() {
+        for x in out.iter_mut() {
+            *x = -*x;
+        }
+        return;
+    }
+    let plan = h.plan(rows);
+    let ov = SyncRows::new(out, w);
+    h.run_chunks(&plan, w, |_ci, r0, r1| {
+        // SAFETY: chunks own disjoint row ranges.
+        for x in unsafe { ov.span(r0, r1) }.iter_mut() {
+            *x = -*x;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// pooling kernels (intersect / union mean over k operands)
+// ---------------------------------------------------------------------------
+
+/// `out[i] += mean_j(xs[i][j]) + bias` for `rows` rows; `xs` is
+/// `[rows, k, w]`, `out` is `[rows, w]` and must be pre-zeroed (the mock
+/// accumulates into it). Per-element math is `Σ_j x/k` in `j` order then
+/// `+ bias` — exactly the seed expression, so vectorized and reference
+/// agree bitwise.
+pub fn mean_pool_rows(
+    h: &HostKernels,
+    out: &mut [f32],
+    xs: &[f32],
+    rows: usize,
+    k: usize,
+    w: usize,
+    bias: f32,
+) {
+    debug_assert_eq!(out.len(), rows * w);
+    debug_assert_eq!(xs.len(), rows * k * w);
+    let kf = k as f32;
+    if h.reference() {
+        reference::mean_pool(out, xs, rows, k, w, kf, bias);
+        return;
+    }
+    let plan = h.plan(rows);
+    let ov = SyncRows::new(out, w);
+    h.run_chunks(&plan, (k + 1) * w, |_ci, r0, r1| {
+        for i in r0..r1 {
+            // SAFETY: chunks own disjoint row ranges.
+            let orow = unsafe { ov.row(i) };
+            for part in xs[i * k * w..(i + 1) * k * w].chunks_exact(w) {
+                for (o, x) in orow.iter_mut().zip(part) {
+                    *o += x / kf;
+                }
+            }
+            for o in orow.iter_mut() {
+                *o += bias;
+            }
+        }
+    });
+}
+
+/// Mean-pool VJP: `g[i][j] = gout[i] / k` broadcast over all `k` operand
+/// slots; `g` is `[rows, k, w]` and is fully overwritten.
+pub fn mean_pool_vjp(
+    h: &HostKernels,
+    g: &mut [f32],
+    gout: &[f32],
+    rows: usize,
+    k: usize,
+    w: usize,
+) {
+    debug_assert_eq!(g.len(), rows * k * w);
+    debug_assert_eq!(gout.len(), rows * w);
+    let kf = k as f32;
+    if h.reference() {
+        reference::mean_pool_vjp(g, gout, rows, k, w, kf);
+        return;
+    }
+    let plan = h.plan(rows);
+    let gv = SyncRows::new(g, k * w);
+    h.run_chunks(&plan, (k + 1) * w, |_ci, r0, r1| {
+        for i in r0..r1 {
+            // SAFETY: chunks own disjoint row ranges.
+            let grow = unsafe { gv.row(i) };
+            let gout_row = &gout[i * w..(i + 1) * w];
+            for part in grow.chunks_exact_mut(w) {
+                for (gd, go) in part.iter_mut().zip(gout_row) {
+                    *gd = go / kf;
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// score + rank kernels (the reductions)
+// ---------------------------------------------------------------------------
+
+/// Masked scoring kernel: per row `i`, `dot_i = q_i · pos_i` (lane-chunked
+/// [`dot`]), `loss += mask_i * dot_i`, `gq_i = mask_i * pos_i`,
+/// `gpos_i = mask_i * q_i`. The loss is reduced via per-chunk partials
+/// folded in chunk order on the submitting thread — deterministic across
+/// thread counts. Returns the loss.
+pub fn score_rows(
+    h: &HostKernels,
+    q: &[f32],
+    pos: &[f32],
+    mask: &[f32],
+    rows: usize,
+    w: usize,
+    gq: &mut [f32],
+    gpos: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(q.len(), rows * w);
+    debug_assert_eq!(pos.len(), rows * w);
+    debug_assert_eq!(mask.len(), rows);
+    debug_assert_eq!(gq.len(), rows * w);
+    debug_assert_eq!(gpos.len(), rows * w);
+    if h.reference() {
+        return reference::score(q, pos, mask, rows, w, gq, gpos);
+    }
+    let plan = h.plan(rows);
+    debug_assert!(plan.n_chunks <= MAX_PAR_CHUNKS);
+    let gqv = SyncRows::new(gq, w);
+    let gpv = SyncRows::new(gpos, w);
+    // One loss partial per chunk, written by whichever thread ran the
+    // chunk, folded in chunk order below. Stack array — no heap.
+    let mut partials = [0.0f32; MAX_PAR_CHUNKS];
+    let pv = SyncRows::new(&mut partials, 1);
+    h.run_chunks(&plan, 4 * w, |ci, r0, r1| {
+        let mut part = 0.0f32;
+        for i in r0..r1 {
+            let m = mask[i];
+            let qr = &q[i * w..(i + 1) * w];
+            let pr = &pos[i * w..(i + 1) * w];
+            part += m * dot(qr, pr);
+            // SAFETY: chunks own disjoint row ranges.
+            let (gqr, gpr) = unsafe { (gqv.row(i), gpv.row(i)) };
+            for ((gq_c, gp_c), (qc, pc)) in gqr.iter_mut().zip(gpr).zip(qr.iter().zip(pr)) {
+                *gq_c = m * pc;
+                *gp_c = m * qc;
+            }
+        }
+        // SAFETY: exactly one chunk writes partial `ci`.
+        unsafe { pv.row(ci) }[0] = part;
+    });
+    let mut loss = 0.0f32;
+    for p in &partials[..plan.n_chunks] {
+        loss += p;
+    }
+    loss
+}
+
+/// Rank-against-all matmul `out = Q · Eᵀ`: `out[i][j] = q_i · ents_j` with
+/// the lane-chunked [`dot`], parallel over query rows. `out` is
+/// `[rows, cols]`, fully overwritten.
+pub fn matmul_nt(
+    h: &HostKernels,
+    q: &[f32],
+    ents: &[f32],
+    rows: usize,
+    cols: usize,
+    w: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(q.len(), rows * w);
+    debug_assert_eq!(ents.len(), cols * w);
+    debug_assert_eq!(out.len(), rows * cols);
+    if h.reference() {
+        reference::matmul_nt(q, ents, rows, cols, w, out);
+        return;
+    }
+    let plan = h.plan(rows);
+    let ov = SyncRows::new(out, cols);
+    h.run_chunks(&plan, (cols + 2) * w, |_ci, r0, r1| {
+        for i in r0..r1 {
+            let qr = &q[i * w..(i + 1) * w];
+            // SAFETY: chunks own disjoint row ranges.
+            let orow = unsafe { ov.row(i) };
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(qr, &ents[j * w..(j + 1) * w]);
+            }
+        }
+    });
+}
+
+/// The pre-vectorization scalar loops, verbatim from the seed mock — kept
+/// as the roofline baseline and the cross-check for the reordered
+/// reductions. Index-style loops are deliberate (this *is* the old code).
+mod reference {
+    #[allow(clippy::needless_range_loop)]
+    pub fn mean_pool(
+        out: &mut [f32],
+        xs: &[f32],
+        rows: usize,
+        k: usize,
+        w: usize,
+        kf: f32,
+        bias: f32,
+    ) {
+        for i in 0..rows {
+            for j in 0..k {
+                for c in 0..w {
+                    out[i * w + c] += xs[i * k * w + j * w + c] / kf;
+                }
+            }
+            for c in 0..w {
+                out[i * w + c] += bias;
+            }
+        }
+    }
+
+    #[allow(clippy::needless_range_loop)]
+    pub fn mean_pool_vjp(g: &mut [f32], gout: &[f32], rows: usize, k: usize, w: usize, kf: f32) {
+        for i in 0..rows {
+            for j in 0..k {
+                for c in 0..w {
+                    g[i * k * w + j * w + c] = gout[i * w + c] / kf;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::needless_range_loop)]
+    pub fn score(
+        q: &[f32],
+        pos: &[f32],
+        mask: &[f32],
+        rows: usize,
+        w: usize,
+        gq: &mut [f32],
+        gpos: &mut [f32],
+    ) -> f32 {
+        let mut loss = 0.0f32;
+        for i in 0..rows {
+            let m = mask[i];
+            let qr = &q[i * w..(i + 1) * w];
+            let dot: f32 = qr.iter().zip(&pos[i * w..(i + 1) * w]).map(|(a, b)| a * b).sum();
+            loss += m * dot;
+            for c in 0..w {
+                gq[i * w + c] = m * pos[i * w + c];
+                gpos[i * w + c] = m * q[i * w + c];
+            }
+        }
+        loss
+    }
+
+    pub fn matmul_nt(q: &[f32], ents: &[f32], rows: usize, cols: usize, w: usize, out: &mut [f32]) {
+        for i in 0..rows {
+            for j in 0..cols {
+                out[i * cols + j] = q[i * w..(i + 1) * w]
+                    .iter()
+                    .zip(&ents[j * w..(j + 1) * w])
+                    .map(|(a, b)| a * b)
+                    .sum();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_of(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_sym(1.0)).collect()
+    }
+
+    fn threaded(threads: usize) -> HostKernels {
+        HostKernels::with_config(HostKernelConfig {
+            threads,
+            par_min_elems: 0,
+            ..HostKernelConfig::default()
+        })
+    }
+
+    #[test]
+    fn dot_matches_reference_closely_and_exactly_at_small_widths() {
+        let mut rng = Rng::new(7);
+        for n in [0usize, 1, 4, 7, 8, 9, 31, 64, 177] {
+            let a = vec_of(&mut rng, n);
+            let b = vec_of(&mut rng, n);
+            let v = dot(&a, &b);
+            let r = dot_reference(&a, &b);
+            let tol = 1e-5 * (1.0 + r.abs());
+            assert!((v - r).abs() <= tol, "n={n}: {v} vs {r}");
+            if n < LANES {
+                // below one lane group the two orders coincide exactly
+                assert_eq!(v.to_bits(), r.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_plan_ignores_thread_count() {
+        for rows in [0usize, 1, 15, 16, 17, 100, 1024, 10_000] {
+            let plans: Vec<ChunkPlan> =
+                [1usize, 2, 4, 13].iter().map(|&t| threaded(t).plan(rows)).collect();
+            assert!(plans.windows(2).all(|p| p[0] == p[1]), "rows={rows}: {plans:?}");
+            let p = plans[0];
+            assert!(p.n_chunks <= MAX_PAR_CHUNKS);
+            assert!(p.n_chunks * p.chunk_rows >= rows);
+        }
+    }
+
+    #[test]
+    fn score_is_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(42);
+        let (rows, w) = (137, 33);
+        let q = vec_of(&mut rng, rows * w);
+        let pos = vec_of(&mut rng, rows * w);
+        let mask: Vec<f32> =
+            (0..rows).map(|_| if rng.chance(0.8) { 1.0 } else { 0.0 }).collect();
+        let mut base: Option<(f32, Vec<f32>, Vec<f32>)> = None;
+        for t in [1usize, 2, 4, 8] {
+            let h = threaded(t);
+            let mut gq = vec![0.0f32; rows * w];
+            let mut gpos = vec![0.0f32; rows * w];
+            let loss = score_rows(&h, &q, &pos, &mask, rows, w, &mut gq, &mut gpos);
+            match &base {
+                None => base = Some((loss, gq, gpos)),
+                Some((l0, gq0, gp0)) => {
+                    assert_eq!(loss.to_bits(), l0.to_bits(), "threads={t}");
+                    assert_eq!(&gq, gq0, "threads={t}");
+                    assert_eq!(&gpos, gp0, "threads={t}");
+                }
+            }
+        }
+        // and close to the reference ordering
+        let href = HostKernels::with_config(HostKernelConfig {
+            path: KernelPath::Reference,
+            ..HostKernelConfig::default()
+        });
+        let mut gq = vec![0.0f32; rows * w];
+        let mut gpos = vec![0.0f32; rows * w];
+        let ref_loss = score_rows(&href, &q, &pos, &mask, rows, w, &mut gq, &mut gpos);
+        let (loss, gq_v, gp_v) = base.unwrap();
+        assert!((loss - ref_loss).abs() <= 1e-4 * (1.0 + ref_loss.abs()));
+        assert_eq!(gq, gq_v, "grads are elementwise — exactly equal");
+        assert_eq!(gpos, gp_v);
+    }
+
+    #[test]
+    fn elementwise_kernels_match_reference_bitwise() {
+        let mut rng = Rng::new(3);
+        let (rows, k, w) = (67, 3, 21);
+        let xs = vec_of(&mut rng, rows * k * w);
+        let gout = vec_of(&mut rng, rows * w);
+        for t in [1usize, 4] {
+            let h = threaded(t);
+            let href = HostKernels::with_config(HostKernelConfig {
+                path: KernelPath::Reference,
+                ..HostKernelConfig::default()
+            });
+
+            let mut a = vec![0.0f32; rows * w];
+            let mut b = vec![0.0f32; rows * w];
+            mean_pool_rows(&h, &mut a, &xs, rows, k, w, 1.0);
+            mean_pool_rows(&href, &mut b, &xs, rows, k, w, 1.0);
+            assert_eq!(a, b, "mean_pool threads={t}");
+
+            let mut ga = vec![0.0f32; rows * k * w];
+            let mut gb = vec![0.0f32; rows * k * w];
+            mean_pool_vjp(&h, &mut ga, &gout, rows, k, w);
+            mean_pool_vjp(&href, &mut gb, &gout, rows, k, w);
+            assert_eq!(ga, gb, "mean_pool_vjp threads={t}");
+
+            let mut na = gout.clone();
+            let mut nb = gout.clone();
+            negate_rows(&h, &mut na, rows, w);
+            negate_rows(&href, &mut nb, rows, w);
+            assert_eq!(na, nb, "negate threads={t}");
+
+            let mut fa = gout.clone();
+            fill_rows(&h, &mut fa, rows, w, 0.0);
+            assert!(fa.iter().all(|&x| x == 0.0), "fill threads={t}");
+
+            let mut aa = gout.clone();
+            let mut ab = gout.clone();
+            add_assign_rows(&h, &mut aa, &xs[..rows * w], rows, w);
+            add_assign_rows(&href, &mut ab, &xs[..rows * w], rows, w);
+            assert_eq!(aa, ab, "add_assign threads={t}");
+        }
+    }
+
+    #[test]
+    fn matmul_is_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(11);
+        let (rows, cols, w) = (49, 35, 19);
+        let q = vec_of(&mut rng, rows * w);
+        let ents = vec_of(&mut rng, cols * w);
+        let mut base: Option<Vec<f32>> = None;
+        for t in [1usize, 2, 4] {
+            let h = threaded(t);
+            let mut out = vec![0.0f32; rows * cols];
+            matmul_nt(&h, &q, &ents, rows, cols, w, &mut out);
+            match &base {
+                None => base = Some(out),
+                Some(o0) => assert_eq!(&out, o0, "threads={t}"),
+            }
+        }
+        let href = HostKernels::with_config(HostKernelConfig {
+            path: KernelPath::Reference,
+            ..HostKernelConfig::default()
+        });
+        let mut rout = vec![0.0f32; rows * cols];
+        matmul_nt(&href, &q, &ents, rows, cols, w, &mut rout);
+        for (v, r) in base.unwrap().iter().zip(&rout) {
+            assert!((v - r).abs() <= 1e-4 * (1.0 + r.abs()));
+        }
+    }
+
+    #[test]
+    fn serial_kernels_never_spawn_a_pool() {
+        let h = HostKernels::serial();
+        let mut out = vec![1.0f32; 64 * 32];
+        fill_rows(&h, &mut out, 64, 32, 0.5);
+        assert!(h.pool.get().is_none(), "serial config must not materialize workers");
+        assert!(out.iter().all(|&x| x == 0.5));
+    }
+}

@@ -22,6 +22,19 @@
 //! the mock counterpart of the `fused-<encoder>` semantic artifacts, paired
 //! with [`crate::semantic::mock`] sources.
 //!
+//! # Host kernels
+//!
+//! All op bodies route through [`super::kernels`] — lane-chunked,
+//! optionally multi-core loops with a deterministic-reduction mode (see
+//! that module's docs). The default configuration is single-threaded and
+//! bitwise identical to the historical scalar loops at unit-test
+//! dimensions; [`MockRuntime::with_threads`] /
+//! [`MockRuntime::with_kernel_config`] widen the compute path for benches
+//! and equivalence suites, and [`MockRuntime::with_reference_kernels`]
+//! pins the pre-vectorization loops (the roofline baseline). Threading is
+//! *internal* to one `execute` call, so the runtime's concurrency contract
+//! (`concurrent_execute_safe` / `submission_lock`) is untouched.
+//!
 //! # Concurrency instrumentation
 //!
 //! The mock's host math is pure, so concurrent `execute` calls are
@@ -43,6 +56,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 
 use super::host::HostTensor;
+use super::kernels::{self, HostKernelConfig, HostKernels, KernelPath};
 use super::manifest::{ArgMeta, ArtifactMeta, Dims, Manifest};
 use super::Runtime;
 
@@ -87,6 +101,9 @@ pub struct MockRuntime {
     pub contract_violations: AtomicU64,
     /// begin/end event log, recorded only when enabled via `with_call_log`
     call_log: Option<Mutex<Vec<(CallEvent, String)>>>,
+    /// the lane-chunked (optionally multi-core) compute path every op body
+    /// runs on; single-threaded by default
+    host: HostKernels,
 }
 
 /// Deepest Begin-without-End nesting of a [`MockRuntime`] call log: 1 means
@@ -241,7 +258,34 @@ impl MockRuntime {
             in_flight: AtomicU64::new(0),
             contract_violations: AtomicU64::new(0),
             call_log: None,
+            host: HostKernels::serial(),
         }
+    }
+
+    /// Split every kernel across `threads` compute lanes (the caller plus
+    /// a persistent worker pool, spawned lazily on the first large-enough
+    /// execute). Deterministic-reduction mode stays on, so results are
+    /// bitwise identical for every thread count.
+    pub fn with_threads(mut self, threads: usize) -> MockRuntime {
+        let cfg = HostKernelConfig { threads, ..self.host.config() };
+        self.host = HostKernels::with_config(cfg);
+        self
+    }
+
+    /// Replace the host-kernel configuration wholesale (thread count,
+    /// deterministic-reduction mode, kernel path, parallel threshold).
+    pub fn with_kernel_config(mut self, cfg: HostKernelConfig) -> MockRuntime {
+        self.host = HostKernels::with_config(cfg);
+        self
+    }
+
+    /// Pin the pre-vectorization scalar loops — the roofline bench's
+    /// baseline leg.
+    pub fn with_reference_kernels(mut self) -> MockRuntime {
+        let cfg =
+            HostKernelConfig { path: KernelPath::Reference, threads: 1, ..self.host.config() };
+        self.host = HostKernels::with_config(cfg);
+        self
     }
 
     /// Sleep `delay` inside every `execute` call (slow-execute mode): the
@@ -344,7 +388,10 @@ impl MockRuntime {
             std::thread::sleep(delay);
         }
 
-        // output fabrication primitives: recycled when a pool is supplied
+        // Output fabrication primitives: recycled when a pool is supplied.
+        // `fresh` may hand back stale pooled bytes — every consumer below
+        // either fully overwrites the buffer or scrubs it with a (threaded)
+        // `fill_rows`, so values stay bit-identical to the unpooled path.
         let copy_of = |t: &HostTensor| -> HostTensor {
             match pool {
                 Some(p) => {
@@ -355,104 +402,69 @@ impl MockRuntime {
                 None => t.clone(),
             }
         };
-        let zeros = |shape: &[usize]| -> HostTensor {
+        let fresh = |shape: &[usize]| -> HostTensor {
             match pool {
-                Some(p) => p.checkout_zeroed(shape),
+                Some(p) => p.checkout_dirty(shape),
                 None => HostTensor::zeros(shape.to_vec()),
             }
         };
 
+        let hk = &self.host;
         let d = self.manifest.dims.d;
         let b = meta.bucket;
         let out = match (meta.op.as_str(), meta.direction.as_str()) {
             ("embed", "fwd") => vec![copy_of(&inputs[0])],
             ("embed", "vjp") => vec![copy_of(&inputs[1])],
-            ("fused-sem", "fwd") => {
+            ("fused-sem", "fwd") | ("project", "fwd") => {
                 let mut o = copy_of(&inputs[0]);
-                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
-                    *a += b;
-                }
+                kernels::add_assign_rows(hk, &mut o.data, &inputs[1].data, b, d);
                 vec![o]
             }
             ("fused-sem", "vjp") => vec![copy_of(&inputs[2])],
-            ("project", "fwd") => {
-                let mut o = copy_of(&inputs[0]);
-                for (a, b) in o.data.iter_mut().zip(&inputs[1].data) {
-                    *a += b;
-                }
-                vec![o]
-            }
             ("project", "vjp") => vec![copy_of(&inputs[2]), copy_of(&inputs[2])],
             (op, "fwd") if op.starts_with("intersect") || op.starts_with("union") => {
                 let k = op[op.len() - 1..].parse::<usize>().unwrap();
-                let xs = &inputs[0];
                 let bias = if op.starts_with("union") { 1.0 } else { 0.0 };
-                let mut o = zeros(&[b, d]);
-                for i in 0..b {
-                    for j in 0..k {
-                        for c in 0..d {
-                            o.data[i * d + c] += xs.data[i * k * d + j * d + c] / k as f32;
-                        }
-                    }
-                    for c in 0..d {
-                        o.data[i * d + c] += bias;
-                    }
-                }
+                let mut o = fresh(&[b, d]);
+                kernels::fill_rows(hk, &mut o.data, b, d, 0.0);
+                kernels::mean_pool_rows(hk, &mut o.data, &inputs[0].data, b, k, d, bias);
                 vec![o]
             }
             (op, "vjp") if op.starts_with("intersect") || op.starts_with("union") => {
                 let k = op[op.len() - 1..].parse::<usize>().unwrap();
-                let gout = &inputs[1];
-                let mut g = zeros(&[b, k, d]);
-                for i in 0..b {
-                    for j in 0..k {
-                        for c in 0..d {
-                            g.data[i * k * d + j * d + c] = gout.data[i * d + c] / k as f32;
-                        }
-                    }
-                }
+                let mut g = fresh(&[b, k, d]);
+                kernels::mean_pool_vjp(hk, &mut g.data, &inputs[1].data, b, k, d);
                 vec![g]
             }
             ("negate", "fwd") => {
                 let mut o = copy_of(&inputs[0]);
-                o.data.iter_mut().for_each(|x| *x = -*x);
+                kernels::negate_rows(hk, &mut o.data, b, d);
                 vec![o]
             }
             ("negate", "vjp") => {
                 let mut g = copy_of(&inputs[1]);
-                g.data.iter_mut().for_each(|x| *x = -*x);
+                kernels::negate_rows(hk, &mut g.data, b, d);
                 vec![g]
             }
             ("score", "fwd") => {
                 let (q, pos, _neg, mask) = (&inputs[0], &inputs[1], &inputs[2], &inputs[3]);
-                let mut loss = 0.0f32;
-                let mut gq = zeros(&[b, d]);
-                let mut gpos = zeros(&[b, d]);
-                let gneg = zeros(&[b, self.manifest.dims.n_neg, d]);
-                for i in 0..b {
-                    let m = mask.data[i];
-                    let dot: f32 =
-                        q.row(i).iter().zip(pos.row(i)).map(|(a, b)| a * b).sum();
-                    loss += m * dot;
-                    for c in 0..d {
-                        gq.data[i * d + c] = m * pos.data[i * d + c];
-                        gpos.data[i * d + c] = m * q.data[i * d + c];
-                    }
-                }
-                let mut l = zeros(&[1]);
+                let n_neg = self.manifest.dims.n_neg;
+                let mut gq = fresh(&[b, d]);
+                let mut gpos = fresh(&[b, d]);
+                let mut gneg = fresh(&[b, n_neg, d]);
+                kernels::fill_rows(hk, &mut gneg.data, b, n_neg * d, 0.0);
+                let loss = kernels::score_rows(
+                    hk, &q.data, &pos.data, &mask.data, b, d, &mut gq.data, &mut gpos.data,
+                );
+                let mut l = fresh(&[1]);
                 l.data[0] = loss;
                 vec![l, gq, gpos, gneg]
             }
             ("eval", "fwd") => {
                 let (q, ents) = (&inputs[0], &inputs[1]);
                 let (eb, ec) = (q.rows(), ents.rows());
-                let mut s = zeros(&[eb, ec]);
-                for i in 0..eb {
-                    for j in 0..ec {
-                        s.data[i * ec + j] =
-                            q.row(i).iter().zip(ents.row(j)).map(|(a, b)| a * b).sum();
-                    }
-                }
+                let mut s = fresh(&[eb, ec]);
+                kernels::matmul_nt(hk, &q.data, &ents.data, eb, ec, d, &mut s.data);
                 vec![s]
             }
             _ => bail!("mock runtime: unimplemented artifact {name}"),
@@ -705,6 +717,67 @@ mod tests {
         let again = rt.execute_pooled("mock_project_fwd_b2", &[x, r], &pool).unwrap();
         assert_eq!(plain, again);
         assert!(pool.stats().hits >= 1, "second pooled call must recycle a buffer");
+    }
+
+    fn rand_tensor(rng: &mut crate::util::rng::Rng, shape: Vec<usize>) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::new(shape, (0..n).map(|_| rng.uniform_sym(1.0)).collect()).unwrap()
+    }
+
+    #[test]
+    fn threaded_execute_is_bitwise_identical_to_serial() {
+        // Deterministic-reduction mode: widening the kernel path to 2 or 4
+        // threads (pool engaged via par_min_elems = 0) must not move a
+        // single bit on any op.
+        let build = |threads: usize| {
+            MockRuntime::with_config(32, 2, &[64]).with_kernel_config(HostKernelConfig {
+                threads,
+                par_min_elems: 0,
+                ..HostKernelConfig::default()
+            })
+        };
+        let mut rng = crate::util::rng::Rng::new(99);
+        let q = rand_tensor(&mut rng, vec![64, 32]);
+        let pos = rand_tensor(&mut rng, vec![64, 32]);
+        let neg = rand_tensor(&mut rng, vec![64, 2, 32]);
+        let mask = rand_tensor(&mut rng, vec![64]);
+        let xs = rand_tensor(&mut rng, vec![64, 3, 32]);
+        let gout = rand_tensor(&mut rng, vec![64, 32]);
+        let serial = build(1);
+        let runs: Vec<(&str, Vec<HostTensor>)> = vec![
+            ("mock_score_fwd_b64", vec![q.clone(), pos.clone(), neg, mask]),
+            ("mock_intersect3_fwd_b64", vec![xs.clone()]),
+            ("mock_union2_vjp_b64", vec![rand_tensor(&mut rng, vec![64, 2, 32]), gout]),
+            ("mock_project_fwd_b64", vec![q, pos]),
+        ];
+        for threads in [2usize, 4] {
+            let rt = build(threads);
+            for (name, inputs) in &runs {
+                let a = serial.execute(name, inputs).unwrap();
+                let b = rt.execute(name, inputs).unwrap();
+                assert_eq!(a, b, "{name} must be bitwise stable at {threads} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_kernels_agree_with_vectorized_within_tolerance() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let vec_rt = MockRuntime::with_config(32, 2, &[16]);
+        let ref_rt = MockRuntime::with_config(32, 2, &[16]).with_reference_kernels();
+        let q = rand_tensor(&mut rng, vec![16, 32]);
+        let pos = rand_tensor(&mut rng, vec![16, 32]);
+        let neg = rand_tensor(&mut rng, vec![16, 2, 32]);
+        let mask = rand_tensor(&mut rng, vec![16]);
+        let inputs = [q, pos, neg, mask];
+        let v = vec_rt.execute("mock_score_fwd_b16", &inputs).unwrap();
+        let r = ref_rt.execute("mock_score_fwd_b16", &inputs).unwrap();
+        let (lv, lr) = (v[0].data[0], r[0].data[0]);
+        assert!((lv - lr).abs() <= 1e-4 * (1.0 + lr.abs()), "loss {lv} vs reference {lr}");
+        // gradients are elementwise — exactly equal on both paths
+        assert_eq!(v[1], r[1]);
+        assert_eq!(v[2], r[2]);
+        assert_eq!(v[3], r[3]);
     }
 
     #[test]

@@ -8,12 +8,15 @@
 //! linear operator semantics.
 
 pub mod host;
+pub mod kernels;
 pub mod manifest;
 pub mod mock;
+pub mod parallel;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use host::HostTensor;
+pub use kernels::{HostKernelConfig, HostKernels, KernelPath};
 pub use manifest::{ArgMeta, ArtifactMeta, Dims, Manifest, ParamFile};
 pub use mock::{CallEvent, MockRuntime};
 #[cfg(feature = "pjrt")]

@@ -1,0 +1,291 @@
+//! Persistent worker pool for the multi-core host kernels.
+//!
+//! [`HostPool`] splits one kernel invocation — already diced into row
+//! chunks by [`super::kernels::HostKernels::plan`] — across a fixed set of
+//! long-lived worker threads plus the calling thread. Design constraints,
+//! in order:
+//!
+//! 1. **Zero steady-state allocations.** The hot loop's allocation-
+//!    regression gate (`rust/tests/alloc_regression.rs`) budgets every heap
+//!    allocation per training round, so a kernel dispatch cannot allocate:
+//!    no channels, no boxed closures, no per-job `Vec`s. A job is a `Copy`
+//!    struct of raw pointers into the caller's stack, broadcast to the
+//!    workers through one `Mutex`/`Condvar` epoch bump; chunk distribution
+//!    is a borrowed `AtomicUsize` cursor.
+//! 2. **One pool, many submitters.** The serve plane executes from several
+//!    request threads at once. `run` takes a `try_lock` on an internal
+//!    gate; losers compute their chunks inline on their own thread. Chunk
+//!    boundaries are fixed by the plan (not by who computes them), so the
+//!    fallback produces bitwise-identical results — it only forgoes the
+//!    extra cores.
+//! 3. **Spawn accounting.** Workers are spawned once at pool construction
+//!    (which `OnceLock` in [`super::kernels::HostKernels`] defers to the
+//!    first parallel kernel), mirroring the engine's persistent gather
+//!    worker: steady-state rounds observe zero thread spawns.
+//!
+//! The pool deliberately does not touch [`crate::exec::worker_spawns_total`]
+//! — that counter anchors the *gather-worker* zero-respawn gate and kernel
+//! workers are a different population.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One broadcast job: a type-erased borrowed closure plus the shared chunk
+/// cursor. All pointers reference stack data of the thread inside
+/// [`HostPool::run`], which does not return until every worker has finished
+/// the job — see the `Send` justification below.
+#[derive(Clone, Copy)]
+struct Job {
+    /// thin pointer to a stack slot holding `&(dyn Fn(usize) + Sync)`
+    data: *const (),
+    /// monomorphic trampoline that re-fattens `data` and calls chunk `c`
+    call: unsafe fn(*const (), usize),
+    /// shared chunk cursor on the submitting caller's stack
+    next: *const AtomicUsize,
+    n_chunks: usize,
+}
+
+// SAFETY: the pointers target stack data owned by the thread executing
+// `run`, which blocks until `workers_left == 0`; no worker dereferences
+// them after decrementing. The pointee closure is `Sync`.
+unsafe impl Send for Job {}
+
+struct State {
+    /// bumped once per published job; workers latch the epochs they have
+    /// already served so a spurious wakeup never re-runs a job
+    epoch: u64,
+    job: Option<Job>,
+    /// workers that have not yet finished the current epoch's job
+    workers_left: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    m: Mutex<State>,
+    work: Condvar,
+    done: Condvar,
+    /// set by a worker whose chunk closure panicked; re-raised on the
+    /// submitting thread so a kernel panic fails the caller, not the pool
+    worker_panicked: AtomicBool,
+}
+
+/// Fixed-size persistent thread pool; see the module docs for the design.
+pub struct HostPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// serializes job submission; `try_lock` losers compute inline
+    run_gate: Mutex<()>,
+}
+
+impl HostPool {
+    /// Spawn `workers` persistent threads. `workers == 0` is a valid
+    /// degenerate pool: every `run` computes all chunks on the caller.
+    pub fn new(workers: usize) -> HostPool {
+        let shared = Arc::new(Shared {
+            m: Mutex::new(State { epoch: 0, job: None, workers_left: 0, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            worker_panicked: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ngdb-hostk-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn host-kernel worker")
+            })
+            .collect();
+        HostPool { shared, handles, run_gate: Mutex::new(()) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(chunk)` for every chunk in `0..n_chunks`, distributing chunks
+    /// across the workers and the calling thread. Returns after every chunk
+    /// has completed. Allocation-free in steady state.
+    ///
+    /// If another thread is mid-`run` (or the pool has no workers), all
+    /// chunks execute inline on the caller — same chunk boundaries, same
+    /// per-chunk results, merely serial.
+    pub fn run(&self, n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.handles.is_empty() {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        }
+        let Ok(_gate) = self.run_gate.try_lock() else {
+            for c in 0..n_chunks {
+                f(c);
+            }
+            return;
+        };
+        // Stack slots the workers borrow for the duration of the job.
+        let next = AtomicUsize::new(0);
+        let f_ref: &(dyn Fn(usize) + Sync) = f;
+        unsafe fn trampoline(p: *const (), c: usize) {
+            // SAFETY (caller): `p` was produced from `&f_ref` below and the
+            // slot outlives the job (run blocks until workers_left == 0).
+            let f = *(p as *const &(dyn Fn(usize) + Sync));
+            f(c)
+        }
+        let job = Job {
+            data: &f_ref as *const &(dyn Fn(usize) + Sync) as *const (),
+            call: trampoline,
+            next: &next,
+            n_chunks,
+        };
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.workers_left = self.handles.len();
+            self.shared.work.notify_all();
+        }
+        // The caller participates in the chunk race. A panicking kernel
+        // must still wait for the workers below — they borrow `f` and
+        // `next` — so the unwind is caught and re-raised after the join.
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            let c = next.fetch_add(1, Ordering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            f(c);
+        }));
+        let mut st = self.shared.m.lock().unwrap();
+        while st.workers_left > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if self.shared.worker_panicked.swap(false, Ordering::SeqCst) {
+            panic!("host-kernel pool worker panicked while running a chunk");
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut served = 0u64;
+    loop {
+        let job = {
+            let mut st = sh.m.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != served && st.job.is_some() {
+                    served = st.epoch;
+                    break st.job.unwrap();
+                }
+                st = sh.work.wait(st).unwrap();
+            }
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: `next`/`data` outlive the job — the submitting `run`
+            // does not return before this worker decrements `workers_left`.
+            unsafe {
+                let next = &*job.next;
+                loop {
+                    let c = next.fetch_add(1, Ordering::Relaxed);
+                    if c >= job.n_chunks {
+                        break;
+                    }
+                    (job.call)(job.data, c);
+                }
+            }
+        }));
+        if outcome.is_err() {
+            sh.worker_panicked.store(true, Ordering::SeqCst);
+        }
+        let mut st = sh.m.lock().unwrap();
+        st.workers_left -= 1;
+        if st.workers_left == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl Drop for HostPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let pool = HostPool::new(3);
+        for n_chunks in [0usize, 1, 2, 7, 64, 200] {
+            let hits: Vec<AtomicUsize> = (0..n_chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n_chunks, &|c| {
+                hits[c].fetch_add(1, Ordering::SeqCst);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c} of {n_chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = HostPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(5, &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn concurrent_submitters_fall_back_inline_and_stay_correct() {
+        // Several threads hammer one pool; contended `run`s must complete
+        // all their chunks (inline) without corrupting each other's jobs.
+        let pool = Arc::new(HostPool::new(2));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let hits: Vec<AtomicUsize> =
+                            (0..16).map(|_| AtomicUsize::new(0)).collect();
+                        pool.run(16, &|c| {
+                            hits[c].fetch_add(1, Ordering::SeqCst);
+                        });
+                        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = HostPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..300 {
+            pool.run(8, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 2400);
+    }
+}

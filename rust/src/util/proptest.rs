@@ -190,6 +190,22 @@ pub mod queries {
             dag
         }
 
+        /// Lower the workload onto the **forward plane** (the eval/serve
+        /// path): no answers, no negatives, no gradient nodes. Returns the
+        /// fused DAG plus one root per query, in workload order — feed
+        /// them to `EngineSession::run_forward`.
+        pub fn forward_dag(&self, supports_negation: bool) -> (QueryDag, Vec<u32>) {
+            let mut dag = QueryDag::default();
+            let mut roots = Vec::with_capacity(self.0.len());
+            for q in &self.0 {
+                roots.push(
+                    dag.add_query_eval(&q.tree, supports_negation)
+                        .expect("generated query must lower"),
+                );
+            }
+            (dag, roots)
+        }
+
         /// Shrink candidates, biggest cuts first: the two halves, then each
         /// drop-one subset (only for small sets — drop-one on a large set
         /// explodes the candidate count without shrinking much).

@@ -19,7 +19,7 @@ use ngdb_zoo::exec::arena::{
 use ngdb_zoo::exec::{EngineConfig, EngineSession, Grads};
 use ngdb_zoo::model::ModelState;
 use ngdb_zoo::query::{Pattern, QueryDag, QueryTree};
-use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::runtime::{HostKernelConfig, MockRuntime, Runtime};
 use ngdb_zoo::util::counting_alloc::{snapshot, CountingAlloc};
 
 #[global_allocator]
@@ -144,6 +144,66 @@ fn steady_state_rounds_stay_within_the_documented_alloc_budget() {
         d.bytes,
         bytes_budget
     );
+}
+
+#[test]
+fn threaded_kernel_pool_adds_zero_steady_state_allocations() {
+    // The multi-threaded host-kernel path must ride the same budgets as
+    // the serial path: after the worker pool spawns (warmup), dispatching
+    // a kernel across threads is allocation-free — the job broadcast is a
+    // Copy struct under a lock, the chunk cursor and partial buffers live
+    // on the submitting stack. Identical budgets, zero slack added.
+    let _guard = serial();
+    let kcfg = HostKernelConfig { threads: 4, par_min_elems: 0, ..Default::default() };
+    let rt = wide_runtime().with_kernel_config(kcfg);
+    let st = state(&rt);
+    let dag = workload();
+    let mut session = EngineSession::new(&rt, EngineConfig::default());
+    let mut grads = Grads::default();
+
+    // warmup: pool shelves + the host-kernel worker threads (stacks,
+    // handles) all land here, outside the measured window
+    let s0 = session.run(&dag, &st, &mut grads).unwrap();
+    session.run(&dag, &st, &mut grads).unwrap();
+    let rounds_per_run = s0.executions as u64;
+    assert!(rounds_per_run > 0);
+
+    const RUNS: u64 = 5;
+    let base = snapshot();
+    for _ in 0..RUNS {
+        let stats = session.run(&dag, &st, &mut grads).unwrap();
+        assert_eq!(stats.executions as u64, rounds_per_run, "schedule must be stable");
+        assert_eq!(stats.pool_misses, 0, "threaded rounds must still pool");
+    }
+    let d = snapshot().delta_since(&base);
+
+    // the SAME budgets the serial suite enforces — threading adds nothing
+    let alloc_budget = RUNS * (RUN_ALLOC_OVERHEAD + rounds_per_run * ROUND_ALLOC_BUDGET);
+    assert!(
+        d.allocs <= alloc_budget,
+        "threaded kernels allocated {} times over {} rounds; serial budget {}",
+        d.allocs,
+        RUNS * rounds_per_run,
+        alloc_budget
+    );
+    let bytes_budget =
+        RUNS * rounds_per_run * ROUND_ALLOC_BYTES_BUDGET + RUNS * 64 * 1024;
+    assert!(
+        d.bytes <= bytes_budget,
+        "threaded kernels allocated {} bytes; budget {}",
+        d.bytes,
+        bytes_budget
+    );
+
+    // and the numbers must not have moved a bit vs the serial path
+    let serial_rt = wide_runtime();
+    let serial_st = state(&serial_rt);
+    let mut serial_session = EngineSession::new(&serial_rt, EngineConfig::default());
+    let mut sg = Grads::default();
+    let s_stats = serial_session.run(&dag, &serial_st, &mut sg).unwrap();
+    let mut tg = Grads::default();
+    let t_stats = session.run(&dag, &st, &mut tg).unwrap();
+    assert_eq!(s_stats.loss.to_bits(), t_stats.loss.to_bits());
 }
 
 #[test]

@@ -1,0 +1,225 @@
+//! Host-kernel equivalence property suite: the vectorized multi-threaded
+//! compute path must be **bitwise indistinguishable** from the serial
+//! vectorized path on both planes — same loss bits, same gradient bits,
+//! same forward reprs — across random query DAGs × thread counts {1,2,4}.
+//! The deterministic-reduction mode makes this a hard guarantee, not a
+//! tolerance: chunk boundaries are a pure function of the row count and
+//! per-chunk partials fold in chunk order, so the thread count can never
+//! change a single bit.
+//!
+//! The pre-vectorization scalar loops (`KernelPath::Reference`) are held to
+//! a *tolerance* instead — lane-chunked accumulation legitimately reorders
+//! floating-point sums.
+
+use ngdb_zoo::exec::{EngineConfig, EngineSession, Grads, StepStats};
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::query::Pattern;
+use ngdb_zoo::runtime::{HostKernelConfig, MockRuntime, Runtime};
+use ngdb_zoo::util::proptest::prop_check_shrink;
+use ngdb_zoo::util::proptest::queries::{self, QuerySet};
+use ngdb_zoo::util::rng::Rng;
+
+const NE: usize = 12; // mock entity rows
+const NR: usize = 6; // mock relation rows
+const NEG: usize = 2; // mock n_neg
+const D: usize = 32; // wide enough that 8-lane chunking engages
+
+/// A mock runtime whose host kernels run on `threads` lanes, with the
+/// size threshold disabled so even unit-test-sized batches take the
+/// threaded path.
+fn threaded_runtime(threads: usize) -> MockRuntime {
+    let cfg = HostKernelConfig { threads, par_min_elems: 0, ..Default::default() };
+    MockRuntime::with_config(D, NEG, &[4, 16, 64]).with_kernel_config(cfg)
+}
+
+fn state(rt: &MockRuntime) -> ModelState {
+    ModelState::init(rt.manifest(), "mock", NE, NR, None, 3).unwrap()
+}
+
+/// One training run through a fresh warm session: stats + gradients.
+fn run_train(rt: &MockRuntime, set: &QuerySet) -> Result<(StepStats, Grads), String> {
+    let st = state(rt);
+    let dag = set.train_dag();
+    let mut session = EngineSession::new(rt, EngineConfig::default());
+    let mut grads = Grads::default();
+    let stats = session.run(&dag, &st, &mut grads).map_err(|e| format!("{e:#}"))?;
+    Ok((stats, grads))
+}
+
+/// Bit-exact comparison of two training runs: schedule, loss bits, every
+/// gradient entry (`f32::to_bits`). Returns the first divergence.
+fn assert_bitwise_equal(
+    (s_a, g_a): &(StepStats, Grads),
+    (s_b, g_b): &(StepStats, Grads),
+) -> Result<(), String> {
+    if s_a.executions != s_b.executions {
+        return Err(format!("round counts: {} vs {}", s_a.executions, s_b.executions));
+    }
+    if s_a.schedule != s_b.schedule {
+        return Err("schedules diverge".into());
+    }
+    if s_a.loss.to_bits() != s_b.loss.to_bits() {
+        return Err(format!("loss not bit-identical: {} vs {}", s_a.loss, s_b.loss));
+    }
+    for (map_a, map_b, tag) in
+        [(&g_a.ent, &g_b.ent, "ent"), (&g_a.rel, &g_b.rel, "rel")]
+    {
+        if map_a.len() != map_b.len() {
+            return Err(format!("{tag} key counts: {} vs {}", map_a.len(), map_b.len()));
+        }
+        for (k, v) in map_a {
+            let w = map_b.get(k).ok_or_else(|| format!("{tag} missing key {k}"))?;
+            for (i, (x, y)) in v.iter().zip(w).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{tag}[{k}][{i}]: {x} vs {y} (bits differ)"));
+                }
+            }
+        }
+    }
+    if g_a.dense.len() != g_b.dense.len() {
+        return Err("dense key counts differ".into());
+    }
+    for (k, v) in &g_a.dense {
+        let w = g_b.dense.get(k).ok_or_else(|| format!("dense missing key {k}"))?;
+        for (i, (x, y)) in v.iter().zip(w).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("dense[{k}][{i}]: {x} vs {y} (bits differ)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn training_grads_are_bitwise_identical_across_thread_counts() {
+    let kg = queries::toy_kg();
+    prop_check_shrink(
+        "host-kernel thread-count invariance (train plane)",
+        12,
+        |rng| queries::random_set(rng, &kg, &Pattern::ALL, 12, NE as u32, NR as u32, NEG),
+        QuerySet::shrink,
+        |set| {
+            if set.is_empty() {
+                return Ok(());
+            }
+            let serial = run_train(&threaded_runtime(1), set)?;
+            for threads in [2usize, 4] {
+                let multi = run_train(&threaded_runtime(threads), set)?;
+                assert_bitwise_equal(&serial, &multi)
+                    .map_err(|e| format!("threads={threads}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Forward-plane check body: run the eval DAG at 1/2/4 threads and diff
+/// every repr bit for bit.
+fn check_forward(set: &QuerySet) -> Result<(), String> {
+    if set.is_empty() {
+        return Ok(());
+    }
+    let run = |threads: usize| -> Result<Vec<Vec<f32>>, String> {
+        let rt = threaded_runtime(threads);
+        let st = state(&rt);
+        let (dag, roots) = set.forward_dag(true);
+        let mut session = EngineSession::new(&rt, EngineConfig::default());
+        let (_, reprs) =
+            session.run_forward(&dag, &st, &roots).map_err(|e| format!("{e:#}"))?;
+        Ok(reprs)
+    };
+    let serial = run(1)?;
+    for threads in [2usize, 4] {
+        let multi = run(threads)?;
+        if serial.len() != multi.len() {
+            return Err(format!("repr counts: {} vs {}", serial.len(), multi.len()));
+        }
+        for (qi, (a, b)) in serial.iter().zip(&multi).enumerate() {
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!(
+                        "threads={threads}: repr[{qi}][{i}]: {x} vs {y} (bits differ)"
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn forward_plane_reprs_are_bitwise_identical_across_thread_counts() {
+    let kg = queries::toy_kg();
+    prop_check_shrink(
+        "host-kernel thread-count invariance (forward plane)",
+        10,
+        |rng| queries::random_set(rng, &kg, &Pattern::ALL, 10, NE as u32, NR as u32, NEG),
+        QuerySet::shrink,
+        check_forward,
+    );
+}
+
+#[test]
+fn rank_against_all_is_bitwise_identical_across_thread_counts() {
+    use ngdb_zoo::eval::rank::EntityRanker;
+    let kg = queries::toy_kg();
+    let mut rng = Rng::new(17);
+    let set = queries::random_set(&mut rng, &kg, &Pattern::ALL, 8, NE as u32, NR as u32, NEG);
+    if set.is_empty() {
+        return;
+    }
+    let run = |threads: usize| -> Vec<u32> {
+        let rt = threaded_runtime(threads).with_eval_dims(4, 8);
+        let st = state(&rt);
+        let (dag, roots) = set.forward_dag(true);
+        let mut session = EngineSession::new(&rt, EngineConfig::default());
+        let (_, reprs) = session.run_forward(&dag, &st, &roots).unwrap();
+        let mut ranker = EntityRanker::new();
+        let mut scores: Vec<f32> = Vec::new();
+        ranker.score_all(&rt, &st, &reprs, session.pool(), &mut scores).unwrap();
+        scores.iter().map(|s| s.to_bits()).collect()
+    };
+    let serial = run(1);
+    for threads in [2usize, 4] {
+        assert_eq!(run(threads), serial, "rank scores must not depend on thread count");
+    }
+}
+
+#[test]
+fn reference_scalar_path_agrees_with_vectorized_within_tolerance() {
+    // the roofline baseline: old seed loops vs the lane-chunked kernels.
+    // Different summation order — tolerance, not bits.
+    let close = |a: f32, b: f32, tol: f32| (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()));
+    let kg = queries::toy_kg();
+    let mut rng = Rng::new(11);
+    let mut checked = 0usize;
+    while checked < 5 {
+        let set = queries::random_set(&mut rng, &kg, &Pattern::ALL, 10, NE as u32, NR as u32, NEG);
+        if set.is_empty() {
+            continue;
+        }
+        checked += 1;
+        let vectorized = run_train(&threaded_runtime(4), &set).unwrap();
+        let reference_rt =
+            MockRuntime::with_config(D, NEG, &[4, 16, 64]).with_reference_kernels();
+        let reference = run_train(&reference_rt, &set).unwrap();
+        assert_eq!(vectorized.0.executions, reference.0.executions);
+        let (lv, lr) = (vectorized.0.loss, reference.0.loss);
+        assert!(
+            (lv - lr).abs() <= 1e-4 * (1.0 + lr.abs()),
+            "loss drifted past tolerance: {lv} vs {lr}"
+        );
+        for (map_v, map_r, tag) in [
+            (&vectorized.1.ent, &reference.1.ent, "ent"),
+            (&vectorized.1.rel, &reference.1.rel, "rel"),
+        ] {
+            assert_eq!(map_v.len(), map_r.len(), "{tag} key counts");
+            for (k, v) in map_v {
+                let w = &map_r[k];
+                for (i, (x, y)) in v.iter().zip(w).enumerate() {
+                    assert!(close(*x, *y, 1e-3), "{tag}[{k}][{i}]: {x} vs {y}");
+                }
+            }
+        }
+    }
+}

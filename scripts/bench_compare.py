@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Direction-aware bench-JSON regression gate (stdlib only).
+
+Compares a candidate bench artifact (``BENCH_*.json``, produced by the
+Rust bench harnesses) against a committed baseline and exits non-zero on
+regression. Every **numeric leaf of the baseline** is a gate; the
+direction is inferred from the key path:
+
+* higher-is-better: throughput-ish names (``*_per_s``, ``speedup``,
+  ``qps``, ``hits``, ...) — the candidate must not fall more than
+  ``--threshold-pct`` below the baseline;
+* lower-is-better: cost-ish names (``alloc``, ``bytes``, ``miss``,
+  ``spawn``, ``latency``, ``p95``, ...) — the candidate must not rise
+  more than ``--threshold-pct`` above it. A **zero** baseline here is an
+  exact gate: the candidate must stay at zero (you cannot take a
+  percentage of nothing, and "zero steady-state spawns/misses" is a
+  contract, not a measurement);
+* anything under a ``config`` key, booleans, strings, and keys matching
+  neither pattern list are informational only.
+
+A baseline key missing from the candidate fails: silently dropping a
+gated metric is how regressions hide. Extra candidate keys are fine —
+benches may grow fields before the baseline is re-blessed.
+
+The baseline should only pin machine-robust fields (counts, ratios,
+budget-bounded averages) — absolute wall-clock throughput varies too
+much across CI runners to gate at any sane threshold.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# checked in order: the first list that matches wins, HIGHER first, so
+# "speedup_rounds_per_sec" (which also contains "per_s") gates upward
+HIGHER_PATTERNS = ("per_s", "per_sec", "speedup", "qps", "hits", "elems", "gb_per_s")
+LOWER_PATTERNS = (
+    "alloc",
+    "bytes",
+    "miss",
+    "spawn",
+    "latency",
+    "p50",
+    "p95",
+    "p99",
+    "secs",
+    "_us",
+    "_ms",
+)
+
+
+def flatten(node, prefix=""):
+    """Yield (dotted-path, value) for every numeric leaf. Booleans are not
+    numbers here; strings and nulls are skipped."""
+    if isinstance(node, dict):
+        for key, value in node.items():
+            yield from flatten(value, f"{prefix}{key}.")
+    elif isinstance(node, list):
+        for i, value in enumerate(node):
+            yield from flatten(value, f"{prefix}{i}.")
+    elif isinstance(node, bool) or node is None or isinstance(node, str):
+        return
+    elif isinstance(node, (int, float)):
+        yield prefix.rstrip("."), float(node)
+
+
+def direction(path: str):
+    """'higher', 'lower', or None (ungated) for a dotted key path."""
+    lowered = path.lower()
+    if any(seg == "config" for seg in lowered.split(".")):
+        return None
+    if any(p in lowered for p in HIGHER_PATTERNS):
+        return "higher"
+    if any(p in lowered for p in LOWER_PATTERNS):
+        return "lower"
+    return None
+
+
+def compare(baseline: dict, candidate: dict, threshold_pct: float):
+    """Return (rows, failures): one row per baseline leaf, and the subset
+    that regressed (or went missing)."""
+    cand = dict(flatten(candidate))
+    rows, failures = [], []
+    for path, base_val in flatten(baseline):
+        dirn = direction(path)
+        if path not in cand:
+            rows.append((path, base_val, None, dirn or "-", "MISSING"))
+            if dirn is not None:
+                failures.append(f"{path}: gated metric missing from candidate")
+            continue
+        cand_val = cand[path]
+        status = "info"
+        if dirn == "higher":
+            floor = base_val * (1.0 - threshold_pct / 100.0)
+            status = "ok" if cand_val >= floor else "FAIL"
+            if status == "FAIL":
+                failures.append(
+                    f"{path}: {cand_val:g} fell below {floor:g} "
+                    f"(baseline {base_val:g} - {threshold_pct:g}%)"
+                )
+        elif dirn == "lower":
+            if base_val == 0.0:
+                status = "ok" if cand_val <= 0.0 else "FAIL"
+                if status == "FAIL":
+                    failures.append(f"{path}: {cand_val:g} > 0 (exact zero contract)")
+            else:
+                ceil = base_val * (1.0 + threshold_pct / 100.0)
+                status = "ok" if cand_val <= ceil else "FAIL"
+                if status == "FAIL":
+                    failures.append(
+                        f"{path}: {cand_val:g} rose above {ceil:g} "
+                        f"(baseline {base_val:g} + {threshold_pct:g}%)"
+                    )
+        rows.append((path, base_val, cand_val, dirn or "-", status))
+    return rows, failures
+
+
+def print_table(rows):
+    headers = ("metric", "baseline", "candidate", "dir", "status")
+    str_rows = [
+        (
+            path,
+            f"{base:g}",
+            "-" if cand is None else f"{cand:g}",
+            dirn,
+            status,
+        )
+        for path, base, cand, dirn, status in rows
+    ]
+    widths = [
+        max(len(headers[i]), max((len(r[i]) for r in str_rows), default=0))
+        for i in range(len(headers))
+    ]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    print(fmt.format(*headers))
+    print("  ".join("-" * w for w in widths))
+    for r in str_rows:
+        print(fmt.format(*r))
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--baseline", required=True, type=Path)
+    parser.add_argument("--candidate", required=True, type=Path)
+    parser.add_argument(
+        "--threshold-pct",
+        type=float,
+        default=25.0,
+        help="tolerance band around each gated baseline value (default 25)",
+    )
+    args = parser.parse_args(argv)
+
+    baseline = json.loads(args.baseline.read_text())
+    candidate = json.loads(args.candidate.read_text())
+
+    rows, failures = compare(baseline, candidate, args.threshold_pct)
+    print(f"bench_compare: {args.candidate} vs baseline {args.baseline} "
+          f"(±{args.threshold_pct:g}%)\n")
+    print_table(rows)
+    if failures:
+        print(f"\n{len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
