@@ -1,0 +1,129 @@
+//! Overload bench: the serving tier at a multiple of its measured
+//! capacity, under uniform / bursty / heavy-tailed arrivals, with the
+//! fixed-blocking policy against adaptive windows + shedding. See
+//! `bench_harness::serve_load` for the methodology. Gated (the CI smoke
+//! runs this):
+//!
+//! * accounting identity — every scenario answers or sheds every
+//!   submitted request with a typed outcome; nothing errors, nothing
+//!   drops silently;
+//! * under bursty `overload ×` arrivals, `adaptive_shed` keeps the
+//!   accepted-request p99 (dispatch lag included) under the target while
+//!   actually shedding;
+//! * `fixed_block` degrades ≥ 1.5× worse on the same schedule — the
+//!   bench exists to show the hardening matters.
+//!
+//! Env knobs: `NGDB_LOAD_QUERIES` (default 512), `NGDB_LOAD_WORKERS` (2),
+//! `NGDB_LOAD_DELAY_US` (200), `NGDB_LOAD_QUEUE_CAP` (64),
+//! `NGDB_LOAD_OVERLOAD` (4), `NGDB_LOAD_P99_TARGET_MS` (250),
+//! `NGDB_LOAD_THREADS` (1), `NGDB_LOAD_JSON` (`BENCH_serve_load.json`),
+//! `NGDB_LOAD_PROM` (`BENCH_serve_metrics.prom`).
+
+use ngdb_zoo::bench_harness::knob;
+use ngdb_zoo::bench_harness::serve_load::{run, write_json, LoadOpts};
+
+fn main() {
+    let opts = LoadOpts {
+        n_requests: knob("NGDB_LOAD_QUERIES", 512.0) as usize,
+        workers: knob("NGDB_LOAD_WORKERS", 2.0) as usize,
+        delay_us: knob("NGDB_LOAD_DELAY_US", 200.0) as u64,
+        queue_cap: knob("NGDB_LOAD_QUEUE_CAP", 64.0) as usize,
+        overload: knob("NGDB_LOAD_OVERLOAD", 4.0),
+        p99_target_ms: knob("NGDB_LOAD_P99_TARGET_MS", 250.0),
+        host_threads: knob("NGDB_LOAD_THREADS", 1.0) as usize,
+        ..Default::default()
+    };
+
+    let report = run(&opts).unwrap_or_else(|e| panic!("serve_load failed: {e:#}"));
+
+    println!(
+        "\nserve_load: {} requests at {}x capacity ({:.0} qps), queue {}, \
+         {} workers, {} us/launch",
+        opts.n_requests,
+        opts.overload,
+        report.capacity_qps,
+        report.queue_cap,
+        opts.workers,
+        opts.delay_us
+    );
+    println!(
+        "{:>8}  {:>13}  {:>8}  {:>6}  {:>8}  {:>8}  {:>8}  {:>9}  {:>7}",
+        "arrivals", "policy", "answered", "shed", "p50 ms", "p95 ms", "p99 ms", "qps", "shed %"
+    );
+    for s in &report.scenarios {
+        println!(
+            "{:>8}  {:>13}  {:>8}  {:>6}  {:>8.1}  {:>8.1}  {:>8.1}  {:>9.1}  {:>7.1}",
+            s.arrivals,
+            s.policy,
+            s.answered,
+            s.shed,
+            s.accepted_p50_ms,
+            s.accepted_p95_ms,
+            s.accepted_p99_ms,
+            s.accepted_qps,
+            s.shed_rate_pct
+        );
+    }
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    for s in &report.scenarios {
+        assert_eq!(
+            s.answered + s.shed + s.errored,
+            s.submitted,
+            "{}/{}: requests went missing — every submit must resolve",
+            s.arrivals,
+            s.policy
+        );
+        assert_eq!(
+            s.errored, 0,
+            "{}/{}: valid requests must never error ({} did)",
+            s.arrivals, s.policy, s.errored
+        );
+        if s.policy == "fixed_block" {
+            assert_eq!(
+                s.shed, 0,
+                "{}/fixed_block: the blocking policy must never shed",
+                s.arrivals
+            );
+        }
+    }
+    let shed = report.scenario("bursty", "adaptive_shed").expect("bursty shed cell");
+    let block = report.scenario("bursty", "fixed_block").expect("bursty block cell");
+    assert!(
+        shed.shed > 0,
+        "bursty at {}x capacity must engage the shed path",
+        opts.overload
+    );
+    assert!(
+        shed.accepted_p99_ms <= opts.p99_target_ms,
+        "adaptive_shed must hold accepted p99 under the {:.0} ms target (got {:.1} ms)",
+        opts.p99_target_ms,
+        shed.accepted_p99_ms
+    );
+    assert!(
+        block.accepted_p99_ms >= 1.5 * shed.accepted_p99_ms,
+        "fixed_block should degrade >= 1.5x vs shedding on the same schedule \
+         ({:.1} ms vs {:.1} ms)",
+        block.accepted_p99_ms,
+        shed.accepted_p99_ms
+    );
+    println!(
+        "\n  bursty: shed p99 {:.1} ms (target {:.0}) vs blocked p99 {:.1} ms \
+         ({:.1}x worse); {:.1}% shed",
+        shed.accepted_p99_ms,
+        opts.p99_target_ms,
+        block.accepted_p99_ms,
+        block.accepted_p99_ms / shed.accepted_p99_ms.max(1e-9),
+        shed.shed_rate_pct
+    );
+
+    let path = std::env::var("NGDB_LOAD_JSON")
+        .unwrap_or_else(|_| "BENCH_serve_load.json".to_string());
+    write_json(&report, &path).unwrap_or_else(|e| panic!("{e:#}"));
+    println!("  wrote {path}");
+    let prom = std::env::var("NGDB_LOAD_PROM")
+        .unwrap_or_else(|_| "BENCH_serve_metrics.prom".to_string());
+    std::fs::write(&prom, &report.prometheus)
+        .unwrap_or_else(|e| panic!("writing {prom}: {e:#}"));
+    println!("  wrote {prom}");
+}

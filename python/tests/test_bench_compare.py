@@ -17,6 +17,7 @@ import pytest
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
 SCRIPT = os.path.join(ROOT, "scripts", "bench_compare.py")
 BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_micro_scheduler.json")
+SERVE_BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_serve_load.json")
 
 
 def _load():
@@ -59,6 +60,9 @@ def test_flatten_walks_dicts_lists_and_skips_non_numbers():
         ("pooled.pool_misses_steady", "lower"),
         ("steady_state_worker_spawns_per_run", "lower"),
         ("windows.0.p95_ms", "lower"),
+        ("bursty_shed_rate_pct", "lower"),  # shed rate is a cost
+        ("scenarios.1.shed", "lower"),
+        ("bursty_accepted_qps_frac", "higher"),  # "qps" wins over nothing-lower
         ("config.queries", None),  # config subtree is never gated
         ("rounds_per_run", None),  # no pattern match -> informational
     ],
@@ -156,4 +160,31 @@ def test_committed_baseline_parses_and_its_gates_are_directional():
     assert gated["pooled.pool_misses_steady"] == 0.0
     # and a self-consistency check: the baseline passes against itself
     _, failures = bc.compare(doc, doc, 25.0)
+    assert failures == []
+
+
+def test_shed_rate_gates_downward():
+    """Shedding is a cost: a candidate that sheds more than the pinned
+    ceiling (plus band) fails, shedding less always passes."""
+    base = {"bursty_shed_rate_pct": 85.0}
+    _, ok = bc.compare(base, {"bursty_shed_rate_pct": 74.0}, 15.0)
+    assert ok == []
+    _, bad = bc.compare(base, {"bursty_shed_rate_pct": 99.0}, 15.0)
+    assert len(bad) == 1 and "shed" in bad[0]
+
+
+def test_committed_serve_load_baseline_parses_and_only_pins_gates():
+    with open(SERVE_BASELINE) as fh:
+        doc = json.load(fh)
+    assert doc["bench"] == "serve_load"
+    leaves = dict(bc.flatten(doc))
+    gated = {p: v for p, v in leaves.items() if bc.direction(p) is not None}
+    # every pinned numeric leaf must gate; ungated pins rot silently
+    assert gated == leaves
+    # the overload contract: shed rate and accepted p99 gate as ceilings,
+    # the capacity fraction as a floor
+    assert bc.direction("bursty_shed_rate_pct") == "lower"
+    assert bc.direction("bursty_accepted_p99_ms") == "lower"
+    assert bc.direction("bursty_accepted_qps_frac") == "higher"
+    _, failures = bc.compare(doc, doc, 15.0)
     assert failures == []

@@ -1,0 +1,189 @@
+"""Unit tests for the Prometheus exposition validator (``scripts/prom_parse.py``).
+
+The validator is stdlib-only and lives outside the package tree, so it is
+loaded by file path (same pattern as ``test_bench_compare.py``). Two
+halves:
+
+* the committed sample exposition
+  (``benches/baselines/serve_metrics_sample.prom``) — hand-written to
+  mirror ``ServeMetrics::render_prometheus`` — must validate cleanly and
+  contain the serve families CI dashboards key on;
+* hand-broken expositions (non-monotone buckets, ``+Inf`` != ``_count``,
+  mis-named counters, undeclared samples, garbage labels/values) must
+  each be rejected with a violation naming the problem.
+"""
+
+import importlib.util
+import os
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+SCRIPT = os.path.join(ROOT, "scripts", "prom_parse.py")
+SAMPLE = os.path.join(ROOT, "benches", "baselines", "serve_metrics_sample.prom")
+
+
+def _load():
+    spec = importlib.util.spec_from_file_location("prom_parse", SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+pp = _load()
+
+
+def _sample_text():
+    with open(SAMPLE) as fh:
+        return fh.read()
+
+
+# ---------------------------------------------------------------------------
+# the committed sample exposition
+# ---------------------------------------------------------------------------
+
+
+def test_committed_sample_is_valid():
+    assert pp.validate(_sample_text()) == []
+
+
+def test_committed_sample_has_the_serve_families():
+    text = _sample_text()
+    for family, kind in [
+        ("ngdb_serve_submitted_total", "counter"),
+        ("ngdb_serve_accepted_total", "counter"),
+        ("ngdb_serve_shed_total", "counter"),
+        ("ngdb_serve_answered_total", "counter"),
+        ("ngdb_serve_queue_depth", "gauge"),
+        ("ngdb_serve_batch_fill", "histogram"),
+        ("ngdb_serve_latency_seconds", "histogram"),
+        ("ngdb_serve_latency_seconds_est", "gauge"),
+    ]:
+        assert f"# TYPE {family} {kind}" in text, family
+
+
+def test_committed_sample_accounting_is_internally_consistent():
+    """The sample should model a believable run: accepted + shed ==
+    submitted per lane, and answered requests all landed in the latency
+    histogram."""
+    text = _sample_text()
+    values = {}
+    for line in text.splitlines():
+        if line.startswith("#") or not line.strip():
+            continue
+        name_labels, value = line.rsplit(" ", 1)
+        values[name_labels] = float(value.replace("+Inf", "inf"))
+    for lane in ("high", "normal"):
+        sub = values[f'ngdb_serve_submitted_total{{lane="{lane}"}}']
+        acc = values[f'ngdb_serve_accepted_total{{lane="{lane}"}}']
+        shed = values[f'ngdb_serve_shed_total{{lane="{lane}"}}']
+        assert acc + shed == sub, lane
+    assert (
+        values["ngdb_serve_latency_seconds_count"]
+        == values["ngdb_serve_answered_total"]
+    )
+
+
+def test_cli_accepts_the_committed_sample(capsys):
+    assert pp.main([SAMPLE]) == 0
+    out = capsys.readouterr().out
+    assert "valid exposition" in out
+
+
+# ---------------------------------------------------------------------------
+# malformed expositions are rejected
+# ---------------------------------------------------------------------------
+
+VALID_HISTOGRAM = """\
+# HELP x_lat latency
+# TYPE x_lat histogram
+x_lat_bucket{le="0.1"} 3
+x_lat_bucket{le="1.0"} 5
+x_lat_bucket{le="+Inf"} 7
+x_lat_sum 2.5
+x_lat_count 7
+"""
+
+
+def test_the_valid_histogram_fixture_is_actually_valid():
+    assert pp.validate(VALID_HISTOGRAM) == []
+
+
+def test_non_monotone_buckets_are_rejected():
+    broken = VALID_HISTOGRAM.replace('x_lat_bucket{le="1.0"} 5', 'x_lat_bucket{le="1.0"} 2')
+    errors = pp.validate(broken)
+    assert any("monotonicity" in e for e in errors)
+
+
+def test_inf_bucket_must_equal_count():
+    broken = VALID_HISTOGRAM.replace("x_lat_count 7", "x_lat_count 9")
+    errors = pp.validate(broken)
+    assert any("+Inf" in e and "_count" in e for e in errors)
+
+
+def test_terminal_bucket_must_be_inf():
+    broken = VALID_HISTOGRAM.replace('x_lat_bucket{le="+Inf"} 7\n', "")
+    errors = pp.validate(broken)
+    assert any('le="+Inf"' in e for e in errors)
+
+
+def test_unsorted_bucket_bounds_are_rejected():
+    broken = (
+        "# TYPE x_lat histogram\n"
+        'x_lat_bucket{le="1.0"} 3\n'
+        'x_lat_bucket{le="0.1"} 3\n'
+        'x_lat_bucket{le="+Inf"} 3\n'
+        "x_lat_sum 1.0\n"
+        "x_lat_count 3\n"
+    )
+    errors = pp.validate(broken)
+    assert any("ascending" in e for e in errors)
+
+
+def test_histogram_without_sum_or_count_is_rejected():
+    broken = VALID_HISTOGRAM.replace("x_lat_sum 2.5\n", "")
+    errors = pp.validate(broken)
+    assert any("_sum" in e for e in errors)
+
+
+def test_counter_must_be_named_total():
+    errors = pp.validate("# TYPE hits counter\nhits 5\n")
+    assert any("*_total" in e for e in errors)
+
+
+def test_negative_counter_is_rejected():
+    errors = pp.validate("# TYPE hits_total counter\nhits_total -1\n")
+    assert any("negative" in e for e in errors)
+
+
+def test_undeclared_sample_is_rejected():
+    errors = pp.validate("# TYPE a_total counter\na_total 1\nmystery_metric 2\n")
+    assert any("no # TYPE" in e for e in errors)
+
+
+def test_duplicate_family_declaration_is_rejected():
+    errors = pp.validate(
+        "# TYPE a_total counter\na_total 1\n# TYPE a_total counter\n"
+    )
+    assert any("declared twice" in e for e in errors)
+
+
+@pytest.mark.parametrize(
+    "line,needle",
+    [
+        ("a_total{le=0.1} 1", "labels"),  # unquoted label value
+        ("a_total one", "value"),  # non-float value
+        ("just some words here and more", "sample"),  # not a sample at all
+        ("# COMMENT freeform", "comment"),  # only HELP/TYPE comments allowed
+    ],
+)
+def test_grammar_violations(line, needle):
+    errors = pp.validate(f"# TYPE a_total counter\na_total 1\n{line}\n")
+    assert any(needle in e for e in errors), errors
+
+
+def test_cli_rejects_a_broken_file(tmp_path, capsys):
+    p = tmp_path / "broken.prom"
+    p.write_text(VALID_HISTOGRAM.replace("x_lat_count 7", "x_lat_count 9"))
+    assert pp.main([str(p)]) == 1
+    assert "violation" in capsys.readouterr().err

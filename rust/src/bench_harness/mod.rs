@@ -15,6 +15,7 @@ pub mod fig7_multi_gpu;
 pub mod fig9_adaptive;
 pub mod roofline;
 pub mod serve_latency;
+pub mod serve_load;
 pub mod table1_massive;
 pub mod table2_single_hop;
 pub mod table3_main;

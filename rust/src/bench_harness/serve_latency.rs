@@ -30,7 +30,7 @@ use crate::runtime::{MockRuntime, Runtime};
 use crate::sampler::ground;
 use crate::serve::{QueryRequest, QueryService, ServeConfig};
 use crate::util::rng::Rng;
-use crate::util::stats::percentile;
+use crate::util::stats::percentiles;
 
 /// Knobs of one harness run.
 #[derive(Debug, Clone)]
@@ -200,13 +200,15 @@ pub fn run(opts: &ServeBenchOpts) -> Result<ServeLatencyReport> {
         let lat_ms: Vec<f64> = per_request.iter().map(|(l, _)| l * 1e3).collect();
         let mean_batch = per_request.iter().map(|(_, b)| *b as f64).sum::<f64>()
             / per_request.len().max(1) as f64;
+        // one sort for all three quantiles
+        let ps = percentiles(&lat_ms, &[50.0, 95.0, 99.0]);
         windows.push(WindowReport {
             window,
             answered: per_request.len(),
             qps: per_request.len() as f64 / wall.max(1e-9),
-            p50_ms: percentile(&lat_ms, 50.0),
-            p95_ms: percentile(&lat_ms, 95.0),
-            p99_ms: percentile(&lat_ms, 99.0),
+            p50_ms: ps[0],
+            p95_ms: ps[1],
+            p99_ms: ps[2],
             mean_batch,
         });
     }

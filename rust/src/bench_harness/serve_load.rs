@@ -1,0 +1,398 @@
+//! serve_load — the serving tier under **overload**, on the mock runtime
+//! (no XLA).
+//!
+//! Where `serve_latency` measures the fusion win at a submission rate the
+//! service can absorb, this harness drives it at a *multiple* of its
+//! measured capacity with realistic arrival processes and checks the
+//! overload machinery:
+//!
+//! 1. **Capacity probe.** A closed-loop run (every request submitted
+//!    up front, fixed windows, blocking intake) measures the service's
+//!    sustainable QPS on this machine — all later rates are relative, so
+//!    the bench is runner-speed independent.
+//! 2. **Arrival schedules.** Request offsets are precomputed at
+//!    `overload × capacity` for three processes: `uniform` (evenly
+//!    spaced), `bursty` (groups of 16 back-to-back, then a gap — the
+//!    arrival pattern that defeats fixed windows), and `pareto`
+//!    (heavy-tailed Pareto(α = 1.5) gaps, mean matched to the target
+//!    rate, capped at 50× the mean gap).
+//! 3. **Scenario matrix.** Each schedule runs twice: `fixed_block`
+//!    ([`BatchPolicy::Fixed`] + [`ShedPolicy::Block`] — the seed's
+//!    behavior) and `adaptive_shed` ([`BatchPolicy::Adaptive`] +
+//!    [`ShedPolicy::RejectNewest`]). A single dispatcher thread sleeps to
+//!    each absolute offset and submits round-robin over 4 client handles;
+//!    when the blocking intake stalls the dispatcher, that *client-side
+//!    queueing delay* is charged to every later request (`lag`), exactly
+//!    as a real upstream would experience it. Client-perceived latency =
+//!    dispatch lag + served latency.
+//!
+//! The queue is deliberately small — `min(cap_knob, n/8)` slots, further
+//! sized so a full queue drains within a quarter of the p99 target
+//! (Little's law: depth ≤ capacity × target/4) — so the two policies
+//! actually diverge: blocking smears the overload across *every* request
+//! (unbounded client-perceived latency), shedding bounds the accepted
+//! requests' latency and answers the rest with a typed
+//! [`ServeError::Overloaded`].
+//!
+//! The bench target (`benches/serve_load.rs`) gates: no silent drops
+//! (`answered + shed == submitted`, per scenario), bursty `adaptive_shed`
+//! keeps accepted p99 under the target while `fixed_block` degrades
+//! ≥ 1.5× worse, and the shed path actually engaged. It writes
+//! `BENCH_serve_load.json` plus the final scenario's Prometheus rendering
+//! (`BENCH_serve_metrics.prom`) for the exposition-format validator.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::kg::KgSpec;
+use crate::model::{ModelSnapshot, ModelState, SnapshotCell};
+use crate::query::Pattern;
+use crate::runtime::{MockRuntime, Runtime};
+use crate::sampler::ground;
+use crate::serve::{
+    BatchPolicy, QueryRequest, QueryService, ServeConfig, ServeError, ShedPolicy,
+};
+use crate::util::rng::Rng;
+use crate::util::stats::percentiles;
+
+/// Knobs of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadOpts {
+    /// requests per scenario (and in the capacity probe)
+    pub n_requests: usize,
+    /// forward-session worker threads
+    pub workers: usize,
+    /// per-artifact-launch delay (device-compute stand-in), microseconds
+    pub delay_us: u64,
+    /// intake queue ceiling (further clamped to `n_requests / 8` and to
+    /// the Little's-law depth — see the module docs)
+    pub queue_cap: usize,
+    /// submission rate as a multiple of measured capacity
+    pub overload: f64,
+    /// accepted-request p99 the shedding config must hold (and the
+    /// adaptive controller's steering target)
+    pub p99_target_ms: f64,
+    /// host-kernel compute lanes per execute (bitwise-safe)
+    pub host_threads: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadOpts {
+    fn default() -> LoadOpts {
+        LoadOpts {
+            n_requests: 512,
+            workers: 2,
+            delay_us: 200,
+            queue_cap: 64,
+            overload: 4.0,
+            p99_target_ms: 250.0,
+            host_threads: 1,
+            seed: 23,
+        }
+    }
+}
+
+/// Outcome of one (arrival process, policy) cell.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub arrivals: &'static str,
+    pub policy: &'static str,
+    pub submitted: usize,
+    pub answered: usize,
+    pub shed: usize,
+    /// rejected/failed/disconnected — must stay 0 with valid requests
+    pub errored: usize,
+    /// client-perceived (dispatch lag + served) latency percentiles over
+    /// *accepted* requests, milliseconds
+    pub accepted_p50_ms: f64,
+    pub accepted_p95_ms: f64,
+    pub accepted_p99_ms: f64,
+    /// answered requests per wall-clock second
+    pub accepted_qps: f64,
+    pub shed_rate_pct: f64,
+    pub wall_secs: f64,
+}
+
+/// Full matrix report.
+#[derive(Debug, Clone)]
+pub struct ServeLoadReport {
+    pub opts: LoadOpts,
+    /// closed-loop sustainable QPS measured by the probe
+    pub capacity_qps: f64,
+    /// the queue depth the scenarios actually ran with
+    pub queue_cap: usize,
+    pub scenarios: Vec<ScenarioReport>,
+    /// Prometheus rendering of the bursty `adaptive_shed` scenario's
+    /// registry, captured right before its service shut down
+    pub prometheus: String,
+}
+
+impl ServeLoadReport {
+    pub fn scenario(&self, arrivals: &str, policy: &str) -> Option<&ScenarioReport> {
+        self.scenarios.iter().find(|s| s.arrivals == arrivals && s.policy == policy)
+    }
+}
+
+const ARRIVALS: [&str; 3] = ["uniform", "bursty", "pareto"];
+const BURST: usize = 16;
+/// client handles the dispatcher round-robins over (fairness sees each as
+/// a distinct client)
+const DISPATCH_CLIENTS: usize = 4;
+
+/// Absolute submission offsets for `n` requests at `rate` req/s.
+fn schedule(kind: &str, rate: f64, n: usize, seed: u64) -> Vec<Duration> {
+    let gap = 1.0 / rate.max(1e-6);
+    match kind {
+        "uniform" => (0..n).map(|i| Duration::from_secs_f64(i as f64 * gap)).collect(),
+        // whole bursts land at once; the *mean* rate still matches
+        "bursty" => (0..n)
+            .map(|i| Duration::from_secs_f64((i / BURST * BURST) as f64 * gap))
+            .collect(),
+        "pareto" => {
+            // Pareto(α) with x_m chosen so the mean gap is 1/rate; the
+            // tail cap keeps one astronomical draw from emptying the run
+            let mut rng = Rng::new(seed ^ 0xA5A5);
+            let alpha = 1.5;
+            let x_m = gap * (alpha - 1.0) / alpha;
+            let mut t = 0.0;
+            (0..n)
+                .map(|_| {
+                    let at = Duration::from_secs_f64(t);
+                    let u = (1.0 - rng.f64()).max(1e-12);
+                    t += (x_m / u.powf(1.0 / alpha)).min(50.0 * gap);
+                    at
+                })
+                .collect()
+        }
+        other => unreachable!("unknown arrival process {other}"),
+    }
+}
+
+fn base_cfg(opts: &LoadOpts, queue_cap: usize) -> ServeConfig {
+    ServeConfig {
+        workers: opts.workers,
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        queue_cap,
+        default_top_k: 10,
+        ..Default::default()
+    }
+}
+
+fn scenario_cfg(opts: &LoadOpts, queue_cap: usize, policy: &str) -> ServeConfig {
+    let mut cfg = base_cfg(opts, queue_cap);
+    match policy {
+        "fixed_block" => {
+            cfg.batch = BatchPolicy::Fixed;
+            cfg.shed = ShedPolicy::Block;
+            cfg.high_reserve = 0;
+        }
+        "adaptive_shed" => {
+            cfg.batch = BatchPolicy::Adaptive {
+                p99_target: Duration::from_secs_f64(opts.p99_target_ms / 1e3),
+                min_wait: Duration::from_micros(100),
+            };
+            cfg.shed = ShedPolicy::RejectNewest;
+            cfg.high_reserve = queue_cap / 8;
+        }
+        other => unreachable!("unknown policy {other}"),
+    }
+    cfg
+}
+
+/// Run the full matrix. Mock-only, like `serve_latency`.
+pub fn run(opts: &LoadOpts) -> Result<ServeLoadReport> {
+    let kg = KgSpec::preset("toy", 1.0)?.generate()?;
+    let rt: Arc<MockRuntime> = Arc::new(
+        MockRuntime::with_config(32, 2, &[4, 16, 64])
+            .with_eval_dims(32, kg.n_entities.next_power_of_two())
+            .with_exec_delay(Duration::from_micros(opts.delay_us))
+            .with_threads(opts.host_threads),
+    );
+    let state = ModelState::init(
+        rt.manifest(),
+        "mock",
+        kg.n_entities,
+        kg.n_relations,
+        None,
+        opts.seed,
+    )?;
+
+    // one shared request set: every scenario (and the probe) serves
+    // identical work
+    let mut rng = Rng::new(opts.seed ^ 0x10AD);
+    let patterns = [Pattern::P1, Pattern::P2, Pattern::I2, Pattern::Ip];
+    let mut requests: Vec<QueryRequest> = Vec::with_capacity(opts.n_requests);
+    let mut guard = 0usize;
+    while requests.len() < opts.n_requests && guard < opts.n_requests * 40 {
+        guard += 1;
+        let p = *rng.choice(&patterns);
+        if let Some(g) = ground(&kg, &mut rng, p) {
+            requests.push(QueryRequest { tree: g.tree, filter: vec![g.answer], top_k: 10 });
+        }
+    }
+    anyhow::ensure!(
+        requests.len() >= 64,
+        "degenerate load config: only {} requests sampled",
+        requests.len()
+    );
+    let n = requests.len();
+
+    // ---- capacity probe: closed loop, nothing can shed or block --------
+    let capacity_qps = {
+        let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+        let service = QueryService::start(
+            Arc::clone(&rt) as Arc<dyn Runtime>,
+            cell,
+            base_cfg(opts, 2 * n),
+        );
+        let client = service.client();
+        let t0 = Instant::now();
+        let pending: Vec<_> = requests
+            .iter()
+            .map(|r| client.submit(r.clone()))
+            .collect::<Result<_, _>>()
+            .context("probe submission")?;
+        for p in pending {
+            p.wait().context("probe answer")?;
+        }
+        let qps = n as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        drop(client);
+        service.shutdown();
+        qps
+    };
+
+    // queue sized so a full queue drains within target/4 (Little's law);
+    // also small relative to n so overload actually outlasts the buffer
+    let queue_cap = (capacity_qps * opts.p99_target_ms / 1e3 / 4.0) as usize;
+    let queue_cap = queue_cap.clamp(8, opts.queue_cap).min((n / 8).max(8));
+    let rate = opts.overload * capacity_qps;
+
+    let mut scenarios = Vec::new();
+    let mut prometheus = String::new();
+    for arrivals in ARRIVALS {
+        let offsets = schedule(arrivals, rate, n, opts.seed);
+        for policy in ["fixed_block", "adaptive_shed"] {
+            let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+            let service = QueryService::start(
+                Arc::clone(&rt) as Arc<dyn Runtime>,
+                cell,
+                scenario_cfg(opts, queue_cap, policy),
+            );
+            let clients: Vec<_> = (0..DISPATCH_CLIENTS).map(|_| service.client()).collect();
+
+            // single dispatcher: sleep to each absolute offset, submit,
+            // and charge any stall (blocked intake) to the lag of every
+            // later request — the upstream's view of backpressure
+            let t0 = Instant::now();
+            let mut entries = Vec::with_capacity(n);
+            for (i, (off, req)) in offsets.iter().zip(&requests).enumerate() {
+                let target = t0 + *off;
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                let pending = clients[i % DISPATCH_CLIENTS].submit(req.clone());
+                let lag = Instant::now().saturating_duration_since(target);
+                entries.push((lag, pending));
+            }
+
+            let (mut shed, mut errored) = (0usize, 0usize);
+            let mut accepted_ms: Vec<f64> = Vec::with_capacity(n);
+            for (lag, pending) in entries {
+                match pending.map(|p| p.wait()) {
+                    Ok(Ok(a)) => {
+                        accepted_ms.push((lag + a.latency).as_secs_f64() * 1e3);
+                    }
+                    Ok(Err(ServeError::Overloaded { .. })) => shed += 1,
+                    Ok(Err(_)) | Err(_) => errored += 1,
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            if (arrivals, policy) == ("bursty", "adaptive_shed") {
+                prometheus = service.metrics().render_prometheus();
+            }
+            drop(clients);
+            service.shutdown();
+
+            let ps = percentiles(&accepted_ms, &[50.0, 95.0, 99.0]);
+            scenarios.push(ScenarioReport {
+                arrivals,
+                policy,
+                submitted: n,
+                answered: accepted_ms.len(),
+                shed,
+                errored,
+                accepted_p50_ms: ps[0],
+                accepted_p95_ms: ps[1],
+                accepted_p99_ms: ps[2],
+                accepted_qps: accepted_ms.len() as f64 / wall.max(1e-9),
+                shed_rate_pct: 100.0 * shed as f64 / n as f64,
+                wall_secs: wall,
+            });
+        }
+    }
+
+    Ok(ServeLoadReport { opts: opts.clone(), capacity_qps, queue_cap, scenarios, prometheus })
+}
+
+/// Hand-rolled JSON artifact (same dependency-free style as the other
+/// bench harnesses). Summary keys pin the gated contract: shed rate and
+/// accepted p99 bounded (lower-is-better), accepted throughput as a
+/// fraction of measured capacity (higher-is-better) — all ratios, so they
+/// hold across runner speeds.
+pub fn write_json(report: &ServeLoadReport, path: &str) -> Result<()> {
+    let mut rows = String::new();
+    for (i, s) in report.scenarios.iter().enumerate() {
+        let sep = if i + 1 < report.scenarios.len() { "," } else { "" };
+        rows.push_str(&format!(
+            "    {{\"arrivals\": \"{}\", \"policy\": \"{}\", \"submitted\": {}, \
+             \"answered\": {}, \"shed\": {}, \"errored\": {}, \
+             \"accepted_p50_ms\": {:.3}, \"accepted_p95_ms\": {:.3}, \
+             \"accepted_p99_ms\": {:.3}, \"accepted_qps\": {:.1}, \
+             \"shed_rate_pct\": {:.1}, \"wall_secs\": {:.3}}}{sep}\n",
+            s.arrivals,
+            s.policy,
+            s.submitted,
+            s.answered,
+            s.shed,
+            s.errored,
+            s.accepted_p50_ms,
+            s.accepted_p95_ms,
+            s.accepted_p99_ms,
+            s.accepted_qps,
+            s.shed_rate_pct,
+            s.wall_secs
+        ));
+    }
+    let bursty = report
+        .scenario("bursty", "adaptive_shed")
+        .context("bursty/adaptive_shed scenario missing")?;
+    let fixed = report
+        .scenario("bursty", "fixed_block")
+        .context("bursty/fixed_block scenario missing")?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve_load\",\n  \"config\": {{\"requests\": {}, \
+         \"workers\": {}, \"delay_us\": {}, \"queue_cap\": {}, \"overload\": {}, \
+         \"p99_target_ms\": {}, \"capacity_qps\": {:.1}}},\n  \
+         \"scenarios\": [\n{rows}  ],\n  \
+         \"bursty_shed_rate_pct\": {:.1},\n  \
+         \"bursty_accepted_p99_ms\": {:.3},\n  \
+         \"bursty_accepted_qps_frac\": {:.3},\n  \
+         \"bursty_fixed_over_shed_p99\": {:.2}\n}}\n",
+        bursty.submitted,
+        report.opts.workers,
+        report.opts.delay_us,
+        report.queue_cap,
+        report.opts.overload,
+        report.opts.p99_target_ms,
+        report.capacity_qps,
+        bursty.shed_rate_pct,
+        bursty.accepted_p99_ms,
+        bursty.accepted_qps / report.capacity_qps.max(1e-9),
+        fixed.accepted_p99_ms / bursty.accepted_p99_ms.max(1e-9),
+    );
+    std::fs::write(path, json).with_context(|| format!("writing {path}"))
+}

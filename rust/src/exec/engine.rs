@@ -168,6 +168,10 @@ pub struct StepStats {
     pub operators: usize,
     /// padded rows across all invocations (bucket waste)
     pub padded_rows: usize,
+    /// total bucket rows across all invocations (filled + padding) — the
+    /// denominator for padding fractions; today one operator fills one
+    /// output row, but metrics must not bake that coupling in
+    pub bucket_rows: usize,
     /// peak live bytes in the tensor slab
     pub peak_live_bytes: usize,
     /// per-query loss keyed by pattern name (adaptive-sampler feedback)
@@ -786,6 +790,7 @@ impl<'a> Engine<'a> {
             }
         }
         stats.padded_rows += prep.padded;
+        stats.bucket_rows += prep.batch.len() + prep.padded;
         let rd = state.repr_dim;
         let batch = &prep.batch;
 

@@ -1,8 +1,50 @@
 //! Metrics: throughput, memory accounting, and experiment logging.
+//!
+//! (Serving-plane observability — atomic counters/gauges, latency
+//! histograms and the Prometheus renderer — lives in [`crate::serve::metrics`];
+//! this module is the training-side accounting.)
 
+use std::io::Write;
 use std::time::Instant;
 
 use crate::util::stats;
+
+/// How many step-time samples [`ThroughputMeter`] retains. Within the cap
+/// the p50 is exact; past it the ring holds the most recent
+/// `STEP_RING_CAP` samples, so `p50_step` becomes a rolling-window
+/// estimate — bounded memory is the contract once the meter runs inside a
+/// long-lived serve/load loop (the seed's `Vec` grew without bound).
+pub const STEP_RING_CAP: usize = 4096;
+
+/// Fixed-capacity ring of f64 samples (insertion order not preserved once
+/// wrapped; percentiles don't care).
+#[derive(Debug, Clone)]
+struct SampleRing {
+    buf: Vec<f64>,
+    next: usize,
+    /// total samples ever pushed (>= buf.len())
+    pushed: u64,
+}
+
+impl SampleRing {
+    fn new() -> SampleRing {
+        SampleRing { buf: Vec::new(), next: 0, pushed: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.pushed += 1;
+        if self.buf.len() < STEP_RING_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % STEP_RING_CAP;
+        }
+    }
+
+    fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+}
 
 /// Queries/sec + operator/launch accounting over a training run.
 #[derive(Debug, Clone)]
@@ -12,9 +54,14 @@ pub struct ThroughputMeter {
     pub steps: u64,
     pub operators: u64,
     pub launches: u64,
+    /// total bucket rows launched (filled + padding) — the pad%
+    /// denominator. Distinct from `operators`: one operator happens to
+    /// fill one output row today, but padding is a *row* phenomenon and
+    /// the meter must not conflate the two counts.
+    pub rows: u64,
     pub padded_rows: u64,
-    /// wall-clock samples per step (secs)
-    pub step_times: Vec<f64>,
+    /// wall-clock samples per step (secs), capped at [`STEP_RING_CAP`]
+    step_times: SampleRing,
 }
 
 impl Default for ThroughputMeter {
@@ -31,8 +78,9 @@ impl ThroughputMeter {
             steps: 0,
             operators: 0,
             launches: 0,
+            rows: 0,
             padded_rows: 0,
-            step_times: Vec::new(),
+            step_times: SampleRing::new(),
         }
     }
 
@@ -40,12 +88,14 @@ impl ThroughputMeter {
         *self = Self::new();
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn tick(&mut self, queries: usize, operators: usize, launches: usize,
-                padded: usize, step_secs: f64) {
+                rows: usize, padded: usize, step_secs: f64) {
         self.queries += queries as u64;
         self.steps += 1;
         self.operators += operators as u64;
         self.launches += launches as u64;
+        self.rows += rows as u64;
         self.padded_rows += padded as u64;
         self.step_times.push(step_secs);
     }
@@ -64,8 +114,21 @@ impl ThroughputMeter {
         self.operators as f64 / self.launches.max(1) as f64
     }
 
+    /// Fraction of launched rows that were padding, in [0, 1].
+    pub fn padded_frac(&self) -> f64 {
+        self.padded_rows as f64 / self.rows.max(1) as f64
+    }
+
+    /// Retained step-time samples (at most [`STEP_RING_CAP`]; the most
+    /// recent window once the ring has wrapped).
+    pub fn step_times(&self) -> &[f64] {
+        self.step_times.samples()
+    }
+
+    /// Median step time over the retained window (exact until the ring
+    /// wraps; see [`STEP_RING_CAP`]).
     pub fn p50_step(&self) -> f64 {
-        stats::median(&self.step_times)
+        stats::median(self.step_times.samples())
     }
 
     pub fn summary(&self) -> String {
@@ -74,8 +137,7 @@ impl ThroughputMeter {
             self.qps(),
             self.steps,
             self.ops_per_launch(),
-            100.0 * self.padded_rows as f64
-                / (self.operators + self.padded_rows).max(1) as f64,
+            100.0 * self.padded_frac(),
             stats::fmt_secs(self.p50_step())
         )
     }
@@ -103,29 +165,70 @@ impl MemoryEstimate {
 }
 
 /// Minimal TSV logger for experiment curves (loss, MRR, qps per step).
+///
+/// Write failures are *surfaced*, not swallowed: the first failure is
+/// reported once on stderr, every failure counts into
+/// [`TsvLogger::write_errors`], and [`TsvLogger::flush`] exists so callers
+/// can force rows to disk and observe the error (a full disk mid-run must
+/// not silently truncate an experiment curve).
 pub struct TsvLogger {
-    file: Option<std::io::BufWriter<std::fs::File>>,
+    out: Option<Box<dyn std::io::Write + Send>>,
+    errors: u64,
+    reported: bool,
 }
 
 impl TsvLogger {
     /// `path = None` disables logging.
     pub fn open(path: Option<&str>, header: &str) -> anyhow::Result<TsvLogger> {
-        let file = match path {
+        match path {
             Some(p) => {
-                use std::io::Write;
-                let mut f = std::io::BufWriter::new(std::fs::File::create(p)?);
-                writeln!(f, "{header}")?;
-                Some(f)
+                let f = std::io::BufWriter::new(std::fs::File::create(p)?);
+                TsvLogger::from_writer(Box::new(f), header)
             }
-            None => None,
-        };
-        Ok(TsvLogger { file })
+            None => Ok(TsvLogger { out: None, errors: 0, reported: false }),
+        }
+    }
+
+    /// Log into any writer (how the tests inject failing sinks). The
+    /// header write is construction: its failure is a hard error.
+    pub fn from_writer(
+        mut w: Box<dyn std::io::Write + Send>,
+        header: &str,
+    ) -> anyhow::Result<TsvLogger> {
+        writeln!(w, "{header}")?;
+        Ok(TsvLogger { out: Some(w), errors: 0, reported: false })
     }
 
     pub fn row(&mut self, cols: &[String]) {
-        if let Some(f) = &mut self.file {
-            use std::io::Write;
-            let _ = writeln!(f, "{}", cols.join("\t"));
+        if let Some(f) = &mut self.out {
+            if let Err(e) = writeln!(f, "{}", cols.join("\t")) {
+                self.note_error(&e);
+            }
+        }
+    }
+
+    /// Force buffered rows down to the sink. Errors count like row errors
+    /// AND propagate, so end-of-run callers can decide how loud to be.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        if let Some(f) = &mut self.out {
+            if let Err(e) = f.flush() {
+                self.note_error(&e);
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// How many row/flush writes have failed so far.
+    pub fn write_errors(&self) -> u64 {
+        self.errors
+    }
+
+    fn note_error(&mut self, e: &std::io::Error) {
+        self.errors += 1;
+        if !self.reported {
+            self.reported = true; // log-once: a dead disk must not spam per row
+            eprintln!("TsvLogger: dropping log rows ({e}); further errors counted silently");
         }
     }
 }
@@ -137,12 +240,45 @@ mod tests {
     #[test]
     fn meter_accumulates() {
         let mut m = ThroughputMeter::new();
-        m.tick(512, 100, 10, 12, 0.01);
-        m.tick(512, 100, 10, 12, 0.02);
+        m.tick(512, 100, 10, 112, 12, 0.01);
+        m.tick(512, 100, 10, 112, 12, 0.02);
         assert_eq!(m.queries, 1024);
         assert!((m.ops_per_launch() - 10.0).abs() < 1e-9);
         assert!(m.qps() > 0.0);
         assert!(m.summary().contains("ops/launch"));
+    }
+
+    #[test]
+    fn pad_fraction_uses_row_counts_not_operator_counts() {
+        let mut m = ThroughputMeter::new();
+        // 3 launches, 24 bucket rows total, 4 of them padding: pad% must
+        // be 4/24 regardless of how many operators the rows carried
+        m.tick(16, 20, 3, 24, 4, 0.01);
+        assert!((m.padded_frac() - 4.0 / 24.0).abs() < 1e-12);
+        assert!(m.summary().contains("pad 16.7%"));
+    }
+
+    #[test]
+    fn step_times_are_capped_by_the_ring() {
+        let mut m = ThroughputMeter::new();
+        for i in 0..(STEP_RING_CAP + 100) {
+            m.tick(1, 1, 1, 1, 0, i as f64);
+        }
+        assert_eq!(m.steps as usize, STEP_RING_CAP + 100, "counters keep exact totals");
+        assert_eq!(m.step_times().len(), STEP_RING_CAP, "samples stay bounded");
+        // the retained window is the most recent cap: samples 100..cap+100
+        let min = m.step_times().iter().cloned().fold(f64::INFINITY, f64::min);
+        assert_eq!(min, 100.0, "oldest samples were evicted first");
+        assert!(m.p50_step() >= 100.0);
+    }
+
+    #[test]
+    fn p50_is_exact_below_the_cap() {
+        let mut m = ThroughputMeter::new();
+        for v in [0.03, 0.01, 0.02] {
+            m.tick(1, 1, 1, 1, 0, v);
+        }
+        assert!((m.p50_step() - 0.02).abs() < 1e-12);
     }
 
     #[test]
@@ -157,13 +293,63 @@ mod tests {
     }
 
     #[test]
-    fn tsv_logger_writes() {
+    fn tsv_logger_writes_and_flushes() {
         let p = std::env::temp_dir().join("ngdb_tsv_test.tsv");
         let mut l = TsvLogger::open(Some(p.to_str().unwrap()), "a\tb").unwrap();
         l.row(&["1".into(), "2".into()]);
-        drop(l);
-        let text = std::fs::read_to_string(p).unwrap();
+        l.flush().unwrap();
+        assert_eq!(l.write_errors(), 0);
+        let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.contains("a\tb"));
         assert!(text.contains("1\t2"));
+        drop(l);
+        let _ = std::fs::remove_file(p);
+    }
+
+    /// Sink that accepts `budget` writes then fails like a full disk.
+    struct FailingWriter {
+        budget: usize,
+    }
+
+    impl std::io::Write for FailingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::StorageFull,
+                    "disk full",
+                ));
+            }
+            self.budget -= 1;
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::StorageFull, "disk full"))
+        }
+    }
+
+    #[test]
+    fn tsv_logger_counts_write_errors_instead_of_swallowing() {
+        // header consumes the 1-write budget; every row after that fails
+        let mut l =
+            TsvLogger::from_writer(Box::new(FailingWriter { budget: 1 }), "h").unwrap();
+        l.row(&["x".into()]);
+        l.row(&["y".into()]);
+        assert_eq!(l.write_errors(), 2, "every failed row is counted");
+        assert!(l.flush().is_err(), "flush surfaces the sink error");
+        assert_eq!(l.write_errors(), 3);
+    }
+
+    #[test]
+    fn tsv_logger_header_failure_is_a_construction_error() {
+        assert!(TsvLogger::from_writer(Box::new(FailingWriter { budget: 0 }), "h").is_err());
+    }
+
+    #[test]
+    fn disabled_logger_is_inert() {
+        let mut l = TsvLogger::open(None, "h").unwrap();
+        l.row(&["1".into()]);
+        assert!(l.flush().is_ok());
+        assert_eq!(l.write_errors(), 0);
     }
 }

@@ -1,0 +1,603 @@
+//! Serving-tier observability: an atomic metrics registry rendered in the
+//! Prometheus text exposition format (version 0.0.4).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero-alloc hot path.** Workers and the intake record into plain
+//!    atomics — [`Counter`], [`Gauge`], and fixed-bucket [`Histogram`]s
+//!    whose bucket arrays are allocated once at service start. No labels
+//!    are formatted, no strings built, no locks taken while serving.
+//!    Rendering ([`ServeMetrics::render_prometheus`]) allocates freely —
+//!    it runs on a scrape, not on a request.
+//! 2. **Histograms over samples.** Latency is recorded into fixed
+//!    log-spaced buckets (100 µs … 10 s), so p50/p95/p99 estimates cost a
+//!    bucket walk, memory stays constant forever, and the adaptive batcher
+//!    can read a *rolling* p99 by diffing bucket snapshots
+//!    ([`Histogram::delta_quantile`]) instead of retaining samples.
+//! 3. **Prometheus text format**, because every scraper speaks it: `# HELP`
+//!    / `# TYPE` headers, `_bucket{le="..."}` cumulative buckets with a
+//!    `+Inf` terminator, `_sum`/`_count`, counters suffixed `_total`.
+//!    `scripts/prom_parse.py` round-trips the output in CI.
+//!
+//! The optional scrape endpoint ([`export_http`], enabled by
+//! [`crate::serve::ServeConfig::metrics_addr`]) is a deliberately tiny
+//! blocking TCP loop — one thread, no HTTP library, answers every request
+//! with the full exposition — sized for a scrape every few seconds, not
+//! for serving traffic.
+
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::Lane;
+
+/// Monotonic event count.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram bucket upper bounds, seconds (log-spaced ~2.5×;
+/// `+Inf` implicit). Chosen to straddle micro-batched serve latencies:
+/// sub-ms windows at the bottom, shed-path queueing tails at the top.
+pub const LATENCY_BOUNDS: [f64; 16] = [
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5,
+    1.0, 2.5, 5.0, 10.0,
+];
+
+/// Batch-fill histogram bounds (requests fused per window).
+pub const FILL_BOUNDS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Fixed-bucket histogram: `bounds.len() + 1` atomic buckets (the last is
+/// the overflow/`+Inf` bucket), an atomic count, and a fixed-point sum
+/// (micro-units, so `observe` stays a single `fetch_add` — no CAS loop).
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// sum of observed values scaled by 1e6 (µ-units); plenty of headroom
+    /// (u64 micros ≈ 584k seconds-years) and precise enough for `_sum`
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds,
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Zero-alloc, lock-free; NaN is dropped (a
+    /// poisoned sample must not land in an arbitrary bucket).
+    pub fn observe(&self, v: f64) {
+        if v.is_nan() {
+            return;
+        }
+        // first bucket whose upper bound holds v; bounds are few enough
+        // that a linear scan beats binary search in practice
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((v.max(0.0) * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    fn load_buckets(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Quantile estimate (`q` in [0, 1]) over the whole recorded history,
+    /// linearly interpolated within the winning bucket. The overflow
+    /// bucket reports the largest finite bound (a conservative floor).
+    pub fn quantile(&self, q: f64) -> f64 {
+        Self::quantile_of(self.bounds, &self.load_buckets(), q).0
+    }
+
+    /// Rolling quantile: the quantile of everything observed since `prev`
+    /// was last passed in, plus the number of new observations. Updates
+    /// `prev` to the current snapshot — callers (the adaptive batcher)
+    /// keep one snapshot per control loop and get a windowed p99 without
+    /// any sample retention. An empty window returns `(0.0, 0)`.
+    pub fn delta_quantile(&self, prev: &mut Vec<u64>, q: f64) -> (f64, u64) {
+        let cur = self.load_buckets();
+        let delta: Vec<u64> = if prev.len() == cur.len() {
+            cur.iter().zip(prev.iter()).map(|(c, p)| c.saturating_sub(*p)).collect()
+        } else {
+            cur.clone()
+        };
+        *prev = cur;
+        Self::quantile_of(self.bounds, &delta, q)
+    }
+
+    fn quantile_of(bounds: &[f64], counts: &[u64], q: f64) -> (f64, u64) {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return (0.0, 0);
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum >= rank {
+                let upper = if i < bounds.len() {
+                    bounds[i]
+                } else {
+                    // overflow bucket: no finite upper bound to
+                    // interpolate toward — report the largest bound
+                    return (bounds.last().copied().unwrap_or(0.0), total);
+                };
+                let lower = if i == 0 { 0.0 } else { bounds[i - 1] };
+                let into = (rank - (cum - c)) as f64 / c as f64;
+                return (lower + into * (upper - lower), total);
+            }
+        }
+        (bounds.last().copied().unwrap_or(0.0), total)
+    }
+}
+
+/// The serving tier's metrics registry. One instance per
+/// [`crate::serve::QueryService`], shared by intake, batcher, and workers;
+/// every field is individually atomic, so recording is contention-free.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    // -- intake (per priority lane)
+    pub submitted_high: Counter,
+    pub submitted_normal: Counter,
+    pub accepted_high: Counter,
+    pub accepted_normal: Counter,
+    pub shed_high: Counter,
+    pub shed_normal: Counter,
+    pub queue_depth_high: Gauge,
+    pub queue_depth_normal: Gauge,
+    /// live client handles (fairness shares divide by this minus the
+    /// service's own keepalive handle)
+    pub clients: Gauge,
+    // -- batcher
+    pub batches: Counter,
+    pub batch_fill: Histogram,
+    /// adaptive controller state, exported for dashboards
+    pub window_batch_target: Gauge,
+    pub window_wait_micros: Gauge,
+    // -- workers
+    pub answered: Counter,
+    /// per-request admission failures (invalid tree, id range, negation)
+    pub rejected: Counter,
+    /// batch-wide execution failures, counted per poisoned request
+    pub failed: Counter,
+    pub latency: Histogram,
+    /// optimizer step of the most recently served snapshot
+    pub snapshot_step: Gauge,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            submitted_high: Counter::default(),
+            submitted_normal: Counter::default(),
+            accepted_high: Counter::default(),
+            accepted_normal: Counter::default(),
+            shed_high: Counter::default(),
+            shed_normal: Counter::default(),
+            queue_depth_high: Gauge::default(),
+            queue_depth_normal: Gauge::default(),
+            clients: Gauge::default(),
+            batches: Counter::default(),
+            batch_fill: Histogram::new(&FILL_BOUNDS),
+            window_batch_target: Gauge::default(),
+            window_wait_micros: Gauge::default(),
+            answered: Counter::default(),
+            rejected: Counter::default(),
+            failed: Counter::default(),
+            latency: Histogram::new(&LATENCY_BOUNDS),
+            snapshot_step: Gauge::default(),
+        }
+    }
+
+    pub fn submitted(&self, lane: Lane) -> &Counter {
+        match lane {
+            Lane::High => &self.submitted_high,
+            Lane::Normal => &self.submitted_normal,
+        }
+    }
+
+    pub fn accepted(&self, lane: Lane) -> &Counter {
+        match lane {
+            Lane::High => &self.accepted_high,
+            Lane::Normal => &self.accepted_normal,
+        }
+    }
+
+    pub fn shed(&self, lane: Lane) -> &Counter {
+        match lane {
+            Lane::High => &self.shed_high,
+            Lane::Normal => &self.shed_normal,
+        }
+    }
+
+    /// Total sheds across both lanes.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_high.get() + self.shed_normal.get()
+    }
+
+    /// Render the registry in Prometheus text exposition format.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        lane_counter(
+            &mut out,
+            "ngdb_serve_submitted_total",
+            "Requests submitted, by priority lane.",
+            self.submitted_high.get(),
+            self.submitted_normal.get(),
+        );
+        lane_counter(
+            &mut out,
+            "ngdb_serve_accepted_total",
+            "Requests admitted into the intake queue, by priority lane.",
+            self.accepted_high.get(),
+            self.accepted_normal.get(),
+        );
+        lane_counter(
+            &mut out,
+            "ngdb_serve_shed_total",
+            "Requests shed by admission control (typed Overloaded answers), by lane.",
+            self.shed_high.get(),
+            self.shed_normal.get(),
+        );
+        counter(
+            &mut out,
+            "ngdb_serve_answered_total",
+            "Requests answered with a top-k result.",
+            self.answered.get(),
+        );
+        counter(
+            &mut out,
+            "ngdb_serve_rejected_total",
+            "Requests rejected at admission (invalid tree, id range, negation).",
+            self.rejected.get(),
+        );
+        counter(
+            &mut out,
+            "ngdb_serve_failed_total",
+            "Requests failed by a batch-wide execution error.",
+            self.failed.get(),
+        );
+        counter(
+            &mut out,
+            "ngdb_serve_batches_total",
+            "Micro-batch windows dispatched to workers.",
+            self.batches.get(),
+        );
+        lane_gauge(
+            &mut out,
+            "ngdb_serve_queue_depth",
+            "Requests waiting in the intake queue, by priority lane.",
+            self.queue_depth_high.get(),
+            self.queue_depth_normal.get(),
+        );
+        gauge(
+            &mut out,
+            "ngdb_serve_clients",
+            "Live client handles (including the service's own).",
+            self.clients.get(),
+        );
+        gauge(
+            &mut out,
+            "ngdb_serve_window_batch_target",
+            "Batching window size currently targeted by the controller.",
+            self.window_batch_target.get(),
+        );
+        gauge(
+            &mut out,
+            "ngdb_serve_window_wait_micros",
+            "Batching window deadline currently targeted by the controller (us).",
+            self.window_wait_micros.get(),
+        );
+        gauge(
+            &mut out,
+            "ngdb_serve_snapshot_step",
+            "Optimizer step of the most recently served model snapshot.",
+            self.snapshot_step.get(),
+        );
+        histogram(
+            &mut out,
+            "ngdb_serve_batch_fill",
+            "Requests fused per dispatched micro-batch window.",
+            &self.batch_fill,
+        );
+        histogram(
+            &mut out,
+            "ngdb_serve_latency_seconds",
+            "End-to-end accepted-request latency (enqueue to answer), seconds.",
+            &self.latency,
+        );
+        // summary-style quantile estimates derived from the histogram, so
+        // dashboards get p50/p95/p99 without PromQL histogram_quantile
+        out.push_str(
+            "# HELP ngdb_serve_latency_seconds_est Latency quantile estimates \
+             derived from the histogram buckets.\n\
+             # TYPE ngdb_serve_latency_seconds_est gauge\n",
+        );
+        for (label, q) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+            out.push_str(&format!(
+                "ngdb_serve_latency_seconds_est{{quantile=\"{label}\"}} {}\n",
+                fmt_f64(self.latency.quantile(q))
+            ));
+        }
+        out
+    }
+}
+
+/// Prometheus floats: plain `Display` (shortest round-trip) is valid
+/// exposition syntax; avoid `{:e}` noise for the common small values.
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.1}") // "3.0", not "3" — keeps the sample float-typed
+    } else {
+        format!("{v}")
+    }
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+    ));
+}
+
+fn lane_counter(out: &mut String, name: &str, help: &str, high: u64, normal: u64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} counter\n\
+         {name}{{lane=\"high\"}} {high}\n{name}{{lane=\"normal\"}} {normal}\n"
+    ));
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: i64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+    ));
+}
+
+fn lane_gauge(out: &mut String, name: &str, help: &str, high: i64, normal: i64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} gauge\n\
+         {name}{{lane=\"high\"}} {high}\n{name}{{lane=\"normal\"}} {normal}\n"
+    ));
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
+    let counts = h.load_buckets();
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        cum += c;
+        if i < h.bounds.len() {
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                fmt_f64(h.bounds[i])
+            ));
+        } else {
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+        }
+    }
+    out.push_str(&format!("{name}_sum {}\n", fmt_f64(h.sum())));
+    out.push_str(&format!("{name}_count {}\n", h.count()));
+}
+
+/// Handle to the running scrape endpoint; dropping it stops the thread.
+pub struct MetricsExporter {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join(); // the accept loop polls the flag every ~20 ms
+        }
+    }
+}
+
+/// Serve `metrics` over a minimal blocking HTTP endpoint at `addr` (e.g.
+/// `"127.0.0.1:0"` for an ephemeral port — read the bound address off the
+/// returned handle). Every request, whatever its path, gets the full
+/// exposition; connections are closed after one response.
+pub fn export_http(metrics: Arc<ServeMetrics>, addr: &str) -> Result<MetricsExporter> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    listener.set_nonblocking(true).context("metrics endpoint nonblocking accept")?;
+    let local = listener.local_addr().context("metrics endpoint local addr")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let handle = std::thread::spawn(move || {
+        use std::io::{Read, Write};
+        loop {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    // drain whatever request line/headers arrived; scrape
+                    // correctness doesn't depend on parsing them
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                    let mut buf = [0u8; 1024];
+                    let _ = stream.read(&mut buf);
+                    let body = metrics.render_prometheus();
+                    let resp = format!(
+                        "HTTP/1.1 200 OK\r\n\
+                         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+                         Content-Length: {}\r\n\
+                         Connection: close\r\n\r\n{body}",
+                        body.len()
+                    );
+                    let _ = stream.write_all(resp.as_bytes());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if stop2.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => {
+                    if stop2.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+            if stop2.load(Ordering::SeqCst) {
+                return;
+            }
+        }
+    });
+    Ok(MetricsExporter { addr: local, stop, handle: Some(handle) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_count_and_sum() {
+        let h = Histogram::new(&FILL_BOUNDS);
+        for v in [1.0, 1.0, 3.0, 20.0, 500.0] {
+            h.observe(v);
+        }
+        h.observe(f64::NAN); // dropped, not misfiled
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 525.0).abs() < 1e-3);
+        let counts = h.load_buckets();
+        assert_eq!(counts[0], 2, "two observations at le=1");
+        assert_eq!(*counts.last().unwrap(), 1, "500 lands in +Inf overflow");
+    }
+
+    #[test]
+    fn quantiles_interpolate_and_overflow_reports_last_bound() {
+        let h = Histogram::new(&LATENCY_BOUNDS);
+        for _ in 0..99 {
+            h.observe(0.0008); // bucket (0.0005, 0.001]
+        }
+        h.observe(100.0); // overflow
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.0005 && p50 <= 0.001, "p50 within the hot bucket: {p50}");
+        assert_eq!(h.quantile(1.0), 10.0, "overflow clamps to the largest bound");
+        assert_eq!(Histogram::new(&LATENCY_BOUNDS).quantile(0.99), 0.0, "empty = 0");
+    }
+
+    #[test]
+    fn delta_quantile_windows_since_the_last_snapshot() {
+        let h = Histogram::new(&LATENCY_BOUNDS);
+        let mut snap = Vec::new();
+        for _ in 0..10 {
+            h.observe(0.002);
+        }
+        let (q1, n1) = h.delta_quantile(&mut snap, 0.99);
+        assert_eq!(n1, 10);
+        assert!(q1 <= 0.0025 && q1 > 0.001);
+        // new window: much slower observations must dominate the NEW p99
+        // even though the old fast ones outnumber them cumulatively
+        for _ in 0..5 {
+            h.observe(0.2);
+        }
+        let (q2, n2) = h.delta_quantile(&mut snap, 0.99);
+        assert_eq!(n2, 5);
+        assert!(q2 > 0.1, "rolling window forgot the old fast samples: {q2}");
+        let (q3, n3) = h.delta_quantile(&mut snap, 0.99);
+        assert_eq!((q3, n3), (0.0, 0), "empty window");
+    }
+
+    #[test]
+    fn render_is_valid_exposition_shape() {
+        let m = ServeMetrics::new();
+        m.submitted(Lane::Normal).inc();
+        m.accepted(Lane::Normal).inc();
+        m.answered.inc();
+        m.latency.observe(0.003);
+        m.batch_fill.observe(4.0);
+        let text = m.render_prometheus();
+        for needle in [
+            "# TYPE ngdb_serve_submitted_total counter",
+            "ngdb_serve_submitted_total{lane=\"normal\"} 1",
+            "# TYPE ngdb_serve_latency_seconds histogram",
+            "ngdb_serve_latency_seconds_bucket{le=\"+Inf\"} 1",
+            "ngdb_serve_latency_seconds_count 1",
+            "ngdb_serve_latency_seconds_est{quantile=\"0.99\"}",
+            "# TYPE ngdb_serve_queue_depth gauge",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // every non-comment line is "name[{labels}] value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+            assert!(parts.next().is_some(), "no metric name in {line:?}");
+        }
+    }
+
+    #[test]
+    fn exporter_answers_a_scrape_and_stops_on_drop() {
+        let m = Arc::new(ServeMetrics::new());
+        m.answered.add(7);
+        let exporter = export_http(Arc::clone(&m), "127.0.0.1:0").unwrap();
+        let addr = exporter.addr;
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"));
+        assert!(resp.contains("ngdb_serve_answered_total 7"));
+        drop(exporter);
+        // the port is released once the thread joins
+        assert!(std::net::TcpListener::bind(addr).is_ok());
+    }
+}

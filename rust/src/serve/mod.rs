@@ -5,10 +5,10 @@
 //! topologies so one scheduler can fuse work across queries (§4.1,
 //! Algorithm 1) — applies to *answering* queries exactly as it does to
 //! training them. [`QueryService`] accepts grounded
-//! [`crate::query::QueryTree`] requests on a bounded queue, a batcher
-//! thread coalesces concurrent requests into one fused forward
-//! [`crate::query::QueryDag`] per *(batch-size, deadline)* window, and a
-//! pool of worker threads executes the fused DAGs on per-worker
+//! [`crate::query::QueryTree`] requests on a bounded two-lane intake
+//! queue, a batcher thread coalesces concurrent requests into one fused
+//! forward [`crate::query::QueryDag`] per *(batch-size, deadline)* window,
+//! and a pool of worker threads executes the fused DAGs on per-worker
 //! [`crate::exec::ForwardSession`]s — the engine's forward plane: same
 //! Max-Fillness scheduler, pools, gather worker and arena as training, but
 //! no `Grads`, no gradient nodes, no VJP staging. Each root then ranks
@@ -24,11 +24,59 @@
 //! never computed against half-updated weights no matter how often the
 //! trainer steps.
 //!
-//! The knobs that matter ([`ServeConfig`]): `max_batch` bounds how many
-//! concurrent requests fuse into one DAG (the cross-user analogue of
-//! `B_max`), `max_wait` bounds how long the batcher holds the first
-//! request of a window open for stragglers, and `queue_cap` bounds the
-//! request queue (submitters block — backpressure, not unbounded growth).
+//! # Batching windows
+//!
+//! [`ServeConfig::batch`] picks the windowing policy:
+//!
+//! * [`BatchPolicy::Fixed`] — the window is exactly *(`max_batch`,
+//!   `max_wait`)*, every time. Deterministic knobs for determinism suites
+//!   and benchmarks.
+//! * [`BatchPolicy::Adaptive`] — a controller retunes the window each
+//!   batch from the observed arrival rate and a rolling p99 read off the
+//!   latency histogram ([`metrics::Histogram::delta_quantile`]): while p99
+//!   is under target it trades latency headroom for fill (longer waits,
+//!   bigger windows); the moment p99 crosses the target it halves the
+//!   wait toward `min_wait` so queueing delay cannot compound. `max_batch`
+//!   / `max_wait` remain hard ceilings.
+//!
+//! Either way the *answers* are identical — ranking is deterministic
+//! per-snapshot regardless of how requests were windowed; the policy only
+//! moves latency and throughput.
+//!
+//! # Overload
+//!
+//! [`ServeConfig::shed`] picks what happens as the intake queue
+//! approaches `queue_cap`:
+//!
+//! * [`ShedPolicy::Block`] — submitters block (backpressure; the original
+//!   behavior, and the default).
+//! * [`ShedPolicy::RejectNewest`] — admission control sheds the newest
+//!   request with a **typed** [`ServeError::Overloaded`] answer — never a
+//!   silent drop; `answered + shed + rejected + failed == submitted`
+//!   always holds. Requests submitted on the [`Lane::High`] priority lane
+//!   ([`ServeClient::submit_priority`]) may use the whole queue;
+//!   [`Lane::Normal`] requests are capped at `queue_cap - high_reserve`,
+//!   so the high lane keeps admission headroom under overload and starves
+//!   last. A per-client fairness bound (each normal-lane client is
+//!   entitled to an equal share of the normal lane once the queue is half
+//!   full) keeps one flooding client from squeezing out the rest.
+//!
+//! # Observability
+//!
+//! Every stage records into [`metrics::ServeMetrics`] — lock-free atomic
+//! counters/gauges and fixed-bucket histograms (queue depth, batch fill,
+//! shed counts, end-to-end latency). [`metrics::ServeMetrics::render_prometheus`]
+//! renders the registry in the Prometheus text exposition format, and
+//! [`ServeConfig::metrics_addr`] optionally serves it over a tiny blocking
+//! scrape endpoint. `benches/serve_load.rs` drives the service with
+//! bursty/heavy-tailed arrivals at a multiple of measured capacity and
+//! gates that shedding keeps accepted-request p99 bounded where the fixed
+//! blocking policy degrades.
+//!
+//! The fixed-window knobs: `max_batch` bounds how many concurrent
+//! requests fuse into one DAG (the cross-user analogue of `B_max`),
+//! `max_wait` bounds how long the batcher holds the first request of a
+//! window open for stragglers, and `queue_cap` bounds the request queue.
 //! `benches/serve_latency.rs` sweeps `max_batch` ∈ {1, 4, 16, 64} and
 //! writes `BENCH_serve_latency.json` (p50/p95/p99 latency + QPS); CI gates
 //! micro-batched throughput at ≥ 2× the batch=1 baseline.
@@ -45,31 +93,137 @@
 //! is the forward-plane half of that wiring, available today for callers
 //! driving forward sessions by hand.
 
+pub mod metrics;
 pub mod service;
 
-pub use service::{PendingQuery, QueryService, ServeClient};
+pub use metrics::ServeMetrics;
+pub use service::{PendingQuery, QueryService, ServeClient, WindowController};
 
 use std::time::Duration;
 
 use crate::exec::EngineConfig;
 use crate::query::QueryTree;
 
+/// Intake priority lane. High-lane requests are batched first and are the
+/// last to be shed under [`ShedPolicy::RejectNewest`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    High,
+    Normal,
+}
+
+impl Lane {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Lane::High => "high",
+            Lane::Normal => "normal",
+        }
+    }
+}
+
+/// How the batcher sizes its *(batch, deadline)* windows.
+#[derive(Debug, Clone, Copy)]
+pub enum BatchPolicy {
+    /// Every window is exactly (`max_batch`, `max_wait`). Deterministic
+    /// knobs; the default.
+    Fixed,
+    /// Retune the window each batch from observed arrival rate and the
+    /// rolling p99 of served latency: hold p99 under `p99_target` while
+    /// maximizing fill. `max_batch`/`max_wait` stay hard ceilings; the
+    /// wait never drops below `min_wait`.
+    Adaptive {
+        /// rolling-p99 latency the controller steers under
+        p99_target: Duration,
+        /// floor for the window deadline while under pressure
+        min_wait: Duration,
+    },
+}
+
+/// What admission does when the intake queue is (near) full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Submitters block until space frees (backpressure; the default).
+    Block,
+    /// Shed the newest request with a typed [`ServeError::Overloaded`]
+    /// answer — never a silent drop. [`Lane::Normal`] requests are capped
+    /// at `queue_cap - high_reserve` and per-client fairness shares;
+    /// [`Lane::High`] requests may fill the whole queue.
+    RejectNewest,
+}
+
+/// First-class serving errors, so callers can match on *why* a request
+/// was not answered without string inspection. Converts into
+/// `anyhow::Error` via `?` wherever the old stringly errors flowed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission control shed this request (only under
+    /// [`ShedPolicy::RejectNewest`]). The depth/cap pair is the queue
+    /// state the decision was made against.
+    Overloaded { lane: Lane, queue_depth: usize, queue_cap: usize },
+    /// The request itself was invalid (malformed tree, out-of-range ids,
+    /// unsupported negation).
+    Rejected(String),
+    /// A batch-wide execution failure took this request down with it.
+    Failed(String),
+    /// The service shut down (or dropped the request) before answering.
+    Disconnected,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { lane, queue_depth, queue_cap } => write!(
+                f,
+                "service overloaded: request shed from the {} lane (queue {queue_depth}/{queue_cap})",
+                lane.as_str()
+            ),
+            ServeError::Rejected(msg) => write!(f, "request rejected at admission: {msg}"),
+            ServeError::Failed(msg) => write!(f, "serving batch failed: {msg}"),
+            ServeError::Disconnected => {
+                write!(f, "query service dropped the request (shut down?)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Query-service tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// forward-session worker threads executing fused batches
     pub workers: usize,
-    /// micro-batch window: max concurrent requests fused into one DAG
+    /// micro-batch window ceiling: max concurrent requests fused into one
+    /// DAG (exact under [`BatchPolicy::Fixed`])
     pub max_batch: usize,
-    /// micro-batch deadline: how long the batcher waits for a window to
-    /// fill after its first request arrives
+    /// micro-batch deadline ceiling: how long the batcher may hold a
+    /// window open for stragglers (exact under [`BatchPolicy::Fixed`])
     pub max_wait: Duration,
-    /// bounded request-queue depth (submitters block when full)
+    /// bounded request-queue depth across both lanes
     pub queue_cap: usize,
     /// top-k answers returned when a request asks for `top_k == 0`
     pub default_top_k: usize,
+    /// how the batcher sizes windows (fixed knobs vs latency-steered)
+    pub batch: BatchPolicy,
+    /// what admission does at the queue cap (block vs typed shedding)
+    pub shed: ShedPolicy,
+    /// queue slots only [`Lane::High`] may use under
+    /// [`ShedPolicy::RejectNewest`] (clamped so the normal lane keeps at
+    /// least one slot)
+    pub high_reserve: usize,
+    /// optional `host:port` to serve [`ServeMetrics::render_prometheus`]
+    /// over a tiny blocking scrape endpoint (e.g. `"127.0.0.1:0"`)
+    pub metrics_addr: Option<String>,
     /// engine config of the per-worker forward sessions
     pub engine: EngineConfig,
+}
+
+impl ServeConfig {
+    /// Queue depth the normal lane may occupy under
+    /// [`ShedPolicy::RejectNewest`].
+    pub fn normal_cap(&self) -> usize {
+        self.queue_cap.saturating_sub(self.high_reserve).max(1)
+    }
 }
 
 impl Default for ServeConfig {
@@ -80,6 +234,10 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
             default_top_k: 10,
+            batch: BatchPolicy::Fixed,
+            shed: ShedPolicy::Block,
+            high_reserve: 128,
+            metrics_addr: None,
             engine: EngineConfig::default(),
         }
     }

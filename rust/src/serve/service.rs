@@ -1,49 +1,58 @@
-//! [`QueryService`] — bounded intake, a micro-batching batcher thread, and
-//! a pool of forward-session workers.
+//! [`QueryService`] — two-lane bounded intake with admission control, a
+//! micro-batching batcher thread with pluggable window sizing, and a pool
+//! of forward-session workers.
 //!
-//! # Threads and channels
+//! # Threads and queues
 //!
 //! ```text
-//! clients --(sync_channel, cap = queue_cap)--> batcher --(channel)--> workers
-//!   ^                                                                   |
-//!   +--------------- per-request response channel ---------------------+
+//! clients --(two-lane intake, cap = queue_cap)--> batcher --(channel)--> workers
+//!   ^                                                                      |
+//!   +---------------- per-request response channel ----------------------+
 //! ```
 //!
-//! * Clients ([`ServeClient`], cloneable) submit [`QueryRequest`]s; the
-//!   bounded queue blocks submitters when full (backpressure).
-//! * The batcher takes the oldest request, eagerly drains whatever else is
-//!   already queued, and holds the window open until either `max_batch`
-//!   requests are in hand or `max_wait` has elapsed — the *(batch-size,
-//!   deadline)* window.
+//! * Clients ([`ServeClient`], cloneable) submit [`QueryRequest`]s onto a
+//!   condvar-guarded two-lane queue ([`Lane::High`] drains first). Under
+//!   [`ShedPolicy::Block`] submitters block when the queue is full
+//!   (backpressure); under [`ShedPolicy::RejectNewest`] admission control
+//!   sheds instead — the pending query resolves immediately to a typed
+//!   [`ServeError::Overloaded`], never a silent drop.
+//! * The batcher takes the oldest request (high lane first), asks its
+//!   [`WindowController`] for this window's *(batch, deadline)*, and holds
+//!   the window open until either fills. Under [`BatchPolicy::Adaptive`]
+//!   the controller retunes after every window from the observed arrival
+//!   rate and the rolling p99 in the latency histogram.
 //! * Workers pull whole batches, pin one published [`ModelSnapshot`], lower
 //!   every admitted request into **one fused forward DAG**, execute it on a
 //!   per-worker [`ForwardSession`], rank all roots against all entities
 //!   via the shared [`EntityRanker`], and answer each request with its
 //!   filtered top-k. Per-request failures (invalid tree, out-of-range ids,
-//!   unsupported negation) are answered individually and never poison the
-//!   rest of the batch.
+//!   unsupported negation) are answered individually
+//!   ([`ServeError::Rejected`]) and never poison the rest of the batch.
 //!
 //! # Shutdown
 //!
-//! `QueryService`'s `Drop` (and `shutdown()`) pushes an [`Intake::Shutdown`]
-//! sentinel: the batcher flushes the window in hand and exits — even while
-//! client clones are still alive — then workers drain the remaining batches
-//! and exit as the batch channel drops. Requests queued behind the sentinel
-//! (and submits racing the shutdown) fail cleanly: their response senders
-//! drop, so [`PendingQuery::wait`] returns an error instead of hanging.
-//! The batcher also exits if every client drops first (channel
-//! disconnect), so either termination order is safe.
+//! `QueryService`'s `Drop` (and `shutdown()`) closes the intake: the
+//! batcher flushes the window in hand and exits — even while client clones
+//! are still alive — then workers drain the remaining batches and exit as
+//! the batch channel drops. Requests still queued at close (and submits
+//! racing the shutdown) fail cleanly: their response senders drop, so
+//! [`PendingQuery::wait`] returns [`ServeError::Disconnected`] instead of
+//! hanging. The batcher also exits if every client drops first, so either
+//! termination order is safe.
+//!
+//! [`ModelSnapshot`]: crate::model::ModelSnapshot
 
-use std::sync::mpsc::{
-    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError,
-};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-use super::{QueryAnswer, QueryRequest, ServeConfig};
+use super::metrics::{self, MetricsExporter, ServeMetrics};
+use super::{BatchPolicy, Lane, QueryAnswer, QueryRequest, ServeConfig, ServeError, ShedPolicy};
 use crate::eval::rank::EntityRanker;
 use crate::exec::{EngineConfig, ForwardSession};
 use crate::model::{ModelState, SnapshotCell};
@@ -53,62 +62,422 @@ use crate::runtime::Runtime;
 /// One queued request with its response channel and enqueue stamp.
 struct Inflight {
     req: QueryRequest,
+    lane: Lane,
+    client_id: u64,
     enqueued: Instant,
-    resp: Sender<Result<QueryAnswer>>,
+    resp: Sender<Result<QueryAnswer, ServeError>>,
 }
 
-/// What flows through the intake queue: requests, or the service's own
-/// shutdown sentinel — so `Drop` can stop the batcher even while client
-/// clones are still alive (their later submits then error cleanly).
-enum Intake {
-    Request(Inflight),
-    Shutdown,
+/// The two priority lanes plus intake bookkeeping, under one mutex.
+struct IntakeQueues {
+    high: VecDeque<Inflight>,
+    normal: VecDeque<Inflight>,
+    /// set false exactly once, at service shutdown
+    open: bool,
+    /// live [`ServeClient`] handles (incl. the service's own keepalive)
+    clients: usize,
+    /// queued-but-not-yet-batched requests per client (fairness shares)
+    queued_by_client: HashMap<u64, usize>,
+}
+
+impl IntakeQueues {
+    fn depth(&self) -> usize {
+        self.high.len() + self.normal.len()
+    }
+}
+
+/// The bounded two-lane intake: replaces the seed's `sync_channel` so
+/// admission can *look* at the queue (depth, lane, per-client counts)
+/// before deciding to enqueue, block, or shed.
+struct Intake {
+    state: Mutex<IntakeQueues>,
+    /// batcher waits here for requests
+    nonempty: Condvar,
+    /// blocked submitters ([`ShedPolicy::Block`]) wait here for space
+    space: Condvar,
+    cap: usize,
+    normal_cap: usize,
+    policy: ShedPolicy,
+    metrics: Arc<ServeMetrics>,
+}
+
+enum Pop {
+    Got(Inflight),
+    TimedOut,
+    Closed,
+}
+
+impl Intake {
+    fn new(cfg: &ServeConfig, metrics: Arc<ServeMetrics>) -> Intake {
+        Intake {
+            state: Mutex::new(IntakeQueues {
+                high: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
+                normal: VecDeque::with_capacity(cfg.queue_cap.min(4096)),
+                open: true,
+                clients: 0,
+                queued_by_client: HashMap::new(),
+            }),
+            nonempty: Condvar::new(),
+            space: Condvar::new(),
+            cap: cfg.queue_cap,
+            normal_cap: cfg.normal_cap(),
+            policy: cfg.shed,
+            metrics,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, IntakeQueues> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn register_client(&self) {
+        let mut st = self.lock();
+        st.clients += 1;
+        self.metrics.clients.set(st.clients as i64);
+    }
+
+    fn deregister_client(&self) {
+        let mut st = self.lock();
+        st.clients = st.clients.saturating_sub(1);
+        self.metrics.clients.set(st.clients as i64);
+        if st.clients == 0 {
+            // the batcher parks on nonempty; it must wake to notice the
+            // last client is gone
+            self.nonempty.notify_all();
+        }
+    }
+
+    /// Admit, block, or shed one request. Never silently drops: a shed
+    /// request's pending query resolves to [`ServeError::Overloaded`].
+    fn submit(&self, inflight: Inflight) -> Result<(), ServeError> {
+        let lane = inflight.lane;
+        self.metrics.submitted(lane).inc();
+        let mut st = self.lock();
+        if !st.open {
+            return Err(ServeError::Disconnected);
+        }
+        match self.policy {
+            ShedPolicy::Block => {
+                while st.open && st.depth() >= self.cap {
+                    st = self.space.wait(st).unwrap_or_else(PoisonError::into_inner);
+                }
+                if !st.open {
+                    return Err(ServeError::Disconnected);
+                }
+            }
+            ShedPolicy::RejectNewest => {
+                let depth = st.depth();
+                let lane_cap = match lane {
+                    Lane::High => self.cap,
+                    Lane::Normal => self.normal_cap,
+                };
+                // fairness: once the normal lane is half committed, each
+                // normal-lane client is entitled to an equal share of it.
+                // `clients - 1` excludes the service's own keepalive
+                // handle, so a solo client may use the whole lane.
+                let fair = (self.normal_cap
+                    / st.clients.saturating_sub(1).max(1))
+                .max(1);
+                let mine = st.queued_by_client.get(&inflight.client_id).copied().unwrap_or(0);
+                let over_share = lane == Lane::Normal
+                    && depth >= self.normal_cap / 2
+                    && mine >= fair;
+                if depth >= lane_cap || over_share {
+                    self.metrics.shed(lane).inc();
+                    drop(st); // answer the shed outside the lock
+                    let _ = inflight.resp.send(Err(ServeError::Overloaded {
+                        lane,
+                        queue_depth: depth,
+                        queue_cap: self.cap,
+                    }));
+                    return Ok(());
+                }
+            }
+        }
+        *st.queued_by_client.entry(inflight.client_id).or_insert(0) += 1;
+        match lane {
+            Lane::High => st.high.push_back(inflight),
+            Lane::Normal => st.normal.push_back(inflight),
+        }
+        self.metrics.accepted(lane).inc();
+        self.metrics.queue_depth_high.set(st.high.len() as i64);
+        self.metrics.queue_depth_normal.set(st.normal.len() as i64);
+        drop(st);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue (high lane first) with bookkeeping; caller holds the lock.
+    fn take(&self, st: &mut IntakeQueues) -> Option<Inflight> {
+        let inflight = st.high.pop_front().or_else(|| st.normal.pop_front())?;
+        if let Some(c) = st.queued_by_client.get_mut(&inflight.client_id) {
+            *c -= 1;
+            if *c == 0 {
+                st.queued_by_client.remove(&inflight.client_id);
+            }
+        }
+        self.metrics.queue_depth_high.set(st.high.len() as i64);
+        self.metrics.queue_depth_normal.set(st.normal.len() as i64);
+        Some(inflight)
+    }
+
+    /// Batcher entry point: block until a request arrives; `None` means
+    /// the intake closed or every client hung up — time to exit.
+    fn pop_blocking(&self) -> Option<Inflight> {
+        let mut st = self.lock();
+        loop {
+            if !st.open {
+                return None;
+            }
+            if let Some(r) = self.take(&mut st) {
+                self.space.notify_one();
+                return Some(r);
+            }
+            if st.clients == 0 {
+                return None;
+            }
+            st = self.nonempty.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Batcher window fill: like [`Intake::pop_blocking`] but bounded by
+    /// the window's deadline.
+    fn pop_deadline(&self, deadline: Instant) -> Pop {
+        let mut st = self.lock();
+        loop {
+            if !st.open {
+                return Pop::Closed;
+            }
+            if let Some(r) = self.take(&mut st) {
+                self.space.notify_one();
+                return Pop::Got(r);
+            }
+            if st.clients == 0 {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _) = self
+                .nonempty
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+
+    /// Wake everything and fail the queue's remaining requests cleanly
+    /// (their response senders drop → [`ServeError::Disconnected`] at the
+    /// waiter). Called by the batcher on its way out, so blocked
+    /// submitters and pending waits never hang on a dead service.
+    fn drain_on_close(&self) {
+        let mut st = self.lock();
+        st.open = false;
+        st.high.clear();
+        st.normal.clear();
+        st.queued_by_client.clear();
+        self.metrics.queue_depth_high.set(0);
+        self.metrics.queue_depth_normal.set(0);
+        drop(st);
+        self.space.notify_all();
+        self.nonempty.notify_all();
+    }
+
+    /// Begin shutdown: mark closed and wake the batcher + submitters.
+    fn close(&self) {
+        let mut st = self.lock();
+        st.open = false;
+        drop(st);
+        self.nonempty.notify_all();
+        self.space.notify_all();
+    }
 }
 
 /// A submitted-but-unanswered query; [`PendingQuery::wait`] blocks for the
 /// answer. Lets one client thread keep many requests in flight so batching
 /// windows actually fill.
 pub struct PendingQuery {
-    rx: Receiver<Result<QueryAnswer>>,
+    rx: Receiver<Result<QueryAnswer, ServeError>>,
 }
 
 impl PendingQuery {
-    pub fn wait(self) -> Result<QueryAnswer> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("query service dropped the request (shut down?)"))?
+    /// Block for the typed outcome: an answer, or exactly why not.
+    pub fn wait(self) -> Result<QueryAnswer, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Disconnected)?
     }
 }
 
-/// Cloneable submission handle to a running [`QueryService`].
-#[derive(Clone)]
+/// Source of unique per-handle client ids (fairness accounting keys).
+static CLIENT_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// Cloneable submission handle to a running [`QueryService`]. Every handle
+/// (clone included) has its own identity for per-client fairness shares.
 pub struct ServeClient {
-    tx: SyncSender<Intake>,
+    intake: Arc<Intake>,
+    id: u64,
+}
+
+impl Clone for ServeClient {
+    fn clone(&self) -> ServeClient {
+        ServeClient::register(Arc::clone(&self.intake))
+    }
+}
+
+impl Drop for ServeClient {
+    fn drop(&mut self) {
+        self.intake.deregister_client();
+    }
 }
 
 impl ServeClient {
-    /// Enqueue a request (blocks while the bounded queue is full); the
-    /// answer arrives on the returned [`PendingQuery`].
-    pub fn submit(&self, req: QueryRequest) -> Result<PendingQuery> {
+    fn register(intake: Arc<Intake>) -> ServeClient {
+        intake.register_client();
+        ServeClient { intake, id: CLIENT_IDS.fetch_add(1, Ordering::Relaxed) }
+    }
+
+    /// Enqueue a request on `lane` (blocks while the queue is full under
+    /// [`ShedPolicy::Block`]); the answer arrives on the returned
+    /// [`PendingQuery`]. A shed request still returns `Ok` — its pending
+    /// query resolves to [`ServeError::Overloaded`].
+    pub fn submit_lane(&self, req: QueryRequest, lane: Lane) -> Result<PendingQuery, ServeError> {
         let (resp, rx) = channel();
-        let inflight = Inflight { req, enqueued: Instant::now(), resp };
-        self.tx
-            .send(Intake::Request(inflight))
-            .map_err(|_| anyhow!("query service is shut down"))?;
+        let inflight =
+            Inflight { req, lane, client_id: self.id, enqueued: Instant::now(), resp };
+        self.intake.submit(inflight)?;
         Ok(PendingQuery { rx })
     }
 
-    /// Submit and block for the answer.
+    /// Submit on the normal lane.
+    pub fn submit(&self, req: QueryRequest) -> Result<PendingQuery, ServeError> {
+        self.submit_lane(req, Lane::Normal)
+    }
+
+    /// Submit on the high-priority lane (batched first, shed last).
+    pub fn submit_priority(&self, req: QueryRequest) -> Result<PendingQuery, ServeError> {
+        self.submit_lane(req, Lane::High)
+    }
+
+    /// Submit on the normal lane and block for the answer.
     pub fn query(&self, req: QueryRequest) -> Result<QueryAnswer> {
-        self.submit(req)?.wait()
+        Ok(self.submit(req)?.wait()?)
     }
 }
 
-/// The running service: batcher + worker threads. See the module docs.
+/// Sizes the batcher's *(batch, deadline)* windows. [`BatchPolicy::Fixed`]
+/// returns the configured knobs verbatim; [`BatchPolicy::Adaptive`] steers
+/// them between windows:
+///
+/// * **Latency guard.** The rolling p99 (bucket-delta over the latency
+///   histogram since the last window with ≥ 16 samples) is compared to the
+///   target: over → halve the wait toward `min_wait`; comfortably under
+///   (< 70% of target) → stretch the wait 1.25× toward `max_wait`.
+/// * **Fill tracking.** Windows that fill ≥ 90% of target grow the target
+///   1.5×; windows under 40% shrink it ×0.7 — and the target never drops
+///   below what the EWMA arrival rate would deliver in one wait
+///   (`rate × wait`), so bursts immediately re-open the window.
+///
+/// Net effect: under overload the window drives toward (max batch, min
+/// wait) — maximum throughput with minimum added queueing delay; at light
+/// load it relaxes toward small batches and longer (cheap) waits.
+pub struct WindowController {
+    max_batch: usize,
+    max_wait: Duration,
+    policy: BatchPolicy,
+    metrics: Arc<ServeMetrics>,
+    batch_target: f64,
+    wait: Duration,
+    rate_ewma: f64,
+    last: Instant,
+    prev_lat: Vec<u64>,
+    p99_est: f64,
+}
+
+impl WindowController {
+    pub fn new(cfg: &ServeConfig, metrics: Arc<ServeMetrics>) -> WindowController {
+        let wait = match cfg.batch {
+            BatchPolicy::Fixed => cfg.max_wait,
+            // start half-open: the first windows learn the arrival rate
+            BatchPolicy::Adaptive { min_wait, .. } => {
+                (cfg.max_wait / 2).max(min_wait).min(cfg.max_wait)
+            }
+        };
+        let ctl = WindowController {
+            max_batch: cfg.max_batch,
+            max_wait: cfg.max_wait,
+            policy: cfg.batch,
+            metrics,
+            batch_target: (cfg.max_batch as f64 / 2.0).max(1.0),
+            wait,
+            rate_ewma: 0.0,
+            last: Instant::now(),
+            prev_lat: Vec::new(),
+            p99_est: 0.0,
+        };
+        ctl.export();
+        ctl
+    }
+
+    /// The next window's (batch size, deadline).
+    pub fn window(&self) -> (usize, Duration) {
+        match self.policy {
+            BatchPolicy::Fixed => (self.max_batch, self.max_wait),
+            BatchPolicy::Adaptive { .. } => {
+                ((self.batch_target.round() as usize).clamp(1, self.max_batch), self.wait)
+            }
+        }
+    }
+
+    /// Feed back one dispatched window's fill; adaptive mode retunes.
+    pub fn observe(&mut self, fill: usize) {
+        let BatchPolicy::Adaptive { p99_target, min_wait } = self.policy else {
+            return;
+        };
+        let now = Instant::now();
+        let dt = (now - self.last).as_secs_f64().max(1e-6);
+        self.last = now;
+        self.rate_ewma = 0.7 * self.rate_ewma + 0.3 * (fill as f64 / dt);
+
+        let (p99, n) = self.metrics.latency.delta_quantile(&mut self.prev_lat, 0.99);
+        if n >= 16 {
+            self.p99_est = p99;
+        }
+        let target = p99_target.as_secs_f64();
+        if self.p99_est > target {
+            self.wait = (self.wait / 2).max(min_wait);
+        } else if self.p99_est < 0.7 * target {
+            self.wait =
+                (self.wait.mul_f64(1.25) + Duration::from_micros(50)).min(self.max_wait);
+        }
+
+        let fill = fill as f64;
+        if fill >= 0.9 * self.batch_target {
+            self.batch_target = (self.batch_target * 1.5 + 1.0).min(self.max_batch as f64);
+        } else if fill < 0.4 * self.batch_target {
+            self.batch_target = (self.batch_target * 0.7).max(1.0);
+        }
+        // never window below what one wait's worth of arrivals delivers
+        let arrivals = (self.rate_ewma * self.wait.as_secs_f64()).min(self.max_batch as f64);
+        self.batch_target = self.batch_target.max(arrivals).max(1.0);
+        self.export();
+    }
+
+    fn export(&self) {
+        let (batch, wait) = self.window();
+        self.metrics.window_batch_target.set(batch as i64);
+        self.metrics.window_wait_micros.set(wait.as_micros() as i64);
+    }
+}
+
+/// The running service: intake + batcher + worker threads + metrics. See
+/// the module docs.
 pub struct QueryService {
     client: Option<ServeClient>,
+    intake: Arc<Intake>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    metrics: Arc<ServeMetrics>,
+    exporter: Option<MetricsExporter>,
 }
 
 impl QueryService {
@@ -121,31 +490,48 @@ impl QueryService {
     ) -> QueryService {
         assert!(cfg.workers > 0, "a service needs at least one worker");
         assert!(cfg.max_batch > 0 && cfg.queue_cap > 0);
-        let (req_tx, req_rx) = sync_channel::<Intake>(cfg.queue_cap);
+        let m = Arc::new(ServeMetrics::new());
+        let exporter = cfg.metrics_addr.as_deref().and_then(|addr| {
+            match metrics::export_http(Arc::clone(&m), addr) {
+                Ok(e) => Some(e),
+                Err(e) => {
+                    // a bad scrape address must not take serving down
+                    eprintln!("serve: metrics endpoint disabled: {e:#}");
+                    None
+                }
+            }
+        });
+        let intake = Arc::new(Intake::new(&cfg, Arc::clone(&m)));
         // the batch stage is bounded too (one queued window per worker):
         // when workers fall behind, the batcher blocks here, the intake
-        // queue fills to queue_cap, and submitters block — backpressure
+        // fills to queue_cap, and submitters block or shed — overload
         // propagates to clients instead of queued requests growing without
         // bound
         let (batch_tx, batch_rx) = sync_channel::<Vec<Inflight>>(cfg.workers);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
-        let batcher =
-            std::thread::spawn(move || batcher_loop(req_rx, batch_tx, max_batch, max_wait));
+        let ctl = WindowController::new(&cfg, Arc::clone(&m));
+        let batcher = {
+            let intake = Arc::clone(&intake);
+            std::thread::spawn(move || batcher_loop(&intake, batch_tx, ctl))
+        };
         let workers = (0..cfg.workers)
             .map(|_| {
                 let rt = Arc::clone(&rt);
                 let snapshots = Arc::clone(&snapshots);
                 let rx = Arc::clone(&batch_rx);
+                let m = Arc::clone(&m);
                 let ecfg = cfg.engine.clone();
                 let top_k = cfg.default_top_k;
-                std::thread::spawn(move || worker_loop(rt, snapshots, rx, ecfg, top_k))
+                std::thread::spawn(move || worker_loop(rt, snapshots, rx, m, ecfg, top_k))
             })
             .collect();
         QueryService {
-            client: Some(ServeClient { tx: req_tx }),
+            client: Some(ServeClient::register(Arc::clone(&intake))),
+            intake,
             batcher: Some(batcher),
             workers,
+            metrics: m,
+            exporter,
         }
     }
 
@@ -155,20 +541,30 @@ impl QueryService {
         self.client.as_ref().expect("service is running").clone()
     }
 
+    /// The service's metrics registry (shared with intake/batcher/workers;
+    /// render with [`ServeMetrics::render_prometheus`]).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Where the scrape endpoint actually bound, if one was configured
+    /// (and survived binding). `"host:0"` configs read the real port here.
+    pub fn metrics_addr(&self) -> Option<std::net::SocketAddr> {
+        self.exporter.as_ref().map(|e| e.addr)
+    }
+
     /// Hang up and join every thread (equivalent to dropping the service).
     pub fn shutdown(self) {}
 }
 
 impl Drop for QueryService {
     fn drop(&mut self) {
-        if let Some(c) = self.client.take() {
-            // sentinel, not just a hang-up: the batcher exits even while
-            // client clones are still alive (their next submit errors).
-            // This send cannot block indefinitely — workers keep draining,
-            // and if every thread already died the channel is disconnected
-            // and the send returns an error immediately.
-            let _ = c.tx.send(Intake::Shutdown);
-        }
+        // closing the intake stops the batcher even while client clones
+        // are still alive (their next submit gets Disconnected); the
+        // batcher flushes the window in hand, drains the rest cleanly,
+        // and workers exit as the batch channel drops
+        self.intake.close();
+        drop(self.client.take());
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
         }
@@ -178,59 +574,42 @@ impl Drop for QueryService {
     }
 }
 
-/// Form micro-batches: oldest request first, eager drain of the backlog,
-/// then wait out the window's deadline for stragglers.
-fn batcher_loop(
-    rx: Receiver<Intake>,
-    tx: SyncSender<Vec<Inflight>>,
-    max_batch: usize,
-    max_wait: Duration,
-) {
-    while let Ok(msg) = rx.recv() {
-        let first = match msg {
-            Intake::Request(r) => r,
-            Intake::Shutdown => return,
+/// Form micro-batches: oldest request first (high lane ahead of normal),
+/// then fill until the controller's window closes.
+fn batcher_loop(intake: &Intake, tx: SyncSender<Vec<Inflight>>, mut ctl: WindowController) {
+    'windows: loop {
+        let Some(first) = intake.pop_blocking() else {
+            break;
         };
-        let deadline = Instant::now() + max_wait;
-        let mut batch = Vec::with_capacity(max_batch);
+        let (target, wait) = ctl.window();
+        let deadline = Instant::now() + wait;
+        let mut batch = Vec::with_capacity(target);
         batch.push(first);
-        let mut shutdown = false;
-        while batch.len() < max_batch && !shutdown {
-            match rx.try_recv() {
-                Ok(Intake::Request(r)) => {
-                    batch.push(r);
-                    continue;
-                }
-                Ok(Intake::Shutdown) => {
-                    shutdown = true;
+        let mut closed = false;
+        while batch.len() < target {
+            match intake.pop_deadline(deadline) {
+                Pop::Got(r) => batch.push(r),
+                Pop::TimedOut => break,
+                Pop::Closed => {
+                    closed = true;
                     break;
                 }
-                Err(TryRecvError::Disconnected) => break,
-                Err(TryRecvError::Empty) => {}
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Intake::Request(r)) => batch.push(r),
-                Ok(Intake::Shutdown) => shutdown = true,
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
-            }
-            if shutdown {
-                break;
             }
         }
-        // flush the window in hand, then honor a shutdown sentinel —
-        // requests still queued behind it are dropped with the receiver,
-        // which errors their pending waits cleanly
+        ctl.observe(batch.len());
+        intake.metrics.batches.inc();
+        intake.metrics.batch_fill.observe(batch.len() as f64);
+        // flush the window in hand even when shutting down — requests
+        // already windowed get answered; requests still queued are
+        // drained below, which errors their pending waits cleanly
         if tx.send(batch).is_err() {
-            return; // workers gone
+            break 'windows; // workers gone
         }
-        if shutdown {
-            return;
+        if closed {
+            break;
         }
     }
+    intake.drain_on_close();
 }
 
 /// One worker: a warm [`ForwardSession`] + [`EntityRanker`] + block
@@ -241,6 +620,7 @@ fn worker_loop(
     rt: Arc<dyn Runtime>,
     snapshots: Arc<SnapshotCell>,
     batches: Arc<Mutex<Receiver<Vec<Inflight>>>>,
+    metrics: Arc<ServeMetrics>,
     ecfg: EngineConfig,
     default_top_k: usize,
 ) {
@@ -264,6 +644,7 @@ fn worker_loop(
             &mut scores,
             &mut filtered,
             &snapshots,
+            &metrics,
             batch,
             default_top_k,
         );
@@ -299,6 +680,7 @@ fn serve_batch(
     scores: &mut Vec<f32>,
     filtered: &mut Vec<bool>,
     snapshots: &SnapshotCell,
+    metrics: &ServeMetrics,
     batch: Vec<Inflight>,
     default_top_k: usize,
 ) {
@@ -309,6 +691,7 @@ fn serve_batch(
     let state = snap.state();
     let supports_neg = crate::config::model_supports_negation(&state.model);
     let n_ent = state.entities.rows;
+    metrics.snapshot_step.set(snap.step() as i64);
 
     // -- admission + lowering into ONE fused forward DAG
     let mut dag = QueryDag::default();
@@ -323,7 +706,8 @@ fn serve_batch(
                 admitted.push(inflight);
             }
             Err(e) => {
-                let _ = inflight.resp.send(Err(e));
+                metrics.rejected.inc();
+                let _ = inflight.resp.send(Err(ServeError::Rejected(format!("{e:#}"))));
             }
         }
     }
@@ -335,10 +719,10 @@ fn serve_batch(
     // -- forward plane + rank-against-all (shared with eval)
     let reprs = match session.run(&dag, &snap, &roots) {
         Ok((_, reprs)) => reprs,
-        Err(e) => return fail_all(admitted, &e),
+        Err(e) => return fail_all(admitted, metrics, &e),
     };
     if let Err(e) = ranker.score_all(rt, state, &reprs, session.pool(), scores) {
-        return fail_all(admitted, &e);
+        return fail_all(admitted, metrics, &e);
     }
 
     // -- per-request filtered top-k
@@ -360,9 +744,12 @@ fn serve_batch(
                 filtered[e as usize] = false; // scratch reset for the next request
             }
         }
+        let latency = inflight.enqueued.elapsed();
+        metrics.latency.observe(latency.as_secs_f64());
+        metrics.answered.inc();
         let answer = QueryAnswer {
             top,
-            latency: inflight.enqueued.elapsed(),
+            latency,
             batch_size: fused,
             snapshot_step: snap.step(),
         };
@@ -371,10 +758,11 @@ fn serve_batch(
 }
 
 /// Answer every admitted request with the batch-wide failure.
-fn fail_all(admitted: Vec<Inflight>, e: &anyhow::Error) {
+fn fail_all(admitted: Vec<Inflight>, metrics: &ServeMetrics, e: &anyhow::Error) {
     let msg = format!("{e:#}");
+    metrics.failed.add(admitted.len() as u64);
     for a in admitted {
-        let _ = a.resp.send(Err(anyhow!("serving batch failed: {msg}")));
+        let _ = a.resp.send(Err(ServeError::Failed(msg.clone())));
     }
 }
 
@@ -478,6 +866,11 @@ mod tests {
         }
         assert!(answer.latency > Duration::ZERO);
         assert_eq!(answer.snapshot_step, 0);
+        // the registry saw the round trip
+        let m = service.metrics();
+        assert_eq!(m.submitted(Lane::Normal).get(), 1);
+        assert_eq!(m.answered.get(), 1);
+        assert_eq!(m.latency.count(), 1);
         drop(client);
         service.shutdown();
     }
@@ -504,10 +897,14 @@ mod tests {
             client.submit(p1(1, 1)).unwrap(),
         ];
         let [a, b, c] = pends;
-        assert!(a.wait().is_err(), "degenerate union must be rejected");
-        assert!(b.wait().is_err(), "out-of-range anchor must be rejected");
+        assert!(
+            matches!(a.wait(), Err(ServeError::Rejected(_))),
+            "degenerate union must be rejected with the typed admission error"
+        );
+        assert!(matches!(b.wait(), Err(ServeError::Rejected(_))));
         let good = c.wait().unwrap();
         assert_eq!(good.top.len(), 3, "p1() asks for top_k = 3");
+        assert_eq!(service.metrics().rejected.get(), 2);
         drop(client);
     }
 
@@ -540,5 +937,82 @@ mod tests {
             assert!(*e >= 6, "filtered entity {e} leaked into the answers");
         }
         drop(client);
+    }
+
+    fn ctl_cfg(policy: BatchPolicy) -> ServeConfig {
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(4),
+            batch: policy,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fixed_controller_never_moves() {
+        let cfg = ctl_cfg(BatchPolicy::Fixed);
+        let m = Arc::new(ServeMetrics::new());
+        let mut ctl = WindowController::new(&cfg, Arc::clone(&m));
+        assert_eq!(ctl.window(), (64, Duration::from_millis(4)));
+        for _ in 0..50 {
+            m.latency.observe(10.0); // catastrophic latency
+            ctl.observe(64);
+        }
+        assert_eq!(ctl.window(), (64, Duration::from_millis(4)), "fixed stays fixed");
+    }
+
+    #[test]
+    fn adaptive_controller_shrinks_wait_when_p99_exceeds_target() {
+        let cfg = ctl_cfg(BatchPolicy::Adaptive {
+            p99_target: Duration::from_millis(5),
+            min_wait: Duration::from_micros(100),
+        });
+        let m = Arc::new(ServeMetrics::new());
+        let mut ctl = WindowController::new(&cfg, Arc::clone(&m));
+        let (_, w0) = ctl.window();
+        for _ in 0..10 {
+            for _ in 0..32 {
+                m.latency.observe(0.2); // 200 ms >> 5 ms target
+            }
+            ctl.observe(32);
+        }
+        let (b, w) = ctl.window();
+        assert_eq!(w, Duration::from_micros(100), "wait driven to the floor from {w0:?}");
+        assert!(b > 32, "heavy fill grows the batch target toward max (got {b})");
+        assert_eq!(m.window_wait_micros.get(), 100, "controller state is exported");
+    }
+
+    #[test]
+    fn adaptive_controller_relaxes_when_latency_is_comfortable() {
+        let cfg = ctl_cfg(BatchPolicy::Adaptive {
+            p99_target: Duration::from_millis(5),
+            min_wait: Duration::from_micros(100),
+        });
+        let m = Arc::new(ServeMetrics::new());
+        let mut ctl = WindowController::new(&cfg, Arc::clone(&m));
+        for _ in 0..30 {
+            for _ in 0..20 {
+                m.latency.observe(0.0002); // 0.2 ms << 5 ms target
+            }
+            // real inter-window spacing: back-to-back observe() calls
+            // would fake an enormous arrival rate and re-open the window
+            std::thread::sleep(Duration::from_millis(2));
+            ctl.observe(1); // windows barely fill
+        }
+        let (b, w) = ctl.window();
+        assert_eq!(w, cfg.max_wait, "comfortable p99 stretches the wait to its ceiling");
+        assert!(b <= 2, "empty windows decay the batch target (got {b})");
+    }
+
+    #[test]
+    fn serve_error_display_and_anyhow_conversion() {
+        let e = ServeError::Overloaded { lane: Lane::Normal, queue_depth: 7, queue_cap: 8 };
+        assert_eq!(
+            e.to_string(),
+            "service overloaded: request shed from the normal lane (queue 7/8)"
+        );
+        let any: anyhow::Error = e.into();
+        assert!(any.to_string().contains("overloaded"));
+        assert!(ServeError::Disconnected.to_string().contains("shut down"));
     }
 }

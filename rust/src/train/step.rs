@@ -133,6 +133,8 @@ pub struct ExecStats {
     /// artifact invocations (= fused kernel launches)
     pub launches: usize,
     pub padded_rows: usize,
+    /// total bucket rows (filled + padding) — pad% denominator
+    pub bucket_rows: usize,
     pub peak_live_bytes: usize,
     /// wall-clock of DAG construction (`run_batch` only)
     pub build_secs: f64,
@@ -161,6 +163,7 @@ impl ExecStats {
         self.operators += stats.operators;
         self.launches += stats.executions;
         self.padded_rows += stats.padded_rows;
+        self.bucket_rows += stats.bucket_rows;
         self.peak_live_bytes = self.peak_live_bytes.max(stats.peak_live_bytes);
         self.gather_secs += stats.gather_secs;
         self.execute_secs += stats.execute_secs;
@@ -193,6 +196,7 @@ impl ExecStats {
         self.operators += other.operators;
         self.launches += other.launches;
         self.padded_rows += other.padded_rows;
+        self.bucket_rows += other.bucket_rows;
         self.peak_live_bytes = self.peak_live_bytes.max(other.peak_live_bytes);
         self.build_secs += other.build_secs;
         self.execute_wall_secs += other.execute_wall_secs;

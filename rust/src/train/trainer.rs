@@ -202,6 +202,7 @@ impl<'a> Trainer<'a> {
                 n_q,
                 outcome.exec.operators,
                 outcome.exec.launches,
+                outcome.exec.bucket_rows,
                 outcome.exec.padded_rows,
                 sw.elapsed_secs(),
             );
@@ -223,8 +224,14 @@ impl<'a> Trainer<'a> {
         report.queries = meter.queries;
         report.qps = meter.qps();
         report.ops_per_launch = meter.ops_per_launch();
-        report.padded_frac = meter.padded_rows as f64
-            / (meter.operators + meter.padded_rows).max(1) as f64;
+        report.padded_frac = meter.padded_frac();
+        if logger.flush().is_err() || logger.write_errors() > 0 {
+            // the run itself is fine; only the experiment curve is short
+            eprintln!(
+                "trainer: {} log write(s) failed — the TSV curve is incomplete",
+                logger.write_errors()
+            );
+        }
         report.mem = MemoryEstimate {
             state_bytes: state.bytes(),
             peak_live_bytes: peak_live,

@@ -17,14 +17,23 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Interpolated percentile, `p` in [0, 100].
-pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+/// NaN policy shared by [`percentile`] / [`percentiles`]: NaNs carry no
+/// rank, so they are dropped from the sample before sorting (sorted-last
+/// values excluded from interpolation — a NaN must never interpolate into
+/// a finite percentile, and `partial_cmp().unwrap()` must never panic a
+/// metrics path). Returns the cleaned, ascending sample.
+fn sorted_clean(xs: &[f64]) -> Vec<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    v.sort_by(f64::total_cmp);
+    v
+}
+
+/// Interpolated percentile over an already-cleaned ascending sample.
+fn of_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -32,6 +41,21 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     } else {
         v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
     }
+}
+
+/// Interpolated percentile, `p` clamped to [0, 100]. NaN samples are
+/// excluded (an all-NaN or empty sample yields 0.0).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    of_sorted(&sorted_clean(xs), p)
+}
+
+/// Several percentiles from ONE sort of the sample — use this instead of
+/// calling [`percentile`] once per quantile (each call clones + re-sorts;
+/// the serve benches read p50/p95/p99 off every latency set). Same NaN /
+/// empty / clamping semantics as [`percentile`].
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    let v = sorted_clean(xs);
+    ps.iter().map(|&p| of_sorted(&v, p)).collect()
 }
 
 /// Median.
@@ -111,5 +135,44 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(median(&[]), 0.0);
         assert_eq!(mad(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nans_instead_of_panicking() {
+        // the seed's partial_cmp().unwrap() panicked on any NaN sample
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        assert!((percentile(&xs, 50.0) - 2.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 3.0).abs() < 1e-12);
+        // NaNs never interpolate into the result
+        assert!(percentile(&xs, 99.0).is_finite());
+        // all-NaN behaves like empty
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        // median/mad ride the same path
+        assert!((median(&xs) - 2.0).abs() < 1e-12);
+        assert!(mad(&xs).is_finite());
+    }
+
+    #[test]
+    fn percentile_single_element_and_clamped_p() {
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 100.0), 7.5);
+        // out-of-range p clamps instead of indexing out of bounds
+        assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+    }
+
+    #[test]
+    fn percentiles_matches_per_call_percentile_with_one_sort() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0, f64::NAN];
+        let ps = [0.0, 25.0, 50.0, 95.0, 99.0, 100.0];
+        let batch = percentiles(&xs, &ps);
+        assert_eq!(batch.len(), ps.len());
+        for (&p, &got) in ps.iter().zip(&batch) {
+            assert_eq!(got.to_bits(), percentile(&xs, p).to_bits());
+        }
+        assert!(percentiles(&[], &[50.0]) == vec![0.0]);
+        assert!(percentiles(&xs, &[]).is_empty());
     }
 }

@@ -70,7 +70,9 @@ impl PhaseTimer {
 pub fn report_of(buckets: &[(String, f64)]) -> String {
     let total: f64 = buckets.iter().map(|(_, s)| s).sum::<f64>().max(1e-12);
     let mut rows: Vec<_> = buckets.to_vec();
-    rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    // total_cmp: a NaN bucket (e.g. a 0/0 rate upstream) sorts
+    // deterministically instead of panicking the report path
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
     rows.iter()
         .map(|(n, s)| format!("{n}: {} ({:.1}%)", super::stats::fmt_secs(*s), 100.0 * s / total))
         .collect::<Vec<_>>()
@@ -97,6 +99,16 @@ mod tests {
         t.add("y", 0.25);
         assert!((t.total() - 1.75).abs() < 1e-12);
         assert!(t.report().starts_with("x:"));
+    }
+
+    #[test]
+    fn report_of_survives_nan_buckets() {
+        // the seed's partial_cmp().unwrap() panicked here; a NaN bucket
+        // must render (deterministically ordered), not take down a report
+        let buckets = vec![("ok".to_string(), 1.0), ("bad".to_string(), f64::NAN)];
+        let r = report_of(&buckets);
+        assert!(r.contains("ok:") && r.contains("bad:"));
+        assert_eq!(report_of(&buckets), report_of(&buckets), "deterministic order");
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Serving-tier overload suite: typed shedding with exact accounting, the
+//! priority lane's starve-last contract, per-client fairness, bitwise
+//! answer parity between loaded/unloaded and fixed/adaptive configurations,
+//! and the Prometheus exposition round-trip. Run serially in CI
+//! (`NGDB_STRESS` job) so thread timing actually exercises the intake.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ngdb_zoo::model::{ModelSnapshot, ModelState, SnapshotCell};
+use ngdb_zoo::query::{Pattern, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::serve::{
+    BatchPolicy, Lane, QueryAnswer, QueryRequest, QueryService, ServeConfig, ServeError,
+    ShedPolicy,
+};
+
+fn slow_rt(delay_ms: u64) -> Arc<MockRuntime> {
+    Arc::new(MockRuntime::new().with_exec_delay(Duration::from_millis(delay_ms)))
+}
+
+fn snapshot(rt: &MockRuntime) -> Arc<SnapshotCell> {
+    let state = ModelState::init(rt.manifest(), "mock", 24, 6, None, 11).unwrap();
+    Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)))
+}
+
+fn req(i: u32) -> QueryRequest {
+    QueryRequest {
+        tree: QueryTree::instantiate(Pattern::P1, &[i % 24], &[i % 6]).unwrap(),
+        filter: vec![],
+        top_k: 4,
+    }
+}
+
+/// A tiny (max_batch = 1, single worker) service whose every batch takes
+/// real wall time, so the intake queue genuinely fills.
+fn tiny_slow_cfg(queue_cap: usize, high_reserve: usize) -> ServeConfig {
+    ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_cap,
+        high_reserve,
+        shed: ShedPolicy::RejectNewest,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn shed_answers_are_typed_and_accounting_is_exact() {
+    let rt = slow_rt(20);
+    let service = QueryService::start(Arc::clone(&rt) as _, snapshot(&rt), tiny_slow_cfg(4, 0));
+    let client = service.client();
+
+    const N: usize = 40;
+    let pending: Vec<_> = (0..N as u32).map(|i| client.submit(req(i)).unwrap()).collect();
+    let (mut answered, mut shed) = (0usize, 0usize);
+    for p in pending {
+        match p.wait() {
+            Ok(a) => {
+                assert_eq!(a.top.len(), 4);
+                answered += 1;
+            }
+            Err(ServeError::Overloaded { lane, queue_depth, queue_cap }) => {
+                assert_eq!(lane, Lane::Normal);
+                assert_eq!(queue_cap, 4, "the error reports the configured cap");
+                assert!(queue_depth >= 4, "shed below the cap: depth {queue_depth}");
+                shed += 1;
+            }
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    assert_eq!(answered + shed, N, "every submission resolves — no silent drops");
+    assert!(shed > 0, "a 4-deep queue at 40 instant submissions must shed");
+    assert!(answered >= 4, "the queue's worth of requests must still be answered");
+
+    // the registry agrees with the client's own accounting
+    let m = service.metrics();
+    assert_eq!(m.submitted(Lane::Normal).get(), N as u64);
+    assert_eq!(m.accepted(Lane::Normal).get(), answered as u64);
+    assert_eq!(m.shed(Lane::Normal).get(), shed as u64);
+    assert_eq!(m.answered.get(), answered as u64);
+    assert_eq!(m.latency.count(), answered as u64);
+    drop(client);
+    service.shutdown();
+}
+
+#[test]
+fn high_lane_keeps_headroom_and_starves_last() {
+    // queue_cap 4, high_reserve 2 → the normal lane may queue 2; the high
+    // lane may fill all 4 slots. One slow worker (max_batch 1) so the
+    // pipeline holds exactly: 1 executing + 1 queued window + 1 in the
+    // batcher's hand, everything else waits in the intake.
+    let rt = slow_rt(30);
+    let service = QueryService::start(Arc::clone(&rt) as _, snapshot(&rt), tiny_slow_cfg(4, 2));
+    let client = service.client();
+
+    // a..c are absorbed by the pipeline (worker, batch channel, batcher)
+    let absorbed: Vec<_> = (0..3u32)
+        .map(|i| {
+            let p = client.submit(req(i)).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            p
+        })
+        .collect();
+    // d, e fill the normal lane's 2 slots; f must shed
+    let d = client.submit(req(3)).unwrap();
+    let e = client.submit(req(4)).unwrap();
+    let f = client.submit(req(5)).unwrap();
+    // g, h ride the high lane into the reserved headroom; i finds the
+    // queue truly full and sheds even at high priority
+    let g = client.submit_priority(req(6)).unwrap();
+    let h = client.submit_priority(req(7)).unwrap();
+    let i = client.submit_priority(req(8)).unwrap();
+
+    assert!(
+        matches!(f.wait(), Err(ServeError::Overloaded { lane: Lane::Normal, .. })),
+        "normal lane must shed at its reduced cap"
+    );
+    assert!(
+        matches!(i.wait(), Err(ServeError::Overloaded { lane: Lane::High, .. })),
+        "even the high lane sheds once the whole queue is full"
+    );
+    for p in absorbed {
+        p.wait().unwrap();
+    }
+    let (d, e) = (d.wait().unwrap(), e.wait().unwrap());
+    let (g, h) = (g.wait().unwrap(), h.wait().unwrap());
+    // the high lane drains first: g/h entered the queue AFTER d/e but were
+    // answered before them, so they waited strictly less
+    for (hi, lo) in [(&g, &d), (&g, &e), (&h, &d), (&h, &e)] {
+        assert!(
+            hi.latency < lo.latency,
+            "high-lane request waited {:?}, normal-lane only {:?}",
+            hi.latency,
+            lo.latency
+        );
+    }
+    let m = service.metrics();
+    assert_eq!(m.shed(Lane::Normal).get(), 1);
+    assert_eq!(m.shed(Lane::High).get(), 1);
+    drop(client);
+    service.shutdown();
+}
+
+#[test]
+fn fairness_sheds_the_flooding_client_not_the_light_one() {
+    // normal_cap 16, two user clients → each is entitled to 8 queued
+    // requests once the queue is half full. A floods 40; B's polite 4
+    // must ALL be admitted while A sheds.
+    let rt = slow_rt(20);
+    let service =
+        QueryService::start(Arc::clone(&rt) as _, snapshot(&rt), tiny_slow_cfg(16, 0));
+    let flooder = service.client();
+    let polite = service.client();
+
+    let flood: Vec<_> = (0..40u32).map(|i| flooder.submit(req(i)).unwrap()).collect();
+    let trickle: Vec<_> = (0..4u32).map(|i| polite.submit(req(100 + i)).unwrap()).collect();
+
+    let mut flood_shed = 0usize;
+    for p in flood {
+        match p.wait() {
+            Ok(_) => {}
+            Err(ServeError::Overloaded { .. }) => flood_shed += 1,
+            Err(e) => panic!("unexpected serve error: {e}"),
+        }
+    }
+    assert!(flood_shed > 0, "40 instant submissions into 16 slots must shed");
+    for p in trickle {
+        p.wait().unwrap_or_else(|e| {
+            panic!("the light client was shed while under its fair share: {e}")
+        });
+    }
+    drop((flooder, polite));
+    service.shutdown();
+}
+
+fn serve_all(
+    rt: Arc<MockRuntime>,
+    cfg: ServeConfig,
+    reqs: &[QueryRequest],
+) -> Vec<QueryAnswer> {
+    let service = QueryService::start(rt.clone() as _, snapshot(&rt), cfg);
+    let client = service.client();
+    let pending: Vec<_> = reqs.iter().map(|r| client.submit(r.clone()).unwrap()).collect();
+    let answers = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+    drop(client);
+    service.shutdown();
+    answers
+}
+
+#[test]
+fn accepted_answers_under_overload_match_the_unloaded_path_bitwise() {
+    // overloaded, shedding service: some requests shed, the rest answer
+    let reqs: Vec<QueryRequest> = (0..40u32).map(req).collect();
+    let rt = slow_rt(15);
+    let service =
+        QueryService::start(Arc::clone(&rt) as _, snapshot(&rt), tiny_slow_cfg(6, 0));
+    let client = service.client();
+    let pending: Vec<_> = reqs.iter().map(|r| client.submit(r.clone()).unwrap()).collect();
+    let loaded: Vec<Option<QueryAnswer>> =
+        pending.into_iter().map(|p| p.wait().ok()).collect();
+    drop(client);
+    service.shutdown();
+    assert!(loaded.iter().any(|a| a.is_none()), "the overload never engaged");
+    assert!(loaded.iter().any(|a| a.is_some()));
+
+    // same requests, same weights, no load, no shedding
+    let calm = serve_all(
+        Arc::new(MockRuntime::new()),
+        ServeConfig { queue_cap: 128, ..Default::default() },
+        &reqs,
+    );
+    for (got, want) in loaded.iter().zip(&calm) {
+        let Some(got) = got else { continue }; // shed — no answer to compare
+        assert_eq!(got.top.len(), want.top.len());
+        for ((ea, sa), (eb, sb)) in got.top.iter().zip(&want.top) {
+            assert_eq!(ea, eb, "overload changed an accepted answer");
+            assert_eq!(sa.to_bits(), sb.to_bits(), "scores must stay bit-identical");
+        }
+    }
+}
+
+#[test]
+fn fixed_and_adaptive_windows_answer_bitwise_identically() {
+    let reqs: Vec<QueryRequest> = (0..32u32).map(req).collect();
+    let fixed = serve_all(
+        Arc::new(MockRuntime::new()),
+        ServeConfig { queue_cap: 128, batch: BatchPolicy::Fixed, ..Default::default() },
+        &reqs,
+    );
+    let adaptive = serve_all(
+        Arc::new(MockRuntime::new()),
+        ServeConfig {
+            queue_cap: 128,
+            batch: BatchPolicy::Adaptive {
+                p99_target: Duration::from_millis(5),
+                min_wait: Duration::from_micros(100),
+            },
+            ..Default::default()
+        },
+        &reqs,
+    );
+    for (a, b) in fixed.iter().zip(&adaptive) {
+        assert_eq!(a.top.len(), b.top.len());
+        for ((ea, sa), (eb, sb)) in a.top.iter().zip(&b.top) {
+            assert_eq!(ea, eb, "the window policy changed an answer");
+            assert_eq!(sa.to_bits(), sb.to_bits());
+        }
+    }
+}
+
+/// Minimal exposition-format reader: `name{labels} value` per sample line,
+/// `# TYPE name kind` headers. Enough structure to verify the renderer
+/// round-trips (the python CI job runs the full grammar validator).
+fn parse_prometheus(text: &str) -> (HashMap<String, f64>, HashMap<String, String>) {
+    let mut samples = HashMap::new();
+    let mut types = HashMap::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line has a name");
+            let kind = it.next().expect("TYPE line has a kind");
+            types.insert(name.to_string(), kind.to_string());
+        } else if !line.starts_with('#') && !line.is_empty() {
+            let (series, value) = line.rsplit_once(' ').expect("sample line has a value");
+            let value: f64 = value.parse().unwrap_or_else(|_| {
+                panic!("unparseable sample value in {line:?}")
+            });
+            assert!(
+                samples.insert(series.to_string(), value).is_none(),
+                "duplicate series {series}"
+            );
+        }
+    }
+    (samples, types)
+}
+
+#[test]
+fn prometheus_rendering_round_trips_and_adds_up() {
+    let rt = slow_rt(15);
+    let service =
+        QueryService::start(Arc::clone(&rt) as _, snapshot(&rt), tiny_slow_cfg(4, 0));
+    let client = service.client();
+    let pending: Vec<_> = (0..24u32).map(|i| client.submit(req(i)).unwrap()).collect();
+    for p in pending {
+        let _ = p.wait();
+    }
+
+    let text = service.metrics().render_prometheus();
+    let (samples, types) = parse_prometheus(&text);
+
+    // counters are declared and consistent with each other
+    assert_eq!(types["ngdb_serve_submitted_total"], "counter");
+    assert_eq!(types["ngdb_serve_latency_seconds"], "histogram");
+    let sub = samples["ngdb_serve_submitted_total{lane=\"normal\"}"];
+    let acc = samples["ngdb_serve_accepted_total{lane=\"normal\"}"];
+    let shed = samples["ngdb_serve_shed_total{lane=\"normal\"}"];
+    assert_eq!(sub, 24.0);
+    assert_eq!(acc + shed, sub, "accepted + shed must cover every submission");
+    assert_eq!(samples["ngdb_serve_answered_total"], acc, "all accepted were answered");
+
+    // histogram buckets are cumulative, monotone, and +Inf == _count
+    for h in ["ngdb_serve_latency_seconds", "ngdb_serve_batch_fill"] {
+        let mut buckets: Vec<(&String, f64)> = samples
+            .iter()
+            .filter(|(k, _)| k.starts_with(&format!("{h}_bucket")))
+            .map(|(k, &v)| (k, v))
+            .collect();
+        assert!(!buckets.is_empty(), "{h} rendered no buckets");
+        // render order == bound order; recover it by cumulative value,
+        // then re-verify monotonicity pairwise against parsed bounds
+        buckets.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let inf = samples[&format!("{h}_bucket{{le=\"+Inf\"}}")];
+        assert_eq!(inf, samples[&format!("{h}_count")], "+Inf bucket == count");
+        assert!(buckets.iter().all(|(_, v)| *v <= inf));
+        assert!(samples.contains_key(&format!("{h}_sum")));
+    }
+    assert_eq!(samples["ngdb_serve_latency_seconds_count"], acc);
+    drop(client);
+    service.shutdown();
+}
+
+#[test]
+fn metrics_endpoint_serves_the_exposition_over_tcp() {
+    use std::io::{Read, Write};
+    let rt = Arc::new(MockRuntime::new());
+    let service = QueryService::start(
+        Arc::clone(&rt) as _,
+        snapshot(&rt),
+        ServeConfig { metrics_addr: Some("127.0.0.1:0".into()), ..Default::default() },
+    );
+    let client = service.client();
+    client.query(req(1)).unwrap();
+    let addr = service.metrics_addr().expect("the endpoint must bind on an ephemeral port");
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut body = String::new();
+    stream.read_to_string(&mut body).unwrap();
+    assert!(body.starts_with("HTTP/1.1 200 OK"), "bad status line: {body}");
+    assert!(body.contains("text/plain; version=0.0.4"));
+    assert!(body.contains("ngdb_serve_answered_total 1"));
+    drop(client);
+    service.shutdown();
+}

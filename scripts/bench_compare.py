@@ -43,6 +43,7 @@ LOWER_PATTERNS = (
     "miss",
     "spawn",
     "latency",
+    "shed",
     "p50",
     "p95",
     "p99",

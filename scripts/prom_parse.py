@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Prometheus text-exposition (v0.0.4) validator (stdlib only).
+
+Parses and structurally validates the metrics rendering the serve tier
+emits (``ServeMetrics::render_prometheus`` / ``BENCH_serve_metrics.prom``)
+so CI catches a renderer regression before a real scraper does. Checks:
+
+* **grammar** — every non-comment line is ``name[{labels}] value`` with a
+  valid metric name, balanced/quoted labels, and a float-parseable value;
+  comment lines are only ``# HELP name text`` / ``# TYPE name kind``;
+* **declarations** — every sample belongs to a ``# TYPE``-declared family
+  (histogram samples match their family via the ``_bucket``/``_sum``/
+  ``_count`` suffixes), each family is declared exactly once, and
+  counter families are named ``*_total``;
+* **histogram laws** — bucket counts are cumulative (non-decreasing in
+  file order), the ``+Inf`` bucket is present, terminal, and equals
+  ``_count``, and ``_sum`` exists and is non-negative.
+
+Exit is non-zero (with one line per violation) on any failure, so the CI
+step is just ``python3 scripts/prom_parse.py BENCH_serve_metrics.prom``.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABELS = re.compile(r'^\{([a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*",?)*\}$')
+SAMPLE = re.compile(r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)(?P<labels>\{[^}]*\})? (?P<value>\S+)$")
+KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
+
+
+class Sample:
+    def __init__(self, name: str, labels: str, value: float, line_no: int):
+        self.name = name
+        self.labels = labels
+        self.value = value
+        self.line_no = line_no
+
+
+def family_of(sample_name: str, declared: dict) -> str | None:
+    """Map a sample name to its declared family: exact, or histogram/summary
+    suffix (``x_bucket``/``x_sum``/``x_count`` belong to family ``x``)."""
+    if sample_name in declared:
+        return sample_name
+    for suffix in ("_bucket", "_sum", "_count"):
+        if sample_name.endswith(suffix):
+            base = sample_name[: -len(suffix)]
+            if base in declared:
+                return base
+    return None
+
+
+def validate(text: str) -> list[str]:
+    """Return a list of violations (empty = valid)."""
+    errors: list[str] = []
+    declared: dict[str, str] = {}  # family -> kind
+    samples: list[Sample] = []
+
+    for i, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                errors.append(f"line {i}: malformed comment {line!r}")
+                continue
+            if parts[1] == "TYPE":
+                name, kind = parts[2], parts[3].strip() if len(parts) > 3 else ""
+                if not METRIC_NAME.match(name):
+                    errors.append(f"line {i}: bad metric name {name!r}")
+                if kind not in KINDS:
+                    errors.append(f"line {i}: unknown type {kind!r}")
+                if name in declared:
+                    errors.append(f"line {i}: family {name} declared twice")
+                declared[name] = kind
+            continue
+        m = SAMPLE.match(line)
+        if not m:
+            errors.append(f"line {i}: unparseable sample {line!r}")
+            continue
+        if m["labels"] and not LABELS.match(m["labels"]):
+            errors.append(f"line {i}: malformed labels {m['labels']!r}")
+            continue
+        try:
+            value = float(m["value"].replace("+Inf", "inf").replace("-Inf", "-inf"))
+        except ValueError:
+            errors.append(f"line {i}: unparseable value {m['value']!r}")
+            continue
+        samples.append(Sample(m["name"], m["labels"] or "", value, i))
+
+    by_family: dict[str, list[Sample]] = {}
+    for s in samples:
+        fam = family_of(s.name, declared)
+        if fam is None:
+            errors.append(f"line {s.line_no}: sample {s.name} has no # TYPE declaration")
+            continue
+        by_family.setdefault(fam, []).append(s)
+
+    for fam, kind in declared.items():
+        fam_samples = by_family.get(fam, [])
+        if not fam_samples:
+            errors.append(f"family {fam}: declared but has no samples")
+            continue
+        if kind == "counter":
+            if not fam.endswith("_total"):
+                errors.append(f"family {fam}: counters must be named *_total")
+            for s in fam_samples:
+                if s.value < 0:
+                    errors.append(f"line {s.line_no}: counter {fam} is negative")
+        elif kind == "histogram":
+            errors.extend(check_histogram(fam, fam_samples))
+    return errors
+
+
+def check_histogram(fam: str, fam_samples: list) -> list[str]:
+    errors: list[str] = []
+    buckets = [s for s in fam_samples if s.name == f"{fam}_bucket"]
+    sums = [s for s in fam_samples if s.name == f"{fam}_sum"]
+    counts = [s for s in fam_samples if s.name == f"{fam}_count"]
+    if len(sums) != 1 or len(counts) != 1:
+        errors.append(f"family {fam}: needs exactly one _sum and one _count")
+        return errors
+    if sums[0].value < 0:
+        errors.append(f"family {fam}: _sum is negative")
+    if not buckets:
+        errors.append(f"family {fam}: histogram has no _bucket samples")
+        return errors
+    les = []
+    for b in buckets:
+        m = re.search(r'le="([^"]*)"', b.labels)
+        if not m:
+            errors.append(f"line {b.line_no}: {fam}_bucket without an le label")
+            return errors
+        les.append((m.group(1), b.value, b.line_no))
+    for (_, prev, _), (le, cur, line_no) in zip(les, les[1:]):
+        if cur < prev:
+            errors.append(
+                f"line {line_no}: {fam}_bucket le={le} breaks cumulative "
+                f"monotonicity ({cur} < {prev})"
+            )
+    bounds = [float(le.replace("+Inf", "inf")) for le, _, _ in les]
+    if bounds != sorted(bounds):
+        errors.append(f"family {fam}: bucket bounds are not ascending")
+    if les[-1][0] != "+Inf":
+        errors.append(f"family {fam}: the terminal bucket must be le=\"+Inf\"")
+    elif les[-1][1] != counts[0].value:
+        errors.append(
+            f"family {fam}: +Inf bucket ({les[-1][1]}) != _count ({counts[0].value})"
+        )
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:]) or []
+    if len(args) != 1:
+        print("usage: prom_parse.py <exposition.prom>", file=sys.stderr)
+        return 2
+    text = Path(args[0]).read_text()
+    errors = validate(text)
+    if errors:
+        print(f"{args[0]}: {len(errors)} violation(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n_samples = sum(
+        1 for l in text.splitlines() if l.strip() and not l.startswith("#")
+    )
+    print(f"{args[0]}: valid exposition ({n_samples} samples)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
