@@ -1,0 +1,80 @@
+//! Delta/COW snapshot-publish bench: bytes and wall time of publishing
+//! after a step that touched ~1% of the embedding rows, vs. a full
+//! capture. See `bench_harness::snapshot_publish` for the methodology.
+//! Gated (the CI smoke runs this): published bytes must stay ≤ 5% of a
+//! full capture under worst-case page scatter, no measured publish may
+//! fall back to a full capture, and write amplification must respect the
+//! `touched × PAGE_ROWS` bound.
+//!
+//! Env knobs: `NGDB_PUBLISH_ENTITIES` (default 50000),
+//! `NGDB_PUBLISH_ROUNDS` (32), `NGDB_PUBLISH_TOUCHED` (entities/100),
+//! `NGDB_PUBLISH_SHARDS` (4), `NGDB_PUBLISH_DIM` (64),
+//! `NGDB_PUBLISH_JSON` (output path, default `BENCH_snapshot_publish.json`).
+
+use ngdb_zoo::bench_harness::knob;
+use ngdb_zoo::bench_harness::snapshot_publish::{run, write_json, PublishBenchOpts};
+use ngdb_zoo::model::PAGE_ROWS;
+
+fn main() {
+    let entities = knob("NGDB_PUBLISH_ENTITIES", 50_000.0) as usize;
+    let opts = PublishBenchOpts {
+        entities,
+        touched_per_round: knob("NGDB_PUBLISH_TOUCHED", (entities / 100) as f64) as usize,
+        rounds: knob("NGDB_PUBLISH_ROUNDS", 32.0) as usize,
+        shards: knob("NGDB_PUBLISH_SHARDS", 4.0) as usize,
+        dim: knob("NGDB_PUBLISH_DIM", 64.0) as usize,
+        ..Default::default()
+    };
+
+    let report = run(&opts).unwrap_or_else(|e| panic!("snapshot_publish failed: {e:#}"));
+
+    println!(
+        "\nsnapshot_publish: {} entities x dim {}, {} shards, {} rounds, \
+         {} rows touched/round ({:.2}%)",
+        opts.entities,
+        opts.dim,
+        opts.shards,
+        opts.rounds,
+        opts.touched_per_round,
+        100.0 * opts.touched_per_round as f64 / opts.entities as f64,
+    );
+    println!(
+        "  full capture : {:>12} bytes  {:>10.1} us",
+        report.full_capture_bytes, report.full_capture_us
+    );
+    println!(
+        "  delta publish: {:>12.0} bytes  {:>10.1} us   ({:.0} rows/publish)",
+        report.delta_bytes_avg, report.delta_publish_us, report.delta_rows_avg
+    );
+    println!(
+        "  delta/full   : {:>11.3}%        {:>10.2}x speedup",
+        report.delta_bytes_per_full_pct(),
+        report.speedup()
+    );
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    assert_eq!(
+        report.full_fallbacks, 0,
+        "a delta-eligible publish silently fell back to a full capture"
+    );
+    assert_eq!(report.delta_publishes, opts.rounds as u64);
+    assert!(
+        report.delta_bytes_per_full_pct() <= 5.0,
+        "publishing 1% of rows must copy <= 5% of a full capture, got {:.3}%",
+        report.delta_bytes_per_full_pct()
+    );
+    assert!(
+        report.delta_rows_avg <= (opts.touched_per_round * PAGE_ROWS) as f64,
+        "page write amplification broke the touched x PAGE_ROWS bound"
+    );
+    assert!(
+        report.speedup() > 1.0,
+        "a delta publish must beat a full capture, got {:.2}x",
+        report.speedup()
+    );
+
+    let path = std::env::var("NGDB_PUBLISH_JSON")
+        .unwrap_or_else(|_| "BENCH_snapshot_publish.json".to_string());
+    write_json(&report, &path).unwrap_or_else(|e| panic!("{e:#}"));
+    println!("  wrote {path}");
+}

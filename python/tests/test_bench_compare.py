@@ -18,6 +18,9 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
 SCRIPT = os.path.join(ROOT, "scripts", "bench_compare.py")
 BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_micro_scheduler.json")
 SERVE_BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_serve_load.json")
+PUBLISH_BASELINE = os.path.join(
+    ROOT, "benches", "baselines", "BENCH_snapshot_publish.json"
+)
 
 
 def _load():
@@ -65,6 +68,11 @@ def test_flatten_walks_dicts_lists_and_skips_non_numbers():
         ("bursty_accepted_qps_frac", "higher"),  # "qps" wins over nothing-lower
         ("config.queries", None),  # config subtree is never gated
         ("rounds_per_run", None),  # no pattern match -> informational
+        ("delta_bytes_per_full_pct", "lower"),  # published bytes are a cost
+        ("rows_copied_per_publish", "lower"),
+        ("full_fallback_publishes", "lower"),
+        ("delta_publish_speedup", "higher"),  # "speedup" wins over "publish"
+        ("config.full_capture_bytes", None),  # sizes under config stay info
     ],
 )
 def test_direction(path, expected):
@@ -187,4 +195,52 @@ def test_committed_serve_load_baseline_parses_and_only_pins_gates():
     assert bc.direction("bursty_accepted_p99_ms") == "lower"
     assert bc.direction("bursty_accepted_qps_frac") == "higher"
     _, failures = bc.compare(doc, doc, 15.0)
+    assert failures == []
+
+
+def _sim_delta_rows(entities, shards, rounds, touched, page_rows=4):
+    """Python mirror of ``ShardedTable::delta`` page accounting over the
+    bench's deterministic stride-101 dirt pattern."""
+    total = 0
+    for r in range(rounds):
+        ids = {(r * 7919 + i * 101) % entities for i in range(touched)}
+        assert len(ids) == touched, "stride pattern collided"
+        pages = {}
+        for gid in ids:
+            pages.setdefault(gid % shards, set()).add(gid // shards // page_rows)
+        for s, ps in pages.items():
+            rows_s = 0 if s >= entities else -(-(entities - s) // shards)
+            total += sum(min(page_rows, rows_s - p * page_rows) for p in ps)
+    return total / rounds
+
+
+def test_committed_snapshot_publish_baseline_matches_the_delta_simulation():
+    """The publish baseline's deterministic metrics are a pure function of
+    the COW page layout — recompute them from the bench's default config
+    (the values the CI smoke runs with) so a drift in either the Rust
+    accounting or the committed numbers fails loudly."""
+    with open(PUBLISH_BASELINE) as fh:
+        doc = json.load(fh)
+    assert doc["bench"] == "snapshot_publish"
+    # bench defaults: benches/snapshot_publish.rs / PublishBenchOpts
+    entities, relations, dim, shards, rounds = 50_000, 64, 64, 4, 32
+    touched, page_rows = entities // 100, 4
+    rows = _sim_delta_rows(entities, shards, rounds, touched, page_rows)
+    assert doc["rows_copied_per_publish"] == rows
+    assert doc["bytes_copied_per_publish"] == rows * dim * 4
+    full = (entities + relations) * dim * 4
+    pct = 100.0 * doc["bytes_copied_per_publish"] / full
+    assert abs(doc["delta_bytes_per_full_pct"] - pct) < 5e-4
+    # the paper-motivated economics: 1% rows touched -> <= 5% published,
+    # even under worst-case one-row-per-page scatter
+    assert doc["delta_bytes_per_full_pct"] <= 5.0
+    assert rows <= touched * page_rows
+    # gate hygiene: every pinned leaf is directional, the fallback count
+    # is an exact-zero contract, and the baseline passes against itself
+    leaves = dict(bc.flatten(doc))
+    gated = {p: v for p, v in leaves.items() if bc.direction(p) is not None}
+    assert gated == leaves
+    assert gated["full_fallback_publishes"] == 0.0
+    assert bc.direction("delta_publish_speedup") == "higher"
+    _, failures = bc.compare(doc, doc, 25.0)
     assert failures == []

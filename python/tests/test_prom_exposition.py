@@ -55,6 +55,9 @@ def test_committed_sample_has_the_serve_families():
         ("ngdb_serve_shed_total", "counter"),
         ("ngdb_serve_answered_total", "counter"),
         ("ngdb_serve_queue_depth", "gauge"),
+        ("ngdb_serve_shard_rows", "gauge"),
+        ("ngdb_serve_snapshot_publishes_total", "counter"),
+        ("ngdb_serve_snapshot_published_bytes_total", "counter"),
         ("ngdb_serve_batch_fill", "histogram"),
         ("ngdb_serve_latency_seconds", "histogram"),
         ("ngdb_serve_latency_seconds_est", "gauge"),
@@ -82,6 +85,23 @@ def test_committed_sample_accounting_is_internally_consistent():
         values["ngdb_serve_latency_seconds_count"]
         == values["ngdb_serve_answered_total"]
     )
+
+
+def test_shard_row_family_is_balanced_and_multi_labelled():
+    """The per-shard gauge family must carry a real label sweep (one
+    sample per table x shard) and mirror the modulo layout's balance
+    guarantee — rows per shard differ by at most one."""
+    text = _sample_text()
+    rows = {}
+    for line in text.splitlines():
+        if line.startswith("ngdb_serve_shard_rows{"):
+            labels, value = line.rsplit(" ", 1)
+            rows[labels] = float(value)
+    assert len(rows) > 2, "family must be multi-labelled, not a token sample"
+    for table in ("ent", "rel"):
+        per = [v for k, v in rows.items() if f'table="{table}"' in k]
+        assert len(per) == 4, table
+        assert max(per) - min(per) <= 1, f"{table} shard rows skewed: {per}"
 
 
 def test_cli_accepts_the_committed_sample(capsys):

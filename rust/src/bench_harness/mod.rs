@@ -16,6 +16,7 @@ pub mod fig9_adaptive;
 pub mod roofline;
 pub mod serve_latency;
 pub mod serve_load;
+pub mod snapshot_publish;
 pub mod table1_massive;
 pub mod table2_single_hop;
 pub mod table3_main;

@@ -1,0 +1,235 @@
+//! snapshot_publish — delta/COW snapshot publishing economics, on the mock
+//! runtime (no XLA: publishing is pure host-side weight movement).
+//!
+//! The harness stands up one [`SnapshotCell`], anchors the dirty-row
+//! baseline with a priming publish, then runs `rounds` simulated optimizer
+//! steps. Each round touches `touched_per_round` entity rows in a
+//! deterministic scattered pattern (stride coprime to the table, so nearly
+//! every dirty row lands on its own COW page — the *worst case* for page
+//! write amplification) and publishes through
+//! [`SnapshotCell::publish_from`]. Measured against the same state's full
+//! [`ModelSnapshot::capture_sharded`] cost:
+//!
+//! * `delta_bytes_per_full_pct` — bytes a delta publish materializes as a
+//!   percentage of a full capture. Deterministic (a pure function of the
+//!   dirt pattern), and bounded by `touched × PAGE_ROWS / rows`: at 1%
+//!   rows touched the paper-motivated ceiling is 5% even under worst-case
+//!   scatter.
+//! * `delta_publish_speedup` — full-capture wall time over delta-publish
+//!   wall time (the only machine-dependent metric; the baseline pins a
+//!   conservative floor).
+//! * `full_fallback_publishes` — delta-eligible publishes that silently
+//!   fell back to a full capture. Gated at exactly zero: once the
+//!   baseline is anchored, every step must ride the COW path.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::{ModelSnapshot, ModelState, SnapshotCell, PAGE_ROWS};
+use crate::runtime::{MockRuntime, Runtime};
+
+/// Knobs of one harness run.
+#[derive(Debug, Clone)]
+pub struct PublishBenchOpts {
+    /// entity rows in the published table
+    pub entities: usize,
+    /// relation rows (never touched — deltas must share them wholesale)
+    pub relations: usize,
+    /// embedding width (mock manifest `d`)
+    pub dim: usize,
+    /// shard count of the published snapshots
+    pub shards: usize,
+    /// measured delta publishes
+    pub rounds: usize,
+    /// distinct entity rows dirtied per round (default: 1% of `entities`)
+    pub touched_per_round: usize,
+    pub seed: u64,
+}
+
+impl Default for PublishBenchOpts {
+    fn default() -> PublishBenchOpts {
+        PublishBenchOpts {
+            entities: 50_000,
+            relations: 64,
+            dim: 64,
+            shards: crate::model::DEFAULT_SHARDS,
+            rounds: 32,
+            touched_per_round: 500,
+            seed: 23,
+        }
+    }
+}
+
+/// Aggregated outcome of the sweep.
+#[derive(Debug, Clone)]
+pub struct SnapshotPublishReport {
+    pub opts: PublishBenchOpts,
+    /// logical weight bytes of one full capture
+    pub full_capture_bytes: usize,
+    /// mean wall time of a full sharded capture, microseconds
+    pub full_capture_us: f64,
+    /// mean wall time of one delta publish, microseconds
+    pub delta_publish_us: f64,
+    /// mean bytes materialized per delta publish
+    pub delta_bytes_avg: f64,
+    /// mean embedding rows materialized per delta publish
+    pub delta_rows_avg: f64,
+    /// measured publishes that took the COW path
+    pub delta_publishes: u64,
+    /// measured publishes that fell back to a full capture (must be 0)
+    pub full_fallbacks: u64,
+}
+
+impl SnapshotPublishReport {
+    /// Delta-published bytes as a percentage of a full capture.
+    pub fn delta_bytes_per_full_pct(&self) -> f64 {
+        100.0 * self.delta_bytes_avg / self.full_capture_bytes.max(1) as f64
+    }
+
+    /// Full-capture wall time over delta-publish wall time.
+    pub fn speedup(&self) -> f64 {
+        self.full_capture_us / self.delta_publish_us.max(1e-9)
+    }
+}
+
+/// The deterministic dirt pattern: round `r`'s `i`-th touched row. The 101
+/// stride exceeds `PAGE_ROWS × shards`, so consecutive touches never share
+/// a page — worst-case write amplification by construction (and exactly
+/// reproducible by `python/tests/test_bench_compare.py`'s simulation).
+#[inline]
+pub fn touched_id(round: usize, i: usize, entities: usize) -> u32 {
+    ((round * 7919 + i * 101) % entities) as u32
+}
+
+/// Run the sweep. Mock-only: publishing never executes an artifact.
+pub fn run(opts: &PublishBenchOpts) -> Result<SnapshotPublishReport> {
+    // stride-101 touches stay collision-free iff 101 ∤ entities and the
+    // round touches fewer rows than exist (101 is prime, so 101·i cycles
+    // through every residue before repeating)
+    anyhow::ensure!(
+        opts.entities % 101 != 0 && opts.touched_per_round < opts.entities,
+        "stride pattern would collide: pick entities not divisible by 101, \
+         touched_per_round < entities"
+    );
+    let rt = MockRuntime::with_config(opts.dim, 2, &[4, 16, 64]);
+    let mut state = ModelState::init(
+        rt.manifest(),
+        "mock",
+        opts.entities,
+        opts.relations,
+        None,
+        opts.seed,
+    )?;
+    let cell = SnapshotCell::new(ModelSnapshot::capture_sharded(&state, opts.shards));
+
+    // priming publish: fresh init has no dirty baseline, so this one goes
+    // full and re-anchors tracking — excluded from the measured counters
+    state.step += 1;
+    cell.publish_from(&mut state, None);
+    let primed = cell.publish_totals();
+
+    let dim = state.ent_dim;
+    let mut delta_us_total = 0.0f64;
+    for round in 0..opts.rounds {
+        for i in 0..opts.touched_per_round {
+            let id = touched_id(round, i, opts.entities) as usize;
+            for x in &mut state.entities.data[id * dim..(id + 1) * dim] {
+                *x += 1e-3;
+            }
+            state.dirty.ent.insert(id as u32);
+        }
+        state.step += 1;
+        let t = Instant::now();
+        cell.publish_from(&mut state, None);
+        delta_us_total += t.elapsed().as_secs_f64() * 1e6;
+    }
+    let totals = cell.publish_totals();
+    let delta_publishes = totals.delta_publishes - primed.delta_publishes;
+    let full_fallbacks = totals.full_publishes - primed.full_publishes;
+    let delta_bytes = totals.bytes_copied - primed.bytes_copied;
+    let delta_rows = totals.rows_copied - primed.rows_copied;
+
+    // full-capture reference on the same (final) state
+    let full_reps = opts.rounds.clamp(1, 8);
+    let t = Instant::now();
+    let mut full_capture_bytes = 0;
+    for _ in 0..full_reps {
+        full_capture_bytes = ModelSnapshot::capture_sharded(&state, opts.shards).bytes();
+    }
+    let full_capture_us = t.elapsed().as_secs_f64() * 1e6 / full_reps as f64;
+
+    let rounds = opts.rounds.max(1) as f64;
+    Ok(SnapshotPublishReport {
+        opts: opts.clone(),
+        full_capture_bytes,
+        full_capture_us,
+        delta_publish_us: delta_us_total / rounds,
+        delta_bytes_avg: delta_bytes as f64 / rounds,
+        delta_rows_avg: delta_rows as f64 / rounds,
+        delta_publishes,
+        full_fallbacks,
+    })
+}
+
+/// Hand-rolled JSON artifact (same dependency-free style as the other
+/// bench baselines). Key naming is gate-aware for
+/// `scripts/bench_compare.py`: `*_copied_*`/`*publish*` keys gate as
+/// ceilings, `*_speedup` as a floor; sizes live under `config` (ungated).
+pub fn write_json(report: &SnapshotPublishReport, path: &str) -> Result<()> {
+    use anyhow::Context;
+    let json = format!(
+        "{{\n  \"bench\": \"snapshot_publish\",\n  \"config\": {{\"entities\": {}, \
+         \"relations\": {}, \"dim\": {}, \"shards\": {}, \"rounds\": {}, \
+         \"touched_per_round\": {}, \"page_rows\": {}, \"full_capture_bytes\": {}}},\n  \
+         \"delta_bytes_per_full_pct\": {:.3},\n  \
+         \"rows_copied_per_publish\": {:.1},\n  \
+         \"bytes_copied_per_publish\": {:.1},\n  \
+         \"delta_publish_speedup\": {:.3},\n  \
+         \"full_fallback_publishes\": {}\n}}\n",
+        report.opts.entities,
+        report.opts.relations,
+        report.opts.dim,
+        report.opts.shards,
+        report.opts.rounds,
+        report.opts.touched_per_round,
+        PAGE_ROWS,
+        report.full_capture_bytes,
+        report.delta_bytes_per_full_pct(),
+        report.delta_rows_avg,
+        report.delta_bytes_avg,
+        report.speedup(),
+        report.full_fallbacks,
+    );
+    std::fs::write(path, json).with_context(|| format!("writing {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small-config smoke: the sweep rides the delta path exclusively and
+    /// honors the `touched × PAGE_ROWS` amplification bound.
+    #[test]
+    fn small_sweep_stays_on_the_delta_path() {
+        let opts = PublishBenchOpts {
+            entities: 2_000,
+            relations: 8,
+            dim: 8,
+            rounds: 4,
+            touched_per_round: 19,
+            ..Default::default()
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.delta_publishes, 4);
+        assert_eq!(report.full_fallbacks, 0);
+        assert!(report.delta_rows_avg <= (19 * PAGE_ROWS) as f64);
+        assert!(report.delta_rows_avg >= 19.0);
+        assert_eq!(
+            report.delta_bytes_avg,
+            report.delta_rows_avg * 8.0 * 4.0,
+            "delta bytes must be rows × dim × 4 (relations/dense untouched)"
+        );
+        assert!(report.delta_bytes_per_full_pct() < 100.0);
+    }
+}

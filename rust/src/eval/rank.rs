@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use crate::exec::{EngineConfig, EngineSession, TensorPool};
 use crate::kg::KgStore;
-use crate::model::ModelState;
+use crate::model::{ModelSnapshot, ModelState};
 use crate::query::{Pattern, QueryDag, QueryTree};
 use crate::runtime::{HostTensor, Runtime};
 use crate::sampler::ground;
@@ -165,6 +165,97 @@ impl EntityRanker {
                 }
                 pool.checkin_all(&mut out);
                 base += chunk;
+            }
+            pool.checkin(self.inputs.pop().expect("query block was pushed first"));
+            if let Some(e) = failure {
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter phase of the serve plane's shard-parallel ranking: score
+    /// `reprs` against a published snapshot's sharded entity store,
+    /// shard by shard, into per-shard score buffers —
+    /// `shard_scores[s][qi * shard_rows(s) + local]` is the score of shard
+    /// `s`'s local row `local` for `reprs[qi]` (buffers resized +
+    /// overwritten; capacity reused).
+    ///
+    /// Each shard's rows are local-contiguous
+    /// ([`crate::model::ShardedTable::gather_shard_chunk_into`]), so every
+    /// chunk rides the *same* `eval` artifact and bucket shape as
+    /// [`EntityRanker::score_all`] — and because each score is an
+    /// independent dot product, the per-entity scores are **bitwise
+    /// identical** to the flat sweep's; only their layout differs. The
+    /// gather phase (per-shard top-k + merge) lives in
+    /// [`crate::serve::QueryService`]'s workers.
+    ///
+    /// Buffer discipline mirrors `score_all`: chunks and outputs recycle
+    /// through `pool`, the query block is reclaimed on both exits, and a
+    /// failed launch bleeds nothing.
+    pub fn score_all_sharded(
+        &mut self,
+        rt: &dyn Runtime,
+        snap: &ModelSnapshot,
+        reprs: &[Vec<f32>],
+        pool: &TensorPool,
+        shard_scores: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let dims = &rt.manifest().dims;
+        let (eval_b, chunk) = (dims.eval_b, dims.eval_chunk);
+        let ents = snap.entities();
+        let n_shards = ents.n_shards();
+        shard_scores.resize_with(n_shards, Vec::new);
+        for s in 0..n_shards {
+            // resize only, no memset: the chunk sweep below overwrites
+            // every (qi, local) element of every shard buffer
+            shard_scores[s].resize(reprs.len() * ents.shard(s).rows(), 0.0);
+        }
+        if self.eval_model != snap.model() || self.eval_b != eval_b {
+            self.eval_name = format!("{}_eval_fwd_b{eval_b}", snap.model());
+            self.eval_model.clear();
+            self.eval_model.push_str(snap.model());
+            self.eval_b = eval_b;
+        }
+
+        for (bi, block) in reprs.chunks(eval_b).enumerate() {
+            debug_assert!(self.inputs.is_empty());
+            let mut qb = pool.checkout_dirty(&[eval_b, snap.repr_dim()]);
+            for (i, r) in block.iter().enumerate() {
+                qb.row_mut(i).copy_from_slice(r);
+            }
+            qb.zero_rows_from(block.len());
+            self.inputs.push(qb);
+
+            let mut failure = None;
+            'shards: for s in 0..n_shards {
+                let rows_s = ents.shard(s).rows();
+                let buf = &mut shard_scores[s];
+                let mut base = 0usize;
+                while base < rows_s {
+                    let mut eb = pool.checkout_dirty(&[chunk, ents.dim()]);
+                    ents.gather_shard_chunk_into(s, base, &mut eb);
+                    self.inputs.push(eb);
+                    let exec = rt.execute_pooled_gated(&self.eval_name, &self.inputs, pool);
+                    let eb = self.inputs.pop().expect("entity chunk was just pushed");
+                    pool.checkin(eb);
+                    let mut out = match exec {
+                        Ok(out) => out,
+                        Err(e) => {
+                            failure = Some(e);
+                            break 'shards;
+                        }
+                    };
+                    let sres = &out[0];
+                    let n = (rows_s - base).min(chunk);
+                    for qi in 0..block.len() {
+                        let dst = (bi * eval_b + qi) * rows_s + base;
+                        buf[dst..dst + n]
+                            .copy_from_slice(&sres.data[qi * chunk..qi * chunk + n]);
+                    }
+                    pool.checkin_all(&mut out);
+                    base += chunk;
+                }
             }
             pool.checkin(self.inputs.pop().expect("query block was pushed first"));
             if let Some(e) = failure {

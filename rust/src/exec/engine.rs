@@ -90,6 +90,7 @@ use anyhow::{bail, Context, Result};
 
 use super::arena::{ReprSlab, SlabRange, TensorPool};
 use super::pools::OperatorPools;
+use crate::model::snapshot::WeightsView;
 use crate::model::state::ModelState;
 use crate::query::{OpKind, QueryDag};
 use crate::runtime::{HostTensor, Runtime};
@@ -505,7 +506,7 @@ impl<'a> Engine<'a> {
     pub(crate) fn gather_timed(
         &self,
         dag: &QueryDag,
-        state: &ModelState,
+        view: WeightsView<'_>,
         op: OpKind,
         batch: Vec<u32>,
         storage: &[Option<NodeOut>],
@@ -515,7 +516,7 @@ impl<'a> Engine<'a> {
     ) -> Result<PreparedBatch> {
         let t0 = Instant::now();
         let prep = self
-            .gather_batch(dag, state, op, batch, storage, slab, pool)
+            .gather_batch(dag, view, op, batch, storage, slab, pool)
             .with_context(|| format!("gathering pool {}", op.name()))?;
         stats.gather_secs += t0.elapsed().as_secs_f64();
         Ok(prep)
@@ -537,7 +538,7 @@ impl<'a> Engine<'a> {
     pub(crate) fn gather_batch(
         &self,
         dag: &QueryDag,
-        state: &ModelState,
+        view: WeightsView<'_>,
         op: OpKind,
         batch: Vec<u32>,
         storage: &[Option<NodeOut>],
@@ -559,7 +560,7 @@ impl<'a> Engine<'a> {
                 op_name = format!("fused-{}", sem.encoder());
             }
         }
-        let artifact = m.op_artifact(&state.model, &op_name, direction, bucket);
+        let artifact = m.op_artifact(view.model(), &op_name, direction, bucket);
         let meta = m.artifact(&artifact)?;
 
         // --- coalesce inputs ------------------------------------------------
@@ -567,10 +568,10 @@ impl<'a> Engine<'a> {
         // already in `inputs` (returned wholesale below on a bail) or held
         // by `filled`, which checks it back in before propagating — gather
         // failures never bleed pool buffers.
-        let rd = state.repr_dim;
+        let rd = view.repr_dim();
         let mut inputs: Vec<HostTensor> = Vec::new();
         let coalesce = (|| -> Result<()> {
-            state.params_for_pooled(
+            view.params_for_pooled(
                 meta.param_args().map(|a| a.name.as_str()),
                 pool,
                 &mut inputs,
@@ -579,7 +580,7 @@ impl<'a> Engine<'a> {
                 OpKind::Embed => {
                     let ids: Vec<u32> =
                         batch.iter().map(|&i| dag.nodes[i as usize].payload).collect();
-                    inputs.push(state.entities.gather_pooled(&ids, bucket, pool));
+                    inputs.push(view.gather_entities_pooled(&ids, bucket, pool));
                     if let Some(sem) = self.semantic {
                         inputs.push(sem.gather_pooled(&ids, bucket, pool)?);
                     }
@@ -597,7 +598,7 @@ impl<'a> Engine<'a> {
                         Ok(())
                     })?;
                     inputs.push(x);
-                    inputs.push(state.relations.gather_pooled(&rels, bucket, pool));
+                    inputs.push(view.gather_relations_pooled(&rels, bucket, pool));
                 }
                 OpKind::Intersect(k) | OpKind::Union(k) => {
                     let k = k as usize;
@@ -653,9 +654,9 @@ impl<'a> Engine<'a> {
                         Ok(())
                     })?;
                     inputs.push(q);
-                    inputs.push(state.entities.gather_pooled(&pos_ids, bucket, pool));
+                    inputs.push(view.gather_entities_pooled(&pos_ids, bucket, pool));
                     inputs.push(
-                        state.entities.gather_nested_pooled(&neg_ids, bucket, n_neg, pool),
+                        view.gather_entities_nested_pooled(&neg_ids, bucket, n_neg, pool),
                     );
                     // ones over real rows, zero padding — same values as the
                     // old zeros-then-set-per-row loop
@@ -676,7 +677,7 @@ impl<'a> Engine<'a> {
                                 .iter()
                                 .map(|&i| dag.nodes[i as usize].payload)
                                 .collect();
-                            inputs.push(state.entities.gather_pooled(&ids, bucket, pool));
+                            inputs.push(view.gather_entities_pooled(&ids, bucket, pool));
                             if let Some(sem) = self.semantic {
                                 inputs.push(sem.gather_pooled(&ids, bucket, pool)?);
                             }
@@ -698,7 +699,7 @@ impl<'a> Engine<'a> {
                                 Ok(())
                             })?;
                             inputs.push(x);
-                            inputs.push(state.relations.gather_pooled(&rels, bucket, pool));
+                            inputs.push(view.gather_relations_pooled(&rels, bucket, pool));
                         }
                         OpKind::Intersect(k) | OpKind::Union(k) => {
                             let k = k as usize;
@@ -770,7 +771,7 @@ impl<'a> Engine<'a> {
     pub(crate) fn scatter_batch(
         &self,
         dag: &QueryDag,
-        state: &ModelState,
+        view: WeightsView<'_>,
         prep: &PreparedBatch,
         outputs: &[HostTensor],
         storage: &mut [Option<NodeOut>],
@@ -791,7 +792,7 @@ impl<'a> Engine<'a> {
         }
         stats.padded_rows += prep.padded;
         stats.bucket_rows += prep.batch.len() + prep.padded;
-        let rd = state.repr_dim;
+        let rd = view.repr_dim();
         let batch = &prep.batch;
 
         let store =
@@ -813,7 +814,7 @@ impl<'a> Engine<'a> {
                 stats.loss += loss;
                 let (g_q, g_pos, g_neg) = (&outputs[1], &outputs[2], &outputs[3]);
                 let n_neg = m.dims.n_neg;
-                let ed = state.ent_dim;
+                let ed = view.ent_dim();
                 for (row, &i) in batch.iter().enumerate() {
                     let slot = &dag.queries[dag.nodes[i as usize].payload as usize];
                     // loss attribution per pattern: approximate by equal split

@@ -64,7 +64,9 @@ use anyhow::{bail, Context, Result};
 use super::arena::{ReprSlab, TensorPool};
 use super::engine::{Engine, EngineConfig, GradSink, Grads, NodeOut, PreparedBatch, StepStats};
 use super::pools::OperatorPools;
+use crate::model::snapshot::WeightsView;
 use crate::model::state::ModelState;
+use crate::model::ModelSnapshot;
 use crate::query::{OpKind, QueryDag, NO_MIRROR};
 use crate::runtime::Runtime;
 
@@ -88,6 +90,35 @@ enum SessionMsg {
     Gather(SessionJob),
 }
 
+/// Type-erased counterpart of [`WeightsView`]: which weight store a
+/// gather job reads — the trainer's flat live state or a published
+/// sharded snapshot. Carried by [`SessionJob`] under the same validity
+/// protocol as its other pointers.
+#[derive(Clone, Copy)]
+enum StatePtr {
+    Flat(*const ModelState),
+    Sharded(*const ModelSnapshot),
+}
+
+impl StatePtr {
+    fn of(view: WeightsView<'_>) -> StatePtr {
+        match view {
+            WeightsView::Flat(s) => StatePtr::Flat(s),
+            WeightsView::Sharded(s) => StatePtr::Sharded(s),
+        }
+    }
+
+    /// Rebuild the borrow. SAFETY: caller upholds the session job
+    /// protocol (the referent outlives the job and is not mutated while
+    /// the job is in flight).
+    unsafe fn view<'x>(self) -> WeightsView<'x> {
+        match self {
+            StatePtr::Flat(p) => WeightsView::Flat(&*p),
+            StatePtr::Sharded(p) => WeightsView::Sharded(&*p),
+        }
+    }
+}
+
 /// One speculative gather request. Raw pointers type-erase the per-run
 /// borrows so one `'static` worker thread can serve every run of the
 /// session — validity is upheld by the run loop (see the module docs).
@@ -97,7 +128,7 @@ struct SessionJob {
     /// type-erased `*const Engine<'_>` (the session's planning core)
     engine: *const (),
     dag: *const QueryDag,
-    state: *const ModelState,
+    state: StatePtr,
     /// the run's output slab (read-only while the job is in flight)
     storage: *const Option<NodeOut>,
     storage_len: usize,
@@ -378,7 +409,7 @@ impl<'a> EngineSession<'a> {
         grads: &mut Grads,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
-        self.run_inner(dag, state, GradSink::Train(grads), wanted)
+        self.run_inner(dag, WeightsView::Flat(state), GradSink::Train(grads), wanted)
     }
 
     /// The forward plane: execute a **forward-only** DAG — lowered with
@@ -397,6 +428,18 @@ impl<'a> EngineSession<'a> {
         state: &ModelState,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
+        self.run_forward_view(dag, WeightsView::Flat(state), wanted)
+    }
+
+    /// [`EngineSession::run_forward`] over either weight store — the serve
+    /// plane passes a sharded snapshot view ([`ForwardSession::run`]); the
+    /// numerics are bitwise identical across stores for the same weights.
+    pub fn run_forward_view(
+        &mut self,
+        dag: &QueryDag,
+        view: WeightsView<'_>,
+        wanted: &[u32],
+    ) -> Result<(StepStats, Vec<Vec<f32>>)> {
         if let Some(node) = dag
             .nodes
             .iter()
@@ -408,7 +451,7 @@ impl<'a> EngineSession<'a> {
                 node.op.name()
             );
         }
-        self.run_inner(dag, state, GradSink::Forward, wanted)
+        self.run_inner(dag, view, GradSink::Forward, wanted)
     }
 
     /// The shared run loop behind both planes; `sink` decides whether
@@ -416,7 +459,7 @@ impl<'a> EngineSession<'a> {
     fn run_inner(
         &mut self,
         dag: &QueryDag,
-        state: &ModelState,
+        view: WeightsView<'_>,
         mut sink: GradSink<'_>,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
@@ -461,7 +504,7 @@ impl<'a> EngineSession<'a> {
         let mut current: Option<PreparedBatch> =
             match engine.next_round(pools, &mut stats, pending)? {
                 Some((op, batch)) => Some(engine.gather_timed(
-                    dag, state, op, batch, storage, slab, pool, &mut stats,
+                    dag, view, op, batch, storage, slab, pool, &mut stats,
                 )?),
                 None => None,
             };
@@ -480,7 +523,7 @@ impl<'a> EngineSession<'a> {
                         batch: sbatch,
                         engine: (engine as *const Engine<'a>).cast(),
                         dag: dag as *const QueryDag,
-                        state: state as *const ModelState,
+                        state: StatePtr::of(view),
                         storage: storage.as_ptr(),
                         storage_len: storage.len(),
                         slab: &*slab as *const ReprSlab,
@@ -547,7 +590,7 @@ impl<'a> EngineSession<'a> {
 
             // -- scatter outputs, account padding, reclaim eagerly
             if let Err(e) = engine.scatter_batch(
-                dag, state, &prep, &outputs, storage, slab, &mut live_bytes, &mut sink,
+                dag, view, &prep, &outputs, storage, slab, &mut live_bytes, &mut sink,
                 &mut stats, pat_loss,
             ) {
                 pool.checkin_all(&mut prep.inputs);
@@ -619,7 +662,7 @@ impl<'a> EngineSession<'a> {
                             }
                         }
                         Some(engine.gather_timed(
-                            dag, state, op, batch, storage, slab, pool, &mut stats,
+                            dag, view, op, batch, storage, slab, pool, &mut stats,
                         )?)
                     }
                 },
@@ -685,14 +728,15 @@ impl<'a> ForwardSession<'a> {
     }
 
     /// Execute a forward-only DAG over `snapshot`, returning telemetry and
-    /// the reprs of the `wanted` roots.
+    /// the reprs of the `wanted` roots. Reads the snapshot's sharded
+    /// store directly — no flattening, no copy.
     pub fn run(
         &mut self,
         dag: &QueryDag,
         snapshot: &crate::model::ModelSnapshot,
         wanted: &[u32],
     ) -> Result<(StepStats, Vec<Vec<f32>>)> {
-        self.inner.run_forward(dag, snapshot.state(), wanted)
+        self.inner.run_forward_view(dag, WeightsView::Sharded(snapshot), wanted)
     }
 
     /// The session's buffer recycler (shared with ranking helpers).
@@ -727,11 +771,11 @@ fn session_worker(jobs: Receiver<SessionMsg>, done: Sender<GatherDone>) {
         let result = unsafe {
             let engine: &Engine<'_> = &*job.engine.cast();
             let dag: &QueryDag = &*job.dag;
-            let state: &ModelState = &*job.state;
+            let view = job.state.view();
             let storage = std::slice::from_raw_parts(job.storage, job.storage_len);
             let slab: &ReprSlab = &*job.slab;
             let pool: &TensorPool = &*job.pool;
-            engine.gather_batch(dag, state, job.op, job.batch, storage, slab, pool)
+            engine.gather_batch(dag, view, job.op, job.batch, storage, slab, pool)
         };
         let gather_secs = t0.elapsed().as_secs_f64();
         parked = Instant::now();

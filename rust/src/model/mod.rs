@@ -1,9 +1,14 @@
 //! Model-state layer: host-resident embedding tables and dense operator
-//! parameters for each backbone model, plus the immutable
-//! [`ModelSnapshot`]s the serve plane reads.
+//! parameters for each backbone model, plus the hash-sharded COW storage
+//! ([`shard`]) behind the immutable [`ModelSnapshot`]s the serve plane
+//! reads.
 
+pub mod shard;
 pub mod snapshot;
 pub mod state;
 
-pub use snapshot::{ModelSnapshot, SnapshotCell};
-pub use state::{EmbeddingTable, ModelState, ParamTensor};
+pub use shard::{ShardLayout, ShardedTable, DEFAULT_SHARDS, PAGE_ROWS};
+pub use snapshot::{
+    ModelSnapshot, PublishReport, PublishTotals, SnapshotCell, SnapshotStatics, WeightsView,
+};
+pub use state::{DirtyRows, EmbeddingTable, ModelState, ParamTensor};

@@ -1,0 +1,448 @@
+//! Hash-sharded, page-granular storage for published embedding tables.
+//!
+//! A [`ShardedTable`] partitions a flat [`EmbeddingTable`] into `N`
+//! independently-versioned segments with stable modulo routing
+//! (`shard = id % N`, `local = id / N`), each segment holding its rows
+//! contiguously (local-major) in small copy-on-write *pages*. Two
+//! consumers drive the layout:
+//!
+//! * **Delta snapshot publishing** ([`ShardedTable::delta`]): consecutive
+//!   snapshots share storage at two granularities. A shard none of whose
+//!   rows changed since the previous publish is `Arc`-shared wholesale; a
+//!   touched shard shares its untouched pages and re-materializes only the
+//!   pages holding dirty rows. Published bytes are therefore bounded by
+//!   `dirty_rows × PAGE_ROWS × dim × 4` for *any* dirt pattern — the
+//!   worst case (every dirty row on its own page) is a small constant
+//!   factor over the touched working set, never the table size.
+//! * **Scatter-gather ranking** ([`crate::eval::rank`]): each shard's rows
+//!   are local-contiguous, so the ranker scores shard-local chunks with
+//!   the same eval artifact (and bucket shape) as the flat path and maps
+//!   results back through [`ShardLayout::global_of`]. Every score is an
+//!   independent dot product, so shard-local chunking is bitwise identical
+//!   to flat chunking.
+//!
+//! Routing is a pure function of `(id, n_shards)` — no directory, no
+//! rebalancing state — which is exactly what a later multi-process split
+//! needs: a router can address shard owners without consulting the table.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use crate::exec::TensorPool;
+use crate::model::state::EmbeddingTable;
+use crate::runtime::HostTensor;
+
+/// Shard count [`crate::model::ModelSnapshot::capture`] defaults to. Small
+/// enough that near-empty tables stay sensible, large enough that the
+/// serve tier's per-shard top-k has real parallelism to harvest.
+pub const DEFAULT_SHARDS: usize = 4;
+
+/// Rows per copy-on-write page. Bounds delta-publish write amplification:
+/// one dirty row re-materializes at most `PAGE_ROWS * dim * 4` bytes.
+pub const PAGE_ROWS: usize = 4;
+
+/// Stable modulo routing: `shard = id % n`, `local = id / n`. Pure and
+/// directory-free, so any process that knows `n_shards` can route.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardLayout {
+    n: usize,
+}
+
+impl ShardLayout {
+    pub fn new(n_shards: usize) -> ShardLayout {
+        assert!(n_shards >= 1, "a sharded table needs at least one shard");
+        ShardLayout { n: n_shards }
+    }
+
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn shard_of(&self, id: u32) -> usize {
+        id as usize % self.n
+    }
+
+    #[inline]
+    pub fn local_of(&self, id: u32) -> usize {
+        id as usize / self.n
+    }
+
+    #[inline]
+    pub fn global_of(&self, shard: usize, local: usize) -> u32 {
+        (local * self.n + shard) as u32
+    }
+
+    /// Rows routed to `shard` out of `total` global rows (balanced to
+    /// within one row; empty when `total <= shard`).
+    pub fn shard_rows(&self, total: usize, shard: usize) -> usize {
+        if shard >= total {
+            0
+        } else {
+            (total - shard + self.n - 1) / self.n
+        }
+    }
+}
+
+/// One shard: `rows` local-contiguous rows stored in COW pages of up to
+/// [`PAGE_ROWS`] rows each.
+#[derive(Debug)]
+pub struct TableShard {
+    rows: usize,
+    dim: usize,
+    pages: Vec<Arc<Vec<f32>>>,
+}
+
+impl TableShard {
+    /// Materialize shard `shard` of `live` (weights only — no moments).
+    fn capture(live: &EmbeddingTable, layout: ShardLayout, shard: usize) -> TableShard {
+        let rows = layout.shard_rows(live.rows, shard);
+        let dim = live.dim;
+        let mut pages = Vec::with_capacity((rows + PAGE_ROWS - 1) / PAGE_ROWS);
+        let mut local = 0;
+        while local < rows {
+            let n = (rows - local).min(PAGE_ROWS);
+            let mut page = Vec::with_capacity(n * dim);
+            for l in local..local + n {
+                page.extend_from_slice(live.row(layout.global_of(shard, l)));
+            }
+            pages.push(Arc::new(page));
+            local += n;
+        }
+        TableShard { rows, dim, pages }
+    }
+
+    /// Rebuild only `dirty_pages` (sorted, deduped page indices) from
+    /// `live`, sharing every other page with `prev`. Returns the new shard
+    /// and the number of rows re-materialized.
+    fn delta(
+        prev: &TableShard,
+        live: &EmbeddingTable,
+        layout: ShardLayout,
+        shard: usize,
+        dirty_pages: &[usize],
+    ) -> (TableShard, usize) {
+        let mut pages = prev.pages.clone();
+        let mut rows_copied = 0;
+        for &p in dirty_pages {
+            let start = p * PAGE_ROWS;
+            let n = (prev.rows - start).min(PAGE_ROWS);
+            let mut page = Vec::with_capacity(n * prev.dim);
+            for l in start..start + n {
+                page.extend_from_slice(live.row(layout.global_of(shard, l)));
+            }
+            pages[p] = Arc::new(page);
+            rows_copied += n;
+        }
+        (TableShard { rows: prev.rows, dim: prev.dim, pages }, rows_copied)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn row(&self, local: usize) -> &[f32] {
+        debug_assert!(local < self.rows);
+        let page = &self.pages[local / PAGE_ROWS];
+        let off = (local % PAGE_ROWS) * self.dim;
+        &page[off..off + self.dim]
+    }
+
+    /// Weight bytes resident in this shard (shared pages counted once).
+    pub fn bytes(&self) -> usize {
+        self.rows * self.dim * 4
+    }
+}
+
+/// What a delta publish actually copied (vs. shared with the previous
+/// snapshot). Surfaced through [`crate::model::SnapshotCell`] counters and
+/// the `snapshot_publish` bench.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeltaStats {
+    /// embedding rows re-materialized (page write amplification included)
+    pub rows_copied: usize,
+    /// bytes of embedding data re-materialized
+    pub bytes_copied: usize,
+    /// shards that could not be `Arc`-shared wholesale
+    pub shards_touched: usize,
+}
+
+/// A hash-sharded, immutable view of one embedding table (weights only).
+/// Cloning is cheap: shards are `Arc`-shared.
+#[derive(Debug, Clone)]
+pub struct ShardedTable {
+    rows: usize,
+    dim: usize,
+    layout: ShardLayout,
+    shards: Vec<Arc<TableShard>>,
+}
+
+impl ShardedTable {
+    /// Full capture of `live` into `n_shards` segments.
+    pub fn capture(live: &EmbeddingTable, n_shards: usize) -> ShardedTable {
+        let layout = ShardLayout::new(n_shards);
+        let shards = (0..n_shards)
+            .map(|s| Arc::new(TableShard::capture(live, layout, s)))
+            .collect();
+        ShardedTable { rows: live.rows, dim: live.dim, layout, shards }
+    }
+
+    /// COW capture against `prev`: only the pages holding `dirty` rows are
+    /// re-materialized from `live`; untouched shards are `Arc`-shared
+    /// wholesale, untouched pages of touched shards are shared too.
+    ///
+    /// Caller guarantees `prev` was captured from a table with the same
+    /// `rows`/`dim`, and that `dirty` covers every row that changed since
+    /// — then the result is bitwise identical to a fresh
+    /// [`ShardedTable::capture`].
+    pub fn delta(
+        prev: &ShardedTable,
+        live: &EmbeddingTable,
+        dirty: &HashSet<u32>,
+    ) -> (ShardedTable, DeltaStats) {
+        debug_assert_eq!(prev.rows, live.rows);
+        debug_assert_eq!(prev.dim, live.dim);
+        let layout = prev.layout;
+        let mut pages_by_shard: Vec<Vec<usize>> = vec![Vec::new(); layout.n_shards()];
+        for &id in dirty {
+            pages_by_shard[layout.shard_of(id)].push(layout.local_of(id) / PAGE_ROWS);
+        }
+        let mut stats = DeltaStats::default();
+        let mut shards = Vec::with_capacity(layout.n_shards());
+        for (s, mut pages) in pages_by_shard.into_iter().enumerate() {
+            if pages.is_empty() {
+                shards.push(Arc::clone(&prev.shards[s]));
+                continue;
+            }
+            pages.sort_unstable();
+            pages.dedup();
+            let (shard, rows) = TableShard::delta(&prev.shards[s], live, layout, s, &pages);
+            stats.rows_copied += rows;
+            stats.bytes_copied += rows * prev.dim * 4;
+            stats.shards_touched += 1;
+            shards.push(Arc::new(shard));
+        }
+        (ShardedTable { rows: prev.rows, dim: prev.dim, layout, shards }, stats)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn layout(&self) -> ShardLayout {
+        self.layout
+    }
+
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.layout.n_shards()
+    }
+
+    #[inline]
+    pub fn shard(&self, s: usize) -> &TableShard {
+        &self.shards[s]
+    }
+
+    /// Routed single-row access (global id).
+    #[inline]
+    pub fn row(&self, id: u32) -> &[f32] {
+        self.shards[self.layout.shard_of(id)].row(self.layout.local_of(id))
+    }
+
+    /// Mirrors [`EmbeddingTable::gather_into`]: real rows copied (routed),
+    /// padding tail zeroed.
+    pub fn gather_into(&self, ids: &[u32], out: &mut HostTensor) {
+        for (i, &id) in ids.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(id));
+        }
+        out.zero_rows_from(ids.len());
+    }
+
+    /// Mirrors [`EmbeddingTable::gather_pooled`].
+    pub fn gather_pooled(&self, ids: &[u32], bucket: usize, pool: &TensorPool) -> HostTensor {
+        let mut out = pool.checkout_dirty(&[bucket, self.dim]);
+        self.gather_into(ids, &mut out);
+        out
+    }
+
+    /// Mirrors [`EmbeddingTable::gather_nested_into`].
+    pub fn gather_nested_into(&self, ids: &[&[u32]], per: usize, out: &mut HostTensor) {
+        for (i, row_ids) in ids.iter().enumerate() {
+            for (j, &id) in row_ids.iter().enumerate() {
+                let dst = i * per * self.dim + j * self.dim;
+                out.data[dst..dst + self.dim].copy_from_slice(self.row(id));
+            }
+            let tail = i * per * self.dim + row_ids.len() * self.dim;
+            out.data[tail..(i + 1) * per * self.dim].fill(0.0);
+        }
+        out.zero_rows_from(ids.len());
+    }
+
+    /// Mirrors [`EmbeddingTable::gather_nested_pooled`].
+    pub fn gather_nested_pooled(
+        &self,
+        ids: &[&[u32]],
+        bucket: usize,
+        per: usize,
+        pool: &TensorPool,
+    ) -> HostTensor {
+        let mut out = pool.checkout_dirty(&[bucket, per, self.dim]);
+        self.gather_nested_into(ids, per, &mut out);
+        out
+    }
+
+    /// Shard-local contiguous chunk gather for the scatter-gather ranker:
+    /// fills `out` (`[chunk, dim]`) with shard `s`'s rows
+    /// `base_local..base_local + chunk`, zero-padding past the shard's
+    /// end — the exact analogue of the flat ranker's tail-padded entity
+    /// chunk, so the eval artifact sees an identical input shape.
+    pub fn gather_shard_chunk_into(&self, s: usize, base_local: usize, out: &mut HostTensor) {
+        let shard = &self.shards[s];
+        let chunk = out.shape[0];
+        let n = shard.rows().saturating_sub(base_local).min(chunk);
+        for i in 0..n {
+            out.row_mut(i).copy_from_slice(shard.row(base_local + i));
+        }
+        out.zero_rows_from(n);
+    }
+
+    /// Reassemble the flat (global-order) weight vector — test/debug aid
+    /// for bitwise comparisons against the live table.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut flat = vec![0.0; self.rows * self.dim];
+        for id in 0..self.rows {
+            flat[id * self.dim..(id + 1) * self.dim].copy_from_slice(self.row(id as u32));
+        }
+        flat
+    }
+
+    /// Weight bytes (no moments; shared pages counted once per snapshot).
+    pub fn bytes(&self) -> usize {
+        self.rows * self.dim * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn table(rows: usize, dim: usize, seed: u64) -> EmbeddingTable {
+        let mut rng = Rng::new(seed);
+        EmbeddingTable::new(rows, dim, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn routing_round_trips_and_balances() {
+        for n in [1, 2, 4, 7, 13] {
+            let layout = ShardLayout::new(n);
+            for total in [0usize, 1, 5, 64, 101] {
+                let mut seen = vec![0usize; n];
+                for id in 0..total as u32 {
+                    let (s, l) = (layout.shard_of(id), layout.local_of(id));
+                    assert!(s < n);
+                    assert_eq!(layout.global_of(s, l), id, "round trip n={n} id={id}");
+                    assert!(l < layout.shard_rows(total, s));
+                    seen[s] += 1;
+                }
+                let total_routed: usize = (0..n).map(|s| layout.shard_rows(total, s)).sum();
+                assert_eq!(total_routed, total, "n={n} total={total}");
+                for (s, &count) in seen.iter().enumerate() {
+                    assert_eq!(count, layout.shard_rows(total, s), "n={n} shard={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn capture_is_bitwise_faithful_for_any_shard_count() {
+        let live = table(23, 4, 9);
+        for n in [1, 2, 4, 7, 23, 40] {
+            let sharded = ShardedTable::capture(&live, n);
+            assert_eq!(sharded.to_flat(), live.data, "n_shards={n}");
+            for id in 0..live.rows as u32 {
+                assert_eq!(sharded.row(id), live.row(id), "n_shards={n} id={id}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_matches_full_capture_and_shares_untouched_shards() {
+        let mut live = table(64, 4, 3);
+        let prev = ShardedTable::capture(&live, 4);
+        let orig_row1: Vec<f32> = live.row(1).to_vec();
+        // touch three rows all routed to shards 1 and 2
+        let dirty: HashSet<u32> = [1u32, 5, 2].into_iter().collect();
+        for &id in &dirty {
+            for x in &mut live.data[id as usize * 4..(id as usize + 1) * 4] {
+                *x += 1.0;
+            }
+        }
+        let (snap, stats) = ShardedTable::delta(&prev, &live, &dirty);
+        assert_eq!(snap.to_flat(), ShardedTable::capture(&live, 4).to_flat());
+        assert_eq!(stats.shards_touched, 2);
+        // page amplification never exceeds PAGE_ROWS per dirty row
+        assert!(stats.rows_copied <= dirty.len() * PAGE_ROWS);
+        assert_eq!(stats.bytes_copied, stats.rows_copied * 4 * 4);
+        // untouched shards are shared wholesale, touched ones are not
+        assert!(Arc::ptr_eq(&prev.shards[0], &snap.shards[0]));
+        assert!(Arc::ptr_eq(&prev.shards[3], &snap.shards[3]));
+        assert!(!Arc::ptr_eq(&prev.shards[1], &snap.shards[1]));
+        // ...and the previous snapshot still reads its original values
+        assert_eq!(prev.row(1), &orig_row1[..]);
+        assert_ne!(snap.row(1), &orig_row1[..]);
+    }
+
+    #[test]
+    fn empty_delta_shares_everything() {
+        let live = table(10, 4, 5);
+        let prev = ShardedTable::capture(&live, 4);
+        let (snap, stats) = ShardedTable::delta(&prev, &live, &HashSet::new());
+        assert_eq!(stats.rows_copied, 0);
+        assert_eq!(stats.bytes_copied, 0);
+        assert_eq!(stats.shards_touched, 0);
+        for s in 0..4 {
+            assert!(Arc::ptr_eq(&prev.shards[s], &snap.shards[s]));
+        }
+    }
+
+    #[test]
+    fn gathers_match_the_flat_table() {
+        let live = table(17, 4, 11);
+        let sharded = ShardedTable::capture(&live, 3);
+        let ids = [3u32, 16, 0, 7];
+        assert_eq!(sharded.gather_pooled(&ids, 6, &TensorPool::new()),
+                   live.gather(&ids, 6));
+        let negs: Vec<&[u32]> = vec![&[0, 1], &[12]];
+        assert_eq!(
+            sharded.gather_nested_pooled(&negs, 3, 2, &TensorPool::new()),
+            live.gather_nested(&negs, 3, 2)
+        );
+    }
+
+    #[test]
+    fn shard_chunk_gather_is_contiguous_and_tail_padded() {
+        let live = table(10, 4, 2);
+        let sharded = ShardedTable::capture(&live, 4);
+        // shard 1 holds ids 1, 5, 9 (locals 0, 1, 2)
+        let mut out = HostTensor::zeros(vec![4, 4]);
+        sharded.gather_shard_chunk_into(1, 0, &mut out);
+        assert_eq!(out.row(0), live.row(1));
+        assert_eq!(out.row(1), live.row(5));
+        assert_eq!(out.row(2), live.row(9));
+        assert_eq!(out.row(3), &[0.0; 4]);
+        // past-the-end base yields an all-zero block
+        sharded.gather_shard_chunk_into(1, 4, &mut out);
+        assert!(out.data.iter().all(|&x| x == 0.0));
+    }
+}

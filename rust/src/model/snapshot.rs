@@ -4,103 +4,394 @@
 //! A trainer mutates one [`ModelState`] in place; serving needs a view of
 //! those weights that (a) never changes under a reader's feet, (b) can be
 //! read from many threads at once, and (c) does not drag the optimizer's
-//! Adam moments along (two extra copies of every table that forward passes
-//! never touch). [`ModelSnapshot::capture`] produces exactly that: a
-//! moment-free deep copy of the embedding tables + dense params, frozen at
-//! the optimizer step it was taken.
+//! Adam moments along. [`ModelSnapshot`] is that view, and since the
+//! sharded-store refactor it is **not** a flat deep copy: the embedding
+//! tables live in hash-sharded, page-granular COW storage
+//! ([`crate::model::shard::ShardedTable`]), the immutable metadata (model
+//! name, dims, dense-param keys/shapes, fusion provenance) is one
+//! `Arc<SnapshotStatics>` shared across consecutive snapshots, and only
+//! the dense weight vectors are re-copied per publish (the optimizer
+//! touches every dense element every step, so they cannot be shared).
 //!
-//! [`SnapshotCell`] is the publish point. The trainer calls
-//! [`SnapshotCell::publish`] after `optimize` (see
-//! [`crate::train::Trainer::publish_snapshot`]); serve workers call
-//! [`SnapshotCell::load`] to pin the current snapshot for one micro-batch.
-//! The swap itself is one `Arc` store under a short write lock — readers
-//! mid-batch keep their pinned `Arc` alive, so a publish never tears an
-//! in-flight answer: every response is computed against exactly one
-//! published snapshot, and old snapshots free themselves when the last
-//! reader drops.
+//! [`SnapshotCell`] is the publish point. The delta path
+//! ([`SnapshotCell::publish_from`]) consumes the dirty-row sets the
+//! optimizer records ([`crate::model::state::DirtyRows`]) and
+//! re-materializes only the pages holding touched rows — publish cost
+//! scales with rows touched per step, not table size. Untouched shards are
+//! `Arc`-shared wholesale between consecutive snapshots. If the tracking
+//! baseline does not line up (fresh state, checkpoint restore, model
+//! surgery, shape/fusion change), the publish falls back to a full
+//! capture; either way the published snapshot is bitwise identical to a
+//! fresh [`ModelSnapshot::capture`] of the same state — `shard_parity`
+//! asserts it.
+//!
+//! Serve workers call [`SnapshotCell::load`] to pin the current snapshot
+//! for one micro-batch. The swap itself is one `Arc` store under a short
+//! write lock — readers mid-batch keep their pinned `Arc` alive, so a
+//! publish never tears an in-flight answer.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, PoisonError, RwLock};
 
-use super::state::{EmbeddingTable, ModelState, ParamTensor};
+use anyhow::Result;
+
+use super::shard::{DeltaStats, ShardedTable, DEFAULT_SHARDS};
+use super::state::ModelState;
+use crate::exec::TensorPool;
+use crate::runtime::HostTensor;
+
+/// The parts of a snapshot that do not change step to step: identity,
+/// dims, the dense-param name/shape directory (sorted, mirroring the
+/// `BTreeMap` order of [`ModelState::dense`]), and fusion provenance.
+/// `Arc`-shared across consecutive snapshots so a publish copies weight
+/// bytes, not strings.
+#[derive(Debug)]
+pub struct SnapshotStatics {
+    pub model: String,
+    pub ent_dim: usize,
+    pub rel_dim: usize,
+    pub repr_dim: usize,
+    /// dense param names, sorted (binary-searchable)
+    pub dense_keys: Vec<String>,
+    /// shapes parallel to `dense_keys`
+    pub dense_shapes: Vec<Vec<usize>>,
+    /// semantic-fusion provenance: the encoder name the weights were
+    /// trained with, or `None` for a structural-only model. The serve
+    /// tier refuses snapshot/source mismatches ([`crate::serve`]).
+    pub fusion: Option<String>,
+}
 
 /// An immutable, share-from-many-threads view of one model's weights:
-/// embedding tables + dense params, **no Adam moments** (the `m`/`v`
-/// vectors are empty, making a snapshot ~1/3 the resident size of the
-/// training state). The engine's forward plane never reads moments, so a
-/// forward run over a snapshot is bitwise identical to one over the live
-/// state it was captured from — `forward_parity` asserts it.
+/// hash-sharded embedding tables + dense params, **no Adam moments**. The
+/// engine's forward plane reads it through [`WeightsView`]; a forward run
+/// over a snapshot is bitwise identical to one over the live state it was
+/// captured from — `forward_parity` asserts it.
 #[derive(Debug, Clone)]
 pub struct ModelSnapshot {
-    state: ModelState,
+    statics: Arc<SnapshotStatics>,
+    entities: ShardedTable,
+    relations: ShardedTable,
+    /// dense weight vectors, parallel to `statics.dense_keys`
+    dense: Vec<Vec<f32>>,
+    step: u64,
 }
 
 impl ModelSnapshot {
-    /// Deep-copy `live`'s weights (data only — moments are dropped) at its
-    /// current optimizer step.
+    /// Capture `live`'s weights at its current optimizer step, sharded
+    /// [`DEFAULT_SHARDS`] ways. Moments are dropped.
     pub fn capture(live: &ModelState) -> ModelSnapshot {
-        let strip = |t: &EmbeddingTable| EmbeddingTable {
-            rows: t.rows,
-            dim: t.dim,
-            data: t.data.clone(),
-            m: Vec::new(),
-            v: Vec::new(),
+        Self::capture_sharded(live, DEFAULT_SHARDS)
+    }
+
+    /// [`ModelSnapshot::capture`] with an explicit shard count (parity
+    /// suites sweep it; serving is deterministic across all values).
+    pub fn capture_sharded(live: &ModelState, n_shards: usize) -> ModelSnapshot {
+        Self::capture_with_fusion(live, n_shards, None)
+    }
+
+    /// Full capture that also stamps semantic-fusion provenance — the
+    /// trainer's publish path uses this so a fusion-trained model cannot
+    /// be served against the wrong (or no) semantic source.
+    pub fn capture_with_fusion(
+        live: &ModelState,
+        n_shards: usize,
+        fusion: Option<&str>,
+    ) -> ModelSnapshot {
+        let statics = SnapshotStatics {
+            model: live.model.clone(),
+            ent_dim: live.ent_dim,
+            rel_dim: live.rel_dim,
+            repr_dim: live.repr_dim,
+            dense_keys: live.dense.keys().cloned().collect(),
+            dense_shapes: live.dense.values().map(|p| p.shape.clone()).collect(),
+            fusion: fusion.map(str::to_string),
         };
-        let dense = live
-            .dense
-            .iter()
-            .map(|(k, p)| {
-                let p = ParamTensor {
-                    shape: p.shape.clone(),
-                    data: p.data.clone(),
-                    m: Vec::new(),
-                    v: Vec::new(),
-                };
-                (k.clone(), p)
-            })
-            .collect();
         ModelSnapshot {
-            state: ModelState {
-                model: live.model.clone(),
-                ent_dim: live.ent_dim,
-                rel_dim: live.rel_dim,
-                repr_dim: live.repr_dim,
-                entities: strip(&live.entities),
-                relations: strip(&live.relations),
-                dense,
-                step: live.step,
-            },
+            statics: Arc::new(statics),
+            entities: ShardedTable::capture(&live.entities, n_shards),
+            relations: ShardedTable::capture(&live.relations, n_shards),
+            dense: live.dense.values().map(|p| p.data.clone()).collect(),
+            step: live.step,
         }
     }
 
-    /// The frozen weights, shaped like a [`ModelState`] so the engine's
-    /// forward plane runs over it unchanged. The moments are empty — only
-    /// forward reads (rows, gathers, dense params) are valid.
-    pub fn state(&self) -> &ModelState {
-        &self.state
+    /// COW capture against `prev`: share statics and untouched
+    /// shards/pages, re-materialize only the pages holding rows in
+    /// `live.dirty`. Returns `None` when the delta would not be faithful —
+    /// the dirty baseline is not `prev`'s step, or identity/shape/fusion
+    /// drifted — in which case the caller takes the full-capture path.
+    pub fn delta_from(
+        prev: &ModelSnapshot,
+        live: &ModelState,
+        fusion: Option<&str>,
+    ) -> Option<(ModelSnapshot, DeltaStats)> {
+        if live.dirty.baseline != Some(prev.step) {
+            return None;
+        }
+        let st = &prev.statics;
+        if st.model != live.model
+            || st.ent_dim != live.ent_dim
+            || st.rel_dim != live.rel_dim
+            || st.repr_dim != live.repr_dim
+            || st.fusion.as_deref() != fusion
+            || prev.entities.rows() != live.entities.rows
+            || prev.relations.rows() != live.relations.rows
+            || st.dense_keys.len() != live.dense.len()
+            || !st.dense_keys.iter().zip(live.dense.keys()).all(|(a, b)| a == b)
+        {
+            return None;
+        }
+        let (entities, es) = ShardedTable::delta(&prev.entities, &live.entities, &live.dirty.ent);
+        let (relations, rs) =
+            ShardedTable::delta(&prev.relations, &live.relations, &live.dirty.rel);
+        let stats = DeltaStats {
+            rows_copied: es.rows_copied + rs.rows_copied,
+            bytes_copied: es.bytes_copied + rs.bytes_copied,
+            shards_touched: es.shards_touched + rs.shards_touched,
+        };
+        let snap = ModelSnapshot {
+            statics: Arc::clone(&prev.statics),
+            entities,
+            relations,
+            dense: live.dense.values().map(|p| p.data.clone()).collect(),
+            step: live.step,
+        };
+        Some((snap, stats))
+    }
+
+    pub fn model(&self) -> &str {
+        &self.statics.model
+    }
+
+    pub fn ent_dim(&self) -> usize {
+        self.statics.ent_dim
+    }
+
+    pub fn rel_dim(&self) -> usize {
+        self.statics.rel_dim
+    }
+
+    pub fn repr_dim(&self) -> usize {
+        self.statics.repr_dim
+    }
+
+    pub fn n_entities(&self) -> usize {
+        self.entities.rows()
+    }
+
+    pub fn n_relations(&self) -> usize {
+        self.relations.rows()
+    }
+
+    /// Semantic-fusion provenance stamped at capture (encoder name).
+    pub fn fusion(&self) -> Option<&str> {
+        self.statics.fusion.as_deref()
+    }
+
+    pub fn entities(&self) -> &ShardedTable {
+        &self.entities
+    }
+
+    pub fn relations(&self) -> &ShardedTable {
+        &self.relations
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.entities.n_shards()
+    }
+
+    /// Dense weights by param name (sorted-key binary search).
+    pub fn dense(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        let i = self.statics.dense_keys.binary_search_by(|k| k.as_str().cmp(name)).ok()?;
+        Some((&self.statics.dense_shapes[i][..], &self.dense[i][..]))
+    }
+
+    /// Mirrors [`ModelState::params_for_pooled`] over the snapshot's dense
+    /// directory — same push-on-success contract so error paths keep
+    /// already-checked-out blocks with the caller.
+    pub fn params_for_pooled(
+        &self,
+        names: impl Iterator<Item = impl AsRef<str>>,
+        pool: &TensorPool,
+        out: &mut Vec<HostTensor>,
+    ) -> Result<()> {
+        for n in names {
+            let n = n.as_ref();
+            let i = self
+                .statics
+                .dense_keys
+                .binary_search_by(|k| k.as_str().cmp(n))
+                .map_err(|_| anyhow::anyhow!("unknown dense param {n:?}"))?;
+            let mut t = pool.checkout_dirty(&self.statics.dense_shapes[i]);
+            t.data.copy_from_slice(&self.dense[i]);
+            out.push(t);
+        }
+        Ok(())
+    }
+
+    /// The `Arc`'d statics block (publish-sharing diagnostics).
+    pub fn statics_handle(&self) -> &Arc<SnapshotStatics> {
+        &self.statics
     }
 
     /// Optimizer step at capture time (serving telemetry / staleness).
     pub fn step(&self) -> u64 {
-        self.state.step
+        self.step
     }
 
-    /// Resident bytes of the snapshot (weights only — no moments).
+    /// Resident weight bytes (no moments). Shared pages are counted once
+    /// per snapshot — this is the logical size, not the delta cost; see
+    /// [`SnapshotCell::publish_totals`] for what publishes actually copy.
     pub fn bytes(&self) -> usize {
-        (self.state.entities.data.len() + self.state.relations.data.len()) * 4
-            + self.state.dense.values().map(|p| p.data.len() * 4).sum::<usize>()
+        self.entities.bytes()
+            + self.relations.bytes()
+            + self.dense.iter().map(|d| d.len() * 4).sum::<usize>()
     }
+}
+
+/// A borrowed view of model weights the execution planes read through:
+/// either the trainer's live flat [`ModelState`] or a published sharded
+/// [`ModelSnapshot`]. All reads route to bitwise-identical row data, so
+/// the engine produces identical results over both — the view only
+/// changes where rows live in memory.
+#[derive(Clone, Copy)]
+pub enum WeightsView<'a> {
+    Flat(&'a ModelState),
+    Sharded(&'a ModelSnapshot),
+}
+
+impl<'a> WeightsView<'a> {
+    pub fn model(&self) -> &'a str {
+        match *self {
+            WeightsView::Flat(s) => &s.model,
+            WeightsView::Sharded(s) => &s.statics.model,
+        }
+    }
+
+    pub fn ent_dim(&self) -> usize {
+        match *self {
+            WeightsView::Flat(s) => s.ent_dim,
+            WeightsView::Sharded(s) => s.statics.ent_dim,
+        }
+    }
+
+    pub fn rel_dim(&self) -> usize {
+        match *self {
+            WeightsView::Flat(s) => s.rel_dim,
+            WeightsView::Sharded(s) => s.statics.rel_dim,
+        }
+    }
+
+    pub fn repr_dim(&self) -> usize {
+        match *self {
+            WeightsView::Flat(s) => s.repr_dim,
+            WeightsView::Sharded(s) => s.statics.repr_dim,
+        }
+    }
+
+    pub fn n_entities(&self) -> usize {
+        match *self {
+            WeightsView::Flat(s) => s.entities.rows,
+            WeightsView::Sharded(s) => s.entities.rows(),
+        }
+    }
+
+    pub fn n_relations(&self) -> usize {
+        match *self {
+            WeightsView::Flat(s) => s.relations.rows,
+            WeightsView::Sharded(s) => s.relations.rows(),
+        }
+    }
+
+    /// Entity-row gather into a pooled `[bucket, dim]` block.
+    pub fn gather_entities_pooled(
+        &self,
+        ids: &[u32],
+        bucket: usize,
+        pool: &TensorPool,
+    ) -> HostTensor {
+        match *self {
+            WeightsView::Flat(s) => s.entities.gather_pooled(ids, bucket, pool),
+            WeightsView::Sharded(s) => s.entities.gather_pooled(ids, bucket, pool),
+        }
+    }
+
+    /// Nested (negative-sample) entity gather into `[bucket, per, dim]`.
+    pub fn gather_entities_nested_pooled(
+        &self,
+        ids: &[&[u32]],
+        bucket: usize,
+        per: usize,
+        pool: &TensorPool,
+    ) -> HostTensor {
+        match *self {
+            WeightsView::Flat(s) => s.entities.gather_nested_pooled(ids, bucket, per, pool),
+            WeightsView::Sharded(s) => s.entities.gather_nested_pooled(ids, bucket, per, pool),
+        }
+    }
+
+    /// Relation-row gather into a pooled `[bucket, dim]` block.
+    pub fn gather_relations_pooled(
+        &self,
+        ids: &[u32],
+        bucket: usize,
+        pool: &TensorPool,
+    ) -> HostTensor {
+        match *self {
+            WeightsView::Flat(s) => s.relations.gather_pooled(ids, bucket, pool),
+            WeightsView::Sharded(s) => s.relations.gather_pooled(ids, bucket, pool),
+        }
+    }
+
+    /// Dense params for an artifact's param-arg list, pooled.
+    pub fn params_for_pooled(
+        &self,
+        names: impl Iterator<Item = impl AsRef<str>>,
+        pool: &TensorPool,
+        out: &mut Vec<HostTensor>,
+    ) -> Result<()> {
+        match *self {
+            WeightsView::Flat(s) => s.params_for_pooled(names, pool, out),
+            WeightsView::Sharded(s) => s.params_for_pooled(names, pool, out),
+        }
+    }
+}
+
+/// What one [`SnapshotCell::publish_from`] call did.
+#[derive(Debug, Clone, Copy)]
+pub struct PublishReport {
+    /// `true` when the COW delta path ran; `false` for a full capture
+    pub delta: bool,
+    /// weight bytes materialized for this snapshot (embedding pages
+    /// rebuilt + dense copies; delta path excludes everything shared)
+    pub bytes_copied: usize,
+    /// embedding rows materialized (page write amplification included)
+    pub rows_copied: usize,
+}
+
+/// Monotone totals across every [`SnapshotCell::publish_from`] call —
+/// mirrored into the serve tier's Prometheus counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PublishTotals {
+    pub delta_publishes: u64,
+    pub full_publishes: u64,
+    pub bytes_copied: u64,
+    pub rows_copied: u64,
 }
 
 /// The train→serve publish point: an atomically swappable
 /// `Arc<ModelSnapshot>`. One trainer publishes; any number of serve workers
 /// load. Loads are wait-free in practice (a read lock + `Arc` clone);
-/// publishes swap a pointer — the snapshot copy itself happens on the
+/// publishes swap a pointer — the snapshot construction happens on the
 /// trainer's thread *before* the lock is taken.
 pub struct SnapshotCell {
     cur: RwLock<Arc<ModelSnapshot>>,
     /// publishes since construction (the initial snapshot counts as 1)
     published: AtomicU64,
+    delta_publishes: AtomicU64,
+    full_publishes: AtomicU64,
+    published_bytes: AtomicU64,
+    published_rows: AtomicU64,
 }
 
 impl SnapshotCell {
@@ -108,13 +399,58 @@ impl SnapshotCell {
         SnapshotCell {
             cur: RwLock::new(Arc::new(first)),
             published: AtomicU64::new(1),
+            delta_publishes: AtomicU64::new(0),
+            full_publishes: AtomicU64::new(0),
+            published_bytes: AtomicU64::new(0),
+            published_rows: AtomicU64::new(0),
         }
     }
 
-    /// Swap the served snapshot. Readers that already loaded the previous
-    /// one keep it alive until their batch completes (no torn reads).
+    /// Swap in a caller-built snapshot (always counts as a manual publish;
+    /// no delta accounting). Readers that already loaded the previous one
+    /// keep it alive until their batch completes (no torn reads).
     pub fn publish(&self, snap: ModelSnapshot) {
-        let snap = Arc::new(snap);
+        self.swap(Arc::new(snap));
+    }
+
+    /// Publish `state`'s current weights, taking the COW delta path when
+    /// the dirty-row tracking lines up with the previously published
+    /// snapshot (and falling back to a bitwise-identical full capture when
+    /// it does not). Resets the dirty sets and re-anchors their baseline
+    /// at `state.step` either way.
+    pub fn publish_from(&self, state: &mut ModelState, fusion: Option<&str>) -> PublishReport {
+        let prev = self.load();
+        let dense_bytes: usize = state.dense.values().map(|p| p.data.len() * 4).sum();
+        let (snap, report) = match ModelSnapshot::delta_from(&prev, state, fusion) {
+            Some((snap, stats)) => {
+                self.delta_publishes.fetch_add(1, Ordering::Relaxed);
+                let report = PublishReport {
+                    delta: true,
+                    bytes_copied: stats.bytes_copied + dense_bytes,
+                    rows_copied: stats.rows_copied,
+                };
+                (snap, report)
+            }
+            None => {
+                let snap =
+                    ModelSnapshot::capture_with_fusion(state, prev.n_shards(), fusion);
+                self.full_publishes.fetch_add(1, Ordering::Relaxed);
+                let report = PublishReport {
+                    delta: false,
+                    bytes_copied: snap.bytes(),
+                    rows_copied: state.entities.rows + state.relations.rows,
+                };
+                (snap, report)
+            }
+        };
+        self.published_bytes.fetch_add(report.bytes_copied as u64, Ordering::Relaxed);
+        self.published_rows.fetch_add(report.rows_copied as u64, Ordering::Relaxed);
+        state.dirty.reset_to(state.step);
+        self.swap(Arc::new(snap));
+        report
+    }
+
+    fn swap(&self, snap: Arc<ModelSnapshot>) {
         // a panic can't poison meaningfully here (the critical section is
         // one pointer store), so recover like the tensor pool does
         *self.cur.write().unwrap_or_else(PoisonError::into_inner) = snap;
@@ -129,6 +465,17 @@ impl SnapshotCell {
     /// Total snapshots published (monotone; starts at 1).
     pub fn published(&self) -> u64 {
         self.published.load(Ordering::SeqCst)
+    }
+
+    /// Monotone [`SnapshotCell::publish_from`] accounting (delta vs full
+    /// counts, bytes/rows actually copied).
+    pub fn publish_totals(&self) -> PublishTotals {
+        PublishTotals {
+            delta_publishes: self.delta_publishes.load(Ordering::Relaxed),
+            full_publishes: self.full_publishes.load(Ordering::Relaxed),
+            bytes_copied: self.published_bytes.load(Ordering::Relaxed),
+            rows_copied: self.published_rows.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -148,11 +495,11 @@ mod tests {
         st.step = 7;
         st.entities.m[0] = 0.5; // moments must NOT survive capture
         let snap = ModelSnapshot::capture(&st);
-        assert_eq!(snap.state().entities.data, st.entities.data);
-        assert_eq!(snap.state().relations.data, st.relations.data);
-        assert!(snap.state().entities.m.is_empty());
-        assert!(snap.state().entities.v.is_empty());
+        assert_eq!(snap.entities().to_flat(), st.entities.data);
+        assert_eq!(snap.relations().to_flat(), st.relations.data);
+        assert_eq!(snap.n_shards(), DEFAULT_SHARDS);
         assert_eq!(snap.step(), 7);
+        // weights only: 10x4 entities + 4x4 relations, no moments
         assert_eq!(snap.bytes(), (10 * 4 + 4 * 4) * 4);
     }
 
@@ -160,9 +507,9 @@ mod tests {
     fn capture_is_isolated_from_later_training() {
         let mut st = live();
         let snap = ModelSnapshot::capture(&st);
-        let before = snap.state().entities.data.clone();
+        let before = snap.entities().to_flat();
         st.entities.data.iter_mut().for_each(|x| *x += 1.0);
-        assert_eq!(snap.state().entities.data, before, "snapshot must not alias");
+        assert_eq!(snap.entities().to_flat(), before, "snapshot must not alias");
     }
 
     #[test]
@@ -186,5 +533,115 @@ mod tests {
         cell.publish(ModelSnapshot::capture(&st));
         assert_eq!(pinned.step(), 0, "a reader's pin outlives the swap");
         assert_eq!(cell.load().step(), 9);
+    }
+
+    #[test]
+    fn publish_from_takes_the_delta_path_and_matches_a_full_capture() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        // simulate one optimize step touching two entity rows + one relation
+        st.dirty.reset_to(0);
+        st.step = 1;
+        for id in [2u32, 7] {
+            st.dirty.ent.insert(id);
+            st.entities.data[id as usize * 4] = 42.0;
+        }
+        st.dirty.rel.insert(1);
+        st.relations.data[4] = -3.0;
+        let report = cell.publish_from(&mut st, None);
+        assert!(report.delta, "aligned baseline must take the delta path");
+        assert!(report.rows_copied < st.entities.rows + st.relations.rows);
+
+        let snap = cell.load();
+        let full = ModelSnapshot::capture(&st);
+        assert_eq!(snap.entities().to_flat(), full.entities().to_flat());
+        assert_eq!(snap.relations().to_flat(), full.relations().to_flat());
+        assert_eq!(snap.step(), 1);
+        // dirty sets were consumed and re-anchored at the published step
+        assert!(st.dirty.ent.is_empty());
+        assert_eq!(st.dirty.baseline, Some(1));
+        let totals = cell.publish_totals();
+        assert_eq!(totals.delta_publishes, 1);
+        assert_eq!(totals.full_publishes, 0);
+        assert_eq!(totals.rows_copied, report.rows_copied as u64);
+    }
+
+    #[test]
+    fn consecutive_delta_publishes_share_statics() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        let first = cell.load();
+        st.dirty.reset_to(0);
+        st.step = 1;
+        st.dirty.ent.insert(3);
+        st.entities.data[12] = 5.0;
+        cell.publish_from(&mut st, None);
+        let second = cell.load();
+        assert!(
+            Arc::ptr_eq(first.statics_handle(), second.statics_handle()),
+            "delta publishes must not re-clone the statics block"
+        );
+    }
+
+    #[test]
+    fn publish_from_falls_back_to_full_without_a_baseline() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        st.step = 1; // fresh init: dirty.baseline is None
+        let report = cell.publish_from(&mut st, None);
+        assert!(!report.delta);
+        assert_eq!(cell.publish_totals().full_publishes, 1);
+        // but the fallback re-anchors tracking, so the next publish deltas
+        st.step = 2;
+        st.dirty.ent.insert(0);
+        st.entities.data[0] = 1.5;
+        assert!(cell.publish_from(&mut st, None).delta);
+    }
+
+    #[test]
+    fn fusion_provenance_is_stamped_and_breaks_delta_compat() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        assert_eq!(cell.load().fusion(), None);
+        st.dirty.reset_to(0);
+        st.step = 1;
+        // same weights, but now published as fusion-trained: the delta
+        // would silently change provenance, so it must fall back
+        let report = cell.publish_from(&mut st, Some("minilm"));
+        assert!(!report.delta);
+        assert_eq!(cell.load().fusion(), Some("minilm"));
+        // once stamped, deltas resume under the same provenance
+        st.step = 2;
+        st.dirty.ent.insert(1);
+        st.entities.data[4] = 9.0;
+        assert!(cell.publish_from(&mut st, Some("minilm")).delta);
+        assert_eq!(cell.load().fusion(), Some("minilm"));
+    }
+
+    #[test]
+    fn dense_params_publish_by_copy_and_resolve_by_name() {
+        let mut st = live();
+        st.dense.insert(
+            "proj.w".into(),
+            crate::model::ParamTensor {
+                shape: vec![2, 2],
+                data: vec![1.0, 2.0, 3.0, 4.0],
+                m: vec![0.0; 4],
+                v: vec![0.0; 4],
+            },
+        );
+        let snap = ModelSnapshot::capture(&st);
+        let (shape, data) = snap.dense("proj.w").expect("dense param present");
+        assert_eq!(shape, &[2, 2]);
+        assert_eq!(data, &[1.0, 2.0, 3.0, 4.0]);
+        assert!(snap.dense("missing").is_none());
+        let pool = TensorPool::new();
+        let mut out = Vec::new();
+        snap.params_for_pooled(["proj.w"].iter(), &pool, &mut out).unwrap();
+        assert_eq!(out[0].shape, vec![2, 2]);
+        assert_eq!(out[0].data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(snap
+            .params_for_pooled(["nope"].iter(), &pool, &mut out)
+            .is_err());
     }
 }

@@ -7,12 +7,43 @@
 //! loaded from the deterministic binaries `aot.py` exports so that Rust and
 //! JAX start from identical values.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{HostTensor, Manifest};
 use crate::util::rng::Rng;
+
+/// Embedding rows mutated since the last snapshot publish — the delta a
+/// [`crate::model::SnapshotCell::publish_from`] COW publish copies.
+///
+/// `baseline` is the optimizer step of the snapshot the dirty sets are
+/// relative to. `None` means the tables may have changed in ways the
+/// optimizer did not record (fresh init, checkpoint restore, manual
+/// surgery), so the next publish must fall back to a full capture.
+#[derive(Debug, Clone, Default)]
+pub struct DirtyRows {
+    pub ent: HashSet<u32>,
+    pub rel: HashSet<u32>,
+    pub baseline: Option<u64>,
+}
+
+impl DirtyRows {
+    /// Forget everything and force the next publish to a full capture.
+    pub fn invalidate(&mut self) {
+        self.ent.clear();
+        self.rel.clear();
+        self.baseline = None;
+    }
+
+    /// Clear the sets and re-anchor the delta at `step` (called by the
+    /// publish path right after a snapshot of that step went live).
+    pub fn reset_to(&mut self, step: u64) {
+        self.ent.clear();
+        self.rel.clear();
+        self.baseline = Some(step);
+    }
+}
 
 /// A dense `[rows, dim]` embedding table with lazily allocated Adam moments.
 #[derive(Debug, Clone)]
@@ -135,6 +166,9 @@ pub struct ModelState {
     pub dense: BTreeMap<String, ParamTensor>,
     /// optimizer step counter (Adam bias correction)
     pub step: u64,
+    /// embedding rows touched since the last snapshot publish (the
+    /// optimizer records them; delta publishes consume them)
+    pub dirty: DirtyRows,
 }
 
 impl ModelState {
@@ -181,6 +215,7 @@ impl ModelState {
             relations,
             dense,
             step: 0,
+            dirty: DirtyRows::default(),
         })
     }
 

@@ -29,8 +29,24 @@
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+
+/// Process-wide pool for request-scoped parallel work that is *not* a host
+/// kernel — the serve tier's per-shard top-k selection runs here so every
+/// worker thread shares one set of helpers instead of each spawning its
+/// own. Sized to the machine minus the submitting thread (capped — shard
+/// counts are small, and the contended-`run` fallback already computes
+/// inline when several serve workers collide). Spawned lazily on first
+/// use, so binaries that never rank pay nothing.
+pub fn shared_pool() -> &'static HostPool {
+    static POOL: OnceLock<HostPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        HostPool::new(cores.saturating_sub(1).min(8))
+    })
+}
 
 /// One broadcast job: a type-erased borrowed closure plus the shared chunk
 /// cursor. All pointers reference stack data of the thread inside

@@ -48,6 +48,14 @@ impl Counter {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Reconcile with an externally-maintained monotone total (the
+    /// snapshot cell's publish counters): keep the max, so concurrent
+    /// workers re-reporting the same total never double-count and the
+    /// counter never runs backwards.
+    pub fn record_total(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -212,6 +220,25 @@ pub struct ServeMetrics {
     pub latency: Histogram,
     /// optimizer step of the most recently served snapshot
     pub snapshot_step: Gauge,
+    // -- sharded store / snapshot publishing. Per-shard row counts are
+    // NOT stored per shard: modulo routing makes them a pure function of
+    // (total rows, shard count), so three gauges reconstruct the whole
+    // labelled family at render time — the hot path stays three atomic
+    // stores per batch, no locks, no label formatting.
+    /// shard count of the most recently served snapshot (0 = none served)
+    pub shard_count: Gauge,
+    /// entity rows of the most recently served snapshot
+    pub shard_ent_rows: Gauge,
+    /// relation rows of the most recently served snapshot
+    pub shard_rel_rows: Gauge,
+    /// delta (COW) snapshot publishes, mirrored from the snapshot cell
+    pub publish_delta_total: Counter,
+    /// full-capture snapshot publishes, mirrored from the snapshot cell
+    pub publish_full_total: Counter,
+    /// embedding bytes actually copied across all publishes
+    pub published_bytes_total: Counter,
+    /// embedding rows actually copied across all publishes
+    pub published_rows_total: Counter,
 }
 
 impl Default for ServeMetrics {
@@ -241,7 +268,31 @@ impl ServeMetrics {
             failed: Counter::default(),
             latency: Histogram::new(&LATENCY_BOUNDS),
             snapshot_step: Gauge::default(),
+            shard_count: Gauge::default(),
+            shard_ent_rows: Gauge::default(),
+            shard_rel_rows: Gauge::default(),
+            publish_delta_total: Counter::default(),
+            publish_full_total: Counter::default(),
+            published_bytes_total: Counter::default(),
+            published_rows_total: Counter::default(),
         }
+    }
+
+    /// Record the served snapshot's shard topology (three atomic stores;
+    /// the per-shard gauge family is reconstructed at render time).
+    pub fn record_shard_topology(&self, n_shards: usize, ent_rows: usize, rel_rows: usize) {
+        self.shard_count.set(n_shards as i64);
+        self.shard_ent_rows.set(ent_rows as i64);
+        self.shard_rel_rows.set(rel_rows as i64);
+    }
+
+    /// Mirror the snapshot cell's cumulative publish accounting into the
+    /// scrape registry (monotone reconcile — see [`Counter::record_total`]).
+    pub fn record_publish_totals(&self, t: &crate::model::PublishTotals) {
+        self.publish_delta_total.record_total(t.delta_publishes);
+        self.publish_full_total.record_total(t.full_publishes);
+        self.published_bytes_total.record_total(t.bytes_copied);
+        self.published_rows_total.record_total(t.rows_copied);
     }
 
     pub fn submitted(&self, lane: Lane) -> &Counter {
@@ -348,6 +399,51 @@ impl ServeMetrics {
             "ngdb_serve_snapshot_step",
             "Optimizer step of the most recently served model snapshot.",
             self.snapshot_step.get(),
+        );
+        // per-shard row gauges, reconstructed from the modulo layout; the
+        // family is omitted entirely until a batch has been served — a
+        // declared family with no samples fails exposition validation
+        let n_shards = self.shard_count.get().max(0) as usize;
+        if n_shards > 0 {
+            let layout = crate::model::ShardLayout::new(n_shards);
+            out.push_str(
+                "# HELP ngdb_serve_shard_rows Embedding rows per shard of the \
+                 served snapshot, by table.\n\
+                 # TYPE ngdb_serve_shard_rows gauge\n",
+            );
+            for (table, total) in [
+                ("ent", self.shard_ent_rows.get().max(0) as usize),
+                ("rel", self.shard_rel_rows.get().max(0) as usize),
+            ] {
+                for s in 0..n_shards {
+                    out.push_str(&format!(
+                        "ngdb_serve_shard_rows{{table=\"{table}\",shard=\"{s}\"}} {}\n",
+                        layout.shard_rows(total, s)
+                    ));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "# HELP ngdb_serve_snapshot_publishes_total Snapshot publishes \
+             observed by the service, by kind (delta = COW against the \
+             previous snapshot; full = complete capture).\n\
+             # TYPE ngdb_serve_snapshot_publishes_total counter\n\
+             ngdb_serve_snapshot_publishes_total{{kind=\"delta\"}} {}\n\
+             ngdb_serve_snapshot_publishes_total{{kind=\"full\"}} {}\n",
+            self.publish_delta_total.get(),
+            self.publish_full_total.get(),
+        ));
+        counter(
+            &mut out,
+            "ngdb_serve_snapshot_published_bytes_total",
+            "Embedding bytes actually copied across all snapshot publishes.",
+            self.published_bytes_total.get(),
+        );
+        counter(
+            &mut out,
+            "ngdb_serve_snapshot_published_rows_total",
+            "Embedding rows actually copied across all snapshot publishes.",
+            self.published_rows_total.get(),
         );
         histogram(
             &mut out,
@@ -562,6 +658,10 @@ mod tests {
         m.answered.inc();
         m.latency.observe(0.003);
         m.batch_fill.observe(4.0);
+        // no batch served yet: the shard family must be absent entirely
+        // (a declared family with no samples fails exposition validation)
+        assert!(!m.render_prometheus().contains("ngdb_serve_shard_rows"));
+        m.record_shard_topology(4, 10, 6);
         let text = m.render_prometheus();
         for needle in [
             "# TYPE ngdb_serve_submitted_total counter",
@@ -571,6 +671,13 @@ mod tests {
             "ngdb_serve_latency_seconds_count 1",
             "ngdb_serve_latency_seconds_est{quantile=\"0.99\"}",
             "# TYPE ngdb_serve_queue_depth gauge",
+            "# TYPE ngdb_serve_shard_rows gauge",
+            // 10 entity rows over 4 shards: shards 0/1 hold 3, shards 2/3 hold 2
+            "ngdb_serve_shard_rows{table=\"ent\",shard=\"0\"} 3",
+            "ngdb_serve_shard_rows{table=\"ent\",shard=\"3\"} 2",
+            "ngdb_serve_shard_rows{table=\"rel\",shard=\"1\"} 2",
+            "ngdb_serve_snapshot_publishes_total{kind=\"delta\"} 0",
+            "# TYPE ngdb_serve_snapshot_published_bytes_total counter",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
@@ -581,6 +688,29 @@ mod tests {
             assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
             assert!(parts.next().is_some(), "no metric name in {line:?}");
         }
+    }
+
+    #[test]
+    fn publish_totals_reconcile_monotonically() {
+        let m = ServeMetrics::new();
+        m.record_publish_totals(&crate::model::PublishTotals {
+            delta_publishes: 5,
+            full_publishes: 1,
+            bytes_copied: 4096,
+            rows_copied: 32,
+        });
+        // a worker re-reporting an older observation must not double-count
+        // or roll anything back
+        m.record_publish_totals(&crate::model::PublishTotals {
+            delta_publishes: 3,
+            full_publishes: 1,
+            bytes_copied: 2048,
+            rows_copied: 16,
+        });
+        assert_eq!(m.publish_delta_total.get(), 5);
+        assert_eq!(m.publish_full_total.get(), 1);
+        assert_eq!(m.published_bytes_total.get(), 4096);
+        assert_eq!(m.published_rows_total.get(), 32);
     }
 
     #[test]

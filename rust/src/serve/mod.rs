@@ -81,23 +81,39 @@
 //! writes `BENCH_serve_latency.json` (p50/p95/p99 latency + QPS); CI gates
 //! micro-batched throughput at ≥ 2× the batch=1 baseline.
 //!
-//! **Limitation — semantic fusion (§4.4) is not served yet.** Worker
-//! sessions are plain [`crate::exec::ForwardSession::new`]: a model
-//! *trained* with a semantic source would be served without its fused
-//! EmbedE path (answers would diverge from `eval::rank::evaluate` run
-//! `with_semantic`). Snapshots do not record fusion provenance, so the
-//! service cannot reject such models on its own — do not point a
-//! `QueryService` at a fusion-trained snapshot until the ROADMAP
-//! follow-up (an `Arc`-shared `SemanticSource` threaded through
-//! [`ServeConfig`]) lands. [`crate::exec::ForwardSession::with_semantic`]
-//! is the forward-plane half of that wiring, available today for callers
-//! driving forward sessions by hand.
+//! # Semantic fusion (§4.4)
+//!
+//! A model *trained* with a semantic source must be *served* with the same
+//! one, or answers diverge from `eval::rank::evaluate` run
+//! `with_semantic`. [`ServeConfig::semantic`] threads an `Arc`-shared
+//! [`crate::semantic::SemanticSource`] into every worker's
+//! [`crate::exec::ForwardSession::with_semantic`], and snapshots stamp
+//! their fusion provenance (the encoder name the trainer published with —
+//! [`crate::model::ModelSnapshot::fusion`]). The pairing is enforced, not
+//! assumed: a batch whose pinned snapshot's provenance does not match the
+//! service's source is answered with a typed
+//! [`ServeError::FusionMismatch`] — a fusion-trained snapshot can no
+//! longer be silently served without its fused EmbedE path, nor vice
+//! versa.
+//!
+//! # Sharded ranking
+//!
+//! Snapshots arrive hash-sharded ([`crate::model::ShardedTable`]); workers
+//! score each shard's local-contiguous rows through the same chunked eval
+//! artifact, select a per-shard top-k in parallel on the process-wide
+//! [`crate::runtime::parallel::shared_pool`], and k-way merge under the
+//! total order (score descending, lower id first). Every per-entity score
+//! is an independent dot product, so answers are **bitwise identical** to
+//! the flat sweep for every shard and worker count —
+//! `rust/tests/shard_parity.rs` pins this.
 
 pub mod metrics;
 pub mod service;
 
 pub use metrics::ServeMetrics;
-pub use service::{PendingQuery, QueryService, ServeClient, WindowController};
+pub use service::{
+    select_top_k, PendingQuery, QueryService, ServeClient, WindowController,
+};
 
 use std::time::Duration;
 
@@ -165,6 +181,10 @@ pub enum ServeError {
     Rejected(String),
     /// A batch-wide execution failure took this request down with it.
     Failed(String),
+    /// The pinned snapshot's fusion provenance does not match the
+    /// service's semantic source: serving would silently change scores.
+    /// `None` means "no fusion" on that side.
+    FusionMismatch { snapshot: Option<String>, source: Option<String> },
     /// The service shut down (or dropped the request) before answering.
     Disconnected,
 }
@@ -179,6 +199,12 @@ impl std::fmt::Display for ServeError {
             ),
             ServeError::Rejected(msg) => write!(f, "request rejected at admission: {msg}"),
             ServeError::Failed(msg) => write!(f, "serving batch failed: {msg}"),
+            ServeError::FusionMismatch { snapshot, source } => write!(
+                f,
+                "fusion provenance mismatch: snapshot published with {}, service configured with {}",
+                snapshot.as_deref().unwrap_or("no semantic source"),
+                source.as_deref().unwrap_or("no semantic source"),
+            ),
             ServeError::Disconnected => {
                 write!(f, "query service dropped the request (shut down?)")
             }
@@ -189,7 +215,7 @@ impl std::fmt::Display for ServeError {
 impl std::error::Error for ServeError {}
 
 /// Query-service tuning knobs.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct ServeConfig {
     /// forward-session worker threads executing fused batches
     pub workers: usize,
@@ -214,8 +240,32 @@ pub struct ServeConfig {
     /// optional `host:port` to serve [`ServeMetrics::render_prometheus`]
     /// over a tiny blocking scrape endpoint (e.g. `"127.0.0.1:0"`)
     pub metrics_addr: Option<String>,
+    /// semantic source the served model was trained with, if any: workers
+    /// build their forward sessions `with_semantic`, and every batch's
+    /// pinned snapshot must carry matching fusion provenance
+    /// ([`ServeError::FusionMismatch`] otherwise)
+    pub semantic: Option<std::sync::Arc<dyn crate::semantic::SemanticSource>>,
     /// engine config of the per-worker forward sessions
     pub engine: EngineConfig,
+}
+
+// Manual impl: `dyn SemanticSource` is not `Debug`; show its encoder name.
+impl std::fmt::Debug for ServeConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeConfig")
+            .field("workers", &self.workers)
+            .field("max_batch", &self.max_batch)
+            .field("max_wait", &self.max_wait)
+            .field("queue_cap", &self.queue_cap)
+            .field("default_top_k", &self.default_top_k)
+            .field("batch", &self.batch)
+            .field("shed", &self.shed)
+            .field("high_reserve", &self.high_reserve)
+            .field("metrics_addr", &self.metrics_addr)
+            .field("semantic", &self.semantic.as_ref().map(|s| s.encoder()))
+            .field("engine", &self.engine)
+            .finish()
+    }
 }
 
 impl ServeConfig {
@@ -238,6 +288,7 @@ impl Default for ServeConfig {
             shed: ShedPolicy::Block,
             high_reserve: 128,
             metrics_addr: None,
+            semantic: None,
             engine: EngineConfig::default(),
         }
     }

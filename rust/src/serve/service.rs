@@ -23,11 +23,20 @@
 //!   rate and the rolling p99 in the latency histogram.
 //! * Workers pull whole batches, pin one published [`ModelSnapshot`], lower
 //!   every admitted request into **one fused forward DAG**, execute it on a
-//!   per-worker [`ForwardSession`], rank all roots against all entities
-//!   via the shared [`EntityRanker`], and answer each request with its
-//!   filtered top-k. Per-request failures (invalid tree, out-of-range ids,
+//!   per-worker [`ForwardSession`], and rank all roots against all entities
+//!   **shard by shard**: the shared [`EntityRanker`] scores each shard's
+//!   local-contiguous rows through the same chunked eval artifact
+//!   ([`EntityRanker::score_all_sharded`]), per-shard top-k selection runs
+//!   in parallel on the process-wide
+//!   [`crate::runtime::parallel::shared_pool`], and a deterministic merge
+//!   ([`merge_shard_tops`]) reassembles the filtered top-k — bitwise
+//!   identical to the flat [`select_top_k`] sweep for every shard and
+//!   worker count. Per-request failures (invalid tree, out-of-range ids,
 //!   unsupported negation) are answered individually
-//!   ([`ServeError::Rejected`]) and never poison the rest of the batch.
+//!   ([`ServeError::Rejected`]) and never poison the rest of the batch; a
+//!   snapshot whose fusion provenance does not match the service's
+//!   semantic source fails its whole batch with the typed
+//!   [`ServeError::FusionMismatch`].
 //!
 //! # Shutdown
 //!
@@ -55,9 +64,11 @@ use super::metrics::{self, MetricsExporter, ServeMetrics};
 use super::{BatchPolicy, Lane, QueryAnswer, QueryRequest, ServeConfig, ServeError, ShedPolicy};
 use crate::eval::rank::EntityRanker;
 use crate::exec::{EngineConfig, ForwardSession};
-use crate::model::{ModelState, SnapshotCell};
+use crate::model::{ModelSnapshot, SnapshotCell};
 use crate::query::QueryDag;
+use crate::runtime::parallel::shared_pool;
 use crate::runtime::Runtime;
+use crate::semantic::SemanticSource;
 
 /// One queued request with its response channel and enqueue stamp.
 struct Inflight {
@@ -522,7 +533,10 @@ impl QueryService {
                 let m = Arc::clone(&m);
                 let ecfg = cfg.engine.clone();
                 let top_k = cfg.default_top_k;
-                std::thread::spawn(move || worker_loop(rt, snapshots, rx, m, ecfg, top_k))
+                let semantic = cfg.semantic.clone();
+                std::thread::spawn(move || {
+                    worker_loop(rt, snapshots, rx, m, ecfg, top_k, semantic)
+                })
             })
             .collect();
         QueryService {
@@ -623,11 +637,18 @@ fn worker_loop(
     metrics: Arc<ServeMetrics>,
     ecfg: EngineConfig,
     default_top_k: usize,
+    semantic: Option<Arc<dyn SemanticSource>>,
 ) {
     let rt_ref: &dyn Runtime = &*rt;
-    let mut session = ForwardSession::new(rt_ref, ecfg);
+    // fusion-trained models serve through the same fused EmbedE artifacts
+    // they trained with; the provenance string gates every batch below
+    let mut session = match semantic.as_deref() {
+        Some(src) => ForwardSession::with_semantic(rt_ref, ecfg, src),
+        None => ForwardSession::new(rt_ref, ecfg),
+    };
+    let fusion = semantic.as_deref().map(|s| s.encoder().to_string());
     let mut ranker = EntityRanker::new();
-    let mut scores: Vec<f32> = Vec::new();
+    let mut scratch = RankScratch::default();
     let mut filtered: Vec<bool> = Vec::new();
     loop {
         let batch = {
@@ -641,26 +662,38 @@ fn worker_loop(
             rt_ref,
             &mut session,
             &mut ranker,
-            &mut scores,
+            &mut scratch,
             &mut filtered,
             &snapshots,
             &metrics,
             batch,
             default_top_k,
+            fusion.as_deref(),
         );
     }
+}
+
+/// Per-worker scatter-gather scratch, recycled across batches: the
+/// per-shard score buffers the ranker fills, the per-shard top-k candidate
+/// slots (mutexed for the pooled selection pass — uncontended: each shard
+/// is locked exactly once per request), and the merge buffer.
+#[derive(Default)]
+struct RankScratch {
+    shard_scores: Vec<Vec<f32>>,
+    cands: Vec<Mutex<Vec<(u32, f32)>>>,
+    merged: Vec<(u32, f32)>,
 }
 
 /// Admission: structural validity, operator support, id ranges — checked
 /// *before* lowering so a rejected request never leaves orphan nodes in
 /// the batch's fused DAG.
-fn admit(req: &QueryRequest, state: &ModelState, supports_neg: bool) -> Result<()> {
+fn admit(req: &QueryRequest, snap: &ModelSnapshot, supports_neg: bool) -> Result<()> {
     req.tree.validate()?;
     if req.tree.contains_negation() && !supports_neg {
-        bail!("model {} does not support the Negate operator", state.model);
+        bail!("model {} does not support the Negate operator", snap.model());
     }
-    let n_ent = state.entities.rows as u32;
-    let n_rel = state.relations.rows as u32;
+    let n_ent = snap.n_entities() as u32;
+    let n_rel = snap.n_relations() as u32;
     let (max_a, max_r) = req.tree.max_ids(); // allocation-free walk
     if let Some(a) = max_a.filter(|&a| a >= n_ent) {
         bail!("anchor entity {a} out of range (model serves {n_ent} entities)");
@@ -671,34 +704,54 @@ fn admit(req: &QueryRequest, state: &ModelState, supports_neg: bool) -> Result<(
     Ok(())
 }
 
-/// Answer one micro-batch: pin a snapshot, fuse, execute, rank, respond.
+/// Answer one micro-batch: pin a snapshot, fuse, execute, rank shard by
+/// shard, merge, respond.
 #[allow(clippy::too_many_arguments)]
 fn serve_batch(
     rt: &dyn Runtime,
     session: &mut ForwardSession<'_>,
     ranker: &mut EntityRanker,
-    scores: &mut Vec<f32>,
+    scratch: &mut RankScratch,
     filtered: &mut Vec<bool>,
     snapshots: &SnapshotCell,
     metrics: &ServeMetrics,
     batch: Vec<Inflight>,
     default_top_k: usize,
+    fusion: Option<&str>,
 ) {
     // one snapshot per batch: every answer in the window is computed
     // against exactly this published state, however often the trainer
     // swaps meanwhile
     let snap = snapshots.load();
-    let state = snap.state();
-    let supports_neg = crate::config::model_supports_negation(&state.model);
-    let n_ent = state.entities.rows;
+    let supports_neg = crate::config::model_supports_negation(snap.model());
+    let n_ent = snap.n_entities();
     metrics.snapshot_step.set(snap.step() as i64);
+    metrics.record_shard_topology(snap.n_shards(), n_ent, snap.n_relations());
+    metrics.record_publish_totals(&snapshots.publish_totals());
+
+    // fusion provenance gate (§4.4): a snapshot published by a
+    // fusion-trained trainer must be served through the same semantic
+    // source — and a plain snapshot must not be served through fused
+    // EmbedE artifacts. Either mismatch silently changes scores, so the
+    // whole batch gets the typed error instead of wrong answers.
+    if snap.fusion() != fusion {
+        let err = ServeError::FusionMismatch {
+            snapshot: snap.fusion().map(str::to_string),
+            source: fusion.map(str::to_string),
+        };
+        metrics.failed.add(batch.len() as u64);
+        for a in batch {
+            let _ = a.resp.send(Err(err.clone()));
+        }
+        return;
+    }
 
     // -- admission + lowering into ONE fused forward DAG
     let mut dag = QueryDag::default();
     let mut admitted: Vec<Inflight> = Vec::with_capacity(batch.len());
     let mut roots: Vec<u32> = Vec::with_capacity(batch.len());
     for inflight in batch {
-        let lowered = admit(&inflight.req, state, supports_neg)
+        let lowered = admit(&inflight.req, &snap, supports_neg)
             .and_then(|()| dag.add_query_eval(&inflight.req.tree, supports_neg));
         match lowered {
             Ok(root) => {
@@ -716,29 +769,56 @@ fn serve_batch(
     }
     let fused = admitted.len();
 
-    // -- forward plane + rank-against-all (shared with eval)
+    // -- forward plane + shard-by-shard rank-against-all
     let reprs = match session.run(&dag, &snap, &roots) {
         Ok((_, reprs)) => reprs,
         Err(e) => return fail_all(admitted, metrics, &e),
     };
-    if let Err(e) = ranker.score_all(rt, state, &reprs, session.pool(), scores) {
+    if let Err(e) =
+        ranker.score_all_sharded(rt, &snap, &reprs, session.pool(), &mut scratch.shard_scores)
+    {
         return fail_all(admitted, metrics, &e);
     }
 
-    // -- per-request filtered top-k
+    // -- per-request filtered top-k: scatter (per-shard selection on the
+    // shared pool) + gather (deterministic merge)
     if filtered.len() != n_ent {
         filtered.clear();
         filtered.resize(n_ent, false);
     }
+    let n_shards = snap.n_shards();
+    if scratch.cands.len() != n_shards {
+        scratch.cands.resize_with(n_shards, Default::default);
+    }
+    let layout = snap.entities().layout();
     for (qi, inflight) in admitted.into_iter().enumerate() {
-        let row = &scores[qi * n_ent..(qi + 1) * n_ent];
         for &e in &inflight.req.filter {
             if (e as usize) < n_ent {
                 filtered[e as usize] = true;
             }
         }
         let k = if inflight.req.top_k == 0 { default_top_k } else { inflight.req.top_k };
-        let top = select_top_k(row, filtered, k);
+        // clamp the client-supplied k: more than n_entities answers cannot
+        // exist, and an unclamped huge k would otherwise drive the
+        // candidate capacity (one hostile request must not panic a worker)
+        let k = k.min(n_ent);
+        {
+            // shard s reads only its own score row and writes only its own
+            // candidate slot; chunk boundaries are fixed by shard index,
+            // so however the pool (or its contended inline fallback)
+            // distributes shards over threads, the candidates are
+            // identical
+            let shard_scores = &scratch.shard_scores;
+            let cands = &scratch.cands;
+            let filt: &[bool] = filtered;
+            shared_pool().run(n_shards, &|s| {
+                let rows_s = layout.shard_rows(n_ent, s);
+                let row = &shard_scores[s][qi * rows_s..(qi + 1) * rows_s];
+                let mut top = cands[s].lock().unwrap_or_else(PoisonError::into_inner);
+                select_top_k_shard(row, s, n_shards, filt, k, &mut top);
+            });
+        }
+        let top = merge_shard_tops(&mut scratch.cands[..n_shards], k, &mut scratch.merged);
         for &e in &inflight.req.filter {
             if (e as usize) < n_ent {
                 filtered[e as usize] = false; // scratch reset for the next request
@@ -772,7 +852,14 @@ fn fail_all(admitted: Vec<Inflight>, metrics: &ServeMetrics, e: &anyhow::Error) 
 /// invariant). Ties break toward the lower entity id — with a fixed
 /// snapshot, answers are deterministic regardless of batching window or
 /// worker count.
-fn select_top_k(row: &[f32], filtered: &[bool], k: usize) -> Vec<(u32, f32)> {
+///
+/// This flat sweep is the *reference order* for the sharded path:
+/// [`select_top_k_shard`] applies the identical selection rules per shard
+/// and [`merge_shard_tops`] reassembles under the same total order, so the
+/// scatter-gather answer is provably (and, in `rust/tests/shard_parity.rs`,
+/// bitwise-verifiably) this function's output. Public for those parity
+/// suites.
+pub fn select_top_k(row: &[f32], filtered: &[bool], k: usize) -> Vec<(u32, f32)> {
     // clamp the client-supplied k: more than n_entities answers cannot
     // exist, and an unclamped huge k would otherwise drive the capacity
     // allocation below (one hostile request must not panic a worker)
@@ -797,6 +884,65 @@ fn select_top_k(row: &[f32], filtered: &[bool], k: usize) -> Vec<(u32, f32)> {
         }
     }
     top
+}
+
+/// Per-shard arm of the scatter-gather selection: the same skip rules and
+/// insertion order as [`select_top_k`], applied to one shard's local score
+/// row, emitting *global* entity ids through the modulo layout. Local
+/// order ascending implies global order ascending within a shard
+/// (`global = local * n_shards + shard`), so tie-breaks match the flat
+/// sweep exactly. `top` is cleared and refilled (capacity reused).
+fn select_top_k_shard(
+    row: &[f32],
+    shard: usize,
+    n_shards: usize,
+    filtered: &[bool],
+    k: usize,
+    top: &mut Vec<(u32, f32)>,
+) {
+    top.clear();
+    let k = k.min(row.len());
+    if k == 0 {
+        return;
+    }
+    for (local, &s) in row.iter().enumerate() {
+        let g = (local * n_shards + shard) as u32;
+        if filtered[g as usize] || !s.is_finite() {
+            continue;
+        }
+        if top.len() == k && s <= top.last().expect("top is non-empty at cap").1 {
+            continue;
+        }
+        let pos = top.partition_point(|&(_, ts)| ts >= s);
+        top.insert(pos, (g, s));
+        if top.len() > k {
+            top.pop();
+        }
+    }
+}
+
+/// Gather phase: merge the per-shard candidate lists under the SAME total
+/// order [`select_top_k`] maintains (score descending, ties toward the
+/// lower entity id) and truncate to `k`. Every entry of the flat top-k has
+/// fewer than `k` entries ordered before it globally — a fortiori within
+/// its own shard — so it survives its shard's selection and the merged
+/// prefix equals the flat sweep's output element for element, bit for bit.
+/// Candidate slots are drained (capacity reused); the returned `Vec` is
+/// the answer's owned buffer.
+fn merge_shard_tops(
+    cands: &mut [Mutex<Vec<(u32, f32)>>],
+    k: usize,
+    merged: &mut Vec<(u32, f32)>,
+) -> Vec<(u32, f32)> {
+    merged.clear();
+    for c in cands {
+        merged.extend(c.get_mut().unwrap_or_else(PoisonError::into_inner).drain(..));
+    }
+    merged.sort_unstable_by(|a, b| {
+        b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0))
+    });
+    merged.truncate(k);
+    merged.clone()
 }
 
 #[cfg(test)]
@@ -839,6 +985,46 @@ mod tests {
         assert_eq!(top, vec![(4, 7.0), (2, 5.0)], "filtered ids never answer");
         assert!(select_top_k(&row, &filtered, 0).is_empty());
         assert_eq!(select_top_k(&row, &filtered, 9).len(), 5, "k caps at n_ent");
+    }
+
+    #[test]
+    fn shard_selection_and_merge_match_the_flat_sweep() {
+        // a hostile row: score ties across shard boundaries, a NaN, and
+        // filtered ids — swept over shard counts and k values, the
+        // scatter-gather pipeline must reproduce select_top_k exactly
+        let n = 23usize;
+        let mut row: Vec<f32> =
+            (0..n).map(|i| ((i * 37) % 11) as f32 - (i % 3) as f32 * 0.5).collect();
+        row[4] = row[9]; // cross-shard tie under most layouts
+        row[6] = f32::NAN;
+        let mut filtered = vec![false; n];
+        filtered[1] = true;
+        filtered[9] = true;
+        for n_shards in [1usize, 2, 4, 7] {
+            for k in [0usize, 1, 3, 10, n, 40] {
+                let flat = select_top_k(&row, &filtered, k);
+                let layout = crate::model::ShardLayout::new(n_shards);
+                let mut cands: Vec<Mutex<Vec<(u32, f32)>>> =
+                    (0..n_shards).map(|_| Mutex::default()).collect();
+                for (s, slot) in cands.iter_mut().enumerate() {
+                    let rows_s = layout.shard_rows(n, s);
+                    let shard_row: Vec<f32> = (0..rows_s)
+                        .map(|l| row[layout.global_of(s, l) as usize])
+                        .collect();
+                    select_top_k_shard(
+                        &shard_row,
+                        s,
+                        n_shards,
+                        &filtered,
+                        k.min(n),
+                        slot.get_mut().unwrap(),
+                    );
+                }
+                let mut merged = Vec::new();
+                let got = merge_shard_tops(&mut cands, k.min(n), &mut merged);
+                assert_eq!(got, flat, "n_shards={n_shards} k={k}");
+            }
+        }
     }
 
     #[test]
@@ -905,6 +1091,60 @@ mod tests {
         let good = c.wait().unwrap();
         assert_eq!(good.top.len(), 3, "p1() asks for top_k = 3");
         assert_eq!(service.metrics().rejected.get(), 2);
+        drop(client);
+    }
+
+    #[test]
+    fn answers_are_bitwise_identical_for_any_shard_count() {
+        // the serve-level parity guard: the same request answered off
+        // snapshots sharded 1/2/4/7 ways must agree bit for bit — ids,
+        // order, and score bits (the integration suite widens this sweep)
+        let (rt, state, _) = setup();
+        let mut answers: Vec<Vec<(u32, f32)>> = Vec::new();
+        for n_shards in [1usize, 2, 4, 7] {
+            let cell =
+                Arc::new(SnapshotCell::new(ModelSnapshot::capture_sharded(&state, n_shards)));
+            let service = QueryService::start(
+                Arc::clone(&rt) as Arc<dyn Runtime>,
+                cell,
+                ServeConfig::default(),
+            );
+            let client = service.client();
+            let mut req = p1(2, 1);
+            req.top_k = 5;
+            req.filter = vec![3, 7];
+            answers.push(client.query(req).unwrap().top);
+            drop(client);
+            service.shutdown();
+        }
+        for (i, got) in answers.iter().enumerate().skip(1) {
+            assert_eq!(got.len(), answers[0].len());
+            for (a, b) in answers[0].iter().zip(got) {
+                assert_eq!(a.0, b.0, "entity order diverged at sweep {i}");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "score bits diverged at sweep {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fusion_mismatch_fails_the_batch_with_the_typed_error() {
+        // a snapshot stamped with fusion provenance, served by a service
+        // configured without a semantic source: every request in the
+        // window must get the typed mismatch, not silently-wrong scores
+        let (rt, state, _) = setup();
+        let snap = ModelSnapshot::capture_with_fusion(&state, 4, Some("bert-mini"));
+        let cell = Arc::new(SnapshotCell::new(snap));
+        let service = QueryService::start(rt, cell, ServeConfig::default());
+        let client = service.client();
+        let err = client.submit(p1(0, 0)).unwrap().wait().unwrap_err();
+        match err {
+            ServeError::FusionMismatch { snapshot, source } => {
+                assert_eq!(snapshot.as_deref(), Some("bert-mini"));
+                assert_eq!(source, None);
+            }
+            other => panic!("expected FusionMismatch, got {other:?}"),
+        }
+        assert_eq!(service.metrics().failed.get(), 1);
         drop(client);
     }
 
@@ -1014,5 +1254,14 @@ mod tests {
         let any: anyhow::Error = e.into();
         assert!(any.to_string().contains("overloaded"));
         assert!(ServeError::Disconnected.to_string().contains("shut down"));
+        let fm = ServeError::FusionMismatch {
+            snapshot: Some("bert-mini".into()),
+            source: None,
+        };
+        assert_eq!(
+            fm.to_string(),
+            "fusion provenance mismatch: snapshot published with bert-mini, \
+             service configured with no semantic source"
+        );
     }
 }

@@ -106,6 +106,9 @@ pub fn load(state: &mut ModelState, dir: &str) -> Result<()> {
         p.m = read_f32_file(dir.join(format!("dense.{fname}.m.bin")), n)?;
         p.v = read_f32_file(dir.join(format!("dense.{fname}.v.bin")), n)?;
     }
+    // the tables changed wholesale behind the optimizer's back: the next
+    // snapshot publish must be a full capture, not a delta
+    state.dirty.invalidate();
     Ok(())
 }
 

@@ -115,6 +115,12 @@ pub fn build_dags(
 pub fn optimize(state: &mut ModelState, grads: &Grads, adam: &AdamConfig) {
     state.step += 1;
     let step = state.step;
+    // delta-publish bookkeeping: these are exactly the embedding rows
+    // `apply_sparse` mutates below, so a COW snapshot publish can copy
+    // only their pages. Dense params are not tracked — `apply_dense`
+    // touches every element, so publishes always re-copy them wholesale.
+    state.dirty.ent.extend(grads.ent.keys().copied());
+    state.dirty.rel.extend(grads.rel.keys().copied());
     for (name, g) in &grads.dense {
         if let Some(p) = state.dense.get_mut(name) {
             adam.apply_dense(p, g, step);

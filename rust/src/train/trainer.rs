@@ -35,7 +35,7 @@ use crate::config::{Batching, ExperimentConfig, Pipelining};
 use crate::exec::{EngineConfig, EngineSession, Grads};
 use crate::kg::KgStore;
 use crate::metrics::{MemoryEstimate, ThroughputMeter, TsvLogger};
-use crate::model::{ModelSnapshot, ModelState, SnapshotCell};
+use crate::model::{ModelState, SnapshotCell};
 use crate::optim::AdamConfig;
 use crate::query::Pattern;
 use crate::runtime::Runtime;
@@ -67,8 +67,8 @@ pub struct Trainer<'a> {
     pub adam: AdamConfig,
     pub semantic: Option<&'a dyn SemanticSource>,
     /// when set, every optimizer step publishes a moment-free
-    /// [`ModelSnapshot`] here — the train→serve handoff (see
-    /// [`crate::serve::QueryService`])
+    /// [`crate::model::ModelSnapshot`] here — the train→serve handoff
+    /// (see [`crate::serve::QueryService`])
     pub snapshots: Option<Arc<SnapshotCell>>,
 }
 
@@ -91,13 +91,20 @@ impl<'a> Trainer<'a> {
         self
     }
 
-    /// The publish hook: capture + swap (a no-op without a cell). The copy
-    /// happens here on the trainer thread; the serve-side swap is one
-    /// `Arc` store. Public so manual steppers ([`Trainer::apply`] users
-    /// like fig9) can publish on their own cadence.
-    pub fn publish_snapshot(&self, state: &ModelState) {
+    /// The publish hook: COW delta capture + swap (a no-op without a
+    /// cell). When the optimizer's dirty-row tracking lines up with the
+    /// previous publish, only the touched shard pages are copied
+    /// ([`SnapshotCell::publish_from`]); otherwise a full capture runs —
+    /// either way the published snapshot is bitwise identical to
+    /// [`crate::model::ModelSnapshot::capture`] of the same state. The copy happens here
+    /// on the trainer thread; the serve-side swap is one `Arc` store.
+    /// Public so manual steppers ([`Trainer::apply`] users like fig9) can
+    /// publish on their own cadence. Fusion provenance is stamped from the
+    /// trainer's semantic source, so the serve tier can refuse mismatched
+    /// snapshot/source pairs.
+    pub fn publish_snapshot(&self, state: &mut ModelState) {
         if let Some(cell) = &self.snapshots {
-            cell.publish(ModelSnapshot::capture(state));
+            cell.publish_from(state, self.semantic.map(|s| s.encoder()));
         }
     }
 
@@ -392,11 +399,15 @@ mod tests {
         let snap = cell.load();
         assert_eq!(snap.step(), steps as u64, "served snapshot is post-optimize");
         assert_eq!(
-            snap.state().entities.data,
+            snap.entities().to_flat(),
             state.entities.data,
             "published weights match the final trained state bitwise"
         );
-        assert!(snap.state().entities.m.is_empty(), "snapshots carry no moments");
+        // fresh-state publish #1 must full-capture (no baseline); every
+        // later step lines up with the previous publish and deltas
+        let totals = cell.publish_totals();
+        assert_eq!(totals.full_publishes, 1, "only the first publish is full");
+        assert_eq!(totals.delta_publishes, steps as u64 - 1);
     }
 
     #[test]

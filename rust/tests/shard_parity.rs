@@ -1,0 +1,190 @@
+//! Shard-parity property suite: the sharded embedding store and the
+//! scatter-gather serve path must be *bitwise* indistinguishable from the
+//! flat reference — for every shard count, every worker count, and for
+//! delta-published snapshots vs. fresh full captures after real training.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ngdb_zoo::config::{Batching, ExperimentConfig, Pipelining};
+use ngdb_zoo::kg::{KgSpec, KgStore};
+use ngdb_zoo::model::{ModelSnapshot, ModelState, ShardLayout, SnapshotCell};
+use ngdb_zoo::query::{Pattern, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::serve::{QueryAnswer, QueryRequest, QueryService, ServeConfig};
+use ngdb_zoo::train::Trainer;
+
+const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 7];
+
+#[test]
+fn routing_partitions_every_id_for_any_shard_count() {
+    for n in SHARD_SWEEP {
+        let layout = ShardLayout::new(n);
+        for total in [0usize, 1, 3, 24, 100, 101] {
+            let mut per_shard = vec![0usize; n];
+            for id in 0..total as u32 {
+                let (s, l) = (layout.shard_of(id), layout.local_of(id));
+                assert_eq!(layout.global_of(s, l), id, "n={n} id={id} round trip");
+                assert!(l < layout.shard_rows(total, s), "n={n} id={id} local bound");
+                per_shard[s] += 1;
+            }
+            for (s, &count) in per_shard.iter().enumerate() {
+                assert_eq!(count, layout.shard_rows(total, s), "n={n} total={total}");
+            }
+            // balanced to within one row: no hot shard under modulo routing
+            if total >= n {
+                let sizes: Vec<usize> = (0..n).map(|s| layout.shard_rows(total, s)).collect();
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "n={n} total={total} skewed: {sizes:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_captures_are_bitwise_identical_to_the_live_state() {
+    let rt = MockRuntime::new();
+    let state = ModelState::init(rt.manifest(), "mock", 23, 5, None, 17).unwrap();
+    for n in SHARD_SWEEP {
+        let snap = ModelSnapshot::capture_sharded(&state, n);
+        assert_eq!(snap.n_shards(), n);
+        assert_eq!(snap.entities().to_flat(), state.entities.data, "n={n} entities");
+        assert_eq!(snap.relations().to_flat(), state.relations.data, "n={n} relations");
+        // routed single-row reads agree with the flat layout too
+        for id in 0..state.entities.rows as u32 {
+            assert_eq!(snap.entities().row(id), state.entities.row(id), "n={n} id={id}");
+        }
+    }
+}
+
+/// Real training drives the delta path: a `Trainer` publishing after every
+/// optimizer step must produce snapshots bitwise identical to a fresh full
+/// capture of the same state, while actually copying only touched pages.
+#[test]
+fn trained_delta_publishes_are_bitwise_identical_to_full_captures() {
+    const STEPS: usize = 5;
+    let rt = MockRuntime::new();
+    let kg: Arc<KgStore> = Arc::new(KgSpec::preset("toy", 0.1).unwrap().generate().unwrap());
+    let mut state =
+        ModelState::init(rt.manifest(), "mock", kg.n_entities, kg.n_relations, None, 7).unwrap();
+    let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture(&state)));
+    let pinned = cell.load();
+    let pinned_ents = pinned.entities().to_flat();
+
+    let cfg = ExperimentConfig {
+        model: "mock".into(),
+        steps: STEPS,
+        batch_queries: 16,
+        batching: Batching::OperatorLevel,
+        pipelining: Pipelining::Sync,
+        patterns: vec![Pattern::P1, Pattern::P2],
+        ..Default::default()
+    };
+    Trainer::new(&rt, kg, cfg)
+        .with_snapshots(Arc::clone(&cell))
+        .train(&mut state)
+        .unwrap();
+
+    // the first publish has no dirty baseline (fresh init) and goes full;
+    // every later one must ride the COW delta path
+    let totals = cell.publish_totals();
+    assert!(totals.full_publishes <= 1, "re-anchoring failed: {totals:?}");
+    assert_eq!(totals.delta_publishes, (STEPS as u64 - 1).max(0), "{totals:?}");
+
+    // bitwise identity of the final delta-published snapshot vs. a fresh
+    // full capture of the state it was published from
+    let published = cell.load();
+    assert_eq!(published.step(), STEPS as u64);
+    let full = ModelSnapshot::capture_sharded(&state, published.n_shards());
+    let (a, b) = (published.entities().to_flat(), full.entities().to_flat());
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "entity weight {i} diverged");
+    }
+    let (a, b) = (published.relations().to_flat(), full.relations().to_flat());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "relation weight {i} diverged");
+    }
+
+    // COW isolation: the snapshot pinned before training still reads the
+    // step-0 weights even though later publishes shared its pages
+    assert_eq!(pinned.entities().to_flat(), pinned_ents);
+
+    // and the deltas were actually cheap: total bytes copied across all
+    // publishes stays below STEPS full captures (the economics the
+    // snapshot_publish bench gates precisely)
+    assert!(
+        (totals.bytes_copied as usize) < STEPS * full.bytes(),
+        "delta publishing copied as much as full captures: {totals:?}"
+    );
+}
+
+fn answers_for(state: &ModelState, n_shards: usize, workers: usize) -> Vec<QueryAnswer> {
+    let rt = Arc::new(MockRuntime::new());
+    let cell = Arc::new(SnapshotCell::new(ModelSnapshot::capture_sharded(state, n_shards)));
+    let service = QueryService::start(
+        rt,
+        cell,
+        ServeConfig {
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let client = service.client();
+    let reqs: Vec<QueryRequest> = (0..18u32)
+        .map(|i| {
+            let tree = match i % 3 {
+                0 => QueryTree::instantiate(Pattern::P1, &[i % 24], &[i % 6]).unwrap(),
+                1 => QueryTree::instantiate(Pattern::P2, &[(i + 7) % 24], &[i % 6, (i + 1) % 6])
+                    .unwrap(),
+                _ => QueryTree::instantiate(
+                    Pattern::I2,
+                    &[i % 24, (i + 5) % 24],
+                    &[i % 6, (i + 2) % 6],
+                )
+                .unwrap(),
+            };
+            // sweep k across shard-boundary shapes, including "everything"
+            QueryRequest { tree, filter: vec![i % 24, (i + 3) % 24], top_k: 1 + (i as usize % 23) }
+        })
+        .collect();
+    let pending: Vec<_> = reqs.iter().map(|r| client.submit(r.clone()).unwrap()).collect();
+    let answers = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+    drop(client);
+    service.shutdown();
+    answers
+}
+
+/// The headline guarantee: served answers are a pure function of
+/// (snapshot weights, request) — shard count and worker count must be
+/// invisible, down to the score bits.
+#[test]
+fn served_answers_are_bitwise_identical_across_shard_and_worker_counts() {
+    let rt = MockRuntime::new();
+    let state = ModelState::init(rt.manifest(), "mock", 24, 6, None, 11).unwrap();
+    let reference = answers_for(&state, 1, 1); // single shard, single worker
+    assert!(reference.iter().any(|a| a.top.len() > 4), "degenerate reference");
+    for n_shards in SHARD_SWEEP {
+        for workers in [1usize, 2] {
+            let got = answers_for(&state, n_shards, workers);
+            assert_eq!(got.len(), reference.len());
+            for (i, (g, r)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g.top.len(),
+                    r.top.len(),
+                    "req {i}: answer width drifted at shards={n_shards} workers={workers}"
+                );
+                for ((ge, gs), (re, rs)) in g.top.iter().zip(&r.top) {
+                    assert_eq!(ge, re, "req {i} shards={n_shards} workers={workers}");
+                    assert_eq!(
+                        gs.to_bits(),
+                        rs.to_bits(),
+                        "req {i} score bits drifted at shards={n_shards} workers={workers}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -44,6 +44,8 @@ LOWER_PATTERNS = (
     "spawn",
     "latency",
     "shed",
+    "publish",
+    "copied",
     "p50",
     "p95",
     "p99",
