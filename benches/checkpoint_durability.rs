@@ -1,0 +1,106 @@
+//! Checkpoint durability bench: payload bytes and wall time of delta
+//! saves after steps touching ~1% of the embedding rows, vs. a full
+//! save — with one-shot I/O errors injected every few rounds so the
+//! measured path includes retry/backoff. See
+//! `bench_harness::checkpoint_durability` for the methodology. Gated
+//! (the CI smoke runs this): delta payload must stay ≤ 10% of a full
+//! save under worst-case page scatter, no measured save may fall back to
+//! a full generation or fail permanently, and every injected error must
+//! be absorbed by exactly one retry.
+//!
+//! Env knobs: `NGDB_CKPT_ENTITIES` (default 50000), `NGDB_CKPT_ROUNDS`
+//! (16), `NGDB_CKPT_TOUCHED` (entities/100), `NGDB_CKPT_DIM` (64),
+//! `NGDB_CKPT_INJECT_EVERY` (4), `NGDB_CKPT_DIR` (store path, default
+//! under the system temp dir), `NGDB_CKPT_JSON` (output path, default
+//! `BENCH_checkpoint_durability.json`).
+
+use ngdb_zoo::bench_harness::checkpoint_durability::{run, write_json, CkptBenchOpts};
+use ngdb_zoo::bench_harness::knob;
+use ngdb_zoo::model::PAGE_ROWS;
+
+fn main() {
+    let entities = knob("NGDB_CKPT_ENTITIES", 50_000.0) as usize;
+    let opts = CkptBenchOpts {
+        entities,
+        touched_per_round: knob("NGDB_CKPT_TOUCHED", (entities / 100) as f64) as usize,
+        rounds: knob("NGDB_CKPT_ROUNDS", 16.0) as usize,
+        dim: knob("NGDB_CKPT_DIM", 64.0) as usize,
+        inject_error_every: knob("NGDB_CKPT_INJECT_EVERY", 4.0) as usize,
+        ..Default::default()
+    };
+    let dir = std::env::var("NGDB_CKPT_DIR").unwrap_or_else(|_| {
+        std::env::temp_dir()
+            .join(format!("ngdb_bench_ckpt_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    });
+
+    let report =
+        run(&opts, &dir).unwrap_or_else(|e| panic!("checkpoint_durability failed: {e:#}"));
+    std::fs::remove_dir_all(&dir).ok();
+
+    println!(
+        "\ncheckpoint_durability: {} entities x dim {}, {} rounds, \
+         {} rows touched/round ({:.2}%), fault every {} rounds",
+        opts.entities,
+        opts.dim,
+        opts.rounds,
+        opts.touched_per_round,
+        100.0 * opts.touched_per_round as f64 / opts.entities as f64,
+        opts.inject_error_every,
+    );
+    println!(
+        "  full save : {:>12} bytes  {:>10.1} us",
+        report.full_payload_bytes, report.full_save_us
+    );
+    println!(
+        "  delta save: {:>12.0} bytes  {:>10.1} us avg  {:>10.1} us p99   \
+         ({:.0} rows/save)",
+        report.delta_payload_avg,
+        report.delta_save_us_avg,
+        report.delta_save_p99_us,
+        report.delta_rows_avg
+    );
+    println!(
+        "  delta/full: {:>11.3}%        {:>10.2}x speedup   \
+         {} injected errors, {} retries",
+        report.delta_bytes_per_full_pct(),
+        report.speedup(),
+        report.injected_errors,
+        report.retries_total,
+    );
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    assert_eq!(
+        report.full_fallback_saves, 0,
+        "an anchored save silently fell back to a full generation"
+    );
+    assert_eq!(
+        report.save_failures, 0,
+        "an injected transient error survived the retry policy"
+    );
+    assert_eq!(report.delta_saves, opts.rounds as u64);
+    assert_eq!(
+        report.retries_total, report.injected_errors,
+        "every one-shot fault must cost exactly one retry"
+    );
+    assert!(
+        report.delta_bytes_per_full_pct() <= 10.0,
+        "saving 1% of rows must journal <= 10% of a full save, got {:.3}%",
+        report.delta_bytes_per_full_pct()
+    );
+    assert!(
+        report.delta_rows_avg <= (opts.touched_per_round * PAGE_ROWS) as f64,
+        "page write amplification broke the touched x PAGE_ROWS bound"
+    );
+    assert!(
+        report.speedup() > 1.0,
+        "a delta save must beat a full save, got {:.2}x",
+        report.speedup()
+    );
+
+    let path = std::env::var("NGDB_CKPT_JSON")
+        .unwrap_or_else(|_| "BENCH_checkpoint_durability.json".to_string());
+    write_json(&report, &path).unwrap_or_else(|e| panic!("{e:#}"));
+    println!("  wrote {path}");
+}

@@ -21,6 +21,9 @@ SERVE_BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_serve_load.js
 PUBLISH_BASELINE = os.path.join(
     ROOT, "benches", "baselines", "BENCH_snapshot_publish.json"
 )
+CKPT_BASELINE = os.path.join(
+    ROOT, "benches", "baselines", "BENCH_checkpoint_durability.json"
+)
 
 
 def _load():
@@ -242,5 +245,62 @@ def test_committed_snapshot_publish_baseline_matches_the_delta_simulation():
     assert gated == leaves
     assert gated["full_fallback_publishes"] == 0.0
     assert bc.direction("delta_publish_speedup") == "higher"
+    _, failures = bc.compare(doc, doc, 25.0)
+    assert failures == []
+
+
+def _sim_ckpt_delta(entities, rounds, touched, page_rows=4):
+    """Python mirror of the checkpoint delta journal's flat (unsharded)
+    PAGE_ROWS pagination over the bench's stride-101 dirt pattern.
+    Returns (rows_per_delta, payload_bytes_per_delta-less-dim-factor):
+    the caller multiplies rows by ``dim * 4 * 3`` (data + Adam m + v)
+    and adds ``pages * 4`` for the page-index file."""
+    total_rows, total_pages = 0, 0
+    for r in range(rounds):
+        ids = {(r * 7919 + i * 101) % entities for i in range(touched)}
+        assert len(ids) == touched, "stride pattern collided"
+        pages = {gid // page_rows for gid in ids}
+        total_rows += sum(min(page_rows, entities - p * page_rows) for p in pages)
+        total_pages += len(pages)
+    return total_rows / rounds, total_pages / rounds
+
+
+def test_committed_checkpoint_baseline_matches_the_journal_simulation():
+    """The checkpoint baseline's deterministic metrics are a pure function
+    of the delta journal's page accounting — recompute them from the
+    bench's default config (the values the CI smoke runs with) so a drift
+    in either the Rust accounting or the committed numbers fails loudly.
+    Unlike the publish delta (data only, sharded layout), a checkpoint
+    delta journals the full Adam triple (data + m + v) over the flat
+    per-table row space."""
+    with open(CKPT_BASELINE) as fh:
+        doc = json.load(fh)
+    assert doc["bench"] == "checkpoint_durability"
+    # bench defaults: benches/checkpoint_durability.rs / CkptBenchOpts
+    entities, relations, dim, rounds = 50_000, 64, 64, 16
+    touched, page_rows = entities // 100, 4
+    rows, pages = _sim_ckpt_delta(entities, rounds, touched, page_rows)
+    assert doc["rows_copied_per_delta"] == rows
+    payload = pages * 4 + rows * dim * 4 * 3
+    assert doc["bytes_copied_per_delta"] == payload
+    full = 3 * (entities + relations) * dim * 4
+    pct = 100.0 * payload / full
+    assert abs(doc["delta_bytes_per_full_pct"] - pct) < 5e-4
+    # the durability economics: 1% rows touched -> <= 5% journaled, even
+    # under worst-case one-row-per-page scatter and 3x optimizer payload
+    assert doc["delta_bytes_per_full_pct"] <= 5.0
+    assert rows <= touched * page_rows
+    # gate hygiene: every pinned leaf is directional, the fault-tolerance
+    # contracts are exact zeros, and the baseline passes against itself
+    leaves = dict(bc.flatten(doc))
+    gated = {p: v for p, v in leaves.items() if bc.direction(p) is not None}
+    assert gated == leaves
+    assert gated["full_fallback_saves"] == 0.0
+    assert gated["save_failures"] == 0.0
+    assert bc.direction("full_fallback_saves") == "lower"
+    assert bc.direction("save_failures") == "lower"
+    assert bc.direction("delta_save_speedup") == "higher"
+    assert bc.direction("save_p99_us") == "lower"  # gated if ever pinned
+    assert "save_p99_us" not in doc  # wall-clock tail: deliberately unpinned
     _, failures = bc.compare(doc, doc, 25.0)
     assert failures == []

@@ -61,6 +61,11 @@ def test_committed_sample_has_the_serve_families():
         ("ngdb_serve_batch_fill", "histogram"),
         ("ngdb_serve_latency_seconds", "histogram"),
         ("ngdb_serve_latency_seconds_est", "gauge"),
+        ("ngdb_train_checkpoint_saves_total", "counter"),
+        ("ngdb_train_checkpoint_failures_total", "counter"),
+        ("ngdb_train_checkpoint_retries_total", "counter"),
+        ("ngdb_train_checkpoint_save_bytes", "histogram"),
+        ("ngdb_train_checkpoint_save_seconds", "histogram"),
     ]:
         assert f"# TYPE {family} {kind}" in text, family
 
@@ -85,6 +90,40 @@ def test_committed_sample_accounting_is_internally_consistent():
         values["ngdb_serve_latency_seconds_count"]
         == values["ngdb_serve_answered_total"]
     )
+    # checkpoint accounting: every committed save (full or delta) lands in
+    # both save histograms exactly once; failed saves never do
+    saves = sum(
+        values[f'ngdb_train_checkpoint_saves_total{{kind="{k}"}}']
+        for k in ("full", "delta")
+    )
+    assert values["ngdb_train_checkpoint_save_bytes_count"] == saves
+    assert values["ngdb_train_checkpoint_save_seconds_count"] == saves
+
+
+def test_checkpoint_families_are_kind_labelled_and_fault_aware():
+    """The checkpoint families must carry the full/delta label sweep the
+    dashboards key on, and the sample must model a believable faulty run:
+    at least one retry and one permanent failure, with retries >= failures
+    (a permanent failure only happens after the retry budget burns)."""
+    text = _sample_text()
+    values = {}
+    for line in text.splitlines():
+        if line.startswith("ngdb_train_checkpoint_"):
+            name_labels, value = line.rsplit(" ", 1)
+            values[name_labels] = float(value)
+    for family in ("saves", "failures", "retries"):
+        for kind in ("full", "delta"):
+            key = f'ngdb_train_checkpoint_{family}_total{{kind="{kind}"}}'
+            assert key in values, key
+    retries = sum(
+        values[f'ngdb_train_checkpoint_retries_total{{kind="{k}"}}']
+        for k in ("full", "delta")
+    )
+    failures = sum(
+        values[f'ngdb_train_checkpoint_failures_total{{kind="{k}"}}']
+        for k in ("full", "delta")
+    )
+    assert retries >= failures > 0
 
 
 def test_shard_row_family_is_balanced_and_multi_labelled():

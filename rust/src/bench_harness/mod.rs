@@ -10,6 +10,7 @@
 //! * `NGDB_BENCH_SCALE` — graph scale factor (default per-harness)
 //! * `NGDB_BENCH_STEPS` — training steps per measured cell
 
+pub mod checkpoint_durability;
 pub mod fig2_pipelining;
 pub mod fig7_multi_gpu;
 pub mod fig9_adaptive;

@@ -38,7 +38,10 @@ use crate::runtime::HostTensor;
 pub const DEFAULT_SHARDS: usize = 4;
 
 /// Rows per copy-on-write page. Bounds delta-publish write amplification:
-/// one dirty row re-materializes at most `PAGE_ROWS * dim * 4` bytes.
+/// one dirty row re-materializes at most `PAGE_ROWS * dim * 4` bytes. The
+/// checkpoint layer's delta journals
+/// ([`crate::train::checkpoint::CheckpointStore`]) page by the same
+/// constant, so a save is bounded by `dirty × PAGE_ROWS` rows too.
 pub const PAGE_ROWS: usize = 4;
 
 /// Stable modulo routing: `shard = id % n`, `local = id / n`. Pure and

@@ -379,6 +379,11 @@ mod tests {
         std::fs::write(&dir, [0u8; 8]).unwrap();
         let p = dir.to_str().unwrap();
         assert_eq!(read_f32_file(p, 2).unwrap(), vec![0.0, 0.0]);
-        assert!(read_f32_file(p, 3).is_err());
+        assert!(read_f32_file(p, 3).is_err(), "short file must error");
+        // trailing bytes are just as corrupt as missing ones — a
+        // longer-than-expected file must never truncate silently
+        assert!(read_f32_file(p, 1).is_err(), "trailing bytes must error");
+        let err = read_f32_file(p, 1).unwrap_err().to_string();
+        assert!(err.contains("expected 4 bytes, got 8"), "{err}");
     }
 }

@@ -445,13 +445,13 @@ impl ServeMetrics {
             "Embedding rows actually copied across all snapshot publishes.",
             self.published_rows_total.get(),
         );
-        histogram(
+        render_histogram(
             &mut out,
             "ngdb_serve_batch_fill",
             "Requests fused per dispatched micro-batch window.",
             &self.batch_fill,
         );
-        histogram(
+        render_histogram(
             &mut out,
             "ngdb_serve_latency_seconds",
             "End-to-end accepted-request latency (enqueue to answer), seconds.",
@@ -510,7 +510,9 @@ fn lane_gauge(out: &mut String, name: &str, help: &str, high: i64, normal: i64) 
     ));
 }
 
-fn histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+/// Shared with the train tier's checkpoint metrics (`pub(crate)`): one
+/// renderer keeps every exposed histogram family shaped identically.
+pub(crate) fn render_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
     out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} histogram\n"));
     let counts = h.load_buckets();
     let mut cum = 0u64;

@@ -1,130 +1,1440 @@
-//! Checkpointing: save/restore full trainable state (embedding tables with
-//! Adam moments + dense params) so long runs survive restarts and trained
-//! models can be served/evaluated later.
+//! Crash-safe, generation-versioned checkpointing with incremental saves.
 //!
-//! Format: a directory with a small text header (`meta.txt`: model, dims,
-//! step) and one raw little-endian f32 file per tensor — deliberately the
-//! same trivial encoding `aot.py` uses for initial params, so checkpoints
-//! are toolable with numpy one-liners.
+//! The store is a directory of immutable **generations** (`gen-000001`,
+//! `gen-000002`, ...). Every save follows the embedded-database commit
+//! discipline ("kill -9 loses nothing"):
+//!
+//! 1. write every tensor file into a hidden staging directory
+//!    (`.staging.gen-N`), fsyncing each file;
+//! 2. write a `MANIFEST` **last** — kind, step, shapes, and a CRC32 per
+//!    file, the whole manifest self-checksummed on its final line — and
+//!    fsync it;
+//! 3. fsync the staging directory, then commit with one atomic
+//!    `rename(.staging.gen-N, gen-N)`, then fsync the parent.
+//!
+//! A reader never sees a partial generation: either the rename happened
+//! (the manifest inside is complete by construction) or it didn't (the
+//! staging directory is garbage, swept on the next [`CheckpointStore::open`]).
+//! Recovery walks generations newest-first and loads the first one whose
+//! manifest chain validates; torn, truncated, or bit-flipped tensor files
+//! are caught by per-file CRCs and reported as typed [`CkptError`]s, never
+//! loaded as garbage.
+//!
+//! **Incremental saves.** After a full base generation, subsequent saves
+//! journal only the embedding pages the optimizer dirtied
+//! ([`crate::model::DirtyRows`], absorbed per step by
+//! [`CheckpointStore::absorb_dirty`] / [`AutoCheckpointer::after_step`]):
+//! a delta generation stores the sorted dirty page list (`ent.pages.bin`)
+//! plus the packed rows of each page for data and both Adam moments —
+//! bounded by `dirty × PAGE_ROWS` rows. Dense params are small and always
+//! written whole. Deltas chain to their parent generation; after
+//! [`CheckpointConfig::max_delta_chain`] deltas the store compacts back to
+//! a full base (and garbage-collects chains older than the previous base).
+//! [`CheckpointStore::load_latest`] replays base + deltas to a state
+//! bitwise identical to a full save of the same state.
+//!
+//! **Fault injection.** Every write, fsync, and the commit rename are
+//! threaded through [`crate::util::failpoint`] sites (see
+//! [`FAILPOINT_SITES`]); `rust/tests/checkpoint_crash.rs` kills a child
+//! process at each site and asserts the previous generation always
+//! recovers bitwise. [`AutoCheckpointer`] adds trainer-side robustness:
+//! cadence saves with retry/backoff on transient I/O errors, and graceful
+//! degradation — a permanently failed save logs, counts into
+//! [`CheckpointMetrics`], and never poisons the training step.
+//!
+//! The legacy one-call API ([`save`]/[`load`]) is kept as a thin wrapper:
+//! `save` commits one full generation, `load` recovers the latest.
 
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::fmt;
+use std::fs;
 use std::io::{BufWriter, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
-use crate::model::state::{read_f32_file, ModelState};
+use crate::model::{DirtyRows, EmbeddingTable, ModelState, PAGE_ROWS};
+use crate::serve::metrics::{render_histogram, Counter, Histogram, LATENCY_BOUNDS};
+use crate::util::failpoint::{self, Fired};
 
-/// Stream `data` to `path` as little-endian f32s through a [`BufWriter`].
-/// The pre-stream implementation materialized every tensor as an
-/// intermediate `Vec<u8>` first — doubling peak memory for large tables
-/// at exactly the moment a checkpoint is trying to be cheap. Floats are
-/// translated through a small fixed stack buffer, so memory stays O(1)
-/// without paying a write call per element.
-fn write_f32(path: &Path, data: &[f32]) -> Result<()> {
-    const CHUNK: usize = 4096;
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    let mut w = BufWriter::new(file);
-    let mut buf = [0u8; CHUNK * 4];
-    for chunk in data.chunks(CHUNK) {
-        let bytes = &mut buf[..chunk.len() * 4];
-        for (b, x) in bytes.chunks_exact_mut(4).zip(chunk) {
-            b.copy_from_slice(&x.to_le_bytes());
-        }
-        w.write_all(bytes)
-            .with_context(|| format!("writing {}", path.display()))?;
-    }
-    w.flush().with_context(|| format!("flushing {}", path.display()))
+// ---------------------------------------------------------------------------
+// failpoint sites
+// ---------------------------------------------------------------------------
+
+/// Before writing a tensor/pages payload file (short-write leaves a torn
+/// prefix on disk).
+pub const FP_WRITE_TENSOR: &str = "ckpt.write.tensor";
+/// Before fsyncing a payload file.
+pub const FP_SYNC_TENSOR: &str = "ckpt.sync.tensor";
+/// Before writing the MANIFEST (short-write leaves a torn manifest).
+pub const FP_WRITE_MANIFEST: &str = "ckpt.write.manifest";
+/// Before fsyncing the MANIFEST.
+pub const FP_SYNC_MANIFEST: &str = "ckpt.sync.manifest";
+/// Before fsyncing the staging directory.
+pub const FP_SYNC_STAGING: &str = "ckpt.sync.staging";
+/// Before the atomic commit rename.
+pub const FP_RENAME: &str = "ckpt.commit.rename";
+/// Before fsyncing the store root after the rename (the generation is on
+/// disk but not yet durable — the save still reports failure).
+pub const FP_SYNC_ROOT: &str = "ckpt.sync.root";
+/// After the commit fully completed (abort here must recover the *new*
+/// generation).
+pub const FP_AFTER_COMMIT: &str = "ckpt.after.commit";
+
+/// Every site a save threads through, in commit order — the crash suite
+/// kills a subprocess at each of these.
+pub const FAILPOINT_SITES: [&str; 8] = [
+    FP_WRITE_TENSOR,
+    FP_SYNC_TENSOR,
+    FP_WRITE_MANIFEST,
+    FP_SYNC_MANIFEST,
+    FP_SYNC_STAGING,
+    FP_RENAME,
+    FP_SYNC_ROOT,
+    FP_AFTER_COMMIT,
+];
+
+// ---------------------------------------------------------------------------
+// typed errors
+// ---------------------------------------------------------------------------
+
+/// Typed checkpoint errors. Concrete (not stringly) so tests and callers
+/// can match on *why* a load refused — a checksum mismatch must never be
+/// confused with a merely missing checkpoint.
+#[derive(Debug)]
+pub enum CkptError {
+    /// the store directory holds no committed generation
+    NoCheckpoint { root: PathBuf },
+    /// an OS-level I/O failure (or an injected one)
+    Io { op: &'static str, path: PathBuf, source: std::io::Error },
+    /// a generation's MANIFEST is missing fields, mis-checksummed, or
+    /// structurally inconsistent with its chain
+    ManifestCorrupt { gen: u64, reason: String },
+    /// a payload file's bytes do not match the CRC its manifest recorded
+    ChecksumMismatch { file: PathBuf, expected: u32, actual: u32 },
+    /// a payload file is shorter or longer than its manifest recorded
+    LengthMismatch { file: PathBuf, expected_bytes: u64, actual_bytes: u64 },
+    /// the checkpoint does not describe this state (model, shapes, or
+    /// dense parameter set differ)
+    Incompatible { reason: String },
 }
 
-/// Save `state` under `dir` (created if needed; overwrites).
-pub fn save(state: &ModelState, dir: &str) -> Result<()> {
-    let dir = Path::new(dir);
-    std::fs::create_dir_all(dir)
-        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-    let meta = format!(
-        "model={}\nstep={}\nent_rows={}\nent_dim={}\nrel_rows={}\nrel_dim={}\n\
-         repr_dim={}\ndense={}\n",
-        state.model,
-        state.step,
-        state.entities.rows,
-        state.entities.dim,
-        state.relations.rows,
-        state.relations.dim,
-        state.repr_dim,
-        state.dense.keys().cloned().collect::<Vec<_>>().join(","),
-    );
-    std::fs::write(dir.join("meta.txt"), meta)?;
-    for (tag, t) in [("ent", &state.entities), ("rel", &state.relations)] {
-        write_f32(&dir.join(format!("{tag}.data.bin")), &t.data)?;
-        write_f32(&dir.join(format!("{tag}.m.bin")), &t.m)?;
-        write_f32(&dir.join(format!("{tag}.v.bin")), &t.v)?;
+impl fmt::Display for CkptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CkptError::NoCheckpoint { root } => {
+                write!(f, "no checkpoint at {}", root.display())
+            }
+            CkptError::Io { op, path, source } => {
+                write!(f, "{op} {}: {source}", path.display())
+            }
+            CkptError::ManifestCorrupt { gen, reason } => {
+                write!(f, "generation {gen} manifest corrupt: {reason}")
+            }
+            CkptError::ChecksumMismatch { file, expected, actual } => write!(
+                f,
+                "{}: checksum mismatch (manifest 0x{expected:08X}, file 0x{actual:08X})",
+                file.display()
+            ),
+            CkptError::LengthMismatch { file, expected_bytes, actual_bytes } => write!(
+                f,
+                "{}: expected {expected_bytes} bytes, got {actual_bytes}",
+                file.display()
+            ),
+            CkptError::Incompatible { reason } => write!(f, "incompatible checkpoint: {reason}"),
+        }
     }
-    for (name, p) in &state.dense {
-        let fname = name.replace('.', "_");
-        write_f32(&dir.join(format!("dense.{fname}.data.bin")), &p.data)?;
-        write_f32(&dir.join(format!("dense.{fname}.m.bin")), &p.m)?;
-        write_f32(&dir.join(format!("dense.{fname}.v.bin")), &p.v)?;
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+fn io_err(op: &'static str, path: &Path, source: std::io::Error) -> CkptError {
+    CkptError::Io { op, path: path.to_path_buf(), source }
+}
+
+fn mf_err(gen: u64, reason: impl Into<String>) -> CkptError {
+    CkptError::ManifestCorrupt { gen, reason: reason.into() }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected — the zlib/PNG polynomial)
+// ---------------------------------------------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        table
+    })
+}
+
+/// Streaming CRC32 state (payload files are written in chunks).
+#[derive(Clone, Copy)]
+struct Crc32(u32);
+
+impl Crc32 {
+    fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let table = crc32_table();
+        for &b in bytes {
+            self.0 = table[((self.0 ^ b as u32) & 0xFF) as usize] ^ (self.0 >> 8);
+        }
+    }
+
+    fn finish(self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ---------------------------------------------------------------------------
+// manifest
+// ---------------------------------------------------------------------------
+
+const MANIFEST_MAGIC: &str = "ngdb-ckpt-v1";
+
+/// What a committed generation contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaveKind {
+    /// every tensor, whole
+    Full,
+    /// dirty pages of the embedding tables + whole dense params, chained
+    /// to a parent generation
+    Delta,
+}
+
+impl SaveKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SaveKind::Full => "full",
+            SaveKind::Delta => "delta",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct FileMeta {
+    bytes: u64,
+    crc: u32,
+}
+
+/// Parsed `MANIFEST` of one generation.
+#[derive(Debug, Clone)]
+pub struct GenManifest {
+    pub gen: u64,
+    pub kind: SaveKind,
+    pub step: u64,
+    pub model: String,
+    pub ent_rows: usize,
+    pub ent_dim: usize,
+    pub rel_rows: usize,
+    pub rel_dim: usize,
+    pub repr_dim: usize,
+    /// dense parameter names, in state (sorted) order
+    pub dense: Vec<String>,
+    /// delta only: the generation this delta patches
+    pub parent: u64,
+    /// delta only: the full generation the chain is rooted at
+    pub base: u64,
+    /// delta only: 1-based position in the chain
+    pub chain: usize,
+    files: BTreeMap<String, FileMeta>,
+}
+
+fn render_manifest(m: &GenManifest) -> String {
+    let mut s = String::with_capacity(512);
+    s.push_str(MANIFEST_MAGIC);
+    s.push('\n');
+    s.push_str(&format!("kind={}\n", m.kind.as_str()));
+    s.push_str(&format!("gen={}\n", m.gen));
+    s.push_str(&format!("step={}\n", m.step));
+    s.push_str(&format!("model={}\n", m.model));
+    s.push_str(&format!(
+        "ent_rows={}\nent_dim={}\nrel_rows={}\nrel_dim={}\nrepr_dim={}\n",
+        m.ent_rows, m.ent_dim, m.rel_rows, m.rel_dim, m.repr_dim
+    ));
+    s.push_str(&format!("dense={}\n", m.dense.join(",")));
+    if m.kind == SaveKind::Delta {
+        s.push_str(&format!("parent={}\nbase={}\nchain={}\n", m.parent, m.base, m.chain));
+    }
+    for (name, f) in &m.files {
+        s.push_str(&format!("file={name} {} 0x{:08X}\n", f.bytes, f.crc));
+    }
+    s
+}
+
+fn parse_manifest(text: &str, expect_gen: u64) -> Result<GenManifest, CkptError> {
+    let gen = expect_gen;
+    let pos = text
+        .rfind("\ncrc=")
+        .ok_or_else(|| mf_err(gen, "missing trailing crc line"))?;
+    let content = &text[..pos + 1];
+    let crc_line = text[pos + 1..].trim_end();
+    let declared = crc_line
+        .strip_prefix("crc=0x")
+        .and_then(|h| u32::from_str_radix(h, 16).ok())
+        .ok_or_else(|| mf_err(gen, format!("bad crc line {crc_line:?}")))?;
+    let actual = crc32(content.as_bytes());
+    if actual != declared {
+        return Err(mf_err(
+            gen,
+            format!("manifest checksum mismatch (declared 0x{declared:08X}, computed 0x{actual:08X})"),
+        ));
+    }
+
+    let mut lines = content.lines();
+    if lines.next() != Some(MANIFEST_MAGIC) {
+        return Err(mf_err(gen, "bad magic"));
+    }
+    let mut kv: HashMap<&str, &str> = HashMap::new();
+    let mut files = BTreeMap::new();
+    for line in lines {
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(mf_err(gen, format!("malformed line {line:?}")));
+        };
+        if k == "file" {
+            let mut parts = v.split_whitespace();
+            let (Some(name), Some(bytes), Some(crc_hex)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                return Err(mf_err(gen, format!("malformed file entry {v:?}")));
+            };
+            let bytes: u64 =
+                bytes.parse().map_err(|_| mf_err(gen, format!("bad file size {bytes:?}")))?;
+            let crc = crc_hex
+                .strip_prefix("0x")
+                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                .ok_or_else(|| mf_err(gen, format!("bad file crc {crc_hex:?}")))?;
+            files.insert(name.to_string(), FileMeta { bytes, crc });
+        } else {
+            kv.insert(k, v);
+        }
+    }
+    let get = |k: &str| kv.get(k).copied().ok_or_else(|| mf_err(gen, format!("missing {k}")));
+    let num = |k: &str| -> Result<u64, CkptError> {
+        get(k)?.parse().map_err(|_| mf_err(gen, format!("non-numeric {k}")))
+    };
+    let kind = match get("kind")? {
+        "full" => SaveKind::Full,
+        "delta" => SaveKind::Delta,
+        other => return Err(mf_err(gen, format!("unknown kind {other:?}"))),
+    };
+    if num("gen")? != expect_gen {
+        return Err(mf_err(gen, "manifest gen does not match its directory"));
+    }
+    let (parent, base, chain) = match kind {
+        SaveKind::Full => (0, expect_gen, 0),
+        SaveKind::Delta => (num("parent")?, num("base")?, num("chain")? as usize),
+    };
+    Ok(GenManifest {
+        gen: expect_gen,
+        kind,
+        step: num("step")?,
+        model: get("model")?.to_string(),
+        ent_rows: num("ent_rows")? as usize,
+        ent_dim: num("ent_dim")? as usize,
+        rel_rows: num("rel_rows")? as usize,
+        rel_dim: num("rel_dim")? as usize,
+        repr_dim: num("repr_dim")? as usize,
+        dense: get("dense")?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect(),
+        parent,
+        base,
+        chain,
+        files,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// state identity (what a delta chain must hold constant)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Identity {
+    model: String,
+    ent_rows: usize,
+    ent_dim: usize,
+    rel_rows: usize,
+    rel_dim: usize,
+    repr_dim: usize,
+    dense: Vec<String>,
+}
+
+impl Identity {
+    fn of_state(state: &ModelState) -> Identity {
+        Identity {
+            model: state.model.clone(),
+            ent_rows: state.entities.rows,
+            ent_dim: state.entities.dim,
+            rel_rows: state.relations.rows,
+            rel_dim: state.relations.dim,
+            repr_dim: state.repr_dim,
+            dense: state.dense.keys().cloned().collect(),
+        }
+    }
+
+    fn of_manifest(m: &GenManifest) -> Identity {
+        Identity {
+            model: m.model.clone(),
+            ent_rows: m.ent_rows,
+            ent_dim: m.ent_dim,
+            rel_rows: m.rel_rows,
+            rel_dim: m.rel_dim,
+            repr_dim: m.repr_dim,
+            dense: m.dense.clone(),
+        }
+    }
+}
+
+/// Full compatibility check of a checkpoint against an initialized state:
+/// model, entity *and* relation shapes, repr width, and the exact dense
+/// parameter name set (an extra or missing dense param is a refusal, not a
+/// silent skip).
+fn check_compatible(m: &GenManifest, state: &ModelState) -> Result<(), CkptError> {
+    let refuse = |reason: String| Err(CkptError::Incompatible { reason });
+    if m.model != state.model {
+        return refuse(format!("checkpoint is for model {:?}, state is {:?}", m.model, state.model));
+    }
+    if m.ent_rows != state.entities.rows || m.ent_dim != state.entities.dim {
+        return refuse(format!(
+            "entity table shape mismatch: checkpoint {}x{}, state {}x{}",
+            m.ent_rows, m.ent_dim, state.entities.rows, state.entities.dim
+        ));
+    }
+    if m.rel_rows != state.relations.rows || m.rel_dim != state.relations.dim {
+        return refuse(format!(
+            "relation table shape mismatch: checkpoint {}x{}, state {}x{}",
+            m.rel_rows, m.rel_dim, state.relations.rows, state.relations.dim
+        ));
+    }
+    if m.repr_dim != state.repr_dim {
+        return refuse(format!(
+            "repr_dim mismatch: checkpoint {}, state {}",
+            m.repr_dim, state.repr_dim
+        ));
+    }
+    let state_dense: Vec<&String> = state.dense.keys().collect();
+    if m.dense.iter().collect::<Vec<_>>() != state_dense {
+        return refuse(format!(
+            "dense param set mismatch: checkpoint has [{}], state has [{}]",
+            m.dense.join(", "),
+            state.dense.keys().cloned().collect::<Vec<_>>().join(", ")
+        ));
     }
     Ok(())
 }
 
-/// Restore a checkpoint into an already-initialized `state` (shapes must
-/// match — init the state from the same manifest/graph first).
-pub fn load(state: &mut ModelState, dir: &str) -> Result<()> {
-    let dir = Path::new(dir);
-    let meta = std::fs::read_to_string(dir.join("meta.txt"))
-        .with_context(|| format!("no checkpoint at {}", dir.display()))?;
-    let field = |key: &str| -> Result<String> {
-        meta.lines()
-            .find_map(|l| l.strip_prefix(&format!("{key}=")))
-            .map(str::to_string)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint meta missing {key}"))
+// ---------------------------------------------------------------------------
+// fault-injected file primitives
+// ---------------------------------------------------------------------------
+
+/// Stream `slices` to `path` as little-endian f32s through a fixed stack
+/// buffer (O(1) memory — a checkpoint must not double peak RSS), CRC'ing
+/// as it goes. An injected short write flushes the torn prefix to disk,
+/// then errors.
+fn write_f32_slices(path: &Path, slices: &[&[f32]]) -> Result<FileMeta, CkptError> {
+    const CHUNK: usize = 4096;
+    let total: u64 = slices.iter().map(|s| s.len() as u64 * 4).sum();
+    let cap = match failpoint::check(FP_WRITE_TENSOR) {
+        Some(Fired::Error) => {
+            return Err(io_err("writing", path, failpoint::injected_io_error(FP_WRITE_TENSOR)))
+        }
+        Some(Fired::ShortWrite) => total / 2,
+        None => u64::MAX,
     };
-    if field("model")? != state.model {
-        bail!("checkpoint is for model {:?}, state is {:?}", field("model")?, state.model);
+    let file = fs::File::create(path).map_err(|e| io_err("creating", path, e))?;
+    let mut w = BufWriter::new(file);
+    let mut crc = Crc32::new();
+    let mut written = 0u64;
+    let mut buf = [0u8; CHUNK * 4];
+    'slices: for s in slices {
+        for chunk in s.chunks(CHUNK) {
+            let bytes = &mut buf[..chunk.len() * 4];
+            for (b, x) in bytes.chunks_exact_mut(4).zip(chunk) {
+                b.copy_from_slice(&x.to_le_bytes());
+            }
+            let take = (bytes.len() as u64).min(cap - written) as usize;
+            w.write_all(&bytes[..take]).map_err(|e| io_err("writing", path, e))?;
+            crc.update(&bytes[..take]);
+            written += take as u64;
+            if written >= cap {
+                break 'slices;
+            }
+        }
     }
-    let ent_rows: usize = field("ent_rows")?.parse()?;
-    let ent_dim: usize = field("ent_dim")?.parse()?;
-    if ent_rows != state.entities.rows || ent_dim != state.entities.dim {
-        bail!(
-            "entity table shape mismatch: checkpoint {}x{}, state {}x{}",
-            ent_rows, ent_dim, state.entities.rows, state.entities.dim
+    w.flush().map_err(|e| io_err("flushing", path, e))?;
+    let file = w.into_inner().map_err(|e| io_err("flushing", path, e.into_error()))?;
+    if written < total {
+        let _ = file.sync_all(); // make the torn prefix real before failing
+        return Err(io_err(
+            "writing (injected short write)",
+            path,
+            failpoint::injected_io_error(FP_WRITE_TENSOR),
+        ));
+    }
+    if failpoint::check(FP_SYNC_TENSOR).is_some() {
+        return Err(io_err("fsyncing", path, failpoint::injected_io_error(FP_SYNC_TENSOR)));
+    }
+    file.sync_all().map_err(|e| io_err("fsyncing", path, e))?;
+    Ok(FileMeta { bytes: total, crc: crc.finish() })
+}
+
+/// Little-endian u32 payload (delta page lists — always small).
+fn write_u32_file(path: &Path, vals: &[u32]) -> Result<FileMeta, CkptError> {
+    let mut bytes = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let total = bytes.len() as u64;
+    let cap = match failpoint::check(FP_WRITE_TENSOR) {
+        Some(Fired::Error) => {
+            return Err(io_err("writing", path, failpoint::injected_io_error(FP_WRITE_TENSOR)))
+        }
+        Some(Fired::ShortWrite) => total / 2,
+        None => total,
+    };
+    let take = total.min(cap) as usize;
+    let mut file = fs::File::create(path).map_err(|e| io_err("creating", path, e))?;
+    file.write_all(&bytes[..take]).map_err(|e| io_err("writing", path, e))?;
+    if (take as u64) < total {
+        let _ = file.sync_all();
+        return Err(io_err(
+            "writing (injected short write)",
+            path,
+            failpoint::injected_io_error(FP_WRITE_TENSOR),
+        ));
+    }
+    if failpoint::check(FP_SYNC_TENSOR).is_some() {
+        return Err(io_err("fsyncing", path, failpoint::injected_io_error(FP_SYNC_TENSOR)));
+    }
+    file.sync_all().map_err(|e| io_err("fsyncing", path, e))?;
+    Ok(FileMeta { bytes: total, crc: crc32(&bytes) })
+}
+
+/// Write the self-checksummed MANIFEST (the commit record — always last).
+fn write_manifest(dir: &Path, m: &GenManifest) -> Result<(), CkptError> {
+    let content = render_manifest(m);
+    let full = format!("{content}crc=0x{:08X}\n", crc32(content.as_bytes()));
+    let path = dir.join("MANIFEST");
+    let cap = match failpoint::check(FP_WRITE_MANIFEST) {
+        Some(Fired::Error) => {
+            return Err(io_err("writing", &path, failpoint::injected_io_error(FP_WRITE_MANIFEST)))
+        }
+        Some(Fired::ShortWrite) => full.len() / 2,
+        None => full.len(),
+    };
+    fs::write(&path, &full.as_bytes()[..cap]).map_err(|e| io_err("writing", &path, e))?;
+    if cap < full.len() {
+        return Err(io_err(
+            "writing (injected short write)",
+            &path,
+            failpoint::injected_io_error(FP_WRITE_MANIFEST),
+        ));
+    }
+    if failpoint::check(FP_SYNC_MANIFEST).is_some() {
+        return Err(io_err("fsyncing", &path, failpoint::injected_io_error(FP_SYNC_MANIFEST)));
+    }
+    let file = fs::File::open(&path).map_err(|e| io_err("fsyncing", &path, e))?;
+    file.sync_all().map_err(|e| io_err("fsyncing", &path, e))?;
+    Ok(())
+}
+
+/// fsync a directory so a just-created/renamed entry survives power loss
+/// (POSIX: the rename itself is atomic, but only the directory fsync makes
+/// it durable).
+fn fsync_dir(path: &Path, site: &'static str) -> Result<(), CkptError> {
+    if failpoint::check(site).is_some() {
+        return Err(io_err("fsyncing dir", path, failpoint::injected_io_error(site)));
+    }
+    #[cfg(unix)]
+    {
+        let f = fs::File::open(path).map_err(|e| io_err("opening dir", path, e))?;
+        f.sync_all().map_err(|e| io_err("fsyncing dir", path, e))?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
+
+/// Read a payload file and verify it byte-for-byte against its manifest
+/// entry: exact length (torn/truncated/padded files), then CRC32
+/// (bit flips), then the shape the caller expects.
+fn read_verified(dir: &Path, m: &GenManifest, name: &str, expect_bytes: u64) -> Result<Vec<u8>, CkptError> {
+    let meta = m
+        .files
+        .get(name)
+        .ok_or_else(|| mf_err(m.gen, format!("missing file entry for {name}")))?;
+    let path = dir.join(name);
+    let bytes = fs::read(&path).map_err(|e| io_err("reading", &path, e))?;
+    if bytes.len() as u64 != meta.bytes {
+        return Err(CkptError::LengthMismatch {
+            file: path,
+            expected_bytes: meta.bytes,
+            actual_bytes: bytes.len() as u64,
+        });
+    }
+    let actual = crc32(&bytes);
+    if actual != meta.crc {
+        return Err(CkptError::ChecksumMismatch { file: path, expected: meta.crc, actual });
+    }
+    if bytes.len() as u64 != expect_bytes {
+        return Err(CkptError::LengthMismatch {
+            file: path,
+            expected_bytes: expect_bytes,
+            actual_bytes: bytes.len() as u64,
+        });
+    }
+    Ok(bytes)
+}
+
+fn read_f32_verified(dir: &Path, m: &GenManifest, name: &str, n: usize) -> Result<Vec<f32>, CkptError> {
+    let bytes = read_verified(dir, m, name, n as u64 * 4)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn read_u32_verified(dir: &Path, m: &GenManifest, name: &str) -> Result<Vec<u32>, CkptError> {
+    let meta = m
+        .files
+        .get(name)
+        .ok_or_else(|| mf_err(m.gen, format!("missing file entry for {name}")))?;
+    let bytes = read_verified(dir, m, name, meta.bytes)?;
+    if bytes.len() % 4 != 0 {
+        return Err(mf_err(m.gen, format!("{name}: size not a multiple of 4")));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+// ---------------------------------------------------------------------------
+// generation scan / chain resolution
+// ---------------------------------------------------------------------------
+
+fn gen_dir_name(gen: u64) -> String {
+    format!("gen-{gen:06}")
+}
+
+fn scan_gens(root: &Path) -> Vec<u64> {
+    let mut ids = Vec::new();
+    if let Ok(entries) = fs::read_dir(root) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            if let Some(id) = name.to_str().and_then(|n| n.strip_prefix("gen-")) {
+                if let Ok(id) = id.parse::<u64>() {
+                    ids.push(id);
+                }
+            }
+        }
+    }
+    ids.sort_unstable();
+    ids
+}
+
+fn read_gen_manifest(root: &Path, gen: u64) -> Result<GenManifest, CkptError> {
+    let path = root.join(gen_dir_name(gen)).join("MANIFEST");
+    let text = fs::read_to_string(&path).map_err(|e| io_err("reading", &path, e))?;
+    parse_manifest(&text, gen)
+}
+
+/// Walk one candidate generation's delta chain back to its full base,
+/// validating every manifest and link. Returns the chain base-first.
+fn try_chain(root: &Path, gen: u64) -> Result<Vec<GenManifest>, CkptError> {
+    let mut chain = vec![read_gen_manifest(root, gen)?];
+    while chain.last().unwrap().kind == SaveKind::Delta {
+        let cur = chain.last().unwrap();
+        if chain.len() > 4096 {
+            return Err(mf_err(cur.gen, "delta chain too long (cycle?)"));
+        }
+        let parent = read_gen_manifest(root, cur.parent)?;
+        if parent.gen >= cur.gen || parent.step > cur.step {
+            return Err(mf_err(cur.gen, "parent generation is not older than its delta"));
+        }
+        let link_ok = match parent.kind {
+            SaveKind::Full => parent.gen == cur.base && cur.chain == 1,
+            SaveKind::Delta => parent.base == cur.base && parent.chain + 1 == cur.chain,
+        };
+        if !link_ok {
+            return Err(mf_err(cur.gen, "broken base/chain link to parent"));
+        }
+        if Identity::of_manifest(&parent) != Identity::of_manifest(cur) {
+            return Err(mf_err(cur.gen, "chain identity mismatch (shapes changed mid-chain)"));
+        }
+        chain.push(parent);
+    }
+    chain.reverse();
+    Ok(chain)
+}
+
+/// Newest loadable chain in `root`, base-first: generations are tried
+/// newest-first and the first one whose whole manifest chain validates
+/// wins — a torn manifest (kill mid-save would never leave one, but disk
+/// damage can) silently falls back to the previous generation.
+fn resolve_chain(root: &Path) -> Result<Vec<GenManifest>, CkptError> {
+    let ids = scan_gens(root);
+    if ids.is_empty() {
+        return Err(CkptError::NoCheckpoint { root: root.to_path_buf() });
+    }
+    let mut first_err = None;
+    for &gen in ids.iter().rev() {
+        match try_chain(root, gen) {
+            Ok(chain) => return Ok(chain),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    Err(first_err.unwrap())
+}
+
+// ---------------------------------------------------------------------------
+// the store
+// ---------------------------------------------------------------------------
+
+/// Tuning knobs of a [`CheckpointStore`].
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// deltas allowed after a full base before the store compacts back to
+    /// a full save (0 = every save is full)
+    pub max_delta_chain: usize,
+}
+
+impl Default for CheckpointConfig {
+    fn default() -> CheckpointConfig {
+        CheckpointConfig { max_delta_chain: 8 }
+    }
+}
+
+/// The last successfully committed generation — what the next delta
+/// chains to. In-memory only: after a fresh [`CheckpointStore::open`] the
+/// store cannot know which rows changed since the on-disk chain, so the
+/// first save is always full.
+#[derive(Debug)]
+struct Anchor {
+    gen: u64,
+    step: u64,
+    base: u64,
+    chain: usize,
+    ident: Identity,
+}
+
+/// Outcome of one committed save.
+#[derive(Debug, Clone)]
+pub struct SaveReport {
+    pub gen: u64,
+    pub kind: SaveKind,
+    /// bytes across all payload files (tensors + page lists; MANIFEST
+    /// excluded) — deterministic for a given state/dirt pattern
+    pub payload_bytes: u64,
+    /// embedding rows serialized (full: all rows; delta: patched rows)
+    pub rows_written: u64,
+    /// payload files written
+    pub files: usize,
+}
+
+/// A crash-safe, generation-versioned checkpoint store rooted at one
+/// directory. See the module docs for the commit protocol and layout.
+#[derive(Debug)]
+pub struct CheckpointStore {
+    root: PathBuf,
+    cfg: CheckpointConfig,
+    /// dirty rows accumulated since the last committed save (the union of
+    /// every absorbed [`DirtyRows`] — survives failed saves)
+    pending_ent: HashSet<u32>,
+    pending_rel: HashSet<u32>,
+    anchor: Option<Anchor>,
+    /// base generation of the previous chain; when a new full base
+    /// commits, everything older is garbage-collected
+    last_base: Option<u64>,
+}
+
+impl CheckpointStore {
+    /// Open (or designate) a store at `root`. Does not create the
+    /// directory (the first save does); sweeps any `.staging.*` wreckage a
+    /// killed writer left behind. Never fails: a missing or unreadable
+    /// root simply means "no checkpoint yet" on load and is (re)created on
+    /// save.
+    pub fn open(root: impl AsRef<Path>) -> CheckpointStore {
+        let root = root.as_ref().to_path_buf();
+        if let Ok(entries) = fs::read_dir(&root) {
+            for entry in entries.flatten() {
+                if entry.file_name().to_string_lossy().starts_with(".staging.") {
+                    let _ = fs::remove_dir_all(entry.path());
+                }
+            }
+        }
+        CheckpointStore {
+            root,
+            cfg: CheckpointConfig::default(),
+            pending_ent: HashSet::new(),
+            pending_rel: HashSet::new(),
+            anchor: None,
+            last_base: None,
+        }
+    }
+
+    pub fn with_config(mut self, cfg: CheckpointConfig) -> CheckpointStore {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Fold one step's dirty-row accounting into the pending set. Call
+    /// this *before* anything resets the state's dirty sets (the snapshot
+    /// publish path does, every step) — [`AutoCheckpointer::after_step`]
+    /// sits at exactly that point in the trainer loop.
+    pub fn absorb_dirty(&mut self, dirty: &DirtyRows) {
+        self.pending_ent.extend(dirty.ent.iter().copied());
+        self.pending_rel.extend(dirty.rel.iter().copied());
+    }
+
+    /// Pending (entity, relation) dirty-row counts.
+    pub fn pending_rows(&self) -> (usize, usize) {
+        (self.pending_ent.len(), self.pending_rel.len())
+    }
+
+    /// Drop the delta anchor: the next save is a full base regardless of
+    /// chain length (manual compaction, or after out-of-band state
+    /// surgery the dirty sets did not record).
+    pub fn invalidate_anchor(&mut self) {
+        self.anchor = None;
+    }
+
+    fn delta_parent(&self, ident: &Identity, step: u64) -> Option<(u64, u64, usize)> {
+        match &self.anchor {
+            Some(a)
+                if a.ident == *ident && a.chain < self.cfg.max_delta_chain && a.step <= step =>
+            {
+                Some((a.gen, a.base, a.chain))
+            }
+            _ => None,
+        }
+    }
+
+    /// What the next [`CheckpointStore::save`] would commit — retry loops
+    /// use this to attribute failures to the right `kind` label.
+    pub fn next_kind(&self, state: &ModelState) -> SaveKind {
+        if self.delta_parent(&Identity::of_state(state), state.step).is_some() {
+            SaveKind::Delta
+        } else {
+            SaveKind::Full
+        }
+    }
+
+    /// Commit one generation (full, or a delta journal of the pending
+    /// dirty pages when a valid anchor exists). On error nothing is
+    /// committed, the staging directory is swept, and the pending dirty
+    /// set is retained for the retry.
+    pub fn save(&mut self, state: &ModelState) -> Result<SaveReport, CkptError> {
+        let ident = Identity::of_state(state);
+        let delta = self.delta_parent(&ident, state.step);
+        fs::create_dir_all(&self.root)
+            .map_err(|e| io_err("creating checkpoint root", &self.root, e))?;
+        let gen = scan_gens(&self.root).last().copied().unwrap_or(0) + 1;
+        let staging = self.root.join(format!(".staging.{}", gen_dir_name(gen)));
+        if staging.exists() {
+            let _ = fs::remove_dir_all(&staging);
+        }
+        fs::create_dir_all(&staging).map_err(|e| io_err("creating staging dir", &staging, e))?;
+
+        match self.write_generation(state, &staging, gen, delta) {
+            Ok(report) => {
+                if report.kind == SaveKind::Full {
+                    if let Some(prev_base) = self.last_base {
+                        // the new base supersedes the chain *before* the
+                        // previous one; keep current + previous for safety
+                        for old in scan_gens(&self.root) {
+                            if old < prev_base {
+                                let _ = fs::remove_dir_all(self.root.join(gen_dir_name(old)));
+                            }
+                        }
+                    }
+                    self.last_base = Some(gen);
+                }
+                let (base, chain) = match (report.kind, delta) {
+                    (SaveKind::Full, _) => (gen, 0),
+                    (SaveKind::Delta, Some((_, base, chain))) => (base, chain + 1),
+                    (SaveKind::Delta, None) => unreachable!("delta save without an anchor"),
+                };
+                self.anchor = Some(Anchor { gen, step: state.step, base, chain, ident });
+                self.pending_ent.clear();
+                self.pending_rel.clear();
+                Ok(report)
+            }
+            Err(e) => {
+                // after a successful rename the staging path no longer
+                // exists and this is a no-op — the committed generation
+                // (orphaned by the reported failure) stays on disk and is
+                // simply superseded by the retry's higher generation
+                let _ = fs::remove_dir_all(&staging);
+                Err(e)
+            }
+        }
+    }
+
+    fn write_generation(
+        &self,
+        state: &ModelState,
+        staging: &Path,
+        gen: u64,
+        delta: Option<(u64, u64, usize)>,
+    ) -> Result<SaveReport, CkptError> {
+        let mut files: BTreeMap<String, FileMeta> = BTreeMap::new();
+        let mut rows_written = 0u64;
+        let kind = if delta.is_some() { SaveKind::Delta } else { SaveKind::Full };
+
+        match kind {
+            SaveKind::Full => {
+                for (tag, t) in [("ent", &state.entities), ("rel", &state.relations)] {
+                    for (suffix, field) in [("data", &t.data), ("m", &t.m), ("v", &t.v)] {
+                        let name = format!("{tag}.{suffix}.bin");
+                        let meta = write_f32_slices(&staging.join(&name), &[field])?;
+                        files.insert(name, meta);
+                    }
+                    rows_written += t.rows as u64;
+                }
+            }
+            SaveKind::Delta => {
+                for (tag, t, pending) in [
+                    ("ent", &state.entities, &self.pending_ent),
+                    ("rel", &state.relations, &self.pending_rel),
+                ] {
+                    let pages = dirty_pages(pending, t.rows);
+                    if pages.is_empty() {
+                        continue;
+                    }
+                    let name = format!("{tag}.pages.bin");
+                    let meta = write_u32_file(&staging.join(&name), &pages)?;
+                    files.insert(name, meta);
+                    let page_span = |p: u32| {
+                        let start = p as usize * PAGE_ROWS;
+                        (start, (start + PAGE_ROWS).min(t.rows))
+                    };
+                    for (suffix, field) in [("data", &t.data), ("m", &t.m), ("v", &t.v)] {
+                        let slices: Vec<&[f32]> = pages
+                            .iter()
+                            .map(|&p| {
+                                let (start, end) = page_span(p);
+                                &field[start * t.dim..end * t.dim]
+                            })
+                            .collect();
+                        let name = format!("{tag}.delta.{suffix}.bin");
+                        let meta = write_f32_slices(&staging.join(&name), &slices)?;
+                        files.insert(name, meta);
+                    }
+                    rows_written += pages
+                        .iter()
+                        .map(|&p| {
+                            let (start, end) = page_span(p);
+                            (end - start) as u64
+                        })
+                        .sum::<u64>();
+                }
+            }
+        }
+        // dense params are tiny relative to the tables: always whole
+        for (name, p) in &state.dense {
+            let fname = name.replace('.', "_");
+            for (suffix, field) in [("data", &p.data), ("m", &p.m), ("v", &p.v)] {
+                let name = format!("dense.{fname}.{suffix}.bin");
+                let meta = write_f32_slices(&staging.join(&name), &[field])?;
+                files.insert(name, meta);
+            }
+        }
+
+        let payload_bytes = files.values().map(|f| f.bytes).sum();
+        let n_files = files.len();
+        let (parent, base, chain) = match delta {
+            Some((parent, base, chain)) => (parent, base, chain + 1),
+            None => (0, gen, 0),
+        };
+        let manifest = GenManifest {
+            gen,
+            kind,
+            step: state.step,
+            model: state.model.clone(),
+            ent_rows: state.entities.rows,
+            ent_dim: state.entities.dim,
+            rel_rows: state.relations.rows,
+            rel_dim: state.relations.dim,
+            repr_dim: state.repr_dim,
+            dense: state.dense.keys().cloned().collect(),
+            parent,
+            base,
+            chain,
+            files,
+        };
+        write_manifest(staging, &manifest)?;
+        fsync_dir(staging, FP_SYNC_STAGING)?;
+
+        // ---- the commit point ------------------------------------------
+        let committed = self.root.join(gen_dir_name(gen));
+        if failpoint::check(FP_RENAME).is_some() {
+            return Err(io_err("renaming", &committed, failpoint::injected_io_error(FP_RENAME)));
+        }
+        fs::rename(staging, &committed)
+            .map_err(|e| io_err("committing (rename)", &committed, e))?;
+        fsync_dir(&self.root, FP_SYNC_ROOT)?;
+        if failpoint::check(FP_AFTER_COMMIT).is_some() {
+            return Err(io_err(
+                "after-commit",
+                &committed,
+                failpoint::injected_io_error(FP_AFTER_COMMIT),
+            ));
+        }
+        Ok(SaveReport { gen, kind, payload_bytes, rows_written, files: n_files })
+    }
+
+    /// Recover the newest committed generation into `state` (replaying
+    /// base + deltas for a result bitwise identical to a full save),
+    /// verifying every payload file's length and CRC. Returns the loaded
+    /// generation id. The state's dirty tracking is invalidated: the next
+    /// snapshot publish must be a full capture.
+    pub fn load_latest(&self, state: &mut ModelState) -> Result<u64, CkptError> {
+        let chain = resolve_chain(&self.root)?;
+        let latest = chain.last().expect("resolve_chain never returns empty");
+        check_compatible(latest, state)?;
+
+        for m in &chain {
+            let dir = self.root.join(gen_dir_name(m.gen));
+            match m.kind {
+                SaveKind::Full => {
+                    for (tag, t) in [("ent", &mut state.entities), ("rel", &mut state.relations)]
+                    {
+                        let n = t.rows * t.dim;
+                        t.data = read_f32_verified(&dir, m, &format!("{tag}.data.bin"), n)?;
+                        t.m = read_f32_verified(&dir, m, &format!("{tag}.m.bin"), n)?;
+                        t.v = read_f32_verified(&dir, m, &format!("{tag}.v.bin"), n)?;
+                    }
+                }
+                SaveKind::Delta => {
+                    for (tag, t) in [("ent", &mut state.entities), ("rel", &mut state.relations)]
+                    {
+                        let pages_name = format!("{tag}.pages.bin");
+                        if !m.files.contains_key(&pages_name) {
+                            continue; // no rows of this table were dirty
+                        }
+                        let pages = read_u32_verified(&dir, m, &pages_name)?;
+                        if !pages.windows(2).all(|w| w[0] < w[1]) {
+                            return Err(mf_err(m.gen, format!("{pages_name}: unsorted pages")));
+                        }
+                        let n: usize = pages
+                            .iter()
+                            .map(|&p| {
+                                let start = p as usize * PAGE_ROWS;
+                                (start + PAGE_ROWS).min(t.rows).saturating_sub(start) * t.dim
+                            })
+                            .sum();
+                        let data =
+                            read_f32_verified(&dir, m, &format!("{tag}.delta.data.bin"), n)?;
+                        let mm = read_f32_verified(&dir, m, &format!("{tag}.delta.m.bin"), n)?;
+                        let vv = read_f32_verified(&dir, m, &format!("{tag}.delta.v.bin"), n)?;
+                        apply_page_patch(t, &pages, &data, &mm, &vv, m.gen)?;
+                    }
+                }
+            }
+        }
+        // dense params are written whole every generation: latest wins
+        let latest_dir = self.root.join(gen_dir_name(latest.gen));
+        for (name, p) in &mut state.dense {
+            let fname = name.replace('.', "_");
+            let n = p.data.len();
+            p.data =
+                read_f32_verified(&latest_dir, latest, &format!("dense.{fname}.data.bin"), n)?;
+            p.m = read_f32_verified(&latest_dir, latest, &format!("dense.{fname}.m.bin"), n)?;
+            p.v = read_f32_verified(&latest_dir, latest, &format!("dense.{fname}.v.bin"), n)?;
+        }
+        state.step = latest.step;
+        // the tables changed wholesale behind the optimizer's back: the
+        // next snapshot publish must be a full capture, not a delta
+        state.dirty.invalidate();
+        Ok(latest.gen)
+    }
+
+    /// Committed generation ids, oldest first (manifests not validated).
+    pub fn generations(&self) -> Vec<u64> {
+        scan_gens(&self.root)
+    }
+}
+
+/// Sorted unique page indices covering `pending` (rows outside the table
+/// are ignored defensively — they cannot arise from optimizer grads).
+fn dirty_pages(pending: &HashSet<u32>, rows: usize) -> Vec<u32> {
+    let set: BTreeSet<u32> = pending
+        .iter()
+        .filter(|&&id| (id as usize) < rows)
+        .map(|&id| id / PAGE_ROWS as u32)
+        .collect();
+    set.into_iter().collect()
+}
+
+fn apply_page_patch(
+    t: &mut EmbeddingTable,
+    pages: &[u32],
+    data: &[f32],
+    m: &[f32],
+    v: &[f32],
+    gen: u64,
+) -> Result<(), CkptError> {
+    let dim = t.dim;
+    let mut off = 0usize;
+    for &p in pages {
+        let start = p as usize * PAGE_ROWS;
+        if start >= t.rows {
+            return Err(mf_err(gen, format!("page {p} out of range for {} rows", t.rows)));
+        }
+        let end = (start + PAGE_ROWS).min(t.rows);
+        let n = (end - start) * dim;
+        if off + n > data.len() {
+            return Err(mf_err(gen, "delta payload shorter than its page list"));
+        }
+        t.data[start * dim..end * dim].copy_from_slice(&data[off..off + n]);
+        t.m[start * dim..end * dim].copy_from_slice(&m[off..off + n]);
+        t.v[start * dim..end * dim].copy_from_slice(&v[off..off + n]);
+        off += n;
+    }
+    if off != data.len() {
+        return Err(mf_err(gen, "delta payload longer than its page list"));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// metrics
+// ---------------------------------------------------------------------------
+
+/// Checkpoint payload-size histogram bounds, bytes (log-spaced ×4).
+pub const CKPT_BYTES_BOUNDS: [f64; 10] = [
+    4096.0,
+    16384.0,
+    65536.0,
+    262144.0,
+    1048576.0,
+    4194304.0,
+    16777216.0,
+    67108864.0,
+    268435456.0,
+    1073741824.0,
+];
+
+/// Checkpoint observability, reusing the serve tier's atomic primitives
+/// (recording is lock-free; rendering allocates on scrape only). Families:
+/// `ngdb_train_checkpoint_{saves,failures,retries}_total{kind="full"|"delta"}`
+/// plus payload-bytes and save-duration histograms.
+#[derive(Debug)]
+pub struct CheckpointMetrics {
+    pub saves_full: Counter,
+    pub saves_delta: Counter,
+    /// saves that failed permanently (retries exhausted)
+    pub failures_full: Counter,
+    pub failures_delta: Counter,
+    /// retry attempts after a transient save error
+    pub retries_full: Counter,
+    pub retries_delta: Counter,
+    /// payload bytes per committed save
+    pub save_bytes: Histogram,
+    /// wall time per committed save, seconds (includes retries/backoff)
+    pub save_seconds: Histogram,
+}
+
+impl Default for CheckpointMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CheckpointMetrics {
+    pub fn new() -> CheckpointMetrics {
+        CheckpointMetrics {
+            saves_full: Counter::default(),
+            saves_delta: Counter::default(),
+            failures_full: Counter::default(),
+            failures_delta: Counter::default(),
+            retries_full: Counter::default(),
+            retries_delta: Counter::default(),
+            save_bytes: Histogram::new(&CKPT_BYTES_BOUNDS),
+            save_seconds: Histogram::new(&LATENCY_BOUNDS),
+        }
+    }
+
+    /// Render in Prometheus text exposition format (validated by
+    /// `scripts/prom_parse.py`, sampled in
+    /// `benches/baselines/serve_metrics_sample.prom`).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(2048);
+        kind_counter(
+            &mut out,
+            "ngdb_train_checkpoint_saves_total",
+            "Checkpoint generations committed, by kind (full base or delta journal).",
+            self.saves_full.get(),
+            self.saves_delta.get(),
         );
+        kind_counter(
+            &mut out,
+            "ngdb_train_checkpoint_failures_total",
+            "Checkpoint saves that failed permanently after retries (training continues).",
+            self.failures_full.get(),
+            self.failures_delta.get(),
+        );
+        kind_counter(
+            &mut out,
+            "ngdb_train_checkpoint_retries_total",
+            "Checkpoint save retry attempts after transient I/O errors.",
+            self.retries_full.get(),
+            self.retries_delta.get(),
+        );
+        render_histogram(
+            &mut out,
+            "ngdb_train_checkpoint_save_bytes",
+            "Payload bytes per committed checkpoint save.",
+            &self.save_bytes,
+        );
+        render_histogram(
+            &mut out,
+            "ngdb_train_checkpoint_save_seconds",
+            "Wall time per committed checkpoint save (including retries), seconds.",
+            &self.save_seconds,
+        );
+        out
     }
-    state.step = field("step")?.parse()?;
-    for (tag, t) in [("ent", &mut state.entities), ("rel", &mut state.relations)] {
-        let n = t.data.len();
-        t.data = read_f32_file(dir.join(format!("{tag}.data.bin")), n)?;
-        t.m = read_f32_file(dir.join(format!("{tag}.m.bin")), n)?;
-        t.v = read_f32_file(dir.join(format!("{tag}.v.bin")), n)?;
+}
+
+fn kind_counter(out: &mut String, name: &str, help: &str, full: u64, delta: u64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} counter\n\
+         {name}{{kind=\"full\"}} {full}\n{name}{{kind=\"delta\"}} {delta}\n"
+    ));
+}
+
+// ---------------------------------------------------------------------------
+// trainer-side auto checkpointing
+// ---------------------------------------------------------------------------
+
+/// Cadence + retry policy of an [`AutoCheckpointer`].
+#[derive(Debug, Clone)]
+pub struct CheckpointPolicy {
+    /// save whenever `state.step % every_steps == 0` (min 1)
+    pub every_steps: u64,
+    /// retry attempts after the first failure before giving up on this
+    /// save (the pending dirty set is retained either way)
+    pub max_retries: u32,
+    /// backoff before the first retry; doubles per subsequent retry
+    pub retry_backoff: Duration,
+}
+
+impl Default for CheckpointPolicy {
+    fn default() -> CheckpointPolicy {
+        CheckpointPolicy {
+            every_steps: 25,
+            max_retries: 3,
+            retry_backoff: Duration::from_millis(50),
+        }
     }
-    for (name, p) in &mut state.dense {
-        let fname = name.replace('.', "_");
-        let n = p.data.len();
-        p.data = read_f32_file(dir.join(format!("dense.{fname}.data.bin")), n)?;
-        p.m = read_f32_file(dir.join(format!("dense.{fname}.m.bin")), n)?;
-        p.v = read_f32_file(dir.join(format!("dense.{fname}.v.bin")), n)?;
+}
+
+/// Outcome of one save attempt cycle (possibly several retries).
+#[derive(Debug, Clone)]
+pub struct SaveOutcome {
+    /// `Some` iff a generation was committed
+    pub report: Option<SaveReport>,
+    pub retries: u32,
+    pub error: Option<String>,
+    pub elapsed: Duration,
+}
+
+impl SaveOutcome {
+    pub fn ok(&self) -> bool {
+        self.report.is_some()
     }
-    // the tables changed wholesale behind the optimizer's back: the next
-    // snapshot publish must be a full capture, not a delta
-    state.dirty.invalidate();
+}
+
+/// Periodic checkpointing for the training loop: absorbs the optimizer's
+/// dirty rows every step, saves on a cadence, retries transient I/O
+/// errors with exponential backoff, and **never** propagates a failure —
+/// a checkpoint that cannot be written logs, counts into
+/// [`CheckpointMetrics`], and leaves training (and the serve tier's
+/// published snapshots) untouched.
+#[derive(Debug)]
+pub struct AutoCheckpointer {
+    store: CheckpointStore,
+    policy: CheckpointPolicy,
+    metrics: Arc<CheckpointMetrics>,
+}
+
+impl AutoCheckpointer {
+    pub fn new(store: CheckpointStore, policy: CheckpointPolicy) -> AutoCheckpointer {
+        AutoCheckpointer { store, policy, metrics: Arc::new(CheckpointMetrics::new()) }
+    }
+
+    /// Share a metrics registry (e.g. one scraped alongside
+    /// [`crate::serve::ServeMetrics`]).
+    pub fn with_metrics(mut self, metrics: Arc<CheckpointMetrics>) -> AutoCheckpointer {
+        self.metrics = metrics;
+        self
+    }
+
+    pub fn metrics(&self) -> Arc<CheckpointMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn store(&self) -> &CheckpointStore {
+        &self.store
+    }
+
+    pub fn store_mut(&mut self) -> &mut CheckpointStore {
+        &mut self.store
+    }
+
+    /// The trainer hook: absorb this step's dirty rows (before the
+    /// snapshot publish resets them), then save if the cadence says so.
+    /// Returns `None` off-cadence, `Some(outcome)` — never an error —
+    /// when a save ran.
+    pub fn after_step(&mut self, state: &ModelState) -> Option<SaveOutcome> {
+        self.store.absorb_dirty(&state.dirty);
+        let every = self.policy.every_steps.max(1);
+        if state.step == 0 || state.step % every != 0 {
+            return None;
+        }
+        Some(self.save_now(state))
+    }
+
+    /// Save immediately with the retry/backoff policy. Infallible by
+    /// design: the failure path is a log line + metrics, not an `Err`.
+    pub fn save_now(&mut self, state: &ModelState) -> SaveOutcome {
+        let started = Instant::now();
+        // eligibility cannot change across retries (anchor and pending
+        // are only updated on success), so attribute every retry/failure
+        // to the kind the first attempt went for
+        let kind = self.store.next_kind(state);
+        let mut retries = 0u32;
+        loop {
+            match self.store.save(state) {
+                Ok(report) => {
+                    match report.kind {
+                        SaveKind::Full => self.metrics.saves_full.inc(),
+                        SaveKind::Delta => self.metrics.saves_delta.inc(),
+                    }
+                    let elapsed = started.elapsed();
+                    self.metrics.save_bytes.observe(report.payload_bytes as f64);
+                    self.metrics.save_seconds.observe(elapsed.as_secs_f64());
+                    return SaveOutcome { report: Some(report), retries, error: None, elapsed };
+                }
+                Err(e) => {
+                    if retries >= self.policy.max_retries {
+                        match kind {
+                            SaveKind::Full => self.metrics.failures_full.inc(),
+                            SaveKind::Delta => self.metrics.failures_delta.inc(),
+                        }
+                        eprintln!(
+                            "checkpoint: save failed after {} attempt(s): {e} — \
+                             training continues, dirty rows retained for the next save",
+                            retries + 1
+                        );
+                        return SaveOutcome {
+                            report: None,
+                            retries,
+                            error: Some(e.to_string()),
+                            elapsed: started.elapsed(),
+                        };
+                    }
+                    retries += 1;
+                    match kind {
+                        SaveKind::Full => self.metrics.retries_full.inc(),
+                        SaveKind::Delta => self.metrics.retries_delta.inc(),
+                    }
+                    let backoff = self.policy.retry_backoff * 2u32.pow((retries - 1).min(16));
+                    if !backoff.is_zero() {
+                        std::thread::sleep(backoff);
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// legacy one-call API
+// ---------------------------------------------------------------------------
+
+/// Save `state` under `dir` as one full generation (created if needed).
+/// The legacy convenience wrapper — long-running trainers should hold a
+/// [`CheckpointStore`] (or [`AutoCheckpointer`]) for incremental saves.
+pub fn save(state: &ModelState, dir: &str) -> Result<()> {
+    let mut store = CheckpointStore::open(dir);
+    store.save(state)?;
+    Ok(())
+}
+
+/// Restore the latest committed generation into an already-initialized
+/// `state` (shapes must match — init the state from the same
+/// manifest/graph first).
+pub fn load(state: &mut ModelState, dir: &str) -> Result<()> {
+    CheckpointStore::open(dir).load_latest(state)?;
     Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::ParamTensor;
     use crate::runtime::{MockRuntime, Runtime};
     use crate::util::rng::Rng;
 
     fn tmp(name: &str) -> String {
-        std::env::temp_dir().join(format!("ngdb_ckpt_{name}")).to_string_lossy().into_owned()
+        let p = std::env::temp_dir().join(format!("ngdb_ckpt_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p); // stale layouts from prior runs
+        p.to_string_lossy().into_owned()
     }
 
     fn state() -> ModelState {
         let rt = MockRuntime::new();
         ModelState::init(rt.manifest(), "mock", 10, 4, None, 1).unwrap()
+    }
+
+    fn assert_bitwise(a: &ModelState, b: &ModelState) {
+        // Vec<f32> equality is bitwise for the finite values used here
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.entities.data, b.entities.data);
+        assert_eq!(a.entities.m, b.entities.m);
+        assert_eq!(a.entities.v, b.entities.v);
+        assert_eq!(a.relations.data, b.relations.data);
+        assert_eq!(a.relations.m, b.relations.m);
+        assert_eq!(a.relations.v, b.relations.v);
+        for (name, pa) in &a.dense {
+            let pb = &b.dense[name];
+            assert_eq!(pa.data, pb.data);
+            assert_eq!(pa.m, pb.m);
+            assert_eq!(pa.v, pb.v);
+        }
     }
 
     #[test]
@@ -138,7 +1448,7 @@ mod tests {
         a.relations.v[1] = 0.25;
         // the mock model has no dense params; inject one (dotted name —
         // exercises the filename mangling) to cover the dense path
-        let dense = crate::model::ParamTensor {
+        let dense = ParamTensor {
             shape: vec![2, 3],
             data: (0..6).map(|i| (i as f32) * 0.3 - 1.0).collect(),
             m: vec![0.125; 6],
@@ -150,7 +1460,7 @@ mod tests {
         let mut b = state();
         b.dense.insert(
             "proj.w".into(),
-            crate::model::ParamTensor {
+            ParamTensor {
                 shape: vec![2, 3],
                 data: vec![9.0; 6],
                 m: vec![9.0; 6],
@@ -158,18 +1468,107 @@ mod tests {
             },
         );
         load(&mut b, &dir).unwrap();
-        assert_eq!(b.step, 42);
-        // Vec<f32> equality is bitwise for the finite values used here
-        assert_eq!(a.entities.data, b.entities.data);
-        assert_eq!(a.entities.m, b.entities.m);
-        assert_eq!(a.entities.v, b.entities.v);
-        assert_eq!(a.relations.data, b.relations.data);
-        assert_eq!(a.relations.m, b.relations.m);
-        assert_eq!(a.relations.v, b.relations.v);
-        let (pa, pb) = (&a.dense["proj.w"], &b.dense["proj.w"]);
-        assert_eq!(pa.data, pb.data);
-        assert_eq!(pa.m, pb.m);
-        assert_eq!(pa.v, pb.v);
+        assert_bitwise(&a, &b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn incremental_chain_replays_bitwise_vs_the_live_state() {
+        let dir = tmp("chain");
+        let mut live = state();
+        let mut store = CheckpointStore::open(&dir);
+        live.step = 1;
+        let base = store.save(&live).unwrap();
+        assert_eq!(base.kind, SaveKind::Full);
+
+        // three delta saves with scattered row updates (data + moments,
+        // both tables)
+        for k in 0..3u64 {
+            for i in 0..3usize {
+                let row = ((k as usize * 13 + i * 7) % live.entities.rows) as u32;
+                let dim = live.entities.dim;
+                for x in &mut live.entities.data[row as usize * dim..(row as usize + 1) * dim] {
+                    *x += 0.25 + k as f32;
+                }
+                live.entities.m[row as usize * dim] = 0.5 + k as f32;
+                live.dirty.ent.insert(row);
+            }
+            let rrow = (k % live.relations.rows as u64) as u32;
+            live.relations.v[rrow as usize * live.relations.dim] = 1.0 + k as f32;
+            live.dirty.rel.insert(rrow);
+            live.step += 1;
+            store.absorb_dirty(&live.dirty);
+            live.dirty.reset_to(live.step);
+            let r = store.save(&live).unwrap();
+            assert_eq!(r.kind, SaveKind::Delta, "save {k} must ride the delta path");
+            assert!(
+                r.payload_bytes < base.payload_bytes,
+                "delta payload {} must undercut the full {}",
+                r.payload_bytes,
+                base.payload_bytes
+            );
+        }
+
+        let mut restored = state();
+        let gen = CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+        assert_eq!(gen, 4);
+        assert_bitwise(&live, &restored);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chain_compacts_to_a_full_base_and_gcs_old_generations() {
+        let dir = tmp("compact");
+        let mut live = state();
+        let mut store = CheckpointStore::open(&dir)
+            .with_config(CheckpointConfig { max_delta_chain: 2 });
+        let mut kinds = Vec::new();
+        for k in 0..6u64 {
+            live.step = k + 1;
+            live.entities.data[k as usize % 40] += 1.0;
+            live.dirty.ent.insert((k % 10) as u32);
+            store.absorb_dirty(&live.dirty);
+            live.dirty.reset_to(live.step);
+            kinds.push(store.save(&live).unwrap().kind);
+        }
+        assert_eq!(
+            kinds,
+            [
+                SaveKind::Full,  // gen 1: no anchor
+                SaveKind::Delta, // gen 2: chain 1
+                SaveKind::Delta, // gen 3: chain 2 == max
+                SaveKind::Full,  // gen 4: compaction
+                SaveKind::Delta,
+                SaveKind::Delta,
+            ]
+        );
+        // gen 4's base commit GC'd everything older than the previous
+        // base (gen 1 started the previous chain, so nothing yet); a
+        // further full commit drops gens 1-3
+        store.invalidate_anchor();
+        live.step = 7;
+        assert_eq!(store.save(&live).unwrap().kind, SaveKind::Full);
+        assert_eq!(store.generations(), vec![4, 5, 6, 7]);
+        let mut restored = state();
+        CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+        assert_bitwise(&live, &restored);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_delta_generation_is_loadable() {
+        let dir = tmp("empty_delta");
+        let mut live = state();
+        let mut store = CheckpointStore::open(&dir);
+        live.step = 1;
+        store.save(&live).unwrap();
+        live.step = 2; // step moved, no rows dirtied
+        let r = store.save(&live).unwrap();
+        assert_eq!(r.kind, SaveKind::Delta);
+        assert_eq!(r.rows_written, 0);
+        let mut restored = state();
+        CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+        assert_bitwise(&live, &restored);
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -196,8 +1595,137 @@ mod tests {
     }
 
     #[test]
+    fn relation_and_repr_shape_mismatches_rejected() {
+        let dir = tmp("relrepr");
+        let a = state();
+        save(&a, &dir).unwrap();
+        let rt = MockRuntime::new();
+        // relation vocab differs (5 vs 4) while the entity table matches
+        let mut b = ModelState::init(rt.manifest(), "mock", 10, 5, None, 1).unwrap();
+        let err = CheckpointStore::open(&dir).load_latest(&mut b).unwrap_err();
+        assert!(matches!(err, CkptError::Incompatible { .. }), "{err}");
+        assert!(err.to_string().contains("relation table"), "{err}");
+        // repr width differs
+        let mut c = state();
+        c.repr_dim += 1;
+        let err = CheckpointStore::open(&dir).load_latest(&mut c).unwrap_err();
+        assert!(err.to_string().contains("repr_dim"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dense_name_set_mismatch_rejected_both_ways() {
+        let dir = tmp("dense_set");
+        let mut a = state();
+        a.dense.insert(
+            "proj.w".into(),
+            ParamTensor { shape: vec![2], data: vec![1.0, 2.0], m: vec![0.0; 2], v: vec![0.0; 2] },
+        );
+        save(&a, &dir).unwrap();
+        // checkpoint has a dense param the state lacks: must refuse (the
+        // old loader silently ignored it)
+        let mut b = state();
+        let err = CheckpointStore::open(&dir).load_latest(&mut b).unwrap_err();
+        assert!(matches!(err, CkptError::Incompatible { .. }), "{err}");
+        assert!(err.to_string().contains("dense param set"), "{err}");
+        // state has an extra dense param the checkpoint lacks: also refuse
+        let mut c = state();
+        c.dense.insert(
+            "proj.w".into(),
+            ParamTensor { shape: vec![2], data: vec![0.0; 2], m: vec![0.0; 2], v: vec![0.0; 2] },
+        );
+        c.dense.insert(
+            "other.w".into(),
+            ParamTensor { shape: vec![2], data: vec![0.0; 2], m: vec![0.0; 2], v: vec![0.0; 2] },
+        );
+        let err = CheckpointStore::open(&dir).load_latest(&mut c).unwrap_err();
+        assert!(matches!(err, CkptError::Incompatible { .. }), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn missing_checkpoint_is_clean_error() {
         let mut s = state();
+        let err = CheckpointStore::open("/nonexistent/ckpt").load_latest(&mut s).unwrap_err();
+        assert!(matches!(err, CkptError::NoCheckpoint { .. }), "{err}");
         assert!(load(&mut s, "/nonexistent/ckpt").is_err());
+    }
+
+    #[test]
+    fn stale_staging_dirs_are_swept_on_open() {
+        let dir = tmp("sweep");
+        let staging = Path::new(&dir).join(".staging.gen-000009");
+        std::fs::create_dir_all(&staging).unwrap();
+        std::fs::write(staging.join("ent.data.bin"), b"torn").unwrap();
+        let _ = CheckpointStore::open(&dir);
+        assert!(!staging.exists(), "open must sweep kill -9 wreckage");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_round_trips_and_detects_corruption() {
+        let m = GenManifest {
+            gen: 3,
+            kind: SaveKind::Delta,
+            step: 17,
+            model: "mock".into(),
+            ent_rows: 10,
+            ent_dim: 4,
+            rel_rows: 4,
+            rel_dim: 4,
+            repr_dim: 4,
+            dense: vec!["a.w".into(), "b.w".into()],
+            parent: 2,
+            base: 1,
+            chain: 2,
+            files: BTreeMap::from([
+                ("ent.pages.bin".to_string(), FileMeta { bytes: 8, crc: 0xDEAD_BEEF }),
+                ("ent.delta.data.bin".to_string(), FileMeta { bytes: 128, crc: 7 }),
+            ]),
+        };
+        let content = render_manifest(&m);
+        let full = format!("{content}crc=0x{:08X}\n", crc32(content.as_bytes()));
+        let back = parse_manifest(&full, 3).unwrap();
+        assert_eq!(back.kind, SaveKind::Delta);
+        assert_eq!((back.parent, back.base, back.chain), (2, 1, 2));
+        assert_eq!(back.dense, m.dense);
+        assert_eq!(back.files, m.files);
+        // single-byte corruption anywhere must fail the self-checksum
+        let mut corrupt = full.clone().into_bytes();
+        corrupt[10] ^= 0x01;
+        let err = parse_manifest(std::str::from_utf8(&corrupt).unwrap(), 3).unwrap_err();
+        assert!(matches!(err, CkptError::ManifestCorrupt { .. }), "{err}");
+        // and a manifest renamed into the wrong generation dir is refused
+        assert!(parse_manifest(&full, 4).is_err());
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vector() {
+        // the classic check value for the reflected IEEE polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn metrics_render_as_valid_kind_labelled_families() {
+        let m = CheckpointMetrics::new();
+        m.saves_full.inc();
+        m.saves_delta.add(3);
+        m.retries_delta.inc();
+        m.save_bytes.observe(100_000.0);
+        m.save_seconds.observe(0.01);
+        let text = m.render_prometheus();
+        for needle in [
+            "# TYPE ngdb_train_checkpoint_saves_total counter",
+            "ngdb_train_checkpoint_saves_total{kind=\"full\"} 1",
+            "ngdb_train_checkpoint_saves_total{kind=\"delta\"} 3",
+            "ngdb_train_checkpoint_failures_total{kind=\"full\"} 0",
+            "ngdb_train_checkpoint_retries_total{kind=\"delta\"} 1",
+            "# TYPE ngdb_train_checkpoint_save_bytes histogram",
+            "ngdb_train_checkpoint_save_bytes_bucket{le=\"+Inf\"} 1",
+            "ngdb_train_checkpoint_save_seconds_count 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
     }
 }

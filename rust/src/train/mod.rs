@@ -10,6 +10,10 @@ pub mod single_hop;
 pub mod step;
 pub mod trainer;
 
+pub use checkpoint::{
+    AutoCheckpointer, CheckpointConfig, CheckpointMetrics, CheckpointPolicy, CheckpointStore,
+    CkptError, SaveKind, SaveOutcome, SaveReport,
+};
 pub use multi_worker::{modeled_speedup, ring_allreduce_secs, train_multi_worker,
                        MultiWorkerReport};
 pub use single_hop::{train_complex, SingleHopReport};

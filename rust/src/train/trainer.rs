@@ -26,10 +26,11 @@
 //! price of sampling ahead; with `adaptive_lambda = 0` the sequences are
 //! identical.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use super::checkpoint::AutoCheckpointer;
 use super::step::{self, DagPrefetcher, StepPipeline};
 use crate::config::{Batching, ExperimentConfig, Pipelining};
 use crate::exec::{EngineConfig, EngineSession, Grads};
@@ -70,12 +71,16 @@ pub struct Trainer<'a> {
     /// [`crate::model::ModelSnapshot`] here — the train→serve handoff
     /// (see [`crate::serve::QueryService`])
     pub snapshots: Option<Arc<SnapshotCell>>,
+    /// when set, periodic crash-safe checkpointing runs after the
+    /// optimize stage (Mutex because [`Trainer::train`] takes `&self`;
+    /// uncontended — only the trainer thread locks it)
+    pub checkpoints: Option<Mutex<AutoCheckpointer>>,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(rt: &'a dyn Runtime, kg: Arc<KgStore>, cfg: ExperimentConfig) -> Trainer<'a> {
         let adam = AdamConfig { lr: cfg.lr as f32, ..Default::default() };
-        Trainer { rt, kg, cfg, adam, semantic: None, snapshots: None }
+        Trainer { rt, kg, cfg, adam, semantic: None, snapshots: None, checkpoints: None }
     }
 
     pub fn with_semantic(mut self, source: &'a dyn SemanticSource) -> Trainer<'a> {
@@ -89,6 +94,25 @@ impl<'a> Trainer<'a> {
     pub fn with_snapshots(mut self, cell: Arc<SnapshotCell>) -> Trainer<'a> {
         self.snapshots = Some(cell);
         self
+    }
+
+    /// Checkpoint on the auto-checkpointer's cadence after each optimize.
+    /// A save that fails permanently logs + counts via
+    /// [`super::checkpoint::CheckpointMetrics`] and never fails the step
+    /// — serving keeps answering from the last published snapshot either
+    /// way.
+    pub fn with_checkpoints(mut self, ckpt: AutoCheckpointer) -> Trainer<'a> {
+        self.checkpoints = Some(Mutex::new(ckpt));
+        self
+    }
+
+    /// The checkpoint hook: absorbs this step's dirty rows and saves on
+    /// cadence (a no-op without an auto-checkpointer). Must run *before*
+    /// [`Trainer::publish_snapshot`], which resets the state's dirty sets.
+    pub fn checkpoint_after_step(&self, state: &ModelState) {
+        if let Some(ckpt) = &self.checkpoints {
+            ckpt.lock().unwrap_or_else(|e| e.into_inner()).after_step(state);
+        }
     }
 
     /// The publish hook: COW delta capture + swap (a no-op without a
@@ -192,7 +216,9 @@ impl<'a> Trainer<'a> {
             // ---- execute + reduce + optimize (shared step pipeline) ------
             let outcome = pipeline.execute_step(&dags, state, &mut phases)?;
             peak_live = peak_live.max(outcome.exec.peak_live_bytes);
-            // serve handoff: swap the published snapshot post-optimize
+            // durability first (reads the dirty sets), then the serve
+            // handoff (which resets them)
+            phases.time("checkpoint", || self.checkpoint_after_step(state));
             self.publish_snapshot(state);
 
             // ---- feedback + metrics --------------------------------------
@@ -408,6 +434,65 @@ mod tests {
         let totals = cell.publish_totals();
         assert_eq!(totals.full_publishes, 1, "only the first publish is full");
         assert_eq!(totals.delta_publishes, steps as u64 - 1);
+    }
+
+    #[test]
+    fn training_checkpoints_on_cadence_and_recovers_bitwise() {
+        use crate::train::checkpoint::{
+            CheckpointPolicy, CheckpointStore, SaveKind,
+        };
+        let (rt, kg, cfg) = setup(Batching::OperatorLevel, Pipelining::Sync);
+        let dir = std::env::temp_dir()
+            .join(format!("ngdb_trainer_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut state = mock_state(&rt, &kg);
+        let steps = cfg.steps;
+        let ckpt = AutoCheckpointer::new(
+            CheckpointStore::open(&dir),
+            CheckpointPolicy { every_steps: 1, ..Default::default() },
+        );
+        let metrics = ckpt.metrics();
+        Trainer::new(&rt, kg, cfg)
+            .with_checkpoints(ckpt)
+            .train(&mut state)
+            .unwrap();
+        assert_eq!(
+            metrics.saves_full.get() + metrics.saves_delta.get(),
+            steps as u64,
+            "one committed generation per step"
+        );
+        assert_eq!(metrics.saves_full.get(), 1, "only the base save is full");
+        assert_eq!(metrics.failures_full.get() + metrics.failures_delta.get(), 0);
+        // a cold process (fresh store, no anchor) recovers the final
+        // trained state bitwise from base + deltas
+        let mut restored = ModelState::init(
+            crate::runtime::Runtime::manifest(&rt),
+            "mock",
+            state.entities.rows,
+            state.relations.rows,
+            None,
+            5,
+        )
+        .unwrap();
+        let store = CheckpointStore::open(&dir);
+        store.load_latest(&mut restored).unwrap();
+        assert_eq!(restored.step, state.step);
+        assert_eq!(restored.entities.data, state.entities.data);
+        assert_eq!(restored.entities.m, state.entities.m);
+        assert_eq!(restored.relations.v, state.relations.v);
+        assert_eq!(
+            store.generations().len() as u64,
+            steps as u64,
+            "every step committed a generation"
+        );
+        let mut fresh = CheckpointStore::open(&dir);
+        assert_eq!(
+            fresh.next_kind(&restored),
+            SaveKind::Full,
+            "a cold store has no delta anchor"
+        );
+        fresh.save(&restored).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

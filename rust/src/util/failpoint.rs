@@ -1,0 +1,223 @@
+//! Fault-injection points ("failpoints") for crash-safety testing.
+//!
+//! The checkpoint layer threads named sites through its write path
+//! (`ckpt.write.tensor`, `ckpt.commit.rename`, ...); a test arms a site
+//! with an [`Action`] and the next code path that [`check`]s it fails in a
+//! controlled way:
+//!
+//! * [`Action::Error`] — the site reports an injected I/O error (the
+//!   caller maps it into its own error type and unwinds normally);
+//! * [`Action::ShortWrite`] — the site truncates the write in progress
+//!   (the caller flushes the partial prefix to disk, then errors) — the
+//!   torn-file case checksums must catch;
+//! * [`Action::Abort`] — the process dies on the spot via
+//!   [`std::process::abort`], no destructors, no flushes — the `kill -9`
+//!   case the atomic-commit protocol must survive. Subprocess tests
+//!   (`rust/tests/checkpoint_crash.rs`) arm this in a child process and
+//!   assert the parent can always recover the previous generation.
+//!
+//! Sites are armed programmatically ([`set`]) or through the
+//! `NGDB_FAILPOINTS` environment variable (read once, on first check):
+//!
+//! ```text
+//! NGDB_FAILPOINTS="ckpt.commit.rename=abort;ckpt.write.tensor=error@3"
+//! ```
+//!
+//! `site=action` fires on the first hit; `@N` delays to the N-th hit;
+//! a trailing `*` (`site=error*`) fires on every hit until cleared. The
+//! registry is a single process-global mutex-guarded map — this is test
+//! scaffolding, not a hot path; an *unarmed* check is one mutex lock and
+//! a hash probe, and the map is empty in production.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// What an armed site does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// report an injected I/O error to the caller
+    Error,
+    /// truncate the write in progress, then report an error
+    ShortWrite,
+    /// kill the process immediately (no unwinding, no flushes)
+    Abort,
+}
+
+/// When an armed site fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// fire on the N-th hit (1-based), then disarm
+    Once(u64),
+    /// fire on every hit until [`clear`]ed
+    Always,
+}
+
+/// What [`check`] tells the caller to do. [`Action::Abort`] never returns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fired {
+    Error,
+    ShortWrite,
+}
+
+#[derive(Debug)]
+struct Site {
+    action: Action,
+    trigger: Trigger,
+    hits: u64,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Site>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, Site>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Ok(spec) = std::env::var("NGDB_FAILPOINTS") {
+            for (name, site) in parse_env(&spec) {
+                map.insert(name, site);
+            }
+        }
+        Mutex::new(map)
+    })
+}
+
+fn parse_env(spec: &str) -> Vec<(String, Site)> {
+    let mut out = Vec::new();
+    for entry in spec.split([';', ',']).map(str::trim).filter(|e| !e.is_empty()) {
+        let Some((name, rhs)) = entry.split_once('=') else {
+            eprintln!("failpoint: ignoring malformed NGDB_FAILPOINTS entry {entry:?}");
+            continue;
+        };
+        let (rhs, always) = match rhs.strip_suffix('*') {
+            Some(r) => (r, true),
+            None => (rhs, false),
+        };
+        let (action_str, nth) = match rhs.split_once('@') {
+            Some((a, n)) => (a, n.parse::<u64>().unwrap_or(1).max(1)),
+            None => (rhs, 1),
+        };
+        let action = match action_str {
+            "error" => Action::Error,
+            "shortwrite" | "short-write" => Action::ShortWrite,
+            "abort" => Action::Abort,
+            other => {
+                eprintln!("failpoint: unknown action {other:?} in NGDB_FAILPOINTS");
+                continue;
+            }
+        };
+        let trigger = if always { Trigger::Always } else { Trigger::Once(nth) };
+        out.push((name.trim().to_string(), Site { action, trigger, hits: 0 }));
+    }
+    out
+}
+
+/// Arm `name` with `action` under `trigger` (replaces any prior arming;
+/// hit counts restart at zero).
+pub fn set(name: &str, action: Action, trigger: Trigger) {
+    registry()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(name.to_string(), Site { action, trigger, hits: 0 });
+}
+
+/// Disarm `name` (a no-op if it was never armed).
+pub fn clear(name: &str) {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).remove(name);
+}
+
+/// Disarm every site and reset all hit counts.
+pub fn clear_all() {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Total hits recorded against `name` since it was (last) armed.
+pub fn hits(name: &str) -> u64 {
+    registry()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .get(name)
+        .map_or(0, |s| s.hits)
+}
+
+/// The instrumented code path calls this at each named site. Returns
+/// `None` (keep going) unless the site is armed and due, in which case the
+/// caller gets [`Fired::Error`] / [`Fired::ShortWrite`] — or, for
+/// [`Action::Abort`], the process dies right here.
+pub fn check(name: &str) -> Option<Fired> {
+    let mut map = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let site = map.get_mut(name)?;
+    site.hits += 1;
+    let due = match site.trigger {
+        Trigger::Once(nth) => site.hits == nth,
+        Trigger::Always => true,
+    };
+    if !due {
+        return None;
+    }
+    let action = site.action;
+    if matches!(site.trigger, Trigger::Once(_)) {
+        map.remove(name);
+    }
+    drop(map); // don't poison/hold the registry across an abort
+    match action {
+        Action::Error => Some(Fired::Error),
+        Action::ShortWrite => Some(Fired::ShortWrite),
+        Action::Abort => {
+            eprintln!("failpoint: aborting at site {name:?}");
+            std::process::abort();
+        }
+    }
+}
+
+/// Injected-error constructor, so every site reports a recognizable kind.
+pub fn injected_io_error(site: &str) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::Other,
+        format!("injected failpoint error at {site}"),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // each test uses its own site names: the registry is process-global
+    // and the test harness runs threads in parallel
+
+    #[test]
+    fn unarmed_sites_never_fire() {
+        assert_eq!(check("test.fp.unarmed"), None);
+        assert_eq!(hits("test.fp.unarmed"), 0);
+    }
+
+    #[test]
+    fn once_fires_on_the_nth_hit_then_disarms() {
+        set("test.fp.nth", Action::Error, Trigger::Once(3));
+        assert_eq!(check("test.fp.nth"), None);
+        assert_eq!(check("test.fp.nth"), None);
+        assert_eq!(check("test.fp.nth"), Some(Fired::Error));
+        assert_eq!(check("test.fp.nth"), None, "one-shot must disarm");
+    }
+
+    #[test]
+    fn always_fires_until_cleared() {
+        set("test.fp.always", Action::ShortWrite, Trigger::Always);
+        assert_eq!(check("test.fp.always"), Some(Fired::ShortWrite));
+        assert_eq!(check("test.fp.always"), Some(Fired::ShortWrite));
+        clear("test.fp.always");
+        assert_eq!(check("test.fp.always"), None);
+    }
+
+    #[test]
+    fn env_spec_parses_actions_counts_and_always() {
+        let sites = parse_env("a=error; b=shortwrite@4, c=abort, d=error*, junk, e=wat");
+        let by_name: std::collections::HashMap<_, _> =
+            sites.into_iter().map(|(n, s)| (n, s)).collect();
+        assert_eq!(by_name["a"].action, Action::Error);
+        assert_eq!(by_name["a"].trigger, Trigger::Once(1));
+        assert_eq!(by_name["b"].action, Action::ShortWrite);
+        assert_eq!(by_name["b"].trigger, Trigger::Once(4));
+        assert_eq!(by_name["c"].action, Action::Abort);
+        assert_eq!(by_name["d"].trigger, Trigger::Always);
+        assert!(!by_name.contains_key("junk"));
+        assert!(!by_name.contains_key("e"));
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod cli;
 pub mod counting_alloc;
+pub mod failpoint;
 pub mod json;
 pub mod proptest;
 pub mod rng;

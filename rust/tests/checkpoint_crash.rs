@@ -1,0 +1,393 @@
+//! Crash-recovery suite for the checkpoint store: kill the process at
+//! every fault-injection site mid-save and prove the previous generation
+//! always recovers bitwise; corrupt committed files every way a disk can
+//! (bit flip, truncation, torn manifest) and prove the loader refuses
+//! with a typed error — zero checksum failures pass silently.
+//!
+//! The kill tests re-exec this test binary filtered down to
+//! `crash_child_runs_to_abort` (a no-op without `NGDB_CRASH_DIR`): the
+//! child replays a deterministic mutation schedule, arms
+//! `Action::Abort` at the requested site, and dies inside the save. The
+//! parent then recovers from the wreckage like a restarted trainer
+//! would. Runs in the serial `NGDB_STRESS` CI job too (subprocess spawns
+//! + an armed global failpoint registry want --test-threads=1, though
+//! `FP_LOCK` keeps the default parallel run correct).
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use ngdb_zoo::model::ModelState;
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::train::checkpoint::{
+    AutoCheckpointer, CheckpointPolicy, CheckpointStore, CkptError, SaveKind, FAILPOINT_SITES,
+    FP_AFTER_COMMIT, FP_WRITE_TENSOR,
+};
+use ngdb_zoo::util::failpoint::{self, Action, Trigger};
+
+/// The failpoint registry is process-global: tests that arm sites or run
+/// saves while sites may be armed serialize through this.
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    FP_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("ngdb_crash_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// The child and the parent must construct the *same* initial state:
+/// recovery-after-restart always begins from a fresh init.
+fn seeded_state() -> ModelState {
+    let rt = MockRuntime::new();
+    ModelState::init(rt.manifest(), "mock", 37, 5, None, 7).unwrap()
+}
+
+/// Deterministic per-step mutation: a handful of scattered entity rows
+/// (data + both moments), one relation row, and the step counter —
+/// identical in the child (which saves it) and the parent (which replays
+/// it to compute the expected recovery).
+fn mutate(state: &mut ModelState, k: u64) {
+    let rows = state.entities.rows;
+    let dim = state.entities.dim;
+    for i in 0..6usize {
+        let row = (k as usize * 13 + i * 7) % rows;
+        for x in &mut state.entities.data[row * dim..(row + 1) * dim] {
+            *x = *x * 0.875 + k as f32 * 0.01 + i as f32 * 0.001;
+        }
+        state.entities.m[row * dim] = k as f32 * 0.5;
+        state.entities.v[row * dim + 1] = k as f32 * 0.25;
+        state.dirty.ent.insert(row as u32);
+    }
+    let rdim = state.relations.dim;
+    let rrow = (k % state.relations.rows as u64) as usize;
+    for x in &mut state.relations.data[rrow * rdim..(rrow + 1) * rdim] {
+        *x += 0.125 * k as f32;
+    }
+    state.dirty.rel.insert(rrow as u32);
+    state.step = k;
+}
+
+fn assert_bitwise(expected: &ModelState, restored: &ModelState) {
+    assert_eq!(expected.step, restored.step, "recovered step");
+    assert_eq!(expected.entities.data, restored.entities.data, "entity data");
+    assert_eq!(expected.entities.m, restored.entities.m, "entity m");
+    assert_eq!(expected.entities.v, restored.entities.v, "entity v");
+    assert_eq!(expected.relations.data, restored.relations.data, "relation data");
+    assert_eq!(expected.relations.m, restored.relations.m, "relation m");
+    assert_eq!(expected.relations.v, restored.relations.v, "relation v");
+}
+
+/// Run `k` mutation+save rounds against a fresh store in `dir`; round 1
+/// commits a full base, later rounds commit deltas.
+fn save_rounds(dir: &PathBuf, state: &mut ModelState, rounds: u64) -> CheckpointStore {
+    let mut store = CheckpointStore::open(dir);
+    for k in 1..=rounds {
+        mutate(state, k);
+        store.absorb_dirty(&state.dirty);
+        state.dirty.reset_to(k);
+        store.save(state).unwrap();
+    }
+    store
+}
+
+// ---------------------------------------------------------------------------
+// subprocess kill sweep
+// ---------------------------------------------------------------------------
+
+/// Child half of the kill sweep — a no-op unless spawned by the sweep
+/// with `NGDB_CRASH_DIR` set. Saves `NGDB_CRASH_AT - 1` generations
+/// normally, arms `NGDB_CRASH_SITE` with an abort, and dies inside the
+/// final save.
+#[test]
+fn crash_child_runs_to_abort() {
+    let Ok(dir) = std::env::var("NGDB_CRASH_DIR") else { return };
+    let site = std::env::var("NGDB_CRASH_SITE").expect("NGDB_CRASH_SITE");
+    let crash_at: u64 = std::env::var("NGDB_CRASH_AT").expect("NGDB_CRASH_AT").parse().unwrap();
+    let mut state = seeded_state();
+    let mut store = CheckpointStore::open(&dir);
+    for k in 1..=crash_at {
+        mutate(&mut state, k);
+        store.absorb_dirty(&state.dirty);
+        state.dirty.reset_to(k);
+        if k == crash_at {
+            failpoint::set(&site, Action::Abort, Trigger::Once(1));
+        }
+        store.save(&state).unwrap();
+        println!("SAVE_OK {k}");
+    }
+    // reachable only if the armed site was never hit during the save —
+    // that's a hole in the fault-injection coverage, not a pass
+    panic!("failpoint site {site:?} never fired during save {crash_at}");
+}
+
+#[test]
+fn kill_during_save_at_every_site_recovers_the_latest_committed_generation() {
+    let _g = lock(); // the post-recovery save below must not see armed sites
+    let exe = std::env::current_exe().unwrap();
+    for crash_at in [2u64, 3] {
+        for site in FAILPOINT_SITES {
+            let dir = tmp(&format!("kill_{crash_at}_{}", site.replace('.', "_")));
+            let out = Command::new(&exe)
+                .arg("crash_child_runs_to_abort")
+                .arg("--exact")
+                .arg("--nocapture")
+                .arg("--test-threads=1")
+                .env("NGDB_CRASH_DIR", &dir)
+                .env("NGDB_CRASH_SITE", site)
+                .env("NGDB_CRASH_AT", crash_at.to_string())
+                .output()
+                .expect("spawning crash child");
+            assert!(
+                !out.status.success(),
+                "child must die mid-save at {site} (crash_at={crash_at}): {}",
+                String::from_utf8_lossy(&out.stdout)
+            );
+
+            // everything before the aborted save committed; the abort
+            // site decides whether the final save made it — only
+            // after-commit lands past the rename
+            let committed = if site == FP_AFTER_COMMIT { crash_at } else { crash_at - 1 };
+            let mut expected = seeded_state();
+            for k in 1..=committed {
+                mutate(&mut expected, k);
+                expected.dirty.reset_to(k);
+            }
+
+            let mut restored = seeded_state();
+            let store = CheckpointStore::open(&dir); // sweeps stale staging
+            let gen = store
+                .load_latest(&mut restored)
+                .unwrap_or_else(|e| panic!("recovery after kill at {site}: {e}"));
+            assert_eq!(gen, committed, "recovered generation after kill at {site}");
+            assert_bitwise(&expected, &restored);
+            // and the survivor is a valid base for further saves
+            let mut store = store;
+            restored.dirty.ent.insert(0);
+            restored.step += 1;
+            store.absorb_dirty(&restored.dirty);
+            store.save(&restored).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corruption detection (typed errors, no silent garbage)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bit_flipped_tensor_file_is_a_typed_checksum_error() {
+    let _g = lock();
+    let dir = tmp("bitflip");
+    let mut state = seeded_state();
+    save_rounds(&dir, &mut state, 1);
+    let path = dir.join("gen-000001").join("ent.data.bin");
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10; // one flipped bit, same length
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut restored = seeded_state();
+    let err = CheckpointStore::open(&dir).load_latest(&mut restored).unwrap_err();
+    assert!(
+        matches!(err, CkptError::ChecksumMismatch { .. }),
+        "bit flip must surface as ChecksumMismatch, got: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_tensor_file_is_a_typed_length_error() {
+    let _g = lock();
+    let dir = tmp("trunc");
+    let mut state = seeded_state();
+    save_rounds(&dir, &mut state, 1);
+    let path = dir.join("gen-000001").join("rel.m.bin");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+
+    let mut restored = seeded_state();
+    let err = CheckpointStore::open(&dir).load_latest(&mut restored).unwrap_err();
+    assert!(
+        matches!(err, CkptError::LengthMismatch { .. }),
+        "truncation must surface as LengthMismatch, got: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_newest_manifest_falls_back_to_the_previous_generation() {
+    let _g = lock();
+    let dir = tmp("mf_fallback");
+    let mut state = seeded_state();
+    save_rounds(&dir, &mut state, 2);
+    // damage generation 2's commit record; generation 1 must win
+    let path = dir.join("gen-000002").join("MANIFEST");
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[20] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+
+    let mut expected = seeded_state();
+    mutate(&mut expected, 1);
+    let mut restored = seeded_state();
+    let gen = CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+    assert_eq!(gen, 1, "the damaged generation must be skipped");
+    assert_bitwise(&expected, &restored);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn injected_short_write_never_commits_and_the_retry_succeeds() {
+    let _g = lock();
+    let dir = tmp("shortwrite");
+    let mut state = seeded_state();
+    mutate(&mut state, 1);
+    let mut store = CheckpointStore::open(&dir);
+    store.absorb_dirty(&state.dirty);
+    failpoint::set(FP_WRITE_TENSOR, Action::ShortWrite, Trigger::Once(1));
+    let err = store.save(&state).unwrap_err();
+    assert!(matches!(err, CkptError::Io { .. }), "{err}");
+    assert!(
+        matches!(
+            CheckpointStore::open(&dir).load_latest(&mut seeded_state()),
+            Err(CkptError::NoCheckpoint { .. })
+        ),
+        "a torn staging write must leave nothing committed"
+    );
+    // pending dirt survived the failure; the clean retry commits gen 1
+    store.save(&state).unwrap();
+    let mut restored = seeded_state();
+    assert_eq!(CheckpointStore::open(&dir).load_latest(&mut restored).unwrap(), 1);
+    assert_bitwise(&state, &restored);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// incremental replay parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn base_plus_delta_replay_is_bitwise_identical_to_a_full_save() {
+    let _g = lock();
+    let dir_inc = tmp("replay_inc");
+    let dir_full = tmp("replay_full");
+    let mut state = seeded_state();
+    let store = save_rounds(&dir_inc, &mut state, 4); // 1 full + 3 deltas
+    assert_eq!(store.generations(), vec![1, 2, 3, 4]);
+    // the same final state, saved cold as one full generation
+    let mut full_store = CheckpointStore::open(&dir_full);
+    let report = full_store.save(&state).unwrap();
+    assert_eq!(report.kind, SaveKind::Full);
+
+    let mut via_deltas = seeded_state();
+    let mut via_full = seeded_state();
+    CheckpointStore::open(&dir_inc).load_latest(&mut via_deltas).unwrap();
+    CheckpointStore::open(&dir_full).load_latest(&mut via_full).unwrap();
+    assert_bitwise(&via_full, &via_deltas);
+    assert_bitwise(&state, &via_deltas);
+    std::fs::remove_dir_all(&dir_inc).ok();
+    std::fs::remove_dir_all(&dir_full).ok();
+}
+
+// ---------------------------------------------------------------------------
+// trainer-side robustness: retry/backoff + graceful degradation
+// ---------------------------------------------------------------------------
+
+fn quick_policy() -> CheckpointPolicy {
+    CheckpointPolicy {
+        every_steps: 1,
+        max_retries: 3,
+        retry_backoff: Duration::from_millis(1),
+    }
+}
+
+#[test]
+fn transient_io_error_is_retried_and_counted() {
+    let _g = lock();
+    let dir = tmp("retry");
+    let mut state = seeded_state();
+    mutate(&mut state, 1);
+    let mut ac = AutoCheckpointer::new(CheckpointStore::open(&dir), quick_policy());
+    failpoint::set(FP_WRITE_TENSOR, Action::Error, Trigger::Once(1));
+    let out = ac.after_step(&state).expect("cadence of 1 must save every step");
+    assert!(out.ok(), "one transient error must not fail the save: {:?}", out.error);
+    assert_eq!(out.retries, 1);
+    let m = ac.metrics();
+    assert_eq!(m.saves_full.get(), 1);
+    assert_eq!(m.retries_full.get(), 1);
+    assert_eq!(m.failures_full.get(), 0);
+    assert_eq!(m.save_bytes.count(), 1);
+    assert_eq!(m.save_seconds.count(), 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn permanent_io_failure_degrades_gracefully_and_later_saves_catch_up() {
+    let _g = lock();
+    let dir = tmp("permafail");
+    let mut state = seeded_state();
+    mutate(&mut state, 1);
+    let mut ac = AutoCheckpointer::new(CheckpointStore::open(&dir), quick_policy());
+    assert!(ac.after_step(&state).unwrap().ok(), "baseline full save");
+
+    mutate(&mut state, 2);
+    failpoint::set(FP_WRITE_TENSOR, Action::Error, Trigger::Always);
+    let out = ac.after_step(&state).expect("cadence of 1 must attempt every step");
+    failpoint::clear(FP_WRITE_TENSOR);
+    assert!(!out.ok(), "exhausted retries must report failure, not panic");
+    assert_eq!(out.retries, 3, "max_retries attempts before giving up");
+    assert!(out.error.as_deref().unwrap_or("").contains("injected"), "{:?}", out.error);
+    let m = ac.metrics();
+    assert_eq!(m.failures_delta.get(), 1, "the failed save was delta-eligible");
+    assert_eq!(m.retries_delta.get(), 3);
+
+    // the dirty rows from the failed save were retained: the next save
+    // carries steps 2 AND 3, and a cold load sees everything
+    mutate(&mut state, 3);
+    let out = ac.after_step(&state).expect("cadence");
+    assert!(out.ok(), "recovery save after the outage: {:?}", out.error);
+    let mut expected = seeded_state();
+    for k in 1..=3 {
+        mutate(&mut expected, k);
+        expected.dirty.reset_to(k);
+    }
+    let mut restored = seeded_state();
+    CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+    assert_bitwise(&expected, &restored);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn failure_after_commit_is_retried_as_a_sibling_generation() {
+    let _g = lock();
+    let dir = tmp("after_commit");
+    let mut state = seeded_state();
+    mutate(&mut state, 1);
+    let mut ac = AutoCheckpointer::new(CheckpointStore::open(&dir), quick_policy());
+    assert!(ac.after_step(&state).unwrap().ok());
+
+    // the generation lands on disk but the save *reports* failure (e.g.
+    // the root-dir fsync raced a remount): the retry must commit a
+    // sibling delta against the same parent, and recovery takes the
+    // newest — never a half-acknowledged orphan ahead of it
+    mutate(&mut state, 2);
+    failpoint::set(FP_AFTER_COMMIT, Action::Error, Trigger::Once(1));
+    let out = ac.after_step(&state).expect("cadence");
+    assert!(out.ok(), "{:?}", out.error);
+    assert_eq!(out.retries, 1);
+    assert_eq!(
+        ac.store().generations(),
+        vec![1, 2, 3],
+        "the orphaned gen 2 stays on disk; the retry committed gen 3"
+    );
+    let mut restored = seeded_state();
+    let gen = CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+    assert_eq!(gen, 3);
+    assert_bitwise(&state, &restored);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -52,6 +52,8 @@ LOWER_PATTERNS = (
     "secs",
     "_us",
     "_ms",
+    "fallback",
+    "failure",
 )
 
 
