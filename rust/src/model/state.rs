@@ -250,7 +250,10 @@ impl ModelState {
     }
 
     /// Dense param tensors for an artifact's param-arg list, in order.
-    pub fn params_for(&self, names: impl Iterator<Item = impl AsRef<str>>) -> Result<Vec<HostTensor>> {
+    pub fn params_for(
+        &self,
+        names: impl Iterator<Item = impl AsRef<str>>,
+    ) -> Result<Vec<HostTensor>> {
         names
             .map(|n| {
                 let n = n.as_ref();
