@@ -1,0 +1,101 @@
+//! Mmap-backed serving bench: resident bytes per worker, publish
+//! accounting, and QPS parity of a fleet serving out of one mapped
+//! serve-layout checkpoint vs a fleet of private heap copies. See
+//! `bench_harness::mmap_serving` for the methodology. Gated (the CI smoke
+//! runs this): at a 4-worker fleet the mapped residency must be ≥2× lower
+//! than heap — clean and steady-state — the delta accounting must be
+//! byte-identical across backings (checked inside the harness), no
+//! publish may fall back to a full capture, and mapped QPS must stay
+//! within 10% of heap.
+//!
+//! Env knobs: `NGDB_MMAP_ENTITIES` (default 50000), `NGDB_MMAP_ROUNDS`
+//! (4), `NGDB_MMAP_TOUCHED` (entities/100), `NGDB_MMAP_SHARDS` (4),
+//! `NGDB_MMAP_DIM` (64), `NGDB_MMAP_WORKERS` (4), `NGDB_MMAP_QUERIES`
+//! (256), `NGDB_MMAP_QPS_FLOOR` (0.9),
+//! `NGDB_MMAP_JSON` (output path, default `BENCH_mmap_serving.json`).
+
+use ngdb_zoo::bench_harness::knob;
+use ngdb_zoo::bench_harness::mmap_serving::{run, write_json, MmapServingOpts};
+
+fn main() {
+    let entities = knob("NGDB_MMAP_ENTITIES", 50_000.0) as usize;
+    let opts = MmapServingOpts {
+        entities,
+        touched_per_round: knob("NGDB_MMAP_TOUCHED", (entities / 100) as f64) as usize,
+        rounds: knob("NGDB_MMAP_ROUNDS", 4.0) as usize,
+        shards: knob("NGDB_MMAP_SHARDS", 4.0) as usize,
+        dim: knob("NGDB_MMAP_DIM", 64.0) as usize,
+        workers: knob("NGDB_MMAP_WORKERS", 4.0) as usize,
+        queries: knob("NGDB_MMAP_QUERIES", 256.0) as usize,
+        ..Default::default()
+    };
+
+    let report = run(&opts).unwrap_or_else(|e| panic!("mmap_serving failed: {e:#}"));
+
+    println!(
+        "\nmmap_serving: {} entities x dim {}, {} shards, {}-worker fleet, \
+         {} delta rounds x {} rows",
+        opts.entities, opts.dim, opts.shards, opts.workers, opts.rounds, opts.touched_per_round,
+    );
+    println!(
+        "  resident/worker: heap {:>12} B   mapped {:>12} B   ({:.2}x lower)",
+        report.heap_resident_per_worker,
+        report.mapped_resident_per_worker,
+        report.resident_reduction()
+    );
+    println!(
+        "  steady state   : heap {:>12} B   mapped {:>12} B   ({:.2}x lower)",
+        report.heap_resident_per_worker,
+        report.mapped_steady_resident_per_worker,
+        report.steady_resident_reduction()
+    );
+    println!(
+        "  serve file     : {:>12} B on disk, shared by all {} workers",
+        report.mapped_file_bytes, opts.workers
+    );
+    println!(
+        "  delta publish  : {:>12.0} B/round on both backings ({} remaps)",
+        report.publish_bytes_per_round, report.remaps
+    );
+    println!(
+        "  qps            : heap {:>10.0}   mapped {:>10.0}   (parity {:.3})",
+        report.heap_qps,
+        report.mapped_qps,
+        report.qps_parity()
+    );
+
+    // ---- gates (the CI smoke runs this bench) -----------------------------
+    assert_eq!(
+        report.full_fallbacks, 0,
+        "a delta-eligible publish silently fell back to a full capture"
+    );
+    assert_eq!(
+        report.remaps, opts.rounds as u64,
+        "every delta over the mapped base must keep referencing mapped pages"
+    );
+    if opts.workers >= 4 {
+        assert!(
+            report.resident_reduction() >= 2.0,
+            "a {}-worker mapped fleet must hold >=2x less resident than heap, got {:.2}x",
+            opts.workers,
+            report.resident_reduction()
+        );
+        assert!(
+            report.steady_resident_reduction() >= 2.0,
+            "steady-state mapped residency fell under the 2x bar: {:.2}x",
+            report.steady_resident_reduction()
+        );
+    }
+    let qps_floor = knob("NGDB_MMAP_QPS_FLOOR", 0.9);
+    assert!(
+        report.qps_parity() >= qps_floor,
+        "mapped serving lost more than {:.0}% QPS vs heap: parity {:.3}",
+        100.0 * (1.0 - qps_floor),
+        report.qps_parity()
+    );
+
+    let path = std::env::var("NGDB_MMAP_JSON")
+        .unwrap_or_else(|_| "BENCH_mmap_serving.json".to_string());
+    write_json(&report, &path).unwrap_or_else(|e| panic!("{e:#}"));
+    println!("  wrote {path}");
+}

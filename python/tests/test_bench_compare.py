@@ -24,6 +24,7 @@ PUBLISH_BASELINE = os.path.join(
 CKPT_BASELINE = os.path.join(
     ROOT, "benches", "baselines", "BENCH_checkpoint_durability.json"
 )
+MMAP_BASELINE = os.path.join(ROOT, "benches", "baselines", "BENCH_mmap_serving.json")
 
 
 def _load():
@@ -76,6 +77,12 @@ def test_flatten_walks_dicts_lists_and_skips_non_numbers():
         ("full_fallback_publishes", "lower"),
         ("delta_publish_speedup", "higher"),  # "speedup" wins over "publish"
         ("config.full_capture_bytes", None),  # sizes under config stay info
+        ("heap_resident_per_worker_bytes", "lower"),  # residency is a cost
+        ("mapped_resident_per_worker_bytes", "lower"),
+        ("mapped_file_bytes", "lower"),  # serve-layout bloat is a cost
+        ("steady_rss_mb", "lower"),
+        ("resident_reduction_speedup", "higher"),  # "speedup" wins over "resident"
+        ("qps_parity_ratio", "higher"),  # "qps" wins over nothing-lower
     ],
 )
 def test_direction(path, expected):
@@ -245,6 +252,80 @@ def test_committed_snapshot_publish_baseline_matches_the_delta_simulation():
     assert gated == leaves
     assert gated["full_fallback_publishes"] == 0.0
     assert bc.direction("delta_publish_speedup") == "higher"
+    _, failures = bc.compare(doc, doc, 25.0)
+    assert failures == []
+
+
+def _sim_serve_file_bytes(rows, dim, shards, align):
+    """Python mirror of the checkpoint serve-layout sizing: each shard's
+    section (its local-contiguous rows) zero-padded to the OS-page
+    boundary, so every shard window is page-aligned for mmap."""
+    total = 0
+    for s in range(shards):
+        rows_s = 0 if s >= rows else -(-(rows - s) // shards)
+        total += -(-(rows_s * dim * 4) // align) * align
+    return total
+
+
+def _sim_materialized_rows(entities, shards, rounds, touched, page_rows=4):
+    """Union of COW pages dirtied across all rounds — the heap pages a
+    delta chain materializes on top of a mapped base (steady state)."""
+    union = {}
+    for r in range(rounds):
+        ids = {(r * 7919 + i * 101) % entities for i in range(touched)}
+        assert len(ids) == touched, "stride pattern collided"
+        for gid in ids:
+            union.setdefault(gid % shards, set()).add(gid // shards // page_rows)
+    total = 0
+    for s, ps in union.items():
+        rows_s = 0 if s >= entities else -(-(entities - s) // shards)
+        total += sum(min(page_rows, rows_s - p * page_rows) for p in ps)
+    return total
+
+
+def test_committed_mmap_serving_baseline_matches_the_layout_arithmetic():
+    """Every byte field in the mmap_serving baseline is a pure function of
+    the serve layout and the dirt pattern — recompute them from the
+    bench's default config so a drift in either the Rust accounting or
+    the committed numbers fails loudly."""
+    with open(MMAP_BASELINE) as fh:
+        doc = json.load(fh)
+    assert doc["bench"] == "mmap_serving"
+    # bench defaults: benches/mmap_serving.rs / MmapServingOpts
+    entities, relations, dim, shards, workers = 50_000, 64, 64, 4, 4
+    rounds, touched = 4, entities // 100
+    page_rows, align = 4, 4096
+    # residency is pure layout arithmetic: one shared page-aligned file
+    # per fleet vs one private heap copy per worker
+    file_bytes = _sim_serve_file_bytes(entities, dim, shards, align)
+    file_bytes += _sim_serve_file_bytes(relations, dim, shards, align)
+    assert doc["mapped_file_bytes"] == file_bytes
+    heap = (entities + relations) * dim * 4
+    assert doc["heap_resident_per_worker_bytes"] == heap
+    assert doc["mapped_resident_per_worker_bytes"] == file_bytes // workers
+    steady = _sim_materialized_rows(entities, shards, rounds, touched, page_rows)
+    steady_bytes = steady * dim * 4 + file_bytes // workers
+    assert doc["mapped_steady_resident_per_worker_bytes"] == steady_bytes
+    # publishing over a mapped base copies exactly what the heap COW path
+    # copies — the same simulation the snapshot_publish baseline pins
+    rows = _sim_delta_rows(entities, shards, rounds, touched, page_rows)
+    assert doc["publish_bytes_copied_per_round"] == rows * dim * 4
+    # the tentpole economics: >=2x residency reduction at a 4-worker
+    # fleet, clean and steady-state
+    assert workers == 4
+    assert abs(doc["resident_reduction_speedup"] - heap / (file_bytes // workers)) < 5e-4
+    assert doc["resident_reduction_speedup"] >= 2.0
+    assert abs(doc["steady_resident_reduction_speedup"] - heap / steady_bytes) < 5e-4
+    assert doc["steady_resident_reduction_speedup"] >= 2.0
+    # gate hygiene: every pinned leaf is directional, the fallback count
+    # is an exact-zero contract, and the baseline passes against itself
+    leaves = dict(bc.flatten(doc))
+    gated = {p: v for p, v in leaves.items() if bc.direction(p) is not None}
+    assert gated == leaves
+    assert gated["full_fallback_publishes"] == 0.0
+    assert bc.direction("mapped_resident_per_worker_bytes") == "lower"
+    assert bc.direction("resident_reduction_speedup") == "higher"
+    assert bc.direction("qps_parity_ratio") == "higher"
     _, failures = bc.compare(doc, doc, 25.0)
     assert failures == []
 

@@ -58,6 +58,8 @@ def test_committed_sample_has_the_serve_families():
         ("ngdb_serve_shard_rows", "gauge"),
         ("ngdb_serve_snapshot_publishes_total", "counter"),
         ("ngdb_serve_snapshot_published_bytes_total", "counter"),
+        ("ngdb_serve_snapshot_resident_bytes", "gauge"),
+        ("ngdb_serve_snapshot_remaps_total", "counter"),
         ("ngdb_serve_batch_fill", "histogram"),
         ("ngdb_serve_latency_seconds", "histogram"),
         ("ngdb_serve_latency_seconds_est", "gauge"),
@@ -98,6 +100,18 @@ def test_committed_sample_accounting_is_internally_consistent():
     )
     assert values["ngdb_train_checkpoint_save_bytes_count"] == saves
     assert values["ngdb_train_checkpoint_save_seconds_count"] == saves
+    # mmap-backed serving: a remap only happens on a delta publish whose
+    # snapshot kept its mapped pages, so remaps can never exceed deltas;
+    # and a mapped-backed fleet always reports both backing gauges
+    assert (
+        values["ngdb_serve_snapshot_remaps_total"]
+        <= values['ngdb_serve_snapshot_publishes_total{kind="delta"}']
+    )
+    heap = values['ngdb_serve_snapshot_resident_bytes{backing="heap"}']
+    mapped = values['ngdb_serve_snapshot_resident_bytes{backing="mapped"}']
+    assert mapped > heap, "the sample models a mapped-backed fleet"
+    # mapped windows cover whole OS pages, so the gauge is page-multiple
+    assert mapped % 4096 == 0
 
 
 def test_checkpoint_families_are_kind_labelled_and_fault_aware():

@@ -1,0 +1,360 @@
+//! mmap_serving — zero-copy serving economics of mmap-backed snapshots,
+//! on the mock runtime (no XLA: gathering and ranking are host-side).
+//!
+//! The harness commits one serve-layout checkpoint generation, then
+//! stands up the same worker fleet twice: once over a heap capture (every
+//! replica owns a private copy of the tables) and once over
+//! [`CheckpointStore::load_snapshot_mapped`] windows (every replica maps
+//! the same file; the kernel page cache holds one copy). Three economies
+//! are measured, two of them deterministic:
+//!
+//! * **Residency per worker** — heap backing pays `heap_bytes` per
+//!   replica; mapped backing pays the materialized heap pages plus the
+//!   serve files' bytes amortized over the fleet (the page cache is
+//!   shared). Pure layout arithmetic — `python/tests/test_bench_compare.py`
+//!   recomputes every byte. Gated ≥2× lower for mapped at 4 workers, both
+//!   clean (fresh map) and steady-state (after the delta rounds below).
+//! * **Publish bytes copied** — the same stride-101 dirt published through
+//!   both backings must copy *identical* bytes: mapping the base must not
+//!   change the COW delta accounting. Deterministic; the run fails if the
+//!   backings disagree.
+//! * **QPS parity** — the fleet's throughput over the mapped tables must
+//!   stay within 10% of the heap fleet (machine-dependent; the JSON pins a
+//!   conservative floor).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::model::{ModelSnapshot, ModelState, PublishTotals, SnapshotCell};
+use crate::query::{Pattern, QueryTree};
+use crate::runtime::{MockRuntime, Runtime};
+use crate::serve::{QueryRequest, QueryService, ServeConfig};
+use crate::train::{CheckpointConfig, CheckpointStore};
+
+use super::snapshot_publish::touched_id;
+
+/// Knobs of one harness run.
+#[derive(Debug, Clone)]
+pub struct MmapServingOpts {
+    /// entity rows in the served table
+    pub entities: usize,
+    /// relation rows (never dirtied — deltas must share them wholesale)
+    pub relations: usize,
+    /// embedding width (mock manifest `d`)
+    pub dim: usize,
+    /// shard count of the serve layout and the published snapshots
+    pub shards: usize,
+    /// fleet size: serve workers, and the divisor amortizing the shared
+    /// mapped file across replicas
+    pub workers: usize,
+    /// delta publish rounds driving the steady-state residency
+    pub rounds: usize,
+    /// distinct entity rows dirtied per round (default: 1% of `entities`)
+    pub touched_per_round: usize,
+    /// timed queries per backing for the QPS parity measurement
+    pub queries: usize,
+    pub seed: u64,
+}
+
+impl Default for MmapServingOpts {
+    fn default() -> MmapServingOpts {
+        MmapServingOpts {
+            entities: 50_000,
+            relations: 64,
+            dim: 64,
+            shards: crate::model::DEFAULT_SHARDS,
+            workers: 4,
+            rounds: 4,
+            touched_per_round: 500,
+            queries: 256,
+            seed: 29,
+        }
+    }
+}
+
+/// Aggregated outcome of one run.
+#[derive(Debug, Clone)]
+pub struct MmapServingReport {
+    pub opts: MmapServingOpts,
+    /// bytes each heap replica keeps resident (its private snapshot copy)
+    pub heap_resident_per_worker: usize,
+    /// bytes each mapped replica keeps resident right after mapping:
+    /// materialized heap pages (0 when clean) + serve file bytes / fleet
+    pub mapped_resident_per_worker: usize,
+    /// same accounting after `rounds` delta publishes dirtied pages
+    pub mapped_steady_resident_per_worker: usize,
+    /// on-disk bytes of the generation's serve-layout files (page-aligned)
+    pub mapped_file_bytes: usize,
+    /// bytes one delta publish materializes (identical for both backings)
+    pub publish_bytes_per_round: f64,
+    /// fleet throughput over the heap cell, queries/s
+    pub heap_qps: f64,
+    /// fleet throughput over the mapped cell, queries/s
+    pub mapped_qps: f64,
+    /// delta-eligible publishes that fell back to a full capture (0)
+    pub full_fallbacks: u64,
+    /// delta publishes that kept referencing mapped pages
+    pub remaps: u64,
+}
+
+impl MmapServingReport {
+    /// Clean residency advantage: heap bytes/worker over mapped.
+    pub fn resident_reduction(&self) -> f64 {
+        self.heap_resident_per_worker as f64 / self.mapped_resident_per_worker.max(1) as f64
+    }
+
+    /// Residency advantage after the delta rounds materialized dirt.
+    pub fn steady_resident_reduction(&self) -> f64 {
+        self.heap_resident_per_worker as f64
+            / self.mapped_steady_resident_per_worker.max(1) as f64
+    }
+
+    /// Mapped fleet throughput as a fraction of the heap fleet's.
+    pub fn qps_parity(&self) -> f64 {
+        self.mapped_qps / self.heap_qps.max(1e-9)
+    }
+}
+
+/// Serve `opts.queries` single-hop queries through a `opts.workers` fleet
+/// off `cell` and return queries/s. One untimed warm pass first: worker
+/// sessions, ranker scratch, and (for mapped cells) page-cache faults all
+/// land outside the timed window.
+fn measure_qps(
+    rt: &Arc<MockRuntime>,
+    cell: &Arc<SnapshotCell>,
+    opts: &MmapServingOpts,
+) -> Result<f64> {
+    let service = QueryService::start(
+        Arc::clone(rt),
+        Arc::clone(cell),
+        ServeConfig {
+            workers: opts.workers,
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        },
+    );
+    let client = service.client();
+    let req = |i: u32| QueryRequest {
+        tree: QueryTree::instantiate(
+            Pattern::P1,
+            &[i % opts.entities as u32],
+            &[i % opts.relations as u32],
+        )
+        .unwrap(),
+        filter: vec![],
+        top_k: 10,
+    };
+    let warm: Vec<_> = (0..(opts.queries.min(64) as u32))
+        .map(|i| client.submit(req(i)).unwrap())
+        .collect();
+    for p in warm {
+        p.wait().map_err(|e| anyhow::anyhow!("warmup query failed: {e}"))?;
+    }
+    let t = Instant::now();
+    let pending: Vec<_> =
+        (0..opts.queries as u32).map(|i| client.submit(req(i)).unwrap()).collect();
+    for p in pending {
+        p.wait().map_err(|e| anyhow::anyhow!("timed query failed: {e}"))?;
+    }
+    let secs = t.elapsed().as_secs_f64();
+    drop(client);
+    service.shutdown();
+    Ok(opts.queries as f64 / secs.max(1e-9))
+}
+
+/// Publish `opts.rounds` of stride-101 dirt through `cell` (the exact
+/// dirt pattern `snapshot_publish` sweeps, reproducible in Python).
+fn publish_pass(
+    cell: &SnapshotCell,
+    state: &mut ModelState,
+    opts: &MmapServingOpts,
+) -> PublishTotals {
+    state.dirty.reset_to(state.step);
+    let dim = state.ent_dim;
+    for round in 0..opts.rounds {
+        for i in 0..opts.touched_per_round {
+            let id = touched_id(round, i, opts.entities) as usize;
+            for x in &mut state.entities.data[id * dim..(id + 1) * dim] {
+                *x += 1e-3;
+            }
+            state.dirty.ent.insert(id as u32);
+        }
+        state.step += 1;
+        cell.publish_from(state, None);
+    }
+    cell.publish_totals()
+}
+
+/// Run the comparison. Mock-only: serving never executes an artifact.
+pub fn run(opts: &MmapServingOpts) -> Result<MmapServingReport> {
+    anyhow::ensure!(
+        opts.entities % 101 != 0 && opts.touched_per_round < opts.entities,
+        "stride pattern would collide: pick entities not divisible by 101, \
+         touched_per_round < entities"
+    );
+    anyhow::ensure!(opts.workers > 0 && opts.shards > 0 && opts.queries > 0);
+
+    let dir = std::env::temp_dir()
+        .join(format!("ngdb_bench_mmap_serving_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let rt = Arc::new(MockRuntime::with_config(opts.dim, 2, &[4, 16, 64]));
+    let init = |seed: u64| {
+        ModelState::init(rt.manifest(), "mock", opts.entities, opts.relations, None, seed)
+    };
+    let mut base = init(opts.seed)?;
+    base.step = 1;
+    CheckpointStore::open(&dir)
+        .with_config(CheckpointConfig { serve_layout: Some(opts.shards), ..Default::default() })
+        .save(&base)?;
+    let gen_dir = dir.join("gen-000001");
+    let mut mapped_file_bytes = 0usize;
+    for name in ["ent.serve.bin", "rel.serve.bin"] {
+        let path = gen_dir.join(name);
+        mapped_file_bytes += std::fs::metadata(&path)
+            .with_context(|| format!("statting {}", path.display()))?
+            .len() as usize;
+    }
+
+    // -- residency, clean: one private copy vs one shared mapping
+    let heap_snap = ModelSnapshot::capture_sharded(&base, opts.shards);
+    let heap_resident_per_worker = heap_snap.heap_bytes();
+    let (_gen, mapped_snap) = CheckpointStore::open(&dir).load_snapshot_mapped(&base, None)?;
+    anyhow::ensure!(mapped_snap.heap_bytes() == 0, "a clean mapped snapshot owns heap pages");
+    let mapped_resident_per_worker =
+        mapped_snap.heap_bytes() + mapped_file_bytes / opts.workers;
+
+    let heap_cell = Arc::new(SnapshotCell::new(heap_snap));
+    let mapped_cell = Arc::new(SnapshotCell::new(mapped_snap));
+
+    // -- QPS parity over the clean cells
+    let heap_qps = measure_qps(&rt, &heap_cell, opts)?;
+    let mapped_qps = measure_qps(&rt, &mapped_cell, opts)?;
+
+    // -- identical delta publishing through both backings (fresh states
+    // from the same seed replay the same weights and the same dirt)
+    let mut heap_state = init(opts.seed)?;
+    heap_state.step = 1;
+    let heap_totals = publish_pass(&heap_cell, &mut heap_state, opts);
+    let mut mapped_state = init(opts.seed)?;
+    mapped_state.step = 1;
+    let mapped_totals = publish_pass(&mapped_cell, &mut mapped_state, opts);
+    anyhow::ensure!(
+        heap_totals.bytes_copied == mapped_totals.bytes_copied
+            && heap_totals.rows_copied == mapped_totals.rows_copied,
+        "mapping the base changed the delta accounting: heap {heap_totals:?} \
+         vs mapped {mapped_totals:?}"
+    );
+
+    // -- residency, steady state: the dirt the rounds materialized
+    let steady = mapped_cell.load();
+    let mapped_steady_resident_per_worker =
+        steady.heap_bytes() + mapped_file_bytes / opts.workers;
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let rounds = opts.rounds.max(1) as f64;
+    Ok(MmapServingReport {
+        opts: opts.clone(),
+        heap_resident_per_worker,
+        mapped_resident_per_worker,
+        mapped_steady_resident_per_worker,
+        mapped_file_bytes,
+        publish_bytes_per_round: mapped_totals.bytes_copied as f64 / rounds,
+        heap_qps,
+        mapped_qps,
+        full_fallbacks: heap_totals.full_publishes + mapped_totals.full_publishes,
+        remaps: mapped_totals.remaps,
+    })
+}
+
+/// Hand-rolled JSON artifact (dependency-free, like every bench baseline).
+/// Key naming is gate-aware for `scripts/bench_compare.py`: `*_bytes`
+/// keys gate as ceilings, `*_speedup`/`*_ratio`-with-`qps` as floors,
+/// `full_fallback_publishes` as an exact zero; sizes that are pure knobs
+/// live under `config` (ungated).
+pub fn write_json(report: &MmapServingReport, path: &str) -> Result<()> {
+    let json = format!(
+        "{{\n  \"bench\": \"mmap_serving\",\n  \"config\": {{\"entities\": {}, \
+         \"relations\": {}, \"dim\": {}, \"shards\": {}, \"workers\": {}, \
+         \"rounds\": {}, \"touched_per_round\": {}, \"queries\": {}, \
+         \"page_rows\": {}, \"serve_align\": {}}},\n  \
+         \"heap_resident_per_worker_bytes\": {},\n  \
+         \"mapped_resident_per_worker_bytes\": {},\n  \
+         \"mapped_steady_resident_per_worker_bytes\": {},\n  \
+         \"mapped_file_bytes\": {},\n  \
+         \"publish_bytes_copied_per_round\": {:.1},\n  \
+         \"resident_reduction_speedup\": {:.3},\n  \
+         \"steady_resident_reduction_speedup\": {:.3},\n  \
+         \"qps_parity_ratio\": {:.3},\n  \
+         \"full_fallback_publishes\": {}\n}}\n",
+        report.opts.entities,
+        report.opts.relations,
+        report.opts.dim,
+        report.opts.shards,
+        report.opts.workers,
+        report.opts.rounds,
+        report.opts.touched_per_round,
+        report.opts.queries,
+        crate::model::PAGE_ROWS,
+        crate::model::SERVE_ALIGN,
+        report.heap_resident_per_worker,
+        report.mapped_resident_per_worker,
+        report.mapped_steady_resident_per_worker,
+        report.mapped_file_bytes,
+        report.publish_bytes_per_round,
+        report.resident_reduction(),
+        report.steady_resident_reduction(),
+        report.qps_parity(),
+        report.full_fallbacks,
+    );
+    std::fs::write(path, json).with_context(|| format!("writing {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small-config smoke: the deterministic fields obey the layout
+    /// arithmetic and both backings publish identical delta bytes.
+    #[test]
+    fn small_fleet_keeps_the_residency_and_accounting_contracts() {
+        let opts = MmapServingOpts {
+            entities: 2_000,
+            relations: 8,
+            dim: 8,
+            shards: 4,
+            workers: 2,
+            rounds: 2,
+            touched_per_round: 19,
+            queries: 8,
+            ..Default::default()
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.full_fallbacks, 0);
+        assert_eq!(report.remaps, opts.rounds as u64, "every delta must keep mapped pages");
+        // clean residency: the whole fleet shares one page-aligned file
+        assert_eq!(
+            report.heap_resident_per_worker,
+            (opts.entities + opts.relations) * opts.dim * 4
+        );
+        assert_eq!(
+            report.mapped_resident_per_worker,
+            report.mapped_file_bytes / opts.workers
+        );
+        assert!(report.mapped_file_bytes % crate::model::SERVE_ALIGN == 0);
+        assert!(report.resident_reduction() > 1.0, "{report:?}");
+        // steady state: dirt materializes, clean pages stay shared
+        assert!(report.mapped_steady_resident_per_worker > report.mapped_resident_per_worker);
+        assert!(
+            report.mapped_steady_resident_per_worker
+                < report.heap_resident_per_worker + report.mapped_resident_per_worker
+        );
+        // the publish accounting matches snapshot_publish's bound
+        let cap = (opts.touched_per_round * crate::model::PAGE_ROWS * opts.dim * 4) as f64;
+        assert!(report.publish_bytes_per_round <= cap);
+        assert!(report.publish_bytes_per_round >= (opts.touched_per_round * opts.dim * 4) as f64);
+        assert!(report.heap_qps > 0.0 && report.mapped_qps > 0.0);
+    }
+}

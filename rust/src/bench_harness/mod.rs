@@ -14,6 +14,7 @@ pub mod checkpoint_durability;
 pub mod fig2_pipelining;
 pub mod fig7_multi_gpu;
 pub mod fig9_adaptive;
+pub mod mmap_serving;
 pub mod roofline;
 pub mod serve_latency;
 pub mod serve_load;

@@ -3,11 +3,13 @@
 //! ([`shard`]) behind the immutable [`ModelSnapshot`]s the serve plane
 //! reads.
 
+pub mod pagesource;
 pub mod shard;
 pub mod snapshot;
 pub mod state;
 
-pub use shard::{ShardLayout, ShardedTable, DEFAULT_SHARDS, PAGE_ROWS};
+pub use pagesource::{PageSource, TableMap, SERVE_ALIGN};
+pub use shard::{ShardLayout, ShardedTable, ShardedTableBuilder, DEFAULT_SHARDS, PAGE_ROWS};
 pub use snapshot::{
     ModelSnapshot, PublishReport, PublishTotals, SnapshotCell, SnapshotStatics, WeightsView,
 };

@@ -1,0 +1,429 @@
+//! Page storage backends for the sharded embedding store.
+//!
+//! A [`crate::model::shard::TableShard`] holds its rows in small
+//! copy-on-write pages. Until the mmap-serving work those pages were
+//! always heap `Arc<Vec<f32>>`s; now each page is a [`PageSource`]:
+//!
+//! * [`PageSource::Heap`] — an owned, `Arc`-shared heap page. The trainer's
+//!   capture/delta paths always produce these (a dirty page must be
+//!   re-materialized from the live table anyway).
+//! * [`PageSource::Mapped`] — a window into a memory-mapped, page-aligned
+//!   serve-layout file of a committed checkpoint generation
+//!   ([`crate::train::checkpoint::CheckpointStore::load_snapshot_mapped`]).
+//!   The kernel's page cache backs the bytes: a serve fleet maps ONE file
+//!   per table instead of N heap copies, and a model larger than RAM stays
+//!   servable because clean pages are evictable.
+//!
+//! The two interoperate through the existing COW delta path: publishing a
+//! delta over a mapped snapshot clones the page vector (cheap — sources
+//! are `Clone`), re-materializes only the dirty pages on the heap, and
+//! leaves every clean page mapped. Readers never see the difference:
+//! [`PageSource::as_slice`] yields `&[f32]` either way, so
+//! `gather_shard_chunk_into` / `EntityRanker` / the forward plane run
+//! unchanged — `mmap_parity` pins the answers bitwise against heap.
+//!
+//! The mapping itself is libc-crate-free: on little-endian Unix a thin
+//! `extern "C"` shim calls `mmap`/`munmap` directly (the platform libc is
+//! always linked); everywhere else [`TableMap::open`] transparently falls
+//! back to a heap read with explicit little-endian decoding, preserving
+//! behavior (and checksums) at the cost of residency.
+
+use std::fmt;
+use std::fs::File;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// OS-page alignment (bytes) the checkpoint serve layout pads shard
+/// sections to. 4 KiB is the page size on every tier-1 target; mapping is
+/// correct regardless — alignment only affects sharing granularity.
+pub const SERVE_ALIGN: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// the raw mapping (unix little-endian) + heap fallback
+// ---------------------------------------------------------------------------
+
+#[cfg(all(unix, target_endian = "little"))]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+    const MAP_FAILED: *mut core::ffi::c_void = usize::MAX as *mut core::ffi::c_void;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    /// A read-only shared mapping of one whole file. `len == 0` is
+    /// special-cased (POSIX rejects zero-length maps).
+    #[derive(Debug)]
+    pub struct Mmap {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // The mapping is PROT_READ and never handed out mutably; the pointer
+    // is valid for the struct's lifetime (munmap only runs in Drop).
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map(file: &File, len: usize) -> io::Result<Mmap> {
+            if len == 0 {
+                return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_SHARED, file.as_raw_fd(), 0)
+            };
+            if ptr == MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap { ptr, len })
+        }
+
+        /// The mapped bytes. Empty when the file was empty.
+        pub fn bytes(&self) -> &[u8] {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len come from a successful mmap held until Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+
+        /// The mapped bytes viewed as little-endian f32s. The caller
+        /// guarantees `len % 4 == 0`; alignment holds because mmap returns
+        /// page-aligned addresses.
+        pub fn floats(&self) -> &[f32] {
+            debug_assert_eq!(self.len % 4, 0);
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: page-aligned base, length checked, read-only map.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const f32, self.len / 4) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            if self.len != 0 {
+                // failure is unrecoverable and harmless at drop time
+                unsafe { munmap(self.ptr, self.len) };
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+enum MapBacking {
+    /// a real OS mapping — resident cost is the kernel page cache, shared
+    /// across every process mapping the same generation
+    #[cfg(all(unix, target_endian = "little"))]
+    Mapped(sys::Mmap),
+    /// portable fallback: the file decoded onto the heap (explicit
+    /// little-endian, so checksums and bits match the mapped path)
+    Heap(Vec<f32>),
+}
+
+/// One memory-mapped serve-layout tensor file, shared (`Arc`) by every
+/// [`PageSource::Mapped`] window into it. Dropping the last window unmaps.
+pub struct TableMap {
+    backing: MapBacking,
+    /// file length in bytes (pre-decode; equals `floats().len() * 4`)
+    file_bytes: usize,
+    path: PathBuf,
+}
+
+impl fmt::Debug for TableMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TableMap")
+            .field("path", &self.path)
+            .field("file_bytes", &self.file_bytes)
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+impl TableMap {
+    /// Map (or, off-Unix/big-endian, read) `path` read-only. The file
+    /// length must be a multiple of 4 — it holds raw little-endian f32s.
+    pub fn open(path: &Path) -> io::Result<TableMap> {
+        let file = File::open(path)?;
+        let file_bytes = file.metadata()?.len() as usize;
+        if file_bytes % 4 != 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("{}: length {} is not a whole number of f32s", path.display(), file_bytes),
+            ));
+        }
+        let backing = Self::open_backing(file, file_bytes)?;
+        Ok(TableMap { backing, file_bytes, path: path.to_path_buf() })
+    }
+
+    fn open_backing(file: File, file_bytes: usize) -> io::Result<MapBacking> {
+        // NGDB_NO_MMAP forces the portable heap fallback even where a real
+        // mapping is available — a test/debug knob for the fallback path.
+        #[cfg(all(unix, target_endian = "little"))]
+        if std::env::var_os("NGDB_NO_MMAP").is_none() {
+            return Ok(MapBacking::Mapped(sys::Mmap::map(&file, file_bytes)?));
+        }
+        Self::read_backing(file, file_bytes)
+    }
+
+    /// Portable backing: the file decoded onto the heap, explicit
+    /// little-endian so the bits match what a real mapping would expose.
+    fn read_backing(mut file: File, file_bytes: usize) -> io::Result<MapBacking> {
+        use std::io::Read;
+        let mut raw = Vec::with_capacity(file_bytes);
+        file.read_to_end(&mut raw)?;
+        if raw.len() != file_bytes {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "short read"));
+        }
+        let floats =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        Ok(MapBacking::Heap(floats))
+    }
+
+    /// The whole file as f32s (shard sections + their alignment padding).
+    pub fn floats(&self) -> &[f32] {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little"))]
+            MapBacking::Mapped(m) => m.floats(),
+            MapBacking::Heap(v) => v,
+        }
+    }
+
+    /// The raw file bytes — checksum verification reads the mapping once
+    /// so a torn/corrupt generation is refused before serving from it.
+    pub fn bytes(&self) -> MapBytes<'_> {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little"))]
+            MapBacking::Mapped(m) => MapBytes::Borrowed(m.bytes()),
+            MapBacking::Heap(v) => MapBytes::Floats(v),
+        }
+    }
+
+    /// File length in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.file_bytes
+    }
+
+    /// `true` when backed by a real OS mapping (vs the heap fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little"))]
+            MapBacking::Mapped(_) => true,
+            MapBacking::Heap(_) => false,
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Byte view of a [`TableMap`] — borrowed straight from the mapping, or
+/// re-encoded from the heap fallback (little-endian both ways, so CRCs
+/// agree with what the checkpoint writer hashed).
+pub enum MapBytes<'a> {
+    Borrowed(&'a [u8]),
+    Floats(&'a [f32]),
+}
+
+impl MapBytes<'_> {
+    /// Feed the bytes chunk-wise to `f` without materializing a copy of
+    /// the whole file on the borrowed path.
+    pub fn for_each_chunk(&self, mut f: impl FnMut(&[u8])) {
+        match self {
+            MapBytes::Borrowed(b) => {
+                for chunk in b.chunks(1 << 16) {
+                    f(chunk);
+                }
+            }
+            MapBytes::Floats(v) => {
+                let mut buf = [0u8; 4096];
+                for chunk in v.chunks(1024) {
+                    let mut n = 0;
+                    for x in chunk {
+                        buf[n..n + 4].copy_from_slice(&x.to_le_bytes());
+                        n += 4;
+                    }
+                    f(&buf[..n]);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the page source
+// ---------------------------------------------------------------------------
+
+/// Storage behind one COW page of a [`crate::model::shard::TableShard`].
+/// Clone is cheap (an `Arc` bump + two words); readers go through
+/// [`PageSource::as_slice`] and cannot tell the variants apart.
+#[derive(Debug, Clone)]
+pub enum PageSource {
+    /// an owned heap page (trainer captures, materialized dirty pages)
+    Heap(Arc<Vec<f32>>),
+    /// a `len`-float window at float-offset `off` into a mapped
+    /// serve-layout file
+    Mapped { map: Arc<TableMap>, off: usize, len: usize },
+}
+
+impl PageSource {
+    /// A mapped window, bounds-checked against the file eagerly so a
+    /// malformed layout fails at construction, not first read.
+    pub fn mapped(map: Arc<TableMap>, off: usize, len: usize) -> PageSource {
+        assert!(
+            off + len <= map.floats().len(),
+            "mapped page [{off}, {}) overruns {} ({} floats)",
+            off + len,
+            map.path().display(),
+            map.floats().len()
+        );
+        PageSource::Mapped { map, off, len }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        match self {
+            PageSource::Heap(v) => v,
+            PageSource::Mapped { map, off, len } => &map.floats()[*off..*off + *len],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            PageSource::Heap(v) => v.len(),
+            PageSource::Mapped { len, .. } => *len,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `true` for a window into a [`TableMap`] — even under the heap
+    /// fallback backing, where the bytes are process-private but still
+    /// shared by every snapshot referencing the map.
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, PageSource::Mapped { .. })
+    }
+
+    /// Bytes this page holds on the process heap (0 for mapped windows —
+    /// their cost is the shared map, counted once via
+    /// [`TableMap::file_bytes`]).
+    #[inline]
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            PageSource::Heap(v) => v.len() * 4,
+            PageSource::Mapped { .. } => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(name: &str, floats: &[f32]) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("ngdb_pagesource_{name}_{}", std::process::id()));
+        let mut f = File::create(&p).unwrap();
+        for x in floats {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        f.flush().unwrap();
+        p
+    }
+
+    #[test]
+    fn map_round_trips_little_endian_floats() {
+        let data: Vec<f32> = (0..1030).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let p = tmp_file("rt", &data);
+        let map = TableMap::open(&p).unwrap();
+        assert_eq!(map.floats(), &data[..]);
+        assert_eq!(map.file_bytes(), data.len() * 4);
+        // the byte view re-hashes to exactly what was written
+        let mut seen = Vec::new();
+        map.bytes().for_each_chunk(|c| seen.extend_from_slice(c));
+        let expect: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(seen, expect);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_cleanly() {
+        let p = tmp_file("empty", &[]);
+        let map = TableMap::open(&p).unwrap();
+        assert!(map.floats().is_empty());
+        assert_eq!(map.file_bytes(), 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ragged_length_is_refused() {
+        let p = tmp_file("ragged", &[1.0]);
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[0xAB]).unwrap();
+        }
+        assert!(TableMap::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn sources_read_identically_and_account_heap_bytes() {
+        let data: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let p = tmp_file("src", &data);
+        let map = Arc::new(TableMap::open(&p).unwrap());
+        let mapped = PageSource::mapped(Arc::clone(&map), 4, 8);
+        let heap = PageSource::Heap(Arc::new(data[4..12].to_vec()));
+        assert_eq!(mapped.as_slice(), heap.as_slice());
+        assert_eq!(mapped.len(), 8);
+        assert_eq!(mapped.heap_bytes(), 0, "mapped windows cost no process heap");
+        assert_eq!(heap.heap_bytes(), 32);
+        assert!(mapped.is_mapped() && !heap.is_mapped());
+        // clones alias the same map
+        let c = mapped.clone();
+        assert_eq!(c.as_slice(), mapped.as_slice());
+        drop((mapped, c));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns")]
+    fn overrunning_window_panics_at_construction() {
+        let p = tmp_file("over", &[0.0; 8]);
+        let map = Arc::new(TableMap::open(&p).unwrap());
+        let path = p.clone();
+        let _cleanup = scopeguard(move || {
+            std::fs::remove_file(&path).ok();
+        });
+        let _ = PageSource::mapped(map, 4, 8);
+    }
+
+    fn scopeguard<F: FnMut()>(f: F) -> impl Drop {
+        struct G<F: FnMut()>(F);
+        impl<F: FnMut()> Drop for G<F> {
+            fn drop(&mut self) {
+                (self.0)();
+            }
+        }
+        G(f)
+    }
+}

@@ -29,6 +29,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 
 use crate::exec::TensorPool;
+use crate::model::pagesource::PageSource;
 use crate::model::state::EmbeddingTable;
 use crate::runtime::HostTensor;
 
@@ -89,12 +90,14 @@ impl ShardLayout {
 }
 
 /// One shard: `rows` local-contiguous rows stored in COW pages of up to
-/// [`PAGE_ROWS`] rows each.
+/// [`PAGE_ROWS`] rows each. Each page is a [`PageSource`] — an owned heap
+/// page or a window into a memory-mapped checkpoint serve file; readers
+/// cannot tell the difference.
 #[derive(Debug)]
 pub struct TableShard {
     rows: usize,
     dim: usize,
-    pages: Vec<Arc<Vec<f32>>>,
+    pages: Vec<PageSource>,
 }
 
 impl TableShard {
@@ -110,7 +113,7 @@ impl TableShard {
             for l in local..local + n {
                 page.extend_from_slice(live.row(layout.global_of(shard, l)));
             }
-            pages.push(Arc::new(page));
+            pages.push(PageSource::Heap(Arc::new(page)));
             local += n;
         }
         TableShard { rows, dim, pages }
@@ -118,7 +121,9 @@ impl TableShard {
 
     /// Rebuild only `dirty_pages` (sorted, deduped page indices) from
     /// `live`, sharing every other page with `prev`. Returns the new shard
-    /// and the number of rows re-materialized.
+    /// and the number of rows re-materialized. Dirty pages always land on
+    /// the heap; clean mapped pages stay mapped — publishing over a
+    /// mapped snapshot copies only dirt, exactly like the heap path.
     fn delta(
         prev: &TableShard,
         live: &EmbeddingTable,
@@ -135,7 +140,7 @@ impl TableShard {
             for l in start..start + n {
                 page.extend_from_slice(live.row(layout.global_of(shard, l)));
             }
-            pages[p] = Arc::new(page);
+            pages[p] = PageSource::Heap(Arc::new(page));
             rows_copied += n;
         }
         (TableShard { rows: prev.rows, dim: prev.dim, pages }, rows_copied)
@@ -149,7 +154,7 @@ impl TableShard {
     #[inline]
     pub fn row(&self, local: usize) -> &[f32] {
         debug_assert!(local < self.rows);
-        let page = &self.pages[local / PAGE_ROWS];
+        let page = self.pages[local / PAGE_ROWS].as_slice();
         let off = (local % PAGE_ROWS) * self.dim;
         &page[off..off + self.dim]
     }
@@ -157,6 +162,22 @@ impl TableShard {
     /// Weight bytes resident in this shard (shared pages counted once).
     pub fn bytes(&self) -> usize {
         self.rows * self.dim * 4
+    }
+
+    /// Bytes of this shard held on the process heap (mapped windows cost
+    /// nothing here — their backing is the shared file mapping).
+    pub fn heap_bytes(&self) -> usize {
+        self.pages.iter().map(PageSource::heap_bytes).sum()
+    }
+
+    /// Bytes of this shard referenced through mapped windows.
+    pub fn mapped_bytes(&self) -> usize {
+        self.pages.iter().filter(|p| p.is_mapped()).map(|p| p.len() * 4).sum()
+    }
+
+    /// Pages currently backed by a mapping (diagnostics / parity tests).
+    pub fn mapped_pages(&self) -> usize {
+        self.pages.iter().filter(|p| p.is_mapped()).count()
     }
 }
 
@@ -333,6 +354,99 @@ impl ShardedTable {
     pub fn bytes(&self) -> usize {
         self.rows * self.dim * 4
     }
+
+    /// Bytes held on the process heap across all shards (dirty pages that
+    /// were materialized; everything a heap-backed snapshot owns).
+    pub fn heap_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.heap_bytes()).sum()
+    }
+
+    /// Bytes referenced through memory-mapped checkpoint windows.
+    pub fn mapped_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.mapped_bytes()).sum()
+    }
+
+    /// Pages backed by a mapping, across all shards.
+    pub fn mapped_pages(&self) -> usize {
+        self.shards.iter().map(|s| s.mapped_pages()).sum()
+    }
+}
+
+/// Assembles a [`ShardedTable`] from caller-provided [`PageSource`]s — the
+/// checkpoint loader's entry point for mapped tables
+/// ([`crate::train::checkpoint::CheckpointStore::load_snapshot_mapped`]):
+/// seed every page as a window into the base generation's serve file, then
+/// [`ShardedTableBuilder::patch_row`] the rows the delta chain journals on
+/// top (those pages materialize on the heap, clean pages stay mapped).
+#[derive(Debug)]
+pub struct ShardedTableBuilder {
+    rows: usize,
+    dim: usize,
+    layout: ShardLayout,
+    pages: Vec<Vec<PageSource>>,
+}
+
+impl ShardedTableBuilder {
+    /// `pages[s]` holds shard `s`'s COW pages in local order; lengths must
+    /// tile `shard_rows(rows, s)` exactly in [`PAGE_ROWS`] steps.
+    pub fn from_sources(
+        rows: usize,
+        dim: usize,
+        n_shards: usize,
+        pages: Vec<Vec<PageSource>>,
+    ) -> ShardedTableBuilder {
+        let layout = ShardLayout::new(n_shards);
+        assert_eq!(pages.len(), n_shards, "one page vector per shard");
+        for (s, shard_pages) in pages.iter().enumerate() {
+            let shard_rows = layout.shard_rows(rows, s);
+            assert_eq!(
+                shard_pages.len(),
+                (shard_rows + PAGE_ROWS - 1) / PAGE_ROWS,
+                "shard {s}: page count must tile {shard_rows} rows"
+            );
+            for (p, page) in shard_pages.iter().enumerate() {
+                let n = (shard_rows - p * PAGE_ROWS).min(PAGE_ROWS);
+                assert_eq!(page.len(), n * dim, "shard {s} page {p}: wrong length");
+            }
+        }
+        ShardedTableBuilder { rows, dim, layout, pages }
+    }
+
+    /// Overwrite global row `id` with `data`, materializing its page on
+    /// the heap (in place when this builder already owns the page
+    /// uniquely — consecutive patches to one page copy it once).
+    pub fn patch_row(&mut self, id: u32, data: &[f32]) {
+        assert_eq!(data.len(), self.dim);
+        assert!((id as usize) < self.rows, "row {id} out of range");
+        let (s, local) = (self.layout.shard_of(id), self.layout.local_of(id));
+        let slot = &mut self.pages[s][local / PAGE_ROWS];
+        let off = (local % PAGE_ROWS) * self.dim;
+        if let PageSource::Heap(arc) = slot {
+            if let Some(page) = Arc::get_mut(arc) {
+                page[off..off + self.dim].copy_from_slice(data);
+                return;
+            }
+        }
+        let mut page = slot.as_slice().to_vec();
+        page[off..off + self.dim].copy_from_slice(data);
+        *slot = PageSource::Heap(Arc::new(page));
+    }
+
+    pub fn build(self) -> ShardedTable {
+        let shards = self
+            .pages
+            .into_iter()
+            .enumerate()
+            .map(|(s, pages)| {
+                Arc::new(TableShard {
+                    rows: self.layout.shard_rows(self.rows, s),
+                    dim: self.dim,
+                    pages,
+                })
+            })
+            .collect();
+        ShardedTable { rows: self.rows, dim: self.dim, layout: self.layout, shards }
+    }
 }
 
 #[cfg(test)]
@@ -447,5 +561,141 @@ mod tests {
         // past-the-end base yields an all-zero block
         sharded.gather_shard_chunk_into(1, 4, &mut out);
         assert!(out.data.iter().all(|&x| x == 0.0));
+    }
+
+    /// Write `live` shard-major (each shard section at a float offset the
+    /// test chooses freely) and build a fully-mapped table over it.
+    fn mapped_table(live: &EmbeddingTable, n: usize, name: &str) -> (ShardedTable, usize) {
+        use crate::model::pagesource::TableMap;
+        use std::io::Write;
+        let layout = ShardLayout::new(n);
+        let path =
+            std::env::temp_dir().join(format!("ngdb_shard_map_{name}_{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        let mut offsets = Vec::new();
+        let mut off = 0usize;
+        for s in 0..n {
+            offsets.push(off);
+            for l in 0..layout.shard_rows(live.rows, s) {
+                for x in live.row(layout.global_of(s, l)) {
+                    f.write_all(&x.to_le_bytes()).unwrap();
+                }
+                off += live.dim;
+            }
+        }
+        f.flush().unwrap();
+        drop(f);
+        let map = Arc::new(TableMap::open(&path).unwrap());
+        std::fs::remove_file(&path).ok(); // the mapping outlives the name
+        let file_bytes = map.file_bytes();
+        let mut pages = Vec::new();
+        for s in 0..n {
+            let rows = layout.shard_rows(live.rows, s);
+            let mut shard_pages = Vec::new();
+            let mut local = 0;
+            while local < rows {
+                let count = (rows - local).min(PAGE_ROWS);
+                shard_pages.push(PageSource::mapped(
+                    Arc::clone(&map),
+                    offsets[s] + local * live.dim,
+                    count * live.dim,
+                ));
+                local += count;
+            }
+            pages.push(shard_pages);
+        }
+        let table = ShardedTableBuilder::from_sources(live.rows, live.dim, n, pages).build();
+        (table, file_bytes)
+    }
+
+    #[test]
+    fn mapped_table_reads_bitwise_identical_to_capture() {
+        let live = table(23, 4, 13);
+        for n in [1, 2, 4, 7] {
+            let (mapped, file_bytes) = mapped_table(&live, n, &format!("bitwise{n}"));
+            assert_eq!(mapped.to_flat(), live.data, "n_shards={n}");
+            assert_eq!(mapped.heap_bytes(), 0, "fully mapped table owns no heap pages");
+            assert_eq!(mapped.mapped_bytes(), 23 * 4 * 4);
+            assert_eq!(mapped.bytes(), 23 * 4 * 4);
+            assert!(file_bytes >= mapped.mapped_bytes());
+            // the ranker's chunk gather reads straight out of the mapping
+            let mut out = HostTensor::zeros(vec![3, 4]);
+            let mut flat_ref = HostTensor::zeros(vec![3, 4]);
+            let heap = ShardedTable::capture(&live, n);
+            for s in 0..n {
+                mapped.gather_shard_chunk_into(s, 0, &mut out);
+                heap.gather_shard_chunk_into(s, 0, &mut flat_ref);
+                assert_eq!(out.data, flat_ref.data, "n_shards={n} shard={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_over_a_mapped_table_materializes_only_dirt() {
+        let mut live = table(32, 4, 17);
+        let (prev, _) = mapped_table(&live, 4, "delta");
+        assert_eq!(prev.mapped_pages(), 8); // 8 rows/shard = 2 pages x 4 shards
+        let dirty: HashSet<u32> = [4u32, 6].into_iter().collect(); // both shard 0, pages 0+1...
+        for &id in &dirty {
+            for x in &mut live.data[id as usize * 4..(id as usize + 1) * 4] {
+                *x += 2.0;
+            }
+        }
+        let (snap, stats) = ShardedTable::delta(&prev, &live, &dirty);
+        assert_eq!(snap.to_flat(), ShardedTable::capture(&live, 4).to_flat());
+        // ids 4 and 6 route to shards 0 and 2, local 1 -> page 0 of each
+        assert_eq!(stats.shards_touched, 2);
+        assert_eq!(snap.mapped_pages(), 6, "only the two dirty pages left the mapping");
+        assert!(snap.heap_bytes() > 0 && snap.heap_bytes() < snap.bytes());
+        assert_eq!(snap.heap_bytes() + snap.mapped_bytes(), snap.bytes());
+        // the pinned mapped snapshot still reads its original values
+        assert_ne!(prev.row(4), snap.row(4));
+    }
+
+    #[test]
+    fn builder_patch_row_materializes_pages_and_stays_bitwise() {
+        let live = table(19, 4, 23);
+        use crate::model::pagesource::TableMap;
+        use std::io::Write;
+        let layout = ShardLayout::new(3);
+        let path = std::env::temp_dir().join(format!("ngdb_shard_patch_{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        for s in 0..3 {
+            for l in 0..layout.shard_rows(live.rows, s) {
+                for x in live.row(layout.global_of(s, l)) {
+                    f.write_all(&x.to_le_bytes()).unwrap();
+                }
+            }
+        }
+        drop(f);
+        let map = Arc::new(TableMap::open(&path).unwrap());
+        std::fs::remove_file(&path).ok();
+        let mut off = 0usize;
+        let mut pages = Vec::new();
+        for s in 0..3 {
+            let rows = layout.shard_rows(live.rows, s);
+            let mut shard_pages = Vec::new();
+            let mut local = 0;
+            while local < rows {
+                let count = (rows - local).min(PAGE_ROWS);
+                shard_pages.push(PageSource::mapped(Arc::clone(&map), off, count * 4));
+                off += count * 4;
+                local += count;
+            }
+            pages.push(shard_pages);
+        }
+        let mut b = ShardedTableBuilder::from_sources(19, 4, 3, pages);
+        // two patches landing on one page must copy it exactly once
+        b.patch_row(0, &[9.0; 4]);
+        b.patch_row(3, &[8.0; 4]); // shard 0, local 1 -> same page as local 0
+        b.patch_row(17, &[7.0; 4]);
+        let t = b.build();
+        let mut expect = live.data.clone();
+        expect[0..4].fill(9.0);
+        expect[12..16].fill(8.0);
+        expect[68..72].fill(7.0);
+        assert_eq!(t.to_flat(), expect);
+        assert!(t.mapped_pages() > 0 && t.heap_bytes() > 0);
+        assert_eq!(t.heap_bytes() + t.mapped_bytes(), t.bytes());
     }
 }

@@ -183,6 +183,30 @@ impl ModelSnapshot {
         self.relations.rows()
     }
 
+    /// Assemble a snapshot from pre-built parts — the checkpoint loader's
+    /// entry point for memory-mapped snapshots
+    /// ([`crate::train::checkpoint::CheckpointStore::load_snapshot_mapped`]):
+    /// tables whose pages window a mapped serve-layout file, dense weights
+    /// read from the generation, and the generation's step. The result is
+    /// a first-class snapshot: delta publishes layer on top of it (dirty
+    /// pages materialize on heap, clean pages stay mapped).
+    pub fn from_parts(
+        statics: SnapshotStatics,
+        entities: ShardedTable,
+        relations: ShardedTable,
+        dense: Vec<Vec<f32>>,
+        step: u64,
+    ) -> ModelSnapshot {
+        assert_eq!(statics.dense_keys.len(), dense.len(), "dense weights/keys must be parallel");
+        assert_eq!(statics.dense_keys.len(), statics.dense_shapes.len());
+        assert_eq!(
+            entities.n_shards(),
+            relations.n_shards(),
+            "both tables must shard identically"
+        );
+        ModelSnapshot { statics: Arc::new(statics), entities, relations, dense, step }
+    }
+
     /// Semantic-fusion provenance stamped at capture (encoder name).
     pub fn fusion(&self) -> Option<&str> {
         self.statics.fusion.as_deref()
@@ -246,6 +270,29 @@ impl ModelSnapshot {
         self.entities.bytes()
             + self.relations.bytes()
             + self.dense.iter().map(|d| d.len() * 4).sum::<usize>()
+    }
+
+    /// Bytes this snapshot holds on the process heap: heap embedding pages
+    /// (all of them for a heap-backed snapshot; only materialized dirty
+    /// pages for a mapped one) plus the dense weights. Exported as
+    /// `ngdb_serve_snapshot_resident_bytes{backing="heap"}`.
+    pub fn heap_bytes(&self) -> usize {
+        self.entities.heap_bytes()
+            + self.relations.heap_bytes()
+            + self.dense.iter().map(|d| d.len() * 4).sum::<usize>()
+    }
+
+    /// Bytes referenced through memory-mapped checkpoint windows — backed
+    /// by the kernel page cache, shared by every snapshot (and process)
+    /// mapping the same generation. Exported as
+    /// `ngdb_serve_snapshot_resident_bytes{backing="mapped"}`.
+    pub fn mapped_bytes(&self) -> usize {
+        self.entities.mapped_bytes() + self.relations.mapped_bytes()
+    }
+
+    /// `true` when any embedding page is still a mapped window.
+    pub fn is_mapped(&self) -> bool {
+        self.mapped_bytes() > 0
     }
 }
 
@@ -377,6 +424,10 @@ pub struct PublishTotals {
     pub full_publishes: u64,
     pub bytes_copied: u64,
     pub rows_copied: u64,
+    /// delta publishes whose new snapshot still references mapped pages —
+    /// the publish was a *remap* (clean pages stayed on the checkpoint
+    /// mapping) rather than a copy of the whole table
+    pub remaps: u64,
 }
 
 /// The train→serve publish point: an atomically swappable
@@ -392,6 +443,7 @@ pub struct SnapshotCell {
     full_publishes: AtomicU64,
     published_bytes: AtomicU64,
     published_rows: AtomicU64,
+    remaps: AtomicU64,
 }
 
 impl SnapshotCell {
@@ -403,6 +455,7 @@ impl SnapshotCell {
             full_publishes: AtomicU64::new(0),
             published_bytes: AtomicU64::new(0),
             published_rows: AtomicU64::new(0),
+            remaps: AtomicU64::new(0),
         }
     }
 
@@ -424,6 +477,11 @@ impl SnapshotCell {
         let (snap, report) = match ModelSnapshot::delta_from(&prev, state, fusion) {
             Some((snap, stats)) => {
                 self.delta_publishes.fetch_add(1, Ordering::Relaxed);
+                if snap.is_mapped() {
+                    // clean pages stayed on the checkpoint mapping: this
+                    // publish remapped instead of copying the table
+                    self.remaps.fetch_add(1, Ordering::Relaxed);
+                }
                 let report = PublishReport {
                     delta: true,
                     bytes_copied: stats.bytes_copied + dense_bytes,
@@ -475,6 +533,7 @@ impl SnapshotCell {
             full_publishes: self.full_publishes.load(Ordering::Relaxed),
             bytes_copied: self.published_bytes.load(Ordering::Relaxed),
             rows_copied: self.published_rows.load(Ordering::Relaxed),
+            remaps: self.remaps.load(Ordering::Relaxed),
         }
     }
 }
@@ -564,6 +623,24 @@ mod tests {
         assert_eq!(totals.delta_publishes, 1);
         assert_eq!(totals.full_publishes, 0);
         assert_eq!(totals.rows_copied, report.rows_copied as u64);
+    }
+
+    #[test]
+    fn heap_snapshots_account_all_bytes_on_heap_and_never_remap() {
+        let mut st = live();
+        let cell = SnapshotCell::new(ModelSnapshot::capture(&st));
+        let snap = cell.load();
+        assert_eq!(snap.heap_bytes(), snap.bytes(), "heap backing: everything is resident");
+        assert_eq!(snap.mapped_bytes(), 0);
+        assert!(!snap.is_mapped());
+        st.dirty.reset_to(0);
+        st.step = 1;
+        st.dirty.ent.insert(2);
+        st.entities.data[8] = 1.0;
+        assert!(cell.publish_from(&mut st, None).delta);
+        // a delta over a heap snapshot is not a remap — nothing was mapped
+        assert_eq!(cell.publish_totals().remaps, 0);
+        assert_eq!(cell.load().mapped_bytes(), 0);
     }
 
     #[test]

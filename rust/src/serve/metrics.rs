@@ -239,6 +239,16 @@ pub struct ServeMetrics {
     pub published_bytes_total: Counter,
     /// embedding rows actually copied across all publishes
     pub published_rows_total: Counter,
+    /// process-heap bytes of the most recently served snapshot (all of it
+    /// for heap backing; only materialized dirty pages + dense for mapped)
+    pub snapshot_resident_heap: Gauge,
+    /// bytes of the most recently served snapshot referenced through
+    /// memory-mapped checkpoint windows (kernel-page-cache backed, shared
+    /// across every worker and process mapping the same generation)
+    pub snapshot_resident_mapped: Gauge,
+    /// delta publishes whose new snapshot still references mapped pages
+    /// (the publish remapped instead of copying), mirrored from the cell
+    pub snapshot_remaps: Counter,
 }
 
 impl Default for ServeMetrics {
@@ -275,7 +285,18 @@ impl ServeMetrics {
             publish_full_total: Counter::default(),
             published_bytes_total: Counter::default(),
             published_rows_total: Counter::default(),
+            snapshot_resident_heap: Gauge::default(),
+            snapshot_resident_mapped: Gauge::default(),
+            snapshot_remaps: Counter::default(),
         }
+    }
+
+    /// Record the served snapshot's residency split (two atomic stores —
+    /// [`crate::model::ModelSnapshot::heap_bytes`] /
+    /// [`crate::model::ModelSnapshot::mapped_bytes`]).
+    pub fn record_snapshot_residency(&self, heap_bytes: usize, mapped_bytes: usize) {
+        self.snapshot_resident_heap.set(heap_bytes as i64);
+        self.snapshot_resident_mapped.set(mapped_bytes as i64);
     }
 
     /// Record the served snapshot's shard topology (three atomic stores;
@@ -293,6 +314,7 @@ impl ServeMetrics {
         self.publish_full_total.record_total(t.full_publishes);
         self.published_bytes_total.record_total(t.bytes_copied);
         self.published_rows_total.record_total(t.rows_copied);
+        self.snapshot_remaps.record_total(t.remaps);
     }
 
     pub fn submitted(&self, lane: Lane) -> &Counter {
@@ -444,6 +466,22 @@ impl ServeMetrics {
             "ngdb_serve_snapshot_published_rows_total",
             "Embedding rows actually copied across all snapshot publishes.",
             self.published_rows_total.get(),
+        );
+        out.push_str(&format!(
+            "# HELP ngdb_serve_snapshot_resident_bytes Resident bytes of the \
+             most recently served snapshot, by backing (heap = process-private \
+             pages; mapped = shared checkpoint file windows).\n\
+             # TYPE ngdb_serve_snapshot_resident_bytes gauge\n\
+             ngdb_serve_snapshot_resident_bytes{{backing=\"heap\"}} {}\n\
+             ngdb_serve_snapshot_resident_bytes{{backing=\"mapped\"}} {}\n",
+            self.snapshot_resident_heap.get(),
+            self.snapshot_resident_mapped.get(),
+        ));
+        counter(
+            &mut out,
+            "ngdb_serve_snapshot_remaps_total",
+            "Delta publishes whose snapshot kept referencing mapped checkpoint pages.",
+            self.snapshot_remaps.get(),
         );
         render_histogram(
             &mut out,
@@ -680,6 +718,10 @@ mod tests {
             "ngdb_serve_shard_rows{table=\"rel\",shard=\"1\"} 2",
             "ngdb_serve_snapshot_publishes_total{kind=\"delta\"} 0",
             "# TYPE ngdb_serve_snapshot_published_bytes_total counter",
+            "# TYPE ngdb_serve_snapshot_resident_bytes gauge",
+            "ngdb_serve_snapshot_resident_bytes{backing=\"heap\"} 0",
+            "ngdb_serve_snapshot_resident_bytes{backing=\"mapped\"} 0",
+            "ngdb_serve_snapshot_remaps_total 0",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }
@@ -700,6 +742,7 @@ mod tests {
             full_publishes: 1,
             bytes_copied: 4096,
             rows_copied: 32,
+            remaps: 4,
         });
         // a worker re-reporting an older observation must not double-count
         // or roll anything back
@@ -708,11 +751,13 @@ mod tests {
             full_publishes: 1,
             bytes_copied: 2048,
             rows_copied: 16,
+            remaps: 2,
         });
         assert_eq!(m.publish_delta_total.get(), 5);
         assert_eq!(m.publish_full_total.get(), 1);
         assert_eq!(m.published_bytes_total.get(), 4096);
         assert_eq!(m.published_rows_total.get(), 32);
+        assert_eq!(m.snapshot_remaps.get(), 4);
     }
 
     #[test]

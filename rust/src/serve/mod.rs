@@ -112,7 +112,7 @@ pub mod service;
 
 pub use metrics::ServeMetrics;
 pub use service::{
-    select_top_k, PendingQuery, QueryService, ServeClient, WindowController,
+    select_top_k, snapshot_cell_for, PendingQuery, QueryService, ServeClient, WindowController,
 };
 
 use std::time::Duration;
@@ -214,6 +214,28 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Where a serve fleet's published snapshots physically live.
+///
+/// The cell a [`QueryService`] reads is built by the caller either way;
+/// this knob records (and lets helpers like
+/// [`service::snapshot_cell_for`] decide) whether the initial snapshot is
+/// a heap capture or windows into a memory-mapped checkpoint generation.
+/// Answers are bitwise identical across backings (`mmap_parity` pins it);
+/// only residency changes — `N` workers over a mapped snapshot share one
+/// file mapping instead of holding `N` independent heap copies.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum SnapshotBacking {
+    /// heap pages captured from a live [`crate::model::ModelState`] (the
+    /// default, and the only option when no checkpoint store exists)
+    #[default]
+    Heap,
+    /// map the newest committed generation of the checkpoint store rooted
+    /// here ([`crate::train::checkpoint::CheckpointStore::load_snapshot_mapped`]);
+    /// the generation must have been saved with
+    /// [`crate::train::checkpoint::CheckpointConfig::serve_layout`]
+    MappedFrom(std::path::PathBuf),
+}
+
 /// Query-service tuning knobs.
 #[derive(Clone)]
 pub struct ServeConfig {
@@ -240,6 +262,9 @@ pub struct ServeConfig {
     /// optional `host:port` to serve [`ServeMetrics::render_prometheus`]
     /// over a tiny blocking scrape endpoint (e.g. `"127.0.0.1:0"`)
     pub metrics_addr: Option<String>,
+    /// where the served snapshots physically live (heap captures vs
+    /// windows into a mapped checkpoint generation)
+    pub snapshot_backing: SnapshotBacking,
     /// semantic source the served model was trained with, if any: workers
     /// build their forward sessions `with_semantic`, and every batch's
     /// pinned snapshot must carry matching fusion provenance
@@ -262,6 +287,7 @@ impl std::fmt::Debug for ServeConfig {
             .field("shed", &self.shed)
             .field("high_reserve", &self.high_reserve)
             .field("metrics_addr", &self.metrics_addr)
+            .field("snapshot_backing", &self.snapshot_backing)
             .field("semantic", &self.semantic.as_ref().map(|s| s.encoder()))
             .field("engine", &self.engine)
             .finish()
@@ -288,6 +314,7 @@ impl Default for ServeConfig {
             shed: ShedPolicy::Block,
             high_reserve: 128,
             metrics_addr: None,
+            snapshot_backing: SnapshotBacking::default(),
             semantic: None,
             engine: EngineConfig::default(),
         }

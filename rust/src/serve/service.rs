@@ -61,14 +61,18 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::metrics::{self, MetricsExporter, ServeMetrics};
-use super::{BatchPolicy, Lane, QueryAnswer, QueryRequest, ServeConfig, ServeError, ShedPolicy};
+use super::{
+    BatchPolicy, Lane, QueryAnswer, QueryRequest, ServeConfig, ServeError, ShedPolicy,
+    SnapshotBacking,
+};
 use crate::eval::rank::EntityRanker;
 use crate::exec::{EngineConfig, ForwardSession};
-use crate::model::{ModelSnapshot, SnapshotCell};
+use crate::model::{ModelSnapshot, ModelState, SnapshotCell};
 use crate::query::QueryDag;
 use crate::runtime::parallel::shared_pool;
 use crate::runtime::Runtime;
 use crate::semantic::SemanticSource;
+use crate::train::{CheckpointStore, CkptError};
 
 /// One queued request with its response channel and enqueue stamp.
 struct Inflight {
@@ -588,6 +592,42 @@ impl Drop for QueryService {
     }
 }
 
+/// Build the snapshot cell the service will serve from, per the
+/// configured [`SnapshotBacking`].
+///
+/// * [`SnapshotBacking::Heap`] captures `state` into process-private
+///   pages — every worker fleet member that does the same pays a full
+///   copy of the tables.
+/// * [`SnapshotBacking::MappedFrom`] maps the newest committed
+///   serve-layout generation under the given checkpoint root
+///   ([`CheckpointStore::load_snapshot_mapped`]): clean pages are
+///   read-only windows into the checkpoint file (shared page cache
+///   across every process mapping it), and only rows rewritten by delta
+///   generations live on the heap. `state` supplies the expected
+///   identity/shape; a root whose newest generation has no serve layout
+///   (or fails verification) is a typed [`CkptError`], **not** a silent
+///   heap fallback — a fleet configured for mapped serving must not
+///   quietly balloon its resident set.
+///
+/// Bitwise parity between the two backings — across every shard and
+/// worker count, before and after crash recovery — is pinned by the
+/// `mmap_parity` suite.
+pub fn snapshot_cell_for(
+    backing: &SnapshotBacking,
+    state: &ModelState,
+    n_shards: usize,
+    fusion: Option<&str>,
+) -> Result<Arc<SnapshotCell>, CkptError> {
+    let snap = match backing {
+        SnapshotBacking::Heap => ModelSnapshot::capture_with_fusion(state, n_shards, fusion),
+        SnapshotBacking::MappedFrom(root) => {
+            let (_gen, snap) = CheckpointStore::open(root).load_snapshot_mapped(state, fusion)?;
+            snap
+        }
+    };
+    Ok(Arc::new(SnapshotCell::new(snap)))
+}
+
 /// Form micro-batches: oldest request first (high lane ahead of normal),
 /// then fill until the controller's window closes.
 fn batcher_loop(intake: &Intake, tx: SyncSender<Vec<Inflight>>, mut ctl: WindowController) {
@@ -728,6 +768,7 @@ fn serve_batch(
     metrics.snapshot_step.set(snap.step() as i64);
     metrics.record_shard_topology(snap.n_shards(), n_ent, snap.n_relations());
     metrics.record_publish_totals(&snapshots.publish_totals());
+    metrics.record_snapshot_residency(snap.heap_bytes(), snap.mapped_bytes());
 
     // fusion provenance gate (§4.4): a snapshot published by a
     // fusion-trained trainer must be served through the same semantic
@@ -1059,6 +1100,51 @@ mod tests {
         assert_eq!(m.latency.count(), 1);
         drop(client);
         service.shutdown();
+    }
+
+    #[test]
+    fn mapped_backing_serves_bitwise_identically_to_heap() {
+        use crate::model::DEFAULT_SHARDS;
+        use crate::train::CheckpointConfig;
+        let (rt, state, _) = setup();
+        let dir = std::env::temp_dir()
+            .join(format!("ngdb_serve_mapped_cell_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = CheckpointStore::open(&dir).with_config(CheckpointConfig {
+            serve_layout: Some(DEFAULT_SHARDS),
+            ..Default::default()
+        });
+        store.save(&state).unwrap();
+
+        let heap = snapshot_cell_for(&SnapshotBacking::Heap, &state, DEFAULT_SHARDS, None).unwrap();
+        let mapped = snapshot_cell_for(
+            &SnapshotBacking::MappedFrom(dir.clone()),
+            &state,
+            DEFAULT_SHARDS,
+            None,
+        )
+        .unwrap();
+        assert_eq!(mapped.load().heap_bytes(), 0, "clean mapped snapshot owns no heap pages");
+        assert!(mapped.load().mapped_bytes() > 0, "tables must be file windows");
+
+        let mut answers: Vec<Vec<Vec<(u32, f32)>>> = Vec::new();
+        for cell in [heap, mapped] {
+            let rt = Arc::clone(&rt);
+            let service = QueryService::start(rt, cell, ServeConfig::default());
+            let client = service.client();
+            let tops = (0..6u32).map(|i| client.query(p1(i % 12, i % 6)).unwrap().top).collect();
+            drop(client);
+            service.shutdown();
+            answers.push(tops);
+        }
+        for (h, m) in answers[0].iter().zip(&answers[1]) {
+            assert_eq!(h.len(), m.len());
+            for (a, b) in h.iter().zip(m) {
+                assert_eq!(a.0, b.0, "entity ids must match across backings");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "scores bit-exact across backings");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -55,7 +55,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::model::{DirtyRows, EmbeddingTable, ModelState, PAGE_ROWS};
+use crate::model::pagesource::{PageSource, TableMap, SERVE_ALIGN};
+use crate::model::snapshot::SnapshotStatics;
+use crate::model::{
+    DirtyRows, EmbeddingTable, ModelSnapshot, ModelState, ShardLayout, ShardedTableBuilder,
+    PAGE_ROWS,
+};
 use crate::serve::metrics::{render_histogram, Counter, Histogram, LATENCY_BOUNDS};
 use crate::util::failpoint::{self, Fired};
 
@@ -262,6 +267,14 @@ pub struct GenManifest {
     pub base: u64,
     /// delta only: 1-based position in the chain
     pub chain: usize,
+    /// full generations with a serve layout: the shard count the
+    /// `{tag}.serve.bin` companion files are laid out for (`None` on
+    /// generations written without [`CheckpointConfig::serve_layout`] —
+    /// manifest v1 readers ignore the extra keys, so both directions stay
+    /// compatible)
+    pub serve_shards: Option<usize>,
+    /// byte alignment each serve-file shard section is padded to
+    pub serve_align: Option<usize>,
     files: BTreeMap<String, FileMeta>,
 }
 
@@ -280,6 +293,12 @@ fn render_manifest(m: &GenManifest) -> String {
     s.push_str(&format!("dense={}\n", m.dense.join(",")));
     if m.kind == SaveKind::Delta {
         s.push_str(&format!("parent={}\nbase={}\nchain={}\n", m.parent, m.base, m.chain));
+    }
+    if let Some(n) = m.serve_shards {
+        s.push_str(&format!("serve_shards={n}\n"));
+    }
+    if let Some(a) = m.serve_align {
+        s.push_str(&format!("serve_align={a}\n"));
     }
     for (name, f) in &m.files {
         s.push_str(&format!("file={name} {} 0x{:08X}\n", f.bytes, f.crc));
@@ -350,6 +369,15 @@ fn parse_manifest(text: &str, expect_gen: u64) -> Result<GenManifest, CkptError>
         SaveKind::Full => (0, expect_gen, 0),
         SaveKind::Delta => (num("parent")?, num("base")?, num("chain")? as usize),
     };
+    // optional serve-layout keys (absent on pre-mmap generations)
+    let opt_num = |k: &str| -> Result<Option<usize>, CkptError> {
+        match kv.get(k) {
+            Some(v) => {
+                v.parse().map(Some).map_err(|_| mf_err(gen, format!("non-numeric {k}")))
+            }
+            None => Ok(None),
+        }
+    };
     Ok(GenManifest {
         gen: expect_gen,
         kind,
@@ -368,6 +396,8 @@ fn parse_manifest(text: &str, expect_gen: u64) -> Result<GenManifest, CkptError>
         parent,
         base,
         chain,
+        serve_shards: opt_num("serve_shards")?,
+        serve_align: opt_num("serve_align")?,
         files,
     })
 }
@@ -538,6 +568,43 @@ fn write_u32_file(path: &Path, vals: &[u32]) -> Result<FileMeta, CkptError> {
     Ok(FileMeta { bytes: total, crc: crc32(&bytes) })
 }
 
+/// Serve-layout companion file: shard-major, each shard's rows packed
+/// local-contiguously (exactly the order [`crate::model::ShardedTable`]
+/// pages read), and every shard section zero-padded to a [`SERVE_ALIGN`]
+/// boundary so each mapped shard window starts OS-page-aligned. Goes
+/// through the same fault-injected primitive as every tensor file, so the
+/// crash suite's coverage extends to it for free.
+fn write_serve_layout(
+    path: &Path,
+    t: &EmbeddingTable,
+    n_shards: usize,
+) -> Result<FileMeta, CkptError> {
+    let layout = ShardLayout::new(n_shards);
+    let zeros = [0f32; SERVE_ALIGN / 4];
+    let mut slices: Vec<&[f32]> = Vec::new();
+    for s in 0..n_shards {
+        let rows = layout.shard_rows(t.rows, s);
+        for l in 0..rows {
+            slices.push(t.row(layout.global_of(s, l)));
+        }
+        let section = rows * t.dim * 4;
+        let pad = (section.next_multiple_of(SERVE_ALIGN) - section) / 4;
+        slices.push(&zeros[..pad]);
+    }
+    write_f32_slices(path, &slices)
+}
+
+/// Byte length [`write_serve_layout`] produces for a `rows × dim` table
+/// over `n_shards` at section alignment `align` — the loader cross-checks
+/// the manifest against it so a layout/shape disagreement is a typed
+/// refusal, not a bad window.
+fn serve_layout_bytes(rows: usize, dim: usize, n_shards: usize, align: usize) -> u64 {
+    let layout = ShardLayout::new(n_shards);
+    (0..n_shards)
+        .map(|s| (layout.shard_rows(rows, s) * dim * 4).next_multiple_of(align) as u64)
+        .sum()
+}
+
 /// Write the self-checksummed MANIFEST (the commit record — always last).
 fn write_manifest(dir: &Path, m: &GenManifest) -> Result<(), CkptError> {
     let content = render_manifest(m);
@@ -586,7 +653,12 @@ fn fsync_dir(path: &Path, site: &'static str) -> Result<(), CkptError> {
 /// Read a payload file and verify it byte-for-byte against its manifest
 /// entry: exact length (torn/truncated/padded files), then CRC32
 /// (bit flips), then the shape the caller expects.
-fn read_verified(dir: &Path, m: &GenManifest, name: &str, expect_bytes: u64) -> Result<Vec<u8>, CkptError> {
+fn read_verified(
+    dir: &Path,
+    m: &GenManifest,
+    name: &str,
+    expect_bytes: u64,
+) -> Result<Vec<u8>, CkptError> {
     let meta = m
         .files
         .get(name)
@@ -614,9 +686,17 @@ fn read_verified(dir: &Path, m: &GenManifest, name: &str, expect_bytes: u64) -> 
     Ok(bytes)
 }
 
-fn read_f32_verified(dir: &Path, m: &GenManifest, name: &str, n: usize) -> Result<Vec<f32>, CkptError> {
+fn read_f32_verified(
+    dir: &Path,
+    m: &GenManifest,
+    name: &str,
+    n: usize,
+) -> Result<Vec<f32>, CkptError> {
     let bytes = read_verified(dir, m, name, n as u64 * 4)?;
-    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 fn read_u32_verified(dir: &Path, m: &GenManifest, name: &str) -> Result<Vec<u32>, CkptError> {
@@ -723,11 +803,17 @@ pub struct CheckpointConfig {
     /// deltas allowed after a full base before the store compacts back to
     /// a full save (0 = every save is full)
     pub max_delta_chain: usize,
+    /// `Some(n)`: every full save also writes page-aligned, shard-major
+    /// `{tag}.serve.bin` companion files laid out for `n` serve shards, so
+    /// [`CheckpointStore::load_snapshot_mapped`] can serve straight off a
+    /// read-only mapping of the generation. `None` (the default) keeps the
+    /// pre-mmap on-disk format and payload sizes.
+    pub serve_layout: Option<usize>,
 }
 
 impl Default for CheckpointConfig {
     fn default() -> CheckpointConfig {
-        CheckpointConfig { max_delta_chain: 8 }
+        CheckpointConfig { max_delta_chain: 8, serve_layout: None }
     }
 }
 
@@ -921,6 +1007,11 @@ impl CheckpointStore {
                         files.insert(name, meta);
                     }
                     rows_written += t.rows as u64;
+                    if let Some(n) = self.cfg.serve_layout {
+                        let name = format!("{tag}.serve.bin");
+                        let meta = write_serve_layout(&staging.join(&name), t, n)?;
+                        files.insert(name, meta);
+                    }
                 }
             }
             SaveKind::Delta => {
@@ -977,6 +1068,10 @@ impl CheckpointStore {
             Some((parent, base, chain)) => (parent, base, chain + 1),
             None => (0, gen, 0),
         };
+        let (serve_shards, serve_align) = match (kind, self.cfg.serve_layout) {
+            (SaveKind::Full, Some(n)) => (Some(n), Some(SERVE_ALIGN)),
+            _ => (None, None),
+        };
         let manifest = GenManifest {
             gen,
             kind,
@@ -991,6 +1086,8 @@ impl CheckpointStore {
             parent,
             base,
             chain,
+            serve_shards,
+            serve_align,
             files,
         };
         write_manifest(staging, &manifest)?;
@@ -1078,6 +1175,172 @@ impl CheckpointStore {
         // next snapshot publish must be a full capture, not a delta
         state.dirty.invalidate();
         Ok(latest.gen)
+    }
+
+    /// Build a serve-ready [`ModelSnapshot`] whose embedding tables are
+    /// windows into a read-only memory mapping of the newest committed
+    /// generation's serve-layout files — clean pages are never copied onto
+    /// the heap, and every snapshot (and process) mapping the same
+    /// generation shares one set of physical pages through the kernel page
+    /// cache.
+    ///
+    /// The chain's base generation must have been written with
+    /// [`CheckpointConfig::serve_layout`]; otherwise this returns
+    /// [`CkptError::Incompatible`] so callers can fall back to the heap
+    /// path ([`CheckpointStore::load_latest`] + [`ModelSnapshot::capture`]).
+    /// Rows the delta chain journals on top of the base are patched onto
+    /// heap pages (weights only — a snapshot carries no moments), so the
+    /// result is bitwise identical to a capture of the recovered state;
+    /// `mmap_parity` pins that, including after a kill-and-recover restart.
+    ///
+    /// `state` is the identity/shape template (exactly what `load_latest`
+    /// checks against) and supplies the dense parameter directory; it is
+    /// not mutated. Both serve files are CRC-verified *through the
+    /// mapping* before anything serves off them — a torn or bit-flipped
+    /// generation is a typed refusal, not a bad answer.
+    pub fn load_snapshot_mapped(
+        &self,
+        state: &ModelState,
+        fusion: Option<&str>,
+    ) -> Result<(u64, ModelSnapshot), CkptError> {
+        let chain = resolve_chain(&self.root)?;
+        let latest = chain.last().expect("resolve_chain never returns empty");
+        check_compatible(latest, state)?;
+        let base = &chain[0];
+        let n_shards = base.serve_shards.ok_or_else(|| CkptError::Incompatible {
+            reason: format!(
+                "generation {} has no serve layout (written without \
+                 CheckpointConfig::serve_layout) — fall back to the heap path",
+                base.gen
+            ),
+        })?;
+        if n_shards == 0 {
+            return Err(mf_err(base.gen, "serve_shards must be >= 1"));
+        }
+        let align = base.serve_align.unwrap_or(SERVE_ALIGN);
+        if align == 0 || align % 4 != 0 {
+            return Err(mf_err(base.gen, format!("bad serve_align {align}")));
+        }
+        let base_dir = self.root.join(gen_dir_name(base.gen));
+        let layout = ShardLayout::new(n_shards);
+
+        let mut builders = Vec::with_capacity(2);
+        for (tag, rows, dim) in
+            [("ent", base.ent_rows, base.ent_dim), ("rel", base.rel_rows, base.rel_dim)]
+        {
+            let name = format!("{tag}.serve.bin");
+            let meta = *base
+                .files
+                .get(&name)
+                .ok_or_else(|| mf_err(base.gen, format!("missing file entry for {name}")))?;
+            if meta.bytes != serve_layout_bytes(rows, dim, n_shards, align) {
+                return Err(mf_err(
+                    base.gen,
+                    format!("{name}: size does not match its declared serve layout"),
+                ));
+            }
+            let path = base_dir.join(&name);
+            let map = TableMap::open(&path).map_err(|e| io_err("mapping", &path, e))?;
+            if map.file_bytes() as u64 != meta.bytes {
+                return Err(CkptError::LengthMismatch {
+                    file: path,
+                    expected_bytes: meta.bytes,
+                    actual_bytes: map.file_bytes() as u64,
+                });
+            }
+            let mut crc = Crc32::new();
+            map.bytes().for_each_chunk(|c| crc.update(c));
+            let actual = crc.finish();
+            if actual != meta.crc {
+                return Err(CkptError::ChecksumMismatch { file: path, expected: meta.crc, actual });
+            }
+
+            let map = Arc::new(map);
+            let mut pages: Vec<Vec<PageSource>> = Vec::with_capacity(n_shards);
+            let mut section_off = 0usize; // float offset of the shard section
+            for s in 0..n_shards {
+                let shard_rows = layout.shard_rows(rows, s);
+                let mut shard_pages = Vec::with_capacity(shard_rows.div_ceil(PAGE_ROWS));
+                let mut local = 0;
+                while local < shard_rows {
+                    let count = (shard_rows - local).min(PAGE_ROWS);
+                    shard_pages.push(PageSource::mapped(
+                        Arc::clone(&map),
+                        section_off + local * dim,
+                        count * dim,
+                    ));
+                    local += count;
+                }
+                pages.push(shard_pages);
+                section_off += (shard_rows * dim * 4).next_multiple_of(align) / 4;
+            }
+            builders.push(ShardedTableBuilder::from_sources(rows, dim, n_shards, pages));
+        }
+        let mut it = builders.into_iter();
+        let (mut ent_b, mut rel_b) = (it.next().unwrap(), it.next().unwrap());
+
+        // replay the delta chain's journaled rows on top (weights only)
+        for m in &chain[1..] {
+            let dir = self.root.join(gen_dir_name(m.gen));
+            for (tag, b, rows, dim) in [
+                ("ent", &mut ent_b, base.ent_rows, base.ent_dim),
+                ("rel", &mut rel_b, base.rel_rows, base.rel_dim),
+            ] {
+                let pages_name = format!("{tag}.pages.bin");
+                if !m.files.contains_key(&pages_name) {
+                    continue;
+                }
+                let pages = read_u32_verified(&dir, m, &pages_name)?;
+                if !pages.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(mf_err(m.gen, format!("{pages_name}: unsorted pages")));
+                }
+                let n: usize = pages
+                    .iter()
+                    .map(|&p| {
+                        let start = p as usize * PAGE_ROWS;
+                        (start + PAGE_ROWS).min(rows).saturating_sub(start) * dim
+                    })
+                    .sum();
+                let data = read_f32_verified(&dir, m, &format!("{tag}.delta.data.bin"), n)?;
+                let mut off = 0usize;
+                for &p in &pages {
+                    let start = p as usize * PAGE_ROWS;
+                    if start >= rows {
+                        return Err(mf_err(m.gen, format!("page {p} out of range for {rows} rows")));
+                    }
+                    for id in start..(start + PAGE_ROWS).min(rows) {
+                        b.patch_row(id as u32, &data[off..off + dim]);
+                        off += dim;
+                    }
+                }
+            }
+        }
+
+        // dense params are written whole every generation: latest wins
+        let latest_dir = self.root.join(gen_dir_name(latest.gen));
+        let mut dense = Vec::with_capacity(state.dense.len());
+        for (name, p) in &state.dense {
+            let fname = name.replace('.', "_");
+            dense.push(read_f32_verified(
+                &latest_dir,
+                latest,
+                &format!("dense.{fname}.data.bin"),
+                p.data.len(),
+            )?);
+        }
+
+        let statics = SnapshotStatics {
+            model: state.model.clone(),
+            ent_dim: state.ent_dim,
+            rel_dim: state.rel_dim,
+            repr_dim: state.repr_dim,
+            dense_keys: state.dense.keys().cloned().collect(),
+            dense_shapes: state.dense.values().map(|p| p.shape.clone()).collect(),
+            fusion: fusion.map(str::to_string),
+        };
+        let snap =
+            ModelSnapshot::from_parts(statics, ent_b.build(), rel_b.build(), dense, latest.step);
+        Ok((latest.gen, snap))
     }
 
     /// Committed generation ids, oldest first (manifests not validated).
@@ -1521,7 +1784,7 @@ mod tests {
         let dir = tmp("compact");
         let mut live = state();
         let mut store = CheckpointStore::open(&dir)
-            .with_config(CheckpointConfig { max_delta_chain: 2 });
+            .with_config(CheckpointConfig { max_delta_chain: 2, ..Default::default() });
         let mut kinds = Vec::new();
         for k in 0..6u64 {
             live.step = k + 1;
@@ -1678,6 +1941,8 @@ mod tests {
             parent: 2,
             base: 1,
             chain: 2,
+            serve_shards: None,
+            serve_align: None,
             files: BTreeMap::from([
                 ("ent.pages.bin".to_string(), FileMeta { bytes: 8, crc: 0xDEAD_BEEF }),
                 ("ent.delta.data.bin".to_string(), FileMeta { bytes: 128, crc: 7 }),
@@ -1690,6 +1955,18 @@ mod tests {
         assert_eq!((back.parent, back.base, back.chain), (2, 1, 2));
         assert_eq!(back.dense, m.dense);
         assert_eq!(back.files, m.files);
+        assert_eq!((back.serve_shards, back.serve_align), (None, None));
+        // the optional serve-layout keys round-trip when present...
+        let with_serve = GenManifest {
+            kind: SaveKind::Full,
+            serve_shards: Some(4),
+            serve_align: Some(4096),
+            ..m.clone()
+        };
+        let content = render_manifest(&with_serve);
+        let full2 = format!("{content}crc=0x{:08X}\n", crc32(content.as_bytes()));
+        let back = parse_manifest(&full2, 3).unwrap();
+        assert_eq!((back.serve_shards, back.serve_align), (Some(4), Some(4096)));
         // single-byte corruption anywhere must fail the self-checksum
         let mut corrupt = full.clone().into_bytes();
         corrupt[10] ^= 0x01;
@@ -1697,6 +1974,94 @@ mod tests {
         assert!(matches!(err, CkptError::ManifestCorrupt { .. }), "{err}");
         // and a manifest renamed into the wrong generation dir is refused
         assert!(parse_manifest(&full, 4).is_err());
+    }
+
+    #[test]
+    fn mapped_snapshot_matches_the_recovered_state_bitwise() {
+        let dir = tmp("mmap_full");
+        let mut live = state();
+        live.step = 3;
+        let mut rng = Rng::new(11);
+        live.entities.data.iter_mut().for_each(|x| *x = rng.uniform_sym(1.0));
+        live.relations.data.iter_mut().for_each(|x| *x = rng.uniform_sym(1.0));
+        for n in [1usize, 2, 4, 7] {
+            let sub = format!("{dir}-{n}");
+            let mut store = CheckpointStore::open(&sub)
+                .with_config(CheckpointConfig { serve_layout: Some(n), ..Default::default() });
+            store.save(&live).unwrap();
+            let (gen, snap) =
+                CheckpointStore::open(&sub).load_snapshot_mapped(&state(), None).unwrap();
+            assert_eq!((gen, snap.step(), snap.n_shards()), (1, 3, n));
+            assert_eq!(snap.entities().to_flat(), live.entities.data, "n={n}");
+            assert_eq!(snap.relations().to_flat(), live.relations.data, "n={n}");
+            assert_eq!(snap.entities().heap_bytes(), 0, "clean base: no heap pages");
+            assert_eq!(snap.mapped_bytes(), snap.entities().bytes() + snap.relations().bytes());
+            std::fs::remove_dir_all(&sub).ok();
+        }
+    }
+
+    #[test]
+    fn mapped_snapshot_replays_delta_chains_onto_heap_pages() {
+        let dir = tmp("mmap_chain");
+        let mut live = state();
+        let mut store = CheckpointStore::open(&dir)
+            .with_config(CheckpointConfig { serve_layout: Some(4), ..Default::default() });
+        live.step = 1;
+        store.save(&live).unwrap();
+        for k in 0..2u64 {
+            let row = (k * 3 + 1) as u32;
+            let dim = live.entities.dim;
+            for x in &mut live.entities.data[row as usize * dim..(row as usize + 1) * dim] {
+                *x += 1.5 + k as f32;
+            }
+            live.dirty.ent.insert(row);
+            live.step += 1;
+            store.absorb_dirty(&live.dirty);
+            live.dirty.reset_to(live.step);
+            assert_eq!(store.save(&live).unwrap().kind, SaveKind::Delta);
+        }
+        let (gen, snap) =
+            CheckpointStore::open(&dir).load_snapshot_mapped(&state(), None).unwrap();
+        assert_eq!((gen, snap.step()), (3, 3));
+        assert_eq!(snap.entities().to_flat(), live.entities.data);
+        assert_eq!(snap.relations().to_flat(), live.relations.data);
+        // journaled rows materialized on heap; everything else stayed mapped
+        assert!(snap.entities().heap_bytes() > 0);
+        assert!(snap.mapped_bytes() > 0);
+        // the heap loader still recovers the same state with serve files present
+        let mut restored = state();
+        CheckpointStore::open(&dir).load_latest(&mut restored).unwrap();
+        assert_bitwise(&live, &restored);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mapped_load_without_a_serve_layout_is_a_typed_refusal() {
+        let dir = tmp("mmap_none");
+        save(&state(), &dir).unwrap();
+        let err =
+            CheckpointStore::open(&dir).load_snapshot_mapped(&state(), None).unwrap_err();
+        assert!(matches!(err, CkptError::Incompatible { .. }), "{err}");
+        assert!(err.to_string().contains("serve layout"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_serve_file_is_refused_before_serving() {
+        let dir = tmp("mmap_corrupt");
+        let mut live = state();
+        live.step = 1;
+        let mut store = CheckpointStore::open(&dir)
+            .with_config(CheckpointConfig { serve_layout: Some(2), ..Default::default() });
+        store.save(&live).unwrap();
+        let path = Path::new(&dir).join("gen-000001").join("ent.serve.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[5] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err =
+            CheckpointStore::open(&dir).load_snapshot_mapped(&state(), None).unwrap_err();
+        assert!(matches!(err, CkptError::ChecksumMismatch { .. }), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -241,6 +241,104 @@ fn corrupt_newest_manifest_falls_back_to_the_previous_generation() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ---------------------------------------------------------------------------
+// hostile roots (typed Io errors, never a panic)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn root_occupied_by_a_regular_file_is_a_typed_io_error() {
+    let _g = lock();
+    let dir = tmp("rootfile");
+    let _ = std::fs::remove_file(&dir); // tmp() only sweeps directories
+    std::fs::write(&dir, b"not a directory").unwrap();
+    let mut state = seeded_state();
+    mutate(&mut state, 1);
+    let mut store = CheckpointStore::open(&dir); // opening must not panic
+    store.absorb_dirty(&state.dirty);
+    match store.save(&state).unwrap_err() {
+        CkptError::Io { op, path, .. } => {
+            assert_eq!(op, "creating checkpoint root");
+            assert_eq!(path, dir);
+        }
+        other => panic!("a file in the root's place must fail as Io, got {other}"),
+    }
+    // loads see "no checkpoint yet" — the documented semantics for an
+    // unreadable root — through both the heap and the mapped path
+    assert!(matches!(
+        CheckpointStore::open(&dir).load_latest(&mut seeded_state()),
+        Err(CkptError::NoCheckpoint { .. })
+    ));
+    assert!(matches!(
+        CheckpointStore::open(&dir).load_snapshot_mapped(&seeded_state(), None),
+        Err(CkptError::NoCheckpoint { .. })
+    ));
+    std::fs::remove_file(&dir).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn permission_denied_generation_is_a_typed_io_error_not_a_panic() {
+    use std::os::unix::fs::PermissionsExt;
+    let _g = lock();
+    let dir = tmp("permdenied");
+    let mut state = seeded_state();
+    save_rounds(&dir, &mut state, 1);
+    let gen_dir = dir.join("gen-000001");
+    let open_perms = std::fs::metadata(&gen_dir).unwrap().permissions();
+    std::fs::set_permissions(&gen_dir, std::fs::Permissions::from_mode(0o000)).unwrap();
+    // probe first: privileged users (root CI containers) bypass mode
+    // bits, so the denial cannot be simulated there and the leg is
+    // vacuous — but must still not panic
+    let denied = std::fs::read(gen_dir.join("MANIFEST")).is_err();
+    let heap = CheckpointStore::open(&dir).load_latest(&mut seeded_state());
+    let mapped = CheckpointStore::open(&dir).load_snapshot_mapped(&seeded_state(), None);
+    std::fs::set_permissions(&gen_dir, open_perms).unwrap();
+    if denied {
+        match heap.unwrap_err() {
+            CkptError::Io { op, path, .. } => {
+                assert_eq!(op, "reading");
+                assert!(path.starts_with(&gen_dir), "{}", path.display());
+            }
+            other => panic!("a permission-denied generation must fail as Io, got {other}"),
+        }
+        let err = mapped.unwrap_err();
+        assert!(matches!(err, CkptError::Io { .. }), "mapped load must type it too: {err}");
+    } else {
+        heap.expect("with mode bits bypassed the load must simply succeed");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn read_only_root_fails_saves_with_a_typed_io_error() {
+    use std::os::unix::fs::PermissionsExt;
+    let _g = lock();
+    let dir = tmp("roroot");
+    let mut state = seeded_state();
+    let mut store = save_rounds(&dir, &mut state, 1); // gen 1 commits writable
+    let open_perms = std::fs::metadata(&dir).unwrap().permissions();
+    std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o555)).unwrap();
+    let denied = std::fs::write(dir.join(".probe"), b"x").is_err();
+    mutate(&mut state, 2);
+    store.absorb_dirty(&state.dirty);
+    state.dirty.reset_to(2);
+    let result = store.save(&state);
+    std::fs::set_permissions(&dir, open_perms).unwrap();
+    std::fs::remove_file(dir.join(".probe")).ok();
+    if denied {
+        let err = result.unwrap_err();
+        assert!(matches!(err, CkptError::Io { .. }), "read-only root must be Io: {err}");
+        // the generation committed before the root went read-only still
+        // recovers — a failed save never poisons existing data
+        let mut restored = seeded_state();
+        assert_eq!(CheckpointStore::open(&dir).load_latest(&mut restored).unwrap(), 1);
+    } else {
+        result.expect("with mode bits bypassed the save must simply succeed");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn injected_short_write_never_commits_and_the_retry_succeeds() {
     let _g = lock();

@@ -1,0 +1,246 @@
+//! Mmap-parity suite: answers served out of a memory-mapped checkpoint
+//! generation must be *bitwise* indistinguishable from a heap capture of
+//! the same weights — for every shard count, every worker count, through
+//! the portable no-mmap fallback, and after a kill-and-recover restart
+//! over a torn generation.
+//!
+//! CI runs this file serially in the stress job: the fallback leg flips
+//! the process-wide `NGDB_NO_MMAP` knob, which must not race other opens.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ngdb_zoo::model::{ModelSnapshot, ModelState, SnapshotCell};
+use ngdb_zoo::query::{Pattern, QueryTree};
+use ngdb_zoo::runtime::{MockRuntime, Runtime};
+use ngdb_zoo::serve::{
+    snapshot_cell_for, QueryAnswer, QueryRequest, QueryService, ServeConfig, SnapshotBacking,
+};
+use ngdb_zoo::train::{CheckpointConfig, CheckpointStore, CkptError, SaveKind};
+
+const SHARD_SWEEP: [usize; 4] = [1, 2, 4, 7];
+const N_ENT: usize = 24;
+const N_REL: usize = 6;
+
+fn tmp(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("ngdb_mmap_parity_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p); // stale layouts from prior runs
+    p
+}
+
+fn state(seed: u64) -> ModelState {
+    let rt = MockRuntime::new();
+    ModelState::init(rt.manifest(), "mock", N_ENT, N_REL, None, seed).unwrap()
+}
+
+fn store_at(dir: &Path, n_shards: usize) -> CheckpointStore {
+    CheckpointStore::open(dir)
+        .with_config(CheckpointConfig { serve_layout: Some(n_shards), ..Default::default() })
+}
+
+/// Serve the fixed request mix (the same one `shard_parity` sweeps:
+/// P1/P2/I2 trees, filters, k across shard-boundary shapes) off `cell`.
+fn answers_for(cell: Arc<SnapshotCell>, workers: usize) -> Vec<QueryAnswer> {
+    let rt = Arc::new(MockRuntime::new());
+    let service = QueryService::start(
+        rt,
+        cell,
+        ServeConfig {
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+    let client = service.client();
+    let reqs: Vec<QueryRequest> = (0..18u32)
+        .map(|i| {
+            let (e, r) = (N_ENT as u32, N_REL as u32);
+            let tree = match i % 3 {
+                0 => QueryTree::instantiate(Pattern::P1, &[i % e], &[i % r]).unwrap(),
+                1 => QueryTree::instantiate(Pattern::P2, &[(i + 7) % e], &[i % r, (i + 1) % r])
+                    .unwrap(),
+                _ => QueryTree::instantiate(
+                    Pattern::I2,
+                    &[i % e, (i + 5) % e],
+                    &[i % r, (i + 2) % r],
+                )
+                .unwrap(),
+            };
+            QueryRequest { tree, filter: vec![i % e, (i + 3) % e], top_k: 1 + (i as usize % 23) }
+        })
+        .collect();
+    let pending: Vec<_> = reqs.iter().map(|r| client.submit(r.clone()).unwrap()).collect();
+    let answers = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+    drop(client);
+    service.shutdown();
+    answers
+}
+
+fn assert_bitwise(got: &[QueryAnswer], want: &[QueryAnswer], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.top.len(), w.top.len(), "req {i}: answer width drifted ({ctx})");
+        for ((ge, gs), (we, ws)) in g.top.iter().zip(&w.top) {
+            assert_eq!(ge, we, "req {i}: entity ids diverged ({ctx})");
+            assert_eq!(gs.to_bits(), ws.to_bits(), "req {i}: score bits drifted ({ctx})");
+        }
+    }
+}
+
+/// Touch `rows` of the live entity table and record them dirty, the way
+/// an optimizer step would.
+fn mutate(live: &mut ModelState, rows: &[u32], delta: f32) {
+    let dim = live.entities.dim;
+    for &row in rows {
+        for x in &mut live.entities.data[row as usize * dim..(row as usize + 1) * dim] {
+            *x += delta;
+        }
+        live.dirty.ent.insert(row);
+    }
+}
+
+/// The headline guarantee: a worker fleet mapping one serve-layout file
+/// answers exactly what a fleet of heap copies answers — for every shard
+/// count and worker count, with zero snapshot bytes on the heap.
+#[test]
+fn mapped_serving_is_bitwise_identical_for_every_shard_and_worker_count() {
+    let mut live = state(11);
+    live.step = 1;
+    for n_shards in SHARD_SWEEP {
+        let dir = tmp(&format!("sweep_{n_shards}"));
+        store_at(&dir, n_shards).save(&live).unwrap();
+        let heap = snapshot_cell_for(&SnapshotBacking::Heap, &live, n_shards, None).unwrap();
+        let mapped =
+            snapshot_cell_for(&SnapshotBacking::MappedFrom(dir.clone()), &live, n_shards, None)
+                .unwrap();
+        {
+            let snap = mapped.load();
+            assert!(snap.is_mapped(), "shards={n_shards}: tables must be file windows");
+            assert_eq!(snap.heap_bytes(), 0, "shards={n_shards}: no private copies");
+        }
+        let reference = answers_for(heap, 1);
+        assert!(reference.iter().any(|a| a.top.len() > 4), "degenerate reference");
+        for workers in [1usize, 2] {
+            let got = answers_for(Arc::clone(&mapped), workers);
+            assert_bitwise(&got, &reference, &format!("shards={n_shards} workers={workers}"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// `NGDB_NO_MMAP=1` swaps the OS mapping for the portable heap decode of
+/// the same serve file — the answers must not move by a bit.
+#[test]
+fn the_portable_no_mmap_fallback_decodes_identical_answers() {
+    let mut live = state(13);
+    live.step = 1;
+    let dir = tmp("fallback");
+    store_at(&dir, 4).save(&live).unwrap();
+    let reference =
+        answers_for(snapshot_cell_for(&SnapshotBacking::Heap, &live, 4, None).unwrap(), 1);
+    std::env::set_var("NGDB_NO_MMAP", "1");
+    let cell = snapshot_cell_for(&SnapshotBacking::MappedFrom(dir.clone()), &live, 4, None);
+    std::env::remove_var("NGDB_NO_MMAP");
+    let got = answers_for(cell.unwrap(), 2);
+    assert_bitwise(&got, &reference, "no-mmap fallback");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kill-and-recover: a base + delta chain with a torn (uncommitted)
+/// generation on top. A restarted process recovers the heap state and
+/// maps the same chain — journaled rows materialize on heap pages, clean
+/// pages stay mapped, and both backings serve identical bits.
+#[test]
+fn recovery_after_a_torn_commit_serves_mapped_bitwise() {
+    let dir = tmp("recover");
+    let mut live = state(17);
+    let mut store = store_at(&dir, 4);
+    live.step = 1;
+    store.save(&live).unwrap();
+    for k in 0..2u64 {
+        let rows: Vec<u32> =
+            (0..3u64).map(|i| ((k * 5 + i * 7) % N_ENT as u64) as u32).collect();
+        mutate(&mut live, &rows, 0.25 + k as f32);
+        live.step += 1;
+        store.absorb_dirty(&live.dirty);
+        live.dirty.reset_to(live.step);
+        assert_eq!(store.save(&live).unwrap().kind, SaveKind::Delta);
+    }
+    // a writer killed mid-commit leaves a generation directory with no
+    // committed manifest; recovery (heap and mapped alike) must skip it
+    let torn = dir.join("gen-000009");
+    std::fs::create_dir_all(&torn).unwrap();
+    std::fs::write(torn.join("ent.data.bin"), b"torn").unwrap();
+
+    // "restart": a fresh process recovers the latest committed chain
+    let mut recovered = state(1);
+    let gen = CheckpointStore::open(&dir).load_latest(&mut recovered).unwrap();
+    assert_eq!(gen, 3, "the torn generation must not win recovery");
+    let heap = Arc::new(SnapshotCell::new(ModelSnapshot::capture_sharded(&recovered, 4)));
+    let mapped =
+        snapshot_cell_for(&SnapshotBacking::MappedFrom(dir.clone()), &recovered, 4, None).unwrap();
+    {
+        let snap = mapped.load();
+        assert_eq!(snap.step(), recovered.step);
+        assert!(snap.entities().heap_bytes() > 0, "journaled rows materialize on heap");
+        assert!(snap.mapped_bytes() > 0, "clean pages stay mapped");
+    }
+    let reference = answers_for(heap, 1);
+    for workers in [1usize, 2] {
+        let got = answers_for(Arc::clone(&mapped), workers);
+        assert_bitwise(&got, &reference, &format!("recovered workers={workers}"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The trainer keeps publishing COW deltas on top of a mapped snapshot:
+/// dirty pages materialize on the heap, clean pages keep referencing the
+/// checkpoint file (counted by `remaps`), and the published weights stay
+/// bitwise identical to a fresh full capture.
+#[test]
+fn delta_publishes_over_mapped_pages_count_remaps_and_stay_bitwise() {
+    let dir = tmp("remap");
+    let mut live = state(19);
+    live.step = 1;
+    store_at(&dir, 4).save(&live).unwrap();
+    let cell =
+        snapshot_cell_for(&SnapshotBacking::MappedFrom(dir.clone()), &live, 4, None).unwrap();
+    // the mapped snapshot is this step's delta baseline
+    live.dirty.reset_to(live.step);
+    mutate(&mut live, &[2, 9, 14], -0.75);
+    live.step += 1;
+    cell.publish_from(&mut live, None);
+    let totals = cell.publish_totals();
+    assert_eq!((totals.delta_publishes, totals.remaps), (1, 1), "{totals:?}");
+
+    let snap = cell.load();
+    assert!(snap.is_mapped(), "clean pages must stay mapped after the delta");
+    assert!(snap.heap_bytes() > 0, "dirty pages materialize on the heap");
+    let full = ModelSnapshot::capture_sharded(&live, 4);
+    let (a, b) = (snap.entities().to_flat(), full.entities().to_flat());
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "entity weight {i} diverged post-delta");
+    }
+    let reference = answers_for(Arc::new(SnapshotCell::new(full)), 1);
+    let got = answers_for(cell, 2);
+    assert_bitwise(&got, &reference, "post-delta mapped");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Misconfiguration is a typed refusal, never a silent heap fallback: a
+/// root whose newest generation carries no serve layout must not serve.
+#[test]
+fn mapped_backing_refuses_roots_without_a_serve_layout() {
+    let dir = tmp("refuse");
+    let mut live = state(23);
+    live.step = 1;
+    // a plain store (no serve_layout) commits a valid but unmapped gen
+    CheckpointStore::open(&dir).save(&live).unwrap();
+    let err = snapshot_cell_for(&SnapshotBacking::MappedFrom(dir.clone()), &live, 4, None)
+        .unwrap_err();
+    assert!(matches!(err, CkptError::Incompatible { .. }), "{err}");
+    assert!(err.to_string().contains("serve layout"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -54,6 +54,9 @@ LOWER_PATTERNS = (
     "_ms",
     "fallback",
     "failure",
+    "resident",
+    "mapped",
+    "rss",
 )
 
 
